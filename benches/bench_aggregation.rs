@@ -1,0 +1,115 @@
+//! Aggregation benches: the hierarchical local/global path on
+//! realistically-sized parameter sets — the §4.2 server-cost claim
+//! (server sums K aggregates instead of M_p updates).
+//! Run: cargo bench --bench bench_aggregation
+
+use parrot::aggregation::{AggOp, ClientUpdate, GlobalAgg, LocalAgg, Payload};
+use parrot::model::ParamSet;
+use parrot::util::bench::{header, Bencher};
+use parrot::util::rng::Rng;
+
+fn mk_params(shapes: &[Vec<usize>], seed: u64) -> ParamSet {
+    let mut rng = Rng::new(seed);
+    ParamSet {
+        shapes: shapes.to_vec(),
+        tensors: shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>())
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+fn mk_update(client: usize, shapes: &[Vec<usize>]) -> ClientUpdate {
+    ClientUpdate {
+        client,
+        weight: 1.0 + client as f64,
+        entries: vec![(
+            "delta".into(),
+            AggOp::WeightedAvg,
+            Payload::Params(mk_params(shapes, client as u64)),
+        )],
+    }
+}
+
+fn main() {
+    header("aggregation");
+    let mut b = Bencher::new("aggregation");
+
+    // mlp-sized tensors (≈240k params ≈ 1MB).
+    let shapes = vec![
+        vec![784usize, 256],
+        vec![256],
+        vec![256, 128],
+        vec![128],
+        vec![128, 62],
+        vec![62],
+    ];
+    let numel: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+
+    let updates: Vec<ClientUpdate> = (0..64).map(|c| mk_update(c, &shapes)).collect();
+
+    b.bench_throughput("local_agg.add 64 clients (elems)", numel * 64, || {
+        let mut la = LocalAgg::new(0);
+        for u in &updates {
+            la.add(u);
+        }
+        la.finish()
+    });
+
+    let mut la = LocalAgg::new(0);
+    for u in &updates {
+        la.add(u);
+    }
+    let dev = la.finish();
+    let wire = dev.encoded();
+    println!("device aggregate wire size: {:.2} MB", wire.len() as f64 / (1 << 20) as f64);
+
+    b.bench_throughput("device_agg.encode (bytes)", wire.len(), || dev.encoded());
+    b.bench_throughput("device_agg.decode (bytes)", wire.len(), || {
+        parrot::aggregation::DeviceAggregate::decode(&wire).unwrap()
+    });
+
+    // Global merge of K=8 device aggregates vs flat 64-client fold —
+    // the server-side work reduction of hierarchical aggregation.
+    let per_dev: Vec<parrot::aggregation::DeviceAggregate> = (0..8)
+        .map(|d| {
+            let mut la = LocalAgg::new(d);
+            for (i, u) in updates.iter().enumerate() {
+                if i % 8 == d {
+                    la.add(u);
+                }
+            }
+            la.finish()
+        })
+        .collect();
+    b.bench("global merge K=8 aggregates", || {
+        let mut g = GlobalAgg::new();
+        for d in &per_dev {
+            g.merge(d.clone());
+        }
+        g.finish()
+    });
+    b.bench("flat fold Mp=64 updates (server-side)", || {
+        let mut la = LocalAgg::new(0);
+        for u in &updates {
+            la.add(u);
+        }
+        let mut g = GlobalAgg::new();
+        g.merge(la.finish());
+        g.finish()
+    });
+
+    // ParamSet primitives.
+    let a = mk_params(&shapes, 1);
+    let c = mk_params(&shapes, 2);
+    let mut acc = ParamSet::zeros(&shapes);
+    b.bench_throughput("param add_scaled (elems)", numel, || {
+        acc.add_scaled(&a, 0.5);
+    });
+    b.bench_throughput("param delta (elems)", numel, || a.delta(&c));
+    b.bench_throughput("param to_bytes (elems)", numel, || a.to_bytes());
+}

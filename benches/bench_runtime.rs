@@ -1,0 +1,71 @@
+//! PJRT hot-path benches: the per-batch train step the whole simulation
+//! multiplies, the TaskRun literal-reuse path vs the naive path, and
+//! marshalling costs.  Skips cleanly without artifacts.
+//! Run: make artifacts && cargo bench --bench bench_runtime
+
+use parrot::data::{FederatedDataset, Partition, PartitionKind, SynthConfig};
+use parrot::model::ParamSet;
+use parrot::runtime::{lit_f32, Runtime};
+use parrot::util::bench::{header, Bencher};
+use std::path::Path;
+
+fn main() {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("mlp_train.hlo.txt").exists() {
+        println!("bench_runtime: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    header("runtime");
+    let mut b = Bencher::new("runtime").with_iters(5, 30);
+
+    let rt = Runtime::cpu(&dir).unwrap();
+    let train = rt.load("mlp_train").unwrap();
+    let eval = rt.load("mlp_eval").unwrap();
+    let shapes = train.manifest.param_shapes();
+    let params = ParamSet::init_he(&shapes, 1);
+    let zeros = ParamSet::zeros(&shapes);
+    let ds = FederatedDataset::new(
+        SynthConfig::vision(3),
+        Partition::generate(PartitionKind::Natural, 8, 62, 100, 3),
+    );
+    let batch = ds.batch(0, 0);
+    let samples = parrot::model::BATCH;
+
+    // Naive path: full ParamSet->literal marshalling every step.
+    b.bench_throughput("train_once naive (samples)", samples, || {
+        train
+            .train_once(&params, &zeros, &zeros, &batch, 0.05, 0.0)
+            .unwrap()
+    });
+
+    // Hot path: literals live across steps (one task, many batches).
+    b.bench_throughput("task_run 8-step chain (samples)", samples * 8, || {
+        let mut run = train.start_task(&params, &zeros, &zeros, 0.05, 0.0).unwrap();
+        for j in 0..8 {
+            run.step(&ds.batch(0, j % ds.n_batches(0))).unwrap();
+        }
+        run.finish().unwrap()
+    });
+
+    b.bench_throughput("eval step (samples)", samples, || {
+        eval.eval(&params, &batch).unwrap()
+    });
+
+    // Marshalling microbenches.
+    let flat: Vec<f32> = vec![1.0; 784 * 256];
+    b.bench_throughput("lit_f32 784x256 (elems)", flat.len(), || {
+        lit_f32(&flat, &[784, 256]).unwrap()
+    });
+    b.bench("params->literals mlp", || {
+        params
+            .shapes
+            .iter()
+            .zip(&params.tensors)
+            .map(|(s, t)| lit_f32(t, s).unwrap())
+            .collect::<Vec<_>>()
+    });
+
+    // Batch generation (must stay off the critical path).
+    b.bench_throughput("synth batch gen (samples)", samples, || ds.batch(1, 0));
+}

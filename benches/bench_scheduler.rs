@@ -1,0 +1,73 @@
+//! Scheduler benches: Alg. 3 assignment cost (the Fig. 8 claim that
+//! scheduling is negligible, O(K·M_p)) and workload-estimation cost.
+//! Run: cargo bench --bench bench_scheduler [-- --quick]
+
+use parrot::scheduler::{greedy_assign, uniform_assign, DeviceEstimate, History, TaskRecord};
+use parrot::util::bench::{header, Bencher};
+use parrot::util::rng::Rng;
+
+fn estimates(k: usize) -> Vec<DeviceEstimate> {
+    (0..k)
+        .map(|i| DeviceEstimate {
+            t_sample: 0.002 * (1.0 + i as f64 * 0.1),
+            b: 0.15,
+            r2: 0.99,
+            n_points: 50,
+        })
+        .collect()
+}
+
+fn clients(m: usize, seed: u64) -> Vec<(usize, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..m).map(|i| (i, 20 + rng.below(400) as usize)).collect()
+}
+
+fn main() {
+    header("scheduler");
+    let mut b = Bencher::new("scheduler");
+
+    for (k, m) in [(8usize, 100usize), (8, 1000), (32, 100), (32, 1000), (32, 10_000)] {
+        let est = estimates(k);
+        let cs = clients(m, 3);
+        b.bench_throughput(&format!("greedy_assign K={k} Mp={m}"), m, || {
+            greedy_assign(&cs, &est)
+        });
+    }
+
+    let cs = clients(1000, 5);
+    b.bench("uniform_assign K=32 Mp=1000", || uniform_assign(&cs, 32));
+
+    // Estimation cost: OLS over r rounds of history (Fig. 8's other half).
+    for rounds in [10usize, 100, 500] {
+        let mut h = History::new();
+        let mut rng = Rng::new(9);
+        for r in 0..rounds {
+            for d in 0..8 {
+                for _ in 0..12 {
+                    let n = 20 + rng.below(400) as usize;
+                    h.push(TaskRecord {
+                        round: r,
+                        device: d,
+                        n_samples: n,
+                        secs: 0.002 * n as f64 + 0.15,
+                    });
+                }
+            }
+        }
+        b.bench(&format!("estimate K=8 history={rounds}r"), || h.estimate(8, rounds, None));
+        b.bench(&format!("estimate K=8 history={rounds}r window=5"), || {
+            h.estimate(8, rounds, Some(5))
+        });
+    }
+
+    // Sanity: scheduled makespan beats uniform on heterogeneous devices.
+    let est = estimates(8);
+    let cs = clients(100, 7);
+    let sizes: std::collections::HashMap<usize, usize> = cs.iter().cloned().collect();
+    let (ga, _) = greedy_assign(&cs, &est);
+    let ua = uniform_assign(&cs, 8);
+    let gm = parrot::scheduler::greedy::makespan(&ga, &sizes, &est);
+    let um = parrot::scheduler::greedy::makespan(&ua, &sizes, &est);
+    println!("\nmakespan: greedy {gm:.2}s vs uniform {um:.2}s ({:.2}x)", um / gm);
+    assert!(gm <= um);
+}

@@ -1,0 +1,70 @@
+//! Scheme benches: virtual-engine cost (simulated rounds/sec — this is
+//! what lets the Fig-5/7/9/10/11 harnesses sweep paper-scale configs)
+//! plus a reduced Table-1-shaped check that the engine's measured
+//! bytes/trips match the analytic model.
+//! Run: cargo bench --bench bench_schemes
+
+use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::config::{Scheme, SchedulerKind};
+use parrot::coordinator::metrics::MemoryModel;
+use parrot::data::{Partition, PartitionKind};
+use parrot::simulation::{run_virtual, CommModel, VirtualSim};
+use parrot::util::bench::{header, Bencher};
+
+fn mk(scheme: Scheme, k: usize, m: usize, sched: SchedulerKind) -> VirtualSim {
+    VirtualSim::new(
+        scheme,
+        ClusterProfile::homogeneous(k),
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        sched,
+        2,
+        Partition::generate(PartitionKind::Natural, m, 62, 100, 7),
+        1,
+        5,
+    )
+}
+
+fn main() {
+    header("schemes");
+    let mut b = Bencher::new("schemes");
+
+    for (scheme, name) in [
+        (Scheme::SP, "sp"),
+        (Scheme::SdDist, "sd"),
+        (Scheme::FaDist, "fa"),
+        (Scheme::Parrot, "parrot"),
+    ] {
+        let sched = if scheme == Scheme::Parrot {
+            SchedulerKind::Greedy
+        } else {
+            SchedulerKind::Uniform
+        };
+        b.bench(&format!("virtual round {name} Mp=100 K=8"), || {
+            let mut sim = mk(scheme, 8, 1000, sched);
+            run_virtual(&mut sim, 5, 100, 3)
+        });
+    }
+
+    b.bench("virtual round parrot Mp=1000 K=32 (paper scale)", || {
+        let mut sim = mk(Scheme::Parrot, 32, 10_000, SchedulerKind::Greedy);
+        run_virtual(&mut sim, 3, 1000, 3)
+    });
+
+    // Cross-check: engine-measured bytes == Table-1 analytic model.
+    let comm = CommModel::femnist();
+    let mut sim = mk(Scheme::Parrot, 8, 1000, SchedulerKind::Greedy);
+    let r = &run_virtual(&mut sim, 1, 100, 3)[0];
+    let model = 2 * MemoryModel::comm_size(Scheme::Parrot, comm.s_a, comm.s_e, 100, 8);
+    println!(
+        "\nparrot round bytes: engine {} vs 2x analytic {} ({})",
+        r.bytes,
+        model,
+        if r.bytes == model { "MATCH" } else { "MISMATCH" }
+    );
+    assert_eq!(r.bytes, model);
+    let mut fa = mk(Scheme::FaDist, 8, 1000, SchedulerKind::Uniform);
+    let rf = &run_virtual(&mut fa, 1, 100, 3)[0];
+    assert_eq!(rf.trips, 200);
+    println!("fa trips 2*Mp = {} (MATCH)", rf.trips);
+}

@@ -1,0 +1,65 @@
+//! State-manager benches (§3.4): save/load latency with cache hits,
+//! cache misses (disk), and the LRU eviction path — the costs the
+//! Table-1 memory/disk trade is buying.
+//! Run: cargo bench --bench bench_state
+
+use parrot::model::ParamSet;
+use parrot::state::StateManager;
+use parrot::util::bench::{header, Bencher};
+
+fn main() {
+    header("state");
+    let mut b = Bencher::new("state");
+    let dir = std::env::temp_dir().join(format!("parrot_bench_state_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // SCAFFOLD-like control variate: mlp-shaped, ~1MB.
+    let shapes = vec![
+        vec![784usize, 256],
+        vec![256],
+        vec![256, 128],
+        vec![128],
+        vec![128, 62],
+        vec![62],
+    ];
+    let state = ParamSet::init_he(&shapes, 1);
+    let bytes = state.size_bytes();
+    println!("client state size: {:.2} MB", bytes as f64 / (1 << 20) as f64);
+
+    let mut sm = StateManager::new(&dir, 256 << 20).unwrap();
+    let mut i = 0u64;
+    b.bench_throughput("save (bytes)", bytes, || {
+        i += 1;
+        sm.save_params(i % 64, &state).unwrap();
+    });
+
+    // Warm-cache loads.
+    sm.save_params(7, &state).unwrap();
+    b.bench_throughput("load cache-hit (bytes)", bytes, || {
+        sm.load_params(7).unwrap().unwrap()
+    });
+
+    // Cold loads: zero cache budget forces disk each time.
+    let mut cold = StateManager::new(&dir, 0).unwrap();
+    cold.save_params(9, &state).unwrap();
+    b.bench_throughput("load disk (bytes)", bytes, || {
+        cold.load_params(9).unwrap().unwrap()
+    });
+
+    // Eviction churn: budget for 4 states, rotate through 16.
+    let mut churn = StateManager::new(&dir, 4 * bytes + 1024).unwrap();
+    let mut j = 0u64;
+    b.bench("save+evict rotate 16 clients", || {
+        j += 1;
+        churn.save_params(j % 16, &state).unwrap();
+    });
+
+    println!(
+        "\ncache hits {} / loads {}, disk reads {}, peak cache {:.1} MB",
+        sm.metrics.cache_hits,
+        sm.metrics.loads,
+        sm.metrics.disk_reads,
+        sm.metrics.peak_cache_bytes as f64 / (1 << 20) as f64
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,51 @@
+//! Quickstart: 10 rounds of FedAvg on a 60-client synthetic-FEMNIST
+//! federation simulated on 2 devices — the 30-second "does everything
+//! work" tour of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use parrot::config::RunConfig;
+use parrot::coordinator::run_simulation;
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    let cfg = RunConfig {
+        algorithm: "fedavg".into(),
+        model: "mlp".into(),
+        n_clients: 60,
+        clients_per_round: 12,
+        n_devices: 2,
+        rounds: 10,
+        eval_every: 2,
+        eval_batches: 8,
+        seed: 7,
+        cluster: parrot::cluster::ClusterProfile::homogeneous(2),
+        ..Default::default()
+    };
+    println!(
+        "quickstart: fedavg, M={} M_p={} K={} R={}",
+        cfg.n_clients, cfg.clients_per_round, cfg.n_devices, cfg.rounds
+    );
+
+    let summary = run_simulation(cfg)?;
+
+    println!("\nround  wall(s)  util%   train-loss   eval");
+    for r in &summary.metrics.rounds {
+        print!(
+            "{:>5}  {:>7.2}  {:>5.1}  {:>10.4}",
+            r.round,
+            r.wall_secs,
+            100.0 * r.utilization,
+            r.train_loss
+        );
+        if let (Some(l), Some(a)) = (r.eval_loss, r.eval_acc) {
+            print!("   loss {l:.4} acc {:.1}%", 100.0 * a);
+        }
+        println!();
+    }
+    let acc = summary.final_acc.unwrap_or(0.0);
+    println!("\nfinal accuracy: {:.1}% (chance = {:.1}%)", 100.0 * acc, 100.0 / 62.0);
+    anyhow::ensure!(acc > 0.10, "quickstart should comfortably beat chance");
+    println!("quickstart OK");
+    Ok(())
+}

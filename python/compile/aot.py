@@ -1,0 +1,229 @@
+"""AOT compile path: lower every (model, step) pair to HLO text + manifest.
+
+This is the only place Python touches the system; it runs once at build
+time (``make artifacts``).  For each model family in `model.MODELS` and
+each step kind (train / eval / grad) it emits into ``artifacts/``:
+
+- ``<model>_<kind>.hlo.txt``   — HLO **text**.  Text, not
+  ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+  instruction ids which the xla crate's xla_extension 0.5.1 rejects
+  (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+  round-trips cleanly (see /opt/xla-example/README.md).
+- ``<model>_<kind>.manifest.txt`` — plain-text description of the
+  flattened input/output order, shapes and dtypes that the Rust
+  ``model::manifest`` module parses.  The order is the jax pytree
+  flattening order of the step signature and is the contract between
+  Layers 2 and 3.
+
+Additionally it emits numeric *test vectors* (``testvec_<artifact>``)
+— concrete inputs plus expected outputs computed by the exact jitted
+function — which the Rust integration tests replay through PJRT and
+compare allclose, pinning the whole AOT bridge end to end.
+
+Usage:  python -m compile.aot --out ../artifacts [--models mlp,cnn,tinylm]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _shape_str(shape) -> str:
+    return ",".join(str(d) for d in shape) if shape else "-"
+
+
+def io_table(spec: M.ModelSpec, kind: str):
+    """(inputs, outputs) as (name, role, dtype, shape) in flattened order."""
+    f32 = "f32"
+    params = [(n, "param", f32, s) for n, s in spec.specs]
+    x = ("x", "batch", spec.x_dtype, spec.x_shape)
+    y = ("y", "batch", "i32", spec.y_shape)
+    if kind == "train":
+        ins = (
+            params
+            + [(f"anchor.{n}", "anchor", f32, s) for n, s in spec.specs]
+            + [(f"corr.{n}", "corr", f32, s) for n, s in spec.specs]
+            + [x, y, ("lr", "scalar", f32, ()), ("mu", "scalar", f32, ())]
+        )
+        outs = [(f"new.{n}", "param", f32, s) for n, s in spec.specs] + [
+            ("loss", "metric", f32, ()),
+            ("gsq", "metric", f32, ()),
+        ]
+    elif kind == "eval":
+        ins = params + [x, y]
+        outs = [("loss", "metric", f32, ()), ("correct", "metric", f32, ())]
+    elif kind == "grad":
+        ins = params + [x, y]
+        outs = [(f"grad.{n}", "param", f32, s) for n, s in spec.specs] + [
+            ("loss", "metric", f32, ())
+        ]
+    else:
+        raise ValueError(kind)
+    return ins, outs
+
+
+def write_manifest(path: str, spec: M.ModelSpec, kind: str) -> None:
+    ins, outs = io_table(spec, kind)
+    with open(path, "w") as f:
+        f.write(f"artifact {spec.name}_{kind}\n")
+        f.write(f"model {spec.name}\n")
+        f.write(f"kind {kind}\n")
+        f.write(f"batch {M.BATCH}\n")
+        f.write(f"nparams {len(spec.specs)}\n")
+        for name, role, dt, shape in ins:
+            f.write(f"input {name} {role} {dt} {_shape_str(shape)}\n")
+        for name, role, dt, shape in outs:
+            f.write(f"output {name} {role} {dt} {_shape_str(shape)}\n")
+
+
+def concrete_inputs(spec: M.ModelSpec, kind: str, seed: int = 7):
+    """Deterministic concrete example inputs for the test vectors."""
+    key = jax.random.PRNGKey(seed)
+    params = spec.init(seed=1)
+    kx, ky, ka, kc = jax.random.split(key, 4)
+    if spec.x_dtype == "f32":
+        x = jax.random.normal(kx, spec.x_shape, jnp.float32)
+    else:
+        x = jax.random.randint(kx, spec.x_shape, 0, M.LM_VOCAB, jnp.int32)
+    ymax = M.LM_VOCAB if spec.name == "tinylm" else M.N_CLASSES
+    y = jax.random.randint(ky, spec.y_shape, 0, ymax, jnp.int32)
+    if kind == "train":
+        anchors = [p + 0.01 for p in params]
+        corrs = [0.001 * jax.random.normal(kc, p.shape, jnp.float32) for p in params]
+        lr = jnp.float32(0.05)
+        mu = jnp.float32(0.1)
+        return (params, anchors, corrs, x, y, lr, mu)
+    return (params, x, y)
+
+
+def write_testvec(prefix: str, fn, args, spec: M.ModelSpec, kind: str) -> None:
+    """Flatten concrete args + outputs to .idx (names/sizes) and .bin (LE bytes)."""
+    flat_in, _ = jax.tree_util.tree_flatten(args)
+    outs = fn(*args)
+    flat_out, _ = jax.tree_util.tree_flatten(outs)
+    ins, outdecl = io_table(spec, kind)
+    assert len(flat_in) == len(ins), (len(flat_in), len(ins))
+    assert len(flat_out) == len(outdecl), (len(flat_out), len(outdecl))
+    import numpy as np
+
+    with open(prefix + ".idx", "w") as idx, open(prefix + ".bin", "wb") as binf:
+        for (name, _, dt, shape), arr in zip(ins, flat_in):
+            a = np.asarray(arr)
+            idx.write(f"in {name} {dt} {a.size} {_shape_str(shape)}\n")
+            binf.write(a.astype("<f4" if dt == "f32" else "<i4").tobytes())
+        for (name, _, dt, shape), arr in zip(outdecl, flat_out):
+            a = np.asarray(arr)
+            idx.write(f"out {name} {dt} {a.size} {_shape_str(shape)}\n")
+            binf.write(a.astype("<f4" if dt == "f32" else "<i4").tobytes())
+
+
+def kernel_report(out_dir: str) -> None:
+    """Static L1 perf analysis: VMEM footprint + MXU-alignment per kernel.
+
+    interpret=True gives CPU-numpy timings only, so TPU efficiency is
+    *estimated* from the BlockSpec schedule (DESIGN.md §Perf): per-program
+    VMEM bytes, arithmetic intensity, and MXU tile alignment.
+    """
+    from .kernels.matmul import pick_block
+
+    lines = ["# Layer-1 kernel schedule report (static analysis)", ""]
+    shapes = [
+        ("mlp.l1 fwd", M.BATCH, 784, 256),
+        ("mlp.l2 fwd", M.BATCH, 256, 128),
+        ("mlp.l3 fwd", M.BATCH, 128, M.N_CLASSES),
+        ("mlp.l1 dgrad", M.BATCH, 256, 784),
+        ("mlp.l1 wgrad", 784, M.BATCH, 256),
+        ("tinylm.qkv", M.BATCH * M.LM_SEQ, M.LM_DIM, 3 * M.LM_DIM),
+        ("tinylm.ff1", M.BATCH * M.LM_SEQ, M.LM_DIM, M.LM_FF),
+        ("tinylm.head", M.BATCH * M.LM_SEQ, M.LM_DIM, M.LM_VOCAB),
+    ]
+    lines.append(
+        f"{'site':<16}{'M':>6}{'K':>6}{'N':>6}{'bm':>5}{'bn':>5}"
+        f"{'VMEM/prog':>12}{'AI(flop/B)':>12}{'MXU-fit':>9}"
+    )
+    for site, m, k, n in shapes:
+        bm, bn = pick_block(m), pick_block(n)
+        vmem = 4 * (bm * k + k * bn + bm * bn)  # f32 operands resident per program
+        flops = 2 * bm * k * bn
+        ai = flops / vmem
+        mxu = "full" if (bm % 128 == 0 and bn % 128 == 0) else (
+            "partial" if (bn % 8 == 0) else "pad")
+        lines.append(
+            f"{site:<16}{m:>6}{k:>6}{n:>6}{bm:>5}{bn:>5}{vmem:>12,}{ai:>12.1f}{mxu:>9}"
+        )
+    lines += [
+        "",
+        "fused_update: 1-D BLOCK=131072 f32 (512 KiB/operand, ~3 MiB VMEM per",
+        "program with 6 refs); purely bandwidth-bound (AI ~ 0.17 flop/B), so",
+        "the fusion (4 reads 1 write, vs 10 reads 4 writes unfused) is the win.",
+        "Block-size sweep (interpret-mode train_once p50, EXPERIMENTS.md §Perf):",
+        "  1024 -> 200.9 ms   (196-iteration grid loop on mlp.w1)",
+        " 32768 ->   7.4 ms",
+        "131072 ->   5.9 ms   <- chosen (TPU VMEM headroom)",
+        "262144 ->   5.5 ms   (+6%, 6 MiB/program)",
+    ]
+    with open(os.path.join(out_dir, "kernel_report.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,tinylm")
+    ap.add_argument("--kinds", default="train,eval,grad")
+    ap.add_argument("--skip-testvec", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for mname in args.models.split(","):
+        spec = M.MODELS[mname]
+        for kind in args.kinds.split(","):
+            step = M.make_step(spec, kind)
+            ex = M.example_args(spec, kind)
+            lowered = jax.jit(step).lower(*ex)
+            text = to_hlo_text(lowered)
+            base = os.path.join(args.out, f"{mname}_{kind}")
+            with open(base + ".hlo.txt", "w") as f:
+                f.write(text)
+            write_manifest(base + ".manifest.txt", spec, kind)
+            print(f"[aot] {mname}_{kind}: {len(text)} chars of HLO")
+            if not args.skip_testvec and mname == "mlp":
+                jitted = jax.jit(step)
+                write_testvec(
+                    os.path.join(args.out, f"testvec_{mname}_{kind}"),
+                    jitted, concrete_inputs(spec, kind), spec, kind,
+                )
+                print(f"[aot] testvec_{mname}_{kind} written")
+
+    kernel_report(args.out)
+    # Stamp for make's up-to-date check.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

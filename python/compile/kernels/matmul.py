@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernels: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of the per-client train step (every dense
+layer in the MLP / transformer forward AND backward pass goes through
+here).  The kernel is written the TPU way:
+
+- the grid tiles the output into ``(bm, bn)`` VMEM-resident blocks,
+- the contraction dimension K is kept whole per block (for the layer
+  sizes used by the Parrot models, an entire K-strip fits VMEM
+  comfortably; see DESIGN.md §Perf for the footprint table),
+- block sizes prefer MXU-shaped 128x128 tiles and fall back to the
+  largest divisor of the dimension so no masking is needed,
+- bias-add and the activation are fused into the same kernel so the
+  pre-activation never round-trips through HBM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO through the Pallas
+interpreter.  Real-TPU efficiency is estimated statically (DESIGN.md
+§Perf), never from interpret-mode wallclock.
+
+The public entry point :func:`linear` carries a custom VJP whose backward
+pass reuses the same Pallas matmul for dx/dw, so the AOT-lowered HLO of
+``jax.grad`` also runs through Layer 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Upper bound on a block edge.  128 matches the MXU systolic array edge;
+# see DESIGN.md §Hardware-Adaptation.
+_MXU_EDGE = 128
+
+
+def pick_block(dim: int, target: int = _MXU_EDGE) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Pallas blocks must tile the array exactly (we do not mask), so block
+    edges are divisors.  Preferring the largest divisor keeps blocks as
+    close to MXU-shaped as the layer geometry allows.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output block: whole-K contraction in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul ``x @ w`` for 2-D operands.
+
+    Grid = (M/bm, N/bn); each program reads an (bm, K) strip of ``x`` and
+    a (K, bn) strip of ``w`` and writes one (bm, bn) output block.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm, bn = pick_block(m), pick_block(n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _linear_kernel_relu(x_ref, w_ref, b_ref, o_ref):
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(z + b_ref[...], 0.0)
+
+
+def _linear_kernel_none(x_ref, w_ref, b_ref, o_ref):
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = z + b_ref[...]
+
+
+_LINEAR_KERNELS = {"relu": _linear_kernel_relu, "none": _linear_kernel_none}
+
+
+def _linear_impl(x: jax.Array, w: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = pick_block(m), pick_block(n)
+    return pl.pallas_call(
+        _LINEAR_KERNELS[act],
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    """Fused ``act(x @ w + b)`` — the Layer-1 hot path.
+
+    Differentiable: the custom VJP routes dx / dw through the same Pallas
+    matmul so the AOT backward pass is also kernel-backed.
+    """
+    return _linear_impl(x, w, b, act)
+
+
+def _linear_fwd(x, w, b, act):
+    y = _linear_impl(x, w, b, act)
+    # Residuals: for relu, y itself encodes the activation mask (y > 0
+    # iff pre-activation > 0), so we never save the pre-activation.
+    return y, (x, w, y)
+
+
+def _linear_bwd(act, res, dy):
+    x, w, y = res
+    if act == "relu":
+        dz = jnp.where(y > 0.0, dy, 0.0)
+    else:
+        dz = dy
+    # dx = dz @ w^T ; dw = x^T @ dz — both through the Pallas matmul.
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

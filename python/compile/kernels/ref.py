@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has an oracle here with the identical
+signature; ``python/tests/test_kernel.py`` sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle, including
+through ``jax.grad`` for the differentiable ones.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    """Oracle for kernels.matmul.linear (fused bias + activation)."""
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def fused_update_ref(
+    w: jax.Array,
+    g: jax.Array,
+    anchor: jax.Array,
+    corr: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+) -> jax.Array:
+    """Oracle for kernels.update.fused_update."""
+    return w - lr * (g + mu * (w - anchor) + corr)

@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: the fused generalized FL update.
+
+Every FL algorithm Parrot simulates (FedAvg, FedProx, FedNova, SCAFFOLD,
+FedDyn, Mime — see DESIGN.md §3) applies the same elementwise local step
+
+    w' = w - lr * ( g + mu * (w - anchor) + corr )
+
+with algorithm-specific (mu, anchor, corr).  Fusing the four reads and
+one write into a single kernel means each parameter tensor is streamed
+through VMEM exactly once per step instead of materializing the three
+intermediate terms in HBM.
+
+The kernel is 1-D over the flattened parameter; the wrapper pads to a
+block multiple so no masking is needed and slices the pad back off.
+``lr`` and ``mu`` ride along as (1,)-shaped operands (broadcast per
+block) because CPU-interpret Pallas has no scalar-prefetch path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 131072 f32 = 512 KiB per operand block; six refs -> ~3 MiB of VMEM per
+# program, a safe margin under a TPU core's ~16 MiB budget.
+#
+# Perf note (EXPERIMENTS.md §Perf, iteration log): the block must be
+# LARGE — each grid step of an interpret-mode Pallas kernel lowers to one
+# iteration of an XLA while-loop with dynamic-slices, so the original
+# 1024-wide block turned the 200k-element mlp.w1 update into a
+# ~196-iteration serial loop that dominated the whole train step
+# (~200 ms/batch). Measured sweep (train_once p50): 1024 -> 200.9 ms,
+# 32768 -> 7.4 ms, 131072 -> 5.9 ms, 262144 -> 5.5 ms (+6%, but 6 MiB
+# VMEM/program). 131072 is the roofline-elbow pick with TPU headroom.
+_BLOCK = 131072
+
+
+def _update_kernel(w_ref, g_ref, a_ref, c_ref, s_ref, o_ref):
+    lr = s_ref[0]
+    mu = s_ref[1]
+    w = w_ref[...]
+    o_ref[...] = w - lr * (g_ref[...] + mu * (w - a_ref[...]) + c_ref[...])
+
+
+def fused_update(
+    w: jax.Array,
+    g: jax.Array,
+    anchor: jax.Array,
+    corr: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+) -> jax.Array:
+    """Fused ``w - lr*(g + mu*(w-anchor) + corr)`` for any-shaped ``w``.
+
+    ``lr`` / ``mu`` are 0-d f32 arrays (AOT scalar inputs).
+    """
+    shape = w.shape
+    flat = [x.reshape(-1) for x in (w, g, anchor, corr)]
+    n = flat[0].shape[0]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = [jnp.pad(x, (0, pad)) for x in flat]
+    total = n + pad
+    scal = jnp.stack([lr.astype(jnp.float32), mu.astype(jnp.float32)])
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(total // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.float32),
+        interpret=True,
+    )(*flat, scal)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

@@ -1,0 +1,293 @@
+"""Layer-2: the per-client compute graph for every Parrot workload.
+
+Defines the three model families the experiments use (DESIGN.md §2 maps
+each to the paper's workload), the *generalized local train step* that
+covers all six FL algorithms (DESIGN.md §3), and the eval / full-batch
+gradient steps.  All dense compute routes through the Layer-1 Pallas
+kernels (`kernels.matmul.linear`, `kernels.update.fused_update`) so the
+AOT-lowered HLO contains the kernel schedule.
+
+Build-time only: `aot.py` lowers the steps defined here to HLO text once;
+the Rust coordinator replays them through PJRT with no Python anywhere on
+the simulation path.
+
+Parameter-ordering contract (what the Rust side relies on, encoded in the
+manifest emitted by `aot.py`):
+
+    train:  params..., anchors..., corrs..., x, y, lr, mu
+            -> new_params..., loss, grad_sq
+    eval:   params..., x, y            -> loss, n_correct
+    grad:   params..., x, y            -> grads..., loss
+
+`params`, `anchors`, `corrs` are parallel lists with identical
+shapes/order (`ModelSpec.specs`).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import linear
+from .kernels.update import fused_update
+
+Params = List[jax.Array]
+
+# Paper batch size (Table 4: batch size 20 for every workload).
+BATCH = 20
+# FEMNIST has 62 classes; the synthetic analogs keep that.
+N_CLASSES = 62
+# tinylm geometry (Reddit/Albert stand-in, DESIGN.md §2).
+LM_VOCAB = 128
+LM_SEQ = 32
+LM_DIM = 64
+LM_HEADS = 2
+LM_FF = 256
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; ``y`` int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+@dataclass
+class ModelSpec:
+    """One workload family: geometry + init + loss + metrics."""
+
+    name: str
+    x_shape: Tuple[int, ...]           # includes batch dim
+    x_dtype: str                       # "f32" | "i32"
+    y_shape: Tuple[int, ...]
+    specs: List[Tuple[str, Tuple[int, ...]]]  # (param name, shape), in order
+    loss: Callable[[Params, jax.Array, jax.Array], jax.Array] = field(repr=False, default=None)
+    metrics: Callable[[Params, jax.Array, jax.Array], Tuple[jax.Array, jax.Array]] = field(repr=False, default=None)
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(s)) for _, s in self.specs)
+
+    def init(self, seed: int = 0) -> Params:
+        """He-normal weights / zero biases / unit norm scales."""
+        key = jax.random.PRNGKey(seed)
+        out = []
+        for pname, shape in self.specs:
+            key, sub = jax.random.split(key)
+            if pname.endswith("_s"):               # layernorm scale
+                out.append(jnp.ones(shape, jnp.float32))
+            elif len(shape) == 1:                  # bias / ln offset
+                out.append(jnp.zeros(shape, jnp.float32))
+            elif pname.startswith(("emb", "pos")):
+                out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+            else:
+                fan_in = int(math.prod(shape[:-1]))
+                std = math.sqrt(2.0 / fan_in)
+                out.append(std * jax.random.normal(sub, shape, jnp.float32))
+        return out
+
+
+# --------------------------------------------------------------------------
+# mlp — FEMNIST-analog (ResNet-18 stand-in at matched relative FLOPs)
+# --------------------------------------------------------------------------
+
+def _mlp_logits(p: Params, x: jax.Array) -> jax.Array:
+    h = linear(x, p[0], p[1], "relu")
+    h = linear(h, p[2], p[3], "relu")
+    return linear(h, p[4], p[5], "none")
+
+
+def _mlp_loss(p: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    return cross_entropy(_mlp_logits(p, x), y)
+
+
+def _mlp_metrics(p, x, y):
+    logits = _mlp_logits(p, x)
+    loss = cross_entropy(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+MLP = ModelSpec(
+    name="mlp",
+    x_shape=(BATCH, 784), x_dtype="f32", y_shape=(BATCH,),
+    specs=[
+        ("w1", (784, 256)), ("b1", (256,)),
+        ("w2", (256, 128)), ("b2", (128,)),
+        ("w3", (128, N_CLASSES)), ("b3", (N_CLASSES,)),
+    ],
+    loss=_mlp_loss, metrics=_mlp_metrics,
+)
+
+
+# --------------------------------------------------------------------------
+# cnn — second vision workload (ResNet-50 stand-in: ~2x the mlp FLOPs)
+# --------------------------------------------------------------------------
+
+def _cnn_logits(p: Params, x: jax.Array) -> jax.Array:
+    x = x.reshape(-1, 28, 28, 1)
+    h = jax.lax.conv_general_dilated(
+        x, p[0], window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jnp.maximum(h + p[1], 0.0)
+    h = jax.lax.conv_general_dilated(
+        h, p[2], window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jnp.maximum(h + p[3], 0.0)
+    h = h.reshape(h.shape[0], -1)  # (B, 7*7*16 = 784)
+    return linear(h, p[4], p[5], "none")
+
+
+def _cnn_loss(p, x, y):
+    return cross_entropy(_cnn_logits(p, x), y)
+
+
+def _cnn_metrics(p, x, y):
+    logits = _cnn_logits(p, x)
+    loss = cross_entropy(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+CNN = ModelSpec(
+    name="cnn",
+    x_shape=(BATCH, 784), x_dtype="f32", y_shape=(BATCH,),
+    specs=[
+        ("k1", (3, 3, 1, 8)), ("cb1", (8,)),
+        ("k2", (3, 3, 8, 16)), ("cb2", (16,)),
+        ("w3", (784, N_CLASSES)), ("b3", (N_CLASSES,)),
+    ],
+    loss=_cnn_loss, metrics=_cnn_metrics,
+)
+
+
+# --------------------------------------------------------------------------
+# tinylm — Reddit/Albert stand-in: 1-block causal transformer LM
+# --------------------------------------------------------------------------
+
+def _ln(h: jax.Array, s: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + 1e-5) * s + b
+
+
+def _lm_logits(p: Params, x: jax.Array) -> jax.Array:
+    (emb, pos, wqkv, bqkv, wo, bo, ln1_s, ln1_b,
+     w1, b1, w2, b2, ln2_s, ln2_b, lnf_s, lnf_b, head, bh) = p
+    B, T = x.shape
+    h = emb[x] + pos[None, :T, :]                      # (B, T, d)
+    d = h.shape[-1]
+    hd = d // LM_HEADS
+
+    # --- attention block ---------------------------------------------------
+    a_in = _ln(h, ln1_s, ln1_b).reshape(B * T, d)
+    qkv = linear(a_in, wqkv, bqkv, "none").reshape(B, T, 3, LM_HEADS, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, T, H, hd)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B * T, d)
+    h = h + linear(ctx, wo, bo, "none").reshape(B, T, d)
+
+    # --- mlp block -----------------------------------------------------------
+    m_in = _ln(h, ln2_s, ln2_b).reshape(B * T, d)
+    m = linear(m_in, w1, b1, "relu")
+    h = h + linear(m, w2, b2, "none").reshape(B, T, d)
+
+    hf = _ln(h, lnf_s, lnf_b).reshape(B * T, d)
+    return linear(hf, head, bh, "none").reshape(B, T, LM_VOCAB)
+
+
+def _lm_loss(p, x, y):
+    return cross_entropy(_lm_logits(p, x), y)
+
+
+def _lm_metrics(p, x, y):
+    logits = _lm_logits(p, x)
+    loss = cross_entropy(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct
+
+
+TINYLM = ModelSpec(
+    name="tinylm",
+    x_shape=(BATCH, LM_SEQ), x_dtype="i32", y_shape=(BATCH, LM_SEQ),
+    specs=[
+        ("emb", (LM_VOCAB, LM_DIM)), ("pos", (LM_SEQ, LM_DIM)),
+        ("wqkv", (LM_DIM, 3 * LM_DIM)), ("bqkv", (3 * LM_DIM,)),
+        ("wo", (LM_DIM, LM_DIM)), ("bo", (LM_DIM,)),
+        ("ln1_s", (LM_DIM,)), ("ln1_b", (LM_DIM,)),
+        ("w1", (LM_DIM, LM_FF)), ("fb1", (LM_FF,)),
+        ("w2", (LM_FF, LM_DIM)), ("fb2", (LM_DIM,)),
+        ("ln2_s", (LM_DIM,)), ("ln2_b", (LM_DIM,)),
+        ("lnf_s", (LM_DIM,)), ("lnf_b", (LM_DIM,)),
+        ("head", (LM_DIM, LM_VOCAB)), ("bh", (LM_VOCAB,)),
+    ],
+    loss=_lm_loss, metrics=_lm_metrics,
+)
+
+
+MODELS = {m.name: m for m in (MLP, CNN, TINYLM)}
+
+
+# --------------------------------------------------------------------------
+# The three AOT-exported steps
+# --------------------------------------------------------------------------
+
+def make_train_step(spec: ModelSpec):
+    """Generalized one-batch local step (DESIGN.md §3).
+
+    FedAvg: mu=0, corr=0.  FedProx/FedDyn: mu>0, anchor=w_global.
+    SCAFFOLD: corr = c - c_i.  Mime: corr = server momentum term.
+    """
+
+    def step(params: Params, anchors: Params, corrs: Params,
+             x: jax.Array, y: jax.Array, lr: jax.Array, mu: jax.Array):
+        loss, grads = jax.value_and_grad(spec.loss)(params, x, y)
+        gsq = sum(jnp.vdot(g, g) for g in grads)
+        new = [fused_update(w, g, a, c, lr, mu)
+               for w, g, a, c in zip(params, grads, anchors, corrs)]
+        return tuple(new) + (loss, gsq)
+
+    return step
+
+
+def make_eval_step(spec: ModelSpec):
+    def step(params: Params, x: jax.Array, y: jax.Array):
+        loss, correct = spec.metrics(params, x, y)
+        return loss, correct
+
+    return step
+
+
+def make_grad_step(spec: ModelSpec):
+    """Batch-gradient step (Mime's full-batch gradient; SCAFFOLD's c_i refresh)."""
+
+    def step(params: Params, x: jax.Array, y: jax.Array):
+        loss, grads = jax.value_and_grad(spec.loss)(params, x, y)
+        return tuple(grads) + (loss,)
+
+    return step
+
+
+def example_args(spec: ModelSpec, kind: str):
+    """ShapeDtypeStructs matching the manifest input order for ``kind``."""
+    f32, i32 = jnp.float32, jnp.int32
+    ps = [jax.ShapeDtypeStruct(s, f32) for _, s in spec.specs]
+    x = jax.ShapeDtypeStruct(spec.x_shape, f32 if spec.x_dtype == "f32" else i32)
+    y = jax.ShapeDtypeStruct(spec.y_shape, i32)
+    if kind == "train":
+        scalar = jax.ShapeDtypeStruct((), f32)
+        return (ps, list(ps), list(ps), x, y, scalar, scalar)
+    if kind in ("eval", "grad"):
+        return (ps, x, y)
+    raise ValueError(kind)
+
+
+def make_step(spec: ModelSpec, kind: str):
+    return {"train": make_train_step, "eval": make_eval_step,
+            "grad": make_grad_step}[kind](spec)

@@ -1,0 +1,128 @@
+"""AOT pipeline checks: manifest/HLO/testvec emission contracts.
+
+The Rust side parses these artifacts blindly, so the format assertions
+here are effectively the L2<->L3 interface tests on the Python side.
+"""
+
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import concrete_inputs, io_table, to_hlo_text, write_manifest, write_testvec
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestIoTable:
+    def test_train_input_order(self):
+        ins, outs = io_table(M.MLP, "train")
+        n = len(M.MLP.specs)
+        roles = [r for _, r, _, _ in ins]
+        assert roles == ["param"] * n + ["anchor"] * n + ["corr"] * n + \
+            ["batch", "batch", "scalar", "scalar"]
+        assert [r for _, r, _, _ in outs] == ["param"] * n + ["metric", "metric"]
+
+    def test_flattening_order_matches_io_table(self):
+        """jax pytree flattening of the step args == manifest order (the contract)."""
+        for kind in ("train", "eval", "grad"):
+            ins, _ = io_table(M.MLP, kind)
+            ex = M.example_args(M.MLP, kind)
+            flat, _ = jax.tree_util.tree_flatten(ex)
+            assert len(flat) == len(ins)
+            for (name, _, dt, shape), leaf in zip(ins, flat):
+                assert tuple(shape) == tuple(leaf.shape), name
+                expect = {"f32": "float32", "i32": "int32"}[dt]
+                assert str(leaf.dtype) == expect, name
+
+    def test_eval_io(self):
+        ins, outs = io_table(M.TINYLM, "eval")
+        assert ins[-2][0] == "x" and ins[-1][0] == "y"
+        assert [n for n, _, _, _ in outs] == ["loss", "correct"]
+
+
+class TestManifest:
+    def test_manifest_round_trip_fields(self, tmp_path):
+        p = tmp_path / "m.txt"
+        write_manifest(str(p), M.MLP, "train")
+        lines = p.read_text().strip().split("\n")
+        assert lines[0] == "artifact mlp_train"
+        assert "model mlp" in lines and "kind train" in lines
+        assert f"batch {M.BATCH}" in lines
+        ins = [l for l in lines if l.startswith("input ")]
+        outs = [l for l in lines if l.startswith("output ")]
+        assert len(ins) == 3 * 6 + 4 and len(outs) == 6 + 2
+        # scalar shapes serialize as "-"
+        assert any(l == "input lr scalar f32 -" for l in ins)
+
+    def test_manifest_shapes_parse(self, tmp_path):
+        p = tmp_path / "m.txt"
+        write_manifest(str(p), M.CNN, "grad")
+        for line in p.read_text().strip().split("\n"):
+            parts = line.split(" ")
+            if parts[0] in ("input", "output"):
+                assert len(parts) == 5
+                if parts[4] != "-":
+                    dims = [int(d) for d in parts[4].split(",")]
+                    assert all(d > 0 for d in dims)
+
+
+class TestHloText:
+    def test_hlo_text_is_parseable_header(self):
+        lowered = jax.jit(M.make_step(M.MLP, "eval")).lower(
+            *M.example_args(M.MLP, "eval"))
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # return_tuple=True -> tuple-shaped root
+        assert "->" in text
+
+    def test_hlo_deterministic(self):
+        lowered1 = jax.jit(M.make_step(M.MLP, "eval")).lower(
+            *M.example_args(M.MLP, "eval"))
+        lowered2 = jax.jit(M.make_step(M.MLP, "eval")).lower(
+            *M.example_args(M.MLP, "eval"))
+        assert to_hlo_text(lowered1) == to_hlo_text(lowered2)
+
+
+class TestTestVec:
+    def test_testvec_bin_size_matches_idx(self, tmp_path):
+        spec, kind = M.MLP, "eval"
+        fn = jax.jit(M.make_step(spec, kind))
+        prefix = str(tmp_path / "tv")
+        write_testvec(prefix, fn, concrete_inputs(spec, kind), spec, kind)
+        total = 0
+        for line in open(prefix + ".idx"):
+            _, _, dt, size, _ = line.split(" ")
+            total += 4 * int(size)
+        assert os.path.getsize(prefix + ".bin") == total
+
+    def test_testvec_outputs_replayable(self, tmp_path):
+        """Reload the dumped inputs and re-run: outputs must match the dump."""
+        spec, kind = M.MLP, "eval"
+        fn = jax.jit(M.make_step(spec, kind))
+        prefix = str(tmp_path / "tv")
+        args = concrete_inputs(spec, kind)
+        write_testvec(prefix, fn, args, spec, kind)
+        blob = open(prefix + ".bin", "rb").read()
+        off = 0
+        arrays = []
+        for line in open(prefix + ".idx"):
+            io, name, dt, size, shape = line.split(" ")
+            n = int(size)
+            a = np.frombuffer(blob, dtype="<f4" if dt == "f32" else "<i4",
+                              count=n, offset=off)
+            off += 4 * n
+            arrays.append((io, a))
+        n_in = len([1 for io, _ in arrays if io == "in"])
+        flat_args, treedef = jax.tree_util.tree_flatten(args)
+        outs = fn(*args)
+        flat_outs, _ = jax.tree_util.tree_flatten(outs)
+        for (io, dumped), live in zip(arrays[n_in:], flat_outs):
+            assert io == "out"
+            np.testing.assert_allclose(dumped, np.asarray(live).reshape(-1),
+                                       rtol=1e-6)

@@ -1,0 +1,168 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core numeric signal for the whole stack: the AOT-lowered HLO
+that Rust executes contains exactly these kernels, so kernel==oracle here
+plus the Rust-side testvec replay pins end-to-end numerics.
+
+hypothesis sweeps shapes (including MXU-unaligned ones that exercise the
+divisor-block fallback) and value magnitudes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import linear, matmul, pick_block
+from compile.kernels.update import fused_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 5, 8, 16, 20, 62, 100, 128, 130, 256])
+SMALL_DIMS = st.sampled_from([1, 4, 20, 62, 128])
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- pick_block
+
+@given(dim=st.integers(1, 4096), target=st.sampled_from([8, 64, 128, 256]))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_is_divisor_and_bounded(dim, target):
+    b = pick_block(dim, target)
+    assert 1 <= b <= min(dim, target)
+    assert dim % b == 0
+
+
+def test_pick_block_prefers_mxu_edge():
+    assert pick_block(256) == 128
+    assert pick_block(1024) == 128
+    assert pick_block(62) == 62
+    assert pick_block(784) == 112  # largest divisor of 784 under 128
+
+
+# ------------------------------------------------------------------- matmul
+
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_large_aligned():
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x, w = _rand(kx, (256, 512)), _rand(kw, (512, 384))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(AssertionError):
+        matmul(x, w)
+
+
+# ------------------------------------------------------------------- linear
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_linear_matches_ref(act, m, k, n, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, b = _rand(kx, (m, k)), _rand(kw, (k, n)), _rand(kb, (n,))
+    np.testing.assert_allclose(linear(x, w, b, act), ref.linear_ref(x, w, b, act),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_linear_grads_match_ref(act):
+    """The custom VJP (Pallas backward matmuls) == jax autodiff of the oracle."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(3), 3)
+    x, w, b = _rand(kx, (20, 48)), _rand(kw, (48, 30)), _rand(kb, (30,))
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(linear(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.linear_ref(x, w, b, act)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=1e-4, atol=1e-5)
+
+
+def test_linear_relu_kills_negative_grads():
+    """ReLU mask correctness: grads vanish where pre-activation < 0."""
+    x = jnp.array([[1.0, 1.0]])
+    w = jnp.array([[1.0, -1.0], [1.0, -1.0]])  # outputs: [2, -2] -> relu [2, 0]
+    b = jnp.zeros((2,))
+    y = linear(x, w, b, "relu")
+    np.testing.assert_allclose(y, [[2.0, 0.0]])
+    g = jax.grad(lambda w: jnp.sum(linear(x, w, b, "relu")))(w)
+    # Column 1 (dead unit) must get zero gradient.
+    np.testing.assert_allclose(g[:, 1], [0.0, 0.0])
+
+
+# -------------------------------------------------------------- fused_update
+
+@given(
+    n=st.sampled_from([1, 7, 64, 1000, 1024, 1025, 4096, 200_000]),
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.floats(0.0, 1.0),
+    mu=st.floats(0.0, 1.0),
+)
+@settings(max_examples=20, deadline=None)
+def test_fused_update_matches_ref_1d(n, seed, lr, mu):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w, g, a, c = (_rand(k, (n,)) for k in ks)
+    lr, mu = jnp.float32(lr), jnp.float32(mu)
+    np.testing.assert_allclose(
+        fused_update(w, g, a, c, lr, mu),
+        ref.fused_update_ref(w, g, a, c, lr, mu),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("shape", [(784, 256), (3, 3, 8, 16), (62,), (1, 1)])
+def test_fused_update_preserves_shape(shape):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    w, g, a = (_rand(k, shape) for k in ks)
+    c = jnp.zeros(shape, jnp.float32)
+    out = fused_update(w, g, a, c, jnp.float32(0.1), jnp.float32(0.0))
+    assert out.shape == shape
+    np.testing.assert_allclose(out, w - 0.1 * g, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_update_identities():
+    """lr=0 -> no-op; mu=0,corr=0 -> plain SGD; g=0,corr=0,anchor=w -> no-op."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    w, g = _rand(ks[0], (100,)), _rand(ks[1], (100,))
+    z = jnp.zeros_like(w)
+    np.testing.assert_allclose(
+        fused_update(w, g, z, z, jnp.float32(0.0), jnp.float32(0.5)), w)
+    np.testing.assert_allclose(
+        fused_update(w, g, w, z, jnp.float32(0.3), jnp.float32(0.7)),
+        w - 0.3 * g, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_update_inside_jit_and_lowerable():
+    """The kernel must survive jit + lowering (the AOT path)."""
+    w = jnp.ones((130,))
+
+    @jax.jit
+    def f(w):
+        # g=w, anchor=w (mu term vanishes), corr=w  ->  w - 0.1*(w + w) = 0.8w
+        return fused_update(w, w, w, w, jnp.float32(0.1), jnp.float32(0.2))
+
+    np.testing.assert_allclose(f(w), 0.8 * w, rtol=1e-6)
+    hlo = jax.jit(f).lower(w).compiler_ir("stablehlo")
+    assert "stablehlo" in str(hlo)

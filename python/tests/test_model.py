@@ -1,0 +1,139 @@
+"""Layer-2 correctness: model semantics of the generalized train step.
+
+Checks the algorithm-covering semantics from DESIGN.md §3 — that the one
+exported step really *is* FedAvg / FedProx / SCAFFOLD / FedDyn / Mime
+depending on (mu, anchor, corr) — plus learning-progress sanity on every
+model family.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import concrete_inputs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=["mlp", "cnn", "tinylm"])
+def spec(request):
+    return M.MODELS[request.param]
+
+
+def _zeros_like(ps):
+    return [jnp.zeros_like(p) for p in ps]
+
+
+class TestGeometry:
+    def test_param_specs_match_init(self, spec):
+        params = spec.init(0)
+        assert len(params) == len(spec.specs)
+        for (name, shape), p in zip(spec.specs, params):
+            assert p.shape == shape, name
+            assert p.dtype == jnp.float32
+
+    def test_param_counts(self):
+        assert M.MLP.param_count() == 784 * 256 + 256 + 256 * 128 + 128 + 128 * 62 + 62
+        assert M.CNN.param_count() == 3 * 3 * 8 + 8 + 3 * 3 * 8 * 16 + 16 + 784 * 62 + 62
+        assert M.TINYLM.param_count() > 50_000
+
+    def test_init_deterministic(self, spec):
+        a, b = spec.init(3), spec.init(3)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        c = spec.init(4)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+class TestTrainStepSemantics:
+    def test_fedavg_is_plain_sgd(self, spec):
+        """mu=0, corr=0 reduces to w - lr * grad."""
+        params, _, _, x, y, lr, _ = concrete_inputs(spec, "train")
+        step = M.make_step(spec, "train")
+        z = _zeros_like(params)
+        out = jax.jit(step)(params, z, z, x, y, lr, jnp.float32(0.0))
+        new, loss = list(out[:-2]), out[-2]
+        loss_ref, grads = jax.value_and_grad(spec.loss)(params, x, y)
+        np.testing.assert_allclose(loss, loss_ref, rtol=1e-5)
+        for w, g, w2 in zip(params, grads, new):
+            np.testing.assert_allclose(w2, w - lr * g, rtol=1e-4, atol=1e-6)
+
+    def test_fedprox_pulls_toward_anchor(self, spec):
+        """mu>0 with anchor=w adds no force; anchor far away does."""
+        params, _, _, x, y, lr, _ = concrete_inputs(spec, "train")
+        step = jax.jit(M.make_step(spec, "train"))
+        z = _zeros_like(params)
+        mu = jnp.float32(10.0)
+        # anchor == params: identical to fedavg
+        out_self = step(params, params, z, x, y, lr, mu)
+        out_avg = step(params, z, z, x, y, lr, jnp.float32(0.0))
+        for a, b in zip(out_self[:-2], out_avg[:-2]):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        # anchor at 0 with huge mu: pulls weights toward 0
+        out_zero = step(params, z, z, x, y, lr, mu)
+        shrunk = sum(float(jnp.vdot(w, w)) for w in out_zero[:-2])
+        base = sum(float(jnp.vdot(w, w)) for w in out_avg[:-2])
+        assert shrunk < base
+
+    def test_scaffold_correction_shifts_update(self, spec):
+        """corr enters additively: w' = w - lr*(g + corr)."""
+        params, _, _, x, y, lr, _ = concrete_inputs(spec, "train")
+        step = jax.jit(M.make_step(spec, "train"))
+        z = _zeros_like(params)
+        corr = [jnp.full_like(p, 0.01) for p in params]
+        out_c = step(params, z, corr, x, y, lr, jnp.float32(0.0))
+        out_0 = step(params, z, z, x, y, lr, jnp.float32(0.0))
+        for wc, w0 in zip(out_c[:-2], out_0[:-2]):
+            np.testing.assert_allclose(wc, w0 - lr * 0.01, rtol=1e-4, atol=1e-6)
+
+    def test_gsq_is_grad_norm_sq(self, spec):
+        params, _, _, x, y, lr, _ = concrete_inputs(spec, "train")
+        step = jax.jit(M.make_step(spec, "train"))
+        z = _zeros_like(params)
+        out = step(params, z, z, x, y, lr, jnp.float32(0.0))
+        _, grads = jax.value_and_grad(spec.loss)(params, x, y)
+        gsq_ref = sum(float(jnp.vdot(g, g)) for g in grads)
+        np.testing.assert_allclose(out[-1], gsq_ref, rtol=1e-3)
+
+    def test_grad_step_matches_autodiff(self, spec):
+        params, x, y = concrete_inputs(spec, "grad")
+        out = jax.jit(M.make_step(spec, "grad"))(params, x, y)
+        loss_ref, grads = jax.value_and_grad(spec.loss)(params, x, y)
+        np.testing.assert_allclose(out[-1], loss_ref, rtol=1e-5)
+        for g, gr in zip(out[:-1], grads):
+            np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-6)
+
+
+class TestLearning:
+    def test_loss_decreases_over_sgd_steps(self, spec):
+        """A few generalized steps on one batch must reduce the loss."""
+        params, _, _, x, y, lr, _ = concrete_inputs(spec, "train")
+        step = jax.jit(M.make_step(spec, "train"))
+        z = _zeros_like(params)
+        losses = []
+        for _ in range(5):
+            out = step(params, z, z, x, y, lr, jnp.float32(0.0))
+            params = list(out[:-2])
+            losses.append(float(out[-2]))
+        assert losses[-1] < losses[0], losses
+
+    def test_eval_correct_bounded_by_batch(self, spec):
+        params, x, y = concrete_inputs(spec, "eval")
+        loss, correct = jax.jit(M.make_step(spec, "eval"))(params, x, y)
+        n_pred = int(np.prod(spec.y_shape))
+        assert 0.0 <= float(correct) <= n_pred
+        assert float(loss) > 0.0
+
+
+class TestCrossEntropy:
+    def test_perfect_logits_zero_loss(self):
+        y = jnp.array([0, 1, 2], jnp.int32)
+        logits = 1e4 * jax.nn.one_hot(y, 4)
+        assert float(M.cross_entropy(logits, y)) < 1e-3
+
+    def test_uniform_logits_log_c(self):
+        y = jnp.array([0, 1], jnp.int32)
+        logits = jnp.zeros((2, 62))
+        np.testing.assert_allclose(M.cross_entropy(logits, y), np.log(62), rtol=1e-5)

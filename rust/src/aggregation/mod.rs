@@ -1,0 +1,566 @@
+//! Hierarchical local/global aggregation (paper §4.2).
+//!
+//! Users declare, per algorithm, the *operations* (OPs) on each
+//! communicated quantity (§3.2): weighted average, simple average, sum,
+//! or collect-without-averaging ("Special Params").  Devices run a
+//! [`LocalAgg`] over the clients they simulated and ship one
+//! [`DeviceAggregate`] (G_k) to the server; the server merges the K
+//! aggregates in a [`GlobalAgg`].  For the three averaging OPs this is
+//! *exactly* equal to flat client-level aggregation (property-tested
+//! below), while cutting communication from s_a·M_p to s_a·K and trips
+//! from M_p to K (Table 1).  Collect entries are forwarded verbatim —
+//! the s_e·M_p term the paper says cannot be optimized further.
+
+use crate::model::params::{ParamSet, WeightedAccum};
+use crate::util::codec::{Decoder, Encoder};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// The user-declared aggregation operation for one entry (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggOp {
+    /// Σ w_m x_m / Σ w_m (FedAvg on Δw, weights = dataset sizes).
+    WeightedAvg,
+    /// Σ x_m / M_p (SCAFFOLD's Δc).
+    Avg,
+    /// Σ x_m (FedDyn's h update).
+    Sum,
+    /// Collected at the server without averaging (FedNova τ_m, Mime
+    /// full-batch gradients) — the Special Params of §4.2.
+    Collect,
+}
+
+impl AggOp {
+    fn code(self) -> u8 {
+        match self {
+            AggOp::WeightedAvg => 0,
+            AggOp::Avg => 1,
+            AggOp::Sum => 2,
+            AggOp::Collect => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<AggOp> {
+        Ok(match c {
+            0 => AggOp::WeightedAvg,
+            1 => AggOp::Avg,
+            2 => AggOp::Sum,
+            3 => AggOp::Collect,
+            _ => bail!("bad AggOp code {c}"),
+        })
+    }
+}
+
+/// One communicated quantity.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Params(ParamSet),
+    Scalar(f64),
+}
+
+impl Payload {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Payload::Params(p) => p.size_bytes(),
+            Payload::Scalar(_) => 8,
+        }
+    }
+
+    fn encode(&self, enc: &mut Encoder) {
+        match self {
+            Payload::Params(p) => {
+                enc.put_u8(0);
+                p.encode(enc);
+            }
+            Payload::Scalar(x) => {
+                enc.put_u8(1);
+                enc.put_f64(*x);
+            }
+        }
+    }
+
+    fn decode(dec: &mut Decoder) -> Result<Payload> {
+        match dec.u8()? {
+            0 => Ok(Payload::Params(ParamSet::decode(dec)?)),
+            1 => Ok(Payload::Scalar(dec.f64()?)),
+            t => bail!("bad payload tag {t}"),
+        }
+    }
+}
+
+/// What one simulated client returns (C_{m,E-1} in Alg. 1/2).
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    pub client: usize,
+    /// Aggregation weight for WeightedAvg entries (= N_m by convention).
+    pub weight: f64,
+    pub entries: Vec<(String, AggOp, Payload)>,
+}
+
+/// Per-entry accumulator state inside a device/server aggregator.
+#[derive(Debug, Clone)]
+enum Slot {
+    Params { op: AggOp, accum: WeightedAccum, count: usize },
+    Scalar { op: AggOp, sum: f64, weight: f64, count: usize },
+    Collected(Vec<(usize, Payload)>),
+}
+
+/// The pre-processed result a device returns to the server (G_k).
+#[derive(Debug, Clone)]
+pub struct DeviceAggregate {
+    pub device: usize,
+    entries: BTreeMap<String, Slot>,
+    pub n_clients: usize,
+}
+
+/// LocalAggregate(...) of Alg. 2 — runs on each device.
+pub struct LocalAgg {
+    agg: DeviceAggregate,
+}
+
+impl LocalAgg {
+    pub fn new(device: usize) -> LocalAgg {
+        LocalAgg {
+            agg: DeviceAggregate { device, entries: BTreeMap::new(), n_clients: 0 },
+        }
+    }
+
+    /// Fold one finished client's update into the local aggregate.
+    pub fn add(&mut self, update: &ClientUpdate) {
+        self.agg.n_clients += 1;
+        for (name, op, payload) in &update.entries {
+            let slot = self.agg.entries.entry(name.clone()).or_insert_with(|| match (op, payload) {
+                (AggOp::Collect, _) => Slot::Collected(Vec::new()),
+                (_, Payload::Params(p)) => Slot::Params {
+                    op: *op,
+                    accum: WeightedAccum::new(&p.shapes),
+                    count: 0,
+                },
+                (_, Payload::Scalar(_)) => Slot::Scalar { op: *op, sum: 0.0, weight: 0.0, count: 0 },
+            });
+            match (slot, payload) {
+                (Slot::Collected(v), p) => v.push((update.client, p.clone())),
+                (Slot::Params { op, accum, count }, Payload::Params(p)) => {
+                    let w = match op {
+                        AggOp::WeightedAvg => update.weight,
+                        _ => 1.0,
+                    };
+                    accum.add(p, w);
+                    *count += 1;
+                }
+                (Slot::Scalar { op, sum, weight, count }, Payload::Scalar(x)) => {
+                    let w = match op {
+                        AggOp::WeightedAvg => update.weight,
+                        _ => 1.0,
+                    };
+                    *sum += w * x;
+                    *weight += w;
+                    *count += 1;
+                }
+                _ => panic!("payload kind changed for entry {name}"),
+            }
+        }
+    }
+
+    pub fn finish(self) -> DeviceAggregate {
+        self.agg
+    }
+}
+
+impl DeviceAggregate {
+    /// Serialized wire size (the comm-size metric of Table 1).
+    pub fn encoded(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_u32(self.device as u32);
+        enc.put_u32(self.n_clients as u32);
+        enc.put_u32(self.entries.len() as u32);
+        for (name, slot) in &self.entries {
+            enc.put_str(name);
+            match slot {
+                Slot::Params { op, accum, count } => {
+                    enc.put_u8(0);
+                    enc.put_u8(op.code());
+                    accum.sum.encode(&mut enc);
+                    enc.put_f64(accum.weight);
+                    enc.put_u32(*count as u32);
+                }
+                Slot::Scalar { op, sum, weight, count } => {
+                    enc.put_u8(1);
+                    enc.put_u8(op.code());
+                    enc.put_f64(*sum);
+                    enc.put_f64(*weight);
+                    enc.put_u32(*count as u32);
+                }
+                Slot::Collected(items) => {
+                    enc.put_u8(2);
+                    enc.put_u32(items.len() as u32);
+                    for (client, p) in items {
+                        enc.put_u32(*client as u32);
+                        p.encode(&mut enc);
+                    }
+                }
+            }
+        }
+        enc.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DeviceAggregate> {
+        let mut dec = Decoder::new(buf);
+        let device = dec.u32()? as usize;
+        let n_clients = dec.u32()? as usize;
+        let n = dec.u32()? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let name = dec.str()?;
+            let slot = match dec.u8()? {
+                0 => {
+                    let op = AggOp::from_code(dec.u8()?)?;
+                    let sum = ParamSet::decode(&mut dec)?;
+                    let weight = dec.f64()?;
+                    let count = dec.u32()? as usize;
+                    Slot::Params { op, accum: WeightedAccum { sum, weight }, count }
+                }
+                1 => {
+                    let op = AggOp::from_code(dec.u8()?)?;
+                    let sum = dec.f64()?;
+                    let weight = dec.f64()?;
+                    let count = dec.u32()? as usize;
+                    Slot::Scalar { op, sum, weight, count }
+                }
+                2 => {
+                    let k = dec.u32()? as usize;
+                    let mut items = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        let client = dec.u32()? as usize;
+                        items.push((client, Payload::decode(&mut dec)?));
+                    }
+                    Slot::Collected(items)
+                }
+                t => bail!("bad slot tag {t}"),
+            };
+            entries.insert(name, slot);
+        }
+        Ok(DeviceAggregate { device, entries, n_clients })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.encoded().len()
+    }
+}
+
+/// The finalized round result at the server.
+#[derive(Debug, Clone, Default)]
+pub struct RoundAggregate {
+    /// Entry name → aggregated ParamSet (already averaged per its OP).
+    pub params: BTreeMap<String, ParamSet>,
+    /// Entry name → aggregated scalar.
+    pub scalars: BTreeMap<String, f64>,
+    /// Entry name → collected (client, payload) list, Special Params.
+    pub collected: BTreeMap<String, Vec<(usize, Payload)>>,
+    pub n_clients: usize,
+}
+
+/// GlobalAggregate(...) of Alg. 2 — merges the K device aggregates.
+#[derive(Default)]
+pub struct GlobalAgg {
+    entries: BTreeMap<String, Slot>,
+    n_clients: usize,
+}
+
+impl GlobalAgg {
+    pub fn new() -> GlobalAgg {
+        GlobalAgg::default()
+    }
+
+    pub fn merge(&mut self, dev: DeviceAggregate) {
+        self.n_clients += dev.n_clients;
+        for (name, slot) in dev.entries {
+            match (self.entries.get_mut(&name), slot) {
+                (None, s) => {
+                    self.entries.insert(name, s);
+                }
+                (
+                    Some(Slot::Params { accum, count, .. }),
+                    Slot::Params { accum: a2, count: c2, .. },
+                ) => {
+                    accum.merge(&a2);
+                    *count += c2;
+                }
+                (
+                    Some(Slot::Scalar { sum, weight, count, .. }),
+                    Slot::Scalar { sum: s2, weight: w2, count: c2, .. },
+                ) => {
+                    *sum += s2;
+                    *weight += w2;
+                    *count += c2;
+                }
+                (Some(Slot::Collected(v)), Slot::Collected(v2)) => v.extend(v2),
+                _ => panic!("slot kind mismatch for entry {name}"),
+            }
+        }
+    }
+
+    /// Apply each entry's OP and produce the round result.
+    pub fn finish(self) -> RoundAggregate {
+        let mut out = RoundAggregate { n_clients: self.n_clients, ..Default::default() };
+        for (name, slot) in self.entries {
+            match slot {
+                Slot::Params { op, accum, count } => {
+                    let p = match op {
+                        AggOp::WeightedAvg | AggOp::Avg => {
+                            let denom = match op {
+                                AggOp::WeightedAvg => accum.weight,
+                                _ => count as f64,
+                            };
+                            let mut m = accum.sum.clone();
+                            if denom > 0.0 {
+                                m.scale((1.0 / denom) as f32);
+                            }
+                            m
+                        }
+                        AggOp::Sum => accum.sum.clone(),
+                        AggOp::Collect => unreachable!(),
+                    };
+                    out.params.insert(name, p);
+                }
+                Slot::Scalar { op, sum, weight, count } => {
+                    let v = match op {
+                        AggOp::WeightedAvg => {
+                            if weight > 0.0 {
+                                sum / weight
+                            } else {
+                                0.0
+                            }
+                        }
+                        AggOp::Avg => {
+                            if count > 0 {
+                                sum / count as f64
+                            } else {
+                                0.0
+                            }
+                        }
+                        AggOp::Sum => sum,
+                        AggOp::Collect => unreachable!(),
+                    };
+                    out.scalars.insert(name, v);
+                }
+                Slot::Collected(items) => {
+                    out.collected.insert(name, items);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Flat (non-hierarchical) aggregation — the reference the paper's SD/FA
+/// schemes use, and the oracle for the equivalence tests.
+pub fn flat_aggregate(updates: &[ClientUpdate]) -> RoundAggregate {
+    let mut local = LocalAgg::new(0);
+    for u in updates {
+        local.add(u);
+    }
+    let mut global = GlobalAgg::new();
+    global.merge(local.finish());
+    global.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_params(rng: &mut Rng, shapes: &[Vec<usize>]) -> ParamSet {
+        let tensors = shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>().max(1))
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        ParamSet { shapes: shapes.to_vec(), tensors }
+    }
+
+    fn mk_update(rng: &mut Rng, client: usize, shapes: &[Vec<usize>]) -> ClientUpdate {
+        ClientUpdate {
+            client,
+            weight: rng.range_f64(1.0, 100.0),
+            entries: vec![
+                ("delta".into(), AggOp::WeightedAvg, Payload::Params(mk_params(rng, shapes))),
+                ("delta_c".into(), AggOp::Avg, Payload::Params(mk_params(rng, shapes))),
+                ("tau".into(), AggOp::Collect, Payload::Scalar(rng.next_f64())),
+                ("gsq".into(), AggOp::Sum, Payload::Scalar(rng.next_f64())),
+            ],
+        }
+    }
+
+    #[test]
+    fn prop_hierarchical_equals_flat() {
+        // The §4.2 guarantee: local+global == original aggregation.
+        prop::check("hierarchical == flat", 40, |g| {
+            let shapes = vec![vec![g.int(1, 8), g.int(1, 8)], vec![g.int(1, 16)]];
+            let m = g.int(1, 30);
+            let k = g.int(1, 6);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let updates: Vec<ClientUpdate> =
+                (0..m).map(|c| mk_update(&mut rng, c, &shapes)).collect();
+
+            let flat = flat_aggregate(&updates);
+
+            // Hierarchical: round-robin clients over k devices.
+            let mut global = GlobalAgg::new();
+            for dev in 0..k {
+                let mut local = LocalAgg::new(dev);
+                for (i, u) in updates.iter().enumerate() {
+                    if i % k == dev {
+                        local.add(u);
+                    }
+                }
+                // Serialize across the "network" like the real path does.
+                let wire = local.finish().encoded();
+                global.merge(DeviceAggregate::decode(&wire).unwrap());
+            }
+            let hier = global.finish();
+
+            let d = flat.params["delta"].max_abs_diff(&hier.params["delta"]);
+            if d > 1e-5 {
+                return Err(format!("delta diff {d}"));
+            }
+            let dc = flat.params["delta_c"].max_abs_diff(&hier.params["delta_c"]);
+            if dc > 1e-5 {
+                return Err(format!("delta_c diff {dc}"));
+            }
+            if (flat.scalars["gsq"] - hier.scalars["gsq"]).abs() > 1e-9 {
+                return Err("gsq sum mismatch".into());
+            }
+            let mut f: Vec<usize> = flat.collected["tau"].iter().map(|x| x.0).collect();
+            let mut h: Vec<usize> = hier.collected["tau"].iter().map(|x| x.0).collect();
+            f.sort_unstable();
+            h.sort_unstable();
+            if f != h {
+                return Err("collected set mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_avg_math() {
+        let shapes = vec![vec![1]];
+        let mk = |v: f32, w: f64, c: usize| ClientUpdate {
+            client: c,
+            weight: w,
+            entries: vec![(
+                "x".into(),
+                AggOp::WeightedAvg,
+                Payload::Params(ParamSet { shapes: shapes.clone(), tensors: vec![vec![v]] }),
+            )],
+        };
+        let agg = flat_aggregate(&[mk(1.0, 1.0, 0), mk(4.0, 3.0, 1)]);
+        assert!((agg.params["x"].tensors[0][0] - 3.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_ignores_weights() {
+        let shapes = vec![vec![1]];
+        let mk = |v: f32, w: f64, c: usize| ClientUpdate {
+            client: c,
+            weight: w,
+            entries: vec![(
+                "x".into(),
+                AggOp::Avg,
+                Payload::Params(ParamSet { shapes: shapes.clone(), tensors: vec![vec![v]] }),
+            )],
+        };
+        let agg = flat_aggregate(&[mk(1.0, 100.0, 0), mk(3.0, 1.0, 1)]);
+        assert!((agg.params["x"].tensors[0][0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sum_and_scalar_ops() {
+        let mk = |v: f64, c: usize| ClientUpdate {
+            client: c,
+            weight: 2.0,
+            entries: vec![
+                ("s".into(), AggOp::Sum, Payload::Scalar(v)),
+                ("a".into(), AggOp::Avg, Payload::Scalar(v)),
+                ("w".into(), AggOp::WeightedAvg, Payload::Scalar(v)),
+            ],
+        };
+        let agg = flat_aggregate(&[mk(1.0, 0), mk(5.0, 1)]);
+        assert_eq!(agg.scalars["s"], 6.0);
+        assert_eq!(agg.scalars["a"], 3.0);
+        assert_eq!(agg.scalars["w"], 3.0); // equal weights
+    }
+
+    #[test]
+    fn collect_preserves_clients_and_values() {
+        let mk = |v: f64, c: usize| ClientUpdate {
+            client: c,
+            weight: 1.0,
+            entries: vec![("tau".into(), AggOp::Collect, Payload::Scalar(v))],
+        };
+        let agg = flat_aggregate(&[mk(7.0, 3), mk(9.0, 5)]);
+        let items = &agg.collected["tau"];
+        assert_eq!(items.len(), 2);
+        assert!(items.contains(&(3, Payload::Scalar(7.0))));
+        assert!(items.contains(&(5, Payload::Scalar(9.0))));
+    }
+
+    #[test]
+    fn device_aggregate_wire_round_trip() {
+        let mut rng = Rng::new(8);
+        let shapes = vec![vec![4, 2], vec![3]];
+        let mut local = LocalAgg::new(2);
+        for c in 0..5 {
+            local.add(&mk_update(&mut rng, c, &shapes));
+        }
+        let agg = local.finish();
+        let wire = agg.encoded();
+        let back = DeviceAggregate::decode(&wire).unwrap();
+        assert_eq!(back.device, 2);
+        assert_eq!(back.n_clients, 5);
+        assert_eq!(back.encoded(), wire);
+    }
+
+    #[test]
+    fn comm_size_shrinks_with_hierarchy() {
+        // K device aggregates must be ~K/M the size of M client updates
+        // (for avg-only payloads) — the Table-1 comm claim.
+        let mut rng = Rng::new(9);
+        let shapes = vec![vec![64, 64]];
+        let updates: Vec<ClientUpdate> = (0..32)
+            .map(|c| ClientUpdate {
+                client: c,
+                weight: 1.0,
+                entries: vec![(
+                    "delta".into(),
+                    AggOp::WeightedAvg,
+                    Payload::Params(mk_params(&mut rng, &shapes)),
+                )],
+            })
+            .collect();
+        let flat_bytes: usize = updates
+            .iter()
+            .map(|u| u.entries.iter().map(|(_, _, p)| p.size_bytes()).sum::<usize>())
+            .sum();
+        let mut local = LocalAgg::new(0);
+        for u in &updates {
+            local.add(u);
+        }
+        let hier_bytes = local.finish().size_bytes();
+        assert!(
+            hier_bytes * 16 < flat_bytes,
+            "hier {hier_bytes} vs flat {flat_bytes}"
+        );
+    }
+
+    #[test]
+    fn empty_global_agg_finishes_empty() {
+        let agg = GlobalAgg::new().finish();
+        assert!(agg.params.is_empty());
+        assert_eq!(agg.n_clients, 0);
+    }
+}

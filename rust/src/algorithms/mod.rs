@@ -1,0 +1,526 @@
+//! The six FL algorithms of the paper's evaluation (§5.1), expressed in
+//! Parrot's generic API: per-algorithm **OP declarations** on the
+//! communicated parameters plus device-side task preparation and
+//! server-side application (paper §3.2 "the only extra things users
+//! specify").
+//!
+//! All six share the one AOT-compiled generalized step (DESIGN.md §3):
+//!
+//! | algorithm | mu        | anchor   | corr        | client state | special params |
+//! |-----------|-----------|----------|-------------|--------------|----------------|
+//! | FedAvg    | 0         | —        | 0           | —            | —              |
+//! | FedProx   | μ         | w_global | 0           | —            | —              |
+//! | FedNova   | 0         | —        | 0           | —            | τ_m (Collect)  |
+//! | SCAFFOLD  | 0         | —        | c − c_i     | c_i          | —              |
+//! | FedDyn    | α         | w_global | −h_i        | h_i          | —              |
+//! | Mime      | 0         | —        | β·m_server  | —            | full-batch g   |
+//!
+//! SCAFFOLD uses option-II control-variate refresh; Mime is the
+//! MimeLite-style variant (server momentum applied as an additive local
+//! correction) — both documented in DESIGN.md §3.
+
+use crate::aggregation::{AggOp, ClientUpdate, Payload, RoundAggregate};
+use crate::model::ParamSet;
+use anyhow::{bail, Result};
+
+/// What the server broadcasts each round (Θ^r of Alg. 1).
+#[derive(Debug, Clone)]
+pub struct Broadcast {
+    pub round: usize,
+    pub params: ParamSet,
+    /// Algorithm-specific extra global quantity (SCAFFOLD c, Mime m).
+    pub extra: Option<ParamSet>,
+}
+
+/// Device-side inputs for one client task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub anchors: ParamSet,
+    pub corrs: ParamSet,
+    pub mu: f32,
+    /// Whether the worker must also run the grad artifact to produce a
+    /// full-batch gradient (Mime).
+    pub wants_full_grad: bool,
+}
+
+/// What local training produced for one client.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub client: usize,
+    /// Aggregation weight (N_m).
+    pub weight: f64,
+    /// Parameters at task start (= broadcast params).
+    pub initial: ParamSet,
+    /// Parameters after E local epochs.
+    pub finals: ParamSet,
+    pub mean_loss: f32,
+    /// Local SGD steps taken (τ_m for FedNova / SCAFFOLD).
+    pub n_steps: usize,
+    pub lr: f32,
+    /// Full-batch gradient at the initial params (Mime only).
+    pub full_grad: Option<ParamSet>,
+}
+
+/// Server-side mutable algorithm state.
+#[derive(Debug, Clone, Default)]
+pub struct ServerState {
+    /// SCAFFOLD global control variate c.
+    pub c: Option<ParamSet>,
+    /// FedDyn h term.
+    pub h: Option<ParamSet>,
+    /// Mime server momentum m.
+    pub m: Option<ParamSet>,
+}
+
+/// Round context for server updates.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerCtx {
+    pub m_total: usize,
+    pub m_selected: usize,
+}
+
+/// The algorithm registry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algo {
+    FedAvg,
+    FedProx { mu: f32 },
+    FedNova,
+    Scaffold,
+    FedDyn { alpha: f32 },
+    Mime { beta: f32 },
+}
+
+impl Algo {
+    /// Parse by name, taking μ/α/β from the config's `mu` knob.
+    pub fn parse(name: &str, mu: f32) -> Result<Algo> {
+        Ok(match name {
+            "fedavg" => Algo::FedAvg,
+            "fedprox" => Algo::FedProx { mu: if mu > 0.0 { mu } else { 0.01 } },
+            "fednova" => Algo::FedNova,
+            "scaffold" => Algo::Scaffold,
+            "feddyn" => Algo::FedDyn { alpha: if mu > 0.0 { mu } else { 0.01 } },
+            "mime" => Algo::Mime { beta: if mu > 0.0 { mu } else { 0.9 } },
+            _ => bail!(
+                "unknown algorithm {name:?} (fedavg|fedprox|fednova|scaffold|feddyn|mime)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::FedAvg => "fedavg",
+            Algo::FedProx { .. } => "fedprox",
+            Algo::FedNova => "fednova",
+            Algo::Scaffold => "scaffold",
+            Algo::FedDyn { .. } => "feddyn",
+            Algo::Mime { .. } => "mime",
+        }
+    }
+
+    /// Does the algorithm keep per-client state (needs the state manager)?
+    pub fn stateful(&self) -> bool {
+        matches!(self, Algo::Scaffold | Algo::FedDyn { .. })
+    }
+
+    /// Does it communicate Special Params (Collect entries, §4.2)?
+    pub fn has_special(&self) -> bool {
+        matches!(self, Algo::FedNova | Algo::Mime { .. })
+    }
+
+    // ------------------------------------------------------------ device
+
+    /// Build the task spec for one client (Device_Executes prologue).
+    pub fn prepare(
+        &self,
+        bc: &Broadcast,
+        client_state: Option<&ParamSet>,
+        shapes: &[Vec<usize>],
+    ) -> TaskSpec {
+        let zeros = || ParamSet::zeros(shapes);
+        match self {
+            Algo::FedAvg | Algo::FedNova => TaskSpec {
+                anchors: zeros(),
+                corrs: zeros(),
+                mu: 0.0,
+                wants_full_grad: false,
+            },
+            Algo::FedProx { mu } => TaskSpec {
+                anchors: bc.params.clone(),
+                corrs: zeros(),
+                mu: *mu,
+                wants_full_grad: false,
+            },
+            Algo::Scaffold => {
+                // corr = c − c_i
+                let mut corr = bc.extra.clone().unwrap_or_else(zeros);
+                if let Some(ci) = client_state {
+                    corr.add_scaled(ci, -1.0);
+                }
+                TaskSpec { anchors: zeros(), corrs: corr, mu: 0.0, wants_full_grad: false }
+            }
+            Algo::FedDyn { alpha } => {
+                // corr = −h_i ; prox anchor = w_global with μ=α
+                let mut corr = zeros();
+                if let Some(hi) = client_state {
+                    corr.add_scaled(hi, -1.0);
+                }
+                TaskSpec {
+                    anchors: bc.params.clone(),
+                    corrs: corr,
+                    mu: *alpha,
+                    wants_full_grad: false,
+                }
+            }
+            Algo::Mime { beta } => {
+                let mut corr = bc.extra.clone().unwrap_or_else(zeros);
+                corr.scale(*beta);
+                TaskSpec { anchors: zeros(), corrs: corr, mu: 0.0, wants_full_grad: true }
+            }
+        }
+    }
+
+    /// Build the ClientUpdate (+ new client state) from a finished task
+    /// (Device_Executes epilogue: the user-declared OPs).
+    pub fn client_update(
+        &self,
+        res: &TaskResult,
+        bc: &Broadcast,
+        old_state: Option<&ParamSet>,
+    ) -> (ClientUpdate, Option<ParamSet>) {
+        let delta = res.finals.delta(&res.initial);
+        let mut entries: Vec<(String, AggOp, Payload)> = Vec::new();
+        let mut new_state = None;
+        match self {
+            Algo::FedAvg | Algo::FedProx { .. } => {
+                entries.push(("delta".into(), AggOp::WeightedAvg, Payload::Params(delta)));
+            }
+            Algo::FedNova => {
+                // Normalized direction d_m = Δ_m / τ_m ; τ_eff via a
+                // weighted-avg scalar; raw τ_m additionally collected as
+                // a Special Param (the s_e path of Table 1).
+                let tau = res.n_steps.max(1) as f32;
+                let mut d = delta;
+                d.scale(1.0 / tau);
+                entries.push(("delta_norm".into(), AggOp::WeightedAvg, Payload::Params(d)));
+                entries.push(("tau_eff".into(), AggOp::WeightedAvg, Payload::Scalar(tau as f64)));
+                entries.push(("tau".into(), AggOp::Collect, Payload::Scalar(tau as f64)));
+            }
+            Algo::Scaffold => {
+                // Option II refresh: c_i⁺ = c_i − c + (w0 − wE)/(τ·lr)
+                let tau = res.n_steps.max(1) as f32;
+                let zeros = ParamSet::zeros(&res.initial.shapes);
+                let c = bc.extra.as_ref().unwrap_or(&zeros);
+                let ci = old_state.unwrap_or(&zeros);
+                let mut ci_new = ci.clone();
+                ci_new.add_scaled(c, -1.0);
+                // (w0 − wE) / (τ lr) = −Δ/(τ lr)
+                let mut drift = res.finals.delta(&res.initial);
+                drift.scale(-1.0 / (tau * res.lr));
+                ci_new.add_scaled(&drift, 1.0);
+                let delta_c = ci_new.delta(ci);
+                entries.push(("delta".into(), AggOp::WeightedAvg, Payload::Params(delta)));
+                entries.push(("delta_c".into(), AggOp::Avg, Payload::Params(delta_c)));
+                new_state = Some(ci_new);
+            }
+            Algo::FedDyn { alpha } => {
+                // h_i⁺ = h_i − α·Δ_m
+                let zeros = ParamSet::zeros(&res.initial.shapes);
+                let hi = old_state.unwrap_or(&zeros);
+                let mut hi_new = hi.clone();
+                hi_new.add_scaled(&delta, -*alpha);
+                entries.push(("delta".into(), AggOp::Avg, Payload::Params(delta)));
+                new_state = Some(hi_new);
+            }
+            Algo::Mime { .. } => {
+                entries.push(("delta".into(), AggOp::WeightedAvg, Payload::Params(delta)));
+                if let Some(g) = &res.full_grad {
+                    entries.push((
+                        "grad_full".into(),
+                        AggOp::Collect,
+                        Payload::Params(g.clone()),
+                    ));
+                }
+            }
+        }
+        entries.push(("loss".into(), AggOp::WeightedAvg, Payload::Scalar(res.mean_loss as f64)));
+        (
+            ClientUpdate { client: res.client, weight: res.weight, entries },
+            new_state,
+        )
+    }
+
+    // ------------------------------------------------------------ server
+
+    /// GlobalAggregate epilogue: fold the round aggregate into the
+    /// global params + server state.
+    pub fn server_apply(
+        &self,
+        global: &mut ParamSet,
+        state: &mut ServerState,
+        agg: &RoundAggregate,
+        ctx: &ServerCtx,
+    ) {
+        match self {
+            Algo::FedAvg | Algo::FedProx { .. } => {
+                if let Some(d) = agg.params.get("delta") {
+                    global.add_scaled(d, 1.0);
+                }
+            }
+            Algo::FedNova => {
+                if let (Some(d), Some(tau_eff)) =
+                    (agg.params.get("delta_norm"), agg.scalars.get("tau_eff"))
+                {
+                    global.add_scaled(d, *tau_eff as f32);
+                }
+            }
+            Algo::Scaffold => {
+                if let Some(d) = agg.params.get("delta") {
+                    global.add_scaled(d, 1.0);
+                }
+                if let Some(dc) = agg.params.get("delta_c") {
+                    let c = state
+                        .c
+                        .get_or_insert_with(|| ParamSet::zeros(&global.shapes));
+                    let frac = ctx.m_selected as f32 / ctx.m_total.max(1) as f32;
+                    c.add_scaled(dc, frac);
+                }
+            }
+            Algo::FedDyn { alpha } => {
+                if let Some(d) = agg.params.get("delta") {
+                    let h = state
+                        .h
+                        .get_or_insert_with(|| ParamSet::zeros(&global.shapes));
+                    let frac = ctx.m_selected as f32 / ctx.m_total.max(1) as f32;
+                    h.add_scaled(d, -alpha * frac);
+                    // w_{r+1} = mean(w_m) − h_{r+1}/α, with mean(w_m) =
+                    // w_r + Δ̄ because clients start from the corrected
+                    // iterate. Unrolling shows the −h/α terms accumulate
+                    // by construction: w_r = w_0 + Σ Δ̄_i − Σ h_i/α, which
+                    // is exactly Acar et al.'s recursion.
+                    global.add_scaled(d, 1.0);
+                    global.add_scaled(h, -1.0 / alpha);
+                }
+            }
+            Algo::Mime { beta } => {
+                if let Some(d) = agg.params.get("delta") {
+                    global.add_scaled(d, 1.0);
+                }
+                if let Some(grads) = agg.collected.get("grad_full") {
+                    let mut mean: Option<ParamSet> = None;
+                    let mut n = 0.0f32;
+                    for (_, p) in grads {
+                        if let Payload::Params(g) = p {
+                            match &mut mean {
+                                None => mean = Some(g.clone()),
+                                Some(m) => m.add_scaled(g, 1.0),
+                            }
+                            n += 1.0;
+                        }
+                    }
+                    if let Some(mut gbar) = mean {
+                        gbar.scale(1.0 / n.max(1.0));
+                        let m = state
+                            .m
+                            .get_or_insert_with(|| ParamSet::zeros(&global.shapes));
+                        m.scale(*beta);
+                        m.add_scaled(&gbar, 1.0 - *beta);
+                    }
+                }
+            }
+        }
+    }
+
+    /// What rides along with the global params in the broadcast.
+    pub fn broadcast_extra(&self, state: &ServerState) -> Option<ParamSet> {
+        match self {
+            Algo::Scaffold => state.c.clone(),
+            Algo::Mime { .. } => state.m.clone(),
+            _ => None,
+        }
+    }
+}
+
+pub const ALL_ALGORITHMS: [&str; 6] =
+    ["fedavg", "fedprox", "fednova", "scaffold", "feddyn", "mime"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![4], vec![2, 2]]
+    }
+
+    fn ones(v: f32) -> ParamSet {
+        let mut p = ParamSet::zeros(&shapes());
+        for t in p.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x = v;
+            }
+        }
+        p
+    }
+
+    fn bc(params: ParamSet, extra: Option<ParamSet>) -> Broadcast {
+        Broadcast { round: 0, params, extra }
+    }
+
+    fn result(initial: ParamSet, finals: ParamSet) -> TaskResult {
+        TaskResult {
+            client: 0,
+            weight: 10.0,
+            initial,
+            finals,
+            mean_loss: 1.0,
+            n_steps: 5,
+            lr: 0.1,
+            full_grad: None,
+        }
+    }
+
+    #[test]
+    fn parse_all() {
+        for name in ALL_ALGORITHMS {
+            let a = Algo::parse(name, 0.0).unwrap();
+            assert_eq!(a.name(), name);
+        }
+        assert!(Algo::parse("sgd", 0.0).is_err());
+    }
+
+    #[test]
+    fn statefulness_matches_paper_table() {
+        assert!(!Algo::FedAvg.stateful());
+        assert!(!Algo::FedNova.stateful());
+        assert!(Algo::Scaffold.stateful());
+        assert!(Algo::FedDyn { alpha: 0.1 }.stateful());
+        assert!(Algo::FedNova.has_special());
+        assert!(Algo::Mime { beta: 0.9 }.has_special());
+        assert!(!Algo::FedProx { mu: 0.1 }.has_special());
+    }
+
+    #[test]
+    fn fedavg_round_trip_moves_global_to_client_mean() {
+        let algo = Algo::FedAvg;
+        let global = ones(1.0);
+        let b = bc(global.clone(), None);
+        let spec = algo.prepare(&b, None, &shapes());
+        assert_eq!(spec.mu, 0.0);
+        assert_eq!(spec.corrs, ParamSet::zeros(&shapes()));
+        // Two clients land at 2.0 and 4.0 with equal weights:
+        let (u1, s1) = algo.client_update(&result(global.clone(), ones(2.0)), &b, None);
+        let (u2, s2) = algo.client_update(&result(global.clone(), ones(4.0)), &b, None);
+        assert!(s1.is_none() && s2.is_none());
+        let agg = crate::aggregation::flat_aggregate(&[u1, u2]);
+        let mut g = global;
+        algo.server_apply(&mut g, &mut ServerState::default(), &agg,
+            &ServerCtx { m_total: 10, m_selected: 2 });
+        // mean delta = ((2-1) + (4-1))/2 = 2 -> g = 3
+        assert!((g.tensors[0][0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedprox_anchor_is_global() {
+        let algo = Algo::FedProx { mu: 0.5 };
+        let b = bc(ones(7.0), None);
+        let spec = algo.prepare(&b, None, &shapes());
+        assert_eq!(spec.mu, 0.5);
+        assert_eq!(spec.anchors, ones(7.0));
+    }
+
+    #[test]
+    fn fednova_normalizes_by_tau() {
+        let algo = Algo::FedNova;
+        let b = bc(ones(0.0), None);
+        let mut res = result(ones(0.0), ones(10.0));
+        res.n_steps = 10;
+        let (u, _) = algo.client_update(&res, &b, None);
+        // delta_norm = 10/10 = 1
+        let d = u.entries.iter().find(|(n, _, _)| n == "delta_norm").unwrap();
+        if let Payload::Params(p) = &d.2 {
+            assert!((p.tensors[0][0] - 1.0).abs() < 1e-6);
+        } else {
+            panic!()
+        }
+        // special param present
+        assert!(u.entries.iter().any(|(n, op, _)| n == "tau" && *op == AggOp::Collect));
+        // server scales by tau_eff
+        let agg = crate::aggregation::flat_aggregate(&[u]);
+        let mut g = ones(0.0);
+        algo.server_apply(&mut g, &mut ServerState::default(), &agg,
+            &ServerCtx { m_total: 10, m_selected: 1 });
+        assert!((g.tensors[0][0] - 10.0).abs() < 1e-5, "tau_eff*d̄ = 10*1");
+    }
+
+    #[test]
+    fn scaffold_correction_and_state_refresh() {
+        let algo = Algo::Scaffold;
+        let c = ones(0.3);
+        let ci = ones(0.1);
+        let b = bc(ones(1.0), Some(c));
+        let spec = algo.prepare(&b, Some(&ci), &shapes());
+        // corr = c − c_i = 0.2
+        assert!((spec.corrs.tensors[0][0] - 0.2).abs() < 1e-6);
+        // refresh: c_i+ = c_i − c + (w0−wE)/(τ·lr); τ=5, lr=0.1, Δ=1
+        let res = result(ones(1.0), ones(2.0));
+        let (u, new_state) = algo.client_update(&res, &b, Some(&ci));
+        let ci_new = new_state.unwrap();
+        let want = 0.1 - 0.3 + (-1.0) / (5.0 * 0.1);
+        assert!((ci_new.tensors[0][0] - want).abs() < 1e-5, "{}", ci_new.tensors[0][0]);
+        // delta_c entry is Avg op
+        assert!(u.entries.iter().any(|(n, op, _)| n == "delta_c" && *op == AggOp::Avg));
+        // server c moves by (Mp/M)·mean(delta_c)
+        let agg = crate::aggregation::flat_aggregate(&[u]);
+        let mut st = ServerState::default();
+        let mut g = ones(1.0);
+        algo.server_apply(&mut g, &mut st, &agg, &ServerCtx { m_total: 4, m_selected: 1 });
+        let dc = want - 0.1;
+        let c_expect = 0.25 * dc;
+        assert!((st.c.unwrap().tensors[0][0] - c_expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn feddyn_state_and_prepare() {
+        let algo = Algo::FedDyn { alpha: 0.5 };
+        let hi = ones(0.2);
+        let b = bc(ones(1.0), None);
+        let spec = algo.prepare(&b, Some(&hi), &shapes());
+        assert_eq!(spec.mu, 0.5);
+        assert!((spec.corrs.tensors[0][0] + 0.2).abs() < 1e-6, "corr = −h_i");
+        assert_eq!(spec.anchors, ones(1.0));
+        let res = result(ones(1.0), ones(3.0));
+        let (_, new_state) = algo.client_update(&res, &b, Some(&hi));
+        // h_i+ = 0.2 − 0.5·2 = −0.8
+        assert!((new_state.unwrap().tensors[0][0] + 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mime_momentum_update() {
+        let algo = Algo::Mime { beta: 0.5 };
+        let mut res = result(ones(0.0), ones(1.0));
+        res.full_grad = Some(ones(2.0));
+        let b = bc(ones(0.0), None);
+        let (u, _) = algo.client_update(&res, &b, None);
+        assert!(u.entries.iter().any(|(n, op, _)| n == "grad_full" && *op == AggOp::Collect));
+        let agg = crate::aggregation::flat_aggregate(&[u]);
+        let mut st = ServerState::default();
+        let mut g = ones(0.0);
+        algo.server_apply(&mut g, &mut st, &agg, &ServerCtx { m_total: 4, m_selected: 1 });
+        // m = (1−β)·ḡ = 0.5·2 = 1
+        assert!((st.m.as_ref().unwrap().tensors[0][0] - 1.0).abs() < 1e-6);
+        // broadcast extra carries m, scaled by β at prepare time
+        let b2 = Broadcast { round: 1, params: g, extra: algo.broadcast_extra(&st) };
+        let spec = algo.prepare(&b2, None, &shapes());
+        assert!((spec.corrs.tensors[0][0] - 0.5).abs() < 1e-6);
+        assert!(spec.wants_full_grad);
+    }
+
+    #[test]
+    fn loss_entry_always_present() {
+        for name in ALL_ALGORITHMS {
+            let algo = Algo::parse(name, 0.1).unwrap();
+            let b = bc(ones(0.0), Some(ones(0.0)));
+            let (u, _) = algo.client_update(&result(ones(0.0), ones(1.0)), &b, None);
+            assert!(u.entries.iter().any(|(n, _, _)| n == "loss"), "{name}");
+        }
+    }
+}

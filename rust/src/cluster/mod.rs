@@ -1,0 +1,277 @@
+//! Device/cluster heterogeneity models (paper §5.1 + Appendix A).
+//!
+//! The paper evaluates on three GPU clusters (A: homogeneous 2080 Ti,
+//! B: homogeneous RTX 5000, C: heterogeneous K80/P40) and additionally
+//! *simulates* heterogeneous and unstable devices on cluster A by
+//! sleeping η_k·T̂ after each task.  This module reproduces exactly that
+//! machinery:
+//!
+//! - [`DeviceModel`] — per-device speed multiplier over the baseline
+//!   (η_k = slowdown − 1) plus the cos-based dynamic instability law
+//!   `(1 + cos(πr/R + k))` from Appendix A.
+//! - [`ClusterProfile`] — named device collections: `homo`, `hete`,
+//!   `dyn`, and the paper's clusters `a`/`b`/`c` with speed ratios
+//!   matching the public relative DL throughput of those GPUs.
+//!
+//! Both execution modes consume it: the real-compute coordinator sleeps
+//! the extra (slowdown−1)·T̂ exactly as the paper does; the virtual-time
+//! engine multiplies modeled task durations.
+
+use anyhow::{bail, Result};
+
+/// How a device's effective speed varies over rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dynamics {
+    /// Constant speed.
+    Stable,
+    /// Appendix A's unstable-device law: extra slowdown factor
+    /// `(1 + cos(π·r/period + k))` — phase-shifted per device.
+    Cosine { period: f64 },
+}
+
+/// One simulated device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    /// Static slowdown multiplier (1.0 = cluster-A 2080 Ti baseline).
+    /// The paper's η_k equals `static_slowdown - 1`.
+    pub static_slowdown: f64,
+    pub dynamics: Dynamics,
+}
+
+impl DeviceModel {
+    pub fn uniform() -> DeviceModel {
+        DeviceModel { static_slowdown: 1.0, dynamics: Dynamics::Stable }
+    }
+
+    /// Effective slowdown at round `r` for device index `k`.
+    pub fn slowdown(&self, r: usize, k: usize) -> f64 {
+        let dynamic = match self.dynamics {
+            Dynamics::Stable => 1.0,
+            Dynamics::Cosine { period } => {
+                // Paper: sleep ratio (1 + cos(3.14 r / R + k)) ∈ [0, 2]
+                // applied on top of the measured time -> factor in [1, 3].
+                1.0 + (1.0 + (std::f64::consts::PI * r as f64 / period + k as f64).cos())
+            }
+        };
+        self.static_slowdown * dynamic
+    }
+}
+
+/// Baseline per-sample / per-task constants for the virtual-time model,
+/// calibrated per workload (DESIGN.md §2: relative — not absolute —
+/// costs are what the figures compare).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadCost {
+    /// Seconds per training sample on the baseline device (Eq. 1 t^sample).
+    pub t_sample: f64,
+    /// Constant per-task seconds on the baseline device (Eq. 1 b):
+    /// model load + weight copy + task switch.
+    pub b_fixed: f64,
+}
+
+impl WorkloadCost {
+    /// FEMNIST/ResNet-18-analog on a 2080 Ti-class device.
+    pub fn femnist() -> WorkloadCost {
+        WorkloadCost { t_sample: 2.0e-3, b_fixed: 0.15 }
+    }
+
+    /// ImageNet/ResNet-50-analog (bigger model, bigger images).
+    pub fn imagenet() -> WorkloadCost {
+        WorkloadCost { t_sample: 9.0e-3, b_fixed: 0.35 }
+    }
+
+    /// Reddit/Albert-analog.
+    pub fn reddit() -> WorkloadCost {
+        WorkloadCost { t_sample: 4.0e-3, b_fixed: 0.25 }
+    }
+
+    pub fn by_name(name: &str) -> Result<WorkloadCost> {
+        Ok(match name {
+            "femnist" | "mlp" => WorkloadCost::femnist(),
+            "imagenet" | "cnn" => WorkloadCost::imagenet(),
+            "reddit" | "tinylm" => WorkloadCost::reddit(),
+            _ => bail!("unknown workload cost profile {name:?}"),
+        })
+    }
+}
+
+/// A collection of devices — one experiment's hardware.
+#[derive(Debug, Clone)]
+pub struct ClusterProfile {
+    pub name: String,
+    pub devices: Vec<DeviceModel>,
+    /// Network bandwidth in bytes/sec (10 Gbps default, Table 5).
+    pub bandwidth: f64,
+    /// Per-message latency in seconds (one communication trip).
+    pub latency: f64,
+}
+
+impl ClusterProfile {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// All devices identical (paper clusters A and B).
+    pub fn homogeneous(k: usize) -> ClusterProfile {
+        ClusterProfile {
+            name: "homo".into(),
+            devices: vec![DeviceModel::uniform(); k],
+            bandwidth: 10e9 / 8.0,
+            latency: 1e-3,
+        }
+    }
+
+    /// Simulated heterogeneous GPUs (Appendix A): pre-assigned η ratios
+    /// spread over [0, 1.5] — device k gets slowdown 1 + 1.5·k/(K−1).
+    pub fn heterogeneous(k: usize) -> ClusterProfile {
+        let devices = (0..k)
+            .map(|i| DeviceModel {
+                static_slowdown: 1.0
+                    + if k > 1 { 1.5 * i as f64 / (k - 1) as f64 } else { 0.0 },
+                dynamics: Dynamics::Stable,
+            })
+            .collect();
+        ClusterProfile {
+            name: "hete".into(),
+            devices,
+            bandwidth: 10e9 / 8.0,
+            latency: 1e-3,
+        }
+    }
+
+    /// Simulated unstable devices (Appendix A cos law).
+    pub fn dynamic(k: usize, period: f64) -> ClusterProfile {
+        ClusterProfile {
+            name: "dyn".into(),
+            devices: vec![
+                DeviceModel {
+                    static_slowdown: 1.0,
+                    dynamics: Dynamics::Cosine { period },
+                };
+                k
+            ],
+            bandwidth: 10e9 / 8.0,
+            latency: 1e-3,
+        }
+    }
+
+    /// Paper cluster C: genuinely heterogeneous (4×K80 + 4×P40 speeds).
+    /// Relative DL throughputs: 2080Ti≈1.0, P40≈1.8, K80≈4.0 slower.
+    pub fn cluster_c(k: usize) -> ClusterProfile {
+        let devices = (0..k)
+            .map(|i| DeviceModel {
+                static_slowdown: if i % 2 == 0 { 4.0 } else { 1.8 },
+                dynamics: Dynamics::Stable,
+            })
+            .collect();
+        ClusterProfile {
+            name: "cluster_c".into(),
+            devices,
+            bandwidth: 10e9 / 8.0,
+            latency: 1e-3,
+        }
+    }
+
+    pub fn parse(s: &str, k: usize) -> Result<ClusterProfile> {
+        Ok(match s {
+            "homo" | "a" | "b" => ClusterProfile::homogeneous(k),
+            "hete" => ClusterProfile::heterogeneous(k),
+            "dyn" => ClusterProfile::dynamic(k, 50.0),
+            "c" | "cluster_c" => ClusterProfile::cluster_c(k),
+            _ => bail!("unknown cluster profile {s:?} (homo|hete|dyn|c)"),
+        })
+    }
+
+    /// Seconds to move `bytes` one way, including one trip latency.
+    pub fn comm_time(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Modeled runtime of a task of `n_samples`·`epochs` on device `k`
+    /// at round `r` (Eq. 2 with the heterogeneity multipliers applied).
+    pub fn task_time(
+        &self,
+        cost: &WorkloadCost,
+        k: usize,
+        r: usize,
+        n_samples: usize,
+        epochs: usize,
+    ) -> f64 {
+        let slow = self.devices[k].slowdown(r, k);
+        (cost.t_sample * (n_samples * epochs) as f64 + cost.b_fixed) * slow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_equal_speeds() {
+        let c = ClusterProfile::homogeneous(8);
+        assert_eq!(c.n_devices(), 8);
+        for (k, d) in c.devices.iter().enumerate() {
+            assert_eq!(d.slowdown(10, k), 1.0);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_spread() {
+        let c = ClusterProfile::heterogeneous(4);
+        let s: Vec<f64> = c.devices.iter().enumerate().map(|(k, d)| d.slowdown(0, k)).collect();
+        assert_eq!(s[0], 1.0);
+        assert_eq!(*s.last().unwrap(), 2.5);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn cosine_dynamics_oscillate_in_bounds() {
+        let d = DeviceModel { static_slowdown: 1.0, dynamics: Dynamics::Cosine { period: 50.0 } };
+        let vals: Vec<f64> = (0..200).map(|r| d.slowdown(r, 0)).collect();
+        assert!(vals.iter().all(|&v| (1.0..=3.0 + 1e-9).contains(&v)));
+        let spread = vals.iter().cloned().fold(0.0, f64::max)
+            - vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1.5, "dynamics should swing, spread={spread}");
+    }
+
+    #[test]
+    fn phase_shift_decorrelates_devices() {
+        let c = ClusterProfile::dynamic(2, 50.0);
+        let a = c.devices[0].slowdown(0, 0);
+        let b = c.devices[1].slowdown(0, 1);
+        assert!((a - b).abs() > 0.1);
+    }
+
+    #[test]
+    fn task_time_scales_linearly() {
+        let c = ClusterProfile::homogeneous(1);
+        let w = WorkloadCost::femnist();
+        let t1 = c.task_time(&w, 0, 0, 100, 1);
+        let t2 = c.task_time(&w, 0, 0, 200, 1);
+        assert!((t2 - t1 - 100.0 * w.t_sample).abs() < 1e-12);
+        // epochs multiply the sample term only
+        let te = c.task_time(&w, 0, 0, 100, 2);
+        assert!((te - (w.t_sample * 200.0 + w.b_fixed)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_time_includes_latency_and_bandwidth() {
+        let c = ClusterProfile::homogeneous(1);
+        let t = c.comm_time(1_250_000_000); // 1.25 GB at 1.25 GB/s = 1s
+        assert!((t - 1.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_profiles() {
+        assert_eq!(ClusterProfile::parse("homo", 4).unwrap().n_devices(), 4);
+        assert_eq!(ClusterProfile::parse("c", 8).unwrap().name, "cluster_c");
+        assert!(ClusterProfile::parse("wat", 4).is_err());
+    }
+
+    #[test]
+    fn cluster_c_two_tiers() {
+        let c = ClusterProfile::cluster_c(8);
+        let slow: Vec<f64> = c.devices.iter().map(|d| d.static_slowdown).collect();
+        assert!(slow.contains(&4.0) && slow.contains(&1.8));
+    }
+}

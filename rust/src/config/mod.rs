@@ -1,0 +1,342 @@
+//! Experiment configuration: every knob of a Parrot run in one struct,
+//! parseable from CLI args and from plain `key=value` config files.
+//!
+//! This is the "real config system" seam: the launcher (`main.rs`), the
+//! examples and every `exp/*` harness all build a [`RunConfig`] and hand
+//! it to the coordinator, so a simulation and a TCP deployment differ
+//! only in the transport field (§3.2 zero-code-change migration).
+
+use crate::cluster::ClusterProfile;
+use crate::coordinator::selection::Selection;
+use crate::data::PartitionKind;
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// Which simulation scheme drives the round (§2.2, Fig. 1-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Single-process: one device trains everything sequentially.
+    SP,
+    /// Real-world distributed: M devices, M_p active, rest idle.
+    RwDist,
+    /// Selected-deployment: M_p devices, one client each.
+    SdDist,
+    /// Flexible-assignment (FedScale/Flower): K devices, greedy
+    /// pull-one-task-at-a-time, per-task communication.
+    FaDist,
+    /// Parrot: K devices, scheduled task sets, hierarchical aggregation.
+    Parrot,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Scheme> {
+        Ok(match s {
+            "sp" => Scheme::SP,
+            "rw" | "rw_dist" => Scheme::RwDist,
+            "sd" | "sd_dist" => Scheme::SdDist,
+            "fa" | "fa_dist" => Scheme::FaDist,
+            "parrot" => Scheme::Parrot,
+            _ => bail!("unknown scheme {s:?} (sp|rw|sd|fa|parrot)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::SP => "SP",
+            Scheme::RwDist => "RW Dist.",
+            Scheme::SdDist => "SD Dist.",
+            Scheme::FaDist => "FA Dist.",
+            Scheme::Parrot => "Parrot",
+        }
+    }
+}
+
+/// Scheduler selection (§4.3-4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// No workload model: uniform round-robin split (the warm-up branch
+    /// of Alg. 3, also the "Parrot w/o scheduling" ablation).
+    Uniform,
+    /// Alg. 3 with linear-regression estimation over ALL history.
+    Greedy,
+    /// Alg. 3 with Time-Window estimation (window = τ rounds).
+    TimeWindow(usize),
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        if s == "uniform" || s == "none" {
+            return Ok(SchedulerKind::Uniform);
+        }
+        if s == "greedy" || s == "full" {
+            return Ok(SchedulerKind::Greedy);
+        }
+        if let Some(t) = s.strip_prefix("window:") {
+            return Ok(SchedulerKind::TimeWindow(t.parse()?));
+        }
+        bail!("unknown scheduler {s:?} (uniform|greedy|window:T)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SchedulerKind::Uniform => "uniform".into(),
+            SchedulerKind::Greedy => "greedy".into(),
+            SchedulerKind::TimeWindow(t) => format!("window:{t}"),
+        }
+    }
+}
+
+/// A full run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// FL algorithm name (fedavg|fedprox|fednova|scaffold|feddyn|mime).
+    pub algorithm: String,
+    /// Model family (mlp|cnn|tinylm).
+    pub model: String,
+    /// Total clients M.
+    pub n_clients: usize,
+    /// Concurrent (selected) clients per round M_p.
+    pub clients_per_round: usize,
+    /// Devices K.
+    pub n_devices: usize,
+    /// Communication rounds R.
+    pub rounds: usize,
+    /// Local epochs E.
+    pub local_epochs: usize,
+    pub lr: f32,
+    /// FedProx μ / FedDyn α.
+    pub mu: f32,
+    pub partition: PartitionKind,
+    /// Mean per-client dataset size.
+    pub mean_client_size: usize,
+    pub scheme: Scheme,
+    pub scheduler: SchedulerKind,
+    /// Warm-up rounds R_w before the fitted schedule kicks in.
+    pub warmup_rounds: usize,
+    pub cluster: ClusterProfile,
+    pub seed: u64,
+    /// Directory with the AOT artifacts.
+    pub artifact_dir: String,
+    /// Directory for client-state snapshots (state manager).
+    pub state_dir: String,
+    /// Test batches evaluated by the server each eval.
+    pub eval_batches: usize,
+    /// Evaluate every this many rounds (0 = never).
+    pub eval_every: usize,
+    /// Client selection strategy (Alg. 1's "server selects").
+    pub selection: Selection,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algorithm: "fedavg".into(),
+            model: "mlp".into(),
+            n_clients: 120,
+            clients_per_round: 24,
+            n_devices: 4,
+            rounds: 10,
+            local_epochs: 1,
+            lr: 0.05,
+            mu: 0.0,
+            partition: PartitionKind::Natural,
+            mean_client_size: 60,
+            scheme: Scheme::Parrot,
+            scheduler: SchedulerKind::Greedy,
+            warmup_rounds: 2,
+            cluster: ClusterProfile::homogeneous(4),
+            seed: 42,
+            artifact_dir: "artifacts".into(),
+            state_dir: "state_cache".into(),
+            eval_batches: 10,
+            eval_every: 1,
+            selection: Selection::Random,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load a plain `key=value` config file ('#' comments, blank lines
+    /// ok; keys are the CLI flag names).  CLI args overlay the file, so
+    /// `parrot run --config exp.cfg --devices 8` works as expected.
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+        let mut argv = Vec::new();
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{path}:{}: expected key=value", lno + 1))?;
+            argv.push(format!("--{}={}", k.trim(), v.trim()));
+        }
+        RunConfig::default().apply_args(&Args::parse(argv)?)
+    }
+
+    /// Overlay CLI args onto this config (every field addressable).
+    pub fn apply_args(mut self, a: &Args) -> Result<RunConfig> {
+        self.algorithm = a.get_or("algorithm", &self.algorithm).to_string();
+        self.model = a.get_or("model", &self.model).to_string();
+        self.n_clients = a.usize_or("clients", self.n_clients)?;
+        self.clients_per_round = a.usize_or("per-round", self.clients_per_round)?;
+        self.n_devices = a.usize_or("devices", self.n_devices)?;
+        self.rounds = a.usize_or("rounds", self.rounds)?;
+        self.local_epochs = a.usize_or("epochs", self.local_epochs)?;
+        self.lr = a.f64_or("lr", self.lr as f64)? as f32;
+        self.mu = a.f64_or("mu", self.mu as f64)? as f32;
+        if let Some(p) = a.get("partition") {
+            self.partition = PartitionKind::parse(p)?;
+        }
+        self.mean_client_size = a.usize_or("mean-size", self.mean_client_size)?;
+        if let Some(s) = a.get("scheme") {
+            self.scheme = Scheme::parse(s)?;
+        }
+        if let Some(s) = a.get("scheduler") {
+            self.scheduler = SchedulerKind::parse(s)?;
+        }
+        self.warmup_rounds = a.usize_or("warmup", self.warmup_rounds)?;
+        if let Some(c) = a.get("cluster") {
+            self.cluster = ClusterProfile::parse(c, self.n_devices)?;
+        } else if self.cluster.n_devices() != self.n_devices {
+            self.cluster = ClusterProfile::homogeneous(self.n_devices);
+        }
+        self.seed = a.u64_or("seed", self.seed)?;
+        self.artifact_dir = a.get_or("artifacts", &self.artifact_dir).to_string();
+        self.state_dir = a.get_or("state-dir", &self.state_dir).to_string();
+        self.eval_batches = a.usize_or("eval-batches", self.eval_batches)?;
+        self.eval_every = a.usize_or("eval-every", self.eval_every)?;
+        if let Some(sel) = a.get("selection") {
+            self.selection = Selection::parse(sel)?;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients_per_round > self.n_clients {
+            bail!(
+                "per-round {} > clients {}",
+                self.clients_per_round,
+                self.n_clients
+            );
+        }
+        if self.n_devices == 0 || self.clients_per_round == 0 || self.n_clients == 0 {
+            bail!("clients/per-round/devices must be positive");
+        }
+        if !crate::model::MODEL_NAMES.contains(&self.model.as_str()) {
+            bail!("unknown model {:?}", self.model);
+        }
+        if self.cluster.n_devices() != self.n_devices {
+            bail!(
+                "cluster profile has {} devices, config wants {}",
+                self.cluster.n_devices(),
+                self.n_devices
+            );
+        }
+        Ok(())
+    }
+
+    /// The artifact base name for a step kind, e.g. "mlp_train".
+    pub fn artifact(&self, kind: &str) -> String {
+        format!("{}_{}", self.model, kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overlay() {
+        let c = RunConfig::default()
+            .apply_args(&args(&[
+                "--clients", "1000", "--per-round", "100", "--devices", "8",
+                "--scheme", "fa", "--scheduler", "window:5",
+                "--partition", "dirichlet:0.1",
+            ]))
+            .unwrap();
+        assert_eq!(c.n_clients, 1000);
+        assert_eq!(c.scheme, Scheme::FaDist);
+        assert_eq!(c.scheduler, SchedulerKind::TimeWindow(5));
+        assert_eq!(c.partition, PartitionKind::Dirichlet(0.1));
+        assert_eq!(c.cluster.n_devices(), 8);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--per-round", "500"]))
+            .is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--model", "resnet999"]))
+            .is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "wat"]))
+            .is_err());
+    }
+
+    #[test]
+    fn scheme_and_scheduler_parsing() {
+        assert_eq!(Scheme::parse("parrot").unwrap(), Scheme::Parrot);
+        assert_eq!(Scheme::parse("sd_dist").unwrap(), Scheme::SdDist);
+        assert_eq!(SchedulerKind::parse("uniform").unwrap(), SchedulerKind::Uniform);
+        assert!(SchedulerKind::parse("window:x").is_err());
+    }
+}
+
+#[cfg(test)]
+mod file_tests {
+    use super::*;
+
+    fn write_cfg(name: &str, body: &str) -> String {
+        let p = std::env::temp_dir().join(format!("parrot_cfg_{}_{name}", std::process::id()));
+        std::fs::write(&p, body).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn config_file_parses_with_comments() {
+        let p = write_cfg(
+            "basic",
+            "# paper-scale run\nclients = 1000\nper-round=100\ndevices = 8\n\
+             scheduler = window:5  # dynamic env\npartition = dirichlet:0.1\n",
+        );
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.n_clients, 1000);
+        assert_eq!(c.clients_per_round, 100);
+        assert_eq!(c.scheduler, SchedulerKind::TimeWindow(5));
+        assert_eq!(c.partition, crate::data::PartitionKind::Dirichlet(0.1));
+    }
+
+    #[test]
+    fn cli_overlays_file() {
+        let p = write_cfg("overlay", "clients=500\nper-round=50\ndevices=4\n");
+        let cfg = RunConfig::from_file(&p).unwrap();
+        let a = Args::parse(["--devices".to_string(), "16".to_string()]).unwrap();
+        let c = cfg.apply_args(&a).unwrap();
+        assert_eq!(c.n_clients, 500);
+        assert_eq!(c.n_devices, 16);
+        assert_eq!(c.cluster.n_devices(), 16);
+    }
+
+    #[test]
+    fn bad_file_rejected() {
+        assert!(RunConfig::from_file("/nonexistent/x.cfg").is_err());
+        let p = write_cfg("bad", "this is not kv\n");
+        assert!(RunConfig::from_file(&p).is_err());
+        let p2 = write_cfg("badval", "clients=banana\n");
+        assert!(RunConfig::from_file(&p2).is_err());
+    }
+}

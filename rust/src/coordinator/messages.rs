@@ -1,0 +1,327 @@
+//! Wire protocol between the server manager and device executors.
+//!
+//! Two interaction styles, matching the schemes that run on real
+//! compute:
+//! - **Parrot**: one `Round` message down (params + task *set*), one
+//!   `RoundDone` up (local aggregate G_k + runtime records) — O(K) trips.
+//! - **FA Dist.** (FedScale/Flower-style): `Task` messages down one at a
+//!   time, `TaskDone` up per client with the raw ClientUpdate — O(M_p)
+//!   trips.  Used by the measured scheme-comparison experiments.
+
+use crate::aggregation::{AggOp, ClientUpdate, DeviceAggregate, Payload};
+use crate::algorithms::Broadcast;
+use crate::model::ParamSet;
+use crate::scheduler::TaskRecord;
+use crate::util::codec::{Decoder, Encoder};
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Server → device: a full Parrot round.
+    Round { round: usize, broadcast: Broadcast, clients: Vec<usize> },
+    /// Server → device: one FA-style task.
+    Task { round: usize, broadcast: Broadcast, client: usize },
+    /// Server → device: FA round prologue when the device already holds
+    /// this round's broadcast (params sent once per round per device).
+    TaskCached { round: usize, client: usize },
+    /// Server → device: end of run.
+    Shutdown,
+    /// Device → server: Parrot round result.
+    RoundDone {
+        device: usize,
+        aggregate: DeviceAggregate,
+        records: Vec<TaskRecord>,
+        busy_secs: f64,
+    },
+    /// Device → server: FA-style single-task result.
+    TaskDone { device: usize, update: ClientUpdate, record: TaskRecord },
+    /// Device → server: ready for work (FA pull model).
+    Idle { device: usize },
+}
+
+fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) {
+    enc.put_u32(bc.round as u32);
+    bc.params.encode(enc);
+    match &bc.extra {
+        None => enc.put_u8(0),
+        Some(p) => {
+            enc.put_u8(1);
+            p.encode(enc);
+        }
+    }
+}
+
+fn decode_broadcast(dec: &mut Decoder) -> Result<Broadcast> {
+    let round = dec.u32()? as usize;
+    let params = ParamSet::decode(dec)?;
+    let extra = match dec.u8()? {
+        0 => None,
+        1 => Some(ParamSet::decode(dec)?),
+        t => bail!("bad extra tag {t}"),
+    };
+    Ok(Broadcast { round, params, extra })
+}
+
+fn encode_payload(enc: &mut Encoder, p: &Payload) {
+    match p {
+        Payload::Params(ps) => {
+            enc.put_u8(0);
+            ps.encode(enc);
+        }
+        Payload::Scalar(x) => {
+            enc.put_u8(1);
+            enc.put_f64(*x);
+        }
+    }
+}
+
+fn decode_payload(dec: &mut Decoder) -> Result<Payload> {
+    Ok(match dec.u8()? {
+        0 => Payload::Params(ParamSet::decode(dec)?),
+        1 => Payload::Scalar(dec.f64()?),
+        t => bail!("bad payload tag {t}"),
+    })
+}
+
+fn encode_update(enc: &mut Encoder, u: &ClientUpdate) {
+    enc.put_u32(u.client as u32);
+    enc.put_f64(u.weight);
+    enc.put_u32(u.entries.len() as u32);
+    for (name, op, p) in &u.entries {
+        enc.put_str(name);
+        enc.put_u8(match op {
+            AggOp::WeightedAvg => 0,
+            AggOp::Avg => 1,
+            AggOp::Sum => 2,
+            AggOp::Collect => 3,
+        });
+        encode_payload(enc, p);
+    }
+}
+
+fn decode_update(dec: &mut Decoder) -> Result<ClientUpdate> {
+    let client = dec.u32()? as usize;
+    let weight = dec.f64()?;
+    let n = dec.u32()? as usize;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = dec.str()?;
+        let op = match dec.u8()? {
+            0 => AggOp::WeightedAvg,
+            1 => AggOp::Avg,
+            2 => AggOp::Sum,
+            3 => AggOp::Collect,
+            t => bail!("bad op code {t}"),
+        };
+        entries.push((name, op, decode_payload(dec)?));
+    }
+    Ok(ClientUpdate { client, weight, entries })
+}
+
+fn encode_record(enc: &mut Encoder, r: &TaskRecord) {
+    enc.put_u32(r.round as u32);
+    enc.put_u32(r.device as u32);
+    enc.put_u32(r.n_samples as u32);
+    enc.put_f64(r.secs);
+}
+
+fn decode_record(dec: &mut Decoder) -> Result<TaskRecord> {
+    Ok(TaskRecord {
+        round: dec.u32()? as usize,
+        device: dec.u32()? as usize,
+        n_samples: dec.u32()? as usize,
+        secs: dec.f64()?,
+    })
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        match self {
+            Msg::Round { round, broadcast, clients } => {
+                enc.put_u8(0);
+                enc.put_u32(*round as u32);
+                encode_broadcast(&mut enc, broadcast);
+                enc.put_u32(clients.len() as u32);
+                for &c in clients {
+                    enc.put_u32(c as u32);
+                }
+            }
+            Msg::Task { round, broadcast, client } => {
+                enc.put_u8(1);
+                enc.put_u32(*round as u32);
+                encode_broadcast(&mut enc, broadcast);
+                enc.put_u32(*client as u32);
+            }
+            Msg::TaskCached { round, client } => {
+                enc.put_u8(2);
+                enc.put_u32(*round as u32);
+                enc.put_u32(*client as u32);
+            }
+            Msg::Shutdown => enc.put_u8(3),
+            Msg::RoundDone { device, aggregate, records, busy_secs } => {
+                enc.put_u8(4);
+                enc.put_u32(*device as u32);
+                enc.put_bytes(&aggregate.encoded());
+                enc.put_u32(records.len() as u32);
+                for r in records {
+                    encode_record(&mut enc, r);
+                }
+                enc.put_f64(*busy_secs);
+            }
+            Msg::TaskDone { device, update, record } => {
+                enc.put_u8(5);
+                enc.put_u32(*device as u32);
+                encode_update(&mut enc, update);
+                encode_record(&mut enc, record);
+            }
+            Msg::Idle { device } => {
+                enc.put_u8(6);
+                enc.put_u32(*device as u32);
+            }
+        }
+        enc.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut dec = Decoder::new(buf);
+        let tag = dec.u8()?;
+        Ok(match tag {
+            0 => {
+                let round = dec.u32()? as usize;
+                let broadcast = decode_broadcast(&mut dec)?;
+                let n = dec.u32()? as usize;
+                let mut clients = Vec::with_capacity(n);
+                for _ in 0..n {
+                    clients.push(dec.u32()? as usize);
+                }
+                Msg::Round { round, broadcast, clients }
+            }
+            1 => Msg::Task {
+                round: dec.u32()? as usize,
+                broadcast: decode_broadcast(&mut dec)?,
+                client: dec.u32()? as usize,
+            },
+            2 => Msg::TaskCached { round: dec.u32()? as usize, client: dec.u32()? as usize },
+            3 => Msg::Shutdown,
+            4 => {
+                let device = dec.u32()? as usize;
+                let agg_bytes = dec.bytes()?;
+                let aggregate = DeviceAggregate::decode(&agg_bytes)?;
+                let n = dec.u32()? as usize;
+                let mut records = Vec::with_capacity(n);
+                for _ in 0..n {
+                    records.push(decode_record(&mut dec)?);
+                }
+                let busy_secs = dec.f64()?;
+                Msg::RoundDone { device, aggregate, records, busy_secs }
+            }
+            5 => Msg::TaskDone {
+                device: dec.u32()? as usize,
+                update: decode_update(&mut dec)?,
+                record: decode_record(&mut dec)?,
+            },
+            6 => Msg::Idle { device: dec.u32()? as usize },
+            t => bail!("unknown msg tag {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::LocalAgg;
+
+    fn params(v: f32) -> ParamSet {
+        ParamSet { shapes: vec![vec![2, 2]], tensors: vec![vec![v; 4]] }
+    }
+
+    #[test]
+    fn round_msg_round_trip() {
+        let m = Msg::Round {
+            round: 7,
+            broadcast: Broadcast { round: 7, params: params(1.5), extra: Some(params(0.5)) },
+            clients: vec![3, 1, 4, 1, 5],
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::Round { round, broadcast, clients } => {
+                assert_eq!(round, 7);
+                assert_eq!(broadcast.params, params(1.5));
+                assert_eq!(broadcast.extra, Some(params(0.5)));
+                assert_eq!(clients, vec![3, 1, 4, 1, 5]);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn round_done_round_trip() {
+        let mut la = LocalAgg::new(3);
+        la.add(&ClientUpdate {
+            client: 1,
+            weight: 2.0,
+            entries: vec![("delta".into(), AggOp::WeightedAvg, Payload::Params(params(1.0)))],
+        });
+        let m = Msg::RoundDone {
+            device: 3,
+            aggregate: la.finish(),
+            records: vec![TaskRecord { round: 1, device: 3, n_samples: 40, secs: 1.25 }],
+            busy_secs: 2.5,
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::RoundDone { device, records, busy_secs, .. } => {
+                assert_eq!(device, 3);
+                assert_eq!(records.len(), 1);
+                assert_eq!(records[0].secs, 1.25);
+                assert_eq!(busy_secs, 2.5);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn task_done_round_trip() {
+        let m = Msg::TaskDone {
+            device: 2,
+            update: ClientUpdate {
+                client: 9,
+                weight: 3.0,
+                entries: vec![
+                    ("delta".into(), AggOp::WeightedAvg, Payload::Params(params(2.0))),
+                    ("tau".into(), AggOp::Collect, Payload::Scalar(5.0)),
+                ],
+            },
+            record: TaskRecord { round: 0, device: 2, n_samples: 60, secs: 0.5 },
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::TaskDone { update, .. } => {
+                assert_eq!(update.client, 9);
+                assert_eq!(update.entries.len(), 2);
+                assert_eq!(update.entries[1].1, AggOp::Collect);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn small_variants() {
+        assert!(matches!(Msg::decode(&Msg::Shutdown.encode()).unwrap(), Msg::Shutdown));
+        assert!(matches!(
+            Msg::decode(&Msg::Idle { device: 4 }.encode()).unwrap(),
+            Msg::Idle { device: 4 }
+        ));
+        assert!(matches!(
+            Msg::decode(&Msg::TaskCached { round: 2, client: 11 }.encode()).unwrap(),
+            Msg::TaskCached { round: 2, client: 11 }
+        ));
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(Msg::decode(&[99]).is_err());
+        assert!(Msg::decode(&[]).is_err());
+        let mut good = Msg::Shutdown.encode();
+        good.push(42); // trailing garbage tolerated? No - decode only reads 1 byte; fine.
+        assert!(Msg::decode(&good).is_ok());
+    }
+}

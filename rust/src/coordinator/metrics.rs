@@ -1,0 +1,289 @@
+//! Measured per-round / per-run accounting, plus the analytic memory
+//! model behind Tables 1 and 3.
+
+use crate::util::json::Json;
+
+/// One round's measured numbers.
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Server-observed wallclock for the whole round.
+    pub wall_secs: f64,
+    /// Sum of device busy seconds (compute incl. simulated slowdown).
+    pub busy_secs: f64,
+    /// Bytes server → devices.
+    pub bytes_down: u64,
+    /// Bytes devices → server.
+    pub bytes_up: u64,
+    /// Message count in both directions (the "communication trips").
+    pub trips: u64,
+    /// Scheduler estimation+assignment wallclock (Fig. 8).
+    pub sched_secs: f64,
+    /// Mean training loss reported by clients (weighted).
+    pub train_loss: f64,
+    /// Server-side eval results, if run this round.
+    pub eval_loss: Option<f64>,
+    pub eval_acc: Option<f64>,
+    /// Device utilization = busy / (K · makespan).
+    pub utilization: f64,
+}
+
+/// Whole-run accumulation.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, r: RoundMetrics) {
+        self.rounds.push(r);
+    }
+
+    pub fn mean_round_secs(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.wall_secs).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Mean over rounds AFTER the warm-up prefix (the paper reports
+    /// steady-state round times).
+    pub fn mean_round_secs_after(&self, warmup: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| r.round >= warmup)
+            .map(|r| r.wall_secs)
+            .collect();
+        if tail.is_empty() {
+            return self.mean_round_secs();
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_down + r.bytes_up).sum()
+    }
+
+    pub fn total_trips(&self) -> u64 {
+        self.rounds.iter().map(|r| r.trips).sum()
+    }
+
+    pub fn final_eval(&self) -> (Option<f64>, Option<f64>) {
+        for r in self.rounds.iter().rev() {
+            if r.eval_acc.is_some() {
+                return (r.eval_loss, r.eval_acc);
+            }
+        }
+        (None, None)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "rounds".into(),
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .set("round", r.round)
+                                .set("wall_secs", r.wall_secs)
+                                .set("busy_secs", r.busy_secs)
+                                .set("bytes_down", r.bytes_down as i64)
+                                .set("bytes_up", r.bytes_up as i64)
+                                .set("trips", r.trips as i64)
+                                .set("sched_secs", r.sched_secs)
+                                .set("train_loss", r.train_loss)
+                                .set("eval_loss", r.eval_loss.map(Json::Num).unwrap_or(Json::Null))
+                                .set("eval_acc", r.eval_acc.map(Json::Num).unwrap_or(Json::Null))
+                                .set("utilization", r.utilization)
+                        })
+                        .collect(),
+                ),
+            ),
+            ("mean_round_secs".into(), Json::Num(self.mean_round_secs())),
+            ("total_bytes".into(), Json::Int(self.total_bytes() as i64)),
+            ("total_trips".into(), Json::Int(self.total_trips() as i64)),
+        ])
+    }
+}
+
+/// Analytic memory model — Table 1's rows and Table 3's numbers.
+///
+/// `s_m` = bytes to *simulate one client* (params + grads + optimizer +
+/// activations), `s_d` = client state bytes.  The paper's Table 3 uses
+/// the per-client footprint directly (e.g. FEMNIST: 1,122 MB), so the
+/// harness calibrates s_m from the measured model and scales by the
+/// paper's activation multiplier.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Bytes to simulate one client (s_m).
+    pub s_m: u64,
+    /// Client-state bytes (s_d); 0 for stateless algorithms.
+    pub s_d: u64,
+}
+
+impl MemoryModel {
+    /// Accelerator-memory bytes per scheme WITHOUT the state manager
+    /// (Table 1 row "Memory").
+    pub fn memory(
+        &self,
+        scheme: crate::config::Scheme,
+        m: usize,
+        m_p: usize,
+        k: usize,
+    ) -> u64 {
+        use crate::config::Scheme::*;
+        let (m, m_p, k) = (m as u64, m_p as u64, k as u64);
+        match scheme {
+            SP => self.s_m * m + self.s_d * m,
+            RwDist => self.s_m * m + self.s_d * m,
+            SdDist => self.s_m * m_p + self.s_d * m,
+            FaDist => self.s_m * k + self.s_d * m,
+            Parrot => self.s_m * k + self.s_d * m / m.max(1), // s_d/M ≈ s_d
+        }
+    }
+
+    /// Memory WITH the state manager (Table 1 row "Memory with state
+    /// manager"): state spills to disk, K (or M_p) live copies remain.
+    pub fn memory_with_manager(
+        &self,
+        scheme: crate::config::Scheme,
+        m: usize,
+        m_p: usize,
+        k: usize,
+    ) -> u64 {
+        use crate::config::Scheme::*;
+        let (m, m_p, k) = (m as u64, m_p as u64, k as u64);
+        match scheme {
+            SP => self.s_m + self.s_d,
+            RwDist => self.s_m * m + self.s_d, // one resident state per active device lineage
+            SdDist => self.s_m * m_p + self.s_d * m_p,
+            FaDist | Parrot => self.s_m * k + self.s_d * k,
+        }
+    }
+
+    /// Disk bytes with the state manager (Table 1 row "Disk Cost").
+    pub fn disk_with_manager(&self, scheme: crate::config::Scheme, m: usize) -> u64 {
+        let _ = scheme;
+        self.s_d * m as u64
+    }
+
+    /// Per-round communication volume (Table 1 "Comm. Size"), given the
+    /// averaged-params bytes `s_a` and special-params bytes `s_e`.
+    pub fn comm_size(
+        scheme: crate::config::Scheme,
+        s_a: u64,
+        s_e: u64,
+        m_p: usize,
+        k: usize,
+    ) -> u64 {
+        use crate::config::Scheme::*;
+        match scheme {
+            SP => 0,
+            RwDist | SdDist | FaDist => (s_a + s_e) * m_p as u64,
+            Parrot => s_a * k as u64 + s_e * m_p as u64,
+        }
+    }
+
+    /// Per-round communication trips (Table 1 "Comm. Trips") — upload
+    /// direction, matching the paper's counting.
+    pub fn comm_trips(scheme: crate::config::Scheme, m_p: usize, k: usize) -> u64 {
+        use crate::config::Scheme::*;
+        match scheme {
+            SP => 0,
+            RwDist | SdDist | FaDist => m_p as u64,
+            Parrot => k as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn table3_femnist_row() {
+        // Paper Table 3: FEMNIST s_m = 1,122 MB; SP = 1,122; SD@Mp=100 =
+        // 112,200; FA/Parrot@K=8 = 8,976.
+        let mm = MemoryModel { s_m: 1122 * MB, s_d: 0 };
+        assert_eq!(mm.memory(Scheme::SP, 3400, 100, 8) / MB, 1122 * 3400);
+        assert_eq!(mm.memory_with_manager(Scheme::SP, 3400, 100, 8) / MB, 1122);
+        assert_eq!(mm.memory(Scheme::SdDist, 3400, 100, 8) / MB, 112_200);
+        assert_eq!(mm.memory(Scheme::FaDist, 3400, 100, 8) / MB, 8_976);
+        assert_eq!(mm.memory(Scheme::FaDist, 3400, 100, 16) / MB, 17_952);
+    }
+
+    #[test]
+    fn table3_imagenet_row() {
+        let mm = MemoryModel { s_m: 3305 * MB, s_d: 0 };
+        assert_eq!(mm.memory(Scheme::SdDist, 10_000, 1000, 8) / MB, 3_305_000);
+        assert_eq!(mm.memory(Scheme::Parrot, 10_000, 1000, 8) / MB, 26_440);
+        assert_eq!(mm.memory(Scheme::Parrot, 10_000, 1000, 16) / MB, 52_880);
+    }
+
+    #[test]
+    fn state_manager_reduces_memory() {
+        let mm = MemoryModel { s_m: 100 * MB, s_d: 10 * MB };
+        // Schemes that hold all M client states in memory benefit from
+        // spilling them to disk (Table 1, "Memory with state manager").
+        for scheme in [Scheme::SP, Scheme::SdDist, Scheme::FaDist] {
+            assert!(
+                mm.memory_with_manager(scheme, 1000, 100, 8)
+                    < mm.memory(scheme, 1000, 100, 8),
+                "{scheme:?}"
+            );
+        }
+        // Parrot's no-manager row is already O(s_m·K + s_d/M) in Table 1
+        // (state assumed server-held): the manager trades that for
+        // O(s_d·K) resident — both tiny; check the formulas directly.
+        assert_eq!(
+            mm.memory_with_manager(Scheme::Parrot, 1000, 100, 8),
+            100 * MB * 8 + 10 * MB * 8
+        );
+        assert_eq!(mm.disk_with_manager(Scheme::Parrot, 1000), 10 * MB * 1000);
+    }
+
+    #[test]
+    fn comm_table1_shape() {
+        let s_a = 44 * MB;
+        let s_e = 0;
+        let (m_p, k) = (100, 8);
+        let parrot = MemoryModel::comm_size(Scheme::Parrot, s_a, s_e, m_p, k);
+        let fa = MemoryModel::comm_size(Scheme::FaDist, s_a, s_e, m_p, k);
+        assert_eq!(parrot, s_a * 8);
+        assert_eq!(fa, s_a * 100);
+        assert_eq!(MemoryModel::comm_trips(Scheme::Parrot, m_p, k), 8);
+        assert_eq!(MemoryModel::comm_trips(Scheme::SdDist, m_p, k), 100);
+        // Special params can't be compressed below s_e * Mp:
+        let with_special = MemoryModel::comm_size(Scheme::Parrot, s_a, MB, m_p, k);
+        assert_eq!(with_special, s_a * 8 + MB * 100);
+    }
+
+    #[test]
+    fn run_metrics_aggregation() {
+        let mut rm = RunMetrics::default();
+        for i in 0..4 {
+            rm.push(RoundMetrics {
+                round: i,
+                wall_secs: (i + 1) as f64,
+                bytes_up: 10,
+                bytes_down: 5,
+                trips: 3,
+                eval_acc: if i == 3 { Some(0.9) } else { None },
+                ..Default::default()
+            });
+        }
+        assert!((rm.mean_round_secs() - 2.5).abs() < 1e-12);
+        assert!((rm.mean_round_secs_after(2) - 3.5).abs() < 1e-12);
+        assert_eq!(rm.total_bytes(), 60);
+        assert_eq!(rm.total_trips(), 12);
+        assert_eq!(rm.final_eval().1, Some(0.9));
+        let js = rm.to_json().render();
+        assert!(js.contains("\"mean_round_secs\":2.5"));
+    }
+}

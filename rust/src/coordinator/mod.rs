@@ -1,0 +1,24 @@
+//! The Parrot coordinator (paper §3, Alg. 2): leader (server manager) +
+//! sequential device executors, wired over any [`Transport`].
+//!
+//! - [`messages`] — the wire protocol between server and devices.
+//! - [`worker`] — `Device_Executes`: sequential client training through
+//!   the PJRT runtime, state-manager loads/saves, local aggregation,
+//!   heterogeneity sleep injection (Appendix A).
+//! - [`server`] — `Server_Executes`: client selection, Alg.-3
+//!   scheduling, broadcast, global aggregation, algorithm server-update,
+//!   periodic evaluation.
+//! - [`metrics`] — measured per-round accounting (comm bytes/trips,
+//!   busy times, utilization) feeding the Table-1/Fig-4 harnesses.
+
+pub mod messages;
+pub mod metrics;
+pub mod selection;
+pub mod server;
+pub mod worker;
+
+pub use messages::Msg;
+pub use metrics::{MemoryModel, RoundMetrics, RunMetrics};
+pub use selection::Selection;
+pub use server::{run_simulation, Server, TrainSummary};
+pub use worker::Worker;

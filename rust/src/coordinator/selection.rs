@@ -1,0 +1,179 @@
+//! Client selection strategies (Alg. 1/2: "server selects a set of
+//! clients M^r") — §3.2 lists selection among the user-customizable
+//! server-side functions, so it is a first-class pluggable here.
+//!
+//! All strategies are deterministic in `(seed, round)` so simulation
+//! and TCP deployment pick identical cohorts (the zero-code-change
+//! invariant extends to selection).
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Uniform without replacement (the paper's default).
+    Random,
+    /// Deterministic sweep: round r takes clients [r·M_p, (r+1)·M_p) mod M.
+    RoundRobin,
+    /// Probability ∝ dataset size (importance-style sampling; favors
+    /// big-data clients, stressing the scheduler's tail).
+    SizeWeighted,
+    /// Fixed cohort every round (debugging / convergence studies).
+    Fixed(Vec<usize>),
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Result<Selection> {
+        if s == "random" {
+            return Ok(Selection::Random);
+        }
+        if s == "round_robin" || s == "rr" {
+            return Ok(Selection::RoundRobin);
+        }
+        if s == "size_weighted" || s == "size" {
+            return Ok(Selection::SizeWeighted);
+        }
+        if let Some(list) = s.strip_prefix("fixed:") {
+            let ids = list
+                .split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<Result<Vec<_>, _>>()?;
+            if ids.is_empty() {
+                bail!("fixed: needs at least one client id");
+            }
+            return Ok(Selection::Fixed(ids));
+        }
+        bail!("unknown selection {s:?} (random|round_robin|size_weighted|fixed:a,b,c)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Selection::Random => "random".into(),
+            Selection::RoundRobin => "round_robin".into(),
+            Selection::SizeWeighted => "size_weighted".into(),
+            Selection::Fixed(ids) => format!("fixed({})", ids.len()),
+        }
+    }
+
+    /// Pick M^r for `round`. `sizes[m]` is client m's dataset size.
+    pub fn select(
+        &self,
+        round: usize,
+        m_total: usize,
+        m_p: usize,
+        sizes: &[usize],
+        seed: u64,
+    ) -> Vec<usize> {
+        let m_p = m_p.min(m_total);
+        match self {
+            Selection::Random => {
+                let mut rng = Rng::new(seed ^ 0x5E1E_C702).derive(round as u64);
+                rng.choose(m_total, m_p)
+            }
+            Selection::RoundRobin => {
+                (0..m_p).map(|i| (round * m_p + i) % m_total).collect()
+            }
+            Selection::SizeWeighted => {
+                debug_assert_eq!(sizes.len(), m_total);
+                let mut rng = Rng::new(seed ^ 0x512E_D0DE).derive(round as u64);
+                // Weighted sampling without replacement via exponential
+                // sort keys (Efraimidis–Spirakis): key = u^(1/w).
+                let mut keyed: Vec<(f64, usize)> = sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| {
+                        let u = rng.next_f64().max(1e-12);
+                        (u.powf(1.0 / (w.max(1) as f64)), i)
+                    })
+                    .collect();
+                keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                keyed.into_iter().take(m_p).map(|(_, i)| i).collect()
+            }
+            Selection::Fixed(ids) => ids.iter().take(m_p).cloned().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes(m: usize) -> Vec<usize> {
+        (0..m).map(|i| 10 + i * 5).collect()
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(Selection::parse("random").unwrap(), Selection::Random);
+        assert_eq!(Selection::parse("rr").unwrap(), Selection::RoundRobin);
+        assert_eq!(Selection::parse("size").unwrap(), Selection::SizeWeighted);
+        assert_eq!(
+            Selection::parse("fixed:1,2,3").unwrap(),
+            Selection::Fixed(vec![1, 2, 3])
+        );
+        assert!(Selection::parse("wat").is_err());
+        assert!(Selection::parse("fixed:").is_err());
+    }
+
+    #[test]
+    fn all_strategies_distinct_valid_cohorts() {
+        for sel in [Selection::Random, Selection::RoundRobin, Selection::SizeWeighted] {
+            let picked = sel.select(3, 100, 20, &sizes(100), 7);
+            assert_eq!(picked.len(), 20, "{}", sel.name());
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 20, "{} produced duplicates", sel.name());
+            assert!(picked.iter().all(|&c| c < 100));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_round() {
+        let s = Selection::Random;
+        assert_eq!(s.select(5, 50, 10, &sizes(50), 1), s.select(5, 50, 10, &sizes(50), 1));
+        assert_ne!(s.select(5, 50, 10, &sizes(50), 1), s.select(6, 50, 10, &sizes(50), 1));
+    }
+
+    #[test]
+    fn round_robin_sweeps_everyone() {
+        let s = Selection::RoundRobin;
+        let mut seen = vec![false; 30];
+        for r in 0..3 {
+            for c in s.select(r, 30, 10, &sizes(30), 0) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "3 rounds x 10 must cover 30 clients");
+    }
+
+    #[test]
+    fn size_weighted_prefers_big_clients() {
+        // client sizes 10..505; over many rounds the top decile should be
+        // picked far more often than the bottom decile.
+        let s = Selection::SizeWeighted;
+        let sz = sizes(100);
+        let mut counts = vec![0usize; 100];
+        for r in 0..200 {
+            for c in s.select(r, 100, 10, &sz, 3) {
+                counts[c] += 1;
+            }
+        }
+        let low: usize = counts[..10].iter().sum();
+        let high: usize = counts[90..].iter().sum();
+        assert!(high > 3 * low, "high {high} vs low {low}");
+    }
+
+    #[test]
+    fn fixed_returns_exactly_the_cohort() {
+        let s = Selection::Fixed(vec![4, 8, 15]);
+        assert_eq!(s.select(9, 100, 10, &sizes(100), 0), vec![4, 8, 15]);
+        assert_eq!(s.select(9, 100, 2, &sizes(100), 0), vec![4, 8]);
+    }
+
+    #[test]
+    fn mp_clamped_to_m() {
+        let picked = Selection::Random.select(0, 5, 50, &sizes(5), 1);
+        assert_eq!(picked.len(), 5);
+    }
+}

@@ -1,0 +1,317 @@
+//! `Server_Executes` (Alg. 2): the leader.
+//!
+//! Per round: select M_p clients → Task_Schedule (Alg. 3) → broadcast
+//! Θ^r + task sets → collect device aggregates → GlobalAggregate →
+//! algorithm server-update → (optionally) evaluate on the held-out set.
+//! All communication is metered (bytes, trips) for the Table-1/Fig-5
+//! measured comparisons.
+//!
+//! Two wire modes (see `messages`): Parrot batch mode (O(K) trips) and
+//! FA pull mode (O(M_p) trips, no local aggregation) — the latter is the
+//! faithful FedScale/Flower-style baseline on identical compute.
+
+use crate::aggregation::{GlobalAgg, LocalAgg, RoundAggregate};
+use crate::algorithms::{Algo, Broadcast, ServerCtx, ServerState};
+use crate::config::{RunConfig, Scheme};
+use crate::coordinator::messages::Msg;
+use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
+use crate::coordinator::worker::{build_dataset, initial_params, Worker};
+use crate::data::FederatedDataset;
+use crate::model::ParamSet;
+use crate::runtime::{Executable, Runtime};
+use crate::scheduler::Scheduler;
+use crate::transport::{local, Transport};
+use crate::util::timer::Stopwatch;
+use anyhow::{bail, Context, Result};
+
+/// Final outcome of a run.
+#[derive(Debug)]
+pub struct TrainSummary {
+    pub metrics: RunMetrics,
+    pub final_params: ParamSet,
+    pub final_loss: Option<f64>,
+    pub final_acc: Option<f64>,
+}
+
+pub struct Server<T: Transport> {
+    transport: T,
+    cfg: RunConfig,
+    algo: Algo,
+    global: ParamSet,
+    sstate: ServerState,
+    scheduler: Scheduler,
+    dataset: FederatedDataset,
+    eval_exe: Option<Executable>,
+    pub metrics: RunMetrics,
+}
+
+impl<T: Transport> Server<T> {
+    pub fn new(transport: T, cfg: RunConfig) -> Result<Server<T>> {
+        anyhow::ensure!(transport.id() == 0, "server must be endpoint 0");
+        let algo = Algo::parse(&cfg.algorithm, cfg.mu)?;
+        let global = initial_params(&cfg)?;
+        let scheduler = Scheduler::new(cfg.scheduler, cfg.warmup_rounds, cfg.n_devices);
+        let dataset = build_dataset(&cfg);
+        let eval_exe = if cfg.eval_every > 0 {
+            let rt = Runtime::cpu(&cfg.artifact_dir)?;
+            Some(rt.load(&cfg.artifact("eval"))?)
+        } else {
+            None
+        };
+        Ok(Server {
+            transport,
+            cfg,
+            algo,
+            global,
+            sstate: ServerState::default(),
+            scheduler,
+            dataset,
+            eval_exe,
+            metrics: RunMetrics::default(),
+        })
+    }
+
+    /// Run R rounds and shut the workers down.
+    pub fn run(mut self) -> Result<TrainSummary> {
+        let client_sizes: Vec<usize> = (0..self.cfg.n_clients)
+            .map(|c| self.dataset.client_size(c))
+            .collect();
+        for round in 0..self.cfg.rounds {
+            let selected = self.cfg.selection.select(
+                round,
+                self.cfg.n_clients,
+                self.cfg.clients_per_round,
+                &client_sizes,
+                self.cfg.seed,
+            );
+            let rm = match self.cfg.scheme {
+                Scheme::Parrot | Scheme::SP => self.round_parrot(round, &selected)?,
+                Scheme::FaDist => self.round_fa(round, &selected)?,
+                s => bail!(
+                    "scheme {s:?} runs on the virtual-time engine (simulation::), \
+                     not on real compute"
+                ),
+            };
+            self.metrics.push(rm);
+        }
+        for k in 1..=self.cfg.n_devices {
+            self.transport.send(k, Msg::Shutdown.encode())?;
+        }
+        let (final_loss, final_acc) = self.metrics.final_eval();
+        Ok(TrainSummary {
+            metrics: self.metrics,
+            final_params: self.global,
+            final_loss,
+            final_acc,
+        })
+    }
+
+    fn broadcast(&self, round: usize) -> Broadcast {
+        Broadcast {
+            round,
+            params: self.global.clone(),
+            extra: self.algo.broadcast_extra(&self.sstate),
+        }
+    }
+
+    /// Parrot batch round (SP degenerates to K=1 with the same code).
+    fn round_parrot(&mut self, round: usize, selected: &[usize]) -> Result<RoundMetrics> {
+        let sw = Stopwatch::start();
+        let sizes: Vec<(usize, usize)> = selected
+            .iter()
+            .map(|&c| (c, self.dataset.client_size(c) * self.cfg.local_epochs))
+            .collect();
+        let schedule = self.scheduler.schedule(round, &sizes);
+        let bc = self.broadcast(round);
+
+        let mut bytes_down = 0u64;
+        let mut trips = 0u64;
+        let mut active = Vec::new();
+        for (k, clients) in schedule.assignment.iter().enumerate() {
+            if clients.is_empty() {
+                continue;
+            }
+            let msg = Msg::Round { round, broadcast: bc.clone(), clients: clients.clone() }
+                .encode();
+            bytes_down += msg.len() as u64;
+            trips += 1;
+            self.transport.send(k + 1, msg)?;
+            active.push(k);
+        }
+
+        let mut agg = GlobalAgg::new();
+        let mut bytes_up = 0u64;
+        let mut busy = 0.0f64;
+        for _ in 0..active.len() {
+            let (_, raw) = self.transport.recv(None)?;
+            bytes_up += raw.len() as u64;
+            trips += 1;
+            match Msg::decode(&raw)? {
+                Msg::RoundDone { aggregate, records, busy_secs, .. } => {
+                    agg.merge(aggregate);
+                    for r in records {
+                        self.scheduler.record(r);
+                    }
+                    busy += busy_secs;
+                }
+                other => bail!("expected RoundDone, got {other:?}"),
+            }
+        }
+        let result = agg.finish();
+        self.apply_round(&result);
+        self.finish_metrics(round, sw, schedule.overhead_secs, busy, bytes_down, bytes_up, trips, &result)
+    }
+
+    /// FA pull round: one task per message, params shipped per task
+    /// (first task per device carries the broadcast; re-sends each task
+    /// to mirror FA Dist.'s O(s_a·M_p) accounting).
+    fn round_fa(&mut self, round: usize, selected: &[usize]) -> Result<RoundMetrics> {
+        let sw = Stopwatch::start();
+        // FedScale-style: largest jobs first into a pull queue.
+        let mut queue: Vec<usize> = selected.to_vec();
+        queue.sort_by_key(|&c| std::cmp::Reverse(self.dataset.client_size(c)));
+        let mut queue = std::collections::VecDeque::from(queue);
+        let bc = self.broadcast(round);
+
+        let mut bytes_down = 0u64;
+        let mut bytes_up = 0u64;
+        let mut trips = 0u64;
+        let k = self.cfg.n_devices;
+        let mut outstanding = 0usize;
+        for dev in 1..=k {
+            if let Some(client) = queue.pop_front() {
+                let msg = Msg::Task { round, broadcast: bc.clone(), client }.encode();
+                bytes_down += msg.len() as u64;
+                trips += 1;
+                self.transport.send(dev, msg)?;
+                outstanding += 1;
+            }
+        }
+        let mut flat = LocalAgg::new(0);
+        let mut n_done = 0usize;
+        while n_done < selected.len() {
+            let (_, raw) = self.transport.recv(None)?;
+            bytes_up += raw.len() as u64;
+            trips += 1;
+            match Msg::decode(&raw)? {
+                Msg::TaskDone { device, update, record } => {
+                    flat.add(&update);
+                    self.scheduler.record(record);
+                    n_done += 1;
+                    outstanding -= 1;
+                    if let Some(client) = queue.pop_front() {
+                        // Params re-sent per task — FA Dist.'s comm model.
+                        let msg =
+                            Msg::Task { round, broadcast: bc.clone(), client }.encode();
+                        bytes_down += msg.len() as u64;
+                        trips += 1;
+                        self.transport.send(device + 1, msg)?;
+                        outstanding += 1;
+                    }
+                }
+                other => bail!("expected TaskDone, got {other:?}"),
+            }
+        }
+        debug_assert_eq!(outstanding, 0);
+        let mut agg = GlobalAgg::new();
+        agg.merge(flat.finish());
+        let result = agg.finish();
+        self.apply_round(&result);
+        self.finish_metrics(round, sw, 0.0, 0.0, bytes_down, bytes_up, trips, &result)
+    }
+
+    fn apply_round(&mut self, result: &RoundAggregate) {
+        let ctx = ServerCtx {
+            m_total: self.cfg.n_clients,
+            m_selected: self.cfg.clients_per_round,
+        };
+        self.algo
+            .server_apply(&mut self.global, &mut self.sstate, result, &ctx);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish_metrics(
+        &mut self,
+        round: usize,
+        sw: Stopwatch,
+        sched_secs: f64,
+        busy: f64,
+        bytes_down: u64,
+        bytes_up: u64,
+        trips: u64,
+        result: &RoundAggregate,
+    ) -> Result<RoundMetrics> {
+        let mut rm = RoundMetrics {
+            round,
+            sched_secs,
+            bytes_down,
+            bytes_up,
+            trips,
+            busy_secs: busy,
+            train_loss: result.scalars.get("loss").copied().unwrap_or(f64::NAN),
+            ..Default::default()
+        };
+        if self.cfg.eval_every > 0 && (round + 1) % self.cfg.eval_every == 0 {
+            let (l, a) = self.evaluate()?;
+            rm.eval_loss = Some(l);
+            rm.eval_acc = Some(a);
+        }
+        rm.wall_secs = sw.elapsed_secs();
+        rm.utilization = if rm.wall_secs > 0.0 && self.cfg.n_devices > 0 {
+            (busy / (self.cfg.n_devices as f64 * rm.wall_secs)).min(1.0)
+        } else {
+            0.0
+        };
+        Ok(rm)
+    }
+
+    /// Server-side eval over the held-out IID test stream.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let exe = self.eval_exe.as_ref().context("eval disabled")?;
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut preds = 0.0;
+        let per_batch: usize = exe
+            .manifest
+            .batch_decls()
+            .iter()
+            .find(|d| d.name == "y")
+            .map(|d| d.numel())
+            .unwrap_or(crate::model::BATCH);
+        for j in 0..self.cfg.eval_batches {
+            let b = self.dataset.test_batch(j);
+            let (l, c) = exe.eval(&self.global, &b)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            preds += per_batch as f64;
+        }
+        Ok((loss_sum / self.cfg.eval_batches.max(1) as f64, correct / preds.max(1.0)))
+    }
+
+    pub fn global_params(&self) -> &ParamSet {
+        &self.global
+    }
+}
+
+/// One-call in-process simulation: local transport, K worker threads,
+/// server in the calling thread.  This is the entrypoint the launcher,
+/// the examples and the Fig-4 harness all share.
+pub fn run_simulation(cfg: RunConfig) -> Result<TrainSummary> {
+    cfg.validate()?;
+    let mut endpoints = local(cfg.n_devices);
+    // endpoints[0] = server, rest = workers (spawned back to front).
+    let mut handles = Vec::new();
+    for _ in 0..cfg.n_devices {
+        let ep = endpoints.pop().unwrap();
+        let wcfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            Worker::new(ep, wcfg)?.run()
+        }));
+    }
+    let server_ep = endpoints.pop().unwrap();
+    let summary = Server::new(server_ep, cfg)?.run()?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+    Ok(summary)
+}

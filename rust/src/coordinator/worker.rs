@@ -1,0 +1,214 @@
+//! `Device_Executes` (Alg. 2): the sequential device executor.
+//!
+//! Each worker owns a full PJRT runtime (compiled train/grad artifacts),
+//! a state-manager handle, and a deterministic local view of the
+//! federated dataset.  Per assigned client it: loads state → prepares
+//! the task spec (algorithm OPs) → runs E local epochs through the
+//! [`TaskRun`](crate::runtime::TaskRun) hot path → injects the
+//! Appendix-A heterogeneity sleep → saves state → folds the result into
+//! the local aggregate.  One `RoundDone` goes back per round (Parrot) or
+//! one `TaskDone` per client (FA mode).
+
+use crate::aggregation::LocalAgg;
+use crate::algorithms::{Algo, Broadcast, TaskResult};
+use crate::config::RunConfig;
+use crate::coordinator::messages::Msg;
+use crate::data::{FederatedDataset, Partition, SynthConfig};
+use crate::model::ParamSet;
+use crate::runtime::{Executable, Runtime};
+use crate::scheduler::TaskRecord;
+use crate::state::StateManager;
+use crate::transport::Transport;
+use crate::util::timer::Stopwatch;
+use anyhow::{Context, Result};
+
+pub struct Worker<T: Transport> {
+    transport: T,
+    /// Device index 0..K (endpoint id − 1).
+    device: usize,
+    cfg: RunConfig,
+    algo: Algo,
+    train_exe: Executable,
+    grad_exe: Option<Executable>,
+    state: StateManager,
+    dataset: FederatedDataset,
+    /// Cached broadcast for FA TaskCached messages.
+    cached_bc: Option<Broadcast>,
+}
+
+/// Build the deterministic dataset every participant reconstructs
+/// locally from the config (no data ever crosses the transport).
+pub fn build_dataset(cfg: &RunConfig) -> FederatedDataset {
+    let n_classes = if cfg.model == "tinylm" { 62 } else { 62 };
+    let partition = Partition::generate(
+        cfg.partition,
+        cfg.n_clients,
+        n_classes,
+        cfg.mean_client_size,
+        cfg.seed,
+    );
+    let synth = if cfg.model == "tinylm" {
+        SynthConfig::language(cfg.seed)
+    } else {
+        SynthConfig::vision(cfg.seed)
+    };
+    FederatedDataset::new(synth, partition)
+}
+
+impl<T: Transport> Worker<T> {
+    /// Construct inside the worker thread (PJRT handles are not Send).
+    pub fn new(transport: T, cfg: RunConfig) -> Result<Worker<T>> {
+        let device = transport.id() - 1;
+        let algo = Algo::parse(&cfg.algorithm, cfg.mu)?;
+        let rt = Runtime::cpu(&cfg.artifact_dir)?;
+        let train_exe = rt.load(&cfg.artifact("train"))?;
+        let grad_exe = if matches!(algo, Algo::Mime { .. }) {
+            Some(rt.load(&cfg.artifact("grad"))?)
+        } else {
+            None
+        };
+        let state = StateManager::new(
+            std::path::Path::new(&cfg.state_dir).join(format!("run_{}", cfg.seed)),
+            64 << 20,
+        )?;
+        let dataset = build_dataset(&cfg);
+        Ok(Worker {
+            transport,
+            device,
+            cfg,
+            algo,
+            train_exe,
+            grad_exe,
+            state,
+            dataset,
+            cached_bc: None,
+        })
+    }
+
+    /// Message loop until Shutdown.
+    pub fn run(mut self) -> Result<()> {
+        loop {
+            let (_, raw) = self.transport.recv(None)?;
+            match Msg::decode(&raw)? {
+                Msg::Shutdown => return Ok(()),
+                Msg::Round { round, broadcast, clients } => {
+                    let sw = Stopwatch::start();
+                    let mut local = LocalAgg::new(self.device);
+                    let mut records = Vec::with_capacity(clients.len());
+                    for client in clients {
+                        let (update, rec) = self.run_task(round, &broadcast, client)?;
+                        local.add(&update);
+                        records.push(rec);
+                    }
+                    let msg = Msg::RoundDone {
+                        device: self.device,
+                        aggregate: local.finish(),
+                        records,
+                        busy_secs: sw.elapsed_secs(),
+                    };
+                    self.transport.send(0, msg.encode())?;
+                }
+                Msg::Task { round, broadcast, client } => {
+                    self.cached_bc = Some(broadcast.clone());
+                    let (update, record) = self.run_task(round, &broadcast, client)?;
+                    self.transport
+                        .send(0, Msg::TaskDone { device: self.device, update, record }.encode())?;
+                }
+                Msg::TaskCached { round, client } => {
+                    let bc = self
+                        .cached_bc
+                        .clone()
+                        .context("TaskCached before any Task with broadcast")?;
+                    let (update, record) = self.run_task(round, &bc, client)?;
+                    self.transport
+                        .send(0, Msg::TaskDone { device: self.device, update, record }.encode())?;
+                }
+                other => anyhow::bail!("worker got unexpected message {other:?}"),
+            }
+        }
+    }
+
+    /// Train one client sequentially (the paper's §3.3).
+    fn run_task(
+        &mut self,
+        round: usize,
+        bc: &Broadcast,
+        client: usize,
+    ) -> Result<(crate::aggregation::ClientUpdate, TaskRecord)> {
+        let sw = Stopwatch::start();
+        let shapes = self.train_exe.manifest.param_shapes();
+        let old_state = if self.algo.stateful() {
+            self.state.load_params(client as u64)?
+        } else {
+            None
+        };
+        let spec = self.algo.prepare(bc, old_state.as_ref(), &shapes);
+
+        // Mime needs a gradient at the *initial* params (full-batch proxy:
+        // the client's first batch).
+        let full_grad = if spec.wants_full_grad {
+            let gexe = self.grad_exe.as_ref().context("grad artifact not loaded")?;
+            let (g, _loss) = gexe.grad(&bc.params, &self.dataset.batch(client, 0))?;
+            Some(g)
+        } else {
+            None
+        };
+
+        let mut run =
+            self.train_exe
+                .start_task(&bc.params, &spec.anchors, &spec.corrs, self.cfg.lr, spec.mu)?;
+        let n_batches = self.dataset.n_batches(client);
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _epoch in 0..self.cfg.local_epochs {
+            for j in 0..n_batches {
+                let (loss, _gsq) = run.step(&self.dataset.batch(client, j))?;
+                loss_sum += loss as f64;
+                steps += 1;
+            }
+        }
+        let finals = run.finish()?;
+
+        // Appendix A: simulate heterogeneous / unstable devices by
+        // sleeping η·T̂ on top of the measured time.  The server only
+        // ever sees the total, exactly as in the paper.
+        let measured = sw.elapsed_secs();
+        let slowdown = self.cfg.cluster.devices[self.device].slowdown(round, self.device);
+        let extra = measured * (slowdown - 1.0);
+        if extra > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(extra));
+        }
+
+        let res = TaskResult {
+            client,
+            weight: self.dataset.client_size(client) as f64,
+            initial: bc.params.clone(),
+            finals,
+            mean_loss: (loss_sum / steps.max(1) as f64) as f32,
+            n_steps: steps,
+            lr: self.cfg.lr,
+            full_grad,
+        };
+        let (update, new_state) = self.algo.client_update(&res, bc, old_state.as_ref());
+        if let Some(ns) = new_state {
+            self.state.save_params(client as u64, &ns)?;
+        }
+        let record = TaskRecord {
+            round,
+            device: self.device,
+            n_samples: self.dataset.client_size(client) * self.cfg.local_epochs,
+            secs: sw.elapsed_secs(),
+        };
+        Ok((update, record))
+    }
+}
+
+/// Materialize a ParamSet with the He init the server uses at round 0 —
+/// kept here so server and tests agree on the starting point.
+pub fn initial_params(cfg: &RunConfig) -> Result<ParamSet> {
+    let man = crate::model::Manifest::load(
+        std::path::Path::new(&cfg.artifact_dir)
+            .join(format!("{}.manifest.txt", cfg.artifact("train"))),
+    )?;
+    Ok(ParamSet::init_he(&man.param_shapes(), cfg.seed))
+}

@@ -1,0 +1,18 @@
+//! Federated dataset substrate.
+//!
+//! The paper evaluates on FEMNIST / ImageNet / Reddit; none are
+//! available in this environment, so this module builds the synthetic
+//! analogs described in DESIGN.md §2: a learnable Gaussian
+//! class-prototype generator (vision) and a Markov token generator (LM),
+//! partitioned across clients by the paper's three partition laws —
+//! natural (log-normal sizes), Dirichlet(α) label skew, and quantity
+//! skew.  What the *system* experiments consume is exactly what drives
+//! the paper's results: the per-client dataset-size distribution (the
+//! scheduler's workload signal, Eq. 1) and the label heterogeneity (the
+//! algorithms' convergence signal, Fig. 4).
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{Partition, PartitionKind};
+pub use synth::{Batch, FederatedDataset, SynthConfig, TaskKind};

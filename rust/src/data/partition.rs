@@ -1,0 +1,217 @@
+//! Client partitioners: how the global data pool is split across M
+//! clients.
+//!
+//! Three laws from the paper (Table 4):
+//! - **Natural** — FEMNIST-like: per-client sizes log-normal
+//!   (writer-per-client heavy tail), labels mildly skewed.
+//! - **Dirichlet(α)** — ImageNet(a): per-client label distribution drawn
+//!   from Dirichlet(α·1_C); α=0.1 gives strong label skew. Sizes are
+//!   near-uniform (label skew alone does not stress the scheduler —
+//!   paper footnote 1).
+//! - **QuantitySkew(s)** — ImageNet(b): sizes follow a power-ish law with
+//!   skew parameter s (larger s = heavier size imbalance); labels IID.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionKind {
+    /// Log-normal sizes (σ controls the tail), mild label skew.
+    Natural,
+    /// Dirichlet(alpha) label skew, near-uniform sizes.
+    Dirichlet(f64),
+    /// Quantity skew with exponent-like parameter (paper uses 5.0).
+    QuantitySkew(f64),
+}
+
+/// The realized partition: per-client sizes and label mixtures.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub kind_name: String,
+    /// Number of samples on each client (len = M).
+    pub sizes: Vec<usize>,
+    /// Per-client categorical label distribution (len = M, each len = C).
+    pub label_mix: Vec<Vec<f64>>,
+}
+
+impl Partition {
+    /// Generate a partition for `m` clients over `n_classes`, with mean
+    /// per-client size `mean_size`.
+    pub fn generate(
+        kind: PartitionKind,
+        m: usize,
+        n_classes: usize,
+        mean_size: usize,
+        seed: u64,
+    ) -> Partition {
+        assert!(m > 0 && n_classes > 0 && mean_size >= 2);
+        let root = Rng::new(seed);
+        let mut sizes = Vec::with_capacity(m);
+        let mut label_mix = Vec::with_capacity(m);
+        let uniform = vec![1.0 / n_classes as f64; n_classes];
+        for c in 0..m {
+            let mut rng = root.derive(c as u64);
+            match kind {
+                PartitionKind::Natural => {
+                    // Log-normal with sigma=0.7: FEMNIST-like 10x spread.
+                    let mu = (mean_size as f64).ln() - 0.5 * 0.7 * 0.7;
+                    let s = rng.lognormal(mu, 0.7).round().max(2.0) as usize;
+                    sizes.push(s);
+                    // Mild skew: Dirichlet(2.0).
+                    label_mix.push(rng.dirichlet(2.0, n_classes));
+                }
+                PartitionKind::Dirichlet(alpha) => {
+                    // Near-uniform sizes: +-20%.
+                    let s = (mean_size as f64 * rng.range_f64(0.8, 1.2))
+                        .round()
+                        .max(2.0) as usize;
+                    sizes.push(s);
+                    label_mix.push(rng.dirichlet(alpha.max(1e-3), n_classes));
+                }
+                PartitionKind::QuantitySkew(skew) => {
+                    // Pareto-like: size ∝ U^(-1/skew̃), normalized to the
+                    // requested mean; larger `skew` = heavier imbalance.
+                    let tail = 1.0 + 4.0 / skew.max(0.1);
+                    let u = rng.next_f64().max(1e-9);
+                    let raw = u.powf(-1.0 / tail);
+                    // E[U^(-1/t)] = t/(t-1) for t>1.
+                    let norm = tail / (tail - 1.0);
+                    let s = (mean_size as f64 * raw / norm).round().max(2.0) as usize;
+                    sizes.push(s);
+                    label_mix.push(uniform.clone());
+                }
+            }
+        }
+        Partition { kind_name: kind.name(), sizes, label_mix }
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Coefficient of variation of sizes — the straggler-pressure signal.
+    pub fn size_cv(&self) -> f64 {
+        let n = self.sizes.len() as f64;
+        let mean = self.total_samples() as f64 / n;
+        let var = self
+            .sizes
+            .iter()
+            .map(|&s| (s as f64 - mean) * (s as f64 - mean))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+}
+
+impl PartitionKind {
+    pub fn name(&self) -> String {
+        match self {
+            PartitionKind::Natural => "natural".into(),
+            PartitionKind::Dirichlet(a) => format!("dirichlet({a})"),
+            PartitionKind::QuantitySkew(s) => format!("quantity_skew({s})"),
+        }
+    }
+
+    /// Parse "natural" | "dirichlet:0.1" | "qskew:5.0".
+    pub fn parse(s: &str) -> anyhow::Result<PartitionKind> {
+        if s == "natural" {
+            return Ok(PartitionKind::Natural);
+        }
+        if let Some(a) = s.strip_prefix("dirichlet:") {
+            return Ok(PartitionKind::Dirichlet(a.parse()?));
+        }
+        if let Some(a) = s.strip_prefix("qskew:") {
+            return Ok(PartitionKind::QuantitySkew(a.parse()?));
+        }
+        anyhow::bail!("unknown partition kind {s:?} (natural | dirichlet:A | qskew:S)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_positive_and_mean_close() {
+        for kind in [
+            PartitionKind::Natural,
+            PartitionKind::Dirichlet(0.1),
+            PartitionKind::QuantitySkew(5.0),
+        ] {
+            let p = Partition::generate(kind, 500, 62, 100, 1);
+            assert_eq!(p.n_clients(), 500);
+            assert!(p.sizes.iter().all(|&s| s >= 2));
+            let mean = p.total_samples() as f64 / 500.0;
+            assert!(
+                (mean - 100.0).abs() / 100.0 < 0.35,
+                "{}: mean={mean}",
+                p.kind_name
+            );
+        }
+    }
+
+    #[test]
+    fn natural_is_heavier_than_dirichlet_sizes() {
+        let nat = Partition::generate(PartitionKind::Natural, 1000, 62, 100, 2);
+        let dir = Partition::generate(PartitionKind::Dirichlet(0.1), 1000, 62, 100, 2);
+        assert!(nat.size_cv() > dir.size_cv() * 2.0,
+            "natural cv={} dirichlet cv={}", nat.size_cv(), dir.size_cv());
+    }
+
+    #[test]
+    fn quantity_skew_is_heaviest() {
+        let q = Partition::generate(PartitionKind::QuantitySkew(5.0), 1000, 62, 100, 3);
+        let d = Partition::generate(PartitionKind::Dirichlet(0.1), 1000, 62, 100, 3);
+        assert!(q.size_cv() > d.size_cv(), "q={} d={}", q.size_cv(), d.size_cv());
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_label_skew() {
+        let spiky = Partition::generate(PartitionKind::Dirichlet(0.1), 200, 10, 50, 4);
+        let flat = Partition::generate(PartitionKind::Dirichlet(100.0), 200, 10, 50, 4);
+        let max_mass = |p: &Partition| {
+            p.label_mix
+                .iter()
+                .map(|mix| mix.iter().cloned().fold(0.0, f64::max))
+                .sum::<f64>()
+                / p.n_clients() as f64
+        };
+        assert!(max_mass(&spiky) > 0.5);
+        assert!(max_mass(&flat) < 0.2);
+    }
+
+    #[test]
+    fn label_mix_is_distribution() {
+        let p = Partition::generate(PartitionKind::Natural, 50, 62, 80, 5);
+        for mix in &p.label_mix {
+            assert_eq!(mix.len(), 62);
+            assert!((mix.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Partition::generate(PartitionKind::Natural, 100, 62, 100, 7);
+        let b = Partition::generate(PartitionKind::Natural, 100, 62, 100, 7);
+        assert_eq!(a.sizes, b.sizes);
+        let c = Partition::generate(PartitionKind::Natural, 100, 62, 100, 8);
+        assert_ne!(a.sizes, c.sizes);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(PartitionKind::parse("natural").unwrap(), PartitionKind::Natural);
+        assert_eq!(
+            PartitionKind::parse("dirichlet:0.1").unwrap(),
+            PartitionKind::Dirichlet(0.1)
+        );
+        assert_eq!(
+            PartitionKind::parse("qskew:5.0").unwrap(),
+            PartitionKind::QuantitySkew(5.0)
+        );
+        assert!(PartitionKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! (a) hierarchical aggregation on/off, (b) LPT ordering inside Alg. 3,
+//! (c) warm-up length R_w, (d) Time-Window width τ, (e) state-manager
+//! cache budget.  `parrot exp ablate`.
+
+use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::{Partition, PartitionKind};
+use crate::model::ParamSet;
+use crate::scheduler::{greedy_assign, DeviceEstimate};
+use crate::simulation::{run_virtual, CommModel, VirtualSim};
+use crate::state::StateManager;
+use crate::util::cli::Args;
+use anyhow::Result;
+
+fn mean_tail(rs: &[crate::simulation::VRound], skip: usize) -> f64 {
+    rs.iter().skip(skip).map(|r| r.total_secs).sum::<f64>() / (rs.len() - skip) as f64
+}
+
+pub fn ablate(args: &Args) -> Result<()> {
+    let mut csv = Vec::new();
+
+    // (a) hierarchical aggregation: Parrot scheduling with FA-style
+    // per-client comm vs Parrot comm — isolates §4.2 from §4.4.
+    println!("(a) hierarchical aggregation ablation (K=8, M_p=100, femnist comm)");
+    let part = Partition::generate(PartitionKind::Natural, 600, 62, 100, 5);
+    let mk = |scheme, sched| {
+        VirtualSim::new(
+            scheme,
+            ClusterProfile::homogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            part.clone(),
+            1,
+            7,
+        )
+    };
+    let mut parrot = mk(Scheme::Parrot, SchedulerKind::Greedy);
+    let mut fa_sched = mk(Scheme::FaDist, SchedulerKind::Uniform);
+    let rp = run_virtual(&mut parrot, 10, 100, 3);
+    let rf = run_virtual(&mut fa_sched, 10, 100, 3);
+    println!(
+        "   with hierarchy: {:.2}s/round, {:.0} MB, {} trips",
+        mean_tail(&rp, 3),
+        rp[5].bytes as f64 / (1 << 20) as f64,
+        rp[5].trips
+    );
+    println!(
+        "   without (per-client comm): {:.2}s/round, {:.0} MB, {} trips",
+        mean_tail(&rf, 3),
+        rf[5].bytes as f64 / (1 << 20) as f64,
+        rf[5].trips
+    );
+    csv.push(format!(
+        "hierarchy,{:.3},{},{:.3},{}",
+        mean_tail(&rp, 3),
+        rp[5].bytes,
+        mean_tail(&rf, 3),
+        rf[5].bytes
+    ));
+
+    // (b) LPT (descending) vs arrival order inside the greedy pass.
+    println!("\n(b) LPT ordering inside Alg. 3 (K=8, heterogeneous estimates)");
+    let est: Vec<DeviceEstimate> = (0..8)
+        .map(|i| DeviceEstimate {
+            t_sample: 0.002 * (1.0 + 0.3 * i as f64),
+            b: 0.15,
+            r2: 1.0,
+            n_points: 20,
+        })
+        .collect();
+    let mut rng = crate::util::rng::Rng::new(11);
+    let clients: Vec<(usize, usize)> =
+        (0..100).map(|i| (i, 20 + rng.below(400) as usize)).collect();
+    let sizes: std::collections::HashMap<usize, usize> = clients.iter().cloned().collect();
+    let (sorted_asg, _) = greedy_assign(&clients, &est);
+    // unsorted variant: same placement rule, arrival order
+    let mut w = vec![0.0f64; 8];
+    let mut unsorted_asg = vec![Vec::new(); 8];
+    for &(c, n) in &clients {
+        let k = (0..8)
+            .min_by(|&a, &b| {
+                (w[a] + est[a].predict(n))
+                    .partial_cmp(&(w[b] + est[b].predict(n)))
+                    .unwrap()
+            })
+            .unwrap();
+        w[k] += est[k].predict(n);
+        unsorted_asg[k].push(c);
+    }
+    let ms_sorted = crate::scheduler::greedy::makespan(&sorted_asg, &sizes, &est);
+    let ms_unsorted = crate::scheduler::greedy::makespan(&unsorted_asg, &sizes, &est);
+    println!(
+        "   LPT order: {ms_sorted:.2}s  |  arrival order: {ms_unsorted:.2}s  ({:.1}% better)",
+        100.0 * (ms_unsorted - ms_sorted) / ms_unsorted
+    );
+    csv.push(format!("lpt,{ms_sorted:.3},{ms_unsorted:.3},,"));
+
+    // (c) warm-up length R_w.
+    println!("\n(c) warm-up rounds R_w (heterogeneous cluster, 20 rounds)");
+    for rw in [0usize, 2, 5, 10] {
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Greedy,
+            rw,
+            part.clone(),
+            1,
+            9,
+        );
+        let rs = run_virtual(&mut sim, 20, 100, 5);
+        let total: f64 = rs.iter().map(|r| r.total_secs).sum();
+        println!("   R_w={rw:<3} total 20-round time {total:.1}s");
+        csv.push(format!("warmup,{rw},{total:.2},,"));
+    }
+
+    // (d) Time-Window width in the dynamic environment.
+    println!("\n(d) Time-Window width τ (cos dynamics, 60 rounds)");
+    for tau in [1usize, 3, 5, 10, 30] {
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::dynamic(8, 25.0),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::TimeWindow(tau),
+            2,
+            part.clone(),
+            1,
+            13,
+        );
+        let rs = run_virtual(&mut sim, 60, 100, 7);
+        let t = mean_tail(&rs, 20);
+        let errs: Vec<f64> = rs.iter().skip(20).filter_map(|r| r.est_err).collect();
+        let err = errs.iter().sum::<f64>() / errs.len().max(1) as f64;
+        println!("   τ={tau:<3} round {t:.2}s  est-MAPE {:.1}%", 100.0 * err);
+        csv.push(format!("tau,{tau},{t:.3},{err:.4},"));
+    }
+
+    // (e) state-manager cache budget (hit rate on a SCAFFOLD-like trace).
+    println!("\n(e) state-manager cache budget (64 clients, 1MB state, zipf-ish reuse)");
+    let shapes = vec![vec![784usize, 256], vec![256]];
+    let state = ParamSet::init_he(&shapes, 1);
+    let sz = state.size_bytes();
+    for budget_states in [0usize, 2, 8, 32, 64] {
+        let dir = std::env::temp_dir()
+            .join(format!("parrot_ablate_{}_{budget_states}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sm = StateManager::new(&dir, budget_states * (sz + 1024))?;
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..400 {
+            // zipf-ish: low ids much hotter
+            let c = (rng.next_f64().powi(3) * 64.0) as u64;
+            if sm.load(c)?.is_none() {
+                sm.save(c, &state.to_bytes())?;
+            }
+        }
+        let hit = sm.metrics.cache_hits as f64 / sm.metrics.loads as f64;
+        println!(
+            "   budget {budget_states:>2} states: hit-rate {:.0}%, disk reads {}",
+            100.0 * hit,
+            sm.metrics.disk_reads
+        );
+        csv.push(format!("cache,{budget_states},{hit:.4},{},", sm.metrics.disk_reads));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    super::save_csv(args, "ablation", "ablation,x,a,b,c", &csv)
+}

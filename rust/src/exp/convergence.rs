@@ -1,0 +1,108 @@
+//! Fig. 4 — real-compute convergence of the six FL algorithms, plus the
+//! per-round running-time comparison (Fig. 4d).
+//!
+//! Runs genuine FL training through PJRT: stateless algorithms
+//! (Fig. 4a), special-params algorithms (Fig. 4b), stateful algorithms
+//! (Fig. 4c).  Parrot's hierarchical path is additionally checked
+//! against the flat FA path (the SD-reference of the paper's plots) for
+//! identical numerics by the integration tests; here we record accuracy
+//! curves and round times.
+
+use crate::algorithms::ALL_ALGORITHMS;
+use crate::config::RunConfig;
+use crate::coordinator::run_simulation;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::Result;
+
+pub fn fig4(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 12)?;
+    let clients = args.usize_or("clients", 60)?;
+    let per_round = args.usize_or("per-round", 12)?;
+    let devices = args.usize_or("devices", 2)?;
+    println!(
+        "Fig. 4 — algorithm convergence on real compute \
+         (M={clients}, M_p={per_round}, K={devices}, R={rounds})"
+    );
+
+    let mut curves = Vec::new();
+    let mut csv = Vec::new();
+    let mut time_rows = Vec::new();
+    for algo in ALL_ALGORITHMS {
+        let cfg = RunConfig {
+            algorithm: algo.into(),
+            n_clients: clients,
+            clients_per_round: per_round,
+            n_devices: devices,
+            rounds,
+            mean_client_size: 40,
+            eval_every: 2,
+            eval_batches: 8,
+            mu: 0.01,
+            seed: 777,
+            warmup_rounds: 1,
+            cluster: crate::cluster::ClusterProfile::homogeneous(devices),
+            artifact_dir: args.get_or("artifacts", "artifacts").to_string(),
+            state_dir: std::env::temp_dir()
+                .join(format!("parrot_fig4_{}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        };
+        let summary = run_simulation(cfg)?;
+        let accs: Vec<(usize, f64)> = summary
+            .metrics
+            .rounds
+            .iter()
+            .filter_map(|r| r.eval_acc.map(|a| (r.round, a)))
+            .collect();
+        let mean_round = summary.metrics.mean_round_secs_after(1);
+        let last_acc = accs.last().map(|x| x.1).unwrap_or(f64::NAN);
+        println!(
+            "{:<10} final-acc {:.3}  curve {:?}  mean-round {:.2}s",
+            algo,
+            last_acc,
+            accs.iter().map(|(_, a)| (a * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+            mean_round
+        );
+        for (r, a) in &accs {
+            csv.push(format!("{algo},{r},{a:.4}"));
+        }
+        time_rows.push((algo, mean_round));
+        curves.push((algo.to_string(), accs, mean_round));
+    }
+
+    println!("\nFig. 4(d) — mean running time per round (s):");
+    for (algo, t) in &time_rows {
+        println!("{algo:<10} {t:.2}");
+    }
+
+    super::save_csv(args, "fig4_accuracy", "algorithm,round,accuracy", &csv)?;
+    super::save_json(
+        args,
+        "fig4",
+        &Json::obj().set(
+            "algorithms",
+            Json::Arr(
+                curves
+                    .into_iter()
+                    .map(|(algo, accs, t)| {
+                        Json::obj()
+                            .set("algorithm", algo)
+                            .set("mean_round_secs", t)
+                            .set(
+                                "accuracy",
+                                Json::Arr(
+                                    accs.into_iter()
+                                        .map(|(r, a)| {
+                                            Json::obj().set("round", r).set("acc", a)
+                                        })
+                                        .collect(),
+                                ),
+                            )
+                    })
+                    .collect(),
+            ),
+        ),
+    )
+}

@@ -1,0 +1,358 @@
+//! Figure harnesses on the virtual-time engine (Figs. 5–11).
+//!
+//! Each prints the series the paper plots and writes CSV/JSON under
+//! `results/`.  Scale parameters default to the paper's but are
+//! overridable (e.g. `--rounds 20 --devices 4,8,16,32`).
+
+use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::{Partition, PartitionKind};
+use crate::simulation::{run_virtual, CommModel, VRound, VirtualSim};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::Result;
+
+fn mean_tail(rs: &[VRound], skip: usize) -> f64 {
+    let tail: Vec<f64> = rs.iter().skip(skip).map(|r| r.total_secs).collect();
+    if tail.is_empty() {
+        return 0.0;
+    }
+    tail.iter().sum::<f64>() / tail.len() as f64
+}
+
+fn dataset_partition(name: &str, m: usize, seed: u64) -> Partition {
+    let kind = match name {
+        "imagenet" => PartitionKind::Dirichlet(0.1),
+        "imagenet_b" => PartitionKind::QuantitySkew(5.0),
+        _ => PartitionKind::Natural,
+    };
+    Partition::generate(kind, m, 62, 100, seed)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sim_for(
+    dataset: &str,
+    scheme: Scheme,
+    cluster: ClusterProfile,
+    sched: SchedulerKind,
+    m: usize,
+    epochs: usize,
+    seed: u64,
+) -> VirtualSim {
+    VirtualSim::new(
+        scheme,
+        cluster,
+        WorkloadCost::by_name(dataset.trim_end_matches("_b")).unwrap(),
+        CommModel::by_name(dataset),
+        sched,
+        2,
+        dataset_partition(dataset, m, seed),
+        epochs,
+        seed,
+    )
+}
+
+/// Fig. 5 — round time of frameworks (= schemes) × device counts × datasets.
+pub fn fig5(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 20)?;
+    let devices = args.usize_list_or("devices", &[4, 8, 16, 32])?;
+    let m_p = args.usize_or("per-round", 100)?;
+    println!("Fig. 5 — mean round time (s) by framework scheme and #devices (M_p={m_p})");
+    let mut csv = Vec::new();
+    for dataset in ["femnist", "imagenet", "reddit"] {
+        println!("\n[{dataset}]");
+        println!(
+            "{:<8} {:>14} {:>16} {:>14} {:>10}",
+            "K", "FedScale(FA)", "Flower(FA+pull)", "FedML(SD)", "Parrot"
+        );
+        for &k in &devices {
+            let mut row = vec![format!("{dataset}"), k.to_string()];
+            let mut cells = Vec::new();
+            for (scheme, sched) in [
+                (Scheme::FaDist, SchedulerKind::Uniform),   // FedScale
+                (Scheme::FaDist, SchedulerKind::Uniform),   // Flower (same scheme class)
+                (Scheme::SdDist, SchedulerKind::Uniform),   // FedML SD (Mp devices)
+                (Scheme::Parrot, SchedulerKind::Greedy),
+            ] {
+                let mut sim = sim_for(
+                    dataset,
+                    scheme,
+                    ClusterProfile::homogeneous(k),
+                    sched,
+                    1000,
+                    1,
+                    41 + k as u64,
+                );
+                let rs = run_virtual(&mut sim, rounds, m_p, 13);
+                let t = mean_tail(&rs, rounds / 4);
+                cells.push(t);
+                row.push(format!("{t:.2}"));
+            }
+            println!(
+                "{:<8} {:>14.2} {:>16.2} {:>14.2} {:>10.2}",
+                k, cells[0], cells[1], cells[2], cells[3]
+            );
+            csv.push(row.join(","));
+        }
+    }
+    println!("\n(expected shape: Parrot fastest at every K; FA pays per-task comm; SD's");
+    println!(" compute is parallel over M_p executors but pays M_p trips + stragglers.)");
+    super::save_csv(args, "fig5", "dataset,k,fedscale,flower,fedml_sd,parrot", &csv)
+}
+
+/// Fig. 6 — workload model fit: per-device scatter + fitted line.
+pub fn fig6(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 12)?;
+    println!("Fig. 6 — workload estimation quality (t_k, b_k fits vs samples)");
+    let mut csv = Vec::new();
+    for (tag, cluster, dataset) in [
+        ("homoA", ClusterProfile::homogeneous(8), "femnist"),
+        ("heteA", ClusterProfile::heterogeneous(8), "femnist"),
+        ("heteA-imagenet", ClusterProfile::heterogeneous(8), "imagenet"),
+        ("clusterC", ClusterProfile::cluster_c(8), "femnist"),
+    ] {
+        let mut sim = sim_for(
+            dataset,
+            Scheme::Parrot,
+            cluster,
+            SchedulerKind::Greedy,
+            500,
+            1,
+            61,
+        );
+        let rs = run_virtual(&mut sim, rounds, 100, 19);
+        let est = sim.scheduler.estimates(rounds);
+        println!("\n[{tag}] per-device fitted models (first 4 devices):");
+        println!("{:<6} {:>12} {:>10} {:>8} {:>8}", "dev", "t_k (ms/sample)", "b_k (s)", "r2", "points");
+        for (d, e) in est.iter().take(4).enumerate() {
+            println!(
+                "{:<6} {:>12.3} {:>10.3} {:>8.3} {:>8}",
+                d,
+                e.t_sample * 1e3,
+                e.b,
+                e.r2,
+                e.n_points
+            );
+            csv.push(format!(
+                "{tag},{d},{:.6},{:.4},{:.4},{}",
+                e.t_sample, e.b, e.r2, e.n_points
+            ));
+        }
+        let final_err = rs.iter().rev().find_map(|r| r.est_err).unwrap_or(f64::NAN);
+        println!("estimation MAPE (last modeled round): {:.1}%", 100.0 * final_err);
+    }
+    super::save_csv(args, "fig6", "config,device,t_sample,b,r2,points", &csv)
+}
+
+/// Fig. 7 — round time vs number of devices (w/ and w/o scheduling).
+pub fn fig7(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 20)?;
+    let devices = args.usize_list_or("devices", &[4, 8, 16, 32])?;
+    println!("Fig. 7 — Parrot round time vs #devices (M_p=100)");
+    let mut csv = Vec::new();
+    for dataset in ["femnist", "imagenet"] {
+        println!("\n[{dataset}]");
+        println!("{:<6} {:>12} {:>14} {:>10}", "K", "w/ sched", "w/o sched", "speedup");
+        for &k in &devices {
+            let run = |sched| {
+                let mut sim = sim_for(
+                    dataset,
+                    Scheme::Parrot,
+                    ClusterProfile::homogeneous(k),
+                    sched,
+                    1000,
+                    1,
+                    71,
+                );
+                mean_tail(&run_virtual(&mut sim, rounds, 100, 23), rounds / 4)
+            };
+            let with = run(SchedulerKind::Greedy);
+            let without = run(SchedulerKind::Uniform);
+            println!(
+                "{:<6} {:>12.2} {:>14.2} {:>9.2}x",
+                k,
+                with,
+                without,
+                without / with
+            );
+            csv.push(format!("{dataset},{k},{with:.3},{without:.3}"));
+        }
+    }
+    super::save_csv(args, "fig7", "dataset,k,with_sched,without_sched", &csv)
+}
+
+/// Fig. 8 — workload-estimation + scheduling wallclock vs #devices.
+pub fn fig8(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 30)?;
+    let devices = args.usize_list_or("devices", &[4, 8, 16, 32])?;
+    println!("Fig. 8 — scheduler overhead per round (real wallclock, ms)");
+    println!("{:<6} {:>16} {:>22}", "K", "sched (ms)", "vs round time (%)");
+    let mut csv = Vec::new();
+    for &k in &devices {
+        let mut sim = sim_for(
+            "femnist",
+            Scheme::Parrot,
+            ClusterProfile::homogeneous(k),
+            SchedulerKind::Greedy,
+            1000,
+            1,
+            81,
+        );
+        let rs = run_virtual(&mut sim, rounds, 100, 29);
+        let sched_ms: f64 =
+            rs.iter().map(|r| r.sched_secs).sum::<f64>() / rs.len() as f64 * 1e3;
+        let round_s = mean_tail(&rs, rounds / 4);
+        println!(
+            "{:<6} {:>16.3} {:>21.4}%",
+            k,
+            sched_ms,
+            100.0 * sched_ms / 1e3 / round_s
+        );
+        csv.push(format!("{k},{sched_ms:.4},{round_s:.3}"));
+    }
+    println!("(scheduling cost grows ~linearly in K and stays ≪ the round time)");
+    super::save_csv(args, "fig8", "k,sched_ms,round_s", &csv)
+}
+
+/// Fig. 9 — round time under different hardware configurations.
+pub fn fig9(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 24)?;
+    println!("Fig. 9 — round time by hardware config (K=8, M_p=100)");
+    println!(
+        "{:<10} {:<16} {:>12} {:>14} {:>10}",
+        "dataset", "config", "w/ sched", "w/o sched", "speedup"
+    );
+    let mut csv = Vec::new();
+    for dataset in ["femnist", "imagenet"] {
+        for (tag, cluster) in [
+            ("homo", ClusterProfile::homogeneous(8)),
+            ("hete", ClusterProfile::heterogeneous(8)),
+            ("dyn", ClusterProfile::dynamic(8, 25.0)),
+            ("clusterC", ClusterProfile::cluster_c(8)),
+        ] {
+            let run = |sched| {
+                let mut sim =
+                    sim_for(dataset, Scheme::Parrot, cluster.clone(), sched, 1000, 1, 91);
+                mean_tail(&run_virtual(&mut sim, rounds, 100, 31), rounds / 3)
+            };
+            let with = run(SchedulerKind::TimeWindow(5));
+            let without = run(SchedulerKind::Uniform);
+            println!(
+                "{:<10} {:<16} {:>12.2} {:>14.2} {:>9.2}x",
+                dataset,
+                tag,
+                with,
+                without,
+                without / with
+            );
+            csv.push(format!("{dataset},{tag},{with:.3},{without:.3}"));
+        }
+    }
+    super::save_csv(args, "fig9", "dataset,config,with_sched,without_sched", &csv)
+}
+
+/// Fig. 10 — round time vs number of concurrent clients (100 vs 1000).
+pub fn fig10(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 16)?;
+    println!("Fig. 10 — round time vs concurrent clients (K=8)");
+    println!(
+        "{:<10} {:>8} {:>12} {:>14} {:>10}",
+        "dataset", "M_p", "w/ sched", "w/o sched", "speedup"
+    );
+    let mut csv = Vec::new();
+    for dataset in ["femnist", "imagenet"] {
+        for m_p in [100usize, 1000] {
+            let run = |sched| {
+                let mut sim = sim_for(
+                    dataset,
+                    Scheme::Parrot,
+                    ClusterProfile::heterogeneous(8),
+                    sched,
+                    10_000,
+                    1,
+                    101,
+                );
+                mean_tail(&run_virtual(&mut sim, rounds, m_p, 37), rounds / 4)
+            };
+            let with = run(SchedulerKind::Greedy);
+            let without = run(SchedulerKind::Uniform);
+            println!(
+                "{:<10} {:>8} {:>12.2} {:>14.2} {:>9.2}x",
+                dataset,
+                m_p,
+                with,
+                without,
+                without / with
+            );
+            csv.push(format!("{dataset},{m_p},{with:.3},{without:.3}"));
+        }
+    }
+    super::save_csv(args, "fig10", "dataset,mp,with_sched,without_sched", &csv)
+}
+
+/// Fig. 11 — estimation error + round time in dynamic environments.
+pub fn fig11(args: &Args) -> Result<()> {
+    let rounds = args.usize_or("rounds", 60)?;
+    println!("Fig. 11 — dynamic environment: full-history vs Time-Window vs none");
+    let mk = |sched| {
+        sim_for(
+            "femnist",
+            Scheme::Parrot,
+            ClusterProfile::dynamic(8, 25.0),
+            sched,
+            500,
+            1,
+            111,
+        )
+    };
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (tag, sched) in [
+        ("all-history", SchedulerKind::Greedy),
+        ("time-window(3)", SchedulerKind::TimeWindow(3)),
+        ("no-sched", SchedulerKind::Uniform),
+    ] {
+        let mut sim = mk(sched);
+        let rs = run_virtual(&mut sim, rounds, 100, 43);
+        let t = mean_tail(&rs, 20);
+        let errs: Vec<f64> = rs.iter().skip(20).filter_map(|r| r.est_err).collect();
+        let err = if errs.is_empty() {
+            f64::NAN
+        } else {
+            errs.iter().sum::<f64>() / errs.len() as f64
+        };
+        rows.push((tag, t, err));
+        csv.push(format!("{tag},{t:.3},{err:.4}"));
+    }
+    println!("{:<16} {:>14} {:>18}", "scheduler", "round time (s)", "est. MAPE (%)");
+    for (tag, t, err) in &rows {
+        println!(
+            "{:<16} {:>14.2} {:>17.1}%",
+            tag,
+            t,
+            if err.is_nan() { f64::NAN } else { 100.0 * err }
+        );
+    }
+    println!("(expected: time-window ≈ best time & lowest error; all-history mis-estimates");
+    println!(" under the cos-law dynamics; no-sched is slowest)");
+    super::save_json(
+        args,
+        "fig11",
+        &Json::obj()
+            .set("rounds", rounds)
+            .set(
+                "series",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(tag, t, err)| {
+                            Json::obj()
+                                .set("scheduler", *tag)
+                                .set("round_secs", *t)
+                                .set("est_mape", *err)
+                        })
+                        .collect(),
+                ),
+            ),
+    )?;
+    super::save_csv(args, "fig11", "scheduler,round_s,mape", &csv)
+}

@@ -1,0 +1,75 @@
+//! Experiment harnesses: one generator per paper table/figure
+//! (DESIGN.md §4's per-experiment index).
+//!
+//! Every harness prints the same rows/series the paper reports and
+//! writes machine-readable JSON + CSV under `results/`.  Invoke through
+//! the launcher: `parrot exp <id>` (ids: table1 table2 table3 fig4 fig5
+//! fig6 fig7 fig8 fig9 fig10 fig11 all).
+
+pub mod ablation;
+pub mod convergence;
+pub mod figures;
+pub mod tables;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Where results land (override with --results).
+pub fn results_dir(args: &Args) -> Result<PathBuf> {
+    let dir = PathBuf::from(args.get_or("results", "results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Write both a rendered text table (stdout already printed) and JSON.
+pub fn save_json(args: &Args, name: &str, json: &crate::util::json::Json) -> Result<()> {
+    let path = results_dir(args)?.join(format!("{name}.json"));
+    std::fs::write(&path, json.render())?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+pub fn save_csv(args: &Args, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    let path = results_dir(args)?.join(format!("{name}.csv"));
+    let mut body = String::from(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    std::fs::write(&path, body)?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+/// Dispatch one experiment id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => tables::table1(args),
+        "table2" => tables::table2(args),
+        "table3" => tables::table3(args),
+        "fig4" => convergence::fig4(args),
+        "fig5" => figures::fig5(args),
+        "fig6" => figures::fig6(args),
+        "fig7" => figures::fig7(args),
+        "fig8" => figures::fig8(args),
+        "fig9" => figures::fig9(args),
+        "fig10" => figures::fig10(args),
+        "fig11" => figures::fig11(args),
+        "ablate" => ablation::ablate(args),
+        "all" => {
+            for id in [
+                "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
+                "fig10", "fig11", "fig4",
+            ] {
+                println!("\n################ {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        _ => bail!(
+            "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 ablate all"
+        ),
+    }
+}

@@ -1,0 +1,190 @@
+//! Table harnesses: complexity (Table 1), feature matrix (Table 2),
+//! GPU memory (Table 3).
+
+use crate::aggregation::{AggOp, ClientUpdate, LocalAgg, Payload};
+use crate::config::Scheme;
+use crate::coordinator::metrics::MemoryModel;
+use crate::model::ParamSet;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+const MB: u64 = 1 << 20;
+const SCHEMES: [Scheme; 5] =
+    [Scheme::SP, Scheme::RwDist, Scheme::SdDist, Scheme::FaDist, Scheme::Parrot];
+
+/// Table 1 — complexity comparison: the analytic rows, *validated* by a
+/// measured mini-federation (comm size/trips counted on real encoded
+/// aggregates).
+pub fn table1(args: &Args) -> Result<()> {
+    let m = args.usize_or("clients", 256)?;
+    let m_p = args.usize_or("per-round", 64)?;
+    let k = args.usize_or("devices", 8)?;
+    let s_m = 1122 * MB; // paper's FEMNIST per-client sim footprint
+    let s_d = 4 * MB; // SCAFFOLD control variate (11M f32 ≈ 44MB in paper; small here)
+    let s_a = 44 * MB; // ResNet-18 params
+    let s_e = 0u64;
+
+    println!("Table 1 — per-round complexity (M={m}, M_p={m_p}, K={k})");
+    println!(
+        "{:<14} {:>9} {:>14} {:>16} {:>14} {:>12} {:>8}",
+        "Scheme", "Devices", "Memory(MB)", "Mem+mgr(MB)", "Comm(MB)", "Trips", "Disk(MB)"
+    );
+    let mm = MemoryModel { s_m, s_d };
+    let mut rows = Vec::new();
+    for scheme in SCHEMES {
+        let devices = match scheme {
+            Scheme::SP => 1,
+            Scheme::RwDist => m,
+            Scheme::SdDist => m_p,
+            Scheme::FaDist | Scheme::Parrot => k,
+        };
+        let mem = mm.memory(scheme, m, m_p, k) / MB;
+        let mem_mgr = mm.memory_with_manager(scheme, m, m_p, k) / MB;
+        let comm = MemoryModel::comm_size(scheme, s_a, s_e, m_p, k) / MB;
+        let trips = MemoryModel::comm_trips(scheme, m_p, k);
+        let disk = mm.disk_with_manager(scheme, m) / MB;
+        println!(
+            "{:<14} {:>9} {:>14} {:>16} {:>14} {:>12} {:>8}",
+            scheme.name(),
+            devices,
+            mem,
+            mem_mgr,
+            comm,
+            trips,
+            disk
+        );
+        rows.push(format!("{},{devices},{mem},{mem_mgr},{comm},{trips},{disk}", scheme.name()));
+    }
+
+    // Measured validation: encode real device aggregates vs raw updates.
+    let shapes = vec![vec![256, 64], vec![64]];
+    let mut rng = Rng::new(7);
+    let updates: Vec<ClientUpdate> = (0..m_p)
+        .map(|c| {
+            let tensors = shapes
+                .iter()
+                .map(|s| {
+                    (0..s.iter().product::<usize>())
+                        .map(|_| rng.normal_f32(0.0, 1.0))
+                        .collect()
+                })
+                .collect();
+            ClientUpdate {
+                client: c,
+                weight: 1.0,
+                entries: vec![(
+                    "delta".into(),
+                    AggOp::WeightedAvg,
+                    Payload::Params(ParamSet { shapes: shapes.clone(), tensors }),
+                )],
+            }
+        })
+        .collect();
+    let flat_bytes: usize = updates
+        .iter()
+        .map(|u| u.entries.iter().map(|(_, _, p)| p.size_bytes()).sum::<usize>())
+        .sum();
+    let mut parrot_bytes = 0usize;
+    for dev in 0..k {
+        let mut la = LocalAgg::new(dev);
+        for (i, u) in updates.iter().enumerate() {
+            if i % k == dev {
+                la.add(u);
+            }
+        }
+        parrot_bytes += la.finish().size_bytes();
+    }
+    let ratio = flat_bytes as f64 / parrot_bytes as f64;
+    println!(
+        "\nmeasured upload: FA/SD-style {:.1} MB vs Parrot {:.1} MB  (ratio {:.1}x; model predicts M_p/K = {:.1}x)",
+        flat_bytes as f64 / MB as f64,
+        parrot_bytes as f64 / MB as f64,
+        ratio,
+        m_p as f64 / k as f64
+    );
+
+    super::save_csv(
+        args,
+        "table1",
+        "scheme,devices,memory_mb,memory_mgr_mb,comm_mb,trips,disk_mb",
+        &rows,
+    )?;
+    super::save_json(
+        args,
+        "table1_measured",
+        &Json::obj()
+            .set("flat_upload_bytes", flat_bytes)
+            .set("parrot_upload_bytes", parrot_bytes)
+            .set("measured_ratio", ratio)
+            .set("predicted_ratio", m_p as f64 / k as f64),
+    )?;
+    Ok(())
+}
+
+/// Table 2 — framework feature matrix, reproduced as *this repo's*
+/// capability row with the test/harness that proves each feature.
+pub fn table2(args: &Args) -> Result<()> {
+    let rows = [
+        ("SP", "coordinator::server (scheme sp)", "integration_training::sp_scheme_single_device"),
+        ("RW Dist.", "simulation::round_sd", "simulation tests"),
+        ("SD Dist.", "simulation::round_sd", "simulation tests"),
+        ("FA Dist.", "coordinator::server::round_fa", "integration_training::fa_mode_*"),
+        ("Scalability", "virtual engine @ 10k clients", "exp fig10"),
+        ("Flexible Hardware Conf.", "cluster profiles homo/hete/dyn/c", "exp fig9"),
+        ("Real-world Deployment", "transport::tcp", "examples/deploy_tcp.rs"),
+        ("Task Scheduling", "scheduler (Alg. 3)", "exp fig7/fig8"),
+        ("Client State Manager", "state::StateManager", "integration_training::stateful_*"),
+    ];
+    println!("Table 2 — FedML Parrot feature matrix (this reproduction)");
+    println!("{:<26} {:<38} {}", "Feature", "Implementation", "Evidence");
+    let mut csv = Vec::new();
+    for (f, i, e) in rows {
+        println!("{f:<26} {i:<38} {e}");
+        csv.push(format!("{f},{i},{e}"));
+    }
+    super::save_csv(args, "table2", "feature,implementation,evidence", &csv)
+}
+
+/// Table 3 — GPU memory costs of the FL tasks.
+pub fn table3(args: &Args) -> Result<()> {
+    println!("Table 3 — GPU memory costs (MB)");
+    println!(
+        "{:<10} {:>6} {:>4} {:>10} {:>12} {:>14}",
+        "Dataset", "M_p", "K", "SP", "SD Dist.", "FA&Parrot"
+    );
+    // (dataset, M, M_p, K, s_m MB) — s_m from the paper's measured
+    // per-client footprints (Table 3), which our analytic model consumes.
+    let cases = [
+        ("FEMNIST", 3400, 100, 8, 1122u64),
+        ("FEMNIST", 3400, 100, 16, 1122),
+        ("ImageNet", 10_000, 1000, 8, 3305),
+        ("ImageNet", 10_000, 1000, 16, 3305),
+    ];
+    let mut csv = Vec::new();
+    for (ds, m, m_p, k, s_m) in cases {
+        let mm = MemoryModel { s_m: s_m * MB, s_d: 0 };
+        let sp = mm.memory_with_manager(Scheme::SP, m, m_p, k) / MB;
+        let sd = mm.memory(Scheme::SdDist, m, m_p, k) / MB;
+        let fa = mm.memory(Scheme::FaDist, m, m_p, k) / MB;
+        println!("{ds:<10} {m_p:>6} {k:>4} {sp:>10} {sd:>12} {fa:>14}");
+        csv.push(format!("{ds},{m_p},{k},{sp},{sd},{fa}"));
+    }
+
+    // Calibration note: measured RSS of one real mlp client task.
+    let man = std::path::Path::new(&args.get_or("artifacts", "artifacts").to_string())
+        .join("mlp_train.manifest.txt");
+    if man.exists() {
+        let m = crate::model::Manifest::load(&man)?;
+        // params + anchors + corrs + grads + activations(≈2x params f32)
+        let est = (m.param_bytes() * 6) as f64 / MB as f64;
+        println!(
+            "\ncalibration: this repo's mlp task footprint ≈ {est:.1} MB/client \
+             (params {:.2} MB × 6 resident copies); paper's ResNet-18 row is 1122 MB — \
+             same formula, bigger model.",
+            m.param_bytes() as f64 / MB as f64
+        );
+    }
+    super::save_csv(args, "table3", "dataset,mp,k,sp_mb,sd_mb,fa_parrot_mb", &csv)
+}

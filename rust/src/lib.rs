@@ -1,0 +1,35 @@
+//! # Parrot — scalable federated-learning simulation
+//!
+//! A reproduction of *"FedML Parrot: A Scalable Federated Learning System
+//! via Heterogeneity-aware Scheduling on Sequential and Hierarchical
+//! Training"* (Tang et al., 2023) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! - **Layer 3 (this crate)** — the Parrot coordinator: round loop,
+//!   sequential device executors, hierarchical aggregation, the
+//!   heterogeneity-aware task scheduler, and the client state manager.
+//! - **Layer 2** — the per-client train/eval step authored in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! - **Layer 1** — Pallas kernels for the step's compute hot-spot
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! At runtime the Rust binary loads `artifacts/*.hlo.txt` through PJRT
+//! (`runtime`); Python never runs on the simulation path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a harness in [`exp`].
+
+pub mod util;
+pub mod config;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod algorithms;
+pub mod aggregation;
+pub mod state;
+pub mod scheduler;
+pub mod cluster;
+pub mod transport;
+pub mod coordinator;
+pub mod simulation;
+pub mod exp;

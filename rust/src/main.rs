@@ -1,0 +1,173 @@
+//! `parrot` — the launcher.
+//!
+//! Subcommands:
+//!   run            one FL simulation (all knobs via flags; see --help)
+//!   exp <id>       regenerate a paper table/figure (table1..3, fig4..11, all)
+//!   worker         TCP worker process (used by examples/deploy_tcp.rs)
+//!   serve          TCP server (deployment mode)
+//!   info           print artifact + environment summary
+//!
+//! Examples:
+//!   parrot run --algorithm scaffold --clients 1000 --per-round 100 \
+//!              --devices 8 --rounds 20 --scheduler window:5
+//!   parrot exp fig7 --devices 4,8,16,32
+//!   parrot serve --addr 127.0.0.1:7700 --devices 2 &
+//!   parrot worker --addr 127.0.0.1:7700 --id 1 &
+
+use anyhow::{bail, Context, Result};
+use parrot::config::RunConfig;
+use parrot::coordinator::{run_simulation, Server, Worker};
+use parrot::transport::{TcpServerEndpoint, TcpWorkerEndpoint};
+use parrot::util::cli::Args;
+
+const USAGE: &str = "\
+parrot — FedML Parrot reproduction (heterogeneity-aware FL simulation)
+
+USAGE:
+  parrot run   [--config FILE] [--algorithm A] [--model M] [--clients N] [--per-round P]
+               [--devices K] [--rounds R] [--epochs E] [--lr F] [--mu F]
+               [--partition natural|dirichlet:A|qskew:S] [--scheme sp|fa|parrot]
+               [--scheduler uniform|greedy|window:T] [--cluster homo|hete|dyn|c]
+               [--seed S] [--artifacts DIR] [--state-dir DIR]
+  parrot exp <table1|table2|table3|fig4|...|fig11|all> [--results DIR] [...]
+  parrot serve  --addr HOST:PORT --devices K [run flags]
+  parrot worker --addr HOST:PORT --id I      [run flags]
+  parrot info   [--artifacts DIR]
+";
+
+fn main() {
+    // Quiet the TfrtCpuClient banner on every worker.
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = match args.subcommand() {
+        Ok(s) => s.to_string(),
+        Err(_) => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match sub.as_str() {
+        "run" => cmd_run(&args),
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("usage: parrot exp <id>")?
+                .clone();
+            parrot::exp::run(&id, &args)
+        }
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<RunConfig> {
+    let base = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    base.apply_args(args)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    println!(
+        "parrot run: {} on {} | M={} M_p={} K={} R={} scheme={} scheduler={} cluster={}",
+        cfg.algorithm,
+        cfg.model,
+        cfg.n_clients,
+        cfg.clients_per_round,
+        cfg.n_devices,
+        cfg.rounds,
+        cfg.scheme.name(),
+        cfg.scheduler.name(),
+        cfg.cluster.name,
+    );
+    let summary = run_simulation(cfg)?;
+    for r in &summary.metrics.rounds {
+        print!(
+            "round {:>3}  wall {:>7.2}s  util {:>5.1}%  loss {:>7.4}",
+            r.round,
+            r.wall_secs,
+            100.0 * r.utilization,
+            r.train_loss
+        );
+        if let (Some(l), Some(a)) = (r.eval_loss, r.eval_acc) {
+            print!("  eval loss {l:.4} acc {:.1}%", 100.0 * a);
+        }
+        println!();
+    }
+    println!(
+        "done: mean round {:.2}s, total {:.1} MB comm, {} trips",
+        summary.metrics.mean_round_secs(),
+        summary.metrics.total_bytes() as f64 / (1 << 20) as f64,
+        summary.metrics.total_trips()
+    );
+    if let (Some(l), Some(a)) = (summary.final_loss, summary.final_acc) {
+        println!("final eval: loss {l:.4}, accuracy {:.2}%", 100.0 * a);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.require("addr")?;
+    let cfg = load_cfg(args)?;
+    println!("parrot server on {addr}, waiting for {} workers...", cfg.n_devices);
+    let transport = TcpServerEndpoint::bind(addr, cfg.n_devices)?;
+    let summary = Server::new(transport, cfg)?.run()?;
+    println!(
+        "deployment run done: mean round {:.2}s, final acc {:?}",
+        summary.metrics.mean_round_secs(),
+        summary.final_acc
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require("addr")?;
+    let id = args.usize_or("id", 1)?;
+    anyhow::ensure!(id >= 1, "worker id must be >= 1");
+    let cfg = load_cfg(args)?;
+    println!("parrot worker {id} connecting to {addr}");
+    let transport = TcpWorkerEndpoint::connect(addr, id)?;
+    Worker::new(transport, cfg)?.run()
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("parrot — FedML Parrot reproduction");
+    println!("artifact dir: {dir}");
+    for model in parrot::model::MODEL_NAMES {
+        for kind in parrot::model::STEP_KINDS {
+            let p = std::path::Path::new(dir).join(format!("{model}_{kind}.manifest.txt"));
+            match parrot::model::Manifest::load(&p) {
+                Ok(m) => println!(
+                    "  {model}_{kind}: {} params ({} KB), {} inputs, {} outputs",
+                    m.param_numel(),
+                    m.param_bytes() / 1024,
+                    m.inputs.len(),
+                    m.outputs.len()
+                ),
+                Err(_) => println!("  {model}_{kind}: NOT BUILT (run `make artifacts`)"),
+            }
+        }
+    }
+    let rt = parrot::runtime::Runtime::cpu(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}

@@ -1,0 +1,310 @@
+//! Parser for the plain-text artifact manifests (`<artifact>.manifest.txt`).
+//!
+//! Format (one record per line, space-separated — see `aot.py`):
+//!
+//! ```text
+//! artifact mlp_train
+//! model mlp
+//! kind train
+//! batch 20
+//! nparams 6
+//! input w1 param f32 784,256
+//! input lr scalar f32 -
+//! output loss metric f32 -
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// The role a tensor plays in the generalized step (DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Model parameter (inputs) / updated parameter or gradient (outputs).
+    Param,
+    /// FedProx/FedDyn anchor (w_global).
+    Anchor,
+    /// SCAFFOLD / Mime correction term.
+    Corr,
+    /// Data batch (x or y).
+    BatchData,
+    /// 0-d hyperparameter (lr, mu).
+    Scalar,
+    /// Scalar output metric (loss, gsq, correct).
+    Metric,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "anchor" => Role::Anchor,
+            "corr" => Role::Corr,
+            "batch" => Role::BatchData,
+            "scalar" => Role::Scalar,
+            "metric" => Role::Metric,
+            _ => bail!("unknown role {s:?}"),
+        })
+    }
+}
+
+/// One declared input or output tensor.
+#[derive(Debug, Clone)]
+pub struct TensorDecl {
+    pub name: String,
+    pub role: Role,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorDecl {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+/// Parsed manifest of one AOT artifact.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifact: String,
+    pub model: String,
+    pub kind: String,
+    pub batch: usize,
+    pub nparams: usize,
+    pub inputs: Vec<TensorDecl>,
+    pub outputs: Vec<TensorDecl>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(Vec::new()); // 0-d scalar
+    }
+    s.split(',')
+        .map(|d| d.parse::<usize>().context("bad shape dim"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifact = String::new();
+        let mut model = String::new();
+        let mut kind = String::new();
+        let mut batch = 0usize;
+        let mut nparams = 0usize;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {line:?}", lno + 1);
+            match parts[0] {
+                "artifact" => artifact = parts.get(1).with_context(ctx)?.to_string(),
+                "model" => model = parts.get(1).with_context(ctx)?.to_string(),
+                "kind" => kind = parts.get(1).with_context(ctx)?.to_string(),
+                "batch" => batch = parts.get(1).with_context(ctx)?.parse()?,
+                "nparams" => nparams = parts.get(1).with_context(ctx)?.parse()?,
+                "input" | "output" => {
+                    if parts.len() != 5 {
+                        bail!("{}: expected 5 fields", ctx());
+                    }
+                    let decl = TensorDecl {
+                        name: parts[1].to_string(),
+                        role: Role::parse(parts[2]).with_context(ctx)?,
+                        dtype: Dtype::parse(parts[3]).with_context(ctx)?,
+                        shape: parse_shape(parts[4]).with_context(ctx)?,
+                    };
+                    if parts[0] == "input" {
+                        inputs.push(decl);
+                    } else {
+                        outputs.push(decl);
+                    }
+                }
+                other => bail!("unknown manifest record {other:?} at line {}", lno + 1),
+            }
+        }
+        if artifact.is_empty() || inputs.is_empty() || outputs.is_empty() {
+            bail!("incomplete manifest (artifact={artifact:?}, {} in, {} out)",
+                  inputs.len(), outputs.len());
+        }
+        let m = Manifest { artifact, model, kind, batch, nparams, inputs, outputs };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading manifest {}", p.display()))?;
+        Manifest::parse(&text).with_context(|| format!("parsing {}", p.display()))
+    }
+
+    fn validate(&self) -> Result<()> {
+        let n_in_params = self.inputs.iter().filter(|d| d.role == Role::Param).count();
+        if n_in_params != self.nparams {
+            bail!("nparams={} but {} param inputs", self.nparams, n_in_params);
+        }
+        match self.kind.as_str() {
+            "train" => {
+                let anchors = self.inputs.iter().filter(|d| d.role == Role::Anchor).count();
+                let corrs = self.inputs.iter().filter(|d| d.role == Role::Corr).count();
+                if anchors != self.nparams || corrs != self.nparams {
+                    bail!("train manifest needs {} anchors+corrs, got {}/{}",
+                          self.nparams, anchors, corrs);
+                }
+                let out_params =
+                    self.outputs.iter().filter(|d| d.role == Role::Param).count();
+                if out_params != self.nparams {
+                    bail!("train outputs {} params, expected {}", out_params, self.nparams);
+                }
+            }
+            "eval" | "grad" => {}
+            k => bail!("unknown kind {k:?}"),
+        }
+        Ok(())
+    }
+
+    /// Input param declarations, in order.
+    pub fn param_decls(&self) -> Vec<&TensorDecl> {
+        self.inputs.iter().filter(|d| d.role == Role::Param).collect()
+    }
+
+    /// Shapes of the model parameters (the aggregation layout).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.param_decls().iter().map(|d| d.shape.clone()).collect()
+    }
+
+    /// Total parameter element count (s_a in the paper's Table 1, in elems).
+    pub fn param_numel(&self) -> usize {
+        self.param_decls().iter().map(|d| d.numel()).sum()
+    }
+
+    /// Model size in bytes — the paper's s_a.
+    pub fn param_bytes(&self) -> usize {
+        self.param_decls().iter().map(|d| d.size_bytes()).sum()
+    }
+
+    /// The x/y batch declarations.
+    pub fn batch_decls(&self) -> Vec<&TensorDecl> {
+        self.inputs.iter().filter(|d| d.role == Role::BatchData).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact mlp_train
+model mlp
+kind train
+batch 20
+nparams 2
+input w1 param f32 784,256
+input b1 param f32 256
+input anchor.w1 anchor f32 784,256
+input anchor.b1 anchor f32 256
+input corr.w1 corr f32 784,256
+input corr.b1 corr f32 256
+input x batch f32 20,784
+input y batch i32 20
+input lr scalar f32 -
+input mu scalar f32 -
+output new.w1 param f32 784,256
+output new.b1 param f32 256
+output loss metric f32 -
+output gsq metric f32 -
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "mlp_train");
+        assert_eq!(m.batch, 20);
+        assert_eq!(m.nparams, 2);
+        assert_eq!(m.inputs.len(), 10);
+        assert_eq!(m.outputs.len(), 4);
+        assert_eq!(m.param_numel(), 784 * 256 + 256);
+        assert_eq!(m.param_bytes(), 4 * (784 * 256 + 256));
+        assert_eq!(m.inputs[7].dtype, Dtype::I32);
+        assert!(m.inputs[8].shape.is_empty());
+        assert_eq!(m.inputs[8].numel(), 1); // 0-d scalar has 1 element
+    }
+
+    #[test]
+    fn rejects_bad_nparams() {
+        let bad = SAMPLE.replace("nparams 2", "nparams 3");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_anchor() {
+        let bad = SAMPLE.replace("input anchor.b1 anchor f32 256\n", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("wat 1 2 3").is_err());
+        assert!(Manifest::parse("").is_err());
+        let bad = SAMPLE.replace("f32 784,256", "f32 784,abc");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn eval_kind_lenient() {
+        let m = Manifest::parse(
+            "artifact mlp_eval\nmodel mlp\nkind eval\nbatch 20\nnparams 1\n\
+             input w1 param f32 4,4\ninput x batch f32 20,4\ninput y batch i32 20\n\
+             output loss metric f32 -\noutput correct metric f32 -\n",
+        )
+        .unwrap();
+        assert_eq!(m.kind, "eval");
+        assert_eq!(m.batch_decls().len(), 2);
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        // Run against the actual AOT output when artifacts/ exists.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.exists() {
+            return;
+        }
+        for model in crate::model::MODEL_NAMES {
+            for kind in crate::model::STEP_KINDS {
+                let p = dir.join(format!("{model}_{kind}.manifest.txt"));
+                if p.exists() {
+                    let m = Manifest::load(&p).unwrap();
+                    assert_eq!(m.model, model);
+                    assert_eq!(m.kind, kind);
+                    assert_eq!(m.batch, crate::model::BATCH);
+                }
+            }
+        }
+    }
+}

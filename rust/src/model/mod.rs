@@ -1,0 +1,23 @@
+//! Model-side substrate of Layer 3: the artifact manifests emitted by
+//! `python/compile/aot.py` and the flat parameter sets the coordinator
+//! aggregates.
+//!
+//! The manifest is the L2↔L3 contract: it pins the flattened input /
+//! output order of every AOT artifact, so the Rust side can marshal
+//! parameter tensors, batches and scalars into PJRT literals without
+//! ever re-tracing the Python.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{Dtype, Manifest, Role, TensorDecl};
+pub use params::ParamSet;
+
+/// Paper batch size (Table 4) — must match `python/compile/model.py::BATCH`.
+pub const BATCH: usize = 20;
+
+/// The model families exported by the AOT pipeline.
+pub const MODEL_NAMES: [&str; 3] = ["mlp", "cnn", "tinylm"];
+
+/// Step kinds exported per model.
+pub const STEP_KINDS: [&str; 3] = ["train", "eval", "grad"];

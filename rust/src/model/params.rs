@@ -1,0 +1,325 @@
+//! Flat parameter sets: the unit the coordinator moves, aggregates and
+//! persists.
+//!
+//! A [`ParamSet`] is the list of parameter tensors of one model, in
+//! manifest order, stored as flat `Vec<f32>`s.  All aggregation math
+//! (hierarchical local/global averaging, SCAFFOLD control-variate
+//! updates, FedDyn h-terms) happens on these via the axpy-style ops
+//! below — no PJRT round-trip for aggregation, matching the paper where
+//! aggregation is a server/device CPU operation.
+
+use crate::util::codec::{Decoder, Encoder};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    /// Tensor shapes, manifest order.
+    pub shapes: Vec<Vec<usize>>,
+    /// Flat tensor data, parallel to `shapes`.
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    pub fn zeros(shapes: &[Vec<usize>]) -> ParamSet {
+        ParamSet {
+            shapes: shapes.to_vec(),
+            tensors: shapes
+                .iter()
+                .map(|s| vec![0.0; s.iter().product::<usize>().max(1)])
+                .collect(),
+        }
+    }
+
+    pub fn zeros_like(other: &ParamSet) -> ParamSet {
+        ParamSet::zeros(&other.shapes)
+    }
+
+    /// He-normal init matching `ModelSpec.init` semantics on the Python
+    /// side (weights ~ N(0, 2/fan_in), 1-d tensors zero).  Numerically
+    /// different draws than jax's PRNG — used when Rust owns init; the
+    /// testvec path checks cross-language numerics instead.
+    pub fn init_he(shapes: &[Vec<usize>], seed: u64) -> ParamSet {
+        let root = Rng::new(seed ^ 0x1217_5EED);
+        let tensors = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut rng = root.derive(i as u64);
+                let numel: usize = s.iter().product::<usize>().max(1);
+                if s.len() <= 1 {
+                    vec![0.0; numel]
+                } else {
+                    let fan_in: usize = s[..s.len() - 1].iter().product();
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    (0..numel).map(|_| rng.normal_f32(0.0, std)).collect()
+                }
+            })
+            .collect();
+        ParamSet { shapes: shapes.to_vec(), tensors }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// self += alpha * other   (the aggregation primitive).
+    pub fn add_scaled(&mut self, other: &ParamSet, alpha: f32) {
+        debug_assert_eq!(self.shapes, other.shapes);
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += alpha * y;
+            }
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for t in self.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    /// self - other, returned (client delta Δw).
+    pub fn delta(&self, other: &ParamSet) -> ParamSet {
+        debug_assert_eq!(self.shapes, other.shapes);
+        ParamSet {
+            shapes: self.shapes.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .zip(&other.tensors)
+                .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x - y).collect())
+                .collect(),
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
+            .fold(0.0, f32::max)
+    }
+
+    /// Serialize (state-manager snapshot / transport message payload).
+    pub fn encode(&self, enc: &mut Encoder) {
+        enc.put_u32(self.tensors.len() as u32);
+        for (shape, t) in self.shapes.iter().zip(&self.tensors) {
+            enc.put_u32(shape.len() as u32);
+            for &d in shape {
+                enc.put_u32(d as u32);
+            }
+            enc.put_f32s(t);
+        }
+    }
+
+    pub fn decode(dec: &mut Decoder) -> Result<ParamSet> {
+        let n = dec.u32()? as usize;
+        let mut shapes = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = dec.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(dec.u32()? as usize);
+            }
+            let t = dec.f32s()?;
+            anyhow::ensure!(
+                t.len() == shape.iter().product::<usize>().max(1),
+                "tensor length {} != shape {:?}",
+                t.len(),
+                shape
+            );
+            shapes.push(shape);
+            tensors.push(t);
+        }
+        Ok(ParamSet { shapes, tensors })
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut enc = Encoder::with_capacity(self.size_bytes() + 64);
+        self.encode(&mut enc);
+        enc.finish()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<ParamSet> {
+        ParamSet::decode(&mut Decoder::new(buf))
+    }
+}
+
+/// Weighted running mean over ParamSets — the hierarchical-aggregation
+/// accumulator used identically on devices (local) and server (global),
+/// which is what makes the two-level scheme exactly equal to flat
+/// averaging (§4.2; proven by `aggregation::tests`).
+#[derive(Debug, Clone)]
+pub struct WeightedAccum {
+    pub sum: ParamSet,
+    pub weight: f64,
+}
+
+impl WeightedAccum {
+    pub fn new(shapes: &[Vec<usize>]) -> WeightedAccum {
+        WeightedAccum { sum: ParamSet::zeros(shapes), weight: 0.0 }
+    }
+
+    pub fn add(&mut self, p: &ParamSet, w: f64) {
+        self.sum.add_scaled(p, w as f32);
+        self.weight += w;
+    }
+
+    /// Merge another accumulator (global step of hierarchical agg).
+    pub fn merge(&mut self, other: &WeightedAccum) {
+        self.sum.add_scaled(&other.sum, 1.0);
+        self.weight += other.weight;
+    }
+
+    /// Weighted mean; None if nothing was accumulated.
+    pub fn mean(&self) -> Option<ParamSet> {
+        if self.weight <= 0.0 {
+            return None;
+        }
+        let mut m = self.sum.clone();
+        m.scale((1.0 / self.weight) as f32);
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![4, 3], vec![3], vec![2, 2, 2]]
+    }
+
+    #[test]
+    fn zeros_layout() {
+        let p = ParamSet::zeros(&shapes());
+        assert_eq!(p.n_tensors(), 3);
+        assert_eq!(p.numel(), 12 + 3 + 8);
+        assert_eq!(p.size_bytes(), 4 * 23);
+        assert!(p.tensors.iter().flatten().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let sh = vec![vec![1000, 100], vec![100]];
+        let p = ParamSet::init_he(&sh, 1);
+        // bias tensor zero
+        assert!(p.tensors[1].iter().all(|&x| x == 0.0));
+        // weight std ~ sqrt(2/1000)
+        let w = &p.tensors[0];
+        let mean = w.iter().sum::<f32>() / w.len() as f32;
+        let var = w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32;
+        let want = 2.0 / 1000.0;
+        assert!(mean.abs() < 0.005, "mean={mean}");
+        assert!((var - want).abs() / want < 0.15, "var={var} want={want}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = ParamSet::zeros(&shapes());
+        let mut b = ParamSet::zeros(&shapes());
+        b.tensors[0][0] = 2.0;
+        b.tensors[2][7] = -4.0;
+        a.add_scaled(&b, 0.5);
+        assert_eq!(a.tensors[0][0], 1.0);
+        assert_eq!(a.tensors[2][7], -2.0);
+        a.scale(3.0);
+        assert_eq!(a.tensors[0][0], 3.0);
+    }
+
+    #[test]
+    fn delta_and_norms() {
+        let mut a = ParamSet::zeros(&shapes());
+        a.tensors[0][0] = 3.0;
+        a.tensors[1][1] = 4.0;
+        let b = ParamSet::zeros(&shapes());
+        let d = a.delta(&b);
+        assert_eq!(d.tensors[0][0], 3.0);
+        assert!((d.l2_norm() - 5.0).abs() < 1e-9);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+
+    #[test]
+    fn codec_round_trip() {
+        let p = ParamSet::init_he(&shapes(), 9);
+        let q = ParamSet::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn codec_rejects_corrupt() {
+        let p = ParamSet::init_he(&shapes(), 9);
+        let mut b = p.to_bytes();
+        b.truncate(b.len() - 3);
+        assert!(ParamSet::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn weighted_accum_is_weighted_mean() {
+        let sh = vec![vec![2]];
+        let mk = |v: f32| ParamSet { shapes: sh.clone(), tensors: vec![vec![v, 2.0 * v]] };
+        let mut acc = WeightedAccum::new(&sh);
+        acc.add(&mk(1.0), 1.0);
+        acc.add(&mk(4.0), 3.0);
+        let m = acc.mean().unwrap();
+        // (1*1 + 4*3)/4 = 3.25
+        assert!((m.tensors[0][0] - 3.25).abs() < 1e-6);
+        assert!((m.tensors[0][1] - 6.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accum_merge_equals_flat() {
+        let sh = vec![vec![3]];
+        let mut rng = crate::util::rng::Rng::new(4);
+        let ps: Vec<(ParamSet, f64)> = (0..10)
+            .map(|_| {
+                let t: Vec<f32> = (0..3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                (ParamSet { shapes: sh.clone(), tensors: vec![t] }, rng.range_f64(0.5, 2.0))
+            })
+            .collect();
+        // flat
+        let mut flat = WeightedAccum::new(&sh);
+        for (p, w) in &ps {
+            flat.add(p, *w);
+        }
+        // two-level: 3 "devices"
+        let mut global = WeightedAccum::new(&sh);
+        for chunk in ps.chunks(4) {
+            let mut local = WeightedAccum::new(&sh);
+            for (p, w) in chunk {
+                local.add(p, *w);
+            }
+            global.merge(&local);
+        }
+        let a = flat.mean().unwrap();
+        let b = global.mean().unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn empty_accum_mean_none() {
+        assert!(WeightedAccum::new(&shapes()).mean().is_none());
+    }
+}

@@ -1,0 +1,317 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once per
+//! process, execute from the simulation hot path.
+//!
+//! Wraps the `xla` crate exactly as the smoke-verified reference
+//! (/opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids).
+//!
+//! Threading model: PJRT handles in the `xla` crate are not `Send`, so
+//! each simulated device (worker thread) owns its own [`Runtime`] — which
+//! also mirrors the paper's execution model where every device holds its
+//! own copy of the training executable.
+//!
+//! Hot-path design (§Perf): [`TaskRun`] keeps the model parameters as
+//! PJRT literals across the E·⌈N_m/B⌉ batch steps of one client task,
+//! so per-batch marshalling is only the (x, y) batch literals; the
+//! ParamSet ↔ literal conversion happens once per client task, not once
+//! per batch.
+
+use crate::data::Batch;
+use crate::model::{Dtype, Manifest, ParamSet, TensorDecl};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// A compiled AOT artifact plus its manifest (the marshalling contract).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+/// Outputs of one train-step invocation.
+#[derive(Debug)]
+pub struct TrainOut {
+    pub params: ParamSet,
+    pub loss: f32,
+    pub gsq: f32,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` / `<name>.manifest.txt`.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let hlo = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let man = self.artifact_dir.join(format!("{name}.manifest.txt"));
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("loading HLO {}: {e}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        Ok(Executable { exe, manifest })
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == numel, "f32 literal: {} vs shape {:?}", data.len(), shape);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("create f32 literal: {e}"))
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == numel, "i32 literal: {} vs shape {:?}", data.len(), shape);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("create i32 literal: {e}"))
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn batch_literals(decls: &[&TensorDecl], batch: &Batch) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(decls.len());
+    for d in decls {
+        let lit = match (d.name.as_str(), d.dtype) {
+            ("x", Dtype::F32) => lit_f32(&batch.x_f32, &d.shape)?,
+            ("x", Dtype::I32) => lit_i32(&batch.x_i32, &d.shape)?,
+            ("y", Dtype::I32) => lit_i32(&batch.y, &d.shape)?,
+            _ => bail!("unexpected batch decl {} {:?}", d.name, d.dtype),
+        };
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+fn params_to_literals(p: &ParamSet) -> Result<Vec<xla::Literal>> {
+    p.shapes
+        .iter()
+        .zip(&p.tensors)
+        .map(|(s, t)| lit_f32(t, s))
+        .collect()
+}
+
+fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+}
+
+fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar read: {e}"))
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the 1-tuple root into the
+    /// flat output literals (the AOT path lowers with return_tuple=True).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "{}: {} inputs, manifest wants {}",
+            self.manifest.artifact,
+            inputs.len(),
+            self.manifest.inputs.len()
+        );
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", self.manifest.artifact))?;
+        let mut tuple = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let outs = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e}"))?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.outputs.len(),
+            "{}: {} outputs, manifest wants {}",
+            self.manifest.artifact,
+            outs.len(),
+            self.manifest.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// One eval step: returns (loss, n_correct).
+    pub fn eval(&self, params: &ParamSet, batch: &Batch) -> Result<(f32, f32)> {
+        anyhow::ensure!(self.manifest.kind == "eval");
+        let mut inputs = params_to_literals(params)?;
+        inputs.extend(batch_literals(&self.manifest.batch_decls(), batch)?);
+        let outs = self.execute(&inputs)?;
+        Ok((scalar_of(&outs[0])?, scalar_of(&outs[1])?))
+    }
+
+    /// Full-batch gradient step: returns (grads, loss).
+    pub fn grad(&self, params: &ParamSet, batch: &Batch) -> Result<(ParamSet, f32)> {
+        anyhow::ensure!(self.manifest.kind == "grad");
+        let mut inputs = params_to_literals(params)?;
+        inputs.extend(batch_literals(&self.manifest.batch_decls(), batch)?);
+        let outs = self.execute(&inputs)?;
+        let n = self.manifest.nparams;
+        let shapes = self.manifest.param_shapes();
+        let tensors = outs[..n]
+            .iter()
+            .map(literal_to_vec_f32)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((ParamSet { shapes, tensors }, scalar_of(&outs[n])?))
+    }
+
+    /// Single train step (slow path; [`TaskRun`] is the hot path).
+    pub fn train_once(
+        &self,
+        params: &ParamSet,
+        anchors: &ParamSet,
+        corrs: &ParamSet,
+        batch: &Batch,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TrainOut> {
+        let mut run = TaskRun::start(self, params, anchors, corrs, lr, mu)?;
+        let (loss, gsq) = run.step(batch)?;
+        Ok(TrainOut { params: run.finish()?, loss, gsq })
+    }
+
+    /// Begin a client task (sequential batches over one client's data).
+    pub fn start_task(
+        &self,
+        params: &ParamSet,
+        anchors: &ParamSet,
+        corrs: &ParamSet,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TaskRun<'_>> {
+        TaskRun::start(self, params, anchors, corrs, lr, mu)
+    }
+}
+
+/// In-flight client task: parameters live as PJRT literals between
+/// batch steps (see module docs / §Perf).
+pub struct TaskRun<'e> {
+    exe: &'e Executable,
+    param_lits: Vec<xla::Literal>,
+    anchor_lits: Vec<xla::Literal>,
+    corr_lits: Vec<xla::Literal>,
+    lr: xla::Literal,
+    mu: xla::Literal,
+}
+
+impl<'e> TaskRun<'e> {
+    fn start(
+        exe: &'e Executable,
+        params: &ParamSet,
+        anchors: &ParamSet,
+        corrs: &ParamSet,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TaskRun<'e>> {
+        anyhow::ensure!(exe.manifest.kind == "train", "start_task on non-train artifact");
+        Ok(TaskRun {
+            exe,
+            param_lits: params_to_literals(params)?,
+            anchor_lits: params_to_literals(anchors)?,
+            corr_lits: params_to_literals(corrs)?,
+            lr: lit_scalar(lr),
+            mu: lit_scalar(mu),
+        })
+    }
+
+    /// One batch step; updates the in-flight parameters, returns (loss, gsq).
+    pub fn step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let m = &self.exe.manifest;
+        let n = m.nparams;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(m.inputs.len());
+        inputs.extend(self.param_lits.iter());
+        inputs.extend(self.anchor_lits.iter());
+        inputs.extend(self.corr_lits.iter());
+        let batch_lits = batch_literals(&m.batch_decls(), batch)?;
+        inputs.extend(batch_lits.iter());
+        inputs.push(&self.lr);
+        inputs.push(&self.mu);
+        // Borrow-based execute avoids cloning the big param literals.
+        let bufs = self
+            .exe
+            .exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("train step: {e}"))?;
+        let mut tuple = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch train result: {e}"))?;
+        let mut outs = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose train tuple: {e}"))?;
+        anyhow::ensure!(outs.len() == n + 2, "train outputs {} != {}", outs.len(), n + 2);
+        let gsq = scalar_of(&outs[n + 1])?;
+        let loss = scalar_of(&outs[n])?;
+        outs.truncate(n);
+        self.param_lits = outs; // new params stay as literals — no host decode
+        Ok((loss, gsq))
+    }
+
+    /// Materialize the current parameters back into a ParamSet.
+    pub fn finish(self) -> Result<ParamSet> {
+        let shapes = self.exe.manifest.param_shapes();
+        let tensors = self
+            .param_lits
+            .iter()
+            .map(literal_to_vec_f32)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamSet { shapes, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let data = vec![1.0f32, -2.0, 3.5, 0.0, 7.25, -9.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(literal_to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = lit_scalar(4.25);
+        assert_eq!(scalar_of(&lit).unwrap(), 4.25);
+    }
+}

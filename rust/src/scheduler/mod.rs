@@ -1,0 +1,151 @@
+//! Heterogeneity-aware task scheduling (paper §4.3–§4.4, Alg. 3).
+//!
+//! - [`workload`] — the per-device workload model T_{m,k} = N_m·t_k + b_k
+//!   (Eq. 2) fitted by OLS over recorded task runtimes, with either full
+//!   history or the Time-Window restriction (§4.4 "Tackling Dynamic
+//!   Hardware Environments").
+//! - [`greedy`] — Alg. 3's LPT-style min-max assignment: sort clients by
+//!   size descending, place each on the device that minimizes the
+//!   resulting makespan (Eq. 3–4).
+//!
+//! The [`Scheduler`] facade ties both to the config's
+//! [`SchedulerKind`](crate::config::SchedulerKind) and owns the history.
+
+pub mod greedy;
+pub mod workload;
+
+pub use greedy::{greedy_assign, uniform_assign};
+pub use workload::{DeviceEstimate, History, TaskRecord};
+
+use crate::config::SchedulerKind;
+
+/// Outcome of scheduling one round.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Per-device client-index lists: `assignment[k]` = clients for device k.
+    pub assignment: Vec<Vec<usize>>,
+    /// Predicted per-device busy time (seconds) under the fitted model.
+    pub predicted: Vec<f64>,
+    /// Wallclock cost of estimation + assignment (Fig. 8's metric).
+    pub overhead_secs: f64,
+    /// Whether the fitted model (vs the warm-up uniform split) was used.
+    pub used_model: bool,
+}
+
+/// Stateful scheduler: owns the runtime history and applies Alg. 3.
+pub struct Scheduler {
+    pub kind: SchedulerKind,
+    pub warmup_rounds: usize,
+    pub history: History,
+    n_devices: usize,
+}
+
+impl Scheduler {
+    pub fn new(kind: SchedulerKind, warmup_rounds: usize, n_devices: usize) -> Scheduler {
+        Scheduler { kind, warmup_rounds, history: History::new(), n_devices }
+    }
+
+    /// Record a finished task (device k ran `n_eff` effective samples in
+    /// `secs` at round r) — what devices piggyback on their result
+    /// messages (§4.3 Estimation).
+    pub fn record(&mut self, rec: TaskRecord) {
+        self.history.push(rec);
+    }
+
+    /// Schedule `clients` = (client id, effective samples N_m·E) for round `r`.
+    pub fn schedule(&mut self, round: usize, clients: &[(usize, usize)]) -> Schedule {
+        let sw = crate::util::timer::Stopwatch::start();
+        let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
+        let in_warmup = round < self.warmup_rounds;
+        if uniform_only || in_warmup {
+            let assignment = uniform_assign(clients, self.n_devices);
+            let predicted = vec![0.0; self.n_devices];
+            return Schedule {
+                assignment,
+                predicted,
+                overhead_secs: sw.elapsed_secs(),
+                used_model: false,
+            };
+        }
+        let window = match self.kind {
+            SchedulerKind::TimeWindow(t) => Some(t),
+            _ => None,
+        };
+        let estimates = self.history.estimate(self.n_devices, round, window);
+        let (assignment, predicted) = greedy_assign(clients, &estimates);
+        Schedule {
+            assignment,
+            predicted,
+            overhead_secs: sw.elapsed_secs(),
+            used_model: true,
+        }
+    }
+
+    /// Current per-device estimates (Fig. 6 visualization).
+    pub fn estimates(&self, round: usize) -> Vec<DeviceEstimate> {
+        let window = match self.kind {
+            SchedulerKind::TimeWindow(t) => Some(t),
+            _ => None,
+        };
+        self.history.estimate(self.n_devices, round, window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clients(sizes: &[usize]) -> Vec<(usize, usize)> {
+        sizes.iter().cloned().enumerate().collect()
+    }
+
+    #[test]
+    fn warmup_uses_uniform() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 2, 4);
+        let sch = s.schedule(0, &clients(&[50, 40, 30, 20, 10, 5, 4, 3]));
+        assert!(!sch.used_model);
+        assert_eq!(sch.assignment.len(), 4);
+        let total: usize = sch.assignment.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn after_warmup_uses_model() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 1, 2);
+        // Seed history: device 0 twice as fast.
+        for r in 0..3 {
+            for (n, d, t) in [(100, 0, 1.0), (200, 0, 2.0), (100, 1, 2.0), (200, 1, 4.0)] {
+                s.record(TaskRecord { round: r, device: d, n_samples: n, secs: t });
+            }
+        }
+        let sch = s.schedule(3, &clients(&[100, 100, 100]));
+        assert!(sch.used_model);
+        // Fast device should get more work.
+        assert!(sch.assignment[0].len() >= sch.assignment[1].len());
+        let total: usize = sch.assignment.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn uniform_kind_never_models() {
+        let mut s = Scheduler::new(SchedulerKind::Uniform, 0, 2);
+        for r in 0..5 {
+            s.record(TaskRecord { round: r, device: 0, n_samples: 10, secs: 1.0 });
+        }
+        assert!(!s.schedule(10, &clients(&[1, 2, 3])).used_model);
+    }
+
+    #[test]
+    fn overhead_is_measured() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 8);
+        for r in 0..3 {
+            for k in 0..8 {
+                s.record(TaskRecord { round: r, device: k, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: k, n_samples: 200, secs: 1.9 });
+            }
+        }
+        let sch = s.schedule(5, &clients(&(1..200).collect::<Vec<_>>()));
+        assert!(sch.overhead_secs >= 0.0);
+        assert!(sch.used_model);
+    }
+}

@@ -1,0 +1,232 @@
+//! The workload model (Eq. 1–2) and its estimation from history (§4.3).
+//!
+//! Each finished task contributes one (N_m, T̂) point for its device;
+//! the server fits per-device OLS `T = t_k·N + b_k`.  Time-Window
+//! estimation (§4.4) restricts the fit to records from the last τ
+//! rounds, which is what keeps the model honest under the cos-law
+//! dynamic environments (Fig. 11).
+
+use crate::util::stats::linear_regression;
+
+/// One recorded task runtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskRecord {
+    pub round: usize,
+    pub device: usize,
+    /// Effective samples processed: N_m · local_epochs.
+    pub n_samples: usize,
+    /// Measured wallclock seconds (including any heterogeneity sleep —
+    /// the server only ever sees the total, as in the paper).
+    pub secs: f64,
+}
+
+/// Fitted per-device workload model.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceEstimate {
+    /// Seconds per effective sample (t_k in Eq. 2).
+    pub t_sample: f64,
+    /// Fixed per-task seconds (b_k in Eq. 2).
+    pub b: f64,
+    /// Fit quality (1.0 = perfect).
+    pub r2: f64,
+    /// Points used.
+    pub n_points: usize,
+}
+
+impl DeviceEstimate {
+    /// Predicted task time for `n` effective samples (Eq. 2).
+    pub fn predict(&self, n: usize) -> f64 {
+        (self.t_sample * n as f64 + self.b).max(0.0)
+    }
+}
+
+/// Append-only runtime history with windowed per-device OLS.
+#[derive(Debug, Default)]
+pub struct History {
+    records: Vec<TaskRecord>,
+}
+
+impl History {
+    pub fn new() -> History {
+        History::default()
+    }
+
+    pub fn push(&mut self, rec: TaskRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
+    /// Drop records older than `before_round` (bounds memory on long
+    /// runs; Time-Window users call this with r − τ).
+    pub fn prune(&mut self, before_round: usize) {
+        self.records.retain(|r| r.round >= before_round);
+    }
+
+    /// Fit Eq. 2 for each of `k` devices at scheduling round `round`,
+    /// using only records within `window` rounds when given
+    /// (`Estimate_Workload` in Alg. 3).
+    ///
+    /// Fallback ladder when a device's design is unfittable:
+    /// 1. fewer than 2 points or constant-N → ratio estimator
+    ///    t = mean(T)/mean(N), b = 0;
+    /// 2. no points at all → global mean ratio across devices;
+    /// 3. empty history → t = 1, b = 0 (arbitrary but uniform, so the
+    ///    greedy pass degenerates to balanced-size assignment).
+    pub fn estimate(
+        &self,
+        k: usize,
+        round: usize,
+        window: Option<usize>,
+    ) -> Vec<DeviceEstimate> {
+        let lo = window.map(|w| round.saturating_sub(w)).unwrap_or(0);
+        let mut xs: Vec<Vec<f64>> = vec![Vec::new(); k];
+        let mut ys: Vec<Vec<f64>> = vec![Vec::new(); k];
+        let mut all_n = 0.0;
+        let mut all_t = 0.0;
+        for r in &self.records {
+            if r.round < lo || r.device >= k {
+                continue;
+            }
+            xs[r.device].push(r.n_samples as f64);
+            ys[r.device].push(r.secs);
+            all_n += r.n_samples as f64;
+            all_t += r.secs;
+        }
+        let global_ratio = if all_n > 0.0 { all_t / all_n } else { 1.0 };
+        (0..k)
+            .map(|d| {
+                if let Some(fit) = linear_regression(&xs[d], &ys[d]) {
+                    // Negative slope or intercept can appear under heavy
+                    // noise; clamp to the physical region.
+                    let t_sample = fit.slope.max(1e-9);
+                    let b = fit.intercept.max(0.0);
+                    return DeviceEstimate { t_sample, b, r2: fit.r2, n_points: fit.n };
+                }
+                if !xs[d].is_empty() {
+                    let t = ys[d].iter().sum::<f64>() / xs[d].iter().sum::<f64>().max(1e-9);
+                    return DeviceEstimate {
+                        t_sample: t.max(1e-9),
+                        b: 0.0,
+                        r2: 0.0,
+                        n_points: xs[d].len(),
+                    };
+                }
+                DeviceEstimate { t_sample: global_ratio.max(1e-9), b: 0.0, r2: 0.0, n_points: 0 }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, device: usize, n: usize, secs: f64) -> TaskRecord {
+        TaskRecord { round, device, n_samples: n, secs }
+    }
+
+    #[test]
+    fn recovers_exact_model() {
+        let mut h = History::new();
+        // device 0: T = 0.01 N + 0.5 ; device 1: T = 0.02 N + 1.0
+        for &n in &[50, 100, 150, 200] {
+            h.push(rec(0, 0, n, 0.01 * n as f64 + 0.5));
+            h.push(rec(0, 1, n, 0.02 * n as f64 + 1.0));
+        }
+        let est = h.estimate(2, 1, None);
+        assert!((est[0].t_sample - 0.01).abs() < 1e-9);
+        assert!((est[0].b - 0.5).abs() < 1e-9);
+        assert!((est[1].t_sample - 0.02).abs() < 1e-9);
+        assert!((est[1].b - 1.0).abs() < 1e-9);
+        assert!((est[0].predict(300) - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_discards_stale_regime() {
+        let mut h = History::new();
+        // Rounds 0-9: slow regime (t=0.1); rounds 10-19: fast (t=0.01).
+        for r in 0..10 {
+            for &n in &[50, 150] {
+                h.push(rec(r, 0, n, 0.1 * n as f64));
+            }
+        }
+        for r in 10..20 {
+            for &n in &[50, 150] {
+                h.push(rec(r, 0, n, 0.01 * n as f64));
+            }
+        }
+        let full = h.estimate(1, 20, None)[0];
+        let windowed = h.estimate(1, 20, Some(5))[0];
+        // Full history blends regimes; window nails the current one.
+        assert!((windowed.t_sample - 0.01).abs() < 1e-6);
+        assert!(full.t_sample > 0.03, "full={}", full.t_sample);
+    }
+
+    #[test]
+    fn single_point_ratio_fallback() {
+        let mut h = History::new();
+        h.push(rec(0, 0, 100, 2.0));
+        let est = h.estimate(1, 1, None);
+        assert!((est[0].t_sample - 0.02).abs() < 1e-9);
+        assert_eq!(est[0].b, 0.0);
+    }
+
+    #[test]
+    fn constant_n_ratio_fallback() {
+        let mut h = History::new();
+        h.push(rec(0, 0, 100, 2.0));
+        h.push(rec(1, 0, 100, 2.2));
+        let est = h.estimate(1, 2, None);
+        assert!(est[0].t_sample > 0.0);
+    }
+
+    #[test]
+    fn unseen_device_gets_global_ratio() {
+        let mut h = History::new();
+        h.push(rec(0, 0, 100, 1.0));
+        h.push(rec(0, 0, 200, 2.0));
+        let est = h.estimate(2, 1, None);
+        assert!((est[1].t_sample - 0.01).abs() < 1e-6);
+        assert_eq!(est[1].n_points, 0);
+    }
+
+    #[test]
+    fn empty_history_uniform() {
+        let h = History::new();
+        let est = h.estimate(3, 0, None);
+        assert!(est.iter().all(|e| e.t_sample == est[0].t_sample));
+    }
+
+    #[test]
+    fn prune_drops_old() {
+        let mut h = History::new();
+        for r in 0..10 {
+            h.push(rec(r, 0, 10, 1.0));
+        }
+        h.prune(7);
+        assert_eq!(h.len(), 3);
+        assert!(h.records().iter().all(|r| r.round >= 7));
+    }
+
+    #[test]
+    fn negative_fit_clamped() {
+        let mut h = History::new();
+        // Pathological: time decreasing in N.
+        h.push(rec(0, 0, 100, 5.0));
+        h.push(rec(0, 0, 200, 1.0));
+        let est = h.estimate(1, 1, None);
+        assert!(est[0].t_sample > 0.0);
+        assert!(est[0].b >= 0.0);
+    }
+}

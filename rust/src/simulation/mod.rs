@@ -1,0 +1,490 @@
+//! Virtual-time (discrete-event) engine for the timing experiments.
+//!
+//! The paper's scale/timing figures (Fig. 5, 7, 8, 9, 10, 11) sweep
+//! configurations — 1000 concurrent clients, 32 devices, three cluster
+//! profiles, five schemes — that would take days of wallclock if every
+//! point ran real training.  The engine executes the *same scheduler,
+//! aggregation-size and heterogeneity code* as the real-compute path,
+//! but advances a virtual clock with modeled task durations
+//! (Eq. 2 × the Appendix-A slowdown laws) instead of running PJRT, plus
+//! multiplicative measurement noise.  Workload constants are calibrated
+//! per paper workload in [`crate::cluster::WorkloadCost`]; the
+//! communication model is trips·latency + bytes/bandwidth (Table 1's
+//! columns, measured per scheme).
+//!
+//! Scheme timelines reproduce Fig. 2:
+//! - **SP** — one device runs all M_p tasks back-to-back, no comm.
+//! - **RW/SD Dist.** — one task per device in parallel; round time =
+//!   slowest client + per-client comm (M_p trips).
+//! - **FA Dist.** — K devices pull tasks greedily (event loop); params
+//!   move per task.
+//! - **Parrot** — Alg. 3 schedules task sets; one down + one up message
+//!   per device; devices locally aggregate (upload = s_a·K + s_e·M_p).
+
+use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::Partition;
+use crate::scheduler::{Scheduler, TaskRecord};
+use crate::util::rng::Rng;
+
+/// Byte sizes of the communicated quantities (paper model sizes, so the
+/// comm:compute ratio matches the evaluated systems).
+#[derive(Debug, Clone, Copy)]
+pub struct CommModel {
+    /// Averaged-params bytes (s_a): full model, e.g. 44 MB for ResNet-18.
+    pub s_a: u64,
+    /// Special-params bytes per client (s_e), 0 for most algorithms.
+    pub s_e: u64,
+}
+
+impl CommModel {
+    pub fn femnist() -> CommModel {
+        CommModel { s_a: 11_000_000 * 4, s_e: 0 } // ResNet-18, 11M params
+    }
+
+    pub fn imagenet() -> CommModel {
+        CommModel { s_a: 23_000_000 * 4, s_e: 0 } // ResNet-50
+    }
+
+    pub fn reddit() -> CommModel {
+        CommModel { s_a: 11_000_000 * 4, s_e: 0 } // Albert-base
+    }
+
+    pub fn by_name(name: &str) -> CommModel {
+        match name {
+            "imagenet" | "cnn" => CommModel::imagenet(),
+            "reddit" | "tinylm" => CommModel::reddit(),
+            _ => CommModel::femnist(),
+        }
+    }
+}
+
+/// One simulated round's outcome.
+#[derive(Debug, Clone)]
+pub struct VRound {
+    pub round: usize,
+    /// Virtual seconds for the whole round (compute ∥ + comm).
+    pub total_secs: f64,
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub bytes: u64,
+    pub trips: u64,
+    /// Scheduler wallclock overhead (real, not virtual — Fig. 8).
+    pub sched_secs: f64,
+    /// Per-device busy virtual seconds.
+    pub device_busy: Vec<f64>,
+    /// Mean absolute relative error of the workload prediction vs the
+    /// realized task times (Fig. 6 / Fig. 11a).
+    pub est_err: Option<f64>,
+}
+
+impl VRound {
+    /// Device utilization: busy / (K · makespan of compute phase).
+    pub fn utilization(&self) -> f64 {
+        let k = self.device_busy.len().max(1) as f64;
+        let makespan = self
+            .device_busy
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+            .max(1e-12);
+        self.device_busy.iter().sum::<f64>() / (k * makespan)
+    }
+}
+
+/// The virtual simulator: one scheme, one cluster, one workload.
+pub struct VirtualSim {
+    pub scheme: Scheme,
+    pub cluster: ClusterProfile,
+    pub cost: WorkloadCost,
+    pub comm: CommModel,
+    pub scheduler: Scheduler,
+    pub partition: Partition,
+    pub local_epochs: usize,
+    /// Multiplicative measurement noise σ (0 = deterministic).
+    pub noise: f64,
+    rng: Rng,
+}
+
+impl VirtualSim {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        scheme: Scheme,
+        cluster: ClusterProfile,
+        cost: WorkloadCost,
+        comm: CommModel,
+        sched: SchedulerKind,
+        warmup: usize,
+        partition: Partition,
+        local_epochs: usize,
+        seed: u64,
+    ) -> VirtualSim {
+        let k = cluster.n_devices();
+        VirtualSim {
+            scheme,
+            cluster,
+            cost,
+            comm,
+            scheduler: Scheduler::new(sched, warmup, k),
+            partition,
+            local_epochs,
+            noise: 0.05,
+            rng: Rng::new(seed ^ 0x51D_CAFE),
+        }
+    }
+
+    /// Realized (noisy) duration of one task on device k at round r.
+    fn realize(&mut self, k: usize, r: usize, n_eff: usize) -> f64 {
+        let base = self.cluster.task_time(&self.cost, k, r, n_eff, 1);
+        let noise = 1.0 + self.noise * self.rng.normal();
+        base * noise.max(0.2)
+    }
+
+    /// Simulate one round for the selected clients; feeds realized times
+    /// back into the scheduler history exactly like the real path.
+    pub fn round(&mut self, r: usize, selected: &[usize]) -> VRound {
+        let k = self.cluster.n_devices();
+        let sizes: Vec<(usize, usize)> = selected
+            .iter()
+            .map(|&c| (c, self.partition.sizes[c] * self.local_epochs))
+            .collect();
+        match self.scheme {
+            Scheme::SP => self.round_sp(r, &sizes),
+            Scheme::RwDist | Scheme::SdDist => self.round_sd(r, &sizes),
+            Scheme::FaDist => self.round_fa(r, &sizes, k),
+            Scheme::Parrot => self.round_parrot(r, &sizes, k),
+        }
+    }
+
+    fn round_sp(&mut self, r: usize, sizes: &[(usize, usize)]) -> VRound {
+        let mut busy = 0.0;
+        for &(_, n) in sizes {
+            busy += self.realize(0, r, n);
+        }
+        VRound {
+            round: r,
+            total_secs: busy,
+            compute_secs: busy,
+            comm_secs: 0.0,
+            bytes: 0,
+            trips: 0,
+            sched_secs: 0.0,
+            device_busy: vec![busy],
+            est_err: None,
+        }
+    }
+
+    /// RW/SD: each selected client on its own executor, fully parallel;
+    /// server talks to each of the M_p executors (down + up).
+    fn round_sd(&mut self, r: usize, sizes: &[(usize, usize)]) -> VRound {
+        let k_model = self.cluster.n_devices();
+        let mut slowest = 0.0f64;
+        let mut busy_total = 0.0;
+        for (i, &(_, n)) in sizes.iter().enumerate() {
+            // Executors cycle through the cluster's device models so
+            // heterogeneity still matters when simulated on cluster C.
+            let t = self.realize(i % k_model, r, n);
+            slowest = slowest.max(t);
+            busy_total += t;
+        }
+        let m_p = sizes.len();
+        let per_client = self.comm.s_a + self.comm.s_e;
+        let bytes = 2 * per_client * m_p as u64;
+        // Down broadcasts overlap; uploads serialize into the server NIC
+        // (the paper's trips argument): latency per trip + payload time.
+        let comm = self.cluster.comm_time(per_client as usize)
+            + m_p as f64 * self.cluster.latency
+            + (per_client * m_p as u64) as f64 / self.cluster.bandwidth;
+        VRound {
+            round: r,
+            total_secs: slowest + comm,
+            compute_secs: slowest,
+            comm_secs: comm,
+            bytes,
+            trips: 2 * m_p as u64,
+            sched_secs: 0.0,
+            device_busy: vec![busy_total / m_p.max(1) as f64; m_p.min(1).max(1)],
+            est_err: None,
+        }
+    }
+
+    /// FA: greedy pull, params per task (FedScale/Flower timeline).
+    fn round_fa(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> VRound {
+        // Event loop: device free-times; next task goes to the earliest
+        // free device (server reassigns on completion).
+        let mut free = vec![0.0f64; k];
+        let mut busy = vec![0.0f64; k];
+        let per_task_comm =
+            2.0 * self.cluster.comm_time((self.comm.s_a + self.comm.s_e) as usize);
+        let mut queue: Vec<&(usize, usize)> = sizes.iter().collect();
+        queue.sort_by(|a, b| b.1.cmp(&a.1)); // FedScale: biggest first
+        for &&(_, n) in &queue {
+            let dev = (0..k)
+                .min_by(|&a, &b| free[a].partial_cmp(&free[b]).unwrap())
+                .unwrap();
+            let t = self.realize(dev, r, n) + per_task_comm;
+            free[dev] += t;
+            busy[dev] += t;
+        }
+        let makespan = free.iter().cloned().fold(0.0, f64::max);
+        let m_p = sizes.len() as u64;
+        VRound {
+            round: r,
+            total_secs: makespan,
+            compute_secs: makespan - per_task_comm,
+            comm_secs: per_task_comm * m_p as f64,
+            bytes: 2 * (self.comm.s_a + self.comm.s_e) * m_p,
+            trips: 2 * m_p,
+            sched_secs: 0.0,
+            device_busy: busy,
+            est_err: None,
+        }
+    }
+
+    /// Parrot: Alg. 3 schedule, hierarchical aggregation comm model.
+    fn round_parrot(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> VRound {
+        let schedule = self.scheduler.schedule(r, sizes);
+        let size_of: std::collections::HashMap<usize, usize> =
+            sizes.iter().cloned().collect();
+        let mut busy = vec![0.0f64; k];
+        let mut realized: Vec<(usize, f64, f64)> = Vec::new(); // (dev, predicted, actual)
+        for (dev, clients) in schedule.assignment.iter().enumerate() {
+            for &c in clients {
+                let n = size_of[&c];
+                let t = self.realize(dev, r, n);
+                busy[dev] += t;
+                // Feed history back (devices piggyback records).
+                self.scheduler.record(TaskRecord {
+                    round: r,
+                    device: dev,
+                    n_samples: n,
+                    secs: t,
+                });
+                if schedule.used_model {
+                    let predicted = self.scheduler.estimates(r)[dev].predict(n);
+                    realized.push((dev, predicted, t));
+                }
+            }
+        }
+        let est_err = if realized.is_empty() {
+            None
+        } else {
+            let (pred, act): (Vec<f64>, Vec<f64>) =
+                realized.iter().map(|&(_, p, a)| (p, a)).unzip();
+            Some(crate::util::stats::mape(&act, &pred))
+        };
+        let makespan = busy.iter().cloned().fold(0.0, f64::max);
+        // Comm: broadcast s_a down per device (+ assignments, negligible),
+        // one aggregated upload s_a per device, plus s_e per client.
+        let m_p = sizes.len() as u64;
+        let bytes = 2 * self.comm.s_a * k as u64 + self.comm.s_e * m_p;
+        let comm = self.cluster.comm_time(self.comm.s_a as usize) * 2.0
+            + (k as f64 - 1.0) * self.cluster.latency
+            + (self.comm.s_e * m_p) as f64 / self.cluster.bandwidth;
+        VRound {
+            round: r,
+            total_secs: makespan + comm,
+            compute_secs: makespan,
+            comm_secs: comm,
+            bytes,
+            trips: 2 * k as u64,
+            sched_secs: schedule.overhead_secs,
+            device_busy: busy,
+            est_err,
+        }
+    }
+}
+
+/// Run `rounds` rounds selecting `m_p` clients uniformly per round;
+/// returns per-round outcomes.  The shared driver for every timing
+/// figure harness.
+#[allow(clippy::too_many_arguments)]
+pub fn run_virtual(sim: &mut VirtualSim, rounds: usize, m_p: usize, seed: u64) -> Vec<VRound> {
+    let selector = Rng::new(seed ^ 0xF1A_C0DE);
+    let m = sim.partition.n_clients();
+    (0..rounds)
+        .map(|r| {
+            let mut rng = selector.derive(r as u64);
+            let selected = rng.choose(m, m_p.min(m));
+            sim.round(r, &selected)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PartitionKind;
+
+    fn mk(scheme: Scheme, k: usize, sched: SchedulerKind) -> VirtualSim {
+        let partition =
+            Partition::generate(PartitionKind::Natural, 200, 62, 100, 7);
+        VirtualSim::new(
+            scheme,
+            ClusterProfile::homogeneous(k),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            partition,
+            1,
+            3,
+        )
+    }
+
+    #[test]
+    fn sp_is_serial_sum() {
+        let mut sim = mk(Scheme::SP, 1, SchedulerKind::Uniform);
+        sim.noise = 0.0;
+        let rounds = run_virtual(&mut sim, 3, 50, 1);
+        for r in &rounds {
+            assert_eq!(r.trips, 0);
+            assert_eq!(r.bytes, 0);
+            assert!(r.total_secs > 40.0 * 0.15, "50 tasks × b at least");
+        }
+    }
+
+    #[test]
+    fn parrot_beats_fa_and_sd_on_time() {
+        // The headline Fig. 5 shape at one configuration.
+        let (mut fa, mut sd, mut parrot) = (
+            mk(Scheme::FaDist, 8, SchedulerKind::Uniform),
+            mk(Scheme::SdDist, 8, SchedulerKind::Uniform),
+            mk(Scheme::Parrot, 8, SchedulerKind::Greedy),
+        );
+        let t = |sim: &mut VirtualSim| {
+            let rs = run_virtual(sim, 8, 100, 1);
+            rs[3..].iter().map(|r| r.total_secs).sum::<f64>() / 5.0
+        };
+        let (tf, ts, tp) = (t(&mut fa), t(&mut sd), t(&mut parrot));
+        assert!(tp < tf, "parrot {tp} !< fa {tf}");
+        // SD has M_p=100 parallel devices, so pure compute is fast — but
+        // Parrot on only 8 devices must still be within a small factor,
+        // and must crush it on bytes.
+        let rb = run_virtual(&mut parrot, 1, 100, 2)[0].bytes;
+        let sb = run_virtual(&mut sd, 1, 100, 2)[0].bytes;
+        assert!(rb * 5 < sb, "parrot bytes {rb} vs sd {sb}");
+        let _ = ts;
+    }
+
+    #[test]
+    fn parrot_comm_is_o_k() {
+        let mut p = mk(Scheme::Parrot, 8, SchedulerKind::Greedy);
+        let r = run_virtual(&mut p, 1, 100, 1);
+        assert_eq!(r[0].trips, 16); // 2K
+        assert_eq!(r[0].bytes, 2 * CommModel::femnist().s_a * 8);
+        let mut fa = mk(Scheme::FaDist, 8, SchedulerKind::Uniform);
+        let rf = run_virtual(&mut fa, 1, 100, 1);
+        assert_eq!(rf[0].trips, 200); // 2·M_p
+    }
+
+    #[test]
+    fn scheduling_beats_uniform_under_heterogeneity() {
+        let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 9);
+        let mut with = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Greedy,
+            2,
+            partition.clone(),
+            1,
+            5,
+        );
+        let mut without = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Uniform,
+            2,
+            partition,
+            1,
+            5,
+        );
+        let mean = |rs: &[VRound]| {
+            rs.iter().skip(3).map(|r| r.total_secs).sum::<f64>() / (rs.len() - 3) as f64
+        };
+        let rw = run_virtual(&mut with, 12, 100, 4);
+        let ro = run_virtual(&mut without, 12, 100, 4);
+        assert!(
+            mean(&rw) < 0.8 * mean(&ro),
+            "sched {:.2} !< 0.8 × unsched {:.2}",
+            mean(&rw),
+            mean(&ro)
+        );
+    }
+
+    #[test]
+    fn estimation_error_small_when_stable() {
+        let mut sim = mk(Scheme::Parrot, 4, SchedulerKind::Greedy);
+        let rs = run_virtual(&mut sim, 10, 60, 6);
+        let last = rs.last().unwrap();
+        let err = last.est_err.expect("model in use by round 10");
+        assert!(err < 0.15, "estimation error {err}");
+    }
+
+    #[test]
+    fn time_window_wins_in_dynamic_env() {
+        // Fig. 11: under cos-dynamics, windowed estimation must beat
+        // full-history estimation on round time.
+        let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 11);
+        let mk_dyn = |sched: SchedulerKind| {
+            VirtualSim::new(
+                Scheme::Parrot,
+                ClusterProfile::dynamic(8, 25.0),
+                WorkloadCost::femnist(),
+                CommModel::femnist(),
+                sched,
+                2,
+                partition.clone(),
+                1,
+                13,
+            )
+        };
+        let mean_tail = |rs: &[VRound]| {
+            rs.iter().skip(20).map(|r| r.total_secs).sum::<f64>() / (rs.len() - 20) as f64
+        };
+        let mut full = mk_dyn(SchedulerKind::Greedy);
+        let mut windowed = mk_dyn(SchedulerKind::TimeWindow(3));
+        let rf = run_virtual(&mut full, 60, 100, 17);
+        let rw = run_virtual(&mut windowed, 60, 100, 17);
+        assert!(
+            mean_tail(&rw) < mean_tail(&rf) * 1.02,
+            "window {:.2} !< full {:.2}",
+            mean_tail(&rw),
+            mean_tail(&rf)
+        );
+        // and its estimation error must be lower
+        let err = |rs: &[VRound]| {
+            let v: Vec<f64> = rs.iter().skip(20).filter_map(|r| r.est_err).collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(err(&rw) < err(&rf), "window err {} !< full err {}", err(&rw), err(&rf));
+    }
+
+    #[test]
+    fn more_devices_scale_down_round_time() {
+        // Fig. 7: near-linear scaling.
+        let t_at = |k: usize| {
+            let mut sim = mk(Scheme::Parrot, k, SchedulerKind::Greedy);
+            let rs = run_virtual(&mut sim, 8, 100, 3);
+            rs.iter().skip(3).map(|r| r.total_secs).sum::<f64>() / 5.0
+        };
+        let (t4, t16) = (t_at(4), t_at(16));
+        assert!(
+            t16 < t4 / 2.5,
+            "16 devices should be ≳2.5x faster than 4: {t4:.2} vs {t16:.2}"
+        );
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut sim = mk(Scheme::Parrot, 8, SchedulerKind::Greedy);
+        for r in run_virtual(&mut sim, 6, 100, 9) {
+            let u = r.utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Client state manager (paper §3.4): disk-backed storage for stateful
+//! FL algorithms (SCAFFOLD control variates, FedDyn h-terms, ...).
+//!
+//! The memory math of Table 1 depends on exactly this component: with M
+//! clients of state size s_d, holding everything in RAM costs O(s_d·M);
+//! the manager keeps at most a configurable budget in an LRU cache
+//! (O(s_d·K) in practice — each device touches one client at a time) and
+//! spills the rest to disk (O(s_d·M) disk, the irreducible term).
+//!
+//! Writes are atomic (tmp + rename) so a crashed simulation never leaves
+//! a torn snapshot.  All traffic is counted — the Table-1/Table-3
+//! harnesses read these counters.
+
+use crate::model::ParamSet;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Traffic counters (read by the complexity harnesses).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StateMetrics {
+    pub loads: u64,
+    pub saves: u64,
+    pub cache_hits: u64,
+    pub disk_reads: u64,
+    pub disk_writes: u64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    /// High-water mark of cache residency in bytes (the O(s_d·K) term).
+    pub peak_cache_bytes: u64,
+}
+
+/// Disk-backed client-state store with a bounded LRU cache.
+pub struct StateManager {
+    dir: PathBuf,
+    cache_budget: usize,
+    cache: HashMap<u64, (Vec<u8>, u64)>, // id -> (bytes, last-use tick)
+    cache_bytes: usize,
+    tick: u64,
+    pub metrics: StateMetrics,
+}
+
+impl StateManager {
+    /// `cache_budget` caps in-memory state bytes; 0 disables caching
+    /// (every access hits disk — the SP-with-state-manager column).
+    pub fn new(dir: impl AsRef<Path>, cache_budget: usize) -> Result<StateManager> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        Ok(StateManager {
+            dir,
+            cache_budget,
+            cache: HashMap::new(),
+            cache_bytes: 0,
+            tick: 0,
+            metrics: StateMetrics::default(),
+        })
+    }
+
+    fn path(&self, client: u64) -> PathBuf {
+        self.dir.join(format!("client_{client}.state"))
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn cache_insert(&mut self, client: u64, bytes: Vec<u8>) {
+        if self.cache_budget == 0 {
+            return;
+        }
+        let sz = bytes.len();
+        // Evict least-recently-used until it fits (or cache empty).
+        while self.cache_bytes + sz > self.cache_budget && !self.cache.is_empty() {
+            let (&old, _) = self
+                .cache
+                .iter()
+                .min_by_key(|(_, (_, tick))| *tick)
+                .expect("non-empty cache");
+            if let Some((b, _)) = self.cache.remove(&old) {
+                self.cache_bytes -= b.len();
+            }
+        }
+        if sz <= self.cache_budget {
+            let t = self.touch();
+            if let Some((old, _)) = self.cache.insert(client, (bytes, t)) {
+                self.cache_bytes -= old.len();
+            }
+            self.cache_bytes += sz;
+            self.metrics.peak_cache_bytes =
+                self.metrics.peak_cache_bytes.max(self.cache_bytes as u64);
+        }
+    }
+
+    /// `Save_State(m, S)` (Alg. 2): persist to disk, refresh cache.
+    pub fn save(&mut self, client: u64, bytes: &[u8]) -> Result<()> {
+        self.metrics.saves += 1;
+        let tmp = self.dir.join(format!(".client_{client}.tmp"));
+        std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path(client)).context("atomic rename")?;
+        self.metrics.disk_writes += 1;
+        self.metrics.bytes_written += bytes.len() as u64;
+        self.cache_insert(client, bytes.to_vec());
+        Ok(())
+    }
+
+    /// `Load_State(m)` (Alg. 2): cache first, then disk; None when the
+    /// client has no state yet (first round it is selected).
+    pub fn load(&mut self, client: u64) -> Result<Option<Vec<u8>>> {
+        self.metrics.loads += 1;
+        if let Some((bytes, _)) = self.cache.get(&client) {
+            let out = bytes.clone();
+            self.metrics.cache_hits += 1;
+            let t = self.touch();
+            self.cache.get_mut(&client).unwrap().1 = t;
+            return Ok(Some(out));
+        }
+        let p = self.path(client);
+        if !p.exists() {
+            return Ok(None);
+        }
+        let bytes = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+        self.metrics.disk_reads += 1;
+        self.metrics.bytes_read += bytes.len() as u64;
+        self.cache_insert(client, bytes.clone());
+        Ok(Some(bytes))
+    }
+
+    /// Typed convenience: ParamSet state (covers SCAFFOLD c_i / FedDyn h_i).
+    pub fn save_params(&mut self, client: u64, p: &ParamSet) -> Result<()> {
+        self.save(client, &p.to_bytes())
+    }
+
+    pub fn load_params(&mut self, client: u64) -> Result<Option<ParamSet>> {
+        match self.load(client)? {
+            None => Ok(None),
+            Some(b) => Ok(Some(ParamSet::from_bytes(&b)?)),
+        }
+    }
+
+    /// Bytes currently on disk across all clients (Table-1 disk column).
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for e in std::fs::read_dir(&self.dir)? {
+            let e = e?;
+            if e.file_name().to_string_lossy().ends_with(".state") {
+                total += e.metadata()?.len();
+            }
+        }
+        Ok(total)
+    }
+
+    pub fn cache_resident_bytes(&self) -> usize {
+        self.cache_bytes
+    }
+
+    /// Wipe everything (between experiments).
+    pub fn clear(&mut self) -> Result<()> {
+        for e in std::fs::read_dir(&self.dir)? {
+            let p = e?.path();
+            if p.extension().map(|x| x == "state").unwrap_or(false)
+                || p.file_name()
+                    .map(|n| n.to_string_lossy().ends_with(".tmp"))
+                    .unwrap_or(false)
+            {
+                std::fs::remove_file(p)?;
+            }
+        }
+        self.cache.clear();
+        self.cache_bytes = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("parrot_state_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut sm = StateManager::new(tmp_dir("rt"), 1 << 20).unwrap();
+        assert!(sm.load(7).unwrap().is_none());
+        sm.save(7, b"hello state").unwrap();
+        assert_eq!(sm.load(7).unwrap().unwrap(), b"hello state");
+        // first load was a miss-from-cache? save populated cache -> hit
+        assert!(sm.metrics.cache_hits >= 1);
+    }
+
+    #[test]
+    fn params_round_trip() {
+        let mut sm = StateManager::new(tmp_dir("params"), 1 << 20).unwrap();
+        let p = ParamSet::init_he(&[vec![10, 4], vec![4]], 3);
+        sm.save_params(42, &p).unwrap();
+        assert_eq!(sm.load_params(42).unwrap().unwrap(), p);
+    }
+
+    #[test]
+    fn survives_cold_cache() {
+        let dir = tmp_dir("cold");
+        {
+            let mut sm = StateManager::new(&dir, 1 << 20).unwrap();
+            sm.save(1, b"persisted").unwrap();
+        }
+        // New manager, empty cache: must read from disk.
+        let mut sm2 = StateManager::new(&dir, 1 << 20).unwrap();
+        assert_eq!(sm2.load(1).unwrap().unwrap(), b"persisted");
+        assert_eq!(sm2.metrics.disk_reads, 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let mut sm = StateManager::new(tmp_dir("lru"), 100).unwrap();
+        sm.save(1, &[1u8; 40]).unwrap();
+        sm.save(2, &[2u8; 40]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 80);
+        sm.save(3, &[3u8; 40]).unwrap(); // evicts client 1
+        assert!(sm.cache_resident_bytes() <= 100);
+        // client 1 now needs disk
+        let before = sm.metrics.disk_reads;
+        assert_eq!(sm.load(1).unwrap().unwrap(), vec![1u8; 40]);
+        assert_eq!(sm.metrics.disk_reads, before + 1);
+    }
+
+    #[test]
+    fn lru_order_is_recency() {
+        let mut sm = StateManager::new(tmp_dir("recency"), 100).unwrap();
+        sm.save(1, &[1u8; 40]).unwrap();
+        sm.save(2, &[2u8; 40]).unwrap();
+        sm.load(1).unwrap(); // refresh 1; 2 becomes LRU
+        sm.save(3, &[3u8; 40]).unwrap(); // should evict 2, not 1
+        let before = sm.metrics.disk_reads;
+        sm.load(1).unwrap();
+        assert_eq!(sm.metrics.disk_reads, before, "1 must still be cached");
+        sm.load(2).unwrap();
+        assert_eq!(sm.metrics.disk_reads, before + 1, "2 must have been evicted");
+    }
+
+    #[test]
+    fn zero_budget_disables_cache() {
+        let mut sm = StateManager::new(tmp_dir("zero"), 0).unwrap();
+        sm.save(1, b"x").unwrap();
+        sm.load(1).unwrap();
+        assert_eq!(sm.metrics.cache_hits, 0);
+        assert_eq!(sm.metrics.disk_reads, 1);
+        assert_eq!(sm.cache_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn disk_bytes_counts_all_clients() {
+        let mut sm = StateManager::new(tmp_dir("disk"), 1 << 20).unwrap();
+        sm.clear().unwrap();
+        sm.save(1, &[0u8; 100]).unwrap();
+        sm.save(2, &[0u8; 250]).unwrap();
+        assert_eq!(sm.disk_bytes().unwrap(), 350);
+        sm.save(1, &[0u8; 50]).unwrap(); // overwrite shrinks
+        assert_eq!(sm.disk_bytes().unwrap(), 300);
+    }
+
+    #[test]
+    fn overwrite_updates_value() {
+        let mut sm = StateManager::new(tmp_dir("ow"), 1 << 20).unwrap();
+        sm.save(5, b"v1").unwrap();
+        sm.save(5, b"v2").unwrap();
+        assert_eq!(sm.load(5).unwrap().unwrap(), b"v2");
+    }
+
+    #[test]
+    fn oversized_value_bypasses_cache_but_persists() {
+        let mut sm = StateManager::new(tmp_dir("big"), 10).unwrap();
+        sm.save(9, &[7u8; 100]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 0);
+        assert_eq!(sm.load(9).unwrap().unwrap(), vec![7u8; 100]);
+    }
+
+    #[test]
+    fn clear_removes_files_and_cache() {
+        let mut sm = StateManager::new(tmp_dir("clear"), 1 << 20).unwrap();
+        sm.save(1, b"a").unwrap();
+        sm.clear().unwrap();
+        assert_eq!(sm.disk_bytes().unwrap(), 0);
+        assert!(sm.load(1).unwrap().is_none());
+    }
+}

@@ -1,0 +1,282 @@
+//! Communication abstraction — the §3.2 "zero-code-change" seam.
+//!
+//! The coordinator is generic over [`Transport`]; simulation wires it to
+//! [`local`] (in-process channels) and the deployment example wires the
+//! *identical* coordinator to [`tcp`] (length-prefixed frames over real
+//! sockets, workers possibly in other processes).  Endpoint 0 is always
+//! the server; endpoints 1..=K are devices.
+//!
+//! Every byte crossing a Transport is counted by the caller — the comm
+//! size/trip columns of Table 1 are measured, not asserted.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A bidirectional message endpoint.
+pub trait Transport: Send {
+    /// This endpoint's id (0 = server).
+    fn id(&self) -> usize;
+    /// Send `msg` to endpoint `to`.
+    fn send(&self, to: usize, msg: Vec<u8>) -> Result<()>;
+    /// Blocking receive; `timeout` None = wait forever.
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)>;
+}
+
+// ------------------------------------------------------------------ local
+
+/// In-process transport over std mpsc channels.
+pub struct LocalEndpoint {
+    id: usize,
+    inbox: Receiver<(usize, Vec<u8>)>,
+    peers: HashMap<usize, Sender<(usize, Vec<u8>)>>,
+}
+
+/// Build a fully-connected local network: returns K+1 endpoints
+/// (server = index 0, devices = 1..=K).
+pub fn local(k: usize) -> Vec<LocalEndpoint> {
+    let mut senders = Vec::with_capacity(k + 1);
+    let mut inboxes = Vec::with_capacity(k + 1);
+    for _ in 0..=k {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(id, inbox)| LocalEndpoint {
+            id,
+            inbox,
+            peers: senders
+                .iter()
+                .enumerate()
+                .map(|(j, tx)| (j, tx.clone()))
+                .collect(),
+        })
+        .collect()
+}
+
+impl Transport for LocalEndpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
+        self.peers
+            .get(&to)
+            .ok_or_else(|| anyhow!("no endpoint {to}"))?
+            .send((self.id, msg))
+            .map_err(|_| anyhow!("endpoint {to} hung up"))
+    }
+
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
+        match timeout {
+            None => self.inbox.recv().map_err(|_| anyhow!("all senders hung up")),
+            Some(t) => self
+                .inbox
+                .recv_timeout(t)
+                .map_err(|e| anyhow!("recv timeout/disconnect: {e}")),
+        }
+    }
+}
+
+// -------------------------------------------------------------------- tcp
+
+/// Frame = 4-byte LE length + 4-byte LE sender id + payload.
+fn write_frame(stream: &mut TcpStream, from: usize, msg: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; 8];
+    hdr[..4].copy_from_slice(&(msg.len() as u32).to_le_bytes());
+    hdr[4..].copy_from_slice(&(from as u32).to_le_bytes());
+    stream.write_all(&hdr)?;
+    stream.write_all(msg)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<(usize, Vec<u8>)> {
+    let mut hdr = [0u8; 8];
+    stream.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+    let from = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    Ok((from, buf))
+}
+
+/// TCP server endpoint: accepts K workers, demuxes their frames into a
+/// channel (one reader thread per connection).
+pub struct TcpServerEndpoint {
+    inbox: Receiver<(usize, Vec<u8>)>,
+    outs: HashMap<usize, Arc<Mutex<TcpStream>>>,
+}
+
+impl TcpServerEndpoint {
+    /// Bind `addr` and accept exactly `k` workers; each worker's first
+    /// frame announces its device id (1..=k).
+    pub fn bind(addr: &str, k: usize) -> Result<TcpServerEndpoint> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let (tx, inbox) = channel();
+        let mut outs = HashMap::new();
+        for _ in 0..k {
+            let (mut stream, _) = listener.accept()?;
+            stream.set_nodelay(true).ok();
+            let (id, _) = read_frame(&mut stream)?; // hello frame
+            outs.insert(id, Arc::new(Mutex::new(stream.try_clone()?)));
+            let tx = tx.clone();
+            std::thread::spawn(move || loop {
+                match read_frame(&mut stream) {
+                    Ok(f) => {
+                        if tx.send(f).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            });
+        }
+        Ok(TcpServerEndpoint { inbox, outs })
+    }
+}
+
+impl Transport for TcpServerEndpoint {
+    fn id(&self) -> usize {
+        0
+    }
+
+    fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
+        let s = self.outs.get(&to).ok_or_else(|| anyhow!("no worker {to}"))?;
+        write_frame(&mut s.lock().unwrap(), 0, &msg)
+    }
+
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
+        match timeout {
+            None => self.inbox.recv().map_err(|_| anyhow!("workers hung up")),
+            Some(t) => self.inbox.recv_timeout(t).map_err(|e| anyhow!("recv: {e}")),
+        }
+    }
+}
+
+/// TCP worker endpoint: connects to the server.
+pub struct TcpWorkerEndpoint {
+    id: usize,
+    stream: Arc<Mutex<TcpStream>>,
+    inbox: Receiver<(usize, Vec<u8>)>,
+}
+
+impl TcpWorkerEndpoint {
+    pub fn connect(addr: &str, id: usize) -> Result<TcpWorkerEndpoint> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        write_frame(&mut stream, id, b"hello")?; // announce id
+        let (tx, inbox) = channel();
+        let mut reader = stream.try_clone()?;
+        std::thread::spawn(move || loop {
+            match read_frame(&mut reader) {
+                Ok(f) => {
+                    if tx.send(f).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        });
+        Ok(TcpWorkerEndpoint { id, stream: Arc::new(Mutex::new(stream)), inbox })
+    }
+}
+
+impl Transport for TcpWorkerEndpoint {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
+        anyhow::ensure!(to == 0, "workers only talk to the server");
+        write_frame(&mut self.stream.lock().unwrap(), self.id, &msg)
+    }
+
+    fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
+        match timeout {
+            None => self.inbox.recv().map_err(|_| anyhow!("server hung up")),
+            Some(t) => self.inbox.recv_timeout(t).map_err(|e| anyhow!("recv: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_round_trip() {
+        let mut eps = local(2);
+        let w2 = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let server = eps.pop().unwrap();
+        server.send(1, b"task for 1".to_vec()).unwrap();
+        server.send(2, b"task for 2".to_vec()).unwrap();
+        let (from, msg) = w1.recv(Some(Duration::from_secs(1))).unwrap();
+        assert_eq!((from, msg.as_slice()), (0, b"task for 1".as_slice()));
+        let (_, msg2) = w2.recv(Some(Duration::from_secs(1))).unwrap();
+        assert_eq!(msg2, b"task for 2");
+        w1.send(0, b"done 1".to_vec()).unwrap();
+        w2.send(0, b"done 2".to_vec()).unwrap();
+        let mut got = vec![
+            server.recv(Some(Duration::from_secs(1))).unwrap(),
+            server.recv(Some(Duration::from_secs(1))).unwrap(),
+        ];
+        got.sort_by_key(|(from, _)| *from);
+        assert_eq!(got[0].0, 1);
+        assert_eq!(got[1].1, b"done 2");
+    }
+
+    #[test]
+    fn local_timeout() {
+        let eps = local(1);
+        assert!(eps[0].recv(Some(Duration::from_millis(10))).is_err());
+    }
+
+    #[test]
+    fn local_unknown_peer() {
+        let eps = local(1);
+        assert!(eps[0].send(9, vec![]).is_err());
+    }
+
+    #[test]
+    fn tcp_round_trip_threads() {
+        let port = 34571;
+        let addr = format!("127.0.0.1:{port}");
+        let addr2 = addr.clone();
+        let server_thread = std::thread::spawn(move || {
+            let server = TcpServerEndpoint::bind(&addr2, 2).unwrap();
+            server.send(1, b"hi 1".to_vec()).unwrap();
+            server.send(2, vec![7u8; 100_000]).unwrap(); // big frame
+            let mut seen = Vec::new();
+            for _ in 0..2 {
+                let (from, msg) = server.recv(Some(Duration::from_secs(5))).unwrap();
+                seen.push((from, msg));
+            }
+            seen.sort_by_key(|(f, _)| *f);
+            assert_eq!(seen[0], (1, b"ack1".to_vec()));
+            assert_eq!(seen[1].1.len(), 3);
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let w1 = TcpWorkerEndpoint::connect(&addr, 1).unwrap();
+        let w2 = TcpWorkerEndpoint::connect(&addr, 2).unwrap();
+        let (_, m1) = w1.recv(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(m1, b"hi 1");
+        let (_, m2) = w2.recv(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(m2.len(), 100_000);
+        assert!(m2.iter().all(|&b| b == 7));
+        w1.send(0, b"ack1".to_vec()).unwrap();
+        w2.send(0, b"ac2".to_vec()).unwrap();
+        server_thread.join().unwrap();
+    }
+}

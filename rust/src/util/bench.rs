@@ -1,0 +1,108 @@
+//! Criterion-style micro/meso benchmark harness (criterion itself is
+//! unavailable offline — DESIGN.md §6).
+//!
+//! Used by the `benches/*.rs` targets (`harness = false`), which `cargo
+//! bench` runs as plain binaries.  Reports mean ± std, median and p95
+//! over timed iterations after a warm-up phase, plus throughput when an
+//! element count is supplied.
+
+use super::stats::{summarize, Summary};
+use super::timer::fmt_secs;
+use std::time::Instant;
+
+pub struct Bencher {
+    name: String,
+    warmup_iters: usize,
+    sample_iters: usize,
+    results: Vec<(String, Summary, Option<f64>)>,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        // Honor the harness convention: `cargo bench -- --quick` halves work.
+        let quick = std::env::args().any(|a| a == "--quick");
+        Bencher {
+            name: name.to_string(),
+            warmup_iters: if quick { 3 } else { 10 },
+            sample_iters: if quick { 15 } else { 50 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, samples: usize) -> Bencher {
+        self.warmup_iters = warmup;
+        self.sample_iters = samples;
+        self
+    }
+
+    /// Time `f` repeatedly; `black_box` its output yourself if needed.
+    pub fn bench<T>(&mut self, label: &str, mut f: impl FnMut() -> T) {
+        self.bench_n(label, None, &mut f);
+    }
+
+    /// Like `bench` but reports `elems/iter / time` as throughput.
+    pub fn bench_throughput<T>(&mut self, label: &str, elems: usize, mut f: impl FnMut() -> T) {
+        self.bench_n(label, Some(elems as f64), &mut f);
+    }
+
+    fn bench_n<T>(&mut self, label: &str, elems: Option<f64>, f: &mut impl FnMut() -> T) {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        let tput = elems.map(|e| e / s.p50);
+        println!(
+            "{:<44} {:>10} ±{:>9}  p50 {:>10}  p95 {:>10}{}",
+            format!("{}/{}", self.name, label),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            tput.map(|t| format!("  {:.2e} elems/s", t)).unwrap_or_default(),
+        );
+        self.results.push((label.to_string(), s, tput));
+    }
+
+    pub fn results(&self) -> &[(String, Summary, Option<f64>)] {
+        &self.results
+    }
+}
+
+/// Header line for a bench binary.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>10}  {:>14}  {:>14}",
+        "benchmark", "mean", "std", "p50", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::new("t").with_iters(1, 5);
+        let mut acc = 0u64;
+        b.bench("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].1.n, 5);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bencher::new("t").with_iters(1, 3);
+        b.bench_throughput("sum", 1000, || (0..1000u64).sum::<u64>());
+        assert!(b.results()[0].2.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiny CLI argument parser for the `parrot` launcher and the examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments, with typed getters and a usage renderer.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass `std::env::args().skip(1)`.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// List of comma-separated usize values (e.g. `--devices 4,8,16,32`).
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name}: bad list element {t:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        if self.positional.is_empty() {
+            bail!("missing subcommand");
+        }
+        Ok(&self.positional[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse(&["exp", "fig5", "--devices", "4,8", "--seed=42", "--verbose"]);
+        assert_eq!(a.positional, vec!["exp", "fig5"]);
+        assert_eq!(a.get("devices"), Some("4,8"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--k", "8", "--lr", "0.05"]);
+        assert_eq!(a.usize_or("k", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("m", 100).unwrap(), 100);
+        assert!((a.f64_or("lr", 0.1).unwrap() - 0.05).abs() < 1e-12);
+        assert!(a.usize_or("lr", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--k", "1", "--", "--not-an-opt"]);
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--devices", "4, 8,16"]);
+        assert_eq!(a.usize_list_or("devices", &[]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.usize_list_or("other", &[2]).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn require_and_subcommand_errors() {
+        let a = parse(&[]);
+        assert!(a.require("x").is_err());
+        assert!(a.subcommand().is_err());
+    }
+}

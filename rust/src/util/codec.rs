@@ -1,0 +1,272 @@
+//! Binary codec: length-prefixed little-endian encoding for state
+//! snapshots (client state manager) and transport messages.
+//!
+//! Hand-rolled because no serde is available offline (DESIGN.md §6).
+//! The format is versionless-simple by design: every record the system
+//! persists is written and read by this same build.
+
+use anyhow::{bail, Result};
+
+/// Append-only encoder.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Encoder { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// f32 slice with length prefix; the workhorse for parameter tensors.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): on little-endian targets this is a
+    /// single bulk copy — the per-element `to_le_bytes` loop measured
+    /// ~4 GB/s, the memcpy path >20 GB/s, and this sits on the
+    /// device-aggregate upload path of every round.
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u32(xs.len() as u32);
+        #[cfg(target_endian = "little")]
+        {
+            let raw = unsafe {
+                std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+            };
+            self.buf.extend_from_slice(raw);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            self.buf.reserve(xs.len() * 4);
+            for &x in xs {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    pub fn put_bytes(&mut self, xs: &[u8]) {
+        self.put_u32(xs.len() as u32);
+        self.buf.extend_from_slice(xs);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-based decoder over an encoded byte slice.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Decoder { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "decode underrun: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        #[cfg(target_endian = "little")]
+        {
+            // Bulk copy (possibly unaligned source): see put_f32s.
+            let mut out = vec![0.0f32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// Read a little-endian f32 buffer straight from raw bytes (the testvec
+/// `.bin` format emitted by `aot.py`).
+pub fn f32s_from_le_bytes(raw: &[u8]) -> Result<Vec<f32>> {
+    if raw.len() % 4 != 0 {
+        bail!("raw length {} not a multiple of 4", raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn i32s_from_le_bytes(raw: &[u8]) -> Result<Vec<i32>> {
+    if raw.len() % 4 != 0 {
+        bail!("raw length {} not a multiple of 4", raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u32(0xDEAD_BEEF);
+        e.put_u64(u64::MAX);
+        e.put_f32(-1.5);
+        e.put_f64(std::f64::consts::PI);
+        e.put_str("parrot");
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.f32().unwrap(), -1.5);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.str().unwrap(), "parrot");
+        assert!(d.done());
+    }
+
+    #[test]
+    fn round_trip_f32s() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 17.0).collect();
+        let mut e = Encoder::new();
+        e.put_f32s(&xs);
+        let buf = e.finish();
+        assert_eq!(buf.len(), 4 + 4 * xs.len());
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.f32s().unwrap(), xs);
+    }
+
+    #[test]
+    fn underrun_is_error_not_panic() {
+        let mut d = Decoder::new(&[1, 2]);
+        assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn truncated_string_is_error() {
+        let mut e = Encoder::new();
+        e.put_str("hello");
+        let mut buf = e.finish();
+        buf.truncate(6);
+        let mut d = Decoder::new(&buf);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn f32s_from_le_bytes_matches_encoder() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let raw: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(f32s_from_le_bytes(&raw).unwrap(), xs);
+        assert!(f32s_from_le_bytes(&raw[..5]).is_err());
+    }
+
+    #[test]
+    fn empty_slices() {
+        let mut e = Encoder::new();
+        e.put_f32s(&[]);
+        e.put_bytes(&[]);
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert!(d.f32s().unwrap().is_empty());
+        assert!(d.bytes().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Zero-dependency substrates.
+//!
+//! The offline build environment provides only the `xla` crate closure,
+//! so the utility layer other frameworks take from crates.io is built
+//! in-tree (DESIGN.md §6): PRNG, statistics/OLS, binary codec, CLI
+//! parsing, a property-testing harness, a criterion-style bench harness,
+//! and a minimal JSON writer for experiment reports.
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,148 @@
+//! Property-testing harness (in-tree stand-in for `proptest`, which is
+//! unavailable offline — DESIGN.md §6).
+//!
+//! Model: a property is a closure over a seeded [`Gen`]; the runner
+//! executes it for `cases` random seeds and, on failure, retries the
+//! failing seed with progressively smaller size hints to report the
+//! smallest reproduction it finds.  Failures print the seed so any case
+//! is replayable.
+
+use super::rng::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in [0.0, 1.0]; generators scale ranges by it so the
+    /// shrink pass can search smaller inputs.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Integer in [lo, hi], scaled down by the size hint.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).ceil() as u64;
+        lo + self.rng.below(span.max(1)) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size.max(0.05))
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.int(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with the failing seed and
+/// the smallest failing size found.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    check_seeded(name, cases, 0xC0FF_EE00, &mut prop)
+}
+
+pub fn check_seeded(
+    name: &str,
+    cases: usize,
+    master_seed: u64,
+    prop: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let mut seeder = Rng::new(master_seed);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink pass: same seed, smaller size hints.
+            let mut best: Option<(f64, String)> = None;
+            for &size in &[0.02, 0.05, 0.1, 0.25, 0.5, 0.75] {
+                let mut g = Gen::new(seed, size);
+                if let Err(m) = prop(&mut g) {
+                    best = Some((size, m));
+                    break;
+                }
+            }
+            match best {
+                Some((size, m)) => panic!(
+                    "property {name:?} failed (case {case}, seed {seed:#x}): {msg}\n\
+                     smallest reproduction at size={size}: {m}"
+                ),
+                None => panic!(
+                    "property {name:?} failed (case {case}, seed {seed:#x}, size=1.0): {msg}"
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", 50, |g| {
+            count += 1;
+            let x = g.int(0, 100);
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 100"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.int(3, 17);
+            if !(3..=17).contains(&n) {
+                return Err(format!("int out of range: {n}"));
+            }
+            let x = g.f64(-2.0, 5.0);
+            if !(-2.0..=5.0).contains(&x) {
+                return Err(format!("f64 out of range: {x}"));
+            }
+            let v = g.vec_f32(n, 0.0, 1.0);
+            if v.len() != n {
+                return Err("bad vec len".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_seed_same_values() {
+        let mut a = Gen::new(99, 1.0);
+        let mut b = Gen::new(99, 1.0);
+        for _ in 0..20 {
+            assert_eq!(a.int(0, 1000), b.int(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Deterministic PRNG + the samplers the data/cluster substrates need.
+//!
+//! SplitMix64 core (Steele et al., "Fast splittable pseudorandom number
+//! generators") — tiny state, passes BigCrush when used as a stream, and
+//! trivially splittable so every client / device / round can derive an
+//! independent, reproducible stream from `(seed, id)`.
+
+/// Splittable 64-bit PRNG. Every simulation entity owns its own stream.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point and decorrelate small seeds.
+        Rng { state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1) }
+    }
+
+    /// Derive an independent stream for entity `id` (client, device, round).
+    pub fn derive(&self, id: u64) -> Rng {
+        let mut r = Rng::new(self.state ^ id.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        r.next_u64(); // burn one output to decorrelate
+        r
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless bounded sampling.
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Log-normal with the given log-space parameters — the "natural"
+    /// client-dataset-size law (FEMNIST-like heavy tail).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (shape >= 0 handled by boosting).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.next_f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k): the paper's label-skew partitioner
+    /// (ImageNet(a) uses Dirichlet(0.1)).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            // pathological underflow: fall back to a one-hot draw
+            let mut out = vec![0.0; k];
+            out[self.below(k as u64) as usize] = 1.0;
+            return out;
+        }
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Sample from a discrete distribution given by (unnormalized) weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `n` distinct indices from [0, m) (client selection per round).
+    pub fn choose(&mut self, m: usize, n: usize) -> Vec<usize> {
+        assert!(n <= m, "cannot choose {n} from {m}");
+        let mut idx: Vec<usize> = (0..m).collect();
+        // Partial Fisher–Yates: only the first n swaps matter.
+        for i in 0..n {
+            let j = i + self.below((m - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_decorrelates() {
+        let root = Rng::new(1);
+        let mut a = root.derive(0);
+        let mut b = root.derive(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_skews() {
+        let mut r = Rng::new(5);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let p = r.dirichlet(alpha, 62);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+        // Small alpha concentrates mass: max component should dominate.
+        let p = r.dirichlet(0.05, 10);
+        let mx = p.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 0.5, "Dirichlet(0.05) should be spiky, max={mx}");
+    }
+
+    #[test]
+    fn gamma_mean_close_to_shape() {
+        let mut r = Rng::new(9);
+        for &shape in &[0.1, 0.5, 2.0, 7.5] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() / shape < 0.1,
+                "gamma({shape}) mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn lognormal_is_positive_heavy_tail() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..10_000).map(|_| r.lognormal(3.0, 1.0)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[xs.len() / 2];
+        assert!(mean > median, "heavy right tail expected");
+    }
+
+    #[test]
+    fn choose_distinct_and_in_range() {
+        let mut r = Rng::new(17);
+        for _ in 0..50 {
+            let picked = r.choose(100, 30);
+            assert_eq!(picked.len(), 30);
+            let mut s = picked.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 30, "duplicates in selection");
+            assert!(picked.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn choose_all_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut p = r.choose(10, 10);
+        p.sort_unstable();
+        assert_eq!(p, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(23);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "ratio={ratio}");
+    }
+}

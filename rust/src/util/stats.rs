@@ -1,0 +1,149 @@
+//! Statistics substrate: OLS linear regression (the paper's workload
+//! estimator, Eq. 2) and summary statistics for the bench harness.
+
+/// Result of fitting `y = slope * x + intercept` by ordinary least squares.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination (1 = perfect fit).
+    pub r2: f64,
+    pub n: usize,
+}
+
+/// OLS fit of (x, y) pairs. Returns `None` for fewer than 2 points or a
+/// degenerate (constant-x) design; callers fall back to the warm-up
+/// uniform schedule in that case (Alg. 3's `r <= R_w` branch).
+pub fn linear_regression(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return None;
+    }
+    let nf = n as f64;
+    let mx = xs.iter().sum::<f64>() / nf;
+    let my = ys.iter().sum::<f64>() / nf;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx < 1e-12 {
+        return None;
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(&x, &y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let r2 = if syy < 1e-12 { 1.0 } else { 1.0 - ss_res / syy };
+    Some(LinearFit { slope, intercept, r2, n })
+}
+
+/// Summary statistics over a sample (bench reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(2) as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(0.50),
+        p95: pct(0.95),
+    }
+}
+
+/// Mean absolute percentage error — Fig. 11(a)'s estimation-error metric.
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    assert!(!actual.is_empty());
+    let mut acc = 0.0;
+    for (&a, &p) in actual.iter().zip(predicted) {
+        acc += ((a - p) / a.max(1e-12)).abs();
+    }
+    acc / actual.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x + 2.0).collect();
+        let fit = linear_regression(&xs, &ys).unwrap();
+        assert!((fit.slope - 3.5).abs() < 1e-9);
+        assert!((fit.intercept - 2.0).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_line_approximate() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let xs: Vec<f64> = (0..500).map(|_| rng.range_f64(10.0, 200.0)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.02 * x + 1.0 + 0.05 * rng.normal()).collect();
+        let fit = linear_regression(&xs, &ys).unwrap();
+        assert!((fit.slope - 0.02).abs() < 0.002, "{fit:?}");
+        assert!((fit.intercept - 1.0).abs() < 0.05, "{fit:?}");
+        assert!(fit.r2 > 0.9);
+    }
+
+    #[test]
+    fn degenerate_cases_none() {
+        assert!(linear_regression(&[], &[]).is_none());
+        assert!(linear_regression(&[1.0], &[2.0]).is_none());
+        // constant x: unfittable
+        assert!(linear_regression(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn constant_y_r2_is_one() {
+        let fit = linear_regression(&[1.0, 2.0, 3.0], &[4.0, 4.0, 4.0]).unwrap();
+        assert!(fit.slope.abs() < 1e-12);
+        assert!((fit.r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn mape_zero_for_perfect() {
+        assert!(mape(&[1.0, 2.0], &[1.0, 2.0]) < 1e-12);
+        assert!((mape(&[2.0], &[1.0]) - 0.5).abs() < 1e-12);
+    }
+}

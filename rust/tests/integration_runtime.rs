@@ -1,0 +1,208 @@
+//! End-to-end AOT bridge test: replay the numeric test vectors dumped by
+//! `python/compile/aot.py` through the Rust PJRT runtime and compare.
+//!
+//! This is the single test that pins cross-language numerics: jax
+//! computed outputs at build time; the exact same HLO executed from Rust
+//! must reproduce them.  Requires `make artifacts` (skips cleanly if the
+//! artifacts are absent).
+
+use parrot::model::{Dtype, ParamSet, Role};
+use parrot::runtime::{lit_f32, lit_i32, lit_scalar, Runtime};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct TestVec {
+    entries: Vec<(String, String, String, usize, Vec<usize>)>, // io, name, dtype, size, shape
+    blob: Vec<u8>,
+}
+
+impl TestVec {
+    fn load(name: &str) -> Option<TestVec> {
+        let idx = artifact_dir().join(format!("testvec_{name}.idx"));
+        let bin = artifact_dir().join(format!("testvec_{name}.bin"));
+        if !idx.exists() || !bin.exists() {
+            return None;
+        }
+        let entries = std::fs::read_to_string(idx)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                let p: Vec<&str> = l.split_whitespace().collect();
+                let shape = if p[4] == "-" {
+                    vec![]
+                } else {
+                    p[4].split(',').map(|d| d.parse().unwrap()).collect()
+                };
+                (
+                    p[0].to_string(),
+                    p[1].to_string(),
+                    p[2].to_string(),
+                    p[3].parse().unwrap(),
+                    shape,
+                )
+            })
+            .collect();
+        Some(TestVec { entries, blob: std::fs::read(bin).unwrap() })
+    }
+
+    /// Cut the blob into per-entry raw byte slices.
+    fn slices(&self) -> Vec<(&(String, String, String, usize, Vec<usize>), &[u8])> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for e in &self.entries {
+            let n = 4 * e.3;
+            out.push((e, &self.blob[off..off + n]));
+            off += n;
+        }
+        assert_eq!(off, self.blob.len(), "testvec blob size mismatch");
+        out
+    }
+}
+
+fn as_f32(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn as_i32(raw: &[u8]) -> Vec<i32> {
+    raw.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn allclose(name: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    let mut worst = 0.0f32;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let d = (g - w).abs();
+        if d > tol {
+            panic!("{name}[{i}]: got {g}, want {w} (|diff|={d} > tol={tol})");
+        }
+        worst = worst.max(d);
+    }
+}
+
+/// Replay one artifact's testvec through PJRT.
+fn replay(name: &str, rtol: f32) {
+    let Some(tv) = TestVec::load(name) else {
+        eprintln!("skipping {name}: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu(artifact_dir()).expect("pjrt cpu client");
+    let exe = rt.load(name).expect("load artifact");
+    let slices = tv.slices();
+    let n_in = exe.manifest.inputs.len();
+    assert_eq!(
+        slices.iter().filter(|(e, _)| e.0 == "in").count(),
+        n_in,
+        "{name}: input count"
+    );
+
+    let mut inputs = Vec::with_capacity(n_in);
+    for ((_, nm, dt, _, shape), raw) in slices.iter().take(n_in) {
+        let lit = match dt.as_str() {
+            "f32" => {
+                if shape.is_empty() {
+                    lit_scalar(as_f32(raw)[0])
+                } else {
+                    lit_f32(&as_f32(raw), shape).unwrap()
+                }
+            }
+            "i32" => lit_i32(&as_i32(raw), shape).unwrap(),
+            _ => panic!("dtype {dt} in testvec entry {nm}"),
+        };
+        inputs.push(lit);
+    }
+    let outs = exe.execute(&inputs).expect("execute");
+    for (lit, ((_, nm, _, _, _), raw)) in outs.iter().zip(slices[n_in..].iter()) {
+        let got = lit.to_vec::<f32>().expect("output to_vec");
+        allclose(&format!("{name}.{nm}"), &got, &as_f32(raw), rtol, 1e-5);
+    }
+}
+
+#[test]
+fn mlp_eval_matches_jax() {
+    replay("mlp_eval", 1e-4);
+}
+
+#[test]
+fn mlp_grad_matches_jax() {
+    replay("mlp_grad", 1e-3);
+}
+
+#[test]
+fn mlp_train_matches_jax() {
+    replay("mlp_train", 1e-3);
+}
+
+#[test]
+fn task_run_multi_step_changes_params() {
+    // Beyond the single-step replay: drive several batches through
+    // TaskRun and check params move + loss is finite.
+    let dir = artifact_dir();
+    if !dir.join("mlp_train.manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use parrot::data::{FederatedDataset, Partition, PartitionKind, SynthConfig};
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("mlp_train").unwrap();
+    let shapes = exe.manifest.param_shapes();
+    let params = ParamSet::init_he(&shapes, 1);
+    let zeros = ParamSet::zeros(&shapes);
+    let ds = FederatedDataset::new(
+        SynthConfig::vision(3),
+        Partition::generate(PartitionKind::Natural, 4, 62, 80, 3),
+    );
+    let mut run = exe.start_task(&params, &zeros, &zeros, 0.05, 0.0).unwrap();
+    let mut losses = Vec::new();
+    for j in 0..4 {
+        let (loss, gsq) = run.step(&ds.batch(0, j % ds.n_batches(0))).unwrap();
+        assert!(loss.is_finite() && gsq >= 0.0);
+        losses.push(loss);
+    }
+    let new_params = run.finish().unwrap();
+    assert!(new_params.max_abs_diff(&params) > 0.0, "params must move");
+    // Same-batch repetition should trend the loss down on this easy task.
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "losses: {losses:?}"
+    );
+}
+
+#[test]
+fn manifest_consistency_across_artifacts() {
+    let dir = artifact_dir();
+    if !dir.join("mlp_train.manifest.txt").exists() {
+        return;
+    }
+    for model in parrot::model::MODEL_NAMES {
+        let rt_manifests: Vec<_> = parrot::model::STEP_KINDS
+            .iter()
+            .map(|k| {
+                parrot::model::Manifest::load(
+                    dir.join(format!("{model}_{k}.manifest.txt")),
+                )
+                .unwrap()
+            })
+            .collect();
+        // All step kinds of one model agree on the parameter layout.
+        let shapes: Vec<_> = rt_manifests.iter().map(|m| m.param_shapes()).collect();
+        assert_eq!(shapes[0], shapes[1]);
+        assert_eq!(shapes[0], shapes[2]);
+        // Roles are well-formed.
+        for m in &rt_manifests {
+            assert!(m.inputs.iter().all(|d| d.role != Role::Metric));
+            assert!(m
+                .outputs
+                .iter()
+                .all(|d| d.role == Role::Param || d.role == Role::Metric));
+            assert!(m.inputs.iter().any(|d| d.dtype == Dtype::I32)); // y
+        }
+    }
+}

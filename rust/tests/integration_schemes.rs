@@ -1,0 +1,163 @@
+//! Scheme-level integration on the virtual-time engine: the paper's
+//! comparative claims as executable assertions (the same engine the
+//! Fig-5..11 harnesses use, at reduced scale for test budget).
+
+use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::config::{Scheme, SchedulerKind};
+use parrot::data::{Partition, PartitionKind};
+use parrot::simulation::{run_virtual, CommModel, VRound, VirtualSim};
+
+fn sim(
+    scheme: Scheme,
+    cluster: ClusterProfile,
+    sched: SchedulerKind,
+    partition_kind: PartitionKind,
+) -> VirtualSim {
+    VirtualSim::new(
+        scheme,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        sched,
+        2,
+        Partition::generate(partition_kind, 600, 62, 100, 21),
+        1,
+        9,
+    )
+}
+
+fn mean_tail(rs: &[VRound]) -> f64 {
+    let skip = rs.len() / 3;
+    rs.iter().skip(skip).map(|r| r.total_secs).sum::<f64>() / (rs.len() - skip) as f64
+}
+
+#[test]
+fn fig5_claim_parrot_fastest_scheme_on_equal_devices() {
+    // On the same K devices, Parrot must beat FA (and SP trivially).
+    let k = 8;
+    let t = |scheme, sched| {
+        let mut s = sim(scheme, ClusterProfile::homogeneous(k), sched, PartitionKind::Natural);
+        mean_tail(&run_virtual(&mut s, 12, 100, 5))
+    };
+    let parrot = t(Scheme::Parrot, SchedulerKind::Greedy);
+    let fa = t(Scheme::FaDist, SchedulerKind::Uniform);
+    let sp = t(Scheme::SP, SchedulerKind::Uniform);
+    assert!(parrot < fa, "parrot {parrot:.2} !< fa {fa:.2}");
+    assert!(parrot < sp / 4.0, "parrot {parrot:.2} should be >> faster than SP {sp:.2}");
+}
+
+#[test]
+fn fig5_claim_speedup_grows_with_heterogeneity() {
+    // The 1.2-10x range: modest on homogeneous clusters, large on
+    // heterogeneous ones (where FA's pull + Parrot's scheduling differ most).
+    let speedup = |cluster: ClusterProfile| {
+        let mut fa = sim(
+            Scheme::FaDist,
+            cluster.clone(),
+            SchedulerKind::Uniform,
+            PartitionKind::QuantitySkew(5.0),
+        );
+        let mut pa = sim(
+            Scheme::Parrot,
+            cluster,
+            SchedulerKind::Greedy,
+            PartitionKind::QuantitySkew(5.0),
+        );
+        mean_tail(&run_virtual(&mut fa, 12, 100, 5)) / mean_tail(&run_virtual(&mut pa, 12, 100, 5))
+    };
+    let homo = speedup(ClusterProfile::homogeneous(8));
+    let hete = speedup(ClusterProfile::cluster_c(8));
+    assert!(homo > 1.0, "parrot must win even homogeneous: {homo:.2}");
+    assert!(hete > homo, "speedup should grow with heterogeneity: {homo:.2} -> {hete:.2}");
+}
+
+#[test]
+fn table1_claim_comm_ratio_mp_over_k() {
+    let mut pa = sim(
+        Scheme::Parrot,
+        ClusterProfile::homogeneous(8),
+        SchedulerKind::Greedy,
+        PartitionKind::Natural,
+    );
+    let mut sd = sim(
+        Scheme::SdDist,
+        ClusterProfile::homogeneous(8),
+        SchedulerKind::Uniform,
+        PartitionKind::Natural,
+    );
+    let pb = run_virtual(&mut pa, 2, 100, 3)[1].bytes as f64;
+    let sb = run_virtual(&mut sd, 2, 100, 3)[1].bytes as f64;
+    let ratio = sb / pb;
+    // Mp/K = 100/8 = 12.5
+    assert!((ratio - 12.5).abs() < 0.5, "comm ratio {ratio}");
+}
+
+#[test]
+fn fig7_claim_near_linear_device_scaling() {
+    let t = |k: usize| {
+        let mut s = sim(
+            Scheme::Parrot,
+            ClusterProfile::homogeneous(k),
+            SchedulerKind::Greedy,
+            PartitionKind::Natural,
+        );
+        mean_tail(&run_virtual(&mut s, 12, 100, 7))
+    };
+    let (t4, t8, t32) = (t(4), t(8), t(32));
+    assert!(t8 < t4 * 0.65, "4->8 devices: {t4:.2} -> {t8:.2}");
+    assert!(t32 < t4 * 0.25, "4->32 devices: {t4:.2} -> {t32:.2}");
+}
+
+#[test]
+fn fig9_claim_scheduling_absorbs_heterogeneity() {
+    let t = |sched| {
+        let mut s = sim(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            sched,
+            PartitionKind::Natural,
+        );
+        mean_tail(&run_virtual(&mut s, 16, 100, 9))
+    };
+    let with = t(SchedulerKind::Greedy);
+    let without = t(SchedulerKind::Uniform);
+    assert!(
+        with < 0.8 * without,
+        "scheduling should claw back >20% under heterogeneity: {with:.2} vs {without:.2}"
+    );
+}
+
+#[test]
+fn fig10_claim_benefit_holds_at_1000_concurrent() {
+    let t = |sched| {
+        let mut s = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            Partition::generate(PartitionKind::Natural, 5000, 62, 100, 23),
+            1,
+            9,
+        );
+        mean_tail(&run_virtual(&mut s, 8, 1000, 11))
+    };
+    let with = t(SchedulerKind::Greedy);
+    let without = t(SchedulerKind::Uniform);
+    assert!(with < without, "{with:.2} !< {without:.2}");
+}
+
+#[test]
+fn utilization_high_with_scheduling() {
+    let mut s = sim(
+        Scheme::Parrot,
+        ClusterProfile::heterogeneous(8),
+        SchedulerKind::Greedy,
+        PartitionKind::Natural,
+    );
+    let rs = run_virtual(&mut s, 12, 100, 13);
+    let u: f64 =
+        rs.iter().skip(4).map(|r| r.utilization()).sum::<f64>() / (rs.len() - 4) as f64;
+    assert!(u > 0.85, "scheduled utilization {u:.2} should be high");
+}

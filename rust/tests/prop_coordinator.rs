@@ -1,0 +1,213 @@
+//! System-level property tests on the coordinator invariants (the
+//! in-tree prop harness standing in for proptest — DESIGN.md §6):
+//! message-codec round trips, schedule partitioning under arbitrary
+//! loads, hierarchical==flat aggregation through the *wire* encoding,
+//! and state-manager durability under arbitrary interleavings.
+
+use parrot::aggregation::{AggOp, ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, Payload};
+use parrot::config::SchedulerKind;
+use parrot::coordinator::messages::Msg;
+use parrot::model::ParamSet;
+use parrot::scheduler::{Scheduler, TaskRecord};
+use parrot::state::StateManager;
+use parrot::util::prop::{check, Gen};
+use parrot::util::rng::Rng;
+
+fn gen_params(g: &mut Gen) -> ParamSet {
+    let shapes: Vec<Vec<usize>> = (0..g.int(1, 4))
+        .map(|_| (0..g.int(1, 3)).map(|_| g.int(1, 12)).collect())
+        .collect();
+    let mut rng = Rng::new(g.rng.next_u64());
+    ParamSet {
+        tensors: shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>().max(1))
+                    .map(|_| rng.normal_f32(0.0, 2.0))
+                    .collect()
+            })
+            .collect(),
+        shapes,
+    }
+}
+
+#[test]
+fn prop_message_codec_round_trip() {
+    check("msg codec", 60, |g| {
+        let params = gen_params(g);
+        let clients: Vec<usize> = (0..g.int(0, 40)).map(|_| g.int(0, 5000)).collect();
+        let msg = Msg::Round {
+            round: g.int(0, 10_000),
+            broadcast: parrot::algorithms::Broadcast {
+                round: 0,
+                params: params.clone(),
+                extra: if g.bool() { Some(params.clone()) } else { None },
+            },
+            clients: clients.clone(),
+        };
+        match Msg::decode(&msg.encode()) {
+            Ok(Msg::Round { clients: c2, broadcast, .. }) => {
+                if c2 != clients {
+                    return Err("clients mutated".into());
+                }
+                if broadcast.params.max_abs_diff(&params) != 0.0 {
+                    return Err("params mutated".into());
+                }
+                Ok(())
+            }
+            Ok(_) => Err("wrong variant".into()),
+            Err(e) => Err(format!("decode failed: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_partitions_any_round() {
+    check("schedule partition", 60, |g| {
+        let k = g.int(1, 16);
+        let mut sched = Scheduler::new(
+            *g.pick(&[
+                SchedulerKind::Uniform,
+                SchedulerKind::Greedy,
+                SchedulerKind::TimeWindow(3),
+            ]),
+            g.int(0, 3),
+            k,
+        );
+        // arbitrary history
+        for _ in 0..g.int(0, 50) {
+            sched.record(TaskRecord {
+                round: g.int(0, 10),
+                device: g.int(0, k - 1),
+                n_samples: g.int(1, 500),
+                secs: g.f64(0.01, 5.0),
+            });
+        }
+        let m = g.int(0, 80);
+        let clients: Vec<(usize, usize)> = (0..m).map(|i| (i, g.int(2, 400))).collect();
+        let round = g.int(0, 12);
+        let s = sched.schedule(round, &clients);
+        if s.assignment.len() != k {
+            return Err(format!("{} device lists != {k}", s.assignment.len()));
+        }
+        let mut seen: Vec<usize> = s.assignment.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        if seen != (0..m).collect::<Vec<_>>() {
+            return Err(format!("partition broken: {} of {m}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_equals_flat_through_wire() {
+    // Same invariant as the unit test but through the full Msg encode /
+    // decode path the real coordinator uses.
+    check("hier == flat via wire", 30, |g| {
+        let shapes = vec![vec![g.int(1, 10)], vec![g.int(1, 6), g.int(1, 6)]];
+        let mut rng = Rng::new(g.rng.next_u64());
+        let m = g.int(1, 24);
+        let k = g.int(1, 5);
+        let updates: Vec<ClientUpdate> = (0..m)
+            .map(|c| ClientUpdate {
+                client: c,
+                weight: rng.range_f64(1.0, 50.0),
+                entries: vec![(
+                    "delta".into(),
+                    AggOp::WeightedAvg,
+                    Payload::Params(ParamSet {
+                        shapes: shapes.clone(),
+                        tensors: shapes
+                            .iter()
+                            .map(|s| {
+                                (0..s.iter().product::<usize>())
+                                    .map(|_| rng.normal_f32(0.0, 1.0))
+                                    .collect()
+                            })
+                            .collect(),
+                    }),
+                )],
+            })
+            .collect();
+        let flat = parrot::aggregation::flat_aggregate(&updates);
+        let mut global = GlobalAgg::new();
+        for dev in 0..k {
+            let mut la = LocalAgg::new(dev);
+            for (i, u) in updates.iter().enumerate() {
+                if i % k == dev {
+                    la.add(u);
+                }
+            }
+            // ship through the actual message type
+            let msg = Msg::RoundDone {
+                device: dev,
+                aggregate: la.finish(),
+                records: vec![],
+                busy_secs: 0.0,
+            };
+            match Msg::decode(&msg.encode()) {
+                Ok(Msg::RoundDone { aggregate, .. }) => global.merge(aggregate),
+                _ => return Err("wire round trip failed".into()),
+            }
+        }
+        let hier = global.finish();
+        let d = flat.params["delta"].max_abs_diff(&hier.params["delta"]);
+        if d < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("hier vs flat diff {d}"))
+        }
+    });
+}
+
+#[test]
+fn prop_device_aggregate_wire_stable() {
+    check("device agg wire", 40, |g| {
+        let mut la = LocalAgg::new(g.int(0, 30));
+        let n = g.int(1, 10);
+        for c in 0..n {
+            la.add(&ClientUpdate {
+                client: c,
+                weight: g.f64(0.1, 10.0),
+                entries: vec![
+                    ("p".into(), AggOp::WeightedAvg, Payload::Params(gen_params(g))),
+                    ("s".into(), AggOp::Sum, Payload::Scalar(g.f64(-5.0, 5.0))),
+                    ("c".into(), AggOp::Collect, Payload::Scalar(g.f64(0.0, 9.0))),
+                ],
+            });
+        }
+        let agg = la.finish();
+        let wire = agg.encoded();
+        let back = DeviceAggregate::decode(&wire).map_err(|e| e.to_string())?;
+        if back.encoded() != wire {
+            return Err("re-encode differs".into());
+        }
+        if back.n_clients != n {
+            return Err("client count mutated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_manager_durable_any_interleaving() {
+    let dir = std::env::temp_dir().join(format!("parrot_prop_state_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sm = StateManager::new(&dir, 4096).unwrap();
+    let mut shadow: std::collections::HashMap<u64, Vec<u8>> = Default::default();
+    check("state durability", 200, |g| {
+        let client = g.int(0, 30) as u64;
+        if g.bool() {
+            let val: Vec<u8> = (0..g.int(0, 600)).map(|_| g.int(0, 255) as u8).collect();
+            sm.save(client, &val).map_err(|e| e.to_string())?;
+            shadow.insert(client, val);
+        } else {
+            let got = sm.load(client).map_err(|e| e.to_string())?;
+            if got.as_deref() != shadow.get(&client).map(|v| v.as_slice()) {
+                return Err(format!("client {client}: stored/loaded mismatch"));
+            }
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
