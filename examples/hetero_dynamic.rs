@@ -4,11 +4,36 @@
 //! without Time-Window scheduling — showing the scheduler absorbing the
 //! heterogeneity.
 //!
+//! # Dynamic scenarios
+//!
+//! Part 2 drives the discrete-event virtual-time engine through the
+//! §4.4 scenarios the old per-scheme loops could not represent:
+//!
+//! - **client availability < 1** — a Bernoulli(0.8) participation
+//!   model; unavailable clients are never scheduled;
+//! - **mid-round device departure + later rejoin** — the departing
+//!   device's in-flight and queued tasks are orphaned and re-placed on
+//!   the survivors through the scheduler's greedy step
+//!   (`DeviceLeave`/`DeviceJoin` events), and its history records are
+//!   pruned so a replacement device re-learns its workload model;
+//! - **injected stragglers and mid-task client drops** — 10% of tasks
+//!   run 4x slower; 2% of clients vanish mid-task
+//!   (`ClientUnavailable`), wasting the partial compute.
+//!
+//! The real-compute part needs AOT artifacts (`make artifacts`) and the
+//! PJRT runtime; without them it is skipped and only the virtual part
+//! runs.
+//!
 //!     cargo run --release --example hetero_dynamic -- --rounds 5
 
-use parrot::cluster::ClusterProfile;
-use parrot::config::{RunConfig, SchedulerKind};
+use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::config::{RunConfig, Scheme, SchedulerKind};
 use parrot::coordinator::run_simulation;
+use parrot::data::{Partition, PartitionKind};
+use parrot::simulation::{
+    run_virtual, AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, CommModel, DynamicsSpec,
+    SlowdownLaw, StragglerSpec, VirtualSim,
+};
 use parrot::util::cli::Args;
 
 fn run(
@@ -43,13 +68,9 @@ fn run(
     Ok(t)
 }
 
-fn main() -> anyhow::Result<()> {
-    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
-    let args = Args::from_env()?;
-    let rounds = args.usize_or("rounds", 6)?;
+fn real_compute_part(rounds: usize) -> anyhow::Result<()> {
     let k = 4;
-    println!("hetero_dynamic: real compute, K={k}, R={rounds} (sleep-injected heterogeneity)\n");
-
+    println!("part 1: real compute, K={k}, R={rounds} (sleep-injected heterogeneity)\n");
     let homo = run("homo / greedy", ClusterProfile::homogeneous(k), SchedulerKind::Greedy, rounds)?;
     let hete_u = run(
         "hete / uniform (no sched)",
@@ -81,6 +102,85 @@ fn main() -> anyhow::Result<()> {
         "scheduling must not be slower than uniform under heterogeneity"
     );
     let _ = dyn_g;
-    println!("hetero_dynamic OK");
+    Ok(())
+}
+
+fn dynamic_scenarios() -> anyhow::Result<()> {
+    let (m, m_p, k, rounds, seed) = (500usize, 100usize, 8usize, 8usize, 5u64);
+    println!("\npart 2: dynamic scenarios on the discrete-event engine");
+    println!("        (M={m}, M_p={m_p}, K={k}: availability 0.8, leave@r2 + join@r5, stragglers)\n");
+    let dynamics = DynamicsSpec {
+        availability: AvailabilityModel::Bernoulli(0.8),
+        churn: ChurnSpec {
+            events: vec![
+                ChurnEvent { round: 2, device: 1, secs: 1.0, kind: ChurnKind::Leave },
+                ChurnEvent { round: 5, device: 1, secs: 0.0, kind: ChurnKind::Join },
+            ],
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        },
+        straggler: StragglerSpec { prob: 0.1, law: SlowdownLaw::Fixed(4.0), drop_prob: 0.02 },
+    };
+    let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+    let mut results = Vec::new();
+    for (scheme, sched, tag) in [
+        (Scheme::SdDist, SchedulerKind::Uniform, "SD Dist."),
+        (Scheme::FaDist, SchedulerKind::Uniform, "FA Dist."),
+        (Scheme::Parrot, SchedulerKind::TimeWindow(3), "Parrot"),
+    ] {
+        let mut sim = VirtualSim::new(
+            scheme,
+            ClusterProfile::heterogeneous(k),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            partition.clone(),
+            1,
+            seed,
+        )
+        .with_dynamics(dynamics.clone());
+        let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0xD1);
+        let t = rs.iter().skip(2).map(|r| r.total_secs).sum::<f64>() / (rounds - 2) as f64;
+        let util = rs.iter().map(|r| r.utilization()).sum::<f64>() / rs.len() as f64;
+        let departures: usize = rs.iter().map(|r| r.departures).sum();
+        let dropped: usize = rs.iter().map(|r| r.dropped_clients).sum();
+        let unavailable: usize = rs.iter().map(|r| r.unavailable_clients).sum();
+        println!(
+            "{tag:<10} round {t:>7.2}s  util {:>5.1}%  unavailable {unavailable:>3}  \
+             dropped {dropped:>3}  departures {departures}",
+            100.0 * util
+        );
+        anyhow::ensure!(departures >= 1, "{tag}: the scripted departure must fire");
+        anyhow::ensure!(util > 0.0 && util < 1.0, "{tag}: utilization must be non-degenerate");
+        results.push((tag, t));
+    }
+    // Parrot's scheduler absorbs the injected dynamics best.
+    let fa = results.iter().find(|(t, _)| *t == "FA Dist.").unwrap().1;
+    let parrot = results.iter().find(|(t, _)| *t == "Parrot").unwrap().1;
+    anyhow::ensure!(
+        parrot < fa,
+        "Parrot ({parrot:.2}s) must beat FA ({fa:.2}s) under dynamics"
+    );
+    Ok(())
+}
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts").join("mlp_train.hlo.txt").exists()
+}
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    let args = Args::from_env()?;
+    let rounds = args.usize_or("rounds", 6)?;
+    if artifacts_ready() {
+        // With artifacts present, a failing assertion here is a real
+        // regression and must fail the example.
+        real_compute_part(rounds)?;
+    } else {
+        println!("part 1 (real compute) skipped: artifacts/ not built (run `make artifacts`)");
+    }
+    dynamic_scenarios()?;
+    println!("\nhetero_dynamic OK");
     Ok(())
 }

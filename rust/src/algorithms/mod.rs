@@ -436,10 +436,9 @@ mod tests {
         let (u, _) = algo.client_update(&res, &b, None);
         // delta_norm = 10/10 = 1
         let d = u.entries.iter().find(|(n, _, _)| n == "delta_norm").unwrap();
-        if let Payload::Params(p) = &d.2 {
-            assert!((p.tensors[0][0] - 1.0).abs() < 1e-6);
-        } else {
-            panic!()
+        match &d.2 {
+            Payload::Params(p) => assert!((p.tensors[0][0] - 1.0).abs() < 1e-6),
+            other => unreachable!("delta_norm must carry a Params payload, got {other:?}"),
         }
         // special param present
         assert!(u.entries.iter().any(|(n, op, _)| n == "tau" && *op == AggOp::Collect));

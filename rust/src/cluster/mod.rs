@@ -187,6 +187,14 @@ impl ClusterProfile {
         self.latency + bytes as f64 / self.bandwidth
     }
 
+    /// Device-model index backing executor `slot`.  Schemes that spin
+    /// up more executors than the profile has physical devices (RW/SD
+    /// launch one executor per selected client) cycle through the
+    /// profile's models so heterogeneity still shapes their timeline.
+    pub fn executor_model(&self, slot: usize) -> usize {
+        slot % self.devices.len()
+    }
+
     /// Modeled runtime of a task of `n_samples`·`epochs` on device `k`
     /// at round `r` (Eq. 2 with the heterogeneity multipliers applied).
     pub fn task_time(

@@ -9,6 +9,7 @@
 use crate::cluster::ClusterProfile;
 use crate::coordinator::selection::Selection;
 use crate::data::PartitionKind;
+use crate::simulation::{AvailabilityModel, ChurnSpec, DynamicsSpec, StragglerSpec};
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 
@@ -125,6 +126,9 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Client selection strategy (Alg. 1's "server selects").
     pub selection: Selection,
+    /// Client availability, device churn, and straggler injection for
+    /// the virtual-time engine (default: fully static).
+    pub dynamics: DynamicsSpec,
 }
 
 impl Default for RunConfig {
@@ -151,6 +155,7 @@ impl Default for RunConfig {
             eval_batches: 10,
             eval_every: 1,
             selection: Selection::Random,
+            dynamics: DynamicsSpec::default(),
         }
     }
 }
@@ -211,6 +216,19 @@ impl RunConfig {
         if let Some(sel) = a.get("selection") {
             self.selection = Selection::parse(sel)?;
         }
+        if let Some(av) = a.get("availability") {
+            self.dynamics.availability = AvailabilityModel::parse(av)?;
+        }
+        if let Some(ch) = a.get("churn") {
+            self.dynamics.churn = ChurnSpec::parse(ch)?;
+        }
+        if let Some(st) = a.get("stragglers") {
+            let drop_prob = self.dynamics.straggler.drop_prob;
+            self.dynamics.straggler = StragglerSpec::parse(st)?;
+            self.dynamics.straggler.drop_prob = drop_prob;
+        }
+        self.dynamics.straggler.drop_prob =
+            a.f64_or("drop-prob", self.dynamics.straggler.drop_prob)?;
         self.validate()?;
         Ok(self)
     }
@@ -236,6 +254,7 @@ impl RunConfig {
                 self.n_devices
             );
         }
+        self.dynamics.validate()?;
         Ok(())
     }
 
@@ -285,6 +304,32 @@ mod tests {
         assert!(RunConfig::default()
             .apply_args(&args(&["--scheme", "wat"]))
             .is_err());
+    }
+
+    #[test]
+    fn dynamics_flags_parse_and_validate() {
+        let c = RunConfig::default()
+            .apply_args(&args(&[
+                "--availability", "0.8",
+                "--churn", "leave@2:1:5.0,join@5:1",
+                "--stragglers", "0.1:x4",
+                "--drop-prob", "0.02",
+            ]))
+            .unwrap();
+        assert!(!c.dynamics.is_static());
+        assert!(matches!(
+            c.dynamics.availability,
+            AvailabilityModel::Bernoulli(p) if (p - 0.8).abs() < 1e-12
+        ));
+        assert_eq!(c.dynamics.churn.events.len(), 2);
+        assert!((c.dynamics.straggler.prob - 0.1).abs() < 1e-12);
+        assert!((c.dynamics.straggler.drop_prob - 0.02).abs() < 1e-12);
+        // defaults stay fully static
+        assert!(RunConfig::default().dynamics.is_static());
+        // bad specs rejected
+        assert!(RunConfig::default().apply_args(&args(&["--availability", "1.8"])).is_err());
+        assert!(RunConfig::default().apply_args(&args(&["--churn", "explode@1:2"])).is_err());
+        assert!(RunConfig::default().apply_args(&args(&["--drop-prob", "7"])).is_err());
     }
 
     #[test]

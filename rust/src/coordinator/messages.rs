@@ -250,7 +250,7 @@ mod tests {
                 assert_eq!(broadcast.extra, Some(params(0.5)));
                 assert_eq!(clients, vec![3, 1, 4, 1, 5]);
             }
-            _ => panic!("wrong variant"),
+            other => panic!("Msg::Round must round-trip to itself, decoded {other:?}"),
         }
     }
 
@@ -275,7 +275,7 @@ mod tests {
                 assert_eq!(records[0].secs, 1.25);
                 assert_eq!(busy_secs, 2.5);
             }
-            _ => panic!("wrong variant"),
+            other => panic!("Msg::RoundDone must round-trip to itself, decoded {other:?}"),
         }
     }
 
@@ -299,7 +299,7 @@ mod tests {
                 assert_eq!(update.entries.len(), 2);
                 assert_eq!(update.entries[1].1, AggOp::Collect);
             }
-            _ => panic!("wrong variant"),
+            other => panic!("Msg::TaskDone must round-trip to itself, decoded {other:?}"),
         }
     }
 

@@ -128,11 +128,12 @@ pub fn table1(args: &Args) -> Result<()> {
 pub fn table2(args: &Args) -> Result<()> {
     let rows = [
         ("SP", "coordinator::server (scheme sp)", "integration_training::sp_scheme_single_device"),
-        ("RW Dist.", "simulation::round_sd", "simulation tests"),
-        ("SD Dist.", "simulation::round_sd", "simulation tests"),
+        ("RW Dist.", "simulation::engine (per-client executors)", "simulation tests"),
+        ("SD Dist.", "simulation::engine (per-client executors)", "simulation tests"),
         ("FA Dist.", "coordinator::server::round_fa", "integration_training::fa_mode_*"),
         ("Scalability", "virtual engine @ 10k clients", "exp fig10"),
         ("Flexible Hardware Conf.", "cluster profiles homo/hete/dyn/c", "exp fig9"),
+        ("Dynamic Availability/Churn", "simulation::availability + event engine", "exp dynamics"),
         ("Real-world Deployment", "transport::tcp", "examples/deploy_tcp.rs"),
         ("Task Scheduling", "scheduler (Alg. 3)", "exp fig7/fig8"),
         ("Client State Manager", "state::StateManager", "integration_training::stateful_*"),

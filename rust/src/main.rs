@@ -29,7 +29,9 @@ USAGE:
                [--partition natural|dirichlet:A|qskew:S] [--scheme sp|fa|parrot]
                [--scheduler uniform|greedy|window:T] [--cluster homo|hete|dyn|c]
                [--seed S] [--artifacts DIR] [--state-dir DIR]
-  parrot exp <table1|table2|table3|fig4|...|fig11|all> [--results DIR] [...]
+               [--availability always|P|periodic:T:O] [--churn leave@R:D[:T],join@R:D[:T],rand:PL:PJ]
+               [--stragglers off|P:xS|P:u:LO:HI|P:p:A] [--drop-prob Q]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|ablate|all> [--results DIR] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]
@@ -86,6 +88,12 @@ fn load_cfg(args: &Args) -> Result<RunConfig> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
+    if !cfg.dynamics.is_static() {
+        println!(
+            "note: --availability/--churn/--stragglers shape the virtual-time engine \
+             (`parrot exp dynamics`); the real-compute round loop runs all selected clients."
+        );
+    }
     println!(
         "parrot run: {} on {} | M={} M_p={} K={} R={} scheme={} scheduler={} cluster={}",
         cfg.algorithm,

@@ -14,9 +14,19 @@ use super::workload::DeviceEstimate;
 
 /// Warm-up / ablation assignment: round-robin by arbitrary order.
 pub fn uniform_assign(clients: &[(usize, usize)], k: usize) -> Vec<Vec<usize>> {
-    let mut out = vec![Vec::new(); k];
+    uniform_assign_masked(clients, &vec![true; k])
+}
+
+/// Round-robin over the *alive* device slots only (mid-run device
+/// departures leave holes in the slot space; dead slots get nothing).
+pub fn uniform_assign_masked(clients: &[(usize, usize)], alive: &[bool]) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); alive.len()];
+    let slots: Vec<usize> = (0..alive.len()).filter(|&i| alive[i]).collect();
+    if slots.is_empty() {
+        return out;
+    }
     for (i, (client, _)) in clients.iter().enumerate() {
-        out[i % k].push(*client);
+        out[slots[i % slots.len()]].push(*client);
     }
     out
 }
@@ -29,25 +39,46 @@ pub fn greedy_assign(
     est: &[DeviceEstimate],
 ) -> (Vec<Vec<usize>>, Vec<f64>) {
     let k = est.len();
-    assert!(k > 0);
+    greedy_assign_from(clients, est, &vec![true; k], &vec![0.0; k])
+}
+
+/// The same greedy min-max step, generalized for mid-round re-planning:
+/// only `alive` devices may receive work, and each device starts from
+/// `base_load` predicted-busy seconds (its already-committed work).
+/// This is what re-places orphaned tasks after a device departure —
+/// Alg. 3's placement rule applied to the surviving devices.
+pub fn greedy_assign_from(
+    clients: &[(usize, usize)],
+    est: &[DeviceEstimate],
+    alive: &[bool],
+    base_load: &[f64],
+) -> (Vec<Vec<usize>>, Vec<f64>) {
+    let k = est.len();
+    assert!(k > 0 && alive.len() == k && base_load.len() == k);
+    let mut assignment = vec![Vec::new(); k];
+    let mut w = base_load.to_vec();
+    if !alive.iter().any(|&a| a) {
+        return (assignment, w);
+    }
     let mut order: Vec<&(usize, usize)> = clients.iter().collect();
     // Descending size; ties by client id for determinism.
     order.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
 
-    let mut assignment = vec![Vec::new(); k];
-    let mut w = vec![0.0f64; k];
     for &&(client, n) in &order {
         // Eq. 4: the device whose updated load minimizes the makespan.
         // Since only w[k*] changes, argmin over k of the resulting
         // max(w[k] + T_{m,k}, max_{j≠k} w[j]) reduces to scanning k.
-        let mut best = 0usize;
+        let mut best = usize::MAX;
         let mut best_cost = f64::INFINITY;
         for (kk, e) in est.iter().enumerate() {
+            if !alive[kk] {
+                continue;
+            }
             let new_wk = w[kk] + e.predict(n);
             // makespan if assigned to kk
             let mut ms = new_wk;
             for (jj, &wj) in w.iter().enumerate() {
-                if jj != kk && wj > ms {
+                if alive[jj] && jj != kk && wj > ms {
                     ms = wj;
                 }
             }
@@ -233,6 +264,40 @@ mod tests {
                 Err(format!("bad partition: {} of {}", seen.len(), m))
             }
         });
+    }
+
+    #[test]
+    fn masked_uniform_skips_dead_slots() {
+        let clients: Vec<(usize, usize)> = (0..6).map(|i| (i, 10)).collect();
+        let asg = uniform_assign_masked(&clients, &[true, false, true, false]);
+        assert!(asg[1].is_empty() && asg[3].is_empty());
+        assert_eq!(asg[0].len() + asg[2].len(), 6);
+        // no alive slot: nothing placed, nothing panics
+        let none = uniform_assign_masked(&clients, &[false, false]);
+        assert!(none.iter().all(|a| a.is_empty()));
+    }
+
+    #[test]
+    fn masked_greedy_respects_alive_and_base_load() {
+        let est = homo(3);
+        let clients: Vec<(usize, usize)> = (0..9).map(|i| (i, 100)).collect();
+        // device 1 dead; device 0 already committed to 10s of work
+        let (asg, w) = greedy_assign_from(&clients, &est, &[true, false, true], &[10.0, 0.0, 0.0]);
+        assert!(asg[1].is_empty(), "dead device must get nothing: {asg:?}");
+        assert_eq!(asg[0].len() + asg[2].len(), 9);
+        // the unloaded device should absorb (nearly) everything
+        assert!(asg[2].len() > asg[0].len(), "{asg:?}");
+        assert!(w[0] >= 10.0);
+    }
+
+    #[test]
+    fn masked_greedy_matches_unmasked_when_all_alive() {
+        let clients: Vec<(usize, usize)> = (0..23).map(|i| (i, 10 + 7 * i)).collect();
+        let est = homo(4);
+        let a = greedy_assign(&clients, &est);
+        let b = greedy_assign_from(&clients, &est, &[true; 4], &[0.0; 4]);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 pub mod greedy;
 pub mod workload;
 
-pub use greedy::{greedy_assign, uniform_assign};
+pub use greedy::{greedy_assign, greedy_assign_from, uniform_assign, uniform_assign_masked};
 pub use workload::{DeviceEstimate, History, TaskRecord};
 
 use crate::config::SchedulerKind;
@@ -30,6 +30,10 @@ pub struct Schedule {
     pub overhead_secs: f64,
     /// Whether the fitted model (vs the warm-up uniform split) was used.
     pub used_model: bool,
+    /// The per-device estimates the greedy pass used (None in the
+    /// uniform/warm-up branch) — exposed so callers computing
+    /// prediction error don't re-fit the whole history.
+    pub estimates: Option<Vec<DeviceEstimate>>,
 }
 
 /// Stateful scheduler: owns the runtime history and applies Alg. 3.
@@ -54,40 +58,88 @@ impl Scheduler {
 
     /// Schedule `clients` = (client id, effective samples N_m·E) for round `r`.
     pub fn schedule(&mut self, round: usize, clients: &[(usize, usize)]) -> Schedule {
+        let alive = vec![true; self.n_devices];
+        self.schedule_masked(round, clients, &alive)
+    }
+
+    /// [`Scheduler::schedule`] restricted to the `alive` device slots —
+    /// the entry point when the cluster has lost (or not yet regained)
+    /// devices.  Dead slots receive no work and contribute nothing to
+    /// the makespan objective.
+    pub fn schedule_masked(
+        &mut self,
+        round: usize,
+        clients: &[(usize, usize)],
+        alive: &[bool],
+    ) -> Schedule {
+        assert_eq!(alive.len(), self.n_devices, "alive mask length");
         let sw = crate::util::timer::Stopwatch::start();
         let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
         let in_warmup = round < self.warmup_rounds;
         if uniform_only || in_warmup {
-            let assignment = uniform_assign(clients, self.n_devices);
+            let assignment = uniform_assign_masked(clients, alive);
             let predicted = vec![0.0; self.n_devices];
             return Schedule {
                 assignment,
                 predicted,
                 overhead_secs: sw.elapsed_secs(),
                 used_model: false,
+                estimates: None,
             };
         }
-        let window = match self.kind {
-            SchedulerKind::TimeWindow(t) => Some(t),
-            _ => None,
-        };
+        let window = self.window();
         let estimates = self.history.estimate(self.n_devices, round, window);
-        let (assignment, predicted) = greedy_assign(clients, &estimates);
+        let (assignment, predicted) =
+            greedy_assign_from(clients, &estimates, alive, &vec![0.0; self.n_devices]);
         Schedule {
             assignment,
             predicted,
             overhead_secs: sw.elapsed_secs(),
             used_model: true,
+            estimates: Some(estimates),
+        }
+    }
+
+    /// Re-place tasks orphaned by a mid-round device departure: the
+    /// same greedy min-max step (Eq. 4) over the surviving devices,
+    /// starting from each survivor's already-committed `base_load`
+    /// predicted seconds.  Returns per-device lists of the orphaned
+    /// ids (the caller's task/client handles).
+    pub fn reassign_orphans(
+        &mut self,
+        round: usize,
+        orphans: &[(usize, usize)],
+        alive: &[bool],
+        base_load: &[f64],
+    ) -> Vec<Vec<usize>> {
+        if orphans.is_empty() || !alive.iter().any(|&a| a) {
+            return vec![Vec::new(); self.n_devices];
+        }
+        let window = self.window();
+        let estimates = self.history.estimate(self.n_devices, round, window);
+        greedy_assign_from(orphans, &estimates, alive, base_load).0
+    }
+
+    /// Forget a departed device's runtime records (its slot may later
+    /// host different hardware — see [`History::prune_device`]).
+    pub fn prune_device(&mut self, device: usize) {
+        self.history.prune_device(device);
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    fn window(&self) -> Option<usize> {
+        match self.kind {
+            SchedulerKind::TimeWindow(t) => Some(t),
+            _ => None,
         }
     }
 
     /// Current per-device estimates (Fig. 6 visualization).
     pub fn estimates(&self, round: usize) -> Vec<DeviceEstimate> {
-        let window = match self.kind {
-            SchedulerKind::TimeWindow(t) => Some(t),
-            _ => None,
-        };
-        self.history.estimate(self.n_devices, round, window)
+        self.history.estimate(self.n_devices, round, self.window())
     }
 }
 
@@ -133,6 +185,60 @@ mod tests {
             s.record(TaskRecord { round: r, device: 0, n_samples: 10, secs: 1.0 });
         }
         assert!(!s.schedule(10, &clients(&[1, 2, 3])).used_model);
+    }
+
+    #[test]
+    fn masked_schedule_avoids_dead_devices() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 3);
+        for r in 0..3 {
+            for d in 0..3 {
+                s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+            }
+        }
+        let sch = s.schedule_masked(3, &clients(&[50, 40, 30, 20]), &[true, false, true]);
+        assert!(sch.used_model);
+        assert!(sch.assignment[1].is_empty(), "{:?}", sch.assignment);
+        let total: usize = sch.assignment.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 4);
+        // uniform branch honors the mask too
+        let mut u = Scheduler::new(SchedulerKind::Uniform, 0, 3);
+        let sch = u.schedule_masked(0, &clients(&[50, 40, 30, 20]), &[false, true, true]);
+        assert!(sch.assignment[0].is_empty());
+    }
+
+    #[test]
+    fn reassign_orphans_prefers_lightly_loaded_survivors() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 3);
+        for r in 0..2 {
+            for d in 0..3 {
+                s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: d, n_samples: 300, secs: 3.0 });
+            }
+        }
+        // device 0 departed; device 1 is nearly free, device 2 is loaded
+        let placed = s.reassign_orphans(
+            2,
+            &[(7, 100), (8, 100), (9, 100)],
+            &[false, true, true],
+            &[0.0, 0.5, 30.0],
+        );
+        assert!(placed[0].is_empty(), "{placed:?}");
+        assert_eq!(placed.iter().map(|p| p.len()).sum::<usize>(), 3);
+        assert!(placed[1].len() >= placed[2].len(), "{placed:?}");
+        // no survivors -> nothing placed (caller drops the tasks)
+        let none = s.reassign_orphans(2, &[(1, 10)], &[false, false, false], &[0.0, 0.0, 0.0]);
+        assert!(none.iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn prune_device_forgets_history() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 2);
+        s.record(TaskRecord { round: 0, device: 0, n_samples: 10, secs: 1.0 });
+        s.record(TaskRecord { round: 0, device: 1, n_samples: 10, secs: 1.0 });
+        s.prune_device(0);
+        assert_eq!(s.history.len(), 1);
+        assert!(s.history.records().iter().all(|r| r.device == 1));
     }
 
     #[test]

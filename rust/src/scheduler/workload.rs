@@ -73,6 +73,15 @@ impl History {
         self.records.retain(|r| r.round >= before_round);
     }
 
+    /// Drop every record for `device` — called when a device departs
+    /// the cluster.  Its slot may later be re-filled by a different
+    /// physical device (DeviceJoin), whose workload model must be
+    /// re-learned from scratch rather than inherited from the old
+    /// hardware's runtimes.
+    pub fn prune_device(&mut self, device: usize) {
+        self.records.retain(|r| r.device != device);
+    }
+
     /// Fit Eq. 2 for each of `k` devices at scheduling round `round`,
     /// using only records within `window` rounds when given
     /// (`Estimate_Workload` in Alg. 3).
@@ -217,6 +226,22 @@ mod tests {
         h.prune(7);
         assert_eq!(h.len(), 3);
         assert!(h.records().iter().all(|r| r.round >= 7));
+    }
+
+    #[test]
+    fn prune_device_drops_only_that_device() {
+        let mut h = History::new();
+        for r in 0..4 {
+            h.push(rec(r, 0, 100, 1.0));
+            h.push(rec(r, 1, 100, 2.0));
+        }
+        h.prune_device(0);
+        assert_eq!(h.len(), 4);
+        assert!(h.records().iter().all(|r| r.device == 1));
+        // the departed device falls back to the global-ratio estimate
+        let est = h.estimate(2, 4, None);
+        assert_eq!(est[0].n_points, 0);
+        assert!(est[1].n_points > 0);
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Client availability, device churn, and straggler injection — the
+//! dynamic-hardware scenarios of §4.4 ("Tackling Dynamic Hardware
+//! Environments") that the per-scheme virtual-clock loops could never
+//! express, now first-class inputs to the discrete-event engine.
+//!
+//! Three orthogonal models, all seeded and deterministic:
+//!
+//! - [`AvailabilityModel`] — which *clients* can participate in a round
+//!   (Bernoulli draws, a periodic duty-cycle law, or an explicit
+//!   trace).  A client unavailable at round r is never scheduled; a
+//!   positive `drop_prob` in [`StragglerSpec`] additionally lets a
+//!   scheduled client vanish *mid-task* (the engine's
+//!   `ClientUnavailable` event).
+//! - [`ChurnSpec`] — *devices* joining/leaving, either scripted
+//!   (`leave@round:slot[:secs]`) or as per-round random rates.  A
+//!   departure mid-round orphans the device's tasks; the engine
+//!   re-places them through the scheduler's greedy step.
+//! - [`StragglerSpec`] — injectable stragglers: with probability `prob`
+//!   a task's duration is multiplied by a draw from a configurable
+//!   [`SlowdownLaw`] (fixed, uniform, or Pareto-tailed).
+//!
+//! [`DynamicsSpec`] bundles the three and rides on
+//! [`RunConfig`](crate::config::RunConfig) (CLI: `--availability`,
+//! `--churn`, `--stragglers`, `--drop-prob`).  The default spec is
+//! fully static, under which the engine reproduces the legacy
+//! closed-form timelines exactly.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Round-level client availability.
+#[derive(Debug, Clone, Default)]
+pub enum AvailabilityModel {
+    /// Every client is always available (the static baseline).
+    #[default]
+    Always,
+    /// Each (round, client) pair is available independently with
+    /// probability `p` — the classic cross-device participation model.
+    Bernoulli(f64),
+    /// Deterministic duty cycle: client `c` is offline at round `r`
+    /// when `(r + c) % period < offline` — a cheap stand-in for
+    /// diurnal / charging-pattern traces.
+    Periodic { period: usize, offline: usize },
+    /// Explicit trace: `round -> set of unavailable clients`.
+    Trace(BTreeMap<usize, BTreeSet<usize>>),
+}
+
+impl AvailabilityModel {
+    /// Is `client` available at `round`?  Deterministic in
+    /// `(seed, round, client)` so repeated queries agree.
+    pub fn is_available(&self, round: usize, client: usize, seed: u64) -> bool {
+        match self {
+            AvailabilityModel::Always => true,
+            AvailabilityModel::Bernoulli(p) => {
+                let mut r = Rng::new(seed ^ 0xA11A_B1E5)
+                    .derive(round as u64)
+                    .derive(client as u64);
+                r.next_f64() < *p
+            }
+            AvailabilityModel::Periodic { period, offline } => {
+                if *period == 0 {
+                    true
+                } else {
+                    (round + client) % period >= *offline
+                }
+            }
+            AvailabilityModel::Trace(t) => {
+                !t.get(&round).map(|s| s.contains(&client)).unwrap_or(false)
+            }
+        }
+    }
+
+    /// Parse `always | 0.8 | bernoulli:0.8 | periodic:PERIOD:OFFLINE`.
+    pub fn parse(s: &str) -> Result<AvailabilityModel> {
+        if s == "always" || s == "1" || s == "1.0" {
+            return Ok(AvailabilityModel::Always);
+        }
+        if let Some(p) = s.strip_prefix("bernoulli:") {
+            return Self::bernoulli_checked(p.parse()?);
+        }
+        if let Some(rest) = s.strip_prefix("periodic:") {
+            let (period, offline) = match rest.split_once(':') {
+                Some((a, b)) => (a.parse()?, b.parse()?),
+                None => bail!("periodic availability needs periodic:PERIOD:OFFLINE"),
+            };
+            return Ok(AvailabilityModel::Periodic { period, offline });
+        }
+        if let Ok(p) = s.parse::<f64>() {
+            return Self::bernoulli_checked(p);
+        }
+        bail!("unknown availability model {s:?} (always|P|bernoulli:P|periodic:T:O)")
+    }
+
+    fn bernoulli_checked(p: f64) -> Result<AvailabilityModel> {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("availability probability {p} outside [0, 1]");
+        }
+        Ok(AvailabilityModel::Bernoulli(p))
+    }
+}
+
+/// Scripted or random device arrival/departure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    Join,
+    Leave,
+}
+
+/// One scripted churn event: at virtual second `secs` of round `round`,
+/// executor slot `device` joins or leaves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub round: usize,
+    pub device: usize,
+    pub secs: f64,
+    pub kind: ChurnKind,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ChurnSpec {
+    pub events: Vec<ChurnEvent>,
+    /// Per-round probability that an alive device departs mid-round.
+    pub leave_prob: f64,
+    /// Per-round probability that a departed slot rejoins mid-round.
+    pub join_prob: f64,
+}
+
+impl ChurnSpec {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.leave_prob == 0.0 && self.join_prob == 0.0
+    }
+
+    /// Scripted events for one round.
+    pub fn scripted(&self, round: usize) -> impl Iterator<Item = &ChurnEvent> {
+        self.events.iter().filter(move |e| e.round == round)
+    }
+
+    /// Parse a comma-separated list of
+    /// `leave@ROUND:SLOT[:SECS]`, `join@ROUND:SLOT[:SECS]`, and
+    /// `rand:LEAVE_P:JOIN_P` tokens, e.g.
+    /// `leave@2:1:5.0,join@5:1,rand:0.02:0.05`.
+    pub fn parse(s: &str) -> Result<ChurnSpec> {
+        let mut out = ChurnSpec::default();
+        if s == "off" || s.is_empty() {
+            return Ok(out);
+        }
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if let Some(rest) = tok.strip_prefix("rand:") {
+                let (pl, pj) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("rand churn needs rand:LEAVE_P:JOIN_P"))?;
+                out.leave_prob = pl.parse()?;
+                out.join_prob = pj.parse()?;
+                if !(0.0..=1.0).contains(&out.leave_prob)
+                    || !(0.0..=1.0).contains(&out.join_prob)
+                {
+                    bail!("churn probabilities must lie in [0, 1]: {tok:?}");
+                }
+                continue;
+            }
+            let kind = if tok.starts_with("leave@") {
+                ChurnKind::Leave
+            } else if tok.starts_with("join@") {
+                ChurnKind::Join
+            } else {
+                bail!("unknown churn token {tok:?} (leave@R:D[:T]|join@R:D[:T]|rand:PL:PJ)");
+            };
+            let body = tok.split_once('@').map(|(_, b)| b).unwrap_or_default();
+            let parts: Vec<&str> = body.split(':').collect();
+            if parts.len() < 2 || parts.len() > 3 {
+                bail!("churn token {tok:?} needs ROUND:SLOT or ROUND:SLOT:SECS");
+            }
+            out.events.push(ChurnEvent {
+                round: parts[0].parse()?,
+                device: parts[1].parse()?,
+                secs: if parts.len() == 3 { parts[2].parse()? } else { 0.0 },
+                kind,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// The slowdown multiplier law a straggling task draws from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlowdownLaw {
+    /// Constant multiplier.
+    Fixed(f64),
+    /// Uniform in [lo, hi].
+    Uniform(f64, f64),
+    /// Pareto tail with the given alpha (scale 1): heavy-tailed
+    /// stragglers, the empirically observed shape.
+    Pareto(f64),
+}
+
+impl SlowdownLaw {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let s = match *self {
+            SlowdownLaw::Fixed(s) => s,
+            SlowdownLaw::Uniform(lo, hi) => rng.range_f64(lo, hi),
+            SlowdownLaw::Pareto(alpha) => {
+                let u = (1.0 - rng.next_f64()).max(1e-12);
+                u.powf(-1.0 / alpha.max(1e-6))
+            }
+        };
+        // A "slowdown" below 1x would be a speedup; clamp it out.
+        s.max(1.0)
+    }
+}
+
+/// Injectable stragglers + mid-task client drops.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerSpec {
+    /// Per-task probability of straggling.
+    pub prob: f64,
+    pub law: SlowdownLaw,
+    /// Per-task probability that the client becomes unavailable
+    /// mid-task (the engine's `ClientUnavailable` event): the work is
+    /// lost and the device freed at a uniform fraction of the task.
+    pub drop_prob: f64,
+}
+
+impl Default for StragglerSpec {
+    fn default() -> Self {
+        StragglerSpec { prob: 0.0, law: SlowdownLaw::Fixed(1.0), drop_prob: 0.0 }
+    }
+}
+
+impl StragglerSpec {
+    pub fn is_off(&self) -> bool {
+        self.prob == 0.0 && self.drop_prob == 0.0
+    }
+
+    /// Parse `off | P:xS | P:u:LO:HI | P:p:ALPHA`, e.g. `0.1:x4`
+    /// (10% of tasks run 4x slower) or `0.05:p:1.5`.
+    pub fn parse(s: &str) -> Result<StragglerSpec> {
+        if s == "off" {
+            return Ok(StragglerSpec::default());
+        }
+        let (p, law) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("stragglers need P:LAW, e.g. 0.1:x4"))?;
+        let prob: f64 = p.parse()?;
+        if !(0.0..=1.0).contains(&prob) {
+            bail!("straggler probability {prob} outside [0, 1]");
+        }
+        let law = if let Some(x) = law.strip_prefix('x') {
+            SlowdownLaw::Fixed(x.parse()?)
+        } else if let Some(rest) = law.strip_prefix("u:") {
+            let (lo, hi) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("uniform law needs u:LO:HI"))?;
+            SlowdownLaw::Uniform(lo.parse()?, hi.parse()?)
+        } else if let Some(a) = law.strip_prefix("p:") {
+            SlowdownLaw::Pareto(a.parse()?)
+        } else {
+            bail!("unknown slowdown law {law:?} (xS|u:LO:HI|p:ALPHA)");
+        };
+        Ok(StragglerSpec { prob, law, drop_prob: 0.0 })
+    }
+}
+
+/// Everything dynamic about one run, bundled for `config` / the CLI.
+#[derive(Debug, Clone, Default)]
+pub struct DynamicsSpec {
+    pub availability: AvailabilityModel,
+    pub churn: ChurnSpec,
+    pub straggler: StragglerSpec,
+}
+
+impl DynamicsSpec {
+    /// True when nothing dynamic is configured — the engine then
+    /// reproduces the legacy static timelines bit-for-bit.
+    pub fn is_static(&self) -> bool {
+        matches!(self.availability, AvailabilityModel::Always)
+            && self.churn.is_empty()
+            && self.straggler.is_off()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let AvailabilityModel::Bernoulli(p) = self.availability {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("availability probability {p} outside [0, 1]");
+            }
+        }
+        if let AvailabilityModel::Periodic { period, offline } = self.availability {
+            if period == 0 || offline >= period {
+                bail!(
+                    "periodic availability needs 0 <= offline < period, got {offline}/{period} \
+                     (offline >= period means every client is permanently offline)"
+                );
+            }
+        }
+        for p in [
+            self.churn.leave_prob,
+            self.churn.join_prob,
+            self.straggler.prob,
+            self.straggler.drop_prob,
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("dynamics probability {p} outside [0, 1]");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_and_trace() {
+        let a = AvailabilityModel::Always;
+        assert!(a.is_available(3, 9, 1));
+        let mut t = BTreeMap::new();
+        t.insert(2usize, [5usize, 7].into_iter().collect::<BTreeSet<_>>());
+        let tr = AvailabilityModel::Trace(t);
+        assert!(!tr.is_available(2, 5, 1));
+        assert!(!tr.is_available(2, 7, 1));
+        assert!(tr.is_available(2, 6, 1));
+        assert!(tr.is_available(3, 5, 1));
+    }
+
+    #[test]
+    fn bernoulli_is_deterministic_and_roughly_calibrated() {
+        let b = AvailabilityModel::Bernoulli(0.7);
+        let first: Vec<bool> = (0..500).map(|c| b.is_available(4, c, 11)).collect();
+        let second: Vec<bool> = (0..500).map(|c| b.is_available(4, c, 11)).collect();
+        assert_eq!(first, second, "same (seed, round, client) must agree");
+        let frac = first.iter().filter(|&&x| x).count() as f64 / 500.0;
+        assert!((frac - 0.7).abs() < 0.08, "frac={frac}");
+        // a different round reshuffles who is available
+        let other: Vec<bool> = (0..500).map(|c| b.is_available(5, c, 11)).collect();
+        assert_ne!(first, other);
+    }
+
+    #[test]
+    fn periodic_duty_cycle() {
+        let p = AvailabilityModel::Periodic { period: 4, offline: 1 };
+        // client 0: offline at rounds 0, 4, 8, ...
+        assert!(!p.is_available(0, 0, 1));
+        assert!(p.is_available(1, 0, 1));
+        assert!(!p.is_available(4, 0, 1));
+        // phase-shifted per client
+        assert!(!p.is_available(3, 1, 1));
+    }
+
+    #[test]
+    fn availability_parse() {
+        assert!(matches!(AvailabilityModel::parse("always").unwrap(), AvailabilityModel::Always));
+        assert!(matches!(
+            AvailabilityModel::parse("0.8").unwrap(),
+            AvailabilityModel::Bernoulli(p) if (p - 0.8).abs() < 1e-12
+        ));
+        assert!(matches!(
+            AvailabilityModel::parse("bernoulli:0.5").unwrap(),
+            AvailabilityModel::Bernoulli(_)
+        ));
+        assert!(matches!(
+            AvailabilityModel::parse("periodic:10:3").unwrap(),
+            AvailabilityModel::Periodic { period: 10, offline: 3 }
+        ));
+        assert!(AvailabilityModel::parse("1.7").is_err());
+        assert!(AvailabilityModel::parse("wat").is_err());
+    }
+
+    #[test]
+    fn churn_parse_and_lookup() {
+        let c = ChurnSpec::parse("leave@2:1:5.0,join@5:1,rand:0.02:0.05").unwrap();
+        assert_eq!(c.events.len(), 2);
+        assert_eq!(c.events[0], ChurnEvent {
+            round: 2,
+            device: 1,
+            secs: 5.0,
+            kind: ChurnKind::Leave
+        });
+        assert_eq!(c.events[1].kind, ChurnKind::Join);
+        assert_eq!(c.events[1].secs, 0.0);
+        assert!((c.leave_prob - 0.02).abs() < 1e-12);
+        assert_eq!(c.scripted(2).count(), 1);
+        assert_eq!(c.scripted(3).count(), 0);
+        assert!(ChurnSpec::parse("explode@1:2").is_err());
+        assert!(ChurnSpec::parse("rand:2.0:0.0").is_err());
+        assert!(ChurnSpec::parse("off").unwrap().is_empty());
+    }
+
+    #[test]
+    fn straggler_parse_and_sampling() {
+        let s = StragglerSpec::parse("0.1:x4").unwrap();
+        assert_eq!(s.law, SlowdownLaw::Fixed(4.0));
+        let u = StragglerSpec::parse("0.2:u:2:6").unwrap();
+        let p = StragglerSpec::parse("0.05:p:1.5").unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            assert_eq!(s.law.sample(&mut rng), 4.0);
+            let x = u.law.sample(&mut rng);
+            assert!((2.0..=6.0).contains(&x));
+            assert!(p.law.sample(&mut rng) >= 1.0);
+        }
+        assert!(StragglerSpec::parse("1.5:x2").is_err());
+        assert!(StragglerSpec::parse("0.1:q9").is_err());
+        assert!(StragglerSpec::parse("off").unwrap().is_off());
+    }
+
+    #[test]
+    fn dynamics_spec_static_detection_and_validation() {
+        let d = DynamicsSpec::default();
+        assert!(d.is_static());
+        d.validate().unwrap();
+        let d2 = DynamicsSpec {
+            availability: AvailabilityModel::Bernoulli(0.9),
+            ..Default::default()
+        };
+        assert!(!d2.is_static());
+        d2.validate().unwrap();
+        let d3 = DynamicsSpec {
+            straggler: StragglerSpec { drop_prob: 1.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(d3.validate().is_err());
+        // a duty cycle that leaves every client permanently offline is
+        // a misconfiguration, not a scenario
+        let d4 = DynamicsSpec {
+            availability: AvailabilityModel::Periodic { period: 3, offline: 9 },
+            ..Default::default()
+        };
+        assert!(d4.validate().is_err());
+        let d5 = DynamicsSpec {
+            availability: AvailabilityModel::Periodic { period: 4, offline: 1 },
+            ..Default::default()
+        };
+        d5.validate().unwrap();
+    }
+}

@@ -1,0 +1,953 @@
+//! The discrete-event core shared by every scheme timeline.
+//!
+//! One binary-heap event queue ordered by `(virtual_time, seq)` drives
+//! the whole round; the scheme policies in [`super`] only decide *what*
+//! to enqueue (initial placement, pull vs. assigned refill, comm
+//! shape).  Event taxonomy:
+//!
+//! - `TaskStart`   — an executor begins a client task (straggler
+//!   injection and mid-task drop decisions happen here).
+//! - `TaskDone`    — compute finished; busy time booked, runtime record
+//!   fed back to the scheduler history.
+//! - `CommDone`    — a communication leg finished (FA's per-task
+//!   upload; the round-tail broadcast/upload chain).
+//! - `DeviceJoin`  — an executor slot (re)enters the cluster and starts
+//!   pulling work.
+//! - `DeviceLeave` — an executor departs mid-round; its in-flight and
+//!   queued tasks are orphaned and re-placed on the survivors via the
+//!   scheduler's greedy step ([`Scheduler::reassign_orphans`]).
+//! - `ClientUnavailable` — a scheduled client vanishes mid-task; the
+//!   partial work is wasted and the task is lost (not retried).
+//!
+//! Stale-event hygiene: every executor carries an `epoch` bumped on
+//! departure; task/comm events remember the epoch they were scheduled
+//! under and are discarded if it no longer matches (the discrete-event
+//! analogue of cancelling a timer).
+//!
+//! With a fully static [`DynamicsSpec`] the engine reproduces the
+//! legacy closed-form per-scheme loops exactly (property-tested in
+//! [`super::tests`]): same noise draws, same placements, same totals.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::scheduler::{Scheduler, TaskRecord};
+use crate::util::rng::Rng;
+
+use super::availability::{ChurnKind, DynamicsSpec};
+
+/// The event taxonomy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    TaskStart { task: usize, device: usize },
+    TaskDone { task: usize, device: usize },
+    CommDone { device: usize, bytes: u64 },
+    DeviceJoin { device: usize },
+    DeviceLeave { device: usize },
+    ClientUnavailable { task: usize, device: usize },
+}
+
+/// Heap entry: earliest virtual time pops first; ties break by
+/// insertion order (`seq`) for determinism.
+#[derive(Debug)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    epoch: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we pop the earliest event.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    Running,
+    Done,
+    Dropped,
+}
+
+/// One client task flowing through the engine.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    pub client: usize,
+    /// Effective samples N_m · E.
+    pub n_eff: usize,
+    /// Pre-drawn multiplicative measurement-noise factor (clamped to
+    /// ≥ 0.2 like the legacy `realize`); drawn at plan time in the
+    /// legacy iteration order so static runs reproduce old timelines.
+    pub noise: f64,
+    /// Scheduler-predicted seconds on the planned device (None during
+    /// warm-up / uniform scheduling) — feeds the est-err metric.
+    pub predicted: Option<f64>,
+    pub state: TaskState,
+    /// Realized compute seconds (valid once `Done`).
+    pub realized: f64,
+}
+
+impl SimTask {
+    pub fn new(client: usize, n_eff: usize, noise: f64) -> SimTask {
+        SimTask { client, n_eff, noise, predicted: None, state: TaskState::Pending, realized: 0.0 }
+    }
+}
+
+/// How a freed executor gets its next task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefillPolicy {
+    /// Run the pre-assigned per-executor queue only (SP, RW/SD, Parrot).
+    Assigned,
+    /// Pull the next task from the shared round queue (FA Dist.).
+    SharedPull,
+}
+
+/// Where a departed executor's orphaned tasks go.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReassignPolicy {
+    /// Back onto the front of the shared pull queue (FA Dist.).
+    Requeue,
+    /// Onto the alive executor with the least projected load (SP, RW/SD).
+    LeastLoaded,
+    /// Through the scheduler's greedy min-max step over the survivors
+    /// (Parrot, Alg. 3); falls back to `LeastLoaded` without a
+    /// scheduler or when executor slots don't map 1:1 to devices.
+    Greedy,
+}
+
+/// Round-tail communication shape (after the compute phase drains).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TailComm {
+    /// No round-tail communication (SP; FA pays per task instead).
+    None,
+    /// One broadcast down + one serialized upload per *completed task*
+    /// into the server NIC (RW/SD: every executor ships its client's
+    /// params).
+    PerExecutor { payload: u64 },
+    /// One broadcast + one locally-aggregated upload per alive device,
+    /// plus the special-params payload (Parrot's hierarchical
+    /// aggregation: upload = s_a·K + s_e·M_p).
+    Hierarchical { s_a: u64, s_e_total: u64 },
+}
+
+/// What a scheme policy hands the engine for one round.
+#[derive(Debug)]
+pub struct RoundPlan {
+    pub tasks: Vec<SimTask>,
+    /// Executor count (SP: 1, RW/SD: M_p, FA/Parrot: K).
+    pub n_exec: usize,
+    /// Initial alive mask per executor slot (length `n_exec`).
+    pub alive: Vec<bool>,
+    /// Initial per-executor task queues (`Assigned` refill).
+    pub assigned: Vec<Vec<usize>>,
+    /// Shared queue order (`SharedPull` refill).
+    pub pull: Vec<usize>,
+    pub refill: RefillPolicy,
+    pub reassign: ReassignPolicy,
+    /// Per-task comm seconds serialized on the executor around the
+    /// compute (down, up) — FA's params-move-per-task law.
+    pub per_task_comm: (f64, f64),
+    /// Per-task comm bytes (down, up).
+    pub per_task_bytes: (u64, u64),
+    pub tail: TailComm,
+    /// Feed completed-task records into the scheduler history and prune
+    /// it on departures (Parrot).
+    pub record_history: bool,
+}
+
+/// Per-executor runtime state.
+#[derive(Debug, Clone)]
+struct ExecState {
+    alive: bool,
+    epoch: u64,
+    busy: f64,
+    comm: f64,
+    wasted: f64,
+    queue: VecDeque<usize>,
+    /// (task, claim/start time, compute duration) — duration 0 until
+    /// `TaskStart` actually fires.
+    current: Option<(usize, f64, f64)>,
+}
+
+/// Everything the round produced.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    pub tasks: Vec<SimTask>,
+    /// Per-executor productive compute seconds.
+    pub busy: Vec<f64>,
+    /// Per-executor per-task comm occupancy seconds.
+    pub comm_occ: Vec<f64>,
+    /// Virtual time when the compute phase drained.
+    pub work_end: f64,
+    /// Virtual time after the round-tail comm chain.
+    pub end: f64,
+    pub bytes: u64,
+    pub trips: u64,
+    /// Aborted partial compute (departures + mid-task client drops).
+    pub wasted_secs: f64,
+    pub dropped_tasks: usize,
+    pub completed_tasks: usize,
+    pub departures: usize,
+    pub joins: usize,
+    /// Final alive mask (same length as the plan's executor space).
+    pub alive: Vec<bool>,
+}
+
+struct Core<'a> {
+    round: usize,
+    cluster: &'a ClusterProfile,
+    cost: &'a WorkloadCost,
+    dynamics: &'a DynamicsSpec,
+    rng: Rng,
+    tasks: Vec<SimTask>,
+    execs: Vec<ExecState>,
+    shared: VecDeque<usize>,
+    refill: RefillPolicy,
+    reassign: ReassignPolicy,
+    comm_down: f64,
+    comm_up: f64,
+    bytes_down: u64,
+    bytes_up: u64,
+    record_history: bool,
+    heap: BinaryHeap<Scheduled>,
+    now: f64,
+    work_end: f64,
+    seq: u64,
+    bytes: u64,
+    trips: u64,
+    wasted: f64,
+    dropped: usize,
+    completed: usize,
+    departures: usize,
+    joins: usize,
+}
+
+impl<'a> Core<'a> {
+    fn push(&mut self, time: f64, epoch: u64, event: Event) {
+        self.heap.push(Scheduled { time, seq: self.seq, epoch, event });
+        self.seq += 1;
+    }
+
+    fn alive_count(&self) -> usize {
+        self.execs.iter().filter(|e| e.alive).count()
+    }
+
+    /// Compute seconds of `task` on executor `slot` (heterogeneity ×
+    /// pre-drawn noise; straggler injection is applied at TaskStart).
+    fn base_secs(&self, slot: usize, task: usize) -> f64 {
+        let t = &self.tasks[task];
+        let model = self.cluster.executor_model(slot);
+        self.cluster.task_time(self.cost, model, self.round, t.n_eff, 1) * t.noise
+    }
+
+    /// Remaining committed seconds on `slot` (in-flight + queued) — the
+    /// base load the greedy reassignment step starts from.
+    fn projected_load(&self, slot: usize) -> f64 {
+        let e = &self.execs[slot];
+        let mut load = match e.current {
+            Some((_, start, dur)) => {
+                (start + self.comm_down + dur + self.comm_up - self.now).max(0.0)
+            }
+            None => 0.0,
+        };
+        for &t in &e.queue {
+            load += self.base_secs(slot, t) + self.comm_down + self.comm_up;
+        }
+        load
+    }
+
+    /// Claim the next task for `slot` (if idle and alive) and emit its
+    /// TaskStart event at the current time.
+    fn try_start(&mut self, slot: usize) {
+        if !self.execs[slot].alive || self.execs[slot].current.is_some() {
+            return;
+        }
+        let task = match self.refill {
+            RefillPolicy::Assigned => self.execs[slot].queue.pop_front(),
+            RefillPolicy::SharedPull => self.shared.pop_front(),
+        };
+        if let Some(task) = task {
+            // Claim now so no other same-time event double-assigns.
+            self.execs[slot].current = Some((task, self.now, 0.0));
+            let epoch = self.execs[slot].epoch;
+            self.push(self.now, epoch, Event::TaskStart { task, device: slot });
+        }
+    }
+
+    fn on_task_start(&mut self, slot: usize, task: usize) {
+        let mut dur = self.base_secs(slot, task);
+        let st = &self.dynamics.straggler;
+        if st.prob > 0.0 && self.rng.next_f64() < st.prob {
+            dur *= st.law.sample(&mut self.rng);
+        }
+        self.tasks[task].state = TaskState::Running;
+        self.execs[slot].current = Some((task, self.now, dur));
+        if self.bytes_down > 0 {
+            self.bytes += self.bytes_down;
+            self.trips += 1;
+        }
+        let epoch = self.execs[slot].epoch;
+        if st.drop_prob > 0.0 && self.rng.next_f64() < st.drop_prob {
+            let frac = self.rng.next_f64();
+            self.push(
+                self.now + self.comm_down + dur * frac,
+                epoch,
+                Event::ClientUnavailable { task, device: slot },
+            );
+        } else {
+            self.push(
+                self.now + self.comm_down + dur,
+                epoch,
+                Event::TaskDone { task, device: slot },
+            );
+        }
+    }
+
+    fn on_task_done(&mut self, slot: usize, task: usize, sched: &mut Option<&mut Scheduler>) {
+        let (_, _, dur) = self.execs[slot].current.expect("TaskDone without a current task");
+        self.execs[slot].busy += dur;
+        // The down leg has completed by now; the up leg is booked at
+        // its own CommDone (a departure mid-upload loses that leg).
+        self.execs[slot].comm += self.comm_down;
+        self.tasks[task].state = TaskState::Done;
+        self.tasks[task].realized = dur;
+        self.completed += 1;
+        self.work_end = self.now;
+        if self.record_history {
+            if let Some(s) = sched.as_deref_mut() {
+                s.record(TaskRecord {
+                    round: self.round,
+                    device: slot,
+                    n_samples: self.tasks[task].n_eff,
+                    secs: dur,
+                });
+            }
+        }
+        if self.comm_up > 0.0 || self.bytes_up > 0 {
+            let epoch = self.execs[slot].epoch;
+            self.push(
+                self.now + self.comm_up,
+                epoch,
+                Event::CommDone { device: slot, bytes: self.bytes_up },
+            );
+        } else {
+            self.execs[slot].current = None;
+            self.try_start(slot);
+        }
+    }
+
+    fn on_comm_done(&mut self, slot: usize, bytes: u64) {
+        if bytes > 0 {
+            self.bytes += bytes;
+            self.trips += 1;
+        }
+        self.execs[slot].comm += self.comm_up;
+        self.work_end = self.now;
+        self.execs[slot].current = None;
+        self.try_start(slot);
+    }
+
+    fn on_client_unavailable(&mut self, slot: usize, task: usize) {
+        let (cur, start, _) =
+            self.execs[slot].current.take().expect("ClientUnavailable without a current task");
+        debug_assert_eq!(cur, task);
+        let elapsed = (self.now - start - self.comm_down).max(0.0);
+        self.execs[slot].wasted += elapsed;
+        self.wasted += elapsed;
+        // The down leg did happen (the drop fires during compute).
+        self.execs[slot].comm += self.comm_down;
+        self.tasks[task].state = TaskState::Dropped;
+        self.dropped += 1;
+        self.work_end = self.now;
+        self.try_start(slot);
+    }
+
+    fn on_device_leave(&mut self, slot: usize, sched: &mut Option<&mut Scheduler>) {
+        if slot >= self.execs.len() || !self.execs[slot].alive {
+            return;
+        }
+        if self.alive_count() <= 1 {
+            // Never orphan the whole round: the last executor stays.
+            return;
+        }
+        self.execs[slot].alive = false;
+        self.execs[slot].epoch += 1;
+        self.departures += 1;
+        let mut orphans: Vec<usize> = Vec::new();
+        if let Some((task, start, dur)) = self.execs[slot].current.take() {
+            if self.tasks[task].state != TaskState::Done {
+                // Abort the in-flight task: partial work is wasted.
+                let elapsed =
+                    (self.now - start - self.comm_down).max(0.0).min(dur.max(0.0));
+                self.execs[slot].wasted += elapsed;
+                self.wasted += elapsed;
+                self.tasks[task].state = TaskState::Pending;
+                orphans.push(task);
+            }
+            // A Done task whose upload leg was in flight keeps its
+            // result (records were piggybacked at TaskDone); only the
+            // final comm trip is lost.
+        }
+        orphans.extend(self.execs[slot].queue.drain(..));
+        if self.record_history {
+            if let Some(s) = sched.as_deref_mut() {
+                s.prune_device(slot);
+            }
+        }
+        self.place_orphans(orphans, sched);
+        for s in 0..self.execs.len() {
+            self.try_start(s);
+        }
+    }
+
+    fn on_device_join(&mut self, slot: usize) {
+        // Joins re-activate a departed slot. Slots beyond the plan's
+        // executor space are ignored: the scheduler's device space is
+        // fixed for the run, so a brand-new slot could not persist
+        // past this round anyway.
+        if slot >= self.execs.len() || self.execs[slot].alive {
+            return;
+        }
+        self.execs[slot].alive = true;
+        self.joins += 1;
+        self.try_start(slot);
+    }
+
+    fn place_orphans(&mut self, orphans: Vec<usize>, sched: &mut Option<&mut Scheduler>) {
+        if orphans.is_empty() {
+            return;
+        }
+        let alive: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
+        if !alive.iter().any(|&a| a) {
+            for t in orphans {
+                self.tasks[t].state = TaskState::Dropped;
+                self.dropped += 1;
+            }
+            return;
+        }
+        match self.reassign {
+            ReassignPolicy::Requeue => {
+                for t in orphans.into_iter().rev() {
+                    self.shared.push_front(t);
+                }
+            }
+            ReassignPolicy::LeastLoaded => self.place_least_loaded(orphans),
+            ReassignPolicy::Greedy => {
+                let can_greedy = match sched.as_deref_mut() {
+                    Some(s) => s.n_devices() == self.execs.len(),
+                    None => false,
+                };
+                if can_greedy {
+                    let items: Vec<(usize, usize)> =
+                        orphans.iter().map(|&t| (t, self.tasks[t].n_eff)).collect();
+                    let base: Vec<f64> =
+                        (0..self.execs.len()).map(|i| self.projected_load(i)).collect();
+                    let placed = sched.as_deref_mut().unwrap().reassign_orphans(
+                        self.round,
+                        &items,
+                        &alive,
+                        &base,
+                    );
+                    for (slot, ts) in placed.into_iter().enumerate() {
+                        for t in ts {
+                            self.execs[slot].queue.push_back(t);
+                        }
+                    }
+                } else {
+                    self.place_least_loaded(orphans);
+                }
+            }
+        }
+    }
+
+    fn place_least_loaded(&mut self, orphans: Vec<usize>) {
+        for t in orphans {
+            let mut best = usize::MAX;
+            let mut best_load = f64::INFINITY;
+            for i in 0..self.execs.len() {
+                if !self.execs[i].alive {
+                    continue;
+                }
+                let l = self.projected_load(i);
+                if l < best_load {
+                    best_load = l;
+                    best = i;
+                }
+            }
+            self.execs[best].queue.push_back(t);
+        }
+    }
+
+    /// The round-tail comm chain, expressed as the serialized CommDone
+    /// sequence over the server NIC (bytes/trips booked per leg).
+    fn run_tail(&mut self, tail: TailComm, initial_alive: usize) {
+        let end = self.work_end;
+        let mut t = end;
+        match tail {
+            TailComm::None => {}
+            TailComm::PerExecutor { payload } => {
+                // Broadcast down to every scheduled task's executor.
+                let scheduled = self.tasks.len() as u64;
+                self.bytes += payload * scheduled;
+                self.trips += scheduled;
+                t += self.cluster.comm_time(payload as usize);
+                // Uploads serialize into the server NIC.
+                let per = self.cluster.latency + payload as f64 / self.cluster.bandwidth;
+                for _ in 0..self.completed {
+                    t += per;
+                    self.bytes += payload;
+                    self.trips += 1;
+                }
+            }
+            TailComm::Hierarchical { s_a, s_e_total } => {
+                let k_up = self.alive_count() as u64;
+                // Broadcast s_a down per initially-alive device.
+                self.bytes += s_a * initial_alive as u64;
+                self.trips += initial_alive as u64;
+                t += self.cluster.comm_time(s_a as usize);
+                // One aggregated upload per surviving device: the first
+                // pays the full payload time, the rest pipeline behind
+                // it at one trip latency each, plus the special-params
+                // payload (s_e · M_p) at the end.
+                if k_up > 0 {
+                    t += self.cluster.comm_time(s_a as usize);
+                    t += (k_up - 1) as f64 * self.cluster.latency;
+                    self.bytes += s_a * k_up + s_e_total;
+                    self.trips += k_up;
+                    if s_e_total > 0 {
+                        t += s_e_total as f64 / self.cluster.bandwidth;
+                    }
+                }
+            }
+        }
+        // Late churn events may have advanced `now` past the last real
+        // work; the round ends when work + tail comm end, not when the
+        // last scripted event was probed.
+        self.now = t;
+    }
+
+    fn run(mut self, tail: TailComm, mut sched: Option<&mut Scheduler>) -> RoundOutcome {
+        let initial_alive = self.alive_count();
+        for slot in 0..self.execs.len() {
+            self.try_start(slot);
+        }
+        while let Some(s) = self.heap.pop() {
+            self.now = self.now.max(s.time);
+            match s.event {
+                Event::TaskStart { task, device } => {
+                    if s.epoch != self.execs[device].epoch || !self.execs[device].alive {
+                        continue;
+                    }
+                    self.on_task_start(device, task);
+                }
+                Event::TaskDone { task, device } => {
+                    if s.epoch != self.execs[device].epoch {
+                        continue;
+                    }
+                    self.on_task_done(device, task, &mut sched);
+                }
+                Event::CommDone { device, bytes } => {
+                    if s.epoch != self.execs[device].epoch {
+                        continue;
+                    }
+                    self.on_comm_done(device, bytes);
+                }
+                Event::DeviceLeave { device } => self.on_device_leave(device, &mut sched),
+                Event::DeviceJoin { device } => self.on_device_join(device),
+                Event::ClientUnavailable { task, device } => {
+                    if s.epoch != self.execs[device].epoch {
+                        continue;
+                    }
+                    self.on_client_unavailable(device, task);
+                }
+            }
+        }
+        // Anything still pending had nowhere to run.
+        for t in &mut self.tasks {
+            if t.state == TaskState::Pending {
+                t.state = TaskState::Dropped;
+                self.dropped += 1;
+            }
+        }
+        self.run_tail(tail, initial_alive);
+        RoundOutcome {
+            busy: self.execs.iter().map(|e| e.busy).collect(),
+            comm_occ: self.execs.iter().map(|e| e.comm).collect(),
+            alive: self.execs.iter().map(|e| e.alive).collect(),
+            tasks: self.tasks,
+            work_end: self.work_end,
+            end: self.now,
+            bytes: self.bytes,
+            trips: self.trips,
+            wasted_secs: self.wasted,
+            dropped_tasks: self.dropped,
+            completed_tasks: self.completed,
+            departures: self.departures,
+            joins: self.joins,
+        }
+    }
+}
+
+/// Execute one round of `plan` on the discrete-event core.
+///
+/// `dyn_seed` seeds the dynamics stream (stragglers, drops, random
+/// churn) — a stream separate from the measurement-noise draws so that
+/// enabling dynamics never perturbs the base timeline's noise sequence.
+pub fn run_round(
+    plan: RoundPlan,
+    cluster: &ClusterProfile,
+    cost: &WorkloadCost,
+    round: usize,
+    dynamics: &DynamicsSpec,
+    dyn_seed: u64,
+    scheduler: Option<&mut Scheduler>,
+) -> RoundOutcome {
+    debug_assert_eq!(plan.alive.len(), plan.n_exec);
+    let mut rng = Rng::new(dyn_seed).derive(round as u64);
+    let execs: Vec<ExecState> = (0..plan.n_exec)
+        .map(|i| ExecState {
+            alive: plan.alive[i],
+            epoch: 0,
+            busy: 0.0,
+            comm: 0.0,
+            wasted: 0.0,
+            queue: plan.assigned.get(i).map(|q| q.iter().cloned().collect()).unwrap_or_default(),
+            current: None,
+        })
+        .collect();
+
+    let mut core = Core {
+        round,
+        cluster,
+        cost,
+        dynamics,
+        rng: rng.derive(0x57A6),
+        tasks: plan.tasks,
+        execs,
+        shared: plan.pull.into_iter().collect(),
+        refill: plan.refill,
+        reassign: plan.reassign,
+        comm_down: plan.per_task_comm.0,
+        comm_up: plan.per_task_comm.1,
+        bytes_down: plan.per_task_bytes.0,
+        bytes_up: plan.per_task_bytes.1,
+        record_history: plan.record_history,
+        heap: BinaryHeap::new(),
+        now: 0.0,
+        work_end: 0.0,
+        seq: 0,
+        bytes: 0,
+        trips: 0,
+        wasted: 0.0,
+        dropped: 0,
+        completed: 0,
+        departures: 0,
+        joins: 0,
+    };
+
+    if core.tasks.is_empty() {
+        return core.run(TailComm::None, scheduler);
+    }
+
+    // Scripted churn for this round.
+    for ev in dynamics.churn.scripted(round) {
+        let event = match ev.kind {
+            ChurnKind::Leave => Event::DeviceLeave { device: ev.device },
+            ChurnKind::Join => Event::DeviceJoin { device: ev.device },
+        };
+        core.push(ev.secs.max(0.0), 0, event);
+    }
+    // Random churn: departure/rejoin times drawn within a crude
+    // makespan estimate so they actually land mid-round.
+    if dynamics.churn.leave_prob > 0.0 || dynamics.churn.join_prob > 0.0 {
+        let total_base: f64 = core
+            .tasks
+            .iter()
+            .map(|t| (cost.t_sample * t.n_eff as f64 + cost.b_fixed) * t.noise)
+            .sum();
+        let horizon = total_base / core.alive_count().max(1) as f64;
+        for slot in 0..core.execs.len() {
+            if core.execs[slot].alive {
+                if dynamics.churn.leave_prob > 0.0 && rng.next_f64() < dynamics.churn.leave_prob
+                {
+                    let t = rng.next_f64() * horizon;
+                    core.push(t, 0, Event::DeviceLeave { device: slot });
+                }
+            } else if dynamics.churn.join_prob > 0.0 && rng.next_f64() < dynamics.churn.join_prob
+            {
+                let t = rng.next_f64() * horizon;
+                core.push(t, 0, Event::DeviceJoin { device: slot });
+            }
+        }
+    }
+
+    core.run(plan.tail, scheduler)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulation::availability::{ChurnEvent, ChurnSpec, SlowdownLaw, StragglerSpec};
+
+    fn static_dynamics() -> DynamicsSpec {
+        DynamicsSpec::default()
+    }
+
+    fn plan_assigned(n_exec: usize, sizes: &[usize], tail: TailComm) -> RoundPlan {
+        let tasks: Vec<SimTask> =
+            sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
+        let mut assigned = vec![Vec::new(); n_exec];
+        for i in 0..tasks.len() {
+            assigned[i % n_exec].push(i);
+        }
+        RoundPlan {
+            tasks,
+            n_exec,
+            alive: vec![true; n_exec],
+            assigned,
+            pull: Vec::new(),
+            refill: RefillPolicy::Assigned,
+            reassign: ReassignPolicy::LeastLoaded,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail,
+            record_history: false,
+        }
+    }
+
+    fn homo(k: usize) -> ClusterProfile {
+        ClusterProfile::homogeneous(k)
+    }
+
+    #[test]
+    fn serial_executor_sums_durations() {
+        let cost = WorkloadCost::femnist();
+        let plan = plan_assigned(1, &[100, 200, 300], TailComm::None);
+        let out = run_round(plan, &homo(1), &cost, 0, &static_dynamics(), 1, None);
+        let want: f64 = [100, 200, 300]
+            .iter()
+            .map(|&n| cost.t_sample * n as f64 + cost.b_fixed)
+            .sum();
+        assert!((out.end - want).abs() < 1e-9, "{} vs {want}", out.end);
+        assert_eq!(out.completed_tasks, 3);
+        assert_eq!(out.busy.len(), 1);
+        assert!((out.busy[0] - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_executors_take_makespan() {
+        let cost = WorkloadCost::femnist();
+        let plan = plan_assigned(3, &[100, 100, 400], TailComm::None);
+        let out = run_round(plan, &homo(3), &cost, 0, &static_dynamics(), 1, None);
+        let slowest = cost.t_sample * 400.0 + cost.b_fixed;
+        assert!((out.end - slowest).abs() < 1e-9);
+        assert_eq!(out.busy.len(), 3);
+        assert!(out.busy.iter().all(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn shared_pull_balances_like_earliest_free() {
+        let cost = WorkloadCost::femnist();
+        let sizes = [500usize, 400, 300, 200, 100, 50];
+        let tasks: Vec<SimTask> =
+            sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
+        let plan = RoundPlan {
+            pull: (0..tasks.len()).collect(),
+            tasks,
+            n_exec: 2,
+            alive: vec![true; 2],
+            assigned: vec![Vec::new(); 2],
+            refill: RefillPolicy::SharedPull,
+            reassign: ReassignPolicy::Requeue,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::None,
+            record_history: false,
+        };
+        let out = run_round(plan, &homo(2), &cost, 0, &static_dynamics(), 1, None);
+        // Greedy earliest-free replay: dev0 <- 500, dev1 <- 400; dev1
+        // frees first and pulls 300, etc.
+        let d = |n: usize| cost.t_sample * n as f64 + cost.b_fixed;
+        let mut free = [0.0f64; 2];
+        for &n in &sizes {
+            let i = if free[0] <= free[1] { 0 } else { 1 };
+            free[i] += d(n);
+        }
+        let want = free[0].max(free[1]);
+        assert!((out.end - want).abs() < 1e-9, "{} vs {}", out.end, want);
+        assert_eq!(out.completed_tasks, sizes.len());
+    }
+
+    #[test]
+    fn device_leave_reassigns_orphans_and_all_tasks_finish() {
+        let cost = WorkloadCost::femnist();
+        let mut plan = plan_assigned(4, &[300; 12], TailComm::None);
+        plan.reassign = ReassignPolicy::LeastLoaded;
+        let dynamics = DynamicsSpec {
+            churn: ChurnSpec {
+                events: vec![ChurnEvent {
+                    round: 0,
+                    device: 0,
+                    secs: 0.1,
+                    kind: ChurnKind::Leave,
+                }],
+                leave_prob: 0.0,
+                join_prob: 0.0,
+            },
+            ..Default::default()
+        };
+        let out = run_round(plan, &homo(4), &cost, 0, &dynamics, 1, None);
+        assert_eq!(out.departures, 1);
+        assert_eq!(out.dropped_tasks, 0, "orphans must be re-placed");
+        assert_eq!(out.completed_tasks, 12);
+        assert!(!out.alive[0] && out.alive[1]);
+        // the dead device stops accruing busy time, the rest absorb it
+        let survivors: f64 = out.busy[1..].iter().sum();
+        assert!(survivors > out.busy[0], "{:?}", out.busy);
+        assert!(out.wasted_secs >= 0.0);
+    }
+
+    #[test]
+    fn device_join_pulls_shared_work() {
+        let cost = WorkloadCost::femnist();
+        let sizes = vec![400usize; 8];
+        let tasks: Vec<SimTask> =
+            sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
+        let plan = RoundPlan {
+            pull: (0..tasks.len()).collect(),
+            tasks,
+            n_exec: 2,
+            alive: vec![true, false],
+            assigned: vec![Vec::new(); 2],
+            refill: RefillPolicy::SharedPull,
+            reassign: ReassignPolicy::Requeue,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::None,
+            record_history: false,
+        };
+        let dynamics = DynamicsSpec {
+            churn: ChurnSpec {
+                events: vec![ChurnEvent {
+                    round: 0,
+                    device: 1,
+                    secs: 0.0,
+                    kind: ChurnKind::Join,
+                }],
+                leave_prob: 0.0,
+                join_prob: 0.0,
+            },
+            ..Default::default()
+        };
+        let out = run_round(plan, &homo(2), &cost, 0, &dynamics, 1, None);
+        assert_eq!(out.joins, 1);
+        assert_eq!(out.completed_tasks, 8);
+        assert!(out.busy[1] > 0.0, "joined device must have worked: {:?}", out.busy);
+    }
+
+    #[test]
+    fn client_drop_wastes_partial_work() {
+        let cost = WorkloadCost::femnist();
+        let plan = plan_assigned(2, &[500; 10], TailComm::None);
+        let dynamics = DynamicsSpec {
+            straggler: StragglerSpec {
+                prob: 0.0,
+                law: SlowdownLaw::Fixed(1.0),
+                drop_prob: 1.0, // every client vanishes mid-task
+            },
+            ..Default::default()
+        };
+        let out = run_round(plan, &homo(2), &cost, 0, &dynamics, 1, None);
+        assert_eq!(out.dropped_tasks, 10);
+        assert_eq!(out.completed_tasks, 0);
+        assert!(out.wasted_secs > 0.0);
+        assert!(out.busy.iter().all(|&b| b == 0.0), "dropped work is not busy time");
+    }
+
+    #[test]
+    fn stragglers_stretch_the_round() {
+        let cost = WorkloadCost::femnist();
+        let base = run_round(
+            plan_assigned(2, &[300; 8], TailComm::None),
+            &homo(2),
+            &cost,
+            0,
+            &static_dynamics(),
+            1,
+            None,
+        );
+        let dynamics = DynamicsSpec {
+            straggler: StragglerSpec { prob: 1.0, law: SlowdownLaw::Fixed(4.0), drop_prob: 0.0 },
+            ..Default::default()
+        };
+        let slow = run_round(
+            plan_assigned(2, &[300; 8], TailComm::None),
+            &homo(2),
+            &cost,
+            0,
+            &dynamics,
+            1,
+            None,
+        );
+        assert!((slow.end - 4.0 * base.end).abs() < 1e-9, "{} vs {}", slow.end, base.end);
+    }
+
+    #[test]
+    fn last_executor_never_leaves() {
+        let cost = WorkloadCost::femnist();
+        let plan = plan_assigned(1, &[100; 3], TailComm::None);
+        let dynamics = DynamicsSpec {
+            churn: ChurnSpec {
+                events: vec![ChurnEvent {
+                    round: 0,
+                    device: 0,
+                    secs: 0.0,
+                    kind: ChurnKind::Leave,
+                }],
+                leave_prob: 0.0,
+                join_prob: 0.0,
+            },
+            ..Default::default()
+        };
+        let out = run_round(plan, &homo(1), &cost, 0, &dynamics, 1, None);
+        assert_eq!(out.departures, 0);
+        assert_eq!(out.completed_tasks, 3);
+    }
+
+    #[test]
+    fn per_task_comm_occupies_but_is_not_busy() {
+        let cost = WorkloadCost::femnist();
+        let mut plan = plan_assigned(2, &[200; 4], TailComm::None);
+        plan.per_task_comm = (0.5, 0.5);
+        plan.per_task_bytes = (10, 10);
+        let out = run_round(plan, &homo(2), &cost, 0, &static_dynamics(), 1, None);
+        let compute = cost.t_sample * 200.0 + cost.b_fixed;
+        // two tasks per device, each occupying compute + 1s comm
+        assert!((out.end - 2.0 * (compute + 1.0)).abs() < 1e-9);
+        assert!((out.busy[0] - 2.0 * compute).abs() < 1e-9);
+        assert!((out.comm_occ[0] - 2.0).abs() < 1e-9);
+        assert_eq!(out.bytes, 4 * 20);
+        assert_eq!(out.trips, 8);
+    }
+}

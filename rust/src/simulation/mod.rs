@@ -1,4 +1,5 @@
-//! Virtual-time (discrete-event) engine for the timing experiments.
+//! Virtual-time engine for the timing experiments — one discrete-event
+//! core, four thin scheme policies.
 //!
 //! The paper's scale/timing figures (Fig. 5, 7, 8, 9, 10, 11) sweep
 //! configurations — 1000 concurrent clients, 32 devices, three cluster
@@ -6,26 +7,66 @@
 //! point ran real training.  The engine executes the *same scheduler,
 //! aggregation-size and heterogeneity code* as the real-compute path,
 //! but advances a virtual clock with modeled task durations
-//! (Eq. 2 × the Appendix-A slowdown laws) instead of running PJRT, plus
-//! multiplicative measurement noise.  Workload constants are calibrated
-//! per paper workload in [`crate::cluster::WorkloadCost`]; the
-//! communication model is trips·latency + bytes/bandwidth (Table 1's
-//! columns, measured per scheme).
+//! (Eq. 2 × the Appendix-A slowdown laws) plus multiplicative
+//! measurement noise.
 //!
-//! Scheme timelines reproduce Fig. 2:
-//! - **SP** — one device runs all M_p tasks back-to-back, no comm.
-//! - **RW/SD Dist.** — one task per device in parallel; round time =
-//!   slowest client + per-client comm (M_p trips).
-//! - **FA Dist.** — K devices pull tasks greedily (event loop); params
-//!   move per task.
-//! - **Parrot** — Alg. 3 schedules task sets; one down + one up message
-//!   per device; devices locally aggregate (upload = s_a·K + s_e·M_p).
+//! ## Architecture
+//!
+//! Every scheme timeline now runs through the shared discrete-event
+//! core in [`engine`]: a binary-heap event queue over
+//! `(virtual_time, Event)` with the taxonomy `TaskStart`, `TaskDone`,
+//! `CommDone`, `DeviceJoin`, `DeviceLeave`, `ClientUnavailable`.  The
+//! schemes are policy objects that only decide placement and comm
+//! shape on top of it:
+//!
+//! - **SP** — one executor runs all M_p tasks back-to-back, no comm.
+//! - **RW/SD Dist.** — one executor per selected client in parallel
+//!   (executors cycle the cluster's device models); round tail = one
+//!   broadcast + M_p uploads serialized into the server NIC.
+//! - **FA Dist.** — K devices pull tasks greedily from a shared queue
+//!   (FedScale/Flower timeline); params move per task, so each task
+//!   carries its own down/up `CommDone` legs on the executor.
+//! - **Parrot** — Alg. 3 schedules task *sets* (via
+//!   [`Scheduler::schedule_masked`]); hierarchical aggregation gives
+//!   one down + one up message per device (upload = s_a·K + s_e·M_p).
+//!
+//! ## Availability / churn / stragglers
+//!
+//! The [`availability`] module injects the dynamic-hardware scenarios
+//! of §4.4: round-level client availability (a client unavailable at
+//! round r is never scheduled), mid-task client drops
+//! (`ClientUnavailable`), scripted or random device churn
+//! (`DeviceJoin`/`DeviceLeave` — orphaned tasks are re-placed on the
+//! survivors through the scheduler's greedy step, and the departed
+//! device's history records are pruned), and straggler injection with
+//! configurable slowdown laws.  With the default (static)
+//! [`DynamicsSpec`] the engine reproduces the legacy closed-form
+//! per-scheme loops exactly — property-tested below.
+//!
+//! ## Accounting
+//!
+//! Compute and communication are kept separate everywhere:
+//! `device_busy` holds *productive compute seconds only* (so RW/SD
+//! report one entry per executor, not a degenerate mean, and FA no
+//! longer folds per-task comm into busy time while also reporting it
+//! as `comm_secs`), `device_comm` holds per-executor comm occupancy,
+//! and `total_secs` is the event-clock round end.
+
+pub mod availability;
+pub mod engine;
+
+pub use availability::{
+    AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, DynamicsSpec, SlowdownLaw, StragglerSpec,
+};
+pub use engine::{Event, RoundOutcome, RoundPlan, SimTask, TaskState};
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::Partition;
-use crate::scheduler::{Scheduler, TaskRecord};
+use crate::scheduler::Scheduler;
 use crate::util::rng::Rng;
+
+use engine::{RefillPolicy, ReassignPolicy, TailComm};
 
 /// Byte sizes of the communicated quantities (paper model sizes, so the
 /// comm:compute ratio matches the evaluated systems).
@@ -65,17 +106,34 @@ pub struct VRound {
     pub round: usize,
     /// Virtual seconds for the whole round (compute ∥ + comm).
     pub total_secs: f64,
+    /// Compute-phase makespan (max per-executor busy seconds).
     pub compute_secs: f64,
+    /// Round-tail comm seconds (SD/Parrot) or total per-task comm
+    /// occupancy (FA — overlaps compute across devices, see
+    /// [`VRound::device_comm`]).
     pub comm_secs: f64,
     pub bytes: u64,
     pub trips: u64,
     /// Scheduler wallclock overhead (real, not virtual — Fig. 8).
     pub sched_secs: f64,
-    /// Per-device busy virtual seconds.
+    /// Per-executor *productive compute* virtual seconds.
     pub device_busy: Vec<f64>,
+    /// Per-executor comm occupancy (FA's per-task legs; 0 elsewhere).
+    pub device_comm: Vec<f64>,
     /// Mean absolute relative error of the workload prediction vs the
     /// realized task times (Fig. 6 / Fig. 11a).
     pub est_err: Option<f64>,
+    /// Clients actually scheduled after the availability filter.
+    pub scheduled_clients: usize,
+    /// Selected clients that were unavailable this round.
+    pub unavailable_clients: usize,
+    /// Scheduled clients lost mid-task (`ClientUnavailable`) or left
+    /// stranded by total device loss.
+    pub dropped_clients: usize,
+    /// Aborted partial compute seconds (drops + departures).
+    pub wasted_secs: f64,
+    pub departures: usize,
+    pub joins: usize,
 }
 
 impl VRound {
@@ -90,6 +148,27 @@ impl VRound {
             .max(1e-12);
         self.device_busy.iter().sum::<f64>() / (k * makespan)
     }
+
+    fn empty(round: usize, unavailable: usize) -> VRound {
+        VRound {
+            round,
+            total_secs: 0.0,
+            compute_secs: 0.0,
+            comm_secs: 0.0,
+            bytes: 0,
+            trips: 0,
+            sched_secs: 0.0,
+            device_busy: Vec::new(),
+            device_comm: Vec::new(),
+            est_err: None,
+            scheduled_clients: 0,
+            unavailable_clients: unavailable,
+            dropped_clients: 0,
+            wasted_secs: 0.0,
+            departures: 0,
+            joins: 0,
+        }
+    }
 }
 
 /// The virtual simulator: one scheme, one cluster, one workload.
@@ -103,6 +182,12 @@ pub struct VirtualSim {
     pub local_epochs: usize,
     /// Multiplicative measurement noise σ (0 = deterministic).
     pub noise: f64,
+    /// Availability / churn / straggler injection (default: static).
+    pub dynamics: DynamicsSpec,
+    /// Persistent per-device-slot alive mask (FA/Parrot executors map
+    /// 1:1 to devices; RW/SD executors are fresh per round).
+    device_alive: Vec<bool>,
+    dyn_seed: u64,
     rng: Rng,
 }
 
@@ -129,169 +214,264 @@ impl VirtualSim {
             partition,
             local_epochs,
             noise: 0.05,
+            dynamics: DynamicsSpec::default(),
+            device_alive: vec![true; k],
+            dyn_seed: seed ^ 0xD15C_0E7E,
             rng: Rng::new(seed ^ 0x51D_CAFE),
         }
     }
 
-    /// Realized (noisy) duration of one task on device k at round r.
-    fn realize(&mut self, k: usize, r: usize, n_eff: usize) -> f64 {
-        let base = self.cluster.task_time(&self.cost, k, r, n_eff, 1);
-        let noise = 1.0 + self.noise * self.rng.normal();
-        base * noise.max(0.2)
+    /// Builder-style dynamics injection.
+    pub fn with_dynamics(mut self, dynamics: DynamicsSpec) -> VirtualSim {
+        self.dynamics = dynamics;
+        self
+    }
+
+    /// Which device slots are currently alive (shaped by churn).
+    pub fn device_alive(&self) -> &[bool] {
+        &self.device_alive
+    }
+
+    /// Pre-drawn multiplicative noise factor (legacy `realize` law).
+    fn draw_noise(&mut self) -> f64 {
+        (1.0 + self.noise * self.rng.normal()).max(0.2)
     }
 
     /// Simulate one round for the selected clients; feeds realized times
     /// back into the scheduler history exactly like the real path.
     pub fn round(&mut self, r: usize, selected: &[usize]) -> VRound {
-        let k = self.cluster.n_devices();
-        let sizes: Vec<(usize, usize)> = selected
+        let avail_seed = self.dyn_seed ^ 0xA11A;
+        let scheduled: Vec<usize> = selected
+            .iter()
+            .cloned()
+            .filter(|&c| self.dynamics.availability.is_available(r, c, avail_seed))
+            .collect();
+        let unavailable = selected.len() - scheduled.len();
+        let sizes: Vec<(usize, usize)> = scheduled
             .iter()
             .map(|&c| (c, self.partition.sizes[c] * self.local_epochs))
             .collect();
-        match self.scheme {
-            Scheme::SP => self.round_sp(r, &sizes),
-            Scheme::RwDist | Scheme::SdDist => self.round_sd(r, &sizes),
-            Scheme::FaDist => self.round_fa(r, &sizes, k),
-            Scheme::Parrot => self.round_parrot(r, &sizes, k),
+        if sizes.is_empty() {
+            return self.idle_round(r, unavailable);
+        }
+        let k = self.cluster.n_devices();
+        let (plan, sched_secs) = match self.scheme {
+            Scheme::SP => (self.plan_sp(&sizes), 0.0),
+            Scheme::RwDist | Scheme::SdDist => (self.plan_sd(&sizes), 0.0),
+            Scheme::FaDist => (self.plan_fa(&sizes, k), 0.0),
+            Scheme::Parrot => self.plan_parrot(r, &sizes, k),
+        };
+        let outcome = engine::run_round(
+            plan,
+            &self.cluster,
+            &self.cost,
+            r,
+            &self.dynamics,
+            self.dyn_seed,
+            Some(&mut self.scheduler),
+        );
+        // Device slots persist across rounds for the schemes whose
+        // executors map 1:1 to physical devices.
+        if matches!(self.scheme, Scheme::FaDist | Scheme::Parrot) {
+            self.device_alive.clone_from_slice(&outcome.alive);
+        }
+        self.assemble(r, sizes.len(), unavailable, sched_secs, outcome)
+    }
+
+    /// A round where no selected client was available: no work runs,
+    /// but scripted churn still lands on the persistent device slots —
+    /// otherwise a `leave@r` whose round happens to be empty would be
+    /// silently lost for the rest of the run.
+    fn idle_round(&mut self, r: usize, unavailable: usize) -> VRound {
+        let mut v = VRound::empty(r, unavailable);
+        if matches!(self.scheme, Scheme::FaDist | Scheme::Parrot) {
+            let events: Vec<ChurnEvent> = self.dynamics.churn.scripted(r).copied().collect();
+            for ev in events {
+                if ev.device >= self.device_alive.len() {
+                    continue;
+                }
+                match ev.kind {
+                    ChurnKind::Leave => {
+                        let alive_count = self.device_alive.iter().filter(|&&a| a).count();
+                        if self.device_alive[ev.device] && alive_count > 1 {
+                            self.device_alive[ev.device] = false;
+                            if self.scheme == Scheme::Parrot {
+                                self.scheduler.prune_device(ev.device);
+                            }
+                            v.departures += 1;
+                        }
+                    }
+                    ChurnKind::Join => {
+                        if !self.device_alive[ev.device] {
+                            self.device_alive[ev.device] = true;
+                            v.joins += 1;
+                        }
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    fn assemble(
+        &self,
+        r: usize,
+        n_scheduled: usize,
+        unavailable: usize,
+        sched_secs: f64,
+        outcome: RoundOutcome,
+    ) -> VRound {
+        let compute_secs = outcome.busy.iter().cloned().fold(0.0, f64::max);
+        let comm_secs = match self.scheme {
+            Scheme::SP => 0.0,
+            Scheme::FaDist => outcome.comm_occ.iter().sum(),
+            _ => outcome.end - outcome.work_end,
+        };
+        let (mut act, mut pred) = (Vec::new(), Vec::new());
+        for t in &outcome.tasks {
+            if t.state == TaskState::Done {
+                if let Some(p) = t.predicted {
+                    act.push(t.realized);
+                    pred.push(p);
+                }
+            }
+        }
+        let est_err = if act.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::mape(&act, &pred))
+        };
+        VRound {
+            round: r,
+            total_secs: outcome.end,
+            compute_secs,
+            comm_secs,
+            bytes: outcome.bytes,
+            trips: outcome.trips,
+            sched_secs,
+            device_busy: outcome.busy,
+            device_comm: outcome.comm_occ,
+            est_err,
+            scheduled_clients: n_scheduled,
+            unavailable_clients: unavailable,
+            dropped_clients: outcome.dropped_tasks,
+            wasted_secs: outcome.wasted_secs,
+            departures: outcome.departures,
+            joins: outcome.joins,
         }
     }
 
-    fn round_sp(&mut self, r: usize, sizes: &[(usize, usize)]) -> VRound {
-        let mut busy = 0.0;
-        for &(_, n) in sizes {
-            busy += self.realize(0, r, n);
-        }
-        VRound {
-            round: r,
-            total_secs: busy,
-            compute_secs: busy,
-            comm_secs: 0.0,
-            bytes: 0,
-            trips: 0,
-            sched_secs: 0.0,
-            device_busy: vec![busy],
-            est_err: None,
+    /// SP: one executor, all tasks back-to-back, no comm.
+    fn plan_sp(&mut self, sizes: &[(usize, usize)]) -> RoundPlan {
+        let tasks: Vec<SimTask> = sizes
+            .iter()
+            .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
+            .collect();
+        RoundPlan {
+            n_exec: 1,
+            alive: vec![true],
+            assigned: vec![(0..tasks.len()).collect()],
+            pull: Vec::new(),
+            refill: RefillPolicy::Assigned,
+            reassign: ReassignPolicy::LeastLoaded,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::None,
+            record_history: false,
+            tasks,
         }
     }
 
     /// RW/SD: each selected client on its own executor, fully parallel;
-    /// server talks to each of the M_p executors (down + up).
-    fn round_sd(&mut self, r: usize, sizes: &[(usize, usize)]) -> VRound {
-        let k_model = self.cluster.n_devices();
-        let mut slowest = 0.0f64;
-        let mut busy_total = 0.0;
-        for (i, &(_, n)) in sizes.iter().enumerate() {
-            // Executors cycle through the cluster's device models so
-            // heterogeneity still matters when simulated on cluster C.
-            let t = self.realize(i % k_model, r, n);
-            slowest = slowest.max(t);
-            busy_total += t;
+    /// the server talks to each of the M_p executors (down + up),
+    /// uploads serialized into the server NIC.
+    fn plan_sd(&mut self, sizes: &[(usize, usize)]) -> RoundPlan {
+        let tasks: Vec<SimTask> = sizes
+            .iter()
+            .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
+            .collect();
+        let m_p = tasks.len();
+        RoundPlan {
+            n_exec: m_p,
+            alive: vec![true; m_p],
+            assigned: (0..m_p).map(|i| vec![i]).collect(),
+            pull: Vec::new(),
+            refill: RefillPolicy::Assigned,
+            reassign: ReassignPolicy::LeastLoaded,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::PerExecutor { payload: self.comm.s_a + self.comm.s_e },
+            record_history: false,
+            tasks,
         }
-        let m_p = sizes.len();
+    }
+
+    /// FA: greedy pull from a size-descending shared queue, params per
+    /// task (FedScale/Flower timeline).
+    fn plan_fa(&mut self, sizes: &[(usize, usize)], k: usize) -> RoundPlan {
+        let mut order: Vec<(usize, usize)> = sizes.to_vec();
+        order.sort_by(|a, b| b.1.cmp(&a.1)); // FedScale: biggest first
+        let tasks: Vec<SimTask> = order
+            .iter()
+            .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
+            .collect();
         let per_client = self.comm.s_a + self.comm.s_e;
-        let bytes = 2 * per_client * m_p as u64;
-        // Down broadcasts overlap; uploads serialize into the server NIC
-        // (the paper's trips argument): latency per trip + payload time.
-        let comm = self.cluster.comm_time(per_client as usize)
-            + m_p as f64 * self.cluster.latency
-            + (per_client * m_p as u64) as f64 / self.cluster.bandwidth;
-        VRound {
-            round: r,
-            total_secs: slowest + comm,
-            compute_secs: slowest,
-            comm_secs: comm,
-            bytes,
-            trips: 2 * m_p as u64,
-            sched_secs: 0.0,
-            device_busy: vec![busy_total / m_p.max(1) as f64; m_p.min(1).max(1)],
-            est_err: None,
+        let leg = self.cluster.comm_time(per_client as usize);
+        RoundPlan {
+            pull: (0..tasks.len()).collect(),
+            n_exec: k,
+            alive: self.device_alive.clone(),
+            assigned: vec![Vec::new(); k],
+            refill: RefillPolicy::SharedPull,
+            reassign: ReassignPolicy::Requeue,
+            per_task_comm: (leg, leg),
+            per_task_bytes: (per_client, per_client),
+            tail: TailComm::None,
+            record_history: false,
+            tasks,
         }
     }
 
-    /// FA: greedy pull, params per task (FedScale/Flower timeline).
-    fn round_fa(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> VRound {
-        // Event loop: device free-times; next task goes to the earliest
-        // free device (server reassigns on completion).
-        let mut free = vec![0.0f64; k];
-        let mut busy = vec![0.0f64; k];
-        let per_task_comm =
-            2.0 * self.cluster.comm_time((self.comm.s_a + self.comm.s_e) as usize);
-        let mut queue: Vec<&(usize, usize)> = sizes.iter().collect();
-        queue.sort_by(|a, b| b.1.cmp(&a.1)); // FedScale: biggest first
-        for &&(_, n) in &queue {
-            let dev = (0..k)
-                .min_by(|&a, &b| free[a].partial_cmp(&free[b]).unwrap())
-                .unwrap();
-            let t = self.realize(dev, r, n) + per_task_comm;
-            free[dev] += t;
-            busy[dev] += t;
-        }
-        let makespan = free.iter().cloned().fold(0.0, f64::max);
-        let m_p = sizes.len() as u64;
-        VRound {
-            round: r,
-            total_secs: makespan,
-            compute_secs: makespan - per_task_comm,
-            comm_secs: per_task_comm * m_p as f64,
-            bytes: 2 * (self.comm.s_a + self.comm.s_e) * m_p,
-            trips: 2 * m_p,
-            sched_secs: 0.0,
-            device_busy: busy,
-            est_err: None,
-        }
-    }
-
-    /// Parrot: Alg. 3 schedule, hierarchical aggregation comm model.
-    fn round_parrot(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> VRound {
-        let schedule = self.scheduler.schedule(r, sizes);
-        let size_of: std::collections::HashMap<usize, usize> =
-            sizes.iter().cloned().collect();
-        let mut busy = vec![0.0f64; k];
-        let mut realized: Vec<(usize, f64, f64)> = Vec::new(); // (dev, predicted, actual)
+    /// Parrot: Alg. 3 schedule over the alive devices, hierarchical
+    /// aggregation comm model, history fed back per task.
+    fn plan_parrot(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> (RoundPlan, f64) {
+        let alive = self.device_alive.clone();
+        let mut schedule = self.scheduler.schedule_masked(r, sizes, &alive);
+        // The estimates the greedy pass used — predictions are fixed
+        // at plan time, before any of this round's records land.
+        let est = schedule.estimates.take();
+        let size_of: std::collections::HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
+        let mut assigned = vec![Vec::new(); k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &c in clients {
                 let n = size_of[&c];
-                let t = self.realize(dev, r, n);
-                busy[dev] += t;
-                // Feed history back (devices piggyback records).
-                self.scheduler.record(TaskRecord {
-                    round: r,
-                    device: dev,
-                    n_samples: n,
-                    secs: t,
-                });
-                if schedule.used_model {
-                    let predicted = self.scheduler.estimates(r)[dev].predict(n);
-                    realized.push((dev, predicted, t));
+                let mut task = SimTask::new(c, n, self.draw_noise());
+                if let Some(est) = &est {
+                    task.predicted = Some(est[dev].predict(n));
                 }
+                assigned[dev].push(tasks.len());
+                tasks.push(task);
             }
         }
-        let est_err = if realized.is_empty() {
-            None
-        } else {
-            let (pred, act): (Vec<f64>, Vec<f64>) =
-                realized.iter().map(|&(_, p, a)| (p, a)).unzip();
-            Some(crate::util::stats::mape(&act, &pred))
-        };
-        let makespan = busy.iter().cloned().fold(0.0, f64::max);
-        // Comm: broadcast s_a down per device (+ assignments, negligible),
-        // one aggregated upload s_a per device, plus s_e per client.
         let m_p = sizes.len() as u64;
-        let bytes = 2 * self.comm.s_a * k as u64 + self.comm.s_e * m_p;
-        let comm = self.cluster.comm_time(self.comm.s_a as usize) * 2.0
-            + (k as f64 - 1.0) * self.cluster.latency
-            + (self.comm.s_e * m_p) as f64 / self.cluster.bandwidth;
-        VRound {
-            round: r,
-            total_secs: makespan + comm,
-            compute_secs: makespan,
-            comm_secs: comm,
-            bytes,
-            trips: 2 * k as u64,
-            sched_secs: schedule.overhead_secs,
-            device_busy: busy,
-            est_err,
-        }
+        let plan = RoundPlan {
+            tasks,
+            n_exec: k,
+            alive,
+            assigned,
+            pull: Vec::new(),
+            refill: RefillPolicy::Assigned,
+            reassign: ReassignPolicy::Greedy,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::Hierarchical {
+                s_a: self.comm.s_a,
+                s_e_total: self.comm.s_e * m_p,
+            },
+            record_history: true,
+        };
+        (plan, schedule.overhead_secs)
     }
 }
 
@@ -315,6 +495,8 @@ pub fn run_virtual(sim: &mut VirtualSim, rounds: usize, m_p: usize, seed: u64) -
 mod tests {
     use super::*;
     use crate::data::PartitionKind;
+    use crate::scheduler::TaskRecord;
+    use std::collections::HashMap;
 
     fn mk(scheme: Scheme, k: usize, sched: SchedulerKind) -> VirtualSim {
         let partition =
@@ -486,5 +668,258 @@ mod tests {
             let u = r.utilization();
             assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
         }
+    }
+
+    // ------------------------------------------------ event-core tests
+
+    /// The pre-rewrite `round_parrot` closed-form loop, replicated
+    /// verbatim: schedule, realize tasks in device order with the same
+    /// noise draws, record history, add the hierarchical comm tail.
+    fn legacy_parrot_total(sim: &mut VirtualSim, r: usize, selected: &[usize]) -> (f64, Vec<f64>) {
+        let k = sim.cluster.n_devices();
+        let sizes: Vec<(usize, usize)> = selected
+            .iter()
+            .map(|&c| (c, sim.partition.sizes[c] * sim.local_epochs))
+            .collect();
+        let schedule = sim.scheduler.schedule(r, &sizes);
+        let size_of: HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let mut busy = vec![0.0f64; k];
+        for (dev, clients) in schedule.assignment.iter().enumerate() {
+            for &c in clients {
+                let n = size_of[&c];
+                let base = sim.cluster.task_time(&sim.cost, dev, r, n, 1);
+                let t = base * sim.draw_noise();
+                busy[dev] += t;
+                sim.scheduler.record(TaskRecord {
+                    round: r,
+                    device: dev,
+                    n_samples: n,
+                    secs: t,
+                });
+            }
+        }
+        let makespan = busy.iter().cloned().fold(0.0, f64::max);
+        let m_p = sizes.len() as u64;
+        let comm = sim.cluster.comm_time(sim.comm.s_a as usize) * 2.0
+            + (k as f64 - 1.0) * sim.cluster.latency
+            + (sim.comm.s_e * m_p) as f64 / sim.cluster.bandwidth;
+        (makespan + comm, busy)
+    }
+
+    #[test]
+    fn prop_event_parrot_reproduces_legacy_totals() {
+        // Same ctor args twice: one instance runs the event core, the
+        // other replays the legacy loop. Identical seeds => identical
+        // noise draws, schedules, busy vectors, and totals.
+        for (k, m_p, hetero, seed) in
+            [(4usize, 60usize, false, 3u64), (8, 100, true, 5), (16, 200, true, 11), (2, 30, false, 23)]
+        {
+            let cluster = if hetero {
+                ClusterProfile::heterogeneous(k)
+            } else {
+                ClusterProfile::homogeneous(k)
+            };
+            let partition = Partition::generate(PartitionKind::Natural, 400, 62, 100, 17);
+            let build = || {
+                VirtualSim::new(
+                    Scheme::Parrot,
+                    cluster.clone(),
+                    WorkloadCost::femnist(),
+                    CommModel::femnist(),
+                    SchedulerKind::Greedy,
+                    2,
+                    partition.clone(),
+                    1,
+                    seed,
+                )
+            };
+            let mut event_sim = build();
+            let mut legacy_sim = build();
+            let selector = Rng::new(99 ^ seed);
+            for r in 0..6 {
+                let mut rng = selector.derive(r as u64);
+                let selected = rng.choose(400, m_p);
+                let v = event_sim.round(r, &selected);
+                let (legacy_total, legacy_busy) = legacy_parrot_total(&mut legacy_sim, r, &selected);
+                assert!(
+                    (v.total_secs - legacy_total).abs() < 1e-6 * legacy_total.max(1.0),
+                    "k={k} m_p={m_p} r={r}: event {} vs legacy {legacy_total}",
+                    v.total_secs
+                );
+                for (a, b) in v.device_busy.iter().zip(&legacy_busy) {
+                    assert!((a - b).abs() < 1e-9, "busy mismatch: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sd_utilization_is_non_degenerate_per_executor() {
+        // The old loop reported a length-1 vector holding the mean busy
+        // time, making utilization() identically 1.0. Each executor
+        // must now report its own busy time.
+        let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 7);
+        let mut sim = VirtualSim::new(
+            Scheme::SdDist,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Uniform,
+            2,
+            partition,
+            1,
+            9,
+        );
+        let rs = run_virtual(&mut sim, 3, 50, 5);
+        for r in &rs {
+            assert_eq!(r.device_busy.len(), 50, "one entry per executor");
+            let u = r.utilization();
+            assert!(u < 0.999, "RW/SD utilization must be non-degenerate: {u}");
+            assert!(u > 0.05, "utilization {u}");
+            // totals decompose: slowest executor + serialized comm tail
+            assert!((r.total_secs - r.compute_secs - r.comm_secs).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fa_accounting_separates_compute_and_comm() {
+        let mut sim = mk(Scheme::FaDist, 8, SchedulerKind::Uniform);
+        let rs = run_virtual(&mut sim, 3, 100, 5);
+        for r in &rs {
+            assert_eq!(r.device_busy.len(), 8);
+            // busy is compute-only; comm occupancy is tracked separately
+            let makespan: f64 = r
+                .device_busy
+                .iter()
+                .zip(&r.device_comm)
+                .map(|(b, c)| b + c)
+                .fold(0.0, f64::max);
+            assert!(
+                (r.total_secs - makespan).abs() < 1e-9,
+                "round end {} != slowest executor occupancy {makespan}",
+                r.total_secs
+            );
+            // overlap model: comm neither vanishes into compute nor
+            // double-counts — the round is bounded by both sides.
+            assert!(r.total_secs >= r.compute_secs - 1e-9);
+            assert!(r.total_secs <= r.compute_secs + r.comm_secs + 1e-9);
+            let comm_sum: f64 = r.device_comm.iter().sum();
+            assert!((r.comm_secs - comm_sum).abs() < 1e-9);
+            assert!(r.utilization() < 0.999, "FA utilization must be non-degenerate");
+        }
+    }
+
+    #[test]
+    fn unavailable_clients_are_never_scheduled() {
+        let mut sim = mk(Scheme::Parrot, 4, SchedulerKind::Greedy);
+        let mut trace = std::collections::BTreeMap::new();
+        trace.insert(0usize, [5usize, 6, 7].into_iter().collect());
+        sim.dynamics.availability = AvailabilityModel::Trace(trace);
+        let v = sim.round(0, &[5, 6, 7, 8, 9]);
+        assert_eq!(v.unavailable_clients, 3);
+        assert_eq!(v.scheduled_clients, 2);
+        assert_eq!(v.dropped_clients, 0);
+        // next round the trace is clear again
+        let v1 = sim.round(1, &[5, 6, 7]);
+        assert_eq!(v1.scheduled_clients, 3);
+        // a fully-unavailable round degrades to an empty VRound
+        sim.dynamics.availability = AvailabilityModel::Bernoulli(0.0);
+        let v2 = sim.round(2, &[1, 2, 3]);
+        assert_eq!(v2.scheduled_clients, 0);
+        assert_eq!(v2.total_secs, 0.0);
+    }
+
+    #[test]
+    fn scripted_churn_survives_an_empty_round() {
+        // A departure scripted for a round in which no selected client
+        // is available must still land on the persistent slot state.
+        let mut sim = mk(Scheme::Parrot, 4, SchedulerKind::Greedy);
+        sim.dynamics.availability = AvailabilityModel::Bernoulli(0.0);
+        sim.dynamics.churn = ChurnSpec {
+            events: vec![ChurnEvent { round: 0, device: 2, secs: 0.0, kind: ChurnKind::Leave }],
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        };
+        let v0 = sim.round(0, &[1, 2, 3]);
+        assert_eq!(v0.scheduled_clients, 0);
+        assert_eq!(v0.departures, 1, "churn must fire even in an empty round");
+        assert!(!sim.device_alive()[2]);
+        // with clients available again, the dead slot stays unscheduled
+        sim.dynamics.availability = AvailabilityModel::Always;
+        let v1 = sim.round(1, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(v1.device_busy[2], 0.0, "{:?}", v1.device_busy);
+        assert!(v1.total_secs > 0.0);
+    }
+
+    #[test]
+    fn mid_round_departure_reassigns_and_persists() {
+        let mut sim = mk(Scheme::Parrot, 4, SchedulerKind::Greedy);
+        sim.dynamics.churn = ChurnSpec {
+            events: vec![ChurnEvent {
+                round: 1,
+                device: 0,
+                secs: 0.05,
+                kind: ChurnKind::Leave,
+            }],
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        };
+        let rs = run_virtual(&mut sim, 4, 80, 5);
+        assert_eq!(rs[1].departures, 1);
+        assert_eq!(rs[1].dropped_clients, 0, "orphans must be re-placed");
+        assert!(!sim.device_alive()[0], "departure persists across rounds");
+        // rounds after the departure never schedule the dead slot
+        assert_eq!(rs[2].device_busy[0], 0.0, "{:?}", rs[2].device_busy);
+        assert!(rs[2].device_busy[1] > 0.0);
+        // history for the departed device was pruned
+        assert!(sim.scheduler.history.records().iter().all(|t| t.device != 0 || t.round > 1));
+    }
+
+    #[test]
+    fn full_dynamics_round_completes_with_sane_accounting() {
+        let partition = Partition::generate(PartitionKind::Natural, 500, 62, 100, 13);
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::TimeWindow(4),
+            1,
+            partition,
+            1,
+            21,
+        );
+        sim.dynamics = DynamicsSpec {
+            availability: AvailabilityModel::Bernoulli(0.8),
+            churn: ChurnSpec {
+                events: vec![
+                    ChurnEvent { round: 2, device: 1, secs: 1.0, kind: ChurnKind::Leave },
+                    ChurnEvent { round: 4, device: 1, secs: 0.0, kind: ChurnKind::Join },
+                ],
+                leave_prob: 0.0,
+                join_prob: 0.0,
+            },
+            straggler: StragglerSpec {
+                prob: 0.1,
+                law: SlowdownLaw::Fixed(3.0),
+                drop_prob: 0.05,
+            },
+        };
+        let rs = run_virtual(&mut sim, 6, 100, 7);
+        let departures: usize = rs.iter().map(|r| r.departures).sum();
+        let joins: usize = rs.iter().map(|r| r.joins).sum();
+        assert_eq!(departures, 1);
+        assert_eq!(joins, 1);
+        let unavailable: usize = rs.iter().map(|r| r.unavailable_clients).sum();
+        assert!(unavailable > 0, "Bernoulli(0.8) must filter someone over 6 rounds");
+        for r in &rs {
+            assert!(r.total_secs.is_finite() && r.total_secs > 0.0);
+            let u = r.utilization();
+            assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
+            assert!(r.scheduled_clients + r.unavailable_clients == 100);
+            assert!(r.dropped_clients <= r.scheduled_clients);
+        }
+        // stragglers + drops must register somewhere across the run
+        assert!(rs.iter().any(|r| r.dropped_clients > 0 || r.wasted_secs > 0.0));
     }
 }

@@ -71,7 +71,23 @@ impl StateManager {
             return;
         }
         let sz = bytes.len();
-        // Evict least-recently-used until it fits (or cache empty).
+        // A value that can never fit must bypass the cache entirely —
+        // the old path evicted every resident entry first and then
+        // skipped the insertion anyway, churning the whole cache for
+        // nothing.  Only drop a stale same-key copy so reads can't
+        // return the previous value from cache.
+        if sz > self.cache_budget {
+            if let Some((old, _)) = self.cache.remove(&client) {
+                self.cache_bytes -= old.len();
+            }
+            return;
+        }
+        // Replacing the same key: release its bytes before budgeting so
+        // eviction never counts the old copy against the new one.
+        if let Some((old, _)) = self.cache.remove(&client) {
+            self.cache_bytes -= old.len();
+        }
+        // Evict least-recently-used until the new value fits.
         while self.cache_bytes + sz > self.cache_budget && !self.cache.is_empty() {
             let (&old, _) = self
                 .cache
@@ -82,15 +98,11 @@ impl StateManager {
                 self.cache_bytes -= b.len();
             }
         }
-        if sz <= self.cache_budget {
-            let t = self.touch();
-            if let Some((old, _)) = self.cache.insert(client, (bytes, t)) {
-                self.cache_bytes -= old.len();
-            }
-            self.cache_bytes += sz;
-            self.metrics.peak_cache_bytes =
-                self.metrics.peak_cache_bytes.max(self.cache_bytes as u64);
-        }
+        let t = self.touch();
+        self.cache.insert(client, (bytes, t));
+        self.cache_bytes += sz;
+        self.metrics.peak_cache_bytes =
+            self.metrics.peak_cache_bytes.max(self.cache_bytes as u64);
     }
 
     /// `Save_State(m, S)` (Alg. 2): persist to disk, refresh cache.
@@ -277,6 +289,56 @@ mod tests {
         sm.save(9, &[7u8; 100]).unwrap();
         assert_eq!(sm.cache_resident_bytes(), 0);
         assert_eq!(sm.load(9).unwrap().unwrap(), vec![7u8; 100]);
+    }
+
+    #[test]
+    fn oversized_insert_does_not_evict_residents() {
+        let mut sm = StateManager::new(tmp_dir("big_noevict"), 100).unwrap();
+        sm.save(1, &[1u8; 40]).unwrap();
+        sm.save(2, &[2u8; 40]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 80);
+        // An oversized value must not churn out clients 1 and 2.
+        sm.save(3, &[3u8; 500]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 80, "residents must survive");
+        let before = sm.metrics.disk_reads;
+        sm.load(1).unwrap();
+        sm.load(2).unwrap();
+        assert_eq!(sm.metrics.disk_reads, before, "1 and 2 must still be cached");
+        assert_eq!(sm.metrics.peak_cache_bytes, 80);
+    }
+
+    #[test]
+    fn same_key_reinsertion_accounting_is_exact() {
+        let mut sm = StateManager::new(tmp_dir("rekey"), 100).unwrap();
+        sm.save(1, &[0u8; 60]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 60);
+        // Same key, same size: no double count, no eviction churn.
+        sm.save(1, &[1u8; 60]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 60);
+        assert_eq!(sm.metrics.peak_cache_bytes, 60, "no transient 120-byte residency");
+        assert_eq!(sm.load(1).unwrap().unwrap(), vec![1u8; 60]);
+    }
+
+    #[test]
+    fn same_key_growth_releases_old_copy_before_evicting_neighbors() {
+        let mut sm = StateManager::new(tmp_dir("rekey_grow"), 100).unwrap();
+        sm.save(1, &[1u8; 30]).unwrap(); // LRU-to-be
+        sm.save(2, &[2u8; 40]).unwrap();
+        // Growing client 2 to 50 fits once its own 40 bytes are
+        // released (30 + 50 = 80); the old path budgeted 70 + 50 and
+        // evicted innocent client 1 first.
+        sm.save(2, &[2u8; 50]).unwrap();
+        assert_eq!(sm.cache_resident_bytes(), 80);
+        let before = sm.metrics.disk_reads;
+        sm.load(1).unwrap();
+        assert_eq!(sm.metrics.disk_reads, before, "client 1 must not be evicted");
+        assert_eq!(sm.load(2).unwrap().unwrap(), vec![2u8; 50]);
+        // Same key growing past the whole budget: the stale cached copy
+        // must not linger (a read would resurrect the old value).
+        sm.save(2, &[9u8; 500]).unwrap();
+        assert_eq!(sm.load(2).unwrap().unwrap(), vec![9u8; 500]);
+        assert_eq!(sm.cache_resident_bytes(), 30, "only client 1 remains resident");
+        assert_eq!(sm.metrics.peak_cache_bytes, 80);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 use parrot::cluster::{ClusterProfile, WorkloadCost};
 use parrot::config::{Scheme, SchedulerKind};
 use parrot::data::{Partition, PartitionKind};
-use parrot::simulation::{run_virtual, CommModel, VRound, VirtualSim};
+use parrot::simulation::{
+    run_virtual, AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, CommModel, DynamicsSpec,
+    SlowdownLaw, StragglerSpec, VRound, VirtualSim,
+};
 
 fn sim(
     scheme: Scheme,
@@ -146,6 +149,61 @@ fn fig10_claim_benefit_holds_at_1000_concurrent() {
     let with = t(SchedulerKind::Greedy);
     let without = t(SchedulerKind::Uniform);
     assert!(with < without, "{with:.2} !< {without:.2}");
+}
+
+#[test]
+fn dynamic_sweep_at_paper_scale_completes_with_nondegenerate_utilization() {
+    // The acceptance scenario: 1000 clients on 32 devices with client
+    // availability < 1.0 and a scripted mid-round device departure —
+    // something the pre-event-engine per-scheme loops could not even
+    // represent. Every scheme must complete, and RW/SD + FA must report
+    // per-executor (strictly < 1.0, scheme-distinguishing) utilization.
+    let partition = Partition::generate(PartitionKind::Natural, 1000, 62, 100, 31);
+    let dynamics = DynamicsSpec {
+        availability: AvailabilityModel::Bernoulli(0.85),
+        churn: ChurnSpec {
+            events: vec![ChurnEvent { round: 2, device: 3, secs: 0.5, kind: ChurnKind::Leave }],
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        },
+        straggler: StragglerSpec { prob: 0.05, law: SlowdownLaw::Fixed(3.0), drop_prob: 0.01 },
+    };
+    let mut utils = Vec::new();
+    for (scheme, sched) in [
+        (Scheme::RwDist, SchedulerKind::Uniform),
+        (Scheme::FaDist, SchedulerKind::Uniform),
+        (Scheme::Parrot, SchedulerKind::Greedy),
+    ] {
+        let mut sim = VirtualSim::new(
+            scheme,
+            ClusterProfile::heterogeneous(32),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            partition.clone(),
+            1,
+            41,
+        )
+        .with_dynamics(dynamics.clone());
+        let rs = run_virtual(&mut sim, 6, 100, 19);
+        assert_eq!(rs.len(), 6);
+        let departures: usize = rs.iter().map(|r| r.departures).sum();
+        assert!(departures >= 1, "{scheme:?}: scripted departure must fire");
+        let unavailable: usize = rs.iter().map(|r| r.unavailable_clients).sum();
+        assert!(unavailable > 0, "{scheme:?}: Bernoulli(0.85) must filter clients");
+        for r in &rs {
+            assert!(r.total_secs.is_finite() && r.total_secs > 0.0, "{scheme:?}: {r:?}");
+        }
+        let u = rs.iter().map(|r| r.utilization()).sum::<f64>() / rs.len() as f64;
+        assert!(u > 0.0 && u < 1.0, "{scheme:?}: utilization {u} must be non-degenerate");
+        utils.push((scheme, u));
+    }
+    // The schemes' utilizations must actually distinguish them (the old
+    // RW/SD accounting pinned utilization at exactly 1.0 for any input).
+    let (rw, fa) = (utils[0].1, utils[1].1);
+    assert!((rw - fa).abs() > 1e-3, "RW/SD {rw} vs FA {fa} should differ");
+    assert!(utils.iter().all(|&(_, u)| u < 0.999));
 }
 
 #[test]

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# One-command quality gate: formatting, lints, build, tests.
+#
+#   ./scripts/ci.sh            # everything
+#   ./scripts/ci.sh --fast     # skip the release build (debug test run only)
+#
+# Later PRs should keep this green; it is what "tier-1" means for this
+# repo plus the style gates (rustfmt, clippy -D warnings).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[ "${1:-}" = "--fast" ] && FAST=1
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [ "$FAST" -eq 0 ]; then
+  echo "==> cargo build --release"
+  cargo build --release
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "ci.sh: all green"

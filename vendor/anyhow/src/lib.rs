@@ -1,0 +1,220 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this workspace is offline (no crates.io
+//! access — see `rust/src/util/mod.rs`), so the error-handling subset
+//! the workspace actually uses is vendored here: an [`Error`] carrying
+//! a context chain, the [`Result`] alias, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and the [`Context`] extension trait for `Result`
+//! and `Option`.
+//!
+//! Display semantics match upstream closely enough for this workspace:
+//! `{}` prints the outermost message, `{:#}` prints the full chain as
+//! `outer: cause: root`, and `{:?}` prints the message plus a
+//! "Caused by:" list.
+
+// API-compatibility shim: keep lints out of the way of matching the
+// upstream surface.
+#![allow(clippy::all)]
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with an optional chain of causes (outermost first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The root cause's message (the innermost error in the chain).
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = &self.source;
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion (what makes `?` work on std errors) does not
+// overlap with the reflexive `From<Error> for Error` in core.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our textual chain.
+        let msg = e.to_string();
+        let mut causes: Vec<String> = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        let mut inner = None;
+        for m in causes.into_iter().rev() {
+            inner = Some(Box::new(Error { msg: m, source: inner }));
+        }
+        Error { msg, source: inner }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "boom 7");
+    }
+
+    #[test]
+    fn context_chain_alternate_display() {
+        let e: Result<()> = fails().context("outer");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: boom 7");
+        assert_eq!(e.root_cause(), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn f() -> Result<i32> {
+            let v: i32 = "12".parse()?;
+            let _bad: std::result::Result<i32, _> = "x".parse::<i32>();
+            Ok(v)
+        }
+        assert_eq!(f().unwrap(), 12);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn ensure_forms() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x > 0);
+            ensure!(x < 10, "too big: {x}");
+            Ok(())
+        }
+        assert!(f(5).is_ok());
+        assert!(format!("{}", f(0).unwrap_err()).contains("condition failed"));
+        assert_eq!(format!("{}", f(50).unwrap_err()), "too big: 50");
+    }
+}

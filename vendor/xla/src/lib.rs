@@ -1,0 +1,210 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The real `xla` crate wraps the native `xla_extension` closure, which
+//! is not present in this offline build environment.  This stub keeps
+//! the workspace compiling and unit-testable without it:
+//!
+//! - [`Literal`] is a real host-side buffer (dtype + dims + bytes), so
+//!   the literal round-trip helpers and their tests work unchanged.
+//! - Everything that would touch PJRT ([`PjRtClient::cpu`],
+//!   [`PjRtLoadedExecutable::execute`], HLO loading) returns an error
+//!   with a clear message.  All real-compute tests in the workspace
+//!   check for AOT artifacts first and skip cleanly, so the stub never
+//!   turns a green test red — it only gates the real-compute paths.
+//!
+//! Swap this path dependency for the real crate (same API subset) to
+//! run the PJRT paths.
+
+// API-compatibility shim: keep lints out of the way of matching the
+// upstream surface.
+#![allow(clippy::all)]
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable in this offline build (vendor/xla); \
+         install the real xla crate + xla_extension to run PJRT paths"
+    )))
+}
+
+/// Element dtypes the workspace marshals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host-native element types a [`Literal`] can decode to.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// Host-side literal: dtype + dims + raw (little-endian) bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != numel * 4 {
+            return Err(Error(format!(
+                "literal byte length {} does not match shape {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn scalar(v: f32) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), bytes: v.to_le_bytes().to_vec() }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "literal dtype mismatch: holds {:?}, asked for {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if self.bytes.len() < 4 {
+            return Err(Error("empty literal".into()));
+        }
+        self.to_vec::<T>().map(|v| v[0])
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("tuple literals (PJRT execution output)")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HLO parsing")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PJRT compilation")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PJRT execution")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PJRT buffer fetch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data = [1.0f32, -2.5, 3.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::scalar(1.0).decompose_tuple().is_err());
+    }
+}
