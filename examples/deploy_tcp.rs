@@ -1,4 +1,5 @@
-//! Simulation → deployment with zero code change (paper §3.2).
+//! Simulation → deployment with zero code change (paper §3.2), with
+//! update compression live on the real sockets.
 //!
 //! Runs the *identical* RunConfig twice:
 //!   1. in-process simulation (`LocalEndpoint` transport), and
@@ -7,12 +8,19 @@
 //! and asserts the two produce the same final parameters: the
 //! coordinator code is transport-generic, so nothing changes between
 //! simulation and deployment except the Transport implementation.
+//! Both runs negotiate `--compress qint8`, so the device aggregates
+//! crossing the real sockets are quantized wire frames; the codecs are
+//! deterministic, so simulation and deployment still agree exactly.
+//!
+//! The server binds port 0 and hands workers the ephemeral port the OS
+//! picked — no hardcoded ports.
 //!
 //!     cargo build --release && cargo run --release --example deploy_tcp
 
+use parrot::compress::Codec;
 use parrot::config::RunConfig;
 use parrot::coordinator::{run_simulation, Server};
-use parrot::transport::TcpServerEndpoint;
+use parrot::transport::TcpListenerHandle;
 use std::process::{Child, Command};
 
 fn cfg(state_tag: &str) -> RunConfig {
@@ -26,6 +34,7 @@ fn cfg(state_tag: &str) -> RunConfig {
         eval_every: 0,
         seed: 99,
         cluster: parrot::cluster::ClusterProfile::homogeneous(2),
+        compress: Codec::QInt8,
         state_dir: std::env::temp_dir()
             .join(format!("parrot_deploy_{state_tag}"))
             .to_string_lossy()
@@ -64,6 +73,8 @@ fn spawn_worker(addr: &str, id: usize) -> anyhow::Result<Child> {
             "0",
             "--seed",
             "99",
+            "--compress",
+            "qint8",
             "--state-dir",
             &cfg("tcp").state_dir,
         ])
@@ -72,34 +83,38 @@ fn spawn_worker(addr: &str, id: usize) -> anyhow::Result<Child> {
 
 fn main() -> anyhow::Result<()> {
     std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
-    println!("deploy_tcp: simulation vs real-socket deployment, same config\n");
+    println!("deploy_tcp: simulation vs real-socket deployment, same config, qint8 uploads\n");
 
     // 1) In-process simulation.
-    println!("[1/2] local simulation...");
+    println!("[1/2] local simulation (--compress qint8)...");
     let sim = run_simulation(cfg("local"))?;
     println!(
-        "      done, mean round {:.2}s",
-        sim.metrics.mean_round_secs()
+        "      done, mean round {:.2}s, {:.2} MB comm",
+        sim.metrics.mean_round_secs(),
+        sim.metrics.total_bytes() as f64 / (1 << 20) as f64
     );
 
-    // 2) TCP deployment: spawn 2 worker processes, serve in this thread.
-    let addr = "127.0.0.1:47701";
-    println!("[2/2] TCP deployment on {addr} (2 worker processes)...");
-    let mut w1 = spawn_worker(addr, 1)?;
-    let mut w2 = spawn_worker(addr, 2)?;
-    let transport = TcpServerEndpoint::bind(addr, 2)?;
+    // 2) TCP deployment: bind port 0, read the ephemeral port, spawn 2
+    //    worker processes against it, serve in this thread.
+    let handle = TcpListenerHandle::listen("127.0.0.1:0")?;
+    let addr = handle.local_addr()?.to_string();
+    println!("[2/2] TCP deployment on {addr} (2 worker processes, qint8 over sockets)...");
+    let mut w1 = spawn_worker(&addr, 1)?;
+    let mut w2 = spawn_worker(&addr, 2)?;
+    let transport = handle.accept(2)?;
     let dep = Server::new(transport, cfg("tcp"))?.run()?;
     w1.wait()?;
     w2.wait()?;
     println!(
-        "      done, mean round {:.2}s, {} trips",
+        "      done, mean round {:.2}s, {:.2} MB comm, {} trips",
         dep.metrics.mean_round_secs(),
+        dep.metrics.total_bytes() as f64 / (1 << 20) as f64,
         dep.metrics.total_trips()
     );
 
     let d = sim.final_params.max_abs_diff(&dep.final_params);
     println!("\nmax |param diff| simulation vs deployment: {d:e}");
     anyhow::ensure!(d < 1e-5, "deployment must match simulation bit-for-bit-ish");
-    println!("deploy_tcp OK — zero-code-change migration verified");
+    println!("deploy_tcp OK — zero-code-change migration verified, compressed on the wire");
     Ok(())
 }

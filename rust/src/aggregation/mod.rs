@@ -11,6 +11,7 @@
 //! from M_p to K (Table 1).  Collect entries are forwarded verbatim —
 //! the s_e·M_p term the paper says cannot be optimized further.
 
+use crate::compress::Codec;
 use crate::model::params::{ParamSet, WeightedAccum};
 use crate::util::codec::{Decoder, Encoder};
 use anyhow::{bail, Result};
@@ -59,6 +60,7 @@ pub enum Payload {
 }
 
 impl Payload {
+    /// Raw (uncompressed) size — the s_a accounting unit of Table 1.
     pub fn size_bytes(&self) -> usize {
         match self {
             Payload::Params(p) => p.size_bytes(),
@@ -66,11 +68,18 @@ impl Payload {
         }
     }
 
-    fn encode(&self, enc: &mut Encoder) {
+    /// Wire size under a codec — what actually crosses the transport.
+    pub fn encoded_size(&self, codec: Codec) -> usize {
+        let mut enc = Encoder::new();
+        self.encode_with(&mut enc, codec);
+        enc.len()
+    }
+
+    pub(crate) fn encode_with(&self, enc: &mut Encoder, codec: Codec) {
         match self {
             Payload::Params(p) => {
                 enc.put_u8(0);
-                p.encode(enc);
+                p.encode_with(enc, codec);
             }
             Payload::Scalar(x) => {
                 enc.put_u8(1);
@@ -79,7 +88,7 @@ impl Payload {
         }
     }
 
-    fn decode(dec: &mut Decoder) -> Result<Payload> {
+    pub(crate) fn decode(dec: &mut Decoder) -> Result<Payload> {
         match dec.u8()? {
             0 => Ok(Payload::Params(ParamSet::decode(dec)?)),
             1 => Ok(Payload::Scalar(dec.f64()?)),
@@ -168,8 +177,18 @@ impl LocalAgg {
 }
 
 impl DeviceAggregate {
-    /// Serialized wire size (the comm-size metric of Table 1).
+    /// Serialized wire form (the comm-size metric of Table 1), raw f32.
     pub fn encoded(&self) -> Vec<u8> {
+        self.encoded_with(Codec::None)
+    }
+
+    /// Serialized wire form under an update-compression codec.  Only
+    /// averaged-OP parameter tensors are compressed; Collect ("Special
+    /// Params") entries and all scalars ship verbatim — the s_e·M_p
+    /// term the paper says cannot be optimized further.  The stream is
+    /// self-describing (per-tensor codec tags), so `decode` needs no
+    /// negotiation context.
+    pub fn encoded_with(&self, codec: Codec) -> Vec<u8> {
         let mut enc = Encoder::new();
         enc.put_u32(self.device as u32);
         enc.put_u32(self.n_clients as u32);
@@ -180,7 +199,7 @@ impl DeviceAggregate {
                 Slot::Params { op, accum, count } => {
                     enc.put_u8(0);
                     enc.put_u8(op.code());
-                    accum.sum.encode(&mut enc);
+                    accum.sum.encode_with(&mut enc, codec);
                     enc.put_f64(accum.weight);
                     enc.put_u32(*count as u32);
                 }
@@ -196,7 +215,7 @@ impl DeviceAggregate {
                     enc.put_u32(items.len() as u32);
                     for (client, p) in items {
                         enc.put_u32(*client as u32);
-                        p.encode(&mut enc);
+                        p.encode_with(&mut enc, Codec::None);
                     }
                 }
             }
@@ -208,7 +227,10 @@ impl DeviceAggregate {
         let mut dec = Decoder::new(buf);
         let device = dec.u32()? as usize;
         let n_clients = dec.u32()? as usize;
-        let n = dec.u32()? as usize;
+        // Counts are bounds-checked against the remaining bytes before
+        // allocation: an entry is at least name(4) + slot tag(1) + op
+        // byte(1), a collected item at least client(4) + payload tag(1).
+        let n = dec.count(6)?;
         let mut entries = BTreeMap::new();
         for _ in 0..n {
             let name = dec.str()?;
@@ -228,7 +250,7 @@ impl DeviceAggregate {
                     Slot::Scalar { op, sum, weight, count }
                 }
                 2 => {
-                    let k = dec.u32()? as usize;
+                    let k = dec.count(5)?;
                     let mut items = Vec::with_capacity(k);
                     for _ in 0..k {
                         let client = dec.u32()? as usize;
@@ -245,6 +267,34 @@ impl DeviceAggregate {
 
     pub fn size_bytes(&self) -> usize {
         self.encoded().len()
+    }
+
+    /// Encoded wire size under a codec — the measured per-upload byte
+    /// count the compression experiments report.
+    pub fn size_bytes_with(&self, codec: Codec) -> usize {
+        self.encoded_with(codec).len()
+    }
+
+    /// Per-Params-entry worst-case element error of `encoded_with
+    /// (codec)` (max over the entry's tensors of the codec's documented
+    /// bound on the *shipped sums*).  Collect entries ship verbatim and
+    /// are omitted (their error is identically 0).
+    pub fn reconstruction_bounds(&self, codec: Codec) -> BTreeMap<String, f64> {
+        self.entries
+            .iter()
+            .filter_map(|(name, slot)| match slot {
+                Slot::Params { accum, .. } => {
+                    let b = accum
+                        .sum
+                        .tensors
+                        .iter()
+                        .map(|t| codec.bound(t))
+                        .fold(0.0, f64::max);
+                    Some((name.clone(), b))
+                }
+                _ => None,
+            })
+            .collect()
     }
 }
 
@@ -390,6 +440,8 @@ mod tests {
             entries: vec![
                 ("delta".into(), AggOp::WeightedAvg, Payload::Params(mk_params(rng, shapes))),
                 ("delta_c".into(), AggOp::Avg, Payload::Params(mk_params(rng, shapes))),
+                ("h".into(), AggOp::Sum, Payload::Params(mk_params(rng, shapes))),
+                ("snap".into(), AggOp::Collect, Payload::Params(mk_params(rng, shapes))),
                 ("tau".into(), AggOp::Collect, Payload::Scalar(rng.next_f64())),
                 ("gsq".into(), AggOp::Sum, Payload::Scalar(rng.next_f64())),
             ],
@@ -444,6 +496,98 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_hierarchical_equals_flat_under_compression() {
+        // The §4.2 guarantee survives every wire codec within its
+        // documented bound: errors across the K compressed device
+        // uploads add, then shrink by the averaging denominator.
+        // None/Fp16 stay bit-exact-or-ε; QInt8/TopK stay within the
+        // analytic bound; Collect entries are forwarded verbatim.
+        for codec in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.4)] {
+            prop::check(&format!("hier == flat under {}", codec.name()), 25, |g| {
+                let shapes = vec![vec![g.int(1, 8), g.int(1, 8)], vec![g.int(1, 16)]];
+                let m = g.int(1, 30);
+                let k = g.int(1, 6);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let updates: Vec<ClientUpdate> =
+                    (0..m).map(|c| mk_update(&mut rng, c, &shapes)).collect();
+
+                let flat = flat_aggregate(&updates);
+                let total_weight: f64 = updates.iter().map(|u| u.weight).sum();
+
+                let mut global = GlobalAgg::new();
+                // Worst-case error each device upload contributes, per
+                // averaged-params entry.
+                let mut bounds: BTreeMap<String, f64> = BTreeMap::new();
+                for dev in 0..k {
+                    let mut local = LocalAgg::new(dev);
+                    for (i, u) in updates.iter().enumerate() {
+                        if i % k == dev {
+                            local.add(u);
+                        }
+                    }
+                    let agg = local.finish();
+                    for (name, b) in agg.reconstruction_bounds(codec) {
+                        *bounds.entry(name).or_insert(0.0) += b;
+                    }
+                    let wire = agg.encoded_with(codec);
+                    global.merge(DeviceAggregate::decode(&wire).unwrap());
+                }
+                let hier = global.finish();
+
+                // f32 reassociation slack (flat and hierarchical sums
+                // add in different orders; the un-divided Sum entry
+                // feels it most)
+                let slack = 1e-4;
+                let checks = [
+                    ("delta", bounds["delta"] / total_weight),
+                    ("delta_c", bounds["delta_c"] / m as f64),
+                    ("h", bounds["h"]),
+                ];
+                for (name, tol) in checks {
+                    let d = flat.params[name].max_abs_diff(&hier.params[name]) as f64;
+                    if d > tol + slack {
+                        return Err(format!(
+                            "{}: {name} diff {d} > bound {tol} + {slack}",
+                            codec.name()
+                        ));
+                    }
+                }
+                if (flat.scalars["gsq"] - hier.scalars["gsq"]).abs() > 1e-9 {
+                    return Err("gsq sum mismatch".into());
+                }
+                // Collect forwarding must be verbatim under every codec.
+                for coll in ["tau", "snap"] {
+                    let mut f: Vec<&(usize, Payload)> = flat.collected[coll].iter().collect();
+                    let mut h: Vec<&(usize, Payload)> = hier.collected[coll].iter().collect();
+                    f.sort_by_key(|x| x.0);
+                    h.sort_by_key(|x| x.0);
+                    if f.len() != h.len() {
+                        return Err(format!("{coll}: collected count mismatch"));
+                    }
+                    for (a, b) in f.iter().zip(&h) {
+                        if a.0 != b.0 {
+                            return Err(format!("{coll}: client set mismatch"));
+                        }
+                        let exact = match (&a.1, &b.1) {
+                            (Payload::Params(p), Payload::Params(q)) => {
+                                p.max_abs_diff(q) == 0.0
+                            }
+                            (x, y) => x == y,
+                        };
+                        if !exact {
+                            return Err(format!(
+                                "{}: {coll} not forwarded verbatim",
+                                codec.name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]
@@ -555,6 +699,22 @@ mod tests {
             hier_bytes * 16 < flat_bytes,
             "hier {hier_bytes} vs flat {flat_bytes}"
         );
+    }
+
+    #[test]
+    fn payload_encoded_size_tracks_codec() {
+        let mut rng = Rng::new(13);
+        let p = Payload::Params(mk_params(&mut rng, &[vec![32, 16], vec![16]]));
+        let raw = p.encoded_size(Codec::None);
+        // encoded_size is the measured wire length, codec-sensitive
+        let mut enc = Encoder::new();
+        p.encode_with(&mut enc, Codec::None);
+        assert_eq!(raw, enc.len());
+        assert!(p.encoded_size(Codec::Fp16) < raw);
+        assert!(p.encoded_size(Codec::QInt8) * 3 < raw);
+        // scalars are codec-invariant
+        let s = Payload::Scalar(4.0);
+        assert_eq!(s.encoded_size(Codec::None), s.encoded_size(Codec::QInt8));
     }
 
     #[test]

@@ -1,0 +1,582 @@
+//! Pluggable update-compression codecs for the comm stack.
+//!
+//! Every parameter tensor that crosses a Transport (device aggregates,
+//! FA task uploads) used to be raw little-endian f32 — 4 bytes/param in
+//! the s_a·K upload term of Table 1.  This module provides the [`Codec`]
+//! the coordinator negotiates at round start and the engine uses to
+//! book *encoded* comm bytes:
+//!
+//! | codec        | wire bytes / tensor of n   | worst-case abs error        |
+//! |--------------|----------------------------|-----------------------------|
+//! | `none`       | 4·n                        | 0                           |
+//! | `fp16`       | 2·n                        | max|x|·2⁻¹¹ + 2⁻²⁴ (+clamp) |
+//! | `qint8`      | n + 8                      | (max−min)/510 (+f32 slop)   |
+//! | `topk:f`     | 8·⌈f·n⌉ + 4                | (k+1)-th largest |x|        |
+//!
+//! "wire bytes" is the payload-only size; the self-describing tensor
+//! stream adds a fixed 5-byte envelope (1 codec tag + 4 length prefix),
+//! asserted equal to the measured encoding in `integration_schemes.rs`.
+//!
+//! Per-codec bounds, precisely:
+//! - **Fp16**: values are clamped to ±65504 (the largest finite half)
+//!   and rounded to nearest-even, so |x̂−x| ≤ |x|·2⁻¹¹ + 2⁻²⁴ plus the
+//!   clamp overshoot max(|x|−65504, 0).
+//! - **QInt8**: per-tensor affine quantization with zero-point `min`
+//!   and `scale = (max−min)/255`; |x̂−x| ≤ scale/2 plus f32 rounding
+//!   slop on the order of 10⁻⁶·(|min|+|max|+range).
+//! - **TopK{frac}**: keeps the k = ⌈frac·n⌉ largest-magnitude entries
+//!   exactly and zeroes the rest, so the per-element error is at most
+//!   the largest dropped magnitude (the (k+1)-th largest |x|).
+//!
+//! `Collect` ("Special Params") entries are always forwarded verbatim —
+//! the s_e·M_p term the paper says cannot be optimized — so only the
+//! averaged-OP tensors are ever lossy on the wire.
+
+use crate::util::codec::{Decoder, Encoder};
+use anyhow::{bail, ensure, Result};
+
+/// Dense-length cap for sparse (TopK) tensors, whose element count is
+/// not backed 1:1 by wire bytes: a corrupt length prefix must not
+/// pre-allocate GBs.  16M elements covers every model this repo ships.
+pub const MAX_DECODE_ELEMS: usize = 1 << 24;
+
+/// An update-compression codec (negotiated per round by the server).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Codec {
+    /// Raw little-endian f32 — lossless, 4 bytes/param.
+    #[default]
+    None,
+    /// IEEE 754 half precision, round-to-nearest-even, ±65504 clamp.
+    Fp16,
+    /// Per-tensor affine 8-bit quantization (scale + zero-point).
+    QInt8,
+    /// Magnitude top-k sparsification: keep ⌈frac·n⌉ (index, value)
+    /// pairs, zero the rest.
+    TopK(f64),
+}
+
+impl Codec {
+    /// Parse a `--compress` spec: `none|fp16|qint8|topk:<frac>`.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "none" | "off" => Ok(Codec::None),
+            "fp16" => Ok(Codec::Fp16),
+            "qint8" => Ok(Codec::QInt8),
+            _ => {
+                if let Some(frac) = s.strip_prefix("topk:") {
+                    let f: f64 = frac
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad topk fraction {frac:?}"))?;
+                    ensure!(
+                        f > 0.0 && f <= 1.0,
+                        "topk fraction must be in (0, 1], got {f}"
+                    );
+                    Ok(Codec::TopK(f))
+                } else {
+                    bail!("unknown codec {s:?} (none|fp16|qint8|topk:<frac>)")
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Codec::None => "none".into(),
+            Codec::Fp16 => "fp16".into(),
+            Codec::QInt8 => "qint8".into(),
+            Codec::TopK(f) => format!("topk:{f}"),
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Fp16 => 1,
+            Codec::QInt8 => 2,
+            Codec::TopK(_) => 3,
+        }
+    }
+
+    /// Serialize the codec choice itself (round-start negotiation).
+    /// The TopK fraction travels as f64 so server and workers compute
+    /// the exact same k.
+    pub fn encode_meta(&self, enc: &mut Encoder) {
+        enc.put_u8(self.code());
+        if let Codec::TopK(f) = self {
+            enc.put_f64(*f);
+        }
+    }
+
+    pub fn decode_meta(dec: &mut Decoder) -> Result<Codec> {
+        Ok(match dec.u8()? {
+            0 => Codec::None,
+            1 => Codec::Fp16,
+            2 => Codec::QInt8,
+            3 => {
+                let f = dec.f64()?;
+                ensure!(
+                    f > 0.0 && f <= 1.0,
+                    "topk fraction must be in (0, 1], got {f}"
+                );
+                Codec::TopK(f)
+            }
+            t => bail!("unknown codec tag {t}"),
+        })
+    }
+
+    /// Kept entries for an n-element tensor under TopK (0 for n = 0).
+    pub fn top_k(&self, n: usize) -> usize {
+        match self {
+            Codec::TopK(f) => {
+                if n == 0 {
+                    0
+                } else {
+                    // ⌈f·n⌉ with a guard against binary-representation
+                    // dust: 0.1 × 10000 is 1000.0000000000001 in f64
+                    // and must keep 1000 entries, not 1001.
+                    ((*f * n as f64 - 1e-9).ceil() as usize).clamp(1, n)
+                }
+            }
+            _ => n,
+        }
+    }
+
+    /// Payload-only wire bytes for an n-element tensor — what the
+    /// virtual engine books per comm leg (the self-describing stream
+    /// adds a fixed 5-byte tag+length envelope on top).
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        match self {
+            Codec::None => 4 * n,
+            Codec::Fp16 => 2 * n,
+            Codec::QInt8 => n + 8,
+            Codec::TopK(_) => 4 + 8 * self.top_k(n),
+        }
+    }
+
+    /// Documented worst-case absolute reconstruction error of
+    /// `decode(encode(xs))` for this data (see module docs).
+    pub fn bound(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        match self {
+            Codec::None => 0.0,
+            Codec::Fp16 => {
+                let maxabs = xs.iter().fold(0.0f64, |a, &x| a.max((x as f64).abs()));
+                maxabs * (2.0f64).powi(-11)
+                    + (maxabs - 65504.0).max(0.0)
+                    + (2.0f64).powi(-24)
+            }
+            Codec::QInt8 => {
+                let (min, scale) = qint8_params(xs);
+                let (min, scale) = (min as f64, scale as f64);
+                let max = min + 255.0 * scale;
+                scale * 0.5 + 1e-6 * (min.abs() + max.abs() + 255.0 * scale)
+            }
+            Codec::TopK(_) => {
+                let k = self.top_k(xs.len());
+                if k >= xs.len() {
+                    return 0.0;
+                }
+                let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+                // Largest dropped magnitude = element at rank k when
+                // sorted descending.
+                mags.select_nth_unstable_by(k, |a, b| b.total_cmp(a));
+                mags[k] as f64
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- fp16 ops
+
+fn round_shift_rne(v: u32, shift: u32) -> u32 {
+    let floor = v >> shift;
+    let rem = v & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && floor & 1 == 1) {
+        floor + 1
+    } else {
+        floor
+    }
+}
+
+/// f32 → IEEE half bits, round-to-nearest-even; finite overflow clamps
+/// to ±65504 (Inf/NaN propagate).  Bit-exact with numpy's float16 cast
+/// on the non-overflow range.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 255 {
+        // Inf / NaN pass through (quietened).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e16 = exp - 112;
+    if e16 >= 31 {
+        return sign | 0x7bff; // clamp to largest finite half
+    }
+    let man24 = man | 0x0080_0000;
+    let out = if e16 <= 0 {
+        let shift = (14 - e16) as u32;
+        if shift >= 32 {
+            return sign; // underflows to signed zero
+        }
+        round_shift_rne(man24, shift)
+    } else {
+        (((e16 - 1) as u32) << 10) + round_shift_rne(man24, 13)
+    };
+    if out >= 0x7c00 {
+        return sign | 0x7bff; // rounding carried into the Inf pattern
+    }
+    sign | out as u16
+}
+
+/// IEEE half bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mut man = (h & 0x03ff) as u32;
+    let bits = if exp == 31 {
+        let mut b = sign | 0x7f80_0000 | (man << 13);
+        if man != 0 {
+            b |= 0x0040_0000; // quiet NaN
+        }
+        b
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e = 113u32;
+            while man & 0x400 == 0 {
+                man <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((man & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ------------------------------------------------------------ qint8 ops
+
+/// (zero-point, scale) for per-tensor affine quantization.
+fn qint8_params(xs: &[f32]) -> (f32, f32) {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !min.is_finite() || !max.is_finite() || max <= min {
+        let zp = if min.is_finite() { min } else { 0.0 };
+        return (zp, 0.0);
+    }
+    let scale = (max - min) / 255.0;
+    if scale.is_finite() && scale > 0.0 {
+        (min, scale)
+    } else {
+        (min, 0.0)
+    }
+}
+
+// ------------------------------------------------------------- topk ops
+
+/// Indices of the k largest-magnitude elements, ascending (ties break
+/// toward the lower index, so the selection is deterministic).
+fn top_k_indices(xs: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    if k < xs.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            xs[b as usize]
+                .abs()
+                .total_cmp(&xs[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+// ------------------------------------------------------ tensor encoding
+
+/// Encode one tensor as a self-describing stream: codec tag, u32
+/// length, codec payload.  Total length = `codec.wire_bytes(n) + 5`.
+pub fn encode_f32s(enc: &mut Encoder, xs: &[f32], codec: Codec) {
+    enc.put_u8(codec.code());
+    match codec {
+        Codec::None => enc.put_f32s(xs),
+        Codec::Fp16 => {
+            let halves: Vec<u16> = xs.iter().map(|&x| f32_to_f16_bits(x)).collect();
+            enc.put_u16s(&halves);
+        }
+        Codec::QInt8 => {
+            enc.put_u32(xs.len() as u32);
+            let (min, scale) = qint8_params(xs);
+            enc.put_f32(min);
+            enc.put_f32(scale);
+            if scale > 0.0 {
+                for &x in xs {
+                    enc.put_u8(((x - min) / scale).round().clamp(0.0, 255.0) as u8);
+                }
+            } else {
+                for _ in xs {
+                    enc.put_u8(0);
+                }
+            }
+        }
+        Codec::TopK(_) => {
+            enc.put_u32(xs.len() as u32);
+            let k = codec.top_k(xs.len());
+            enc.put_u32(k as u32);
+            for i in top_k_indices(xs, k) {
+                enc.put_u32(i);
+                enc.put_f32(xs[i as usize]);
+            }
+        }
+    }
+}
+
+/// Decode one self-describing tensor.  Every length prefix is
+/// bounds-checked against the remaining buffer before allocation, so a
+/// truncated or corrupted stream errors instead of panicking or
+/// pre-allocating GBs.
+pub fn decode_f32s(dec: &mut Decoder) -> Result<Vec<f32>> {
+    match dec.u8()? {
+        0 => dec.f32s(),
+        1 => {
+            let halves = dec.u16s()?;
+            Ok(halves.into_iter().map(f16_bits_to_f32).collect())
+        }
+        2 => {
+            let n = dec.count(1)?;
+            let min = dec.f32()?;
+            let scale = dec.f32()?;
+            let raw = dec.raw(n)?;
+            Ok(raw.iter().map(|&q| min + q as f32 * scale).collect())
+        }
+        3 => {
+            let n = dec.u32()? as usize;
+            ensure!(
+                n <= MAX_DECODE_ELEMS,
+                "top-k dense length {n} exceeds decode cap {MAX_DECODE_ELEMS}"
+            );
+            let k = dec.count(8)?;
+            ensure!(k <= n, "top-k keeps {k} of only {n} elements");
+            // The encoder always keeps ≥ 1 entry for a non-empty tensor.
+            ensure!(n == 0 || k > 0, "top-k tensor of {n} elements keeps none");
+            // The dense length is not backed by wire bytes — charge it
+            // against the frame-wide budget so repeated hostile records
+            // cannot amplify a small frame into GBs.
+            dec.charge_dense(n)?;
+            let mut out = vec![0.0f32; n];
+            let mut prev: Option<usize> = None;
+            for _ in 0..k {
+                let i = dec.u32()? as usize;
+                let v = dec.f32()?;
+                ensure!(i < n, "top-k index {i} out of range {n}");
+                if let Some(p) = prev {
+                    ensure!(i > p, "top-k indices must be strictly ascending");
+                }
+                prev = Some(i);
+                out[i] = v;
+            }
+            Ok(out)
+        }
+        t => bail!("unknown codec tag {t}"),
+    }
+}
+
+/// Convenience: exact encoded size of one tensor under `codec`
+/// (measured, so it is the ground truth `wire_bytes` is checked against).
+pub fn encoded_len(xs: &[f32], codec: Codec) -> usize {
+    let mut enc = Encoder::new();
+    encode_f32s(&mut enc, xs, codec);
+    enc.len()
+}
+
+pub const ALL_CODECS: [Codec; 4] =
+    [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.1)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn round_trip(xs: &[f32], codec: Codec) -> Vec<f32> {
+        let mut enc = Encoder::new();
+        encode_f32s(&mut enc, xs, codec);
+        let buf = enc.finish();
+        assert_eq!(buf.len(), codec.wire_bytes(xs.len()) + 5, "{codec:?}");
+        let mut dec = Decoder::new(&buf);
+        let out = decode_f32s(&mut dec).unwrap();
+        assert!(dec.done());
+        out
+    }
+
+    #[test]
+    fn parse_and_name() {
+        assert_eq!(Codec::parse("none").unwrap(), Codec::None);
+        assert_eq!(Codec::parse("fp16").unwrap(), Codec::Fp16);
+        assert_eq!(Codec::parse("qint8").unwrap(), Codec::QInt8);
+        assert_eq!(Codec::parse("topk:0.1").unwrap(), Codec::TopK(0.1));
+        assert!(Codec::parse("topk:0").is_err());
+        assert!(Codec::parse("topk:1.5").is_err());
+        assert!(Codec::parse("topk:x").is_err());
+        assert!(Codec::parse("zstd").is_err());
+        for c in ALL_CODECS {
+            assert_eq!(Codec::parse(&c.name()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn meta_round_trip() {
+        for c in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.25)] {
+            let mut enc = Encoder::new();
+            c.encode_meta(&mut enc);
+            let buf = enc.finish();
+            let mut dec = Decoder::new(&buf);
+            let back = Codec::decode_meta(&mut dec).unwrap();
+            assert_eq!(back, c, "meta round trip must be exact");
+        }
+        assert!(Codec::decode_meta(&mut Decoder::new(&[9])).is_err());
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),
+            (65505.0, 0x7bff),  // clamp
+            (1.0e6, 0x7bff),    // clamp
+            (-1.0e6, 0xfbff),   // clamp
+            (5.9604645e-8, 0x0001), // smallest subnormal half
+            (1.0e-10, 0x0000),  // underflow
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "x={x}");
+        }
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.9604645e-8);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn prop_round_trip_within_documented_bound() {
+        for codec in [Codec::Fp16, Codec::QInt8, Codec::TopK(0.3)] {
+            prop::check(&format!("codec {codec:?} bound"), 60, |g| {
+                let n = g.int(1, 400);
+                let mag = 10.0f32.powi(g.int(0, 8) as i32 - 4);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let xs: Vec<f32> =
+                    (0..n).map(|_| rng.normal_f32(0.0, 1.0) * mag).collect();
+                let back = round_trip(&xs, codec);
+                if back.len() != n {
+                    return Err(format!("length {} != {n}", back.len()));
+                }
+                let bound = codec.bound(&xs);
+                for (i, (&a, &b)) in xs.iter().zip(&back).enumerate() {
+                    let err = (a as f64 - b as f64).abs();
+                    if err > bound {
+                        return Err(format!(
+                            "elem {i}: |{a} - {b}| = {err} > bound {bound}"
+                        ));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn none_is_lossless() {
+        let mut rng = Rng::new(7);
+        let xs: Vec<f32> = (0..257).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        assert_eq!(round_trip(&xs, Codec::None), xs);
+        assert_eq!(Codec::None.bound(&xs), 0.0);
+    }
+
+    #[test]
+    fn qint8_constant_tensor_is_exact() {
+        let xs = vec![2.5f32; 100];
+        assert_eq!(round_trip(&xs, Codec::QInt8), xs);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let xs = vec![0.1f32, -5.0, 0.0, 3.0, -0.2, 1.0];
+        let back = round_trip(&xs, Codec::TopK(0.34)); // k = ceil(2.04) = 3
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+        // documented bound: largest dropped magnitude
+        assert!((Codec::TopK(0.34).bound(&xs) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_full_fraction_is_lossless() {
+        let xs = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(round_trip(&xs, Codec::TopK(1.0)), xs);
+        assert_eq!(Codec::TopK(1.0).bound(&xs), 0.0);
+    }
+
+    #[test]
+    fn empty_tensors_round_trip() {
+        for codec in ALL_CODECS {
+            assert_eq!(round_trip(&[], codec), Vec::<f32>::new());
+            assert_eq!(codec.bound(&[]), 0.0);
+        }
+    }
+
+    #[test]
+    fn wire_bytes_shrink() {
+        let n = 10_000;
+        assert_eq!(Codec::None.wire_bytes(n), 40_000);
+        assert_eq!(Codec::Fp16.wire_bytes(n), 20_000);
+        assert_eq!(Codec::QInt8.wire_bytes(n), 10_008);
+        assert_eq!(Codec::TopK(0.1).wire_bytes(n), 4 + 8 * 1000);
+        // ≥ 3.5× for the acceptance pair
+        assert!(40_000.0 / Codec::QInt8.wire_bytes(n) as f64 >= 3.5);
+        assert!(40_000.0 / Codec::TopK(0.1).wire_bytes(n) as f64 >= 3.5);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let xs: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        for codec in ALL_CODECS {
+            let mut enc = Encoder::new();
+            encode_f32s(&mut enc, &xs, codec);
+            let buf = enc.finish();
+            for cut in 0..buf.len() {
+                let _ = decode_f32s(&mut Decoder::new(&buf[..cut]));
+            }
+        }
+        // hostile top-k headers
+        let mut enc = Encoder::new();
+        enc.put_u8(3);
+        enc.put_u32(u32::MAX); // dense length way past the cap
+        enc.put_u32(0);
+        let buf = enc.finish();
+        assert!(decode_f32s(&mut Decoder::new(&buf)).is_err());
+        let mut enc = Encoder::new();
+        enc.put_u8(3);
+        enc.put_u32(4);
+        enc.put_u32(2);
+        enc.put_u32(9); // index out of range
+        enc.put_f32(1.0);
+        enc.put_u32(1);
+        enc.put_f32(1.0);
+        let buf = enc.finish();
+        assert!(decode_f32s(&mut Decoder::new(&buf)).is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! only in the transport field (§3.2 zero-code-change migration).
 
 use crate::cluster::ClusterProfile;
+use crate::compress::Codec;
 use crate::coordinator::selection::Selection;
 use crate::data::PartitionKind;
 use crate::simulation::{AvailabilityModel, ChurnSpec, DynamicsSpec, StragglerSpec};
@@ -129,6 +130,9 @@ pub struct RunConfig {
     /// Client availability, device churn, and straggler injection for
     /// the virtual-time engine (default: fully static).
     pub dynamics: DynamicsSpec,
+    /// Update-compression codec negotiated for every round's uploads
+    /// (`--compress none|fp16|qint8|topk:<frac>`).
+    pub compress: Codec,
 }
 
 impl Default for RunConfig {
@@ -156,6 +160,7 @@ impl Default for RunConfig {
             eval_every: 1,
             selection: Selection::Random,
             dynamics: DynamicsSpec::default(),
+            compress: Codec::None,
         }
     }
 }
@@ -229,6 +234,9 @@ impl RunConfig {
         }
         self.dynamics.straggler.drop_prob =
             a.f64_or("drop-prob", self.dynamics.straggler.drop_prob)?;
+        if let Some(c) = a.get("compress") {
+            self.compress = Codec::parse(c)?;
+        }
         self.validate()?;
         Ok(self)
     }
@@ -330,6 +338,21 @@ mod tests {
         assert!(RunConfig::default().apply_args(&args(&["--availability", "1.8"])).is_err());
         assert!(RunConfig::default().apply_args(&args(&["--churn", "explode@1:2"])).is_err());
         assert!(RunConfig::default().apply_args(&args(&["--drop-prob", "7"])).is_err());
+    }
+
+    #[test]
+    fn compress_flag_parses_and_validates() {
+        assert_eq!(RunConfig::default().compress, Codec::None);
+        let c = RunConfig::default()
+            .apply_args(&args(&["--compress", "qint8"]))
+            .unwrap();
+        assert_eq!(c.compress, Codec::QInt8);
+        let t = RunConfig::default()
+            .apply_args(&args(&["--compress", "topk:0.1"]))
+            .unwrap();
+        assert!(matches!(t.compress, Codec::TopK(f) if (f - 0.1).abs() < 1e-12));
+        assert!(RunConfig::default().apply_args(&args(&["--compress", "topk:0"])).is_err());
+        assert!(RunConfig::default().apply_args(&args(&["--compress", "gzip"])).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use crate::aggregation::{AggOp, ClientUpdate, DeviceAggregate, Payload};
 use crate::algorithms::Broadcast;
+use crate::compress::Codec;
 use crate::model::ParamSet;
 use crate::scheduler::TaskRecord;
 use crate::util::codec::{Decoder, Encoder};
@@ -17,24 +18,29 @@ use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
 pub enum Msg {
-    /// Server → device: a full Parrot round.
-    Round { round: usize, broadcast: Broadcast, clients: Vec<usize> },
-    /// Server → device: one FA-style task.
-    Task { round: usize, broadcast: Broadcast, client: usize },
+    /// Server → device: a full Parrot round.  `codec` is the upload
+    /// compression negotiated for this round: the device must encode
+    /// its `RoundDone` aggregate with it.
+    Round { round: usize, broadcast: Broadcast, clients: Vec<usize>, codec: Codec },
+    /// Server → device: one FA-style task (`codec` as in `Round`).
+    Task { round: usize, broadcast: Broadcast, client: usize, codec: Codec },
     /// Server → device: FA round prologue when the device already holds
     /// this round's broadcast (params sent once per round per device).
     TaskCached { round: usize, client: usize },
     /// Server → device: end of run.
     Shutdown,
-    /// Device → server: Parrot round result.
+    /// Device → server: Parrot round result, aggregate tensors encoded
+    /// with the round's negotiated codec.
     RoundDone {
         device: usize,
         aggregate: DeviceAggregate,
         records: Vec<TaskRecord>,
         busy_secs: f64,
+        codec: Codec,
     },
-    /// Device → server: FA-style single-task result.
-    TaskDone { device: usize, update: ClientUpdate, record: TaskRecord },
+    /// Device → server: FA-style single-task result (averaged-OP params
+    /// encoded with the round codec; Collect entries verbatim).
+    TaskDone { device: usize, update: ClientUpdate, record: TaskRecord, codec: Codec },
     /// Device → server: ready for work (FA pull model).
     Idle { device: usize },
 }
@@ -62,28 +68,7 @@ fn decode_broadcast(dec: &mut Decoder) -> Result<Broadcast> {
     Ok(Broadcast { round, params, extra })
 }
 
-fn encode_payload(enc: &mut Encoder, p: &Payload) {
-    match p {
-        Payload::Params(ps) => {
-            enc.put_u8(0);
-            ps.encode(enc);
-        }
-        Payload::Scalar(x) => {
-            enc.put_u8(1);
-            enc.put_f64(*x);
-        }
-    }
-}
-
-fn decode_payload(dec: &mut Decoder) -> Result<Payload> {
-    Ok(match dec.u8()? {
-        0 => Payload::Params(ParamSet::decode(dec)?),
-        1 => Payload::Scalar(dec.f64()?),
-        t => bail!("bad payload tag {t}"),
-    })
-}
-
-fn encode_update(enc: &mut Encoder, u: &ClientUpdate) {
+fn encode_update(enc: &mut Encoder, u: &ClientUpdate, codec: Codec) {
     enc.put_u32(u.client as u32);
     enc.put_f64(u.weight);
     enc.put_u32(u.entries.len() as u32);
@@ -95,14 +80,17 @@ fn encode_update(enc: &mut Encoder, u: &ClientUpdate) {
             AggOp::Sum => 2,
             AggOp::Collect => 3,
         });
-        encode_payload(enc, p);
+        // Special Params (Collect) always ship verbatim (§4.2).
+        let c = if *op == AggOp::Collect { Codec::None } else { codec };
+        p.encode_with(enc, c);
     }
 }
 
 fn decode_update(dec: &mut Decoder) -> Result<ClientUpdate> {
     let client = dec.u32()? as usize;
     let weight = dec.f64()?;
-    let n = dec.u32()? as usize;
+    // An entry is at least name(4) + op(1) + payload tag(1) bytes.
+    let n = dec.count(6)?;
     let mut entries = Vec::with_capacity(n);
     for _ in 0..n {
         let name = dec.str()?;
@@ -113,7 +101,7 @@ fn decode_update(dec: &mut Decoder) -> Result<ClientUpdate> {
             3 => AggOp::Collect,
             t => bail!("bad op code {t}"),
         };
-        entries.push((name, op, decode_payload(dec)?));
+        entries.push((name, op, Payload::decode(dec)?));
     }
     Ok(ClientUpdate { client, weight, entries })
 }
@@ -138,18 +126,20 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut enc = Encoder::new();
         match self {
-            Msg::Round { round, broadcast, clients } => {
+            Msg::Round { round, broadcast, clients, codec } => {
                 enc.put_u8(0);
                 enc.put_u32(*round as u32);
+                codec.encode_meta(&mut enc);
                 encode_broadcast(&mut enc, broadcast);
                 enc.put_u32(clients.len() as u32);
                 for &c in clients {
                     enc.put_u32(c as u32);
                 }
             }
-            Msg::Task { round, broadcast, client } => {
+            Msg::Task { round, broadcast, client, codec } => {
                 enc.put_u8(1);
                 enc.put_u32(*round as u32);
+                codec.encode_meta(&mut enc);
                 encode_broadcast(&mut enc, broadcast);
                 enc.put_u32(*client as u32);
             }
@@ -159,20 +149,22 @@ impl Msg {
                 enc.put_u32(*client as u32);
             }
             Msg::Shutdown => enc.put_u8(3),
-            Msg::RoundDone { device, aggregate, records, busy_secs } => {
+            Msg::RoundDone { device, aggregate, records, busy_secs, codec } => {
                 enc.put_u8(4);
                 enc.put_u32(*device as u32);
-                enc.put_bytes(&aggregate.encoded());
+                codec.encode_meta(&mut enc);
+                enc.put_bytes(&aggregate.encoded_with(*codec));
                 enc.put_u32(records.len() as u32);
                 for r in records {
                     encode_record(&mut enc, r);
                 }
                 enc.put_f64(*busy_secs);
             }
-            Msg::TaskDone { device, update, record } => {
+            Msg::TaskDone { device, update, record, codec } => {
                 enc.put_u8(5);
                 enc.put_u32(*device as u32);
-                encode_update(&mut enc, update);
+                codec.encode_meta(&mut enc);
+                encode_update(&mut enc, update, *codec);
                 encode_record(&mut enc, record);
             }
             Msg::Idle { device } => {
@@ -189,38 +181,51 @@ impl Msg {
         Ok(match tag {
             0 => {
                 let round = dec.u32()? as usize;
+                let codec = Codec::decode_meta(&mut dec)?;
                 let broadcast = decode_broadcast(&mut dec)?;
-                let n = dec.u32()? as usize;
+                let n = dec.count(4)?;
                 let mut clients = Vec::with_capacity(n);
                 for _ in 0..n {
                     clients.push(dec.u32()? as usize);
                 }
-                Msg::Round { round, broadcast, clients }
+                Msg::Round { round, broadcast, clients, codec }
             }
-            1 => Msg::Task {
-                round: dec.u32()? as usize,
-                broadcast: decode_broadcast(&mut dec)?,
-                client: dec.u32()? as usize,
-            },
+            1 => {
+                let round = dec.u32()? as usize;
+                let codec = Codec::decode_meta(&mut dec)?;
+                Msg::Task {
+                    round,
+                    broadcast: decode_broadcast(&mut dec)?,
+                    client: dec.u32()? as usize,
+                    codec,
+                }
+            }
             2 => Msg::TaskCached { round: dec.u32()? as usize, client: dec.u32()? as usize },
             3 => Msg::Shutdown,
             4 => {
                 let device = dec.u32()? as usize;
+                let codec = Codec::decode_meta(&mut dec)?;
                 let agg_bytes = dec.bytes()?;
                 let aggregate = DeviceAggregate::decode(&agg_bytes)?;
-                let n = dec.u32()? as usize;
+                // A task record is 4 + 4 + 4 + 8 bytes on the wire.
+                let n = dec.count(20)?;
                 let mut records = Vec::with_capacity(n);
                 for _ in 0..n {
                     records.push(decode_record(&mut dec)?);
                 }
                 let busy_secs = dec.f64()?;
-                Msg::RoundDone { device, aggregate, records, busy_secs }
+                Msg::RoundDone { device, aggregate, records, busy_secs, codec }
             }
-            5 => Msg::TaskDone {
-                device: dec.u32()? as usize,
-                update: decode_update(&mut dec)?,
-                record: decode_record(&mut dec)?,
-            },
+            5 => {
+                let device = dec.u32()? as usize;
+                let codec = Codec::decode_meta(&mut dec)?;
+                Msg::TaskDone {
+                    device,
+                    update: decode_update(&mut dec)?,
+                    record: decode_record(&mut dec)?,
+                    codec,
+                }
+            }
             6 => Msg::Idle { device: dec.u32()? as usize },
             t => bail!("unknown msg tag {t}"),
         })
@@ -242,13 +247,15 @@ mod tests {
             round: 7,
             broadcast: Broadcast { round: 7, params: params(1.5), extra: Some(params(0.5)) },
             clients: vec![3, 1, 4, 1, 5],
+            codec: Codec::TopK(0.25),
         };
         match Msg::decode(&m.encode()).unwrap() {
-            Msg::Round { round, broadcast, clients } => {
+            Msg::Round { round, broadcast, clients, codec } => {
                 assert_eq!(round, 7);
                 assert_eq!(broadcast.params, params(1.5));
                 assert_eq!(broadcast.extra, Some(params(0.5)));
                 assert_eq!(clients, vec![3, 1, 4, 1, 5]);
+                assert!(matches!(codec, Codec::TopK(f) if (f - 0.25).abs() < 1e-6));
             }
             other => panic!("Msg::Round must round-trip to itself, decoded {other:?}"),
         }
@@ -267,15 +274,57 @@ mod tests {
             aggregate: la.finish(),
             records: vec![TaskRecord { round: 1, device: 3, n_samples: 40, secs: 1.25 }],
             busy_secs: 2.5,
+            codec: Codec::None,
         };
         match Msg::decode(&m.encode()).unwrap() {
-            Msg::RoundDone { device, records, busy_secs, .. } => {
+            Msg::RoundDone { device, records, busy_secs, codec, .. } => {
                 assert_eq!(device, 3);
                 assert_eq!(records.len(), 1);
                 assert_eq!(records[0].secs, 1.25);
                 assert_eq!(busy_secs, 2.5);
+                assert_eq!(codec, Codec::None);
             }
             other => panic!("Msg::RoundDone must round-trip to itself, decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compressed_round_done_shrinks_and_stays_in_bound() {
+        // The negotiated codec actually bites on the wire: the encoded
+        // RoundDone frame shrinks, and the decoded aggregate matches
+        // the original within the codec's documented bound.
+        let mk = |codec: Codec| {
+            let mut la = LocalAgg::new(1);
+            for c in 0..3 {
+                la.add(&ClientUpdate {
+                    client: c,
+                    weight: 2.0,
+                    entries: vec![(
+                        "delta".into(),
+                        AggOp::WeightedAvg,
+                        Payload::Params(ParamSet::init_he(&[vec![64, 32]], c as u64 + 1)),
+                    )],
+                });
+            }
+            Msg::RoundDone {
+                device: 1,
+                aggregate: la.finish(),
+                records: vec![],
+                busy_secs: 0.0,
+                codec,
+            }
+            .encode()
+        };
+        let raw = mk(Codec::None);
+        for codec in [Codec::Fp16, Codec::QInt8, Codec::TopK(0.1)] {
+            let wire = mk(codec);
+            assert!(
+                wire.len() < raw.len(),
+                "{codec:?}: {} !< {}",
+                wire.len(),
+                raw.len()
+            );
+            assert!(matches!(Msg::decode(&wire).unwrap(), Msg::RoundDone { .. }));
         }
     }
 
@@ -292,12 +341,16 @@ mod tests {
                 ],
             },
             record: TaskRecord { round: 0, device: 2, n_samples: 60, secs: 0.5 },
+            codec: Codec::Fp16,
         };
         match Msg::decode(&m.encode()).unwrap() {
-            Msg::TaskDone { update, .. } => {
+            Msg::TaskDone { update, codec, .. } => {
                 assert_eq!(update.client, 9);
                 assert_eq!(update.entries.len(), 2);
                 assert_eq!(update.entries[1].1, AggOp::Collect);
+                // params(2.0) is exactly representable in fp16
+                assert_eq!(update.entries[0].2, Payload::Params(params(2.0)));
+                assert_eq!(codec, Codec::Fp16);
             }
             other => panic!("Msg::TaskDone must round-trip to itself, decoded {other:?}"),
         }

@@ -131,8 +131,13 @@ impl<T: Transport> Server<T> {
             if clients.is_empty() {
                 continue;
             }
-            let msg = Msg::Round { round, broadcast: bc.clone(), clients: clients.clone() }
-                .encode();
+            let msg = Msg::Round {
+                round,
+                broadcast: bc.clone(),
+                clients: clients.clone(),
+                codec: self.cfg.compress,
+            }
+            .encode();
             bytes_down += msg.len() as u64;
             trips += 1;
             self.transport.send(k + 1, msg)?;
@@ -180,7 +185,13 @@ impl<T: Transport> Server<T> {
         let mut outstanding = 0usize;
         for dev in 1..=k {
             if let Some(client) = queue.pop_front() {
-                let msg = Msg::Task { round, broadcast: bc.clone(), client }.encode();
+                let msg = Msg::Task {
+                    round,
+                    broadcast: bc.clone(),
+                    client,
+                    codec: self.cfg.compress,
+                }
+                .encode();
                 bytes_down += msg.len() as u64;
                 trips += 1;
                 self.transport.send(dev, msg)?;
@@ -194,15 +205,20 @@ impl<T: Transport> Server<T> {
             bytes_up += raw.len() as u64;
             trips += 1;
             match Msg::decode(&raw)? {
-                Msg::TaskDone { device, update, record } => {
+                Msg::TaskDone { device, update, record, .. } => {
                     flat.add(&update);
                     self.scheduler.record(record);
                     n_done += 1;
                     outstanding -= 1;
                     if let Some(client) = queue.pop_front() {
                         // Params re-sent per task — FA Dist.'s comm model.
-                        let msg =
-                            Msg::Task { round, broadcast: bc.clone(), client }.encode();
+                        let msg = Msg::Task {
+                            round,
+                            broadcast: bc.clone(),
+                            client,
+                            codec: self.cfg.compress,
+                        }
+                        .encode();
                         bytes_down += msg.len() as u64;
                         trips += 1;
                         self.transport.send(device + 1, msg)?;

@@ -11,6 +11,7 @@
 
 use crate::aggregation::LocalAgg;
 use crate::algorithms::{Algo, Broadcast, TaskResult};
+use crate::compress::Codec;
 use crate::config::RunConfig;
 use crate::coordinator::messages::Msg;
 use crate::data::{FederatedDataset, Partition, SynthConfig};
@@ -32,8 +33,8 @@ pub struct Worker<T: Transport> {
     grad_exe: Option<Executable>,
     state: StateManager,
     dataset: FederatedDataset,
-    /// Cached broadcast for FA TaskCached messages.
-    cached_bc: Option<Broadcast>,
+    /// Cached broadcast + round codec for FA TaskCached messages.
+    cached_bc: Option<(Broadcast, Codec)>,
 }
 
 /// Build the deterministic dataset every participant reconstructs
@@ -91,7 +92,7 @@ impl<T: Transport> Worker<T> {
             let (_, raw) = self.transport.recv(None)?;
             match Msg::decode(&raw)? {
                 Msg::Shutdown => return Ok(()),
-                Msg::Round { round, broadcast, clients } => {
+                Msg::Round { round, broadcast, clients, codec } => {
                     let sw = Stopwatch::start();
                     let mut local = LocalAgg::new(self.device);
                     let mut records = Vec::with_capacity(clients.len());
@@ -100,28 +101,35 @@ impl<T: Transport> Worker<T> {
                         local.add(&update);
                         records.push(rec);
                     }
+                    // Upload with the codec the server negotiated for
+                    // this round.
                     let msg = Msg::RoundDone {
                         device: self.device,
                         aggregate: local.finish(),
                         records,
                         busy_secs: sw.elapsed_secs(),
+                        codec,
                     };
                     self.transport.send(0, msg.encode())?;
                 }
-                Msg::Task { round, broadcast, client } => {
-                    self.cached_bc = Some(broadcast.clone());
+                Msg::Task { round, broadcast, client, codec } => {
+                    self.cached_bc = Some((broadcast.clone(), codec));
                     let (update, record) = self.run_task(round, &broadcast, client)?;
-                    self.transport
-                        .send(0, Msg::TaskDone { device: self.device, update, record }.encode())?;
+                    self.transport.send(
+                        0,
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                    )?;
                 }
                 Msg::TaskCached { round, client } => {
-                    let bc = self
+                    let (bc, codec) = self
                         .cached_bc
                         .clone()
                         .context("TaskCached before any Task with broadcast")?;
                     let (update, record) = self.run_task(round, &bc, client)?;
-                    self.transport
-                        .send(0, Msg::TaskDone { device: self.device, update, record }.encode())?;
+                    self.transport.send(
+                        0,
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                    )?;
                 }
                 other => anyhow::bail!("worker got unexpected message {other:?}"),
             }

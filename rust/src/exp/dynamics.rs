@@ -12,6 +12,7 @@
 //! and churn counts.
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::compress::Codec;
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::{Partition, PartitionKind};
 use crate::simulation::{
@@ -69,8 +70,13 @@ pub fn dynamics(args: &Args) -> Result<()> {
     let m_p = args.usize_or("per-round", 100)?;
     let k = args.usize_or("devices", 32)?;
     let seed = args.u64_or("seed", 51)?;
+    // Upload codec (--compress): comm-byte/time columns book *encoded*
+    // upload sizes, so the sweep reflects compression too.
+    let codec = Codec::parse(args.get_or("compress", "none"))?;
     println!(
-        "Dynamic scenarios — M={m}, M_p={m_p}, K={k}, R={rounds} (discrete-event engine)"
+        "Dynamic scenarios — M={m}, M_p={m_p}, K={k}, R={rounds}, compress={} \
+         (discrete-event engine)",
+        codec.name()
     );
     println!(
         "{:<10} {:<14} {:>10} {:>8} {:>9} {:>10} {:>7} {:>6}",
@@ -88,7 +94,7 @@ pub fn dynamics(args: &Args) -> Result<()> {
                 scheme,
                 ClusterProfile::heterogeneous(k),
                 WorkloadCost::femnist(),
-                CommModel::femnist(),
+                CommModel::femnist().with_codec(codec),
                 sched,
                 2,
                 partition.clone(),

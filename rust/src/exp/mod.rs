@@ -4,11 +4,13 @@
 //! Every harness prints the same rows/series the paper reports and
 //! writes machine-readable JSON + CSV under `results/`.  Invoke through
 //! the launcher: `parrot exp <id>` (ids: table1 table2 table3 fig4 fig5
-//! fig6 fig7 fig8 fig9 fig10 fig11 dynamics ablate all).  `dynamics`
-//! sweeps the §4.4 availability/churn/straggler scenarios on the
-//! discrete-event engine.
+//! fig6 fig7 fig8 fig9 fig10 fig11 dynamics compression ablate all).
+//! `dynamics` sweeps the §4.4 availability/churn/straggler scenarios on
+//! the discrete-event engine; `compression` sweeps the `--compress`
+//! codecs (bytes / round time / reconstruction error) across schemes.
 
 pub mod ablation;
+pub mod compression;
 pub mod convergence;
 pub mod dynamics;
 pub mod figures;
@@ -61,11 +63,12 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig10" => figures::fig10(args),
         "fig11" => figures::fig11(args),
         "dynamics" => dynamics::dynamics(args),
+        "compression" => compression::compression(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
                 "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
-                "fig10", "fig11", "dynamics", "fig4",
+                "fig10", "fig11", "dynamics", "compression", "fig4",
             ] {
                 println!("\n################ {id} ################");
                 run(id, args)?;
@@ -73,7 +76,8 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         _ => bail!(
-            "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics ablate all"
+            "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
+             compression ablate all"
         ),
     }
 }

@@ -20,6 +20,7 @@
 //! index mapping every paper table/figure to a harness in [`exp`].
 
 pub mod util;
+pub mod compress;
 pub mod config;
 pub mod data;
 pub mod model;

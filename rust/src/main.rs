@@ -31,7 +31,8 @@ USAGE:
                [--seed S] [--artifacts DIR] [--state-dir DIR]
                [--availability always|P|periodic:T:O] [--churn leave@R:D[:T],join@R:D[:T],rand:PL:PJ]
                [--stragglers off|P:xS|P:u:LO:HI|P:p:A] [--drop-prob Q]
-  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|ablate|all> [--results DIR] [...]
+               [--compress none|fp16|qint8|topk:F]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|ablate|all> [--results DIR] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]

@@ -8,6 +8,7 @@
 //! below — no PJRT round-trip for aggregation, matching the paper where
 //! aggregation is a server/device CPU operation.
 
+use crate::compress::{self, Codec};
 use crate::util::codec::{Decoder, Encoder};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -122,30 +123,47 @@ impl ParamSet {
     }
 
     /// Serialize (state-manager snapshot / transport message payload).
+    /// Lossless raw-f32 tensors; see [`ParamSet::encode_with`] for the
+    /// compressed wire forms.
     pub fn encode(&self, enc: &mut Encoder) {
+        self.encode_with(enc, Codec::None);
+    }
+
+    /// Serialize with a wire codec: each tensor is written as a
+    /// self-describing compressed stream (`compress::encode_f32s`), so
+    /// [`ParamSet::decode`] needs no out-of-band codec knowledge.
+    pub fn encode_with(&self, enc: &mut Encoder, codec: Codec) {
         enc.put_u32(self.tensors.len() as u32);
         for (shape, t) in self.shapes.iter().zip(&self.tensors) {
             enc.put_u32(shape.len() as u32);
             for &d in shape {
                 enc.put_u32(d as u32);
             }
-            enc.put_f32s(t);
+            compress::encode_f32s(enc, t, codec);
         }
     }
 
     pub fn decode(dec: &mut Decoder) -> Result<ParamSet> {
-        let n = dec.u32()? as usize;
+        // Every count is bounds-checked against the remaining buffer
+        // before allocation (corrupt frames error, never panic or
+        // balloon): a tensor record is at least rank(4) + codec tag(1)
+        // + length(4) bytes, a shape dim exactly 4.
+        let n = dec.count(9)?;
         let mut shapes = Vec::with_capacity(n);
         let mut tensors = Vec::with_capacity(n);
         for _ in 0..n {
-            let rank = dec.u32()? as usize;
+            let rank = dec.count(4)?;
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
                 shape.push(dec.u32()? as usize);
             }
-            let t = dec.f32s()?;
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("shape {shape:?} overflows"))?;
+            let t = compress::decode_f32s(dec)?;
             anyhow::ensure!(
-                t.len() == shape.iter().product::<usize>().max(1),
+                t.len() == numel.max(1),
                 "tensor length {} != shape {:?}",
                 t.len(),
                 shape
@@ -266,6 +284,31 @@ mod tests {
         let p = ParamSet::init_he(&shapes(), 9);
         let q = ParamSet::from_bytes(&p.to_bytes()).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn compressed_round_trip_within_bound() {
+        let p = ParamSet::init_he(&shapes(), 11);
+        for codec in crate::compress::ALL_CODECS {
+            let mut enc = Encoder::new();
+            p.encode_with(&mut enc, codec);
+            let buf = enc.finish();
+            let q = ParamSet::from_bytes(&buf).unwrap();
+            assert_eq!(q.shapes, p.shapes);
+            let bound: f64 = p
+                .tensors
+                .iter()
+                .map(|t| codec.bound(t))
+                .fold(0.0, f64::max);
+            assert!(
+                (p.max_abs_diff(&q) as f64) <= bound,
+                "{codec:?}: diff {} > bound {bound}",
+                p.max_abs_diff(&q)
+            );
+            if codec == Codec::None {
+                assert_eq!(p, q);
+            }
+        }
     }
 
     #[test]

@@ -137,6 +137,8 @@ pub enum ReassignPolicy {
 }
 
 /// Round-tail communication shape (after the compute phase drains).
+/// Down and up legs carry distinct byte counts: the broadcast ships raw
+/// f32 params while uploads ship the round codec's *encoded* size.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TailComm {
     /// No round-tail communication (SP; FA pays per task instead).
@@ -144,11 +146,11 @@ pub enum TailComm {
     /// One broadcast down + one serialized upload per *completed task*
     /// into the server NIC (RW/SD: every executor ships its client's
     /// params).
-    PerExecutor { payload: u64 },
+    PerExecutor { down: u64, up: u64 },
     /// One broadcast + one locally-aggregated upload per alive device,
     /// plus the special-params payload (Parrot's hierarchical
-    /// aggregation: upload = s_a·K + s_e·M_p).
-    Hierarchical { s_a: u64, s_e_total: u64 },
+    /// aggregation: upload = s_a·K + s_e·M_p, with s_a encoded).
+    Hierarchical { s_a_down: u64, s_a_up: u64, s_e_total: u64 },
 }
 
 /// What a scheme policy hands the engine for one round.
@@ -506,34 +508,34 @@ impl<'a> Core<'a> {
         let mut t = end;
         match tail {
             TailComm::None => {}
-            TailComm::PerExecutor { payload } => {
+            TailComm::PerExecutor { down, up } => {
                 // Broadcast down to every scheduled task's executor.
                 let scheduled = self.tasks.len() as u64;
-                self.bytes += payload * scheduled;
+                self.bytes += down * scheduled;
                 self.trips += scheduled;
-                t += self.cluster.comm_time(payload as usize);
-                // Uploads serialize into the server NIC.
-                let per = self.cluster.latency + payload as f64 / self.cluster.bandwidth;
+                t += self.cluster.comm_time(down as usize);
+                // Uploads (encoded size) serialize into the server NIC.
+                let per = self.cluster.latency + up as f64 / self.cluster.bandwidth;
                 for _ in 0..self.completed {
                     t += per;
-                    self.bytes += payload;
+                    self.bytes += up;
                     self.trips += 1;
                 }
             }
-            TailComm::Hierarchical { s_a, s_e_total } => {
+            TailComm::Hierarchical { s_a_down, s_a_up, s_e_total } => {
                 let k_up = self.alive_count() as u64;
                 // Broadcast s_a down per initially-alive device.
-                self.bytes += s_a * initial_alive as u64;
+                self.bytes += s_a_down * initial_alive as u64;
                 self.trips += initial_alive as u64;
-                t += self.cluster.comm_time(s_a as usize);
-                // One aggregated upload per surviving device: the first
-                // pays the full payload time, the rest pipeline behind
-                // it at one trip latency each, plus the special-params
-                // payload (s_e · M_p) at the end.
+                t += self.cluster.comm_time(s_a_down as usize);
+                // One aggregated (encoded) upload per surviving device:
+                // the first pays the full payload time, the rest
+                // pipeline behind it at one trip latency each, plus the
+                // special-params payload (s_e · M_p) at the end.
                 if k_up > 0 {
-                    t += self.cluster.comm_time(s_a as usize);
+                    t += self.cluster.comm_time(s_a_up as usize);
                     t += (k_up - 1) as f64 * self.cluster.latency;
-                    self.bytes += s_a * k_up + s_e_total;
+                    self.bytes += s_a_up * k_up + s_e_total;
                     self.trips += k_up;
                     if s_e_total > 0 {
                         t += s_e_total as f64 / self.cluster.bandwidth;

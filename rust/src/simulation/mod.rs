@@ -61,6 +61,7 @@ pub use availability::{
 pub use engine::{Event, RoundOutcome, RoundPlan, SimTask, TaskState};
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::compress::Codec;
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::Partition;
 use crate::scheduler::Scheduler;
@@ -72,23 +73,28 @@ use engine::{RefillPolicy, ReassignPolicy, TailComm};
 /// comm:compute ratio matches the evaluated systems).
 #[derive(Debug, Clone, Copy)]
 pub struct CommModel {
-    /// Averaged-params bytes (s_a): full model, e.g. 44 MB for ResNet-18.
+    /// Averaged-params bytes (s_a), raw f32: full model, e.g. 44 MB for
+    /// ResNet-18.  Broadcasts always ship this raw size.
     pub s_a: u64,
     /// Special-params bytes per client (s_e), 0 for most algorithms.
+    /// Never compressed (§4.2's Collect entries ship verbatim).
     pub s_e: u64,
+    /// Update-compression codec applied to uplink parameter payloads;
+    /// upload legs book `Codec::wire_bytes` instead of raw f32.
+    pub codec: Codec,
 }
 
 impl CommModel {
     pub fn femnist() -> CommModel {
-        CommModel { s_a: 11_000_000 * 4, s_e: 0 } // ResNet-18, 11M params
+        CommModel { s_a: 11_000_000 * 4, s_e: 0, codec: Codec::None } // ResNet-18, 11M params
     }
 
     pub fn imagenet() -> CommModel {
-        CommModel { s_a: 23_000_000 * 4, s_e: 0 } // ResNet-50
+        CommModel { s_a: 23_000_000 * 4, s_e: 0, codec: Codec::None } // ResNet-50
     }
 
     pub fn reddit() -> CommModel {
-        CommModel { s_a: 11_000_000 * 4, s_e: 0 } // Albert-base
+        CommModel { s_a: 11_000_000 * 4, s_e: 0, codec: Codec::None } // Albert-base
     }
 
     pub fn by_name(name: &str) -> CommModel {
@@ -97,6 +103,23 @@ impl CommModel {
             "reddit" | "tinylm" => CommModel::reddit(),
             _ => CommModel::femnist(),
         }
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> CommModel {
+        self.codec = codec;
+        self
+    }
+
+    /// Parameter count behind s_a (4 raw bytes per param).
+    pub fn n_params(&self) -> usize {
+        (self.s_a / 4) as usize
+    }
+
+    /// Encoded uplink bytes for the averaged params — the s_a·K term of
+    /// Table 1 after compression.  Equals `s_a` exactly for
+    /// `Codec::None`.
+    pub fn s_a_up(&self) -> u64 {
+        self.codec.wire_bytes(self.n_params()) as u64
     }
 }
 
@@ -400,7 +423,10 @@ impl VirtualSim {
             reassign: ReassignPolicy::LeastLoaded,
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
-            tail: TailComm::PerExecutor { payload: self.comm.s_a + self.comm.s_e },
+            tail: TailComm::PerExecutor {
+                down: self.comm.s_a + self.comm.s_e,
+                up: self.comm.s_a_up() + self.comm.s_e,
+            },
             record_history: false,
             tasks,
         }
@@ -415,8 +441,8 @@ impl VirtualSim {
             .iter()
             .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
             .collect();
-        let per_client = self.comm.s_a + self.comm.s_e;
-        let leg = self.cluster.comm_time(per_client as usize);
+        let down = self.comm.s_a + self.comm.s_e;
+        let up = self.comm.s_a_up() + self.comm.s_e;
         RoundPlan {
             pull: (0..tasks.len()).collect(),
             n_exec: k,
@@ -424,8 +450,11 @@ impl VirtualSim {
             assigned: vec![Vec::new(); k],
             refill: RefillPolicy::SharedPull,
             reassign: ReassignPolicy::Requeue,
-            per_task_comm: (leg, leg),
-            per_task_bytes: (per_client, per_client),
+            per_task_comm: (
+                self.cluster.comm_time(down as usize),
+                self.cluster.comm_time(up as usize),
+            ),
+            per_task_bytes: (down, up),
             tail: TailComm::None,
             record_history: false,
             tasks,
@@ -466,7 +495,8 @@ impl VirtualSim {
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
             tail: TailComm::Hierarchical {
-                s_a: self.comm.s_a,
+                s_a_down: self.comm.s_a,
+                s_a_up: self.comm.s_a_up(),
                 s_e_total: self.comm.s_e * m_p,
             },
             record_history: true,
@@ -558,6 +588,49 @@ mod tests {
         let mut fa = mk(Scheme::FaDist, 8, SchedulerKind::Uniform);
         let rf = run_virtual(&mut fa, 1, 100, 1);
         assert_eq!(rf[0].trips, 200); // 2·M_p
+    }
+
+    #[test]
+    fn codec_shrinks_comm_bytes_and_round_time() {
+        // Engine byte columns book *encoded* upload sizes, so a codec
+        // must shrink both the bytes and the comm tail of every scheme
+        // that uploads params, leaving broadcast and compute untouched.
+        let at = |scheme, sched, codec: Codec| {
+            let partition = Partition::generate(PartitionKind::Natural, 200, 62, 100, 7);
+            let mut sim = VirtualSim::new(
+                scheme,
+                ClusterProfile::homogeneous(8),
+                WorkloadCost::femnist(),
+                CommModel::femnist().with_codec(codec),
+                sched,
+                2,
+                partition,
+                1,
+                3,
+            );
+            sim.noise = 0.0;
+            let r = run_virtual(&mut sim, 1, 60, 1).remove(0);
+            (r.bytes, r.total_secs)
+        };
+        for (scheme, sched) in [
+            (Scheme::Parrot, SchedulerKind::Greedy),
+            (Scheme::SdDist, SchedulerKind::Uniform),
+            (Scheme::FaDist, SchedulerKind::Uniform),
+        ] {
+            let (b_raw, t_raw) = at(scheme, sched, Codec::None);
+            for codec in [Codec::Fp16, Codec::QInt8, Codec::TopK(0.1)] {
+                let (b, t) = at(scheme, sched, codec);
+                assert!(b < b_raw, "{scheme:?}/{codec:?}: bytes {b} !< {b_raw}");
+                assert!(t < t_raw, "{scheme:?}/{codec:?}: time {t} !< {t_raw}");
+            }
+            // qint8 upload is ~4x smaller; with the raw broadcast in
+            // the column too the total must drop below ~5/8 of raw.
+            let (bq, _) = at(scheme, sched, Codec::QInt8);
+            assert!(
+                (bq as f64) < 0.7 * b_raw as f64,
+                "{scheme:?}: qint8 bytes {bq} vs raw {b_raw}"
+            );
+        }
     }
 
     #[test]

@@ -167,7 +167,10 @@ impl StateManager {
         self.cache_bytes
     }
 
-    /// Wipe everything (between experiments).
+    /// Wipe everything (between experiments): disk, cache, *and* the
+    /// traffic counters + LRU clock — a reused manager must start the
+    /// next experiment with a clean slate, or the Table-1 harnesses
+    /// report the previous run's traffic in the next run's columns.
     pub fn clear(&mut self) -> Result<()> {
         for e in std::fs::read_dir(&self.dir)? {
             let p = e?.path();
@@ -181,6 +184,8 @@ impl StateManager {
         }
         self.cache.clear();
         self.cache_bytes = 0;
+        self.tick = 0;
+        self.metrics = StateMetrics::default();
         Ok(())
     }
 }
@@ -348,5 +353,36 @@ mod tests {
         sm.clear().unwrap();
         assert_eq!(sm.disk_bytes().unwrap(), 0);
         assert!(sm.load(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn clear_resets_metrics_and_lru_clock() {
+        // Regression: clear() used to keep the previous experiment's
+        // counters and tick, so a reused manager misreported the next
+        // Table-1 run's traffic and recency.
+        let mut sm = StateManager::new(tmp_dir("clear_metrics"), 1 << 20).unwrap();
+        sm.save(1, &[1u8; 64]).unwrap();
+        sm.save(2, &[2u8; 64]).unwrap();
+        sm.load(1).unwrap();
+        sm.load(9).unwrap(); // miss
+        assert!(sm.metrics.saves == 2 && sm.metrics.loads == 2);
+        assert!(sm.metrics.peak_cache_bytes == 128 && sm.metrics.bytes_written == 128);
+
+        sm.clear().unwrap();
+        let m = sm.metrics;
+        assert_eq!(
+            (m.loads, m.saves, m.cache_hits, m.disk_reads, m.disk_writes),
+            (0, 0, 0, 0, 0)
+        );
+        assert_eq!((m.bytes_written, m.bytes_read, m.peak_cache_bytes), (0, 0, 0));
+
+        // The next experiment's counters start from zero and the LRU
+        // clock restarts without resurrecting stale recency.
+        sm.save(3, &[3u8; 32]).unwrap();
+        sm.load(3).unwrap();
+        assert_eq!(sm.metrics.saves, 1);
+        assert_eq!(sm.metrics.loads, 1);
+        assert_eq!(sm.metrics.cache_hits, 1);
+        assert_eq!(sm.metrics.peak_cache_bytes, 32);
     }
 }

@@ -118,15 +118,33 @@ pub struct TcpServerEndpoint {
     outs: HashMap<usize, Arc<Mutex<TcpStream>>>,
 }
 
-impl TcpServerEndpoint {
-    /// Bind `addr` and accept exactly `k` workers; each worker's first
-    /// frame announces its device id (1..=k).
-    pub fn bind(addr: &str, k: usize) -> Result<TcpServerEndpoint> {
+/// A bound-but-not-yet-accepting listener.  Binding and accepting are
+/// split so callers can bind port 0, read the ephemeral port the OS
+/// picked, hand it to workers, and only then block in `accept` —
+/// no test or example ever hardcodes a port (which collides under
+/// parallel runs).
+pub struct TcpListenerHandle {
+    listener: TcpListener,
+}
+
+impl TcpListenerHandle {
+    pub fn listen(addr: &str) -> Result<TcpListenerHandle> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(TcpListenerHandle { listener })
+    }
+
+    /// The actual bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept exactly `k` workers; each worker's first frame announces
+    /// its device id (1..=k).
+    pub fn accept(self, k: usize) -> Result<TcpServerEndpoint> {
         let (tx, inbox) = channel();
         let mut outs = HashMap::new();
         for _ in 0..k {
-            let (mut stream, _) = listener.accept()?;
+            let (mut stream, _) = self.listener.accept()?;
             stream.set_nodelay(true).ok();
             let (id, _) = read_frame(&mut stream)?; // hello frame
             outs.insert(id, Arc::new(Mutex::new(stream.try_clone()?)));
@@ -143,6 +161,14 @@ impl TcpServerEndpoint {
             });
         }
         Ok(TcpServerEndpoint { inbox, outs })
+    }
+}
+
+impl TcpServerEndpoint {
+    /// Bind `addr` and accept exactly `k` workers in one call (the
+    /// deployment path, where the address is fixed up front).
+    pub fn bind(addr: &str, k: usize) -> Result<TcpServerEndpoint> {
+        TcpListenerHandle::listen(addr)?.accept(k)
     }
 }
 
@@ -251,11 +277,12 @@ mod tests {
 
     #[test]
     fn tcp_round_trip_threads() {
-        let port = 34571;
-        let addr = format!("127.0.0.1:{port}");
-        let addr2 = addr.clone();
+        // Bind port 0 and discover the ephemeral port: hardcoded ports
+        // collide under parallel test runs.
+        let handle = TcpListenerHandle::listen("127.0.0.1:0").unwrap();
+        let addr = handle.local_addr().unwrap().to_string();
         let server_thread = std::thread::spawn(move || {
-            let server = TcpServerEndpoint::bind(&addr2, 2).unwrap();
+            let server = handle.accept(2).unwrap();
             server.send(1, b"hi 1".to_vec()).unwrap();
             server.send(2, vec![7u8; 100_000]).unwrap(); // big frame
             let mut seen = Vec::new();
@@ -267,7 +294,8 @@ mod tests {
             assert_eq!(seen[0], (1, b"ack1".to_vec()));
             assert_eq!(seen[1].1.len(), 3);
         });
-        std::thread::sleep(Duration::from_millis(100));
+        // The listener is already bound, so connects queue in the
+        // accept backlog — no startup sleep needed.
         let w1 = TcpWorkerEndpoint::connect(&addr, 1).unwrap();
         let w2 = TcpWorkerEndpoint::connect(&addr, 2).unwrap();
         let (_, m1) = w1.recv(Some(Duration::from_secs(5))).unwrap();

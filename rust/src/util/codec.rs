@@ -26,6 +26,10 @@ impl Encoder {
         self.buf.push(v);
     }
 
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -71,6 +75,25 @@ impl Encoder {
         }
     }
 
+    /// u16 slice with length prefix (fp16-compressed tensors).
+    pub fn put_u16s(&mut self, xs: &[u16]) {
+        self.put_u32(xs.len() as u32);
+        #[cfg(target_endian = "little")]
+        {
+            let raw = unsafe {
+                std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2)
+            };
+            self.buf.extend_from_slice(raw);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            self.buf.reserve(xs.len() * 2);
+            for &x in xs {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
     pub fn put_bytes(&mut self, xs: &[u8]) {
         self.put_u32(xs.len() as u32);
         self.buf.extend_from_slice(xs);
@@ -89,15 +112,22 @@ impl Encoder {
     }
 }
 
+/// Total dense f32 elements one decoder may materialize from sparse
+/// (wire-unbacked) length prefixes — 64M elements ≈ 256 MB, far above
+/// any legitimate frame, but a hard ceiling against amplification
+/// attacks that repeat small sparse records with huge dense lengths.
+pub const DENSE_ELEM_BUDGET: usize = 1 << 26;
+
 /// Cursor-based decoder over an encoded byte slice.
 pub struct Decoder<'a> {
     buf: &'a [u8],
     pos: usize,
+    dense_budget: usize,
 }
 
 impl<'a> Decoder<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Decoder { buf, pos: 0 }
+        Decoder { buf, pos: 0, dense_budget: DENSE_ELEM_BUDGET }
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -115,6 +145,10 @@ impl<'a> Decoder<'a> {
 
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     pub fn u32(&mut self) -> Result<u32> {
@@ -139,7 +173,7 @@ impl<'a> Decoder<'a> {
     }
 
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
+        let n = self.count(4)?;
         let raw = self.take(n * 4)?;
         #[cfg(target_endian = "little")]
         {
@@ -164,9 +198,75 @@ impl<'a> Decoder<'a> {
         }
     }
 
+    pub fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.count(2)?;
+        let raw = self.take(n * 2)?;
+        #[cfg(target_endian = "little")]
+        {
+            let mut out = vec![0u16; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 2,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(n);
+            for c in raw.chunks_exact(2) {
+                out.push(u16::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(out)
+        }
+    }
+
     pub fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;
         Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read a u32 element-count prefix and bounds-check it against the
+    /// remaining buffer (each element occupies at least
+    /// `min_elem_bytes`) *before* any allocation happens.  This is the
+    /// seam that keeps a corrupted or attacker-controlled length prefix
+    /// from pre-allocating GBs: callers size their `Vec::with_capacity`
+    /// from the checked count.
+    pub fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let need = n
+            .checked_mul(min_elem_bytes.max(1))
+            .ok_or_else(|| anyhow::anyhow!("length prefix {n} overflows"))?;
+        if need > self.remaining() {
+            bail!(
+                "length prefix {n} needs {need} bytes but only {} remain",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    /// Take `n` raw bytes (bounds-checked).
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Charge `n` elements against this decoder's cumulative budget for
+    /// dense allocations that are NOT backed 1:1 by wire bytes (sparse
+    /// top-k tensors).  Errors once a frame has asked for more than
+    /// [`DENSE_ELEM_BUDGET`] total elements, so repeating small hostile
+    /// records cannot amplify a KB-sized frame into GBs of memory.
+    pub fn charge_dense(&mut self, n: usize) -> Result<()> {
+        if n > self.dense_budget {
+            bail!(
+                "dense-allocation budget exhausted: {n} elements requested, {} left",
+                self.dense_budget
+            );
+        }
+        self.dense_budget -= n;
+        Ok(())
     }
 
     pub fn remaining(&self) -> usize {
@@ -239,6 +339,41 @@ mod tests {
     fn underrun_is_error_not_panic() {
         let mut d = Decoder::new(&[1, 2]);
         assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn round_trip_u16s() {
+        let xs: Vec<u16> = (0..300).map(|i| (i * 211) as u16).collect();
+        let mut e = Encoder::new();
+        e.put_u16(0xBEEF);
+        e.put_u16s(&xs);
+        let buf = e.finish();
+        assert_eq!(buf.len(), 2 + 4 + 2 * xs.len());
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.u16().unwrap(), 0xBEEF);
+        assert_eq!(d.u16s().unwrap(), xs);
+        assert!(d.done());
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_before_allocation() {
+        // A u32::MAX count with an empty tail must error immediately,
+        // not allocate; same for the typed readers built on count().
+        let mut e = Encoder::new();
+        e.put_u32(u32::MAX);
+        let buf = e.finish();
+        assert!(Decoder::new(&buf).count(1).is_err());
+        assert!(Decoder::new(&buf).f32s().is_err());
+        assert!(Decoder::new(&buf).u16s().is_err());
+        assert!(Decoder::new(&buf).bytes().is_err());
+        assert!(Decoder::new(&buf).str().is_err());
+        // a valid count passes and leaves the cursor on the payload
+        let mut e = Encoder::new();
+        e.put_u32(3);
+        e.put_bytes(&[]); // 4 more bytes of tail
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.count(1).unwrap(), 3);
     }
 
     #[test]

@@ -54,10 +54,31 @@ impl Gen {
     }
 }
 
+/// Default master seed; override per run with `PARROT_PROP_SEED=<u64>`
+/// (decimal or 0x-hex) — scripts/ci.sh runs the suites once with the
+/// fixed default and once with a random seed it prints for replay.
+const DEFAULT_MASTER_SEED: u64 = 0xC0FF_EE00;
+
+fn master_seed() -> u64 {
+    match std::env::var("PARROT_PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(h) => u64::from_str_radix(h, 16).ok(),
+                None => s.parse().ok(),
+            };
+            parsed.unwrap_or_else(|| {
+                panic!("PARROT_PROP_SEED must be a u64 (decimal or 0x-hex), got {s:?}")
+            })
+        }
+        Err(_) => DEFAULT_MASTER_SEED,
+    }
+}
+
 /// Run `prop` for `cases` random cases. Panics with the failing seed and
 /// the smallest failing size found.
 pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
-    check_seeded(name, cases, 0xC0FF_EE00, &mut prop)
+    check_seeded(name, cases, master_seed(), &mut prop)
 }
 
 pub fn check_seeded(
@@ -80,13 +101,16 @@ pub fn check_seeded(
                     break;
                 }
             }
+            let replay =
+                format!("replay the whole sequence with PARROT_PROP_SEED={master_seed:#x}");
             match best {
                 Some((size, m)) => panic!(
                     "property {name:?} failed (case {case}, seed {seed:#x}): {msg}\n\
-                     smallest reproduction at size={size}: {m}"
+                     smallest reproduction at size={size}: {m}\n{replay}"
                 ),
                 None => panic!(
-                    "property {name:?} failed (case {case}, seed {seed:#x}, size=1.0): {msg}"
+                    "property {name:?} failed (case {case}, seed {seed:#x}, size=1.0): {msg}\n\
+                     {replay}"
                 ),
             }
         }

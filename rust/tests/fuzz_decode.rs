@@ -1,0 +1,253 @@
+//! Adversarial decode fuzzing over every coordinator message variant:
+//! random truncation and byte-flip corruption of valid frames, plus
+//! crafted hostile length prefixes.  Every case must come back as
+//! `Ok`/`Err` — never a panic, index-out-of-bounds, or multi-GB
+//! pre-allocation.  Run with `PARROT_PROP_SEED=<u64>` to replay a
+//! specific sequence (scripts/ci.sh adds a random-seed pass).
+
+use parrot::aggregation::{AggOp, ClientUpdate, DeviceAggregate, LocalAgg, Payload};
+use parrot::algorithms::Broadcast;
+use parrot::compress::{self, Codec};
+use parrot::coordinator::messages::Msg;
+use parrot::model::ParamSet;
+use parrot::scheduler::TaskRecord;
+use parrot::util::codec::{Decoder, Encoder};
+use parrot::util::prop::{check, Gen};
+use parrot::util::rng::Rng;
+
+fn gen_params(g: &mut Gen) -> ParamSet {
+    let shapes: Vec<Vec<usize>> = (0..g.int(1, 3))
+        .map(|_| (0..g.int(1, 2)).map(|_| g.int(1, 10)).collect())
+        .collect();
+    let mut rng = Rng::new(g.rng.next_u64());
+    ParamSet {
+        tensors: shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>().max(1))
+                    .map(|_| rng.normal_f32(0.0, 2.0))
+                    .collect()
+            })
+            .collect(),
+        shapes,
+    }
+}
+
+fn gen_codec(g: &mut Gen) -> Codec {
+    *g.pick(&[Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.3)])
+}
+
+fn gen_update(g: &mut Gen) -> ClientUpdate {
+    ClientUpdate {
+        client: g.int(0, 500),
+        weight: g.f64(0.1, 50.0),
+        entries: vec![
+            ("delta".into(), AggOp::WeightedAvg, Payload::Params(gen_params(g))),
+            ("h".into(), AggOp::Sum, Payload::Params(gen_params(g))),
+            ("tau".into(), AggOp::Collect, Payload::Scalar(g.f64(-4.0, 4.0))),
+        ],
+    }
+}
+
+/// One valid frame of every message variant.
+fn sample_msgs(g: &mut Gen) -> Vec<Msg> {
+    let broadcast = Broadcast {
+        round: g.int(0, 50),
+        params: gen_params(g),
+        extra: if g.bool() { Some(gen_params(g)) } else { None },
+    };
+    let mut la = LocalAgg::new(g.int(0, 8));
+    for _ in 0..g.int(1, 4) {
+        la.add(&gen_update(g));
+    }
+    let record = TaskRecord {
+        round: g.int(0, 50),
+        device: g.int(0, 8),
+        n_samples: g.int(1, 400),
+        secs: g.f64(0.01, 3.0),
+    };
+    vec![
+        Msg::Round {
+            round: g.int(0, 50),
+            broadcast: broadcast.clone(),
+            clients: (0..g.int(0, 20)).map(|_| g.int(0, 1000)).collect(),
+            codec: gen_codec(g),
+        },
+        Msg::Task {
+            round: g.int(0, 50),
+            broadcast,
+            client: g.int(0, 1000),
+            codec: gen_codec(g),
+        },
+        Msg::TaskCached { round: g.int(0, 50), client: g.int(0, 1000) },
+        Msg::Shutdown,
+        Msg::RoundDone {
+            device: g.int(0, 8),
+            aggregate: la.finish(),
+            records: vec![record],
+            busy_secs: g.f64(0.0, 10.0),
+            codec: gen_codec(g),
+        },
+        Msg::TaskDone {
+            device: g.int(0, 8),
+            update: gen_update(g),
+            record,
+            codec: gen_codec(g),
+        },
+        Msg::Idle { device: g.int(0, 8) },
+    ]
+}
+
+#[test]
+fn fuzz_truncated_frames_error_not_panic() {
+    check("truncated frames", 30, |g| {
+        for msg in sample_msgs(g) {
+            let buf = msg.encode();
+            // The intact frame must decode.
+            Msg::decode(&buf).map_err(|e| format!("valid frame rejected: {e}"))?;
+            // Any prefix must fail cleanly (or trivially succeed for
+            // frames whose tail is ignorable) — never panic.
+            for _ in 0..8 {
+                let cut = g.int(0, buf.len().saturating_sub(1));
+                let _ = Msg::decode(&buf[..cut]);
+            }
+            // Exhaustive near the header, where counts live.
+            for cut in 0..buf.len().min(64) {
+                let _ = Msg::decode(&buf[..cut]);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_bit_flipped_frames_error_not_panic() {
+    check("bit-flipped frames", 30, |g| {
+        for msg in sample_msgs(g) {
+            let clean = msg.encode();
+            for _ in 0..6 {
+                let mut buf = clean.clone();
+                for _ in 0..g.int(1, 4) {
+                    let i = g.int(0, buf.len() - 1);
+                    buf[i] ^= 1u8 << g.int(0, 7);
+                }
+                let _ = Msg::decode(&buf);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_compressed_aggregate_wire_corruption() {
+    check("device aggregate corruption", 30, |g| {
+        let mut la = LocalAgg::new(0);
+        for _ in 0..g.int(1, 4) {
+            la.add(&gen_update(g));
+        }
+        let agg = la.finish();
+        for codec in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.3)] {
+            let clean = agg.encoded_with(codec);
+            DeviceAggregate::decode(&clean)
+                .map_err(|e| format!("{codec:?}: valid aggregate rejected: {e}"))?;
+            for _ in 0..6 {
+                let cut = g.int(0, clean.len().saturating_sub(1));
+                let _ = DeviceAggregate::decode(&clean[..cut]);
+                let mut buf = clean.clone();
+                let i = g.int(0, buf.len() - 1);
+                buf[i] ^= 1u8 << g.int(0, 7);
+                let _ = DeviceAggregate::decode(&buf);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hostile_length_prefixes_error_before_allocating() {
+    // u32::MAX counts in every container position must error fast.
+    let mut enc = Encoder::new();
+    enc.put_u32(u32::MAX); // ParamSet tensor count
+    assert!(ParamSet::from_bytes(&enc.finish()).is_err());
+
+    let mut enc = Encoder::new();
+    enc.put_u32(3); // device
+    enc.put_u32(1); // n_clients
+    enc.put_u32(u32::MAX); // entry count
+    assert!(DeviceAggregate::decode(&enc.finish()).is_err());
+
+    // Msg::Round with a huge client list
+    let mut enc = Encoder::new();
+    enc.put_u8(0); // Round tag
+    enc.put_u32(1); // round
+    enc.put_u8(0); // codec none
+    enc.put_u32(0); // broadcast round
+    enc.put_u32(0); // empty param set
+    enc.put_u8(0); // no extra
+    enc.put_u32(u32::MAX); // client count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // RoundDone with a huge record count after a valid empty aggregate
+    let agg_bytes = LocalAgg::new(0).finish().encoded();
+    let mut enc = Encoder::new();
+    enc.put_u8(4); // RoundDone tag
+    enc.put_u32(0); // device
+    enc.put_u8(0); // codec none
+    enc.put_bytes(&agg_bytes);
+    enc.put_u32(u32::MAX); // record count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // TopK tensor with an absurd dense length
+    let mut enc = Encoder::new();
+    enc.put_u8(3);
+    enc.put_u32(u32::MAX);
+    enc.put_u32(0);
+    let buf = enc.finish();
+    assert!(compress::decode_f32s(&mut Decoder::new(&buf)).is_err());
+}
+
+#[test]
+fn repeated_sparse_records_cannot_amplify_allocation() {
+    // A hostile frame repeating tiny top-k records with huge dense
+    // lengths must hit the decoder's cumulative dense budget and error,
+    // instead of amplifying a few hundred bytes into unbounded memory.
+    let huge = compress::MAX_DECODE_ELEMS as u32; // 16M elements per record
+    let n_records = 8; // 8 × 16M = 128M > the 64M frame budget
+    let mut enc = Encoder::new();
+    enc.put_u32(n_records); // ParamSet tensor count
+    for _ in 0..n_records {
+        enc.put_u32(1); // rank
+        enc.put_u32(huge); // dim
+        enc.put_u8(3); // top-k tag
+        enc.put_u32(huge); // dense length (unbacked by wire bytes)
+        enc.put_u32(1); // k
+        enc.put_u32(0); // index
+        enc.put_f32(0.0); // value
+    }
+    let buf = enc.finish();
+    assert!(
+        ParamSet::from_bytes(&buf).is_err(),
+        "a ~200-byte frame must not decode into 512 MB of tensors"
+    );
+    // A sparse record claiming to keep zero of n>0 entries is invalid
+    // (the encoder always keeps at least one).
+    let mut enc = Encoder::new();
+    enc.put_u8(3);
+    enc.put_u32(16);
+    enc.put_u32(0);
+    let buf = enc.finish();
+    assert!(compress::decode_f32s(&mut Decoder::new(&buf)).is_err());
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Rng::new(0xFEED_FACE);
+    for _ in 0..3000 {
+        let n = rng.below(200) as usize;
+        let buf: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = Msg::decode(&buf);
+        let _ = DeviceAggregate::decode(&buf);
+        let _ = ParamSet::from_bytes(&buf);
+        let _ = compress::decode_f32s(&mut Decoder::new(&buf));
+    }
+}

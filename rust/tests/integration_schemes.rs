@@ -2,13 +2,17 @@
 //! comparative claims as executable assertions (the same engine the
 //! Fig-5..11 harnesses use, at reduced scale for test budget).
 
+use parrot::aggregation::{AggOp, ClientUpdate, LocalAgg, Payload};
 use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::compress::{self, Codec};
 use parrot::config::{Scheme, SchedulerKind};
 use parrot::data::{Partition, PartitionKind};
+use parrot::model::ParamSet;
 use parrot::simulation::{
     run_virtual, AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, CommModel, DynamicsSpec,
     SlowdownLaw, StragglerSpec, VRound, VirtualSim,
 };
+use parrot::util::rng::Rng;
 
 fn sim(
     scheme: Scheme,
@@ -204,6 +208,90 @@ fn dynamic_sweep_at_paper_scale_completes_with_nondegenerate_utilization() {
     let (rw, fa) = (utils[0].1, utils[1].1);
     assert!((rw - fa).abs() > 1e-3, "RW/SD {rw} vs FA {fa} should differ");
     assert!(utils.iter().all(|&(_, u)| u < 0.999));
+}
+
+#[test]
+fn compression_engine_bytes_equal_encoded_sizes() {
+    // The acceptance invariant: the engine's comm-byte columns book the
+    // codec's *encoded* upload size, not raw f32 — and that booked size
+    // is the measured truth: a real n-param tensor encodes to exactly
+    // `wire_bytes(n)` payload bytes + the fixed 5-byte tag+length
+    // envelope.
+    let n_params = 50_000usize;
+    let k = 8usize;
+    let mut rng = Rng::new(5);
+    let tensor: Vec<f32> = (0..n_params).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for codec in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.1)] {
+        // measured encoding == the size the engine books (+5 envelope)
+        let wire = codec.wire_bytes(n_params);
+        assert_eq!(compress::encoded_len(&tensor, codec), wire + 5, "{codec:?}");
+
+        let comm = CommModel {
+            s_a: (n_params * 4) as u64,
+            s_e: 0,
+            codec,
+        };
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::homogeneous(k),
+            WorkloadCost::femnist(),
+            comm,
+            SchedulerKind::Greedy,
+            2,
+            Partition::generate(PartitionKind::Natural, 300, 62, 100, 21),
+            1,
+            9,
+        );
+        let rs = run_virtual(&mut sim, 1, 50, 3);
+        let r = &rs[0];
+        // K raw broadcasts down + K encoded uploads up, nothing else.
+        assert_eq!(
+            r.bytes,
+            (n_params as u64 * 4 + wire as u64) * k as u64,
+            "{codec:?}: engine bytes must equal encoded sizes"
+        );
+        assert_eq!(r.trips, 2 * k as u64);
+    }
+}
+
+#[test]
+fn compression_shrinks_device_aggregate_3_5x() {
+    // Acceptance: QInt8 and TopK(0.1) shrink the measured encoded
+    // DeviceAggregate for a synthetic model ≥ 3.5× vs raw f32.
+    let shapes = vec![vec![256, 128], vec![128], vec![128, 62], vec![62]];
+    let mut rng = Rng::new(11);
+    let mut la = LocalAgg::new(0);
+    for c in 0..4 {
+        let tensors: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>())
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        la.add(&ClientUpdate {
+            client: c,
+            weight: 1.0 + c as f64,
+            entries: vec![(
+                "delta".into(),
+                AggOp::WeightedAvg,
+                Payload::Params(ParamSet { shapes: shapes.clone(), tensors }),
+            )],
+        });
+    }
+    let agg = la.finish();
+    let raw = agg.size_bytes_with(Codec::None) as f64;
+    for codec in [Codec::QInt8, Codec::TopK(0.1)] {
+        let enc = agg.size_bytes_with(codec) as f64;
+        assert!(
+            raw / enc >= 3.5,
+            "{codec:?}: ratio {:.2} < 3.5 ({raw} -> {enc})",
+            raw / enc
+        );
+    }
+    let fp16 = agg.size_bytes_with(Codec::Fp16) as f64;
+    assert!(raw / fp16 > 1.9, "fp16 ratio {:.2}", raw / fp16);
 }
 
 #[test]

@@ -5,6 +5,7 @@
 //! and state-manager durability under arbitrary interleavings.
 
 use parrot::aggregation::{AggOp, ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, Payload};
+use parrot::compress::Codec;
 use parrot::config::SchedulerKind;
 use parrot::coordinator::messages::Msg;
 use parrot::model::ParamSet;
@@ -44,6 +45,7 @@ fn prop_message_codec_round_trip() {
                 extra: if g.bool() { Some(params.clone()) } else { None },
             },
             clients: clients.clone(),
+            codec: *g.pick(&[Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.5)]),
         };
         match Msg::decode(&msg.encode()) {
             Ok(Msg::Round { clients: c2, broadcast, .. }) => {
@@ -144,6 +146,7 @@ fn prop_hierarchical_equals_flat_through_wire() {
                 aggregate: la.finish(),
                 records: vec![],
                 busy_secs: 0.0,
+                codec: Codec::None,
             };
             match Msg::decode(&msg.encode()) {
                 Ok(Msg::RoundDone { aggregate, .. }) => global.merge(aggregate),

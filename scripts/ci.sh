@@ -24,7 +24,19 @@ if [ "$FAST" -eq 0 ]; then
   cargo build --release
 fi
 
-echo "==> cargo test -q"
+echo "==> cargo test -q  (property/fuzz suites run on their fixed default seed)"
 cargo test -q
+
+# Second property/fuzz pass on a fresh random master seed, so the
+# suites keep exploring new cases run-to-run.  On failure the seed is
+# printed for exact reproduction (the prop harness also prints it in
+# the panic message).
+SEED="${PARROT_PROP_SEED:-$((RANDOM * 32768 + RANDOM))}"
+echo "==> property/fuzz re-run with PARROT_PROP_SEED=$SEED"
+if ! PARROT_PROP_SEED="$SEED" cargo test -q --test prop_coordinator --test fuzz_decode \
+  || ! PARROT_PROP_SEED="$SEED" cargo test -q --lib prop_; then
+  echo "ci.sh: property/fuzz failure — reproduce with PARROT_PROP_SEED=$SEED" >&2
+  exit 1
+fi
 
 echo "ci.sh: all green"
