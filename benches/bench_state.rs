@@ -54,6 +54,32 @@ fn main() {
         churn.save_params(j % 16, &state).unwrap();
     });
 
+    // Eviction storm at 10k resident clients: the old per-eviction
+    // `min_by_key` scan over the whole cache made every insert O(n) —
+    // O(n²) across a rotation.  The ordered LRU index makes the victim
+    // pop O(log n): each benched save pays one constant-size dirty
+    // spill (4 KB file) plus the index ops, not a 10k-entry scan.
+    let small = ParamSet::init_he(&[vec![64usize, 16], vec![16]], 2); // ~4 KB
+    let sb = small.size_bytes();
+    let storm_dir = dir.join("storm");
+    let mut storm = StateManager::new(&storm_dir, 10_000 * (sb + 64))
+        .unwrap()
+        .with_write_back(true);
+    for c in 0..10_000u64 {
+        storm.save_params(c, &small).unwrap(); // fill: 10k residents
+    }
+    let mut r = 0u64;
+    b.bench("save+evict @10k resident clients", || {
+        r += 1;
+        // Fresh ids: every save displaces exactly one LRU victim.
+        storm.save_params(10_000 + r, &small).unwrap();
+    });
+    println!(
+        "storm: 10000 residents held, {} dirty spills, {:.1} MB spilled",
+        storm.metrics.disk_writes,
+        storm.metrics.bytes_written as f64 / (1 << 20) as f64
+    );
+
     println!(
         "\ncache hits {} / loads {}, disk reads {}, peak cache {:.1} MB",
         sm.metrics.cache_hits,

@@ -1,16 +1,24 @@
-//! Stateful FL at scale: SCAFFOLD over 1,000 clients on 4 devices.
+//! Stateful FL at scale: SCAFFOLD over 1,000 clients on 4 devices,
+//! with the distributed client-state store.
 //!
-//! The point of this example is the paper's §3.4 claim: stateful
-//! algorithms at large M are only feasible with the client state
-//! manager — 1,000 control variates never sit in memory at once; they
-//! live on disk and stream through the bounded LRU cache.  The example
-//! prints the state-manager traffic to make that visible.
+//! The point of this example is the paper's §3.4 claim scaled out:
+//! stateful algorithms at large M are only feasible with the client
+//! state manager — 1,000 control variates never sit in memory at once;
+//! they live on disk and stream through bounded write-back LRU caches.
+//! With `--state-shards` each worker owns a consistent-hash shard of
+//! the clients in its own directory: state never leans on a shared
+//! filesystem, non-owned state rides the coordinator transport
+//! (plan-driven prefetch ahead of each round, write-back returns after
+//! it), and the example prints the per-shard residue to make the
+//! ownership split visible.
 //!
 //!     cargo run --release --example scaffold_stateful -- --rounds 6
+//!     cargo run --release --example scaffold_stateful -- --shards 0   # legacy local store
 
 use parrot::config::RunConfig;
 use parrot::coordinator::run_simulation;
 use parrot::state::StateManager;
+use parrot::statestore::ShardMap;
 use parrot::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -18,53 +26,93 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let state_dir = std::env::temp_dir().join("parrot_scaffold_example");
     let _ = std::fs::remove_dir_all(&state_dir);
+    let n_devices = 4usize;
+    let shards = args.usize_or("shards", n_devices)?.min(n_devices);
     let cfg = RunConfig {
         algorithm: "scaffold".into(),
         n_clients: args.usize_or("clients", 1000)?,
         clients_per_round: args.usize_or("per-round", 50)?,
-        n_devices: 4,
+        n_devices,
         rounds: args.usize_or("rounds", 6)?,
         mean_client_size: 40,
         eval_every: 2,
         eval_batches: 8,
         seed: 11,
-        cluster: parrot::cluster::ClusterProfile::homogeneous(4),
+        cluster: parrot::cluster::ClusterProfile::homogeneous(n_devices),
         state_dir: state_dir.to_string_lossy().into_owned(),
+        state_shards: shards,
+        state_writeback: shards > 0,
         ..Default::default()
     };
     let seed = cfg.seed;
     println!(
-        "scaffold_stateful: M={} (stateful!) M_p={} K={} R={}",
-        cfg.n_clients, cfg.clients_per_round, cfg.n_devices, cfg.rounds
+        "scaffold_stateful: M={} (stateful!) M_p={} K={} R={} state-shards={}",
+        cfg.n_clients, cfg.clients_per_round, cfg.n_devices, cfg.rounds, cfg.state_shards
     );
 
     let summary = run_simulation(cfg)?;
     for r in &summary.metrics.rounds {
         print!("round {:>2}  wall {:>6.2}s  loss {:>7.4}", r.round, r.wall_secs, r.train_loss);
+        if r.state_bytes > 0 {
+            print!("  state {:>6.1} KB", r.state_bytes as f64 / 1024.0);
+        }
         if let Some(a) = r.eval_acc {
             print!("  acc {:.1}%", 100.0 * a);
         }
         println!();
     }
 
-    // Inspect the state the run left behind.
-    let mut sm = StateManager::new(state_dir.join(format!("run_{seed}")), 0)?;
-    let disk = sm.disk_bytes()?;
-    let mut count = 0u64;
-    for e in std::fs::read_dir(state_dir.join(format!("run_{seed}")))? {
-        if e?.file_name().to_string_lossy().ends_with(".state") {
-            count += 1;
+    // Inspect the state the run left behind, shard by shard.
+    let run_dir = state_dir.join(format!("run_{seed}"));
+    let shard_dirs: Vec<std::path::PathBuf> = if shards > 0 {
+        (0..n_devices).map(|w| run_dir.join(format!("shard_{w}"))).collect()
+    } else {
+        vec![run_dir.clone()]
+    };
+    let mut total_count = 0u64;
+    let mut total_disk = 0u64;
+    let mut populated_shards = 0usize;
+    for (i, d) in shard_dirs.iter().enumerate() {
+        if !d.exists() {
+            continue;
+        }
+        let sm = StateManager::new(d, 0)?;
+        let mut count = 0u64;
+        for e in std::fs::read_dir(d)? {
+            if e?.file_name().to_string_lossy().ends_with(".state") {
+                count += 1;
+            }
+        }
+        println!(
+            "shard {i}: {count} client states, {:.1} MB on disk",
+            sm.disk_bytes() as f64 / (1 << 20) as f64
+        );
+        total_count += count;
+        total_disk += sm.disk_bytes();
+        if count > 0 {
+            populated_shards += 1;
         }
     }
     println!(
-        "\nstate manager: {count} client control variates on disk, {:.1} MB total \
+        "\nstate store: {total_count} client control variates on disk, {:.1} MB total \
          (memory held only the in-flight ones)",
-        disk as f64 / (1 << 20) as f64
+        total_disk as f64 / (1 << 20) as f64
     );
-    // A few loads to show round-trip integrity.
+
+    // Round-trip integrity: reload a few states from their owner shard.
+    let map = ShardMap::new(shards.max(1));
     let mut loaded = 0;
-    for c in 0..summary.metrics.rounds.len() * 50 {
-        if sm.load_params(c as u64)?.is_some() {
+    for c in 0..(summary.metrics.rounds.len() * 50) as u64 {
+        let dir = if shards > 0 {
+            run_dir.join(format!("shard_{}", map.owner(c) as usize % n_devices))
+        } else {
+            run_dir.clone()
+        };
+        if !dir.exists() {
+            continue;
+        }
+        let mut sm = StateManager::new(dir, 0)?;
+        if sm.load_params(c)?.is_some() {
             loaded += 1;
             if loaded >= 3 {
                 break;
@@ -72,7 +120,22 @@ fn main() -> anyhow::Result<()> {
         }
     }
     anyhow::ensure!(loaded >= 1, "expected reloadable client state");
-    anyhow::ensure!(count > 0, "expected persisted state files");
+    anyhow::ensure!(total_count > 0, "expected persisted state files");
+    if shards > 0 {
+        // Shard dirs exist unconditionally (workers create them), so
+        // count the shards that actually hold state files.
+        anyhow::ensure!(
+            populated_shards >= shards.min(2),
+            "sharding must spread state across workers \
+             (got {populated_shards} shards with state files)"
+        );
+        let state_traffic = summary.metrics.total_state_bytes();
+        anyhow::ensure!(state_traffic > 0, "off-owner placements must move state");
+        println!(
+            "sharded traffic through the coordinator: {:.1} MB",
+            state_traffic as f64 / (1 << 20) as f64
+        );
+    }
     println!("scaffold_stateful OK");
     Ok(())
 }

@@ -63,6 +63,12 @@ pub enum SchedulerKind {
     Greedy,
     /// Alg. 3 with Time-Window estimation (window = τ rounds).
     TimeWindow(usize),
+    /// Alg. 3 plus a state-affinity term: placing a client on a worker
+    /// other than its state's owner adds `weight_pct`% of the predicted
+    /// state-movement time to that placement's cost (the distributed
+    /// state store's scheduling knob).  `window = 0` estimates over all
+    /// history; `window = τ` composes with Time-Window estimation.
+    StateAffinity { window: usize, weight_pct: u32 },
 }
 
 impl SchedulerKind {
@@ -73,10 +79,30 @@ impl SchedulerKind {
         if s == "greedy" || s == "full" {
             return Ok(SchedulerKind::Greedy);
         }
+        // `affinity:P`, `greedy+affinity:P`, `window:T+affinity:P`.
+        if let Some((base, aff)) = s.split_once("+affinity:") {
+            let weight_pct: u32 = aff
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad affinity weight {aff:?} (percent)"))?;
+            let window = match SchedulerKind::parse(base)? {
+                SchedulerKind::Greedy => 0,
+                SchedulerKind::TimeWindow(t) => t,
+                other => bail!("affinity composes with greedy|window:T, not {other:?}"),
+            };
+            return Ok(SchedulerKind::StateAffinity { window, weight_pct });
+        }
+        if let Some(p) = s.strip_prefix("affinity:") {
+            return Ok(SchedulerKind::StateAffinity {
+                window: 0,
+                weight_pct: p
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad affinity weight {p:?} (percent)"))?,
+            });
+        }
         if let Some(t) = s.strip_prefix("window:") {
             return Ok(SchedulerKind::TimeWindow(t.parse()?));
         }
-        bail!("unknown scheduler {s:?} (uniform|greedy|window:T)")
+        bail!("unknown scheduler {s:?} (uniform|greedy|window:T|affinity:P|window:T+affinity:P)")
     }
 
     pub fn name(&self) -> String {
@@ -84,6 +110,12 @@ impl SchedulerKind {
             SchedulerKind::Uniform => "uniform".into(),
             SchedulerKind::Greedy => "greedy".into(),
             SchedulerKind::TimeWindow(t) => format!("window:{t}"),
+            SchedulerKind::StateAffinity { window: 0, weight_pct } => {
+                format!("affinity:{weight_pct}")
+            }
+            SchedulerKind::StateAffinity { window, weight_pct } => {
+                format!("window:{window}+affinity:{weight_pct}")
+            }
         }
     }
 }
@@ -121,6 +153,18 @@ pub struct RunConfig {
     pub artifact_dir: String,
     /// Directory for client-state snapshots (state manager).
     pub state_dir: String,
+    /// Consistent-hash shards for the distributed client-state store
+    /// (0 = legacy local-only store; n ≥ 1 gives worker i ownership of
+    /// shard i, clamped to ≤ devices).
+    pub state_shards: usize,
+    /// Dirty write-back caching in the state store (explicit flush at
+    /// round boundaries) instead of write-through.
+    pub state_writeback: bool,
+    /// State-affinity scheduling weight in percent (0 = off); > 0
+    /// upgrades the scheduler to [`SchedulerKind::StateAffinity`].
+    pub state_affinity: u32,
+    /// Per-worker state cache budget in MB.
+    pub state_cache_mb: usize,
     /// Test batches evaluated by the server each eval.
     pub eval_batches: usize,
     /// Evaluate every this many rounds (0 = never).
@@ -156,6 +200,10 @@ impl Default for RunConfig {
             seed: 42,
             artifact_dir: "artifacts".into(),
             state_dir: "state_cache".into(),
+            state_shards: 0,
+            state_writeback: false,
+            state_affinity: 0,
+            state_cache_mb: 64,
             eval_batches: 10,
             eval_every: 1,
             selection: Selection::Random,
@@ -216,6 +264,37 @@ impl RunConfig {
         self.seed = a.u64_or("seed", self.seed)?;
         self.artifact_dir = a.get_or("artifacts", &self.artifact_dir).to_string();
         self.state_dir = a.get_or("state-dir", &self.state_dir).to_string();
+        self.state_shards = a.usize_or("state-shards", self.state_shards)?;
+        self.state_writeback = match a.get("state-writeback") {
+            Some(v) => match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                _ => bail!("--state-writeback: expected on|off, got {v:?}"),
+            },
+            None => self.state_writeback || a.flag("state-writeback"),
+        };
+        self.state_affinity = a.usize_or("state-affinity", self.state_affinity as usize)? as u32;
+        self.state_cache_mb = a.usize_or("state-cache-mb", self.state_cache_mb)?;
+        if self.state_affinity > 0 {
+            // The affinity weight is a SchedulerKind-level knob: it
+            // upgrades model-based kinds in place (Uniform stays
+            // uniform — there is no placement objective to bias).
+            self.scheduler = match self.scheduler {
+                SchedulerKind::Greedy => SchedulerKind::StateAffinity {
+                    window: 0,
+                    weight_pct: self.state_affinity,
+                },
+                SchedulerKind::TimeWindow(t) => SchedulerKind::StateAffinity {
+                    window: t,
+                    weight_pct: self.state_affinity,
+                },
+                SchedulerKind::StateAffinity { window, .. } => SchedulerKind::StateAffinity {
+                    window,
+                    weight_pct: self.state_affinity,
+                },
+                SchedulerKind::Uniform => SchedulerKind::Uniform,
+            };
+        }
         self.eval_batches = a.usize_or("eval-batches", self.eval_batches)?;
         self.eval_every = a.usize_or("eval-every", self.eval_every)?;
         if let Some(sel) = a.get("selection") {
@@ -260,6 +339,22 @@ impl RunConfig {
                 "cluster profile has {} devices, config wants {}",
                 self.cluster.n_devices(),
                 self.n_devices
+            );
+        }
+        if self.state_shards > self.n_devices {
+            bail!(
+                "--state-shards {} > devices {} (shard i is hosted by worker i)",
+                self.state_shards,
+                self.n_devices
+            );
+        }
+        if self.state_affinity > 1000 {
+            bail!("--state-affinity {}% is absurd (max 1000)", self.state_affinity);
+        }
+        if self.state_shards > 0 && self.scheme == Scheme::FaDist {
+            bail!(
+                "--state-shards needs a planned scheme (parrot|sp): FA's pull model has \
+                 no round plan to prefetch state against"
             );
         }
         self.dynamics.validate()?;
@@ -361,6 +456,62 @@ mod tests {
         assert_eq!(Scheme::parse("sd_dist").unwrap(), Scheme::SdDist);
         assert_eq!(SchedulerKind::parse("uniform").unwrap(), SchedulerKind::Uniform);
         assert!(SchedulerKind::parse("window:x").is_err());
+    }
+
+    #[test]
+    fn affinity_scheduler_parses_and_round_trips() {
+        for s in ["affinity:50", "window:5+affinity:100", "greedy+affinity:25"] {
+            let k = SchedulerKind::parse(s).unwrap();
+            assert!(matches!(k, SchedulerKind::StateAffinity { .. }), "{s}");
+            assert_eq!(SchedulerKind::parse(&k.name()).unwrap(), k, "{s} round trip");
+        }
+        assert_eq!(
+            SchedulerKind::parse("window:3+affinity:40").unwrap(),
+            SchedulerKind::StateAffinity { window: 3, weight_pct: 40 }
+        );
+        assert!(SchedulerKind::parse("affinity:x").is_err());
+        assert!(SchedulerKind::parse("uniform+affinity:10").is_err());
+    }
+
+    #[test]
+    fn state_store_flags_parse_validate_and_upgrade_scheduler() {
+        let c = RunConfig::default()
+            .apply_args(&args(&[
+                "--state-shards", "4", "--state-writeback",
+                "--state-affinity", "80", "--state-cache-mb", "16",
+            ]))
+            .unwrap();
+        assert_eq!(c.state_shards, 4);
+        assert!(c.state_writeback);
+        assert_eq!(c.state_cache_mb, 16);
+        assert_eq!(c.scheduler, SchedulerKind::StateAffinity { window: 0, weight_pct: 80 });
+        // Affinity composes with an existing time window.
+        let w = RunConfig::default()
+            .apply_args(&args(&["--scheduler", "window:5", "--state-affinity", "30"]))
+            .unwrap();
+        assert_eq!(w.scheduler, SchedulerKind::StateAffinity { window: 5, weight_pct: 30 });
+        // Uniform stays uniform — nothing to bias.
+        let u = RunConfig::default()
+            .apply_args(&args(&["--scheduler", "uniform", "--state-affinity", "30"]))
+            .unwrap();
+        assert_eq!(u.scheduler, SchedulerKind::Uniform);
+        // Explicit off-switch for writeback.
+        let off = RunConfig::default()
+            .apply_args(&args(&["--state-writeback", "off"]))
+            .unwrap();
+        assert!(!off.state_writeback);
+        // Defaults are the legacy local-only store.
+        let d = RunConfig::default();
+        assert_eq!((d.state_shards, d.state_writeback, d.state_affinity), (0, false, 0));
+        // More shards than devices is a config error.
+        assert!(RunConfig::default().apply_args(&args(&["--state-shards", "99"])).is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--state-writeback", "banana"]))
+            .is_err());
+        // FA has no round plan to prefetch against.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "fa", "--state-shards", "2"]))
+            .is_err());
     }
 }
 

@@ -43,6 +43,20 @@ pub enum Msg {
     TaskDone { device: usize, update: ClientUpdate, record: TaskRecord, codec: Codec },
     /// Device → server: ready for work (FA pull model).
     Idle { device: usize },
+    /// Server → owner worker: ship these clients' states (the server is
+    /// about to prefetch them to the executors the round plan chose).
+    StateFetch { round: usize, clients: Vec<u64> },
+    /// State blobs in flight, three directions over the star topology:
+    /// owner → server (fetch reply), server → executor (plan-driven
+    /// prefetch, delivered before the `Round` it serves), and
+    /// executor → server → owner (write-back return at round end).
+    /// `None` marks a client with no state yet (first selection).
+    /// Blobs ship verbatim — like §4.2's Collect entries they are raw
+    /// algorithm state, outside the update-codec's scope.
+    StatePut { round: usize, states: Vec<(u64, Option<Vec<u8>>)> },
+    /// Bulk ownership move (device churn / resharding): everything a
+    /// departing shard hosted, routed to the new owners.
+    ShardTransfer { from_shard: u32, states: Vec<(u64, Vec<u8>)> },
 }
 
 fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) {
@@ -171,6 +185,38 @@ impl Msg {
                 enc.put_u8(6);
                 enc.put_u32(*device as u32);
             }
+            Msg::StateFetch { round, clients } => {
+                enc.put_u8(7);
+                enc.put_u32(*round as u32);
+                enc.put_u32(clients.len() as u32);
+                for &c in clients {
+                    enc.put_u64(c);
+                }
+            }
+            Msg::StatePut { round, states } => {
+                enc.put_u8(8);
+                enc.put_u32(*round as u32);
+                enc.put_u32(states.len() as u32);
+                for (c, bytes) in states {
+                    enc.put_u64(*c);
+                    match bytes {
+                        None => enc.put_u8(0),
+                        Some(b) => {
+                            enc.put_u8(1);
+                            enc.put_bytes(b);
+                        }
+                    }
+                }
+            }
+            Msg::ShardTransfer { from_shard, states } => {
+                enc.put_u8(9);
+                enc.put_u32(*from_shard);
+                enc.put_u32(states.len() as u32);
+                for (c, bytes) in states {
+                    enc.put_u64(*c);
+                    enc.put_bytes(bytes);
+                }
+            }
         }
         enc.finish()
     }
@@ -227,6 +273,43 @@ impl Msg {
                 }
             }
             6 => Msg::Idle { device: dec.u32()? as usize },
+            7 => {
+                let round = dec.u32()? as usize;
+                // Each client id is 8 wire bytes.
+                let n = dec.count(8)?;
+                let mut clients = Vec::with_capacity(n);
+                for _ in 0..n {
+                    clients.push(dec.u64()?);
+                }
+                Msg::StateFetch { round, clients }
+            }
+            8 => {
+                let round = dec.u32()? as usize;
+                // An entry is at least id(8) + presence(1) bytes.
+                let n = dec.count(9)?;
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let client = dec.u64()?;
+                    let bytes = match dec.u8()? {
+                        0 => None,
+                        1 => Some(dec.bytes()?),
+                        t => bail!("bad state presence tag {t}"),
+                    };
+                    states.push((client, bytes));
+                }
+                Msg::StatePut { round, states }
+            }
+            9 => {
+                let from_shard = dec.u32()?;
+                // An entry is at least id(8) + length prefix(4) bytes.
+                let n = dec.count(12)?;
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let client = dec.u64()?;
+                    states.push((client, dec.bytes()?));
+                }
+                Msg::ShardTransfer { from_shard, states }
+            }
             t => bail!("unknown msg tag {t}"),
         })
     }
@@ -367,6 +450,74 @@ mod tests {
             Msg::decode(&Msg::TaskCached { round: 2, client: 11 }.encode()).unwrap(),
             Msg::TaskCached { round: 2, client: 11 }
         ));
+    }
+
+    #[test]
+    fn state_messages_round_trip() {
+        let m = Msg::StateFetch { round: 4, clients: vec![9, 1, 1 << 40] };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::StateFetch { round, clients } => {
+                assert_eq!(round, 4);
+                assert_eq!(clients, vec![9, 1, 1 << 40]);
+            }
+            other => panic!("Msg::StateFetch must round-trip to itself, decoded {other:?}"),
+        }
+        let m = Msg::StatePut {
+            round: 7,
+            states: vec![(3, Some(vec![1, 2, 3])), (11, None), (42, Some(Vec::new()))],
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::StatePut { round, states } => {
+                assert_eq!(round, 7);
+                assert_eq!(states.len(), 3);
+                assert_eq!(states[0], (3, Some(vec![1, 2, 3])));
+                assert_eq!(states[1], (11, None));
+                assert_eq!(states[2], (42, Some(Vec::new())));
+            }
+            other => panic!("Msg::StatePut must round-trip to itself, decoded {other:?}"),
+        }
+        let m = Msg::ShardTransfer {
+            from_shard: 2,
+            states: vec![(5, vec![9u8; 64]), (6, vec![])],
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::ShardTransfer { from_shard, states } => {
+                assert_eq!(from_shard, 2);
+                assert_eq!(states[0].1.len(), 64);
+                assert_eq!(states[1], (6, Vec::new()));
+            }
+            other => panic!("Msg::ShardTransfer must round-trip to itself, decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn state_messages_reject_hostile_counts() {
+        // A huge entry count with no backing bytes must error before
+        // any allocation (the count() bounds-check discipline).
+        let mut enc = crate::util::codec::Encoder::new();
+        enc.put_u8(7);
+        enc.put_u32(0);
+        enc.put_u32(u32::MAX);
+        assert!(Msg::decode(&enc.finish()).is_err());
+        let mut enc = crate::util::codec::Encoder::new();
+        enc.put_u8(8);
+        enc.put_u32(0);
+        enc.put_u32(u32::MAX);
+        assert!(Msg::decode(&enc.finish()).is_err());
+        let mut enc = crate::util::codec::Encoder::new();
+        enc.put_u8(9);
+        enc.put_u32(0);
+        enc.put_u32(u32::MAX);
+        assert!(Msg::decode(&enc.finish()).is_err());
+        // A blob length prefix past the frame end errors too.
+        let mut enc = crate::util::codec::Encoder::new();
+        enc.put_u8(8);
+        enc.put_u32(0);
+        enc.put_u32(1);
+        enc.put_u64(3);
+        enc.put_u8(1);
+        enc.put_u32(u32::MAX); // blob length, no payload
+        assert!(Msg::decode(&enc.finish()).is_err());
     }
 
     #[test]

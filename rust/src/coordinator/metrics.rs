@@ -17,6 +17,11 @@ pub struct RoundMetrics {
     pub bytes_up: u64,
     /// Message count in both directions (the "communication trips").
     pub trips: u64,
+    /// Sharded-state traffic this round: StateFetch/StatePut/
+    /// ShardTransfer frame bytes through the server (prefetch +
+    /// write-back returns), metered separately from param comm.
+    pub state_bytes: u64,
+    pub state_msgs: u64,
     /// Scheduler estimation+assignment wallclock (Fig. 8).
     pub sched_secs: f64,
     /// Mean training loss reported by clients (weighted).
@@ -69,6 +74,11 @@ impl RunMetrics {
         self.rounds.iter().map(|r| r.trips).sum()
     }
 
+    /// Sharded-state traffic across the run (0 for legacy state).
+    pub fn total_state_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.state_bytes).sum()
+    }
+
     pub fn final_eval(&self) -> (Option<f64>, Option<f64>) {
         for r in self.rounds.iter().rev() {
             if r.eval_acc.is_some() {
@@ -93,6 +103,8 @@ impl RunMetrics {
                                 .set("bytes_down", r.bytes_down as i64)
                                 .set("bytes_up", r.bytes_up as i64)
                                 .set("trips", r.trips as i64)
+                                .set("state_bytes", r.state_bytes as i64)
+                                .set("state_msgs", r.state_msgs as i64)
                                 .set("sched_secs", r.sched_secs)
                                 .set("train_loss", r.train_loss)
                                 .set("eval_loss", r.eval_loss.map(Json::Num).unwrap_or(Json::Null))

@@ -19,7 +19,8 @@ use crate::coordinator::worker::{build_dataset, initial_params, Worker};
 use crate::data::FederatedDataset;
 use crate::model::ParamSet;
 use crate::runtime::{Executable, Runtime};
-use crate::scheduler::Scheduler;
+use crate::scheduler::{AffinityCtx, Scheduler};
+use crate::statestore::ShardMap;
 use crate::transport::{local, Transport};
 use crate::util::timer::Stopwatch;
 use anyhow::{bail, Context, Result};
@@ -42,6 +43,9 @@ pub struct Server<T: Transport> {
     scheduler: Scheduler,
     dataset: FederatedDataset,
     eval_exe: Option<Executable>,
+    /// Ownership ring of the sharded client-state store (None = legacy
+    /// local state, or a stateless algorithm).
+    state_shards: Option<ShardMap>,
     pub metrics: RunMetrics,
 }
 
@@ -50,7 +54,7 @@ impl<T: Transport> Server<T> {
         anyhow::ensure!(transport.id() == 0, "server must be endpoint 0");
         let algo = Algo::parse(&cfg.algorithm, cfg.mu)?;
         let global = initial_params(&cfg)?;
-        let scheduler = Scheduler::new(cfg.scheduler, cfg.warmup_rounds, cfg.n_devices);
+        let mut scheduler = Scheduler::new(cfg.scheduler, cfg.warmup_rounds, cfg.n_devices);
         let dataset = build_dataset(&cfg);
         let eval_exe = if cfg.eval_every > 0 {
             let rt = Runtime::cpu(&cfg.artifact_dir)?;
@@ -58,6 +62,19 @@ impl<T: Transport> Server<T> {
         } else {
             None
         };
+        let state_shards = (cfg.state_shards > 0 && algo.stateful())
+            .then(|| ShardMap::new(cfg.state_shards.min(cfg.n_devices)));
+        if let Some(map) = &state_shards {
+            // Give SchedulerKind::StateAffinity its ownership view on the
+            // real path too: off-owner placements cost the two-leg state
+            // round trip (SCAFFOLD/FedDyn state is model-sized).
+            let s_d = global.size_bytes() as f64;
+            scheduler.set_affinity(Some(AffinityCtx {
+                map: map.clone(),
+                n_workers: cfg.n_devices,
+                remote_secs: 2.0 * (cfg.cluster.latency + s_d / cfg.cluster.bandwidth),
+            }));
+        }
         Ok(Server {
             transport,
             cfg,
@@ -67,6 +84,7 @@ impl<T: Transport> Server<T> {
             scheduler,
             dataset,
             eval_exe,
+            state_shards,
             metrics: RunMetrics::default(),
         })
     }
@@ -114,6 +132,103 @@ impl<T: Transport> Server<T> {
         }
     }
 
+    /// Plan-driven state prefetch (sharded store only): pull the states
+    /// the schedule placed off-owner from their owners, stage them at
+    /// the executors BEFORE the `Round` messages, and return the
+    /// metered `(state_bytes, state_msgs)`.
+    fn prefetch_state(
+        &mut self,
+        round: usize,
+        assignment: &[Vec<usize>],
+    ) -> Result<(u64, u64)> {
+        let Some(map) = &self.state_shards else { return Ok((0, 0)) };
+        let k = self.cfg.n_devices;
+        // need[d]: clients device d runs but does not own;
+        // fetch[o]: clients owner o must ship.
+        let mut need: Vec<Vec<u64>> = vec![Vec::new(); k];
+        let mut fetch: Vec<Vec<u64>> = vec![Vec::new(); k];
+        for (dev, clients) in assignment.iter().enumerate() {
+            for &c in clients {
+                let owner = map.owner(c as u64) as usize;
+                if owner != dev {
+                    need[dev].push(c as u64);
+                    fetch[owner].push(c as u64);
+                }
+            }
+        }
+        let (mut state_bytes, mut state_msgs) = (0u64, 0u64);
+        let mut expect = 0usize;
+        for (owner, cs) in fetch.iter().enumerate() {
+            if cs.is_empty() {
+                continue;
+            }
+            let m = Msg::StateFetch { round, clients: cs.clone() }.encode();
+            state_bytes += m.len() as u64;
+            state_msgs += 1;
+            self.transport.send(owner + 1, m)?;
+            expect += 1;
+        }
+        let mut have: std::collections::HashMap<u64, Option<Vec<u8>>> = Default::default();
+        for _ in 0..expect {
+            let (_, raw) = self.transport.recv(None)?;
+            state_bytes += raw.len() as u64;
+            state_msgs += 1;
+            match Msg::decode(&raw)? {
+                Msg::StatePut { states, .. } => {
+                    for (c, b) in states {
+                        have.insert(c, b);
+                    }
+                }
+                other => bail!("expected StatePut during state prefetch, got {other:?}"),
+            }
+        }
+        for (dev, cs) in need.iter().enumerate() {
+            if cs.is_empty() {
+                continue;
+            }
+            // `need` lists are disjoint (one destination per client), so
+            // the blobs move out of the staging map — no re-clone of a
+            // model-sized state per prefetched client.
+            let mut states: Vec<(u64, Option<Vec<u8>>)> = Vec::with_capacity(cs.len());
+            for &c in cs {
+                states.push((c, have.remove(&c).flatten()));
+            }
+            let m = Msg::StatePut { round, states }.encode();
+            state_bytes += m.len() as u64;
+            state_msgs += 1;
+            self.transport.send(dev + 1, m)?;
+        }
+        Ok((state_bytes, state_msgs))
+    }
+
+    /// Route an executor's write-back `StatePut` return to the owners.
+    fn route_state_returns(
+        &self,
+        round: usize,
+        states: Vec<(u64, Option<Vec<u8>>)>,
+    ) -> Result<(u64, u64)> {
+        let map = self
+            .state_shards
+            .as_ref()
+            .context("StatePut return without a sharded state store")?;
+        let k = self.cfg.n_devices;
+        let mut by_owner: Vec<Vec<(u64, Option<Vec<u8>>)>> = vec![Vec::new(); k];
+        for (c, b) in states {
+            by_owner[map.owner(c) as usize].push((c, b));
+        }
+        let (mut state_bytes, mut state_msgs) = (0u64, 0u64);
+        for (owner, sts) in by_owner.into_iter().enumerate() {
+            if sts.is_empty() {
+                continue;
+            }
+            let m = Msg::StatePut { round, states: sts }.encode();
+            state_bytes += m.len() as u64;
+            state_msgs += 1;
+            self.transport.send(owner + 1, m)?;
+        }
+        Ok((state_bytes, state_msgs))
+    }
+
     /// Parrot batch round (SP degenerates to K=1 with the same code).
     fn round_parrot(&mut self, round: usize, selected: &[usize]) -> Result<RoundMetrics> {
         let sw = Stopwatch::start();
@@ -123,6 +238,11 @@ impl<T: Transport> Server<T> {
             .collect();
         let schedule = self.scheduler.schedule(round, &sizes);
         let bc = self.broadcast(round);
+
+        // Plan-driven prefetch: non-owned states must be staged at the
+        // executors before the Round messages land (transport FIFO).
+        let (mut state_bytes, mut state_msgs) =
+            self.prefetch_state(round, &schedule.assignment)?;
 
         let mut bytes_down = 0u64;
         let mut trips = 0u64;
@@ -147,24 +267,45 @@ impl<T: Transport> Server<T> {
         let mut agg = GlobalAgg::new();
         let mut bytes_up = 0u64;
         let mut busy = 0.0f64;
-        for _ in 0..active.len() {
+        let mut done = 0usize;
+        while done < active.len() {
             let (_, raw) = self.transport.recv(None)?;
-            bytes_up += raw.len() as u64;
-            trips += 1;
             match Msg::decode(&raw)? {
                 Msg::RoundDone { aggregate, records, busy_secs, .. } => {
+                    bytes_up += raw.len() as u64;
+                    trips += 1;
                     agg.merge(aggregate);
                     for r in records {
                         self.scheduler.record(r);
                     }
                     busy += busy_secs;
+                    done += 1;
+                }
+                // Write-back returns interleave with round results.
+                Msg::StatePut { round: r, states } => {
+                    state_bytes += raw.len() as u64;
+                    state_msgs += 1;
+                    let (b, m) = self.route_state_returns(r, states)?;
+                    state_bytes += b;
+                    state_msgs += m;
                 }
                 other => bail!("expected RoundDone, got {other:?}"),
             }
         }
         let result = agg.finish();
         self.apply_round(&result);
-        self.finish_metrics(round, sw, schedule.overhead_secs, busy, bytes_down, bytes_up, trips, &result)
+        self.finish_metrics(
+            round,
+            sw,
+            schedule.overhead_secs,
+            busy,
+            bytes_down,
+            bytes_up,
+            trips,
+            state_bytes,
+            state_msgs,
+            &result,
+        )
     }
 
     /// FA pull round: one task per message, params shipped per task
@@ -233,7 +374,7 @@ impl<T: Transport> Server<T> {
         agg.merge(flat.finish());
         let result = agg.finish();
         self.apply_round(&result);
-        self.finish_metrics(round, sw, 0.0, 0.0, bytes_down, bytes_up, trips, &result)
+        self.finish_metrics(round, sw, 0.0, 0.0, bytes_down, bytes_up, trips, 0, 0, &result)
     }
 
     fn apply_round(&mut self, result: &RoundAggregate) {
@@ -255,6 +396,8 @@ impl<T: Transport> Server<T> {
         bytes_down: u64,
         bytes_up: u64,
         trips: u64,
+        state_bytes: u64,
+        state_msgs: u64,
         result: &RoundAggregate,
     ) -> Result<RoundMetrics> {
         let mut rm = RoundMetrics {
@@ -263,6 +406,8 @@ impl<T: Transport> Server<T> {
             bytes_down,
             bytes_up,
             trips,
+            state_bytes,
+            state_msgs,
             busy_secs: busy,
             train_loss: result.scalars.get("loss").copied().unwrap_or(f64::NAN),
             ..Default::default()

@@ -8,6 +8,17 @@
 //! Appendix-A heterogeneity sleep → saves state → folds the result into
 //! the local aggregate.  One `RoundDone` goes back per round (Parrot) or
 //! one `TaskDone` per client (FA mode).
+//!
+//! ## Sharded client state (`--state-shards n`)
+//!
+//! With a stateful algorithm and `n ≥ 1`, each worker owns the
+//! consistent-hash shard matching its device index (its own disk
+//! directory — state never relies on a shared filesystem).  Non-owned
+//! clients are served by the server's plan-driven prefetch: a
+//! `StatePut` staging delivery lands before the `Round` that needs it,
+//! updated state rides a `StatePut` back to the server (which routes it
+//! to the owner), and the owner's write-back cache flushes at its next
+//! round boundary / shutdown.
 
 use crate::aggregation::LocalAgg;
 use crate::algorithms::{Algo, Broadcast, TaskResult};
@@ -19,9 +30,11 @@ use crate::model::ParamSet;
 use crate::runtime::{Executable, Runtime};
 use crate::scheduler::TaskRecord;
 use crate::state::StateManager;
+use crate::statestore::ShardMap;
 use crate::transport::Transport;
 use crate::util::timer::Stopwatch;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 
 pub struct Worker<T: Transport> {
     transport: T,
@@ -32,6 +45,12 @@ pub struct Worker<T: Transport> {
     train_exe: Executable,
     grad_exe: Option<Executable>,
     state: StateManager,
+    /// Ownership ring when the sharded state store is on.
+    shards: Option<ShardMap>,
+    /// Prefetched non-owned states for the coming round (client → blob).
+    staged: HashMap<u64, Vec<u8>>,
+    /// Updated non-owned states awaiting the round-end return leg.
+    returns: Vec<(u64, Vec<u8>)>,
     dataset: FederatedDataset,
     /// Cached broadcast + round codec for FA TaskCached messages.
     cached_bc: Option<(Broadcast, Codec)>,
@@ -68,10 +87,17 @@ impl<T: Transport> Worker<T> {
         } else {
             None
         };
-        let state = StateManager::new(
-            std::path::Path::new(&cfg.state_dir).join(format!("run_{}", cfg.seed)),
-            64 << 20,
-        )?;
+        let sharded = cfg.state_shards > 0 && algo.stateful();
+        let shards =
+            sharded.then(|| ShardMap::new(cfg.state_shards.min(cfg.n_devices)));
+        let run_dir = std::path::Path::new(&cfg.state_dir).join(format!("run_{}", cfg.seed));
+        // Sharded mode: each worker owns its shard's directory, so
+        // state never leans on a shared filesystem (TCP deployments run
+        // workers on different machines).
+        let state_dir =
+            if sharded { run_dir.join(format!("shard_{device}")) } else { run_dir };
+        let state = StateManager::new(state_dir, cfg.state_cache_mb << 20)?
+            .with_write_back(cfg.state_writeback);
         let dataset = build_dataset(&cfg);
         Ok(Worker {
             transport,
@@ -81,9 +107,20 @@ impl<T: Transport> Worker<T> {
             train_exe,
             grad_exe,
             state,
+            shards,
+            staged: HashMap::new(),
+            returns: Vec::new(),
             dataset,
             cached_bc: None,
         })
+    }
+
+    /// Does this worker own `client`'s state? (Always true unsharded.)
+    fn owns(&self, client: u64) -> bool {
+        match &self.shards {
+            None => true,
+            Some(m) => m.owner(client) as usize == self.device,
+        }
     }
 
     /// Message loop until Shutdown.
@@ -91,7 +128,12 @@ impl<T: Transport> Worker<T> {
         loop {
             let (_, raw) = self.transport.recv(None)?;
             match Msg::decode(&raw)? {
-                Msg::Shutdown => return Ok(()),
+                Msg::Shutdown => {
+                    // Round-boundary consistency: nothing dirty outlives
+                    // the process (no-op in write-through mode).
+                    self.state.flush()?;
+                    return Ok(());
+                }
                 Msg::Round { round, broadcast, clients, codec } => {
                     let sw = Stopwatch::start();
                     let mut local = LocalAgg::new(self.device);
@@ -101,6 +143,17 @@ impl<T: Transport> Worker<T> {
                         local.add(&update);
                         records.push(rec);
                     }
+                    // Ship updated non-owned states back to their
+                    // owners (via the server) before the round result.
+                    if !self.returns.is_empty() {
+                        let states: Vec<(u64, Option<Vec<u8>>)> =
+                            self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
+                        self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+                    }
+                    // Stale prefetches must not leak into later rounds.
+                    self.staged.clear();
+                    // Round boundary: write-back flush.
+                    self.state.flush()?;
                     // Upload with the codec the server negotiated for
                     // this round.
                     let msg = Msg::RoundDone {
@@ -111,6 +164,42 @@ impl<T: Transport> Worker<T> {
                         codec,
                     };
                     self.transport.send(0, msg.encode())?;
+                }
+                Msg::StateFetch { round, clients } => {
+                    // The server wants these (owned) states for
+                    // executors elsewhere; None = no state yet.
+                    let mut states = Vec::with_capacity(clients.len());
+                    for c in clients {
+                        states.push((c, self.state.load(c)?));
+                    }
+                    self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+                }
+                Msg::StatePut { states, .. } => {
+                    for (c, bytes) in states {
+                        match bytes {
+                            None => {
+                                self.staged.remove(&c);
+                            }
+                            Some(b) => {
+                                if self.owns(c) {
+                                    // Write-back return from an executor.
+                                    self.state.save(c, &b)?;
+                                } else {
+                                    // Plan-driven prefetch for the
+                                    // coming round.
+                                    self.staged.insert(c, b);
+                                }
+                            }
+                        }
+                    }
+                }
+                Msg::ShardTransfer { states, .. } => {
+                    // Bulk ownership move: persist immediately — the
+                    // sender may already be gone.
+                    for (c, b) in states {
+                        self.state.save(c, &b)?;
+                    }
+                    self.state.flush()?;
                 }
                 Msg::Task { round, broadcast, client, codec } => {
                     self.cached_bc = Some((broadcast.clone(), codec));
@@ -146,7 +235,16 @@ impl<T: Transport> Worker<T> {
         let sw = Stopwatch::start();
         let shapes = self.train_exe.manifest.param_shapes();
         let old_state = if self.algo.stateful() {
-            self.state.load_params(client as u64)?
+            if self.owns(client as u64) {
+                self.state.load_params(client as u64)?
+            } else {
+                // Non-owned state arrives via the server's plan-driven
+                // prefetch; absent staging = first selection.
+                match self.staged.remove(&(client as u64)) {
+                    Some(b) => Some(ParamSet::from_bytes(&b)?),
+                    None => None,
+                }
+            }
         } else {
             None
         };
@@ -199,7 +297,13 @@ impl<T: Transport> Worker<T> {
         };
         let (update, new_state) = self.algo.client_update(&res, bc, old_state.as_ref());
         if let Some(ns) = new_state {
-            self.state.save_params(client as u64, &ns)?;
+            if self.owns(client as u64) {
+                self.state.save_params(client as u64, &ns)?;
+            } else {
+                // Queue the write-back return for the round-end
+                // StatePut to the owner (via the server).
+                self.returns.push((client as u64, ns.to_bytes()));
+            }
         }
         let record = TaskRecord {
             round,

@@ -4,16 +4,20 @@
 //! Every harness prints the same rows/series the paper reports and
 //! writes machine-readable JSON + CSV under `results/`.  Invoke through
 //! the launcher: `parrot exp <id>` (ids: table1 table2 table3 fig4 fig5
-//! fig6 fig7 fig8 fig9 fig10 fig11 dynamics compression ablate all).
-//! `dynamics` sweeps the §4.4 availability/churn/straggler scenarios on
-//! the discrete-event engine; `compression` sweeps the `--compress`
-//! codecs (bytes / round time / reconstruction error) across schemes.
+//! fig6 fig7 fig8 fig9 fig10 fig11 dynamics compression statescale
+//! ablate all).  `dynamics` sweeps the §4.4 availability/churn/
+//! straggler scenarios on the discrete-event engine; `compression`
+//! sweeps the `--compress` codecs (bytes / round time / reconstruction
+//! error) across schemes; `statescale` sweeps the distributed
+//! client-state store (1000 stateful clients × cache budget × shard
+//! count) against the local-only baseline.
 
 pub mod ablation;
 pub mod compression;
 pub mod convergence;
 pub mod dynamics;
 pub mod figures;
+pub mod statescale;
 pub mod tables;
 
 use crate::util::cli::Args;
@@ -64,11 +68,12 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig11" => figures::fig11(args),
         "dynamics" => dynamics::dynamics(args),
         "compression" => compression::compression(args),
+        "statescale" => statescale::statescale(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
                 "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
-                "fig10", "fig11", "dynamics", "compression", "fig4",
+                "fig10", "fig11", "dynamics", "compression", "statescale", "fig4",
             ] {
                 println!("\n################ {id} ################");
                 run(id, args)?;
@@ -77,7 +82,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         }
         _ => bail!(
             "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
-             compression ablate all"
+             compression statescale ablate all"
         ),
     }
 }

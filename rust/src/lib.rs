@@ -28,6 +28,7 @@ pub mod runtime;
 pub mod algorithms;
 pub mod aggregation;
 pub mod state;
+pub mod statestore;
 pub mod scheduler;
 pub mod cluster;
 pub mod transport;

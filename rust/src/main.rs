@@ -32,7 +32,9 @@ USAGE:
                [--availability always|P|periodic:T:O] [--churn leave@R:D[:T],join@R:D[:T],rand:PL:PJ]
                [--stragglers off|P:xS|P:u:LO:HI|P:p:A] [--drop-prob Q]
                [--compress none|fp16|qint8|topk:F]
-  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|ablate|all> [--results DIR] [...]
+               [--state-shards N] [--state-writeback [on|off]] [--state-affinity PCT]
+               [--state-cache-mb MB] [--scheduler ...|affinity:P|window:T+affinity:P]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|ablate|all> [--results DIR] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]
@@ -127,6 +129,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         summary.metrics.total_bytes() as f64 / (1 << 20) as f64,
         summary.metrics.total_trips()
     );
+    let state_bytes = summary.metrics.total_state_bytes();
+    if state_bytes > 0 {
+        println!(
+            "sharded state traffic: {:.2} MB (prefetch + write-back returns)",
+            state_bytes as f64 / (1 << 20) as f64
+        );
+    }
     if let (Some(l), Some(a)) = (summary.final_loss, summary.final_acc) {
         println!("final eval: loss {l:.4}, accuracy {:.2}%", 100.0 * a);
     }

@@ -53,6 +53,23 @@ pub fn greedy_assign_from(
     alive: &[bool],
     base_load: &[f64],
 ) -> (Vec<Vec<usize>>, Vec<f64>) {
+    greedy_assign_with_cost(clients, est, alive, base_load, &|_, _| 0.0)
+}
+
+/// Alg. 3 with an additive placement cost: placing `client` on device
+/// `k` costs `est[k].predict(n) + extra(client, k)` seconds.  The hook
+/// is how the state-affinity term enters the makespan objective —
+/// `extra` is the predicted state-movement time when a client runs
+/// away from the worker owning its state
+/// ([`SchedulerKind::StateAffinity`](crate::config::SchedulerKind)) —
+/// without the greedy core knowing anything about shards.
+pub fn greedy_assign_with_cost(
+    clients: &[(usize, usize)],
+    est: &[DeviceEstimate],
+    alive: &[bool],
+    base_load: &[f64],
+    extra: &dyn Fn(usize, usize) -> f64,
+) -> (Vec<Vec<usize>>, Vec<f64>) {
     let k = est.len();
     assert!(k > 0 && alive.len() == k && base_load.len() == k);
     let mut assignment = vec![Vec::new(); k];
@@ -74,7 +91,7 @@ pub fn greedy_assign_from(
             if !alive[kk] {
                 continue;
             }
-            let new_wk = w[kk] + e.predict(n);
+            let new_wk = w[kk] + e.predict(n) + extra(client, kk);
             // makespan if assigned to kk
             let mut ms = new_wk;
             for (jj, &wj) in w.iter().enumerate() {
@@ -87,7 +104,7 @@ pub fn greedy_assign_from(
                 best = kk;
             }
         }
-        w[best] += est[best].predict(n);
+        w[best] += est[best].predict(n) + extra(client, best);
         assignment[best].push(client);
     }
     (assignment, w)
@@ -296,6 +313,48 @@ mod tests {
         let est = homo(4);
         let a = greedy_assign(&clients, &est);
         let b = greedy_assign_from(&clients, &est, &[true; 4], &[0.0; 4]);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn extra_cost_steers_placement_without_breaking_partition() {
+        // Affinity-shaped hook: odd clients are "owned" by device 1 —
+        // with a dominant penalty for off-owner placement, the greedy
+        // step keeps every client home while still assigning each
+        // exactly once.
+        let est = homo(2);
+        let clients: Vec<(usize, usize)> = (0..10).map(|i| (i, 100)).collect();
+        let owner = |c: usize| c % 2;
+        let extra = |c: usize, k: usize| if owner(c) == k { 0.0 } else { 1e6 };
+        let (asg, w) = greedy_assign_with_cost(&clients, &est, &[true, true], &[0.0, 0.0], &extra);
+        for (k, list) in asg.iter().enumerate() {
+            for &c in list {
+                assert_eq!(owner(c), k, "client {c} placed off-owner: {asg:?}");
+            }
+        }
+        let mut seen: Vec<usize> = asg.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert!(w[0] < 1e5 && w[1] < 1e5, "no penalty was actually paid: {w:?}");
+        // A mild penalty only tilts ties: the makespan objective still
+        // dominates, so a huge compute imbalance overrides affinity.
+        let lopsided: Vec<(usize, usize)> = vec![(1, 10_000), (3, 10_000), (5, 10_000)];
+        let mild = |c: usize, k: usize| if owner(c) == k { 0.0 } else { 0.01 };
+        let (asg2, _) =
+            greedy_assign_with_cost(&lopsided, &est, &[true, true], &[0.0, 0.0], &mild);
+        assert!(
+            !asg2[0].is_empty(),
+            "makespan balancing must override a mild affinity: {asg2:?}"
+        );
+    }
+
+    #[test]
+    fn zero_extra_cost_matches_plain_greedy() {
+        let clients: Vec<(usize, usize)> = (0..23).map(|i| (i, 10 + 7 * i)).collect();
+        let est = homo(4);
+        let a = greedy_assign_from(&clients, &est, &[true; 4], &[0.0; 4]);
+        let b = greedy_assign_with_cost(&clients, &est, &[true; 4], &[0.0; 4], &|_, _| 0.0);
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
     }

@@ -14,10 +14,37 @@
 pub mod greedy;
 pub mod workload;
 
-pub use greedy::{greedy_assign, greedy_assign_from, uniform_assign, uniform_assign_masked};
+pub use greedy::{
+    greedy_assign, greedy_assign_from, greedy_assign_with_cost, uniform_assign,
+    uniform_assign_masked,
+};
 pub use workload::{DeviceEstimate, History, TaskRecord};
 
 use crate::config::SchedulerKind;
+use crate::statestore::ShardMap;
+
+/// State-affinity context
+/// ([`SchedulerKind::StateAffinity`](crate::config::SchedulerKind)):
+/// who owns each client's state, and what moving that state costs.
+/// Placing a client on a worker other than its owner adds
+/// `remote_secs × weight` to the greedy objective — the scheduler
+/// trades makespan balance against state movement instead of ignoring
+/// it.
+#[derive(Debug, Clone)]
+pub struct AffinityCtx {
+    pub map: ShardMap,
+    pub n_workers: usize,
+    /// Predicted seconds to move one client state off-owner (fetch +
+    /// write-back return over the coordinator transport).
+    pub remote_secs: f64,
+}
+
+impl AffinityCtx {
+    /// The worker hosting `client`'s state (shard s lives on worker s).
+    pub fn owner_worker(&self, client: usize) -> usize {
+        self.map.owner(client as u64) as usize % self.n_workers.max(1)
+    }
+}
 
 /// Outcome of scheduling one round.
 #[derive(Debug, Clone)]
@@ -42,11 +69,30 @@ pub struct Scheduler {
     pub warmup_rounds: usize,
     pub history: History,
     n_devices: usize,
+    /// Ownership ring + movement cost behind the state-affinity term;
+    /// None (or a non-affinity `kind`) degrades to plain Alg. 3.
+    affinity: Option<AffinityCtx>,
 }
 
 impl Scheduler {
     pub fn new(kind: SchedulerKind, warmup_rounds: usize, n_devices: usize) -> Scheduler {
-        Scheduler { kind, warmup_rounds, history: History::new(), n_devices }
+        Scheduler { kind, warmup_rounds, history: History::new(), n_devices, affinity: None }
+    }
+
+    /// Attach (or clear) the state-affinity context.  The term only
+    /// bites when `kind` is [`SchedulerKind::StateAffinity`].
+    pub fn set_affinity(&mut self, ctx: Option<AffinityCtx>) {
+        self.affinity = ctx;
+    }
+
+    /// Off-owner placement penalty in seconds (0 when affinity is off).
+    fn affinity_penalty(&self) -> f64 {
+        match (self.kind, &self.affinity) {
+            (SchedulerKind::StateAffinity { weight_pct, .. }, Some(ctx)) => {
+                ctx.remote_secs * weight_pct as f64 / 100.0
+            }
+            _ => 0.0,
+        }
     }
 
     /// Record a finished task (device k ran `n_eff` effective samples in
@@ -89,8 +135,20 @@ impl Scheduler {
         }
         let window = self.window();
         let estimates = self.history.estimate(self.n_devices, round, window);
-        let (assignment, predicted) =
-            greedy_assign_from(clients, &estimates, alive, &vec![0.0; self.n_devices]);
+        let penalty = self.affinity_penalty();
+        let (assignment, predicted) = if penalty > 0.0 {
+            let ctx = self.affinity.as_ref().expect("penalty > 0 implies ctx");
+            let extra = |client: usize, dev: usize| {
+                if ctx.owner_worker(client) == dev {
+                    0.0
+                } else {
+                    penalty
+                }
+            };
+            greedy_assign_with_cost(clients, &estimates, alive, &vec![0.0; self.n_devices], &extra)
+        } else {
+            greedy_assign_from(clients, &estimates, alive, &vec![0.0; self.n_devices])
+        };
         Schedule {
             assignment,
             predicted,
@@ -105,6 +163,11 @@ impl Scheduler {
     /// starting from each survivor's already-committed `base_load`
     /// predicted seconds.  Returns per-device lists of the orphaned
     /// ids (the caller's task/client handles).
+    ///
+    /// Deliberately affinity-free: the handles here are the caller's
+    /// opaque task ids (not client ids), and a departure hands the
+    /// dead worker's shard off anyway, so plan-time ownership is
+    /// already stale by the time orphans move.
     pub fn reassign_orphans(
         &mut self,
         round: usize,
@@ -133,6 +196,7 @@ impl Scheduler {
     fn window(&self) -> Option<usize> {
         match self.kind {
             SchedulerKind::TimeWindow(t) => Some(t),
+            SchedulerKind::StateAffinity { window, .. } if window > 0 => Some(window),
             _ => None,
         }
     }
@@ -239,6 +303,52 @@ mod tests {
         s.prune_device(0);
         assert_eq!(s.history.len(), 1);
         assert!(s.history.records().iter().all(|r| r.device == 1));
+    }
+
+    #[test]
+    fn state_affinity_prefers_owner_workers() {
+        use crate::statestore::ShardMap;
+        let map = ShardMap::new(3);
+        let mk = |kind| {
+            let mut s = Scheduler::new(kind, 0, 3);
+            for r in 0..3 {
+                for d in 0..3 {
+                    s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                    s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+                }
+            }
+            s.set_affinity(Some(AffinityCtx {
+                map: map.clone(),
+                n_workers: 3,
+                remote_secs: 1e5, // dwarfs any compute imbalance
+            }));
+            s
+        };
+        let cs = clients(&[100, 100, 100, 100, 100, 100, 100, 100, 100]);
+        let mut aff = mk(SchedulerKind::StateAffinity { window: 0, weight_pct: 100 });
+        let sch = aff.schedule(3, &cs);
+        assert!(sch.used_model);
+        for (dev, list) in sch.assignment.iter().enumerate() {
+            for &c in list {
+                assert_eq!(
+                    map.owner(c as u64) as usize,
+                    dev,
+                    "client {c} scheduled off-owner: {:?}",
+                    sch.assignment
+                );
+            }
+        }
+        // Same context on a plain Greedy kind: the term must not bite.
+        let mut plain = mk(SchedulerKind::Greedy);
+        let sp = plain.schedule(3, &cs);
+        let spread = |a: &[Vec<usize>]| a.iter().map(|l| l.len()).max().unwrap();
+        assert!(spread(&sp.assignment) <= 4, "greedy stays balanced: {:?}", sp.assignment);
+        // Affinity with zero weight degrades to plain greedy too.
+        let mut zero = mk(SchedulerKind::StateAffinity { window: 0, weight_pct: 0 });
+        assert_eq!(zero.schedule(3, &cs).assignment, sp.assignment);
+        // The windowed variant threads its window through estimation.
+        let w = Scheduler::new(SchedulerKind::StateAffinity { window: 4, weight_pct: 50 }, 0, 3);
+        assert_eq!(w.window(), Some(4));
     }
 
     #[test]

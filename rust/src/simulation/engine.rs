@@ -33,6 +33,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::scheduler::{Scheduler, TaskRecord};
+use crate::statestore::StatePlan;
 use crate::util::rng::Rng;
 
 use super::availability::{ChurnKind, DynamicsSpec};
@@ -173,6 +174,11 @@ pub struct RoundPlan {
     /// Per-task comm bytes (down, up).
     pub per_task_bytes: (u64, u64),
     pub tail: TailComm,
+    /// Per-task `StateLoad` legs + the round-tail `StateFlush` leg from
+    /// the client-state store (empty `StatePlan` = no store attached).
+    /// With `prefetch` the loads pipeline ahead of execution in task
+    /// order; otherwise each load serializes before its task's compute.
+    pub state: StatePlan,
     /// Feed completed-task records into the scheduler history and prune
     /// it on departures (Parrot).
     pub record_history: bool,
@@ -214,6 +220,14 @@ pub struct RoundOutcome {
     pub joins: usize,
     /// Final alive mask (same length as the plan's executor space).
     pub alive: Vec<bool>,
+    /// State-movement bytes booked from the plan's `StateLoad`/
+    /// `StateFlush` legs.  Every planned leg is booked exactly once —
+    /// started or not (prefetch moves bytes ahead of execution) — so
+    /// this column equals the state store's own counters on any seed.
+    pub state_bytes: u64,
+    /// Seconds executors stalled waiting on state loads, plus the
+    /// round-tail flush time.
+    pub state_secs: f64,
 }
 
 struct Core<'a> {
@@ -231,6 +245,10 @@ struct Core<'a> {
     comm_up: f64,
     bytes_down: u64,
     bytes_up: u64,
+    state: StatePlan,
+    state_booked: Vec<bool>,
+    state_bytes: u64,
+    state_secs: f64,
     record_history: bool,
     heap: BinaryHeap<Scheduled>,
     now: f64,
@@ -297,29 +315,52 @@ impl<'a> Core<'a> {
         }
     }
 
+    /// The state-load stall this task pays before its down leg: with
+    /// prefetch, only the slack until the pipelined load is ready; the
+    /// leg's bytes are booked here.  Both bytes and stall are paid
+    /// exactly once per task — a task re-started after a mid-round
+    /// reassignment already has its state in flight (plan-level
+    /// accounting), so a second `TaskStart` must not double-charge the
+    /// load into `state_secs` or the timeline.
+    fn state_stall(&mut self, task: usize) -> f64 {
+        if self.state.legs.is_empty() || self.state_booked[task] {
+            return 0.0;
+        }
+        let leg = self.state.legs.get(task).copied().unwrap_or_default();
+        self.state_booked[task] = true;
+        self.state_bytes += leg.bytes;
+        let stall = if self.state.prefetch { (leg.ready - self.now).max(0.0) } else { leg.secs };
+        self.state_secs += stall;
+        stall
+    }
+
     fn on_task_start(&mut self, slot: usize, task: usize) {
         let mut dur = self.base_secs(slot, task);
         let st = &self.dynamics.straggler;
         if st.prob > 0.0 && self.rng.next_f64() < st.prob {
             dur *= st.law.sample(&mut self.rng);
         }
+        let stall = self.state_stall(task);
         self.tasks[task].state = TaskState::Running;
-        self.execs[slot].current = Some((task, self.now, dur));
+        // The stall shifts the task's effective start so downstream
+        // elapsed/projected arithmetic stays exact.
+        self.execs[slot].current = Some((task, self.now + stall, dur));
         if self.bytes_down > 0 {
             self.bytes += self.bytes_down;
             self.trips += 1;
         }
+        let st = &self.dynamics.straggler;
         let epoch = self.execs[slot].epoch;
         if st.drop_prob > 0.0 && self.rng.next_f64() < st.drop_prob {
             let frac = self.rng.next_f64();
             self.push(
-                self.now + self.comm_down + dur * frac,
+                self.now + stall + self.comm_down + dur * frac,
                 epoch,
                 Event::ClientUnavailable { task, device: slot },
             );
         } else {
             self.push(
-                self.now + self.comm_down + dur,
+                self.now + stall + self.comm_down + dur,
                 epoch,
                 Event::TaskDone { task, device: slot },
             );
@@ -543,6 +584,13 @@ impl<'a> Core<'a> {
                 }
             }
         }
+        // StateFlush leg: round-boundary dirty write-back plus remote
+        // write-back returns, serialized after the comm tail.
+        if self.state.tail_secs > 0.0 || self.state.tail_bytes > 0 {
+            t += self.state.tail_secs;
+            self.state_secs += self.state.tail_secs;
+            self.state_bytes += self.state.tail_bytes;
+        }
         // Late churn events may have advanced `now` past the last real
         // work; the round ends when work + tail comm end, not when the
         // last scripted event was probed.
@@ -592,6 +640,19 @@ impl<'a> Core<'a> {
                 self.dropped += 1;
             }
         }
+        // Book the legs of tasks that never reached TaskStart: the
+        // plan-driven prefetch already moved (and the write-back tail
+        // will still flush) their state, so the bytes were spent even
+        // though no compute happened — this is what keeps the engine's
+        // state column equal to the store's counters under drops.
+        if !self.state.legs.is_empty() {
+            for t in 0..self.state_booked.len() {
+                if !self.state_booked[t] {
+                    self.state_booked[t] = true;
+                    self.state_bytes += self.state.legs.get(t).map(|l| l.bytes).unwrap_or(0);
+                }
+            }
+        }
         self.run_tail(tail, initial_alive);
         RoundOutcome {
             busy: self.execs.iter().map(|e| e.busy).collect(),
@@ -607,6 +668,8 @@ impl<'a> Core<'a> {
             completed_tasks: self.completed,
             departures: self.departures,
             joins: self.joins,
+            state_bytes: self.state_bytes,
+            state_secs: self.state_secs,
         }
     }
 }
@@ -639,6 +702,7 @@ pub fn run_round(
         })
         .collect();
 
+    let n_tasks = plan.tasks.len();
     let mut core = Core {
         round,
         cluster,
@@ -654,6 +718,10 @@ pub fn run_round(
         comm_up: plan.per_task_comm.1,
         bytes_down: plan.per_task_bytes.0,
         bytes_up: plan.per_task_bytes.1,
+        state: plan.state,
+        state_booked: vec![false; n_tasks],
+        state_bytes: 0,
+        state_secs: 0.0,
         record_history: plan.record_history,
         heap: BinaryHeap::new(),
         now: 0.0,
@@ -734,6 +802,7 @@ mod tests {
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
             tail,
+            state: StatePlan::default(),
             record_history: false,
         }
     }
@@ -785,6 +854,7 @@ mod tests {
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
             tail: TailComm::None,
+            state: StatePlan::default(),
             record_history: false,
         };
         let out = run_round(plan, &homo(2), &cost, 0, &static_dynamics(), 1, None);
@@ -847,6 +917,7 @@ mod tests {
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
             tail: TailComm::None,
+            state: StatePlan::default(),
             record_history: false,
         };
         let dynamics = DynamicsSpec {
@@ -935,6 +1006,110 @@ mod tests {
         let out = run_round(plan, &homo(1), &cost, 0, &dynamics, 1, None);
         assert_eq!(out.departures, 0);
         assert_eq!(out.completed_tasks, 3);
+    }
+
+    #[test]
+    fn state_loads_serialize_without_prefetch() {
+        use crate::statestore::StateLeg;
+        let cost = WorkloadCost::femnist();
+        let compute = cost.t_sample * 200.0 + cost.b_fixed;
+        let mut plan = plan_assigned(1, &[200, 200], TailComm::None);
+        plan.state = StatePlan {
+            legs: vec![
+                StateLeg { bytes: 1000, secs: 0.5, ready: 0.5 },
+                StateLeg { bytes: 2000, secs: 0.5, ready: 1.0 },
+            ],
+            prefetch: false,
+            tail_bytes: 0,
+            tail_secs: 0.0,
+        };
+        let out = run_round(plan, &homo(1), &cost, 0, &static_dynamics(), 1, None);
+        assert!((out.end - (2.0 * compute + 1.0)).abs() < 1e-9, "{}", out.end);
+        assert_eq!(out.state_bytes, 3000);
+        assert!((out.state_secs - 1.0).abs() < 1e-9);
+        // Load stalls are neither busy compute nor comm occupancy.
+        assert!((out.busy[0] - 2.0 * compute).abs() < 1e-9);
+        assert_eq!(out.completed_tasks, 2);
+    }
+
+    #[test]
+    fn prefetch_pipelines_loads_behind_compute() {
+        use crate::statestore::StateLeg;
+        let cost = WorkloadCost::femnist();
+        let compute = cost.t_sample * 200.0 + cost.b_fixed; // 0.55s
+        let mut plan = plan_assigned(1, &[200, 200], TailComm::None);
+        // Channel: first load ready at 0.3, second at 0.6 — the second
+        // finishes while task 1 computes, so only the initial 0.3 stalls.
+        plan.state = StatePlan {
+            legs: vec![
+                StateLeg { bytes: 10, secs: 0.3, ready: 0.3 },
+                StateLeg { bytes: 10, secs: 0.3, ready: 0.6 },
+            ],
+            prefetch: true,
+            tail_bytes: 0,
+            tail_secs: 0.0,
+        };
+        let out = run_round(plan, &homo(1), &cost, 0, &static_dynamics(), 1, None);
+        assert!(
+            (out.end - (0.3 + 2.0 * compute)).abs() < 1e-9,
+            "prefetch must hide the second load: {} vs {}",
+            out.end,
+            0.3 + 2.0 * compute
+        );
+        assert!((out.state_secs - 0.3).abs() < 1e-9);
+        assert_eq!(out.state_bytes, 20);
+    }
+
+    #[test]
+    fn state_flush_tail_extends_round_and_books_bytes() {
+        let cost = WorkloadCost::femnist();
+        let mut plan = plan_assigned(2, &[100, 100], TailComm::None);
+        plan.state = StatePlan {
+            legs: vec![Default::default(); 2],
+            prefetch: true,
+            tail_bytes: 4096,
+            tail_secs: 0.25,
+        };
+        let base = run_round(
+            plan_assigned(2, &[100, 100], TailComm::None),
+            &homo(2),
+            &cost,
+            0,
+            &static_dynamics(),
+            1,
+            None,
+        );
+        let out = run_round(plan, &homo(2), &cost, 0, &static_dynamics(), 1, None);
+        assert!((out.end - (base.end + 0.25)).abs() < 1e-9);
+        assert_eq!(out.state_bytes, 4096);
+    }
+
+    #[test]
+    fn dropped_tasks_still_book_planned_state_bytes() {
+        use crate::statestore::StateLeg;
+        let cost = WorkloadCost::femnist();
+        let mut plan = plan_assigned(2, &[300; 6], TailComm::None);
+        plan.state = StatePlan {
+            legs: vec![StateLeg { bytes: 100, secs: 0.0, ready: 0.0 }; 6],
+            prefetch: true,
+            tail_bytes: 50,
+            tail_secs: 0.0,
+        };
+        let dynamics = DynamicsSpec {
+            straggler: StragglerSpec {
+                prob: 0.0,
+                law: SlowdownLaw::Fixed(1.0),
+                drop_prob: 1.0, // every client vanishes mid-task
+            },
+            ..Default::default()
+        };
+        let out = run_round(plan, &homo(2), &cost, 0, &dynamics, 1, None);
+        assert_eq!(out.dropped_tasks, 6);
+        assert_eq!(
+            out.state_bytes,
+            6 * 100 + 50,
+            "prefetched bytes are spent whether or not the task survives"
+        );
     }
 
     #[test]

@@ -64,7 +64,8 @@ use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::compress::Codec;
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::Partition;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{AffinityCtx, Scheduler};
+use crate::statestore::{SimStore, StatePlan};
 use crate::util::rng::Rng;
 
 use engine::{RefillPolicy, ReassignPolicy, TailComm};
@@ -157,6 +158,13 @@ pub struct VRound {
     pub wasted_secs: f64,
     pub departures: usize,
     pub joins: usize,
+    /// State-store bytes the engine booked this round (StateLoad legs +
+    /// the StateFlush tail); 0 without an attached store.
+    pub state_bytes: u64,
+    /// Executor stall on state loads + flush tail seconds.
+    pub state_secs: f64,
+    /// Shard-handoff bytes from device churn (ShardTransfer path).
+    pub shard_transfer_bytes: u64,
 }
 
 impl VRound {
@@ -190,8 +198,18 @@ impl VRound {
             wasted_secs: 0.0,
             departures: 0,
             joins: 0,
+            state_bytes: 0,
+            state_secs: 0.0,
+            shard_transfer_bytes: 0,
         }
     }
+}
+
+/// Virtual client-state store attached to a [`VirtualSim`]: the
+/// three-tier [`SimStore`] plus the plan-driven-prefetch switch.
+pub struct StateSim {
+    pub store: SimStore,
+    pub prefetch: bool,
 }
 
 /// The virtual simulator: one scheme, one cluster, one workload.
@@ -207,6 +225,10 @@ pub struct VirtualSim {
     pub noise: f64,
     /// Availability / churn / straggler injection (default: static).
     pub dynamics: DynamicsSpec,
+    /// Client-state store simulation (None = stateless / legacy runs).
+    /// Only schemes whose executors map 1:1 to persistent workers (SP,
+    /// Parrot) drive it; attach via [`VirtualSim::with_state_store`].
+    pub state: Option<StateSim>,
     /// Persistent per-device-slot alive mask (FA/Parrot executors map
     /// 1:1 to devices; RW/SD executors are fresh per round).
     device_alive: Vec<bool>,
@@ -238,6 +260,7 @@ impl VirtualSim {
             local_epochs,
             noise: 0.05,
             dynamics: DynamicsSpec::default(),
+            state: None,
             device_alive: vec![true; k],
             dyn_seed: seed ^ 0xD15C_0E7E,
             rng: Rng::new(seed ^ 0x51D_CAFE),
@@ -248,6 +271,33 @@ impl VirtualSim {
     pub fn with_dynamics(mut self, dynamics: DynamicsSpec) -> VirtualSim {
         self.dynamics = dynamics;
         self
+    }
+
+    /// Attach a client-state store.  When the store is sharded, the
+    /// scheduler also receives the affinity context (ownership ring +
+    /// remote-fetch cost) so a `SchedulerKind::StateAffinity` kind can
+    /// bias placement toward state owners.
+    pub fn with_state_store(mut self, store: SimStore, prefetch: bool) -> VirtualSim {
+        self.state = Some(StateSim { store, prefetch });
+        self.refresh_affinity();
+        self
+    }
+
+    /// (Re)derive the scheduler's affinity context from the store's
+    /// current ring — called on attach and after every ring change, so
+    /// the scheduler never steers clients toward a retired owner.
+    fn refresh_affinity(&mut self) {
+        let Some(st) = self.state.as_ref() else { return };
+        if let Some(map) = st.store.shard_map() {
+            let cfg = st.store.cfg();
+            let remote =
+                2.0 * (cfg.net_latency + cfg.state_bytes as f64 / cfg.net_bandwidth);
+            self.scheduler.set_affinity(Some(AffinityCtx {
+                map: map.clone(),
+                n_workers: cfg.n_workers,
+                remote_secs: remote,
+            }));
+        }
     }
 
     /// Which device slots are currently alive (shaped by churn).
@@ -279,11 +329,12 @@ impl VirtualSim {
         }
         let k = self.cluster.n_devices();
         let (plan, sched_secs) = match self.scheme {
-            Scheme::SP => (self.plan_sp(&sizes), 0.0),
+            Scheme::SP => (self.plan_sp(r, &sizes), 0.0),
             Scheme::RwDist | Scheme::SdDist => (self.plan_sd(&sizes), 0.0),
             Scheme::FaDist => (self.plan_fa(&sizes, k), 0.0),
             Scheme::Parrot => self.plan_parrot(r, &sizes, k),
         };
+        let prev_alive = self.device_alive.clone();
         let outcome = engine::run_round(
             plan,
             &self.cluster,
@@ -295,10 +346,40 @@ impl VirtualSim {
         );
         // Device slots persist across rounds for the schemes whose
         // executors map 1:1 to physical devices.
+        let mut transfer = 0u64;
         if matches!(self.scheme, Scheme::FaDist | Scheme::Parrot) {
             self.device_alive.clone_from_slice(&outcome.alive);
+            transfer = self.shard_churn(&prev_alive);
         }
-        self.assemble(r, sizes.len(), unavailable, sched_secs, outcome)
+        self.assemble(r, sizes.len(), unavailable, sched_secs, transfer, outcome)
+    }
+
+    /// Shard handoff on device churn: every slot that died this round
+    /// hands its shard (and hosted states) to the survivors; rejoining
+    /// slots pull their shard back — the PR-1 `DeviceLeave` machinery
+    /// extended to state ownership.  Returns the ShardTransfer bytes.
+    fn shard_churn(&mut self, prev_alive: &[bool]) -> u64 {
+        if self.state.is_none() {
+            return 0;
+        }
+        let mut bytes = 0u64;
+        let mut ring_changed = false;
+        for slot in 0..prev_alive.len().min(self.device_alive.len()) {
+            let (was, is) = (prev_alive[slot], self.device_alive[slot]);
+            if was == is {
+                continue;
+            }
+            let st = self.state.as_mut().expect("checked above");
+            bytes += if was { st.store.handoff(slot) } else { st.store.rejoin(slot) };
+            // The ring may change even when no state moved yet (e.g. a
+            // departure before the shard hosted anything) — the
+            // scheduler's view must follow the ring, not the bytes.
+            ring_changed = true;
+        }
+        if ring_changed {
+            self.refresh_affinity();
+        }
+        bytes
     }
 
     /// A round where no selected client was available: no work runs,
@@ -308,6 +389,7 @@ impl VirtualSim {
     fn idle_round(&mut self, r: usize, unavailable: usize) -> VRound {
         let mut v = VRound::empty(r, unavailable);
         if matches!(self.scheme, Scheme::FaDist | Scheme::Parrot) {
+            let prev_alive = self.device_alive.clone();
             let events: Vec<ChurnEvent> = self.dynamics.churn.scripted(r).copied().collect();
             for ev in events {
                 if ev.device >= self.device_alive.len() {
@@ -332,6 +414,8 @@ impl VirtualSim {
                     }
                 }
             }
+            // Churn landing in an empty round still moves shards.
+            v.shard_transfer_bytes = self.shard_churn(&prev_alive);
         }
         v
     }
@@ -342,6 +426,7 @@ impl VirtualSim {
         n_scheduled: usize,
         unavailable: usize,
         sched_secs: f64,
+        shard_transfer_bytes: u64,
         outcome: RoundOutcome,
     ) -> VRound {
         let compute_secs = outcome.busy.iter().cloned().fold(0.0, f64::max);
@@ -381,25 +466,56 @@ impl VirtualSim {
             wasted_secs: outcome.wasted_secs,
             departures: outcome.departures,
             joins: outcome.joins,
+            state_bytes: outcome.state_bytes,
+            state_secs: outcome.state_secs,
+            shard_transfer_bytes,
         }
     }
 
+    /// Plan this round's state traffic on the attached store: mutates
+    /// the store in the planned access order (plan-driven prefetch) and
+    /// scatters its per-worker legs into task-index order.  Returns the
+    /// empty plan when no store is attached or the executor space does
+    /// not map 1:1 onto the store's workers.
+    fn plan_state(
+        &mut self,
+        r: usize,
+        n_exec: usize,
+        assigned: &[Vec<usize>],
+        tasks: &[SimTask],
+    ) -> StatePlan {
+        let Some(st) = self.state.as_mut() else { return StatePlan::default() };
+        if st.store.cfg().n_workers != n_exec {
+            return StatePlan::default();
+        }
+        st.store.plan_for_tasks(
+            r as u64,
+            assigned,
+            |t| tasks[t].client as u64,
+            tasks.len(),
+            st.prefetch,
+        )
+    }
+
     /// SP: one executor, all tasks back-to-back, no comm.
-    fn plan_sp(&mut self, sizes: &[(usize, usize)]) -> RoundPlan {
+    fn plan_sp(&mut self, r: usize, sizes: &[(usize, usize)]) -> RoundPlan {
         let tasks: Vec<SimTask> = sizes
             .iter()
             .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
             .collect();
+        let assigned: Vec<Vec<usize>> = vec![(0..tasks.len()).collect()];
+        let state = self.plan_state(r, 1, &assigned, &tasks);
         RoundPlan {
             n_exec: 1,
             alive: vec![true],
-            assigned: vec![(0..tasks.len()).collect()],
+            assigned,
             pull: Vec::new(),
             refill: RefillPolicy::Assigned,
             reassign: ReassignPolicy::LeastLoaded,
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
             tail: TailComm::None,
+            state,
             record_history: false,
             tasks,
         }
@@ -427,6 +543,7 @@ impl VirtualSim {
                 down: self.comm.s_a + self.comm.s_e,
                 up: self.comm.s_a_up() + self.comm.s_e,
             },
+            state: StatePlan::default(),
             record_history: false,
             tasks,
         }
@@ -456,6 +573,7 @@ impl VirtualSim {
             ),
             per_task_bytes: (down, up),
             tail: TailComm::None,
+            state: StatePlan::default(),
             record_history: false,
             tasks,
         }
@@ -484,6 +602,7 @@ impl VirtualSim {
             }
         }
         let m_p = sizes.len() as u64;
+        let state = self.plan_state(r, k, &assigned, &tasks);
         let plan = RoundPlan {
             tasks,
             n_exec: k,
@@ -499,6 +618,7 @@ impl VirtualSim {
                 s_a_up: self.comm.s_a_up(),
                 s_e_total: self.comm.s_e * m_p,
             },
+            state,
             record_history: true,
         };
         (plan, schedule.overhead_secs)
@@ -946,6 +1066,150 @@ mod tests {
         assert!(rs[2].device_busy[1] > 0.0);
         // history for the departed device was pruned
         assert!(sim.scheduler.history.records().iter().all(|t| t.device != 0 || t.round > 1));
+    }
+
+    // ------------------------------------------------ state-store tests
+
+    fn state_sim_sized(
+        s_d: u64,
+        n_shards: usize,
+        write_back: bool,
+        prefetch: bool,
+        sched: SchedulerKind,
+    ) -> VirtualSim {
+        use crate::statestore::{SimStore, SimStoreCfg};
+        let partition = Partition::generate(PartitionKind::Natural, 60, 62, 100, 7);
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::homogeneous(4),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            sched,
+            2,
+            partition,
+            1,
+            3,
+        )
+        .with_state_store(
+            SimStore::new(
+                SimStoreCfg::new(4, n_shards, s_d, 64 * s_d as usize).write_back(write_back),
+            ),
+            prefetch,
+        );
+        sim.noise = 0.0;
+        sim
+    }
+
+    fn state_sim(
+        n_shards: usize,
+        write_back: bool,
+        prefetch: bool,
+        sched: SchedulerKind,
+    ) -> VirtualSim {
+        state_sim_sized(1 << 16, n_shards, write_back, prefetch, sched) // 64 KB states
+    }
+
+    /// Run, assert the engine's state columns equal the store's own
+    /// counters, and return (total time, peak cache bytes, remote bytes).
+    fn run_state_sim(sim: &mut VirtualSim, rounds: usize) -> (f64, u64, u64) {
+        let rs = run_virtual(sim, rounds, 30, 11);
+        let total: f64 = rs.iter().map(|r| r.total_secs).sum();
+        let engine_bytes: u64 = rs.iter().map(|r| r.state_bytes).sum();
+        let transfer: u64 = rs.iter().map(|r| r.shard_transfer_bytes).sum();
+        let m = sim.state.as_ref().expect("store attached").store.metrics;
+        assert_eq!(
+            engine_bytes + transfer,
+            m.total_bytes(),
+            "engine-booked state bytes must equal the store's counters"
+        );
+        (total, m.peak_cache_bytes, m.remote_bytes)
+    }
+
+    #[test]
+    fn sharded_store_with_prefetch_dominates_local_baseline_on_peak_ram() {
+        // The statescale acceptance shape at test scale: same budget,
+        // sharded ownership must strictly beat the local-only baseline
+        // on peak cache-resident bytes (no duplicate caching) without
+        // giving up the makespan.
+        let mut base = state_sim(0, false, false, SchedulerKind::Greedy);
+        let (t_base, peak_base, _) = run_state_sim(&mut base, 6);
+        let mut shard = state_sim(
+            4,
+            true,
+            true,
+            SchedulerKind::StateAffinity { window: 0, weight_pct: 100 },
+        );
+        let (t_shard, peak_shard, _) = run_state_sim(&mut shard, 6);
+        assert!(
+            peak_shard < peak_base,
+            "sharded peak {peak_shard} must beat local-only {peak_base}"
+        );
+        assert!(
+            t_shard <= t_base * 1.05 + 1.0,
+            "sharded makespan {t_shard:.2} vs baseline {t_base:.2}"
+        );
+        // Write-back + single ownership also cuts disk writes.
+        let m_base = base.state.as_ref().unwrap().store.metrics;
+        let m_shard = shard.state.as_ref().unwrap().store.metrics;
+        assert!(
+            m_shard.disk_writes < m_base.disk_writes,
+            "write-back must defer writes: {} vs {}",
+            m_shard.disk_writes,
+            m_base.disk_writes
+        );
+        assert!(m_shard.avoided_writes > 0);
+    }
+
+    #[test]
+    fn affinity_scheduling_cuts_remote_state_traffic() {
+        // Heavy states (512 MB-class, think full optimizer mirrors):
+        // moving one is comparable to a task, so the affinity term must
+        // visibly pull clients toward their owners once the model kicks
+        // in — the plain greedy kind ignores ownership entirely.
+        let s_d: u64 = 1 << 29;
+        let mut plain = state_sim_sized(s_d, 4, true, true, SchedulerKind::Greedy);
+        let (_, _, remote_plain) = run_state_sim(&mut plain, 8);
+        let mut aff = state_sim_sized(
+            s_d,
+            4,
+            true,
+            true,
+            SchedulerKind::StateAffinity { window: 0, weight_pct: 100 },
+        );
+        let (_, _, remote_aff) = run_state_sim(&mut aff, 8);
+        assert!(
+            remote_aff < remote_plain,
+            "affinity must reduce remote fetches: {remote_aff} vs {remote_plain}"
+        );
+    }
+
+    #[test]
+    fn state_accounting_stays_exact_under_churn_with_handoff() {
+        let mut sim = state_sim(
+            4,
+            true,
+            true,
+            SchedulerKind::StateAffinity { window: 0, weight_pct: 100 },
+        );
+        sim.dynamics.churn = ChurnSpec {
+            events: vec![
+                ChurnEvent { round: 1, device: 2, secs: 0.05, kind: ChurnKind::Leave },
+                ChurnEvent { round: 3, device: 2, secs: 0.0, kind: ChurnKind::Join },
+            ],
+            leave_prob: 0.0,
+            join_prob: 0.0,
+        };
+        let rs = run_virtual(&mut sim, 5, 30, 11);
+        let transfer: u64 = rs.iter().map(|r| r.shard_transfer_bytes).sum();
+        assert!(transfer > 0, "departure + rejoin must move shard state");
+        let engine_bytes: u64 = rs.iter().map(|r| r.state_bytes).sum();
+        let m = sim.state.as_ref().unwrap().store.metrics;
+        assert_eq!(engine_bytes + transfer, m.total_bytes());
+        assert!(m.shard_transfers > 0);
+        // No state was lost across the handoffs: every client trained
+        // in some round still has a live snapshot.
+        let snap = sim.state.as_ref().unwrap().store.snapshot();
+        assert!(!snap.is_empty());
     }
 
     #[test]

@@ -7,11 +7,28 @@
 //! (O(s_d·K) in practice — each device touches one client at a time) and
 //! spills the rest to disk (O(s_d·M) disk, the irreducible term).
 //!
+//! The cache tier is the shared
+//! [`WriteBackCache`](crate::statestore::WriteBackCache) (O(log n)
+//! eviction — the old per-eviction `min_by_key` scan made tight-budget
+//! rotations O(n²); `benches/bench_state.rs` pins the fix at 10k
+//! clients).  Two persistence modes:
+//!
+//! - **write-through** (default, the seed behavior): every save lands
+//!   on disk immediately.
+//! - **write-back** (`with_write_back(true)`): saves only dirty the
+//!   cache; disk is paid on eviction of a dirty entry and at explicit
+//!   [`StateManager::flush`] (round boundary / shutdown).  A client
+//!   re-trained while cache-resident stops paying a disk write per
+//!   save — counted in [`StateMetrics::avoided_writes`].
+//!
 //! Writes are atomic (tmp + rename) so a crashed simulation never leaves
 //! a torn snapshot.  All traffic is counted — the Table-1/Table-3
-//! harnesses read these counters.
+//! harnesses read these counters.  `disk_bytes()` is O(1): the running
+//! total is maintained by save/flush/clear (primed by one directory
+//! walk at construction) and asserted against a fresh walk in tests.
 
 use crate::model::ParamSet;
+use crate::statestore::WriteBackCache;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -28,104 +45,134 @@ pub struct StateMetrics {
     pub bytes_read: u64,
     /// High-water mark of cache residency in bytes (the O(s_d·K) term).
     pub peak_cache_bytes: u64,
+    /// Write-back only: saves absorbed by an already-dirty cache entry —
+    /// disk writes the write-through path would have paid.
+    pub avoided_writes: u64,
 }
 
-/// Disk-backed client-state store with a bounded LRU cache.
+/// Disk-backed client-state store with a bounded write-back LRU cache.
 pub struct StateManager {
     dir: PathBuf,
-    cache_budget: usize,
-    cache: HashMap<u64, (Vec<u8>, u64)>, // id -> (bytes, last-use tick)
-    cache_bytes: usize,
-    tick: u64,
+    write_back: bool,
+    cache: WriteBackCache<Vec<u8>>,
+    /// Per-client on-disk sizes written by THIS manager (plus whatever
+    /// the constructor's walk found) — backs the O(1) `disk_bytes`.
+    on_disk: HashMap<u64, u64>,
+    disk_total: u64,
     pub metrics: StateMetrics,
 }
 
 impl StateManager {
     /// `cache_budget` caps in-memory state bytes; 0 disables caching
     /// (every access hits disk — the SP-with-state-manager column).
+    /// Starts in write-through mode; see [`StateManager::with_write_back`].
     pub fn new(dir: impl AsRef<Path>, cache_budget: usize) -> Result<StateManager> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating state dir {}", dir.display()))?;
-        Ok(StateManager {
+        let mut sm = StateManager {
             dir,
-            cache_budget,
-            cache: HashMap::new(),
-            cache_bytes: 0,
-            tick: 0,
+            write_back: false,
+            cache: WriteBackCache::new(cache_budget),
+            on_disk: HashMap::new(),
+            disk_total: 0,
             metrics: StateMetrics::default(),
-        })
+        };
+        // Prime the running disk total from whatever a previous run (or
+        // another manager over the same directory) left behind.
+        for e in std::fs::read_dir(&sm.dir)? {
+            let e = e?;
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(id) = name.strip_prefix("client_").and_then(|s| s.strip_suffix(".state"))
+            {
+                if let Ok(client) = id.parse::<u64>() {
+                    let sz = e.metadata()?.len();
+                    sm.on_disk.insert(client, sz);
+                    sm.disk_total += sz;
+                }
+            }
+        }
+        Ok(sm)
+    }
+
+    /// Switch persistence mode (builder-style; write-through default).
+    pub fn with_write_back(mut self, on: bool) -> StateManager {
+        self.write_back = on;
+        self
+    }
+
+    pub fn is_write_back(&self) -> bool {
+        self.write_back
     }
 
     fn path(&self, client: u64) -> PathBuf {
         self.dir.join(format!("client_{client}.state"))
     }
 
-    fn touch(&mut self) -> u64 {
-        self.tick += 1;
-        self.tick
-    }
-
-    fn cache_insert(&mut self, client: u64, bytes: Vec<u8>) {
-        if self.cache_budget == 0 {
-            return;
-        }
-        let sz = bytes.len();
-        // A value that can never fit must bypass the cache entirely —
-        // the old path evicted every resident entry first and then
-        // skipped the insertion anyway, churning the whole cache for
-        // nothing.  Only drop a stale same-key copy so reads can't
-        // return the previous value from cache.
-        if sz > self.cache_budget {
-            if let Some((old, _)) = self.cache.remove(&client) {
-                self.cache_bytes -= old.len();
-            }
-            return;
-        }
-        // Replacing the same key: release its bytes before budgeting so
-        // eviction never counts the old copy against the new one.
-        if let Some((old, _)) = self.cache.remove(&client) {
-            self.cache_bytes -= old.len();
-        }
-        // Evict least-recently-used until the new value fits.
-        while self.cache_bytes + sz > self.cache_budget && !self.cache.is_empty() {
-            let (&old, _) = self
-                .cache
-                .iter()
-                .min_by_key(|(_, (_, tick))| *tick)
-                .expect("non-empty cache");
-            if let Some((b, _)) = self.cache.remove(&old) {
-                self.cache_bytes -= b.len();
-            }
-        }
-        let t = self.touch();
-        self.cache.insert(client, (bytes, t));
-        self.cache_bytes += sz;
-        self.metrics.peak_cache_bytes =
-            self.metrics.peak_cache_bytes.max(self.cache_bytes as u64);
-    }
-
-    /// `Save_State(m, S)` (Alg. 2): persist to disk, refresh cache.
-    pub fn save(&mut self, client: u64, bytes: &[u8]) -> Result<()> {
-        self.metrics.saves += 1;
+    /// Atomic disk write + size/traffic bookkeeping.
+    fn write_file(&mut self, client: u64, bytes: &[u8]) -> Result<()> {
         let tmp = self.dir.join(format!(".client_{client}.tmp"));
         std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, self.path(client)).context("atomic rename")?;
         self.metrics.disk_writes += 1;
         self.metrics.bytes_written += bytes.len() as u64;
-        self.cache_insert(client, bytes.to_vec());
+        let sz = bytes.len() as u64;
+        if let Some(old) = self.on_disk.insert(client, sz) {
+            self.disk_total -= old;
+        }
+        self.disk_total += sz;
         Ok(())
     }
 
-    /// `Load_State(m)` (Alg. 2): cache first, then disk; None when the
-    /// client has no state yet (first round it is selected).
+    /// Persist entries the cache displaced (write-back contract: dirty
+    /// evictions must spill or their data dies with the cache).
+    fn spill_evicted(&mut self, evicted: Vec<crate::statestore::Evicted<Vec<u8>>>) -> Result<()> {
+        for e in evicted {
+            if e.dirty {
+                self.write_file(e.client, &e.value)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn note_peak(&mut self) {
+        self.metrics.peak_cache_bytes =
+            self.metrics.peak_cache_bytes.max(self.cache.resident_bytes() as u64);
+    }
+
+    /// `Save_State(m, S)` (Alg. 2).  Write-through: persist + refresh
+    /// cache.  Write-back: dirty the cache; disk is deferred to
+    /// eviction or [`StateManager::flush`] (values the cache rejects —
+    /// zero budget, oversized — fall back to an immediate write so
+    /// durability never depends on residency).
+    pub fn save(&mut self, client: u64, bytes: &[u8]) -> Result<()> {
+        self.metrics.saves += 1;
+        if self.write_back {
+            if self.cache.is_dirty(client) {
+                self.metrics.avoided_writes += 1;
+            }
+            let (resident, evicted) = self.cache.insert(client, bytes.to_vec(), true);
+            self.spill_evicted(evicted)?;
+            if !resident {
+                self.write_file(client, bytes)?;
+            }
+        } else {
+            self.write_file(client, bytes)?;
+            let (_, evicted) = self.cache.insert(client, bytes.to_vec(), false);
+            self.spill_evicted(evicted)?;
+        }
+        self.note_peak();
+        Ok(())
+    }
+
+    /// `Load_State(m)` (Alg. 2): cache first (which may be dirty —
+    /// newer than disk), then disk; None when the client has no state
+    /// yet (first round it is selected).
     pub fn load(&mut self, client: u64) -> Result<Option<Vec<u8>>> {
         self.metrics.loads += 1;
-        if let Some((bytes, _)) = self.cache.get(&client) {
+        if let Some(bytes) = self.cache.get(client) {
             let out = bytes.clone();
             self.metrics.cache_hits += 1;
-            let t = self.touch();
-            self.cache.get_mut(&client).unwrap().1 = t;
             return Ok(Some(out));
         }
         let p = self.path(client);
@@ -135,8 +182,29 @@ impl StateManager {
         let bytes = std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
         self.metrics.disk_reads += 1;
         self.metrics.bytes_read += bytes.len() as u64;
-        self.cache_insert(client, bytes.clone());
+        let (_, evicted) = self.cache.insert(client, bytes.clone(), false);
+        self.spill_evicted(evicted)?;
+        self.note_peak();
         Ok(Some(bytes))
+    }
+
+    /// Write every dirty cache entry to disk (round boundary /
+    /// shutdown consistency point).  Returns the number of entries
+    /// flushed; a no-op in write-through mode.
+    pub fn flush(&mut self) -> Result<usize> {
+        let ids = self.cache.dirty_ids();
+        let n = ids.len();
+        for c in ids {
+            let bytes = self.cache.peek(c).expect("dirty entry present").clone();
+            self.write_file(c, &bytes)?;
+            self.cache.mark_clean(c);
+        }
+        Ok(n)
+    }
+
+    /// Dirty (not-yet-persisted) cache entries.
+    pub fn dirty_count(&self) -> usize {
+        self.cache.dirty_ids().len()
     }
 
     /// Typed convenience: ParamSet state (covers SCAFFOLD c_i / FedDyn h_i).
@@ -151,8 +219,16 @@ impl StateManager {
         }
     }
 
-    /// Bytes currently on disk across all clients (Table-1 disk column).
-    pub fn disk_bytes(&self) -> Result<u64> {
+    /// Bytes currently on disk across all clients (Table-1 disk
+    /// column).  O(1): running total maintained by save/flush/clear —
+    /// `disk_bytes_walk` is the audited slow path.
+    pub fn disk_bytes(&self) -> u64 {
+        self.disk_total
+    }
+
+    /// The old full directory walk; tests assert it always equals the
+    /// cached total for a single-manager directory.
+    pub fn disk_bytes_walk(&self) -> Result<u64> {
         let mut total = 0;
         for e in std::fs::read_dir(&self.dir)? {
             let e = e?;
@@ -164,13 +240,14 @@ impl StateManager {
     }
 
     pub fn cache_resident_bytes(&self) -> usize {
-        self.cache_bytes
+        self.cache.resident_bytes()
     }
 
-    /// Wipe everything (between experiments): disk, cache, *and* the
-    /// traffic counters + LRU clock — a reused manager must start the
-    /// next experiment with a clean slate, or the Table-1 harnesses
-    /// report the previous run's traffic in the next run's columns.
+    /// Wipe everything (between experiments): disk, cache, the running
+    /// disk total, *and* the traffic counters + LRU clock — a reused
+    /// manager must start the next experiment with a clean slate, or
+    /// the Table-1 harnesses report the previous run's traffic in the
+    /// next run's columns.
     pub fn clear(&mut self) -> Result<()> {
         for e in std::fs::read_dir(&self.dir)? {
             let p = e?.path();
@@ -183,8 +260,8 @@ impl StateManager {
             }
         }
         self.cache.clear();
-        self.cache_bytes = 0;
-        self.tick = 0;
+        self.on_disk.clear();
+        self.disk_total = 0;
         self.metrics = StateMetrics::default();
         Ok(())
     }
@@ -229,6 +306,8 @@ mod tests {
         let mut sm2 = StateManager::new(&dir, 1 << 20).unwrap();
         assert_eq!(sm2.load(1).unwrap().unwrap(), b"persisted");
         assert_eq!(sm2.metrics.disk_reads, 1);
+        // The constructor's walk primed the running total too.
+        assert_eq!(sm2.disk_bytes(), 9);
     }
 
     #[test]
@@ -275,9 +354,40 @@ mod tests {
         sm.clear().unwrap();
         sm.save(1, &[0u8; 100]).unwrap();
         sm.save(2, &[0u8; 250]).unwrap();
-        assert_eq!(sm.disk_bytes().unwrap(), 350);
+        assert_eq!(sm.disk_bytes(), 350);
         sm.save(1, &[0u8; 50]).unwrap(); // overwrite shrinks
-        assert_eq!(sm.disk_bytes().unwrap(), 300);
+        assert_eq!(sm.disk_bytes(), 300);
+    }
+
+    #[test]
+    fn cached_disk_total_always_equals_fresh_walk() {
+        // Regression (satellite): disk_bytes used to walk the directory
+        // on every call; the O(1) running total must stay in lock-step
+        // with the filesystem through saves, overwrites (grow and
+        // shrink), write-back flushes, and clear().
+        let mut sm = StateManager::new(tmp_dir("disk_cached"), 200).unwrap();
+        let check = |sm: &StateManager| {
+            assert_eq!(sm.disk_bytes(), sm.disk_bytes_walk().unwrap());
+        };
+        check(&sm);
+        sm.save(1, &[0u8; 100]).unwrap();
+        sm.save(2, &[0u8; 60]).unwrap();
+        check(&sm);
+        sm.save(1, &[0u8; 10]).unwrap(); // shrink
+        sm.save(2, &[0u8; 150]).unwrap(); // grow
+        check(&sm);
+        let mut wb = StateManager::new(tmp_dir("disk_cached_wb"), 500)
+            .unwrap()
+            .with_write_back(true);
+        wb.save(1, &[0u8; 100]).unwrap();
+        assert_eq!(wb.disk_bytes(), 0, "write-back defers");
+        assert_eq!(wb.disk_bytes(), wb.disk_bytes_walk().unwrap());
+        wb.flush().unwrap();
+        assert_eq!(wb.disk_bytes(), 100);
+        assert_eq!(wb.disk_bytes(), wb.disk_bytes_walk().unwrap());
+        wb.clear().unwrap();
+        assert_eq!(wb.disk_bytes(), 0);
+        assert_eq!(wb.disk_bytes(), wb.disk_bytes_walk().unwrap());
     }
 
     #[test]
@@ -347,11 +457,74 @@ mod tests {
     }
 
     #[test]
+    fn write_back_defers_and_coalesces_disk_writes() {
+        // Regression (satellite): save() used to write through
+        // unconditionally — a client re-trained while cache-resident
+        // paid a disk write per save.  Write-back coalesces them into
+        // one write at the explicit flush.
+        let mut sm = StateManager::new(tmp_dir("wb"), 1 << 16)
+            .unwrap()
+            .with_write_back(true);
+        sm.save(1, &[1u8; 64]).unwrap();
+        sm.save(1, &[2u8; 64]).unwrap();
+        sm.save(1, &[3u8; 64]).unwrap();
+        assert_eq!(sm.metrics.disk_writes, 0, "no write until flush");
+        assert_eq!(sm.metrics.avoided_writes, 2, "two saves coalesced");
+        assert_eq!(sm.dirty_count(), 1);
+        // Reads see the newest (dirty) data, not stale disk.
+        assert_eq!(sm.load(1).unwrap().unwrap(), vec![3u8; 64]);
+        assert_eq!(sm.flush().unwrap(), 1);
+        assert_eq!(sm.metrics.disk_writes, 1);
+        assert_eq!(sm.metrics.bytes_written, 64);
+        assert_eq!(sm.dirty_count(), 0);
+        assert_eq!(sm.disk_bytes(), 64);
+        // Second flush is a no-op.
+        assert_eq!(sm.flush().unwrap(), 0);
+        assert_eq!(sm.metrics.disk_writes, 1);
+    }
+
+    #[test]
+    fn write_back_spills_dirty_evictions() {
+        let mut sm = StateManager::new(tmp_dir("wb_spill"), 100)
+            .unwrap()
+            .with_write_back(true);
+        sm.save(1, &[1u8; 60]).unwrap();
+        sm.save(2, &[2u8; 60]).unwrap(); // evicts dirty client 1 -> spill
+        assert_eq!(sm.metrics.disk_writes, 1, "dirty eviction must hit disk");
+        // Cold read of the spilled client returns the spilled data.
+        assert_eq!(sm.load(1).unwrap().unwrap(), vec![1u8; 60]);
+        assert_eq!(sm.metrics.disk_reads, 1);
+    }
+
+    #[test]
+    fn write_back_durability_survives_a_cold_restart_after_flush() {
+        let dir = tmp_dir("wb_cold");
+        {
+            let mut sm = StateManager::new(&dir, 1 << 16).unwrap().with_write_back(true);
+            sm.save(4, b"newest").unwrap();
+            sm.flush().unwrap();
+        }
+        let mut sm2 = StateManager::new(&dir, 1 << 16).unwrap();
+        assert_eq!(sm2.load(4).unwrap().unwrap(), b"newest");
+    }
+
+    #[test]
+    fn write_back_oversized_values_still_persist_immediately() {
+        let mut sm = StateManager::new(tmp_dir("wb_big"), 10)
+            .unwrap()
+            .with_write_back(true);
+        sm.save(9, &[7u8; 100]).unwrap();
+        assert_eq!(sm.metrics.disk_writes, 1, "non-resident saves write through");
+        assert_eq!(sm.load(9).unwrap().unwrap(), vec![7u8; 100]);
+    }
+
+    #[test]
     fn clear_removes_files_and_cache() {
         let mut sm = StateManager::new(tmp_dir("clear"), 1 << 20).unwrap();
         sm.save(1, b"a").unwrap();
         sm.clear().unwrap();
-        assert_eq!(sm.disk_bytes().unwrap(), 0);
+        assert_eq!(sm.disk_bytes(), 0);
+        assert_eq!(sm.disk_bytes_walk().unwrap(), 0);
         assert!(sm.load(1).unwrap().is_none());
     }
 
@@ -375,6 +548,7 @@ mod tests {
             (0, 0, 0, 0, 0)
         );
         assert_eq!((m.bytes_written, m.bytes_read, m.peak_cache_bytes), (0, 0, 0));
+        assert_eq!(m.avoided_writes, 0);
 
         // The next experiment's counters start from zero and the LRU
         // clock restarts without resurrecting stale recency.

@@ -1,0 +1,320 @@
+//! Ordered write-back LRU — the cache tier shared by the real
+//! [`StateManager`](crate::state::StateManager) and the virtual
+//! [`SimStore`](super::simstore::SimStore).
+//!
+//! Two structural properties matter here:
+//!
+//! - **O(log n) eviction.** The old `StateManager` scanned the whole
+//!   cache with `min_by_key` for every evicted entry, turning a rotate
+//!   over a large resident set into an O(n²) eviction storm
+//!   (`benches/bench_state.rs` pins the fix at 10k clients).  Recency
+//!   lives in a `BTreeMap<tick, client>` side index kept in lock-step
+//!   with the entry map, so the LRU victim is a `first_key_value` pop.
+//! - **Dirty bits.** Entries remember whether they hold data newer than
+//!   the tier below; eviction surfaces displaced dirty entries to the
+//!   caller (who must spill them) instead of silently dropping them —
+//!   the write-back contract that makes deferred flushing safe.
+//!
+//! The cache never does I/O itself: values are opaque [`CacheCost`]
+//! payloads, so the same policy runs over real byte blobs (disk tier
+//! behind it) and over size-only accounting blobs (virtual tier).
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Anything the cache can budget: real bytes, or a size-only stand-in.
+pub trait CacheCost {
+    fn cost(&self) -> usize;
+}
+
+impl CacheCost for Vec<u8> {
+    fn cost(&self) -> usize {
+        self.len()
+    }
+}
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    tick: u64,
+    dirty: bool,
+}
+
+/// An entry displaced by [`WriteBackCache::insert`]; the caller must
+/// persist it when `dirty` (its data is newer than the tier below).
+#[derive(Debug)]
+pub struct Evicted<V> {
+    pub client: u64,
+    pub value: V,
+    pub dirty: bool,
+}
+
+/// Budget-bounded LRU with dirty-bit write-back (see module docs).
+#[derive(Debug)]
+pub struct WriteBackCache<V: CacheCost> {
+    budget: usize,
+    entries: HashMap<u64, Entry<V>>,
+    /// Recency index: tick → client. Ticks are unique (monotone clock),
+    /// so the least-recently-used entry is always `first_key_value`.
+    order: BTreeMap<u64, u64>,
+    resident: usize,
+    peak: usize,
+    tick: u64,
+}
+
+impl<V: CacheCost> WriteBackCache<V> {
+    /// `budget` caps resident bytes; 0 disables caching entirely.
+    pub fn new(budget: usize) -> WriteBackCache<V> {
+        WriteBackCache {
+            budget,
+            entries: HashMap::new(),
+            order: BTreeMap::new(),
+            resident: 0,
+            peak: 0,
+            tick: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn contains(&self, client: u64) -> bool {
+        self.entries.contains_key(&client)
+    }
+
+    pub fn is_dirty(&self, client: u64) -> bool {
+        self.entries.get(&client).map(|e| e.dirty).unwrap_or(false)
+    }
+
+    /// Recency-refreshing lookup.
+    pub fn get(&mut self, client: u64) -> Option<&V> {
+        if !self.entries.contains_key(&client) {
+            return None;
+        }
+        self.tick += 1;
+        let t = self.tick;
+        let e = self.entries.get_mut(&client).expect("checked above");
+        let old = e.tick;
+        e.tick = t;
+        self.order.remove(&old);
+        self.order.insert(t, client);
+        self.entries.get(&client).map(|e| &e.value)
+    }
+
+    /// Non-touching lookup (flush paths must not perturb recency).
+    pub fn peek(&self, client: u64) -> Option<&V> {
+        self.entries.get(&client).map(|e| &e.value)
+    }
+
+    /// Insert `value`, evicting LRU entries until it fits.  Returns
+    /// `(resident, evicted)`: `resident` is false when the value can
+    /// never fit (zero budget or oversized) — the caller must persist
+    /// it itself — and `evicted` lists every displaced entry (spill the
+    /// dirty ones).  A same-key previous copy is released first and is
+    /// NOT reported: the new value supersedes it.
+    pub fn insert(&mut self, client: u64, value: V, dirty: bool) -> (bool, Vec<Evicted<V>>) {
+        let sz = value.cost();
+        if let Some(old) = self.entries.remove(&client) {
+            self.order.remove(&old.tick);
+            self.resident -= old.value.cost();
+        }
+        if self.budget == 0 || sz > self.budget {
+            return (false, Vec::new());
+        }
+        let mut evicted = Vec::new();
+        while self.resident + sz > self.budget {
+            let victim = match self.order.iter().next() {
+                Some((&t, &c)) => (t, c),
+                None => break,
+            };
+            self.order.remove(&victim.0);
+            let e = self.entries.remove(&victim.1).expect("order/entries in sync");
+            self.resident -= e.value.cost();
+            evicted.push(Evicted { client: victim.1, value: e.value, dirty: e.dirty });
+        }
+        self.tick += 1;
+        let t = self.tick;
+        self.resident += sz;
+        self.peak = self.peak.max(self.resident);
+        self.order.insert(t, client);
+        self.entries.insert(client, Entry { value, tick: t, dirty });
+        (true, evicted)
+    }
+
+    /// Remove one entry; returns `(value, dirty)`.
+    pub fn remove(&mut self, client: u64) -> Option<(V, bool)> {
+        let e = self.entries.remove(&client)?;
+        self.order.remove(&e.tick);
+        self.resident -= e.value.cost();
+        Some((e.value, e.dirty))
+    }
+
+    pub fn mark_clean(&mut self, client: u64) {
+        if let Some(e) = self.entries.get_mut(&client) {
+            e.dirty = false;
+        }
+    }
+
+    /// Dirty entry ids in ascending client order (deterministic flush).
+    pub fn dirty_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.entries.iter().filter(|(_, e)| e.dirty).map(|(&c, _)| c).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Iterate resident entries (no recency effect, arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &V)> {
+        self.entries.iter().map(|(&c, e)| (c, &e.value))
+    }
+
+    /// Take everything out (shard handoff): `(client, value, dirty)`.
+    pub fn drain(&mut self) -> Vec<(u64, V, bool)> {
+        self.order.clear();
+        self.resident = 0;
+        self.entries.drain().map(|(c, e)| (c, e.value, e.dirty)).collect()
+    }
+
+    /// Reset contents, recency clock, and the peak watermark.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+        self.resident = 0;
+        self.peak = 0;
+        self.tick = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize, fill: u8) -> Vec<u8> {
+        vec![fill; n]
+    }
+
+    #[test]
+    fn evicts_in_recency_order() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(100);
+        c.insert(1, blob(40, 1), false);
+        c.insert(2, blob(40, 2), false);
+        c.get(1); // refresh 1 → 2 is now LRU
+        let (res, ev) = c.insert(3, blob(40, 3), false);
+        assert!(res);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].client, 2);
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+        assert_eq!(c.resident_bytes(), 80);
+    }
+
+    #[test]
+    fn dirty_entries_surface_on_eviction() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(100);
+        c.insert(1, blob(60, 1), true);
+        let (_, ev) = c.insert(2, blob(60, 2), false);
+        assert_eq!(ev.len(), 1);
+        assert!(ev[0].dirty, "dirty eviction must be reported for spilling");
+        assert_eq!(ev[0].value, blob(60, 1));
+    }
+
+    #[test]
+    fn oversized_and_zero_budget_bypass_without_churn() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(100);
+        c.insert(1, blob(40, 1), false);
+        c.insert(2, blob(40, 2), false);
+        let (res, ev) = c.insert(3, blob(500, 3), true);
+        assert!(!res, "oversized value must not become resident");
+        assert!(ev.is_empty(), "oversized insert must not evict residents");
+        assert_eq!(c.resident_bytes(), 80);
+        let mut z: WriteBackCache<Vec<u8>> = WriteBackCache::new(0);
+        let (res, ev) = z.insert(1, blob(1, 0), false);
+        assert!(!res && ev.is_empty());
+        assert_eq!(z.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn same_key_reinsert_releases_old_copy_first() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(100);
+        c.insert(1, blob(30, 1), false);
+        c.insert(2, blob(40, 2), true);
+        // Growing 2 to 50 fits once its own 40 bytes are released.
+        let (res, ev) = c.insert(2, blob(50, 9), true);
+        assert!(res && ev.is_empty(), "no innocent eviction: {ev:?}");
+        assert_eq!(c.resident_bytes(), 80);
+        assert_eq!(c.peak_bytes(), 80, "no transient double-count");
+        // Growing past the whole budget: stale copy must not linger.
+        let (res, _) = c.insert(2, blob(500, 7), true);
+        assert!(!res);
+        assert_eq!(c.resident_bytes(), 30);
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn dirty_bookkeeping_and_flush_protocol() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(1000);
+        c.insert(3, blob(10, 3), true);
+        c.insert(1, blob(10, 1), true);
+        c.insert(2, blob(10, 2), false);
+        assert!(c.is_dirty(1) && !c.is_dirty(2));
+        assert_eq!(c.dirty_ids(), vec![1, 3]);
+        for id in c.dirty_ids() {
+            assert!(c.peek(id).is_some());
+            c.mark_clean(id);
+        }
+        assert!(c.dirty_ids().is_empty());
+        // peek must not perturb recency: 3 was peeked last but is still LRU
+        let (_, ev) = c.insert(4, blob(990, 4), false);
+        assert_eq!(ev[0].client, 3, "{ev:?}");
+    }
+
+    #[test]
+    fn drain_and_clear() {
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(100);
+        c.insert(1, blob(10, 1), true);
+        c.insert(2, blob(10, 2), false);
+        let mut d = c.drain();
+        d.sort_by_key(|e| e.0);
+        assert_eq!(d.len(), 2);
+        assert!(d[0].2 && !d[1].2);
+        assert!(c.is_empty() && c.resident_bytes() == 0);
+        c.insert(5, blob(10, 5), false);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn order_index_stays_in_sync_under_churn() {
+        // Rotate far more keys than fit; the order index must shrink
+        // with the entry map (a desync would panic the in-sync expect).
+        let mut c: WriteBackCache<Vec<u8>> = WriteBackCache::new(10 * 8);
+        for i in 0..1000u64 {
+            c.insert(i % 37, blob(8, i as u8), i % 3 == 0);
+            if i % 5 == 0 {
+                c.get(i % 37);
+            }
+            if i % 11 == 0 {
+                c.remove((i + 3) % 37);
+            }
+            assert!(c.len() <= 10);
+            assert_eq!(c.len(), c.iter().count());
+            assert!(c.resident_bytes() <= 80);
+        }
+    }
+}

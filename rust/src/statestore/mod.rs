@@ -1,0 +1,72 @@
+//! Distributed client-state store (paper §3.4 scaled out): sharded
+//! ownership, write-back tiering, and plan-driven prefetch.
+//!
+//! The seed system's [`StateManager`](crate::state::StateManager) is a
+//! single-worker write-through LRU + disk store; at 1000+ stateful
+//! clients (SCAFFOLD control variates, FedDyn h-terms) across many
+//! workers, *state movement* — not compute — bounds the simulation.
+//! This subsystem promotes client state to a first-class, placement-
+//! aware layer:
+//!
+//! - [`shard::ShardMap`] — consistent-hash ownership: each worker owns
+//!   a shard of client ids; adding/removing one shard remaps only that
+//!   shard's clients (property-tested), so device churn hands off
+//!   ≈ M/n states instead of rehashing the world.
+//! - [`lru::WriteBackCache`] — the dirty-bit LRU shared by the real
+//!   and virtual stores: O(log n) eviction, displaced dirty entries
+//!   surfaced for spilling, explicit flush at consistency points.
+//! - [`simstore::SimStore`] — the virtual three-tier store (cache →
+//!   disk → remote owner) that the discrete-event engine prices via
+//!   [`StateLeg`]s/[`StatePlan`]s: per-task `StateLoad` legs (prefetch-
+//!   pipelined in task order, because Parrot plans rounds up front) and
+//!   a round-tail `StateFlush` leg.
+//!
+//! On the real-compute path the same ownership ring drives the
+//! coordinator protocol (`StateFetch`/`StatePut`/`ShardTransfer`
+//! messages): the server prefetches non-owned states to executors ahead
+//! of each `Round`, and executors return updated state to owners at
+//! round end (write-back).  The scheduler closes the loop with a
+//! state-affinity term
+//! ([`SchedulerKind::StateAffinity`](crate::config::SchedulerKind))
+//! that prefers placing a client's task on the worker owning its state.
+
+pub mod lru;
+pub mod shard;
+pub mod simstore;
+
+pub use lru::{CacheCost, Evicted, WriteBackCache};
+pub use shard::ShardMap;
+pub use simstore::{Blob, SimStore, SimStoreCfg, StoreMetrics};
+
+/// One task's state-movement leg, priced by the engine at `TaskStart`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StateLeg {
+    /// Bytes of state movement attributable to this task: fetch legs,
+    /// write-back return legs, and eviction spills.
+    pub bytes: u64,
+    /// Load stall seconds when NOT prefetched (serialized before the
+    /// task's compute).
+    pub secs: f64,
+    /// Virtual time at which the prefetch pipeline has this state ready
+    /// (per-worker channel issuing loads in task order from round
+    /// start); with prefetch on, the task stalls `max(0, ready - now)`.
+    pub ready: f64,
+}
+
+/// A round's state traffic, index-aligned with the engine's task
+/// vector; the tail is the round-boundary `StateFlush` leg (dirty
+/// write-back plus remote write-back returns).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatePlan {
+    /// Per-task legs; empty = no state store attached.
+    pub legs: Vec<StateLeg>,
+    pub prefetch: bool,
+    pub tail_bytes: u64,
+    pub tail_secs: f64,
+}
+
+impl StatePlan {
+    pub fn is_empty(&self) -> bool {
+        self.legs.is_empty() && self.tail_bytes == 0 && self.tail_secs == 0.0
+    }
+}

@@ -1,0 +1,211 @@
+//! Consistent-hash shard ownership for client state.
+//!
+//! Each shard contributes `vnodes` points on a 2⁶⁴ hash ring; a client
+//! is owned by the shard whose point is the ring successor of the
+//! client's hash.  The property that matters for churn (and that the
+//! property suite pins): adding or removing ONE shard only remaps the
+//! clients adjacent to that shard's points — everyone else keeps their
+//! owner, so a device departure moves ≈ M/n states instead of
+//! rehashing the world (the Pollen/FLUTE placement-stability argument).
+//!
+//! Determinism: the ring is a pure function of the shard id set and
+//! the vnode count — every participant (server, workers, the virtual
+//! store, the scheduler's affinity term) reconstructs the identical
+//! ring from the run config, so ownership never crosses the wire.
+
+use std::collections::BTreeSet;
+
+/// splitmix64 finalizer — deterministic, dependency-free 64-bit mixing.
+fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+const CLIENT_SALT: u64 = 0xC11E_17D5_7A7E_5EED;
+const POINT_SALT: u64 = 0x5EED_0F5A_11D0_1E75;
+
+/// The ring (see module docs).
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    /// Sorted `(point, shard)` pairs.
+    ring: Vec<(u64, u32)>,
+    shards: BTreeSet<u32>,
+    vnodes: usize,
+}
+
+impl ShardMap {
+    /// Points per shard: enough that shard loads concentrate within a
+    /// few percent of M/n without making rebuilds noticeable.
+    pub const DEFAULT_VNODES: usize = 128;
+
+    /// Ring over shards `0..n`.
+    pub fn new(n_shards: usize) -> ShardMap {
+        ShardMap::with_vnodes(n_shards, ShardMap::DEFAULT_VNODES)
+    }
+
+    pub fn with_vnodes(n_shards: usize, vnodes: usize) -> ShardMap {
+        let mut map = ShardMap {
+            ring: Vec::new(),
+            shards: (0..n_shards as u32).collect(),
+            vnodes: vnodes.max(1),
+        };
+        map.rebuild();
+        map
+    }
+
+    fn rebuild(&mut self) {
+        self.ring.clear();
+        self.ring.reserve(self.shards.len() * self.vnodes);
+        for &s in &self.shards {
+            let base = hash64(s as u64 ^ POINT_SALT);
+            for r in 0..self.vnodes {
+                self.ring.push((hash64(base.wrapping_add(r as u64)), s));
+            }
+        }
+        self.ring.sort_unstable();
+        // 64-bit point collisions are ~impossible at this scale; dedup
+        // keeps the lower shard id deterministically if one ever lands.
+        self.ring.dedup_by_key(|e| e.0);
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_ids(&self) -> Vec<u32> {
+        self.shards.iter().copied().collect()
+    }
+
+    pub fn contains_shard(&self, shard: u32) -> bool {
+        self.shards.contains(&shard)
+    }
+
+    /// Add a shard; false when it already exists.
+    pub fn add_shard(&mut self, shard: u32) -> bool {
+        if !self.shards.insert(shard) {
+            return false;
+        }
+        self.rebuild();
+        true
+    }
+
+    /// Remove a shard; false when absent — or when it is the LAST
+    /// shard (state must always have somewhere to live).
+    pub fn remove_shard(&mut self, shard: u32) -> bool {
+        if self.shards.len() <= 1 || !self.shards.remove(&shard) {
+            return false;
+        }
+        self.rebuild();
+        true
+    }
+
+    /// The owning shard of `client` (ring successor of its hash).
+    pub fn owner(&self, client: u64) -> u32 {
+        assert!(!self.ring.is_empty(), "ShardMap with no shards");
+        let h = hash64(client ^ CLIENT_SALT);
+        let i = match self.ring.binary_search_by(|e| e.0.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == self.ring.len() {
+                    0
+                } else {
+                    i
+                }
+            }
+        };
+        self.ring[i].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_total() {
+        let a = ShardMap::new(4);
+        let b = ShardMap::new(4);
+        for c in 0..500u64 {
+            let o = a.owner(c);
+            assert_eq!(o, b.owner(c), "same config must give same owners");
+            assert!(o < 4);
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let m = ShardMap::new(1);
+        for c in 0..100u64 {
+            assert_eq!(m.owner(c), 0);
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let m = ShardMap::new(8);
+        let mut counts = [0usize; 8];
+        let total = 8000u64;
+        for c in 0..total {
+            counts[m.owner(c) as usize] += 1;
+        }
+        let expect = total as usize / 8;
+        for (s, &n) in counts.iter().enumerate() {
+            assert!(
+                n > expect / 2 && n < expect * 2,
+                "shard {s} owns {n}, expected ≈{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn removal_only_remaps_the_removed_shards_clients() {
+        let before = ShardMap::new(5);
+        let mut after = before.clone();
+        assert!(after.remove_shard(2));
+        for c in 0..2000u64 {
+            let (o0, o1) = (before.owner(c), after.owner(c));
+            if o0 != 2 {
+                assert_eq!(o0, o1, "client {c} moved without owning-shard change");
+            } else {
+                assert_ne!(o1, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn addition_only_pulls_clients_to_the_new_shard() {
+        let before = ShardMap::new(4);
+        let mut after = before.clone();
+        assert!(after.add_shard(4));
+        for c in 0..2000u64 {
+            let (o0, o1) = (before.owner(c), after.owner(c));
+            if o0 != o1 {
+                assert_eq!(o1, 4, "client {c} remapped to an old shard");
+            }
+        }
+    }
+
+    #[test]
+    fn last_shard_cannot_be_removed() {
+        let mut m = ShardMap::new(2);
+        assert!(m.remove_shard(0));
+        assert!(!m.remove_shard(1), "the last shard must stay");
+        assert_eq!(m.n_shards(), 1);
+        assert!(!m.remove_shard(7), "absent shard");
+        assert!(m.add_shard(0));
+        assert!(!m.add_shard(0), "duplicate add");
+    }
+
+    #[test]
+    fn remove_then_readd_restores_ownership() {
+        let orig = ShardMap::new(6);
+        let mut m = orig.clone();
+        m.remove_shard(3);
+        m.add_shard(3);
+        for c in 0..1000u64 {
+            assert_eq!(orig.owner(c), m.owner(c));
+        }
+    }
+}

@@ -95,6 +95,32 @@ fn sample_msgs(g: &mut Gen) -> Vec<Msg> {
             codec: gen_codec(g),
         },
         Msg::Idle { device: g.int(0, 8) },
+        Msg::StateFetch {
+            round: g.int(0, 50),
+            clients: (0..g.int(0, 12)).map(|_| g.int(0, 5000) as u64).collect(),
+        },
+        Msg::StatePut {
+            round: g.int(0, 50),
+            states: (0..g.int(0, 6))
+                .map(|_| {
+                    let c = g.int(0, 5000) as u64;
+                    if g.bool() {
+                        (c, Some((0..g.int(0, 300)).map(|_| g.int(0, 255) as u8).collect()))
+                    } else {
+                        (c, None)
+                    }
+                })
+                .collect(),
+        },
+        Msg::ShardTransfer {
+            from_shard: g.int(0, 64) as u32,
+            states: (0..g.int(0, 6))
+                .map(|_| {
+                    let c = g.int(0, 5000) as u64;
+                    (c, (0..g.int(0, 300)).map(|_| g.int(0, 255) as u8).collect())
+                })
+                .collect(),
+        },
     ]
 }
 
@@ -195,6 +221,23 @@ fn hostile_length_prefixes_error_before_allocating() {
     enc.put_u8(0); // codec none
     enc.put_bytes(&agg_bytes);
     enc.put_u32(u32::MAX); // record count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // State-store frames: huge client/state counts and a huge blob
+    // length prefix must all fail the bounds check pre-allocation.
+    for tag in [7u8, 8, 9] {
+        let mut enc = Encoder::new();
+        enc.put_u8(tag);
+        enc.put_u32(0); // round / from_shard
+        enc.put_u32(u32::MAX); // entry count
+        assert!(Msg::decode(&enc.finish()).is_err(), "tag {tag}");
+    }
+    let mut enc = Encoder::new();
+    enc.put_u8(9); // ShardTransfer
+    enc.put_u32(0);
+    enc.put_u32(1);
+    enc.put_u64(1);
+    enc.put_u32(u32::MAX); // blob length, no payload
     assert!(Msg::decode(&enc.finish()).is_err());
 
     // TopK tensor with an absurd dense length

@@ -112,6 +112,64 @@ fn stateful_algorithms_persist_state() {
 }
 
 #[test]
+fn sharded_state_store_matches_local_and_spreads_state() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Same run twice: legacy local state vs the sharded store with
+    // plan-driven prefetch + write-back returns.  SCAFFOLD's numerics
+    // must be identical (state content is exact either way), the
+    // sharded run must move state through the coordinator, and every
+    // state file must land in its owner's shard directory.
+    let mk = |tag: u64, shards: usize| {
+        let mut cfg = base_cfg(tag);
+        cfg.algorithm = "scaffold".into();
+        cfg.rounds = 4;
+        cfg.clients_per_round = 12;
+        cfg.state_shards = shards;
+        cfg.state_writeback = shards > 0;
+        cfg
+    };
+    let local = run_simulation(mk(70, 0)).unwrap();
+    let sharded_cfg = mk(70, 2);
+    let state_dir = sharded_cfg.state_dir.clone();
+    let seed = sharded_cfg.seed;
+    let sharded = run_simulation(sharded_cfg).unwrap();
+    // Scheduling history is wallclock-fed, so placement (and thus the
+    // float summation order) may differ run to run; exact math is
+    // permutation-invariant, allow the usual small slack.
+    let d = local.final_params.max_abs_diff(&sharded.final_params);
+    assert!(d < 1e-4, "sharded state store changed the numerics: {d}");
+    assert!(
+        sharded.metrics.total_state_bytes() > 0,
+        "off-owner clients must move state through the coordinator"
+    );
+    assert_eq!(local.metrics.total_state_bytes(), 0);
+    // Ownership on disk: every state file sits in its owner's shard.
+    let map = parrot::statestore::ShardMap::new(2);
+    let run_dir = Path::new(&state_dir).join(format!("run_{seed}"));
+    let mut found = 0usize;
+    for w in 0..2usize {
+        let dir = run_dir.join(format!("shard_{w}"));
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let name = e.unwrap().file_name().to_string_lossy().into_owned();
+            if let Some(id) =
+                name.strip_prefix("client_").and_then(|s| s.strip_suffix(".state"))
+            {
+                let c: u64 = id.parse().unwrap();
+                assert_eq!(
+                    map.owner(c) as usize,
+                    w,
+                    "client {c}'s state landed off-owner in shard_{w}"
+                );
+                found += 1;
+            }
+        }
+    }
+    assert_eq!(found, 12, "every trained client must have owner-resident state");
+}
+
+#[test]
 fn fa_mode_matches_parrot_semantics_but_more_trips() {
     if !artifacts_ready() {
         return;

@@ -1,0 +1,200 @@
+//! Property suite for the distributed client-state store: consistent-
+//! hash ownership stability, and loss-free shard handoff under churn
+//! (differential against a single-shard store on identical sequences).
+//! Replay any failure with `PARROT_PROP_SEED=<u64>` (scripts/ci.sh adds
+//! a random-seed pass).
+
+use parrot::statestore::{ShardMap, SimStore, SimStoreCfg};
+use parrot::util::prop::{check, Gen};
+
+/// Adding or removing ONE shard remaps only the clients adjacent to
+/// that shard's ring points: strictly no third-party movement, and the
+/// moved set stays ≈ M/n (⌈M/n⌉ plus concentration slack — 128 vnodes
+/// put shard loads within a few σ of the mean).
+#[test]
+fn prop_consistent_hash_minimal_remap() {
+    check("consistent-hash minimal remap", 40, |g| {
+        let n = g.int(2, 24);
+        let m = 200 + g.int(0, 1800);
+        let before = ShardMap::new(n);
+        let slack = m.div_ceil(2 * n) + 24;
+        let bound = m.div_ceil(n) + slack;
+
+        // Removal: only the removed shard's clients move.
+        let victim = g.int(0, n - 1) as u32;
+        let mut after = before.clone();
+        if !after.remove_shard(victim) {
+            return Err(format!("shard {victim} of {n} must be removable"));
+        }
+        let mut moved = 0usize;
+        for c in 0..m as u64 {
+            let (o0, o1) = (before.owner(c), after.owner(c));
+            if o0 == victim {
+                moved += 1;
+                if o1 == victim {
+                    return Err(format!("client {c} still mapped to removed shard"));
+                }
+            } else if o0 != o1 {
+                return Err(format!(
+                    "client {c} moved {o0}→{o1} though shard {victim} was removed"
+                ));
+            }
+        }
+        if moved > bound {
+            return Err(format!(
+                "removal remapped {moved} of {m} clients, bound ⌈M/n⌉+slack = {bound} (n={n})"
+            ));
+        }
+
+        // Addition: every moved client moves TO the new shard.
+        let newbie = n as u32;
+        let mut grown = before.clone();
+        if !grown.add_shard(newbie) {
+            return Err("fresh shard id must be addable".into());
+        }
+        let add_bound = m.div_ceil(n + 1) + slack;
+        let mut pulled = 0usize;
+        for c in 0..m as u64 {
+            let (o0, o1) = (before.owner(c), grown.owner(c));
+            if o0 != o1 {
+                pulled += 1;
+                if o1 != newbie {
+                    return Err(format!("client {c} remapped {o0}→{o1}, not to the new shard"));
+                }
+            }
+        }
+        if pulled > add_bound {
+            return Err(format!(
+                "addition remapped {pulled} of {m} clients, bound {add_bound} (n={n})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Drive a sharded store and a single-shard reference store through the
+/// SAME training sequence, with random device departures/rejoins (and
+/// their shard handoffs) hitting only the sharded one: after every
+/// round both must agree on exactly which clients have state and at
+/// which version — a handoff that loses or regresses a state breaks
+/// the differential immediately.
+#[test]
+fn prop_shard_handoff_loses_no_state() {
+    check("shard handoff differential", 25, |g| {
+        let k = g.int(2, 6);
+        let m = 30 + g.int(0, 90);
+        let s_d = 512u64;
+        let budget = (1 + g.int(0, 6)) * s_d as usize; // tight → evictions + spills
+        let mut sharded = SimStore::new(SimStoreCfg::new(k, k, s_d, budget).write_back(true));
+        // Reference: one shard on one worker, same budget per worker.
+        let mut single = SimStore::new(SimStoreCfg::new(1, 1, s_d, budget).write_back(true));
+        let mut dead: Vec<usize> = Vec::new();
+        let rounds = 3 + g.int(0, 5);
+        for round in 0..rounds as u64 {
+            // One plan: distinct clients split over the K workers (the
+            // reference runs them all on its only worker, same order).
+            let mut lists: Vec<Vec<u64>> = vec![Vec::new(); k];
+            let mut flat: Vec<u64> = Vec::new();
+            let n_tasks = g.int(1, 3 * k);
+            let mut used = std::collections::BTreeSet::new();
+            for i in 0..n_tasks {
+                let c = g.int(0, m - 1) as u64;
+                if used.insert(c) {
+                    lists[i % k].push(c);
+                    flat.push(c);
+                }
+            }
+            sharded.plan_round(round, &lists);
+            single.plan_round(round, &[flat]);
+
+            // Random churn on the sharded store only.
+            if g.bool() {
+                let w = g.int(0, k - 1);
+                if !dead.contains(&w) {
+                    sharded.handoff(w);
+                    dead.push(w);
+                }
+            }
+            if g.bool() {
+                if let Some(w) = dead.pop() {
+                    sharded.rejoin(w);
+                }
+            }
+
+            // The differential: identical live state, every round.
+            let (a, b) = (sharded.snapshot(), single.snapshot());
+            if a != b {
+                return Err(format!(
+                    "round {round}: sharded live state {:?} != reference {:?} (dead={dead:?})",
+                    a, b
+                ));
+            }
+            // And no copy may be stranded at a worker that lost (or
+            // never had) ownership — handoff/rejoin must relocate
+            // cached state along with the ring.
+            let stranded = sharded.misplaced_cache_entries();
+            if stranded != 0 {
+                return Err(format!(
+                    "round {round}: {stranded} cache entries off-owner (dead={dead:?})"
+                ));
+            }
+        }
+        // Every remote move and every handoff is exactly two network
+        // legs of s_d through the server — the byte counters must be
+        // exact multiples, not approximations.
+        let m1 = sharded.metrics;
+        if m1.remote_bytes % (2 * s_d) != 0 {
+            return Err(format!("remote bytes {} not a 2·s_d multiple", m1.remote_bytes));
+        }
+        if m1.remote_bytes != 2 * s_d * (m1.remote_fetches + m1.remote_returns) {
+            return Err("remote bytes must equal 2·s_d per fetch/return".into());
+        }
+        if m1.shard_transfer_bytes != 2 * s_d * m1.shard_transfers {
+            return Err("transfer bytes must equal 2·s_d per moved state".into());
+        }
+        Ok(())
+    });
+}
+
+/// The prefetch ready-times are a per-worker pipeline: monotone in task
+/// order and exactly the running sum of load stalls.
+#[test]
+fn prop_prefetch_channel_is_cumulative() {
+    check("prefetch channel", 30, |g| {
+        let k = 1 + g.int(0, 3);
+        let m = 20 + g.int(0, 40);
+        let mut store =
+            SimStore::new(SimStoreCfg::new(k, k, 1024, 2 * 1024).write_back(true));
+        for round in 0..3u64 {
+            let mut lists: Vec<Vec<u64>> = vec![Vec::new(); k];
+            for i in 0..g.int(0, 12) {
+                lists[i % k].push(g.int(0, m - 1) as u64);
+            }
+            // A client must appear at most once per round.
+            for l in &mut lists {
+                l.sort_unstable();
+                l.dedup();
+            }
+            let all: std::collections::BTreeSet<u64> =
+                lists.iter().flatten().copied().collect();
+            if all.len() != lists.iter().map(|l| l.len()).sum::<usize>() {
+                // Cross-worker duplicate drawn: drop the round.
+                continue;
+            }
+            let (legs, _, _) = store.plan_round(round, &lists);
+            for worker in legs {
+                let mut chan = 0.0f64;
+                for leg in worker {
+                    chan += leg.secs;
+                    if (leg.ready - chan).abs() > 1e-9 {
+                        return Err(format!(
+                            "ready {} != cumulative stall {chan}",
+                            leg.ready
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -13,6 +13,10 @@ cd "$(dirname "$0")/.."
 FAST=0
 [ "${1:-}" = "--fast" ] && FAST=1
 
+# Master seed for every randomized pass below (property/fuzz re-runs
+# and the statescale smoke); printed so any failure is replayable.
+SEED="${PARROT_PROP_SEED:-$((RANDOM * 32768 + RANDOM))}"
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
@@ -31,12 +35,28 @@ cargo test -q
 # suites keep exploring new cases run-to-run.  On failure the seed is
 # printed for exact reproduction (the prop harness also prints it in
 # the panic message).
-SEED="${PARROT_PROP_SEED:-$((RANDOM * 32768 + RANDOM))}"
 echo "==> property/fuzz re-run with PARROT_PROP_SEED=$SEED"
-if ! PARROT_PROP_SEED="$SEED" cargo test -q --test prop_coordinator --test fuzz_decode \
+if ! PARROT_PROP_SEED="$SEED" cargo test -q --test prop_coordinator --test prop_statestore \
+    --test fuzz_decode \
   || ! PARROT_PROP_SEED="$SEED" cargo test -q --lib prop_; then
   echo "ci.sh: property/fuzz failure — reproduce with PARROT_PROP_SEED=$SEED" >&2
   exit 1
+fi
+
+# Distributed-state smoke: a small sharded write-back run (50 clients,
+# 2 shards) whose engine-booked state bytes must equal the store's
+# counters, plus the sim-vs-deploy differential (the same access
+# sequence through the virtual SimStore and real StateManagers must
+# agree on every shared counter).
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot exp statescale --smoke (seed $SEED)"
+  SMOKE_RESULTS="$(mktemp -d)"
+  if ! target/release/parrot exp statescale --smoke --shards 2 \
+      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: statescale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+    exit 1
+  fi
+  rm -rf "$SMOKE_RESULTS"
 fi
 
 echo "ci.sh: all green"
