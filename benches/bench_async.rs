@@ -1,0 +1,86 @@
+//! Async-dispatcher benches: the event-loop overhead of the
+//! work-conserving dispatcher itself (claim, heap churn, flush
+//! bookkeeping) at 10k queued tasks — the engine must stay simulation-
+//! bound, not dispatcher-bound, at statescale client counts.
+//! Run: cargo bench --bench bench_async
+
+use parrot::aggregation::StalenessWeight;
+use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::config::SchedulerKind;
+use parrot::scheduler::Scheduler;
+use parrot::simulation::engine::{run_async, AsyncCohort, AsyncComm, AsyncSpec};
+use parrot::simulation::{DynamicsSpec, SimTask};
+use parrot::statestore::StatePlan;
+use parrot::util::bench::{header, Bencher};
+
+/// Drive `n_tasks` through the dispatcher in cohorts of `cohort_size`
+/// on `k` executors; returns the completed-task count (black-boxed by
+/// the bencher).
+fn drive(n_tasks: usize, cohort_size: usize, k: usize, buffer: usize, stal: usize) -> usize {
+    let cluster = ClusterProfile::heterogeneous(k);
+    let cost = WorkloadCost::femnist();
+    let dynamics = DynamicsSpec::default();
+    let mut sched = Scheduler::new(SchedulerKind::Greedy, 1, k);
+    let n_cohorts = n_tasks / cohort_size;
+    let mut source = move |s: &mut Scheduler,
+                           c: usize,
+                           alive: &[bool],
+                           base: &[f64]|
+          -> Option<AsyncCohort> {
+        if c >= n_cohorts {
+            return None;
+        }
+        let clients: Vec<(usize, usize)> =
+            (0..cohort_size).map(|i| (i, 50 + (i * 13) % 300)).collect();
+        let schedule = s.schedule_from(c, &clients, alive, base);
+        let mut tasks = Vec::with_capacity(cohort_size);
+        let mut assigned = vec![Vec::new(); alive.len()];
+        for (dev, cls) in schedule.assignment.iter().enumerate() {
+            for &cl in cls {
+                assigned[dev].push(tasks.len());
+                tasks.push(SimTask::new(cl, 50 + (cl * 13) % 300, 1.0));
+            }
+        }
+        Some(AsyncCohort {
+            tasks,
+            assigned,
+            state: StatePlan::default(),
+            sched_secs: 0.0,
+            unavailable: 0,
+        })
+    };
+    let out = run_async(
+        k,
+        &cluster,
+        &cost,
+        &dynamics,
+        7,
+        AsyncSpec { buffer, max_staleness: stal, weight: StalenessWeight::Poly(0.5) },
+        AsyncComm { s_a_down: 44_000_000, s_a_up: 44_000_000, s_e: 0 },
+        &mut sched,
+        &mut source,
+    );
+    out.completed
+}
+
+fn main() {
+    header("async dispatcher");
+    let mut b = Bencher::new("async").with_iters(2, 10);
+
+    // The headline number: 10k tasks through 32 executors.
+    b.bench_throughput("dispatch 10k tasks, K=32, b=100 S=2 (tasks)", 10_000, || {
+        drive(10_000, 200, 32, 100, 2)
+    });
+    // Degenerate (barrier) mode: same stream, flush per cohort.
+    b.bench_throughput("dispatch 10k tasks, K=32, degenerate (tasks)", 10_000, || {
+        drive(10_000, 200, 32, 200, 0)
+    });
+    // Flush-heavy: tiny buffer maximizes ledger/chain churn.
+    b.bench_throughput("dispatch 10k tasks, K=32, b=10 S=4 (tasks)", 10_000, || {
+        drive(10_000, 200, 32, 10, 4)
+    });
+    // Small-cluster sanity point.
+    b.bench_throughput("dispatch 10k tasks, K=4, b=50 S=2 (tasks)", 10_000, || {
+        drive(10_000, 100, 4, 50, 2)
+    });
+}

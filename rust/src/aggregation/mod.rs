@@ -97,6 +97,50 @@ impl Payload {
     }
 }
 
+/// Staleness discount law for asynchronous buffered aggregation
+/// (FedBuff-style): an update applied `s` flushes after the model
+/// version it was computed against is scaled by `weight(s)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalenessWeight {
+    /// Every update counts fully regardless of staleness.
+    Const,
+    /// Polynomial decay `(1 + s)^-a` (FedBuff's default family).
+    Poly(f64),
+}
+
+impl StalenessWeight {
+    pub fn parse(s: &str) -> Result<StalenessWeight> {
+        if s == "const" {
+            return Ok(StalenessWeight::Const);
+        }
+        if let Some(a) = s.strip_prefix("poly:") {
+            let a: f64 = a
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad staleness exponent {a:?}"))?;
+            if !a.is_finite() || a < 0.0 {
+                bail!("staleness exponent must be finite and >= 0, got {a}");
+            }
+            return Ok(StalenessWeight::Poly(a));
+        }
+        bail!("unknown staleness weight {s:?} (const|poly:a)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StalenessWeight::Const => "const".into(),
+            StalenessWeight::Poly(a) => format!("poly:{a}"),
+        }
+    }
+
+    /// Discount factor for an update `staleness` flushes old.
+    pub fn weight(&self, staleness: usize) -> f64 {
+        match self {
+            StalenessWeight::Const => 1.0,
+            StalenessWeight::Poly(a) => (1.0 + staleness as f64).powf(-a),
+        }
+    }
+}
+
 /// What one simulated client returns (C_{m,E-1} in Alg. 1/2).
 #[derive(Debug, Clone)]
 pub struct ClientUpdate {
@@ -104,6 +148,34 @@ pub struct ClientUpdate {
     /// Aggregation weight for WeightedAvg entries (= N_m by convention).
     pub weight: f64,
     pub entries: Vec<(String, AggOp, Payload)>,
+}
+
+impl ClientUpdate {
+    /// The staleness-weighted copy of this update that enters a buffered
+    /// flush: WeightedAvg entries are discounted through the aggregation
+    /// weight, Avg/Sum entries through their payload values (there is no
+    /// weight to discount), and Collect ("Special Params") entries ship
+    /// verbatim — the server reads them raw, so discounting would
+    /// corrupt them.
+    pub fn staleness_scaled(&self, factor: f64) -> ClientUpdate {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(name, op, payload)| {
+                let p = match (*op, payload) {
+                    (AggOp::Collect, p) | (AggOp::WeightedAvg, p) => p.clone(),
+                    (_, Payload::Params(ps)) => {
+                        let mut ps = ps.clone();
+                        ps.scale(factor as f32);
+                        Payload::Params(ps)
+                    }
+                    (_, Payload::Scalar(x)) => Payload::Scalar(*x * factor),
+                };
+                (name.clone(), *op, p)
+            })
+            .collect();
+        ClientUpdate { client: self.client, weight: self.weight * factor, entries }
+    }
 }
 
 /// Per-entry accumulator state inside a device/server aggregator.
@@ -722,5 +794,56 @@ mod tests {
         let agg = GlobalAgg::new().finish();
         assert!(agg.params.is_empty());
         assert_eq!(agg.n_clients, 0);
+    }
+
+    #[test]
+    fn staleness_weight_parse_and_law() {
+        assert_eq!(StalenessWeight::parse("const").unwrap(), StalenessWeight::Const);
+        let p = StalenessWeight::parse("poly:0.5").unwrap();
+        assert!(matches!(p, StalenessWeight::Poly(a) if (a - 0.5).abs() < 1e-12));
+        assert!(StalenessWeight::parse("poly:-1").is_err());
+        assert!(StalenessWeight::parse("exp:2").is_err());
+        // const never discounts; poly decays monotonically from 1.
+        assert_eq!(StalenessWeight::Const.weight(7), 1.0);
+        assert_eq!(p.weight(0), 1.0);
+        assert!((p.weight(3) - 0.5).abs() < 1e-12); // (1+3)^-0.5 = 0.5
+        assert!(p.weight(4) < p.weight(3));
+        // round-trip through name()
+        for s in ["const", "poly:0.5", "poly:2"] {
+            let w = StalenessWeight::parse(s).unwrap();
+            assert_eq!(StalenessWeight::parse(&w.name()).unwrap(), w, "{s}");
+        }
+    }
+
+    #[test]
+    fn staleness_scaled_discounts_per_op() {
+        let shapes = vec![vec![1]];
+        let params = |v: f32| ParamSet { shapes: shapes.clone(), tensors: vec![vec![v]] };
+        let u = ClientUpdate {
+            client: 3,
+            weight: 4.0,
+            entries: vec![
+                ("delta".into(), AggOp::WeightedAvg, Payload::Params(params(2.0))),
+                ("delta_c".into(), AggOp::Avg, Payload::Params(params(2.0))),
+                ("h".into(), AggOp::Sum, Payload::Scalar(2.0)),
+                ("tau".into(), AggOp::Collect, Payload::Scalar(9.0)),
+            ],
+        };
+        let s = u.staleness_scaled(0.5);
+        assert_eq!(s.client, 3);
+        assert!((s.weight - 2.0).abs() < 1e-12, "WeightedAvg discounts the weight");
+        // WeightedAvg payload untouched (the weight carries the discount).
+        assert_eq!(s.entries[0].2, Payload::Params(params(2.0)));
+        // Avg/Sum have no weight: the payload itself shrinks.
+        assert_eq!(s.entries[1].2, Payload::Params(params(1.0)));
+        assert_eq!(s.entries[2].2, Payload::Scalar(1.0));
+        // Collect ships verbatim.
+        assert_eq!(s.entries[3].2, Payload::Scalar(9.0));
+        // factor 1 is the identity on the aggregate result
+        let id = u.staleness_scaled(1.0);
+        let a = flat_aggregate(&[u.clone()]);
+        let b = flat_aggregate(&[id]);
+        assert_eq!(a.params["delta"], b.params["delta"]);
+        assert_eq!(a.scalars["h"], b.scalars["h"]);
     }
 }

@@ -6,6 +6,7 @@
 //! it to the coordinator, so a simulation and a TCP deployment differ
 //! only in the transport field (§3.2 zero-code-change migration).
 
+use crate::aggregation::StalenessWeight;
 use crate::cluster::ClusterProfile;
 use crate::compress::Codec;
 use crate::coordinator::selection::Selection;
@@ -28,6 +29,13 @@ pub enum Scheme {
     FaDist,
     /// Parrot: K devices, scheduled task sets, hierarchical aggregation.
     Parrot,
+    /// Asynchronous buffered execution (FedBuff-style): no round
+    /// barrier — a work-conserving dispatcher keeps every device fed
+    /// and the server applies a staleness-weighted flush whenever
+    /// `--buffer` client updates accumulate.  `--buffer 0` (default)
+    /// means M_p, which with `--max-staleness 0` reproduces the
+    /// synchronous Parrot timeline exactly.
+    Async,
 }
 
 impl Scheme {
@@ -38,7 +46,8 @@ impl Scheme {
             "sd" | "sd_dist" => Scheme::SdDist,
             "fa" | "fa_dist" => Scheme::FaDist,
             "parrot" => Scheme::Parrot,
-            _ => bail!("unknown scheme {s:?} (sp|rw|sd|fa|parrot)"),
+            "async" => Scheme::Async,
+            _ => bail!("unknown scheme {s:?} (sp|rw|sd|fa|parrot|async)"),
         })
     }
 
@@ -49,6 +58,7 @@ impl Scheme {
             Scheme::SdDist => "SD Dist.",
             Scheme::FaDist => "FA Dist.",
             Scheme::Parrot => "Parrot",
+            Scheme::Async => "Async",
         }
     }
 }
@@ -177,6 +187,15 @@ pub struct RunConfig {
     /// Update-compression codec negotiated for every round's uploads
     /// (`--compress none|fp16|qint8|topk:<frac>`).
     pub compress: Codec,
+    /// Async scheme: client updates per buffered flush (`--buffer`;
+    /// 0 = M_p, the sync-degenerate default).
+    pub buffer: usize,
+    /// Async scheme: updates staler than this many flushes are dropped
+    /// (`--max-staleness`).
+    pub max_staleness: usize,
+    /// Async scheme: staleness discount law
+    /// (`--staleness-weight const|poly:a`).
+    pub staleness_weight: StalenessWeight,
 }
 
 impl Default for RunConfig {
@@ -209,6 +228,9 @@ impl Default for RunConfig {
             selection: Selection::Random,
             dynamics: DynamicsSpec::default(),
             compress: Codec::None,
+            buffer: 0,
+            max_staleness: 0,
+            staleness_weight: StalenessWeight::Const,
         }
     }
 }
@@ -316,6 +338,11 @@ impl RunConfig {
         if let Some(c) = a.get("compress") {
             self.compress = Codec::parse(c)?;
         }
+        self.buffer = a.usize_or("buffer", self.buffer)?;
+        self.max_staleness = a.usize_or("max-staleness", self.max_staleness)?;
+        if let Some(w) = a.get("staleness-weight") {
+            self.staleness_weight = StalenessWeight::parse(w)?;
+        }
         self.validate()?;
         Ok(self)
     }
@@ -353,8 +380,43 @@ impl RunConfig {
         }
         if self.state_shards > 0 && self.scheme == Scheme::FaDist {
             bail!(
-                "--state-shards needs a planned scheme (parrot|sp): FA's pull model has \
-                 no round plan to prefetch state against"
+                "--state-shards needs a planned scheme (parrot|sp|async): FA's pull model \
+                 has no round plan to prefetch state against"
+            );
+        }
+        if self.scheme == Scheme::Async {
+            if self.buffer > self.clients_per_round {
+                bail!(
+                    "--buffer {} > per-round {}: a flush could never fill",
+                    self.buffer,
+                    self.clients_per_round
+                );
+            }
+            let has_churn = !self.dynamics.churn.events.is_empty()
+                || self.dynamics.churn.leave_prob > 0.0
+                || self.dynamics.churn.join_prob > 0.0;
+            if has_churn {
+                bail!(
+                    "--scheme async does not model device churn (availability and \
+                     straggler slowdowns are supported); drop --churn"
+                );
+            }
+            if self.dynamics.straggler.drop_prob > 0.0 {
+                // A mid-task drop removes an update from the stream, so
+                // the buffer no longer fills at cohort boundaries and
+                // the documented `buffer == M_p` sync-degenerate pin
+                // would silently break; reject rather than diverge.
+                bail!(
+                    "--scheme async does not model mid-task client drops; \
+                     drop --drop-prob (straggler slowdowns are supported)"
+                );
+            }
+        } else if self.buffer > 0
+            || self.max_staleness > 0
+            || self.staleness_weight != StalenessWeight::Const
+        {
+            bail!(
+                "--buffer/--max-staleness/--staleness-weight only apply to --scheme async"
             );
         }
         self.dynamics.validate()?;
@@ -451,8 +513,58 @@ mod tests {
     }
 
     #[test]
+    fn async_flags_parse_and_validate() {
+        let c = RunConfig::default()
+            .apply_args(&args(&[
+                "--scheme", "async", "--buffer", "8", "--max-staleness", "3",
+                "--staleness-weight", "poly:0.5",
+            ]))
+            .unwrap();
+        assert_eq!(c.scheme, Scheme::Async);
+        assert_eq!(c.buffer, 8);
+        assert_eq!(c.max_staleness, 3);
+        assert!(matches!(c.staleness_weight, StalenessWeight::Poly(a) if (a - 0.5).abs() < 1e-12));
+        // Defaults are the sync-degenerate configuration.
+        let d = RunConfig::default();
+        assert_eq!((d.buffer, d.max_staleness, d.staleness_weight), (0, 0, StalenessWeight::Const));
+        // A buffer no cohort stream could ever fill is rejected.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--buffer", "999"]))
+            .is_err());
+        // Async knobs without the async scheme are a config error — the
+        // staleness law included (it would otherwise be silently inert).
+        assert!(RunConfig::default().apply_args(&args(&["--buffer", "4"])).is_err());
+        assert!(RunConfig::default().apply_args(&args(&["--max-staleness", "2"])).is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--staleness-weight", "poly:0.5"]))
+            .is_err());
+        // Device churn and mid-task drops are not modeled by the async
+        // dispatcher (a drop would break the buffer == M_p sync pin).
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--churn", "leave@2:1:5.0"]))
+            .is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--drop-prob", "0.05"]))
+            .is_err());
+        // ...but availability and straggler slowdowns are fine.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--availability", "0.8",
+                "--stragglers", "0.1:x4"]))
+            .is_ok());
+        // Bad staleness law rejected.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--staleness-weight", "exp:2"]))
+            .is_err());
+        // The async scheme may drive the sharded state store.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--state-shards", "2"]))
+            .is_ok());
+    }
+
+    #[test]
     fn scheme_and_scheduler_parsing() {
         assert_eq!(Scheme::parse("parrot").unwrap(), Scheme::Parrot);
+        assert_eq!(Scheme::parse("async").unwrap(), Scheme::Async);
         assert_eq!(Scheme::parse("sd_dist").unwrap(), Scheme::SdDist);
         assert_eq!(SchedulerKind::parse("uniform").unwrap(), SchedulerKind::Uniform);
         assert!(SchedulerKind::parse("window:x").is_err());

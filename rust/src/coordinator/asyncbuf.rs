@@ -1,0 +1,182 @@
+//! The deploy-side flush ledger for asynchronous buffered aggregation
+//! (`--scheme async`): pure bookkeeping over the arrival stream of
+//! client updates — when to flush, each update's staleness, its
+//! discount weight, and whether it is applied or discarded.
+//!
+//! The real [`Server`](crate::coordinator::Server) drives this ledger
+//! with live `TaskDone` arrivals; `parrot exp asyncscale --smoke`
+//! replays the virtual engine's recorded arrival sequence through a
+//! fresh ledger and asserts both sides agree on every flush counter —
+//! the async analogue of the statescale sim-vs-deploy differential.
+//! Keeping the policy here (transport-free, engine-free) is what makes
+//! that differential meaningful: the engine accounts flushes
+//! independently inside its event loop.
+
+use crate::aggregation::StalenessWeight;
+
+/// The flush policy knobs (`--buffer`, `--max-staleness`,
+/// `--staleness-weight`).
+#[derive(Debug, Clone, Copy)]
+pub struct FlushPolicy {
+    /// Client updates per flush (≥ 1; the CLI's `0 = M_p` convention is
+    /// resolved by the caller).
+    pub buffer: usize,
+    pub max_staleness: usize,
+    pub weight: StalenessWeight,
+}
+
+/// Per-update outcome of one flush, in arrival order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateDecision {
+    /// Model version the update was computed against.
+    pub born: u64,
+    /// Flushes applied between its dispatch and this flush.
+    pub staleness: usize,
+    /// Discount factor (0.0 when discarded).
+    pub weight: f64,
+    pub applied: bool,
+}
+
+/// Arrival-ordered flush bookkeeping (see module docs).
+#[derive(Debug)]
+pub struct FlushLedger {
+    policy: FlushPolicy,
+    version: u64,
+    pending: Vec<u64>,
+    /// Flushes applied so far.
+    pub flushes: usize,
+    /// Updates applied across all flushes.
+    pub applied: usize,
+    /// Updates discarded for exceeding `max_staleness`.
+    pub stale_dropped: usize,
+    /// `staleness_hist[s]` = applied updates that were s flushes old.
+    pub staleness_hist: Vec<usize>,
+}
+
+impl FlushLedger {
+    pub fn new(policy: FlushPolicy) -> FlushLedger {
+        assert!(policy.buffer >= 1, "flush buffer must be >= 1");
+        FlushLedger {
+            version: 0,
+            pending: Vec::new(),
+            flushes: 0,
+            applied: 0,
+            stale_dropped: 0,
+            staleness_hist: vec![0; policy.max_staleness + 1],
+            policy,
+        }
+    }
+
+    /// Current global model version (== flushes applied).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Updates buffered toward the next flush.
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Record one arrived update computed against model version `born`.
+    /// Returns the per-update decisions when this arrival fills the
+    /// buffer and a flush must run (the ledger has already advanced its
+    /// version by then).
+    pub fn on_update(&mut self, born: u64) -> Option<Vec<UpdateDecision>> {
+        debug_assert!(born <= self.version, "updates cannot come from the future");
+        self.pending.push(born);
+        if self.pending.len() >= self.policy.buffer {
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// Drain any partial buffer at end of stream (returns `None` when
+    /// nothing is pending).
+    pub fn finalize(&mut self) -> Option<Vec<UpdateDecision>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        Some(self.flush())
+    }
+
+    fn flush(&mut self) -> Vec<UpdateDecision> {
+        let borns = std::mem::take(&mut self.pending);
+        let decisions = borns
+            .into_iter()
+            .map(|born| {
+                let staleness = (self.version - born) as usize;
+                if staleness > self.policy.max_staleness {
+                    self.stale_dropped += 1;
+                    UpdateDecision { born, staleness, weight: 0.0, applied: false }
+                } else {
+                    self.staleness_hist[staleness] += 1;
+                    self.applied += 1;
+                    UpdateDecision {
+                        born,
+                        staleness,
+                        weight: self.policy.weight.weight(staleness),
+                        applied: true,
+                    }
+                }
+            })
+            .collect();
+        self.version += 1;
+        self.flushes += 1;
+        decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(buffer: usize, max_staleness: usize) -> FlushPolicy {
+        FlushPolicy { buffer, max_staleness, weight: StalenessWeight::Poly(0.5) }
+    }
+
+    #[test]
+    fn flushes_every_buffer_arrivals_and_weights_by_staleness() {
+        let mut l = FlushLedger::new(policy(3, 2));
+        assert!(l.on_update(0).is_none());
+        assert!(l.on_update(0).is_none());
+        let d = l.on_update(0).expect("third arrival fills the buffer");
+        assert_eq!(d.len(), 3);
+        assert!(d.iter().all(|x| x.applied && x.staleness == 0 && x.weight == 1.0));
+        assert_eq!(l.version(), 1);
+        // An update born before that flush is one flush stale now.
+        l.on_update(0);
+        l.on_update(1);
+        let d = l.on_update(1).unwrap();
+        assert_eq!(d[0].staleness, 1);
+        assert!((d[0].weight - (2.0f64).powf(-0.5)).abs() < 1e-12);
+        assert_eq!(d[1].staleness, 0);
+        assert_eq!(l.flushes, 2);
+        assert_eq!(l.applied, 6);
+        assert_eq!(l.staleness_hist, vec![5, 1, 0]);
+    }
+
+    #[test]
+    fn stale_updates_are_discarded_not_applied() {
+        let mut l = FlushLedger::new(policy(1, 0));
+        l.on_update(0); // v 0 -> 1
+        l.on_update(1); // v 1 -> 2
+        let d = l.on_update(0).unwrap(); // staleness 2 > 0
+        assert!(!d[0].applied);
+        assert_eq!(d[0].weight, 0.0);
+        assert_eq!(l.stale_dropped, 1);
+        assert_eq!(l.applied, 2);
+        assert_eq!(l.flushes, 3, "a discarded batch still advances the version");
+    }
+
+    #[test]
+    fn finalize_drains_the_partial_tail() {
+        let mut l = FlushLedger::new(policy(4, 1));
+        assert!(l.finalize().is_none(), "nothing buffered yet");
+        l.on_update(0);
+        l.on_update(0);
+        let d = l.finalize().expect("partial flush");
+        assert_eq!(d.len(), 2);
+        assert_eq!(l.flushes, 1);
+        assert!(l.finalize().is_none());
+    }
+}

@@ -57,6 +57,15 @@ pub enum Msg {
     /// Bulk ownership move (device churn / resharding): everything a
     /// departing shard hosted, routed to the new owners.
     ShardTransfer { from_shard: u32, states: Vec<(u64, Vec<u8>)> },
+    /// Server → device (async scheme): post-flush model refresh — the
+    /// new global params and their version.  Devices compute every
+    /// subsequent `AsyncTask` against this model until the next flush.
+    AsyncFlush { version: u64, broadcast: Broadcast },
+    /// Server → device (async scheme): one streaming task against the
+    /// model version the device last received via `AsyncFlush` (echoed
+    /// here as a protocol check).  The reply is a normal `TaskDone`;
+    /// the server tracks the dispatch version for staleness weighting.
+    AsyncTask { round: usize, client: usize, version: u64, codec: Codec },
 }
 
 fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) {
@@ -217,6 +226,18 @@ impl Msg {
                     enc.put_bytes(bytes);
                 }
             }
+            Msg::AsyncFlush { version, broadcast } => {
+                enc.put_u8(10);
+                enc.put_u64(*version);
+                encode_broadcast(&mut enc, broadcast);
+            }
+            Msg::AsyncTask { round, client, version, codec } => {
+                enc.put_u8(11);
+                enc.put_u32(*round as u32);
+                enc.put_u32(*client as u32);
+                enc.put_u64(*version);
+                codec.encode_meta(&mut enc);
+            }
         }
         enc.finish()
     }
@@ -309,6 +330,17 @@ impl Msg {
                     states.push((client, dec.bytes()?));
                 }
                 Msg::ShardTransfer { from_shard, states }
+            }
+            10 => {
+                let version = dec.u64()?;
+                Msg::AsyncFlush { version, broadcast: decode_broadcast(&mut dec)? }
+            }
+            11 => {
+                let round = dec.u32()? as usize;
+                let client = dec.u32()? as usize;
+                let version = dec.u64()?;
+                let codec = Codec::decode_meta(&mut dec)?;
+                Msg::AsyncTask { round, client, version, codec }
             }
             t => bail!("unknown msg tag {t}"),
         })
@@ -487,6 +519,36 @@ mod tests {
                 assert_eq!(states[1], (6, Vec::new()));
             }
             other => panic!("Msg::ShardTransfer must round-trip to itself, decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn async_messages_round_trip() {
+        let m = Msg::AsyncFlush {
+            version: 1 << 40,
+            broadcast: Broadcast { round: 3, params: params(2.5), extra: None },
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::AsyncFlush { version, broadcast } => {
+                assert_eq!(version, 1 << 40);
+                assert_eq!(broadcast.round, 3);
+                assert_eq!(broadcast.params, params(2.5));
+                assert_eq!(broadcast.extra, None);
+            }
+            other => panic!("Msg::AsyncFlush must round-trip to itself, decoded {other:?}"),
+        }
+        let m = Msg::AsyncTask { round: 9, client: 1234, version: 7, codec: Codec::QInt8 };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::AsyncTask { round, client, version, codec } => {
+                assert_eq!((round, client, version), (9, 1234, 7));
+                assert_eq!(codec, Codec::QInt8);
+            }
+            other => panic!("Msg::AsyncTask must round-trip to itself, decoded {other:?}"),
+        }
+        // Truncated async frames error cleanly (bounds-check discipline).
+        let buf = m.encode();
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "cut at {cut}");
         }
     }
 

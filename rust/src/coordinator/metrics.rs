@@ -31,6 +31,11 @@ pub struct RoundMetrics {
     pub eval_acc: Option<f64>,
     /// Device utilization = busy / (K · makespan).
     pub utilization: f64,
+    /// Async scheme: client updates applied by this flush (one
+    /// `RoundMetrics` per flush; 0 for the synchronous schemes).
+    pub flush_updates: usize,
+    /// Async scheme: updates discarded for exceeding `--max-staleness`.
+    pub stale_dropped: usize,
 }
 
 /// Whole-run accumulation.
@@ -110,6 +115,8 @@ impl RunMetrics {
                                 .set("eval_loss", r.eval_loss.map(Json::Num).unwrap_or(Json::Null))
                                 .set("eval_acc", r.eval_acc.map(Json::Num).unwrap_or(Json::Null))
                                 .set("utilization", r.utilization)
+                                .set("flush_updates", r.flush_updates)
+                                .set("stale_dropped", r.stale_dropped)
                         })
                         .collect(),
                 ),
@@ -153,7 +160,8 @@ impl MemoryModel {
             RwDist => self.s_m * m + self.s_d * m,
             SdDist => self.s_m * m_p + self.s_d * m,
             FaDist => self.s_m * k + self.s_d * m,
-            Parrot => self.s_m * k + self.s_d * m / m.max(1), // s_d/M ≈ s_d
+            // Async keeps Parrot's executor shape (K resident sims).
+            Parrot | Async => self.s_m * k + self.s_d * m / m.max(1), // s_d/M ≈ s_d
         }
     }
 
@@ -172,7 +180,7 @@ impl MemoryModel {
             SP => self.s_m + self.s_d,
             RwDist => self.s_m * m + self.s_d, // one resident state per active device lineage
             SdDist => self.s_m * m_p + self.s_d * m_p,
-            FaDist | Parrot => self.s_m * k + self.s_d * k,
+            FaDist | Parrot | Async => self.s_m * k + self.s_d * k,
         }
     }
 
@@ -195,7 +203,8 @@ impl MemoryModel {
         match scheme {
             SP => 0,
             RwDist | SdDist | FaDist => (s_a + s_e) * m_p as u64,
-            Parrot => s_a * k as u64 + s_e * m_p as u64,
+            // Async flushes the same hierarchical shape per M_p updates.
+            Parrot | Async => s_a * k as u64 + s_e * m_p as u64,
         }
     }
 
@@ -206,7 +215,7 @@ impl MemoryModel {
         match scheme {
             SP => 0,
             RwDist | SdDist | FaDist => m_p as u64,
-            Parrot => k as u64,
+            Parrot | Async => k as u64,
         }
     }
 }

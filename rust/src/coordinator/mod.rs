@@ -10,13 +10,18 @@
 //!   periodic evaluation.
 //! - [`metrics`] — measured per-round accounting (comm bytes/trips,
 //!   busy times, utilization) feeding the Table-1/Fig-4 harnesses.
+//! - [`asyncbuf`] — the buffered-flush ledger behind `--scheme async`
+//!   (when to flush, staleness weights, discard decisions), shared by
+//!   the streaming server loop and the sim-vs-deploy differential.
 
+pub mod asyncbuf;
 pub mod messages;
 pub mod metrics;
 pub mod selection;
 pub mod server;
 pub mod worker;
 
+pub use asyncbuf::{FlushLedger, FlushPolicy, UpdateDecision};
 pub use messages::Msg;
 pub use metrics::{MemoryModel, RoundMetrics, RunMetrics};
 pub use selection::Selection;

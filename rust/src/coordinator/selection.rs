@@ -78,15 +78,22 @@ impl Selection {
                 let mut rng = Rng::new(seed ^ 0x512E_D0DE).derive(round as u64);
                 // Weighted sampling without replacement via exponential
                 // sort keys (Efraimidis–Spirakis): key = u^(1/w).
+                // Zero-size clients are *excluded* (weight 0 means "no
+                // data to train on"), not silently promoted to weight 1.
                 let mut keyed: Vec<(f64, usize)> = sizes
                     .iter()
                     .enumerate()
+                    .filter(|&(_, &w)| w > 0)
                     .map(|(i, &w)| {
                         let u = rng.next_f64().max(1e-12);
-                        (u.powf(1.0 / (w.max(1) as f64)), i)
+                        (u.powf(1.0 / (w as f64)), i)
                     })
                     .collect();
-                keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                // total_cmp with an index tie-break: a NaN key (or an
+                // exact tie) must never panic the sort or make the
+                // cohort depend on sort internals — sim and deploy pick
+                // this cohort from the same call, so it must be total.
+                keyed.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
                 keyed.into_iter().take(m_p).map(|(_, i)| i).collect()
             }
             Selection::Fixed(ids) => ids.iter().take(m_p).cloned().collect(),
@@ -162,6 +169,41 @@ mod tests {
         let low: usize = counts[..10].iter().sum();
         let high: usize = counts[90..].iter().sum();
         assert!(high > 3 * low, "high {high} vs low {low}");
+    }
+
+    #[test]
+    fn size_weighted_excludes_zero_size_clients() {
+        // Regression: `w.max(1)` used to promote zero-size clients to
+        // weight 1, so "no data" clients could still be selected.  They
+        // must now be excluded entirely — and when fewer than M_p
+        // clients have data, the cohort shrinks instead of padding with
+        // empty clients.
+        let s = Selection::SizeWeighted;
+        let mut sz = vec![0usize; 40];
+        for i in 0..8 {
+            sz[i * 5] = 100; // only 8 clients have data
+        }
+        for r in 0..50 {
+            let picked = s.select(r, 40, 10, &sz, 11);
+            assert_eq!(picked.len(), 8, "round {r}: cohort must shrink to the data-holders");
+            assert!(
+                picked.iter().all(|&c| sz[c] > 0),
+                "round {r}: zero-size client selected: {picked:?}"
+            );
+        }
+        // Identical (seed, round, sizes) → identical cohort: the exact
+        // call both the simulation driver and the deployed server make,
+        // so sim and deploy keep picking the same clients.
+        let a = s.select(3, 40, 10, &sz, 11);
+        let b = s.select(3, 40, 10, &sz, 11);
+        assert_eq!(a, b);
+        // Tie-heavy weights (all equal) stay deterministic and panic-free
+        // under the total_cmp + index tie-break.
+        let flat = vec![7usize; 30];
+        let x = s.select(0, 30, 12, &flat, 5);
+        let y = s.select(0, 30, 12, &flat, 5);
+        assert_eq!(x, y);
+        assert_eq!(x.len(), 12);
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //! FA pull mode (O(M_p) trips, no local aggregation) — the latter is the
 //! faithful FedScale/Flower-style baseline on identical compute.
 
-use crate::aggregation::{GlobalAgg, LocalAgg, RoundAggregate};
+use crate::aggregation::{ClientUpdate, GlobalAgg, LocalAgg, RoundAggregate};
 use crate::algorithms::{Algo, Broadcast, ServerCtx, ServerState};
 use crate::config::{RunConfig, Scheme};
+use crate::coordinator::asyncbuf::{FlushLedger, FlushPolicy, UpdateDecision};
 use crate::coordinator::messages::Msg;
 use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
 use crate::coordinator::worker::{build_dataset, initial_params, Worker};
@@ -32,6 +33,40 @@ pub struct TrainSummary {
     pub final_params: ParamSet,
     pub final_loss: Option<f64>,
     pub final_acc: Option<f64>,
+}
+
+/// Deferred async dispatches awaiting a state-prefetch reply:
+/// client → FIFO of (device, cohort) reservations.
+type PendingFetch = std::collections::HashMap<u64, std::collections::VecDeque<(usize, usize)>>;
+
+/// Mutable dispatch state of the streaming async loop.
+struct AsyncLoop {
+    /// Remaining (cohort, client) stream in selection order.
+    queue: std::collections::VecDeque<(usize, usize)>,
+    /// Outstanding task per device: (cohort, client, born version).
+    outstanding: Vec<Option<(usize, usize, u64)>>,
+    pending_fetch: PendingFetch,
+    /// Devices parked by the staleness gate, re-dispatched post-flush.
+    idle: Vec<usize>,
+    /// Dispatched-but-unapplied updates (in flight + buffered) — the
+    /// same pipeline-depth gate the virtual dispatcher enforces, so
+    /// deploy staleness stays within `max_staleness` by construction
+    /// instead of silently discarding most of the cluster's work when
+    /// K exceeds the window.
+    pending: usize,
+    /// Gate: `buffer · (max_staleness + 1)`.
+    window: usize,
+}
+
+/// Per-flush-interval meters of the streaming async loop.
+#[derive(Debug, Default)]
+struct AsyncMeters {
+    bytes_down: u64,
+    bytes_up: u64,
+    trips: u64,
+    state_bytes: u64,
+    state_msgs: u64,
+    busy: f64,
 }
 
 pub struct Server<T: Transport> {
@@ -94,6 +129,9 @@ impl<T: Transport> Server<T> {
         let client_sizes: Vec<usize> = (0..self.cfg.n_clients)
             .map(|c| self.dataset.client_size(c))
             .collect();
+        if self.cfg.scheme == Scheme::Async {
+            return self.run_async(client_sizes);
+        }
         for round in 0..self.cfg.rounds {
             let selected = self.cfg.selection.select(
                 round,
@@ -227,6 +265,274 @@ impl<T: Transport> Server<T> {
             self.transport.send(owner + 1, m)?;
         }
         Ok((state_bytes, state_msgs))
+    }
+
+    /// Encode and send one streaming `AsyncTask`, metering the frame.
+    fn send_async_task(
+        &mut self,
+        dev: usize,
+        cohort: usize,
+        client: usize,
+        version: u64,
+        met: &mut AsyncMeters,
+    ) -> Result<()> {
+        let msg = Msg::AsyncTask { round: cohort, client, version, codec: self.cfg.compress }
+            .encode();
+        met.bytes_down += msg.len() as u64;
+        met.trips += 1;
+        self.transport.send(dev + 1, msg)
+    }
+
+    /// Work-conserving dispatch: hand `dev` the next queued client —
+    /// unless the staleness gate is closed (`pending` ≥ window), in
+    /// which case the device parks and is re-dispatched after the next
+    /// flush; without the gate, any cluster with more devices than
+    /// `buffer·(S+1)` would keep every device in flight and discard
+    /// most updates as stale (the virtual dispatcher gates admission
+    /// identically).  With the sharded state store, a non-owned state
+    /// is prefetched first (the dispatcher's rolling horizon — one
+    /// fetch per dispatch decision instead of a whole-round plan): the
+    /// `AsyncTask` is deferred until the owner's `StatePut` reply comes
+    /// back and is forwarded ahead of it.  Deferred dispatches queue
+    /// per client (the same client can be in flight for two cohorts at
+    /// once) and the owner's replies release them FIFO.
+    fn dispatch_async(
+        &mut self,
+        dev: usize,
+        st: &mut AsyncLoop,
+        version: u64,
+        met: &mut AsyncMeters,
+    ) -> Result<()> {
+        if st.queue.is_empty() {
+            return Ok(());
+        }
+        if st.pending >= st.window {
+            st.idle.push(dev);
+            return Ok(());
+        }
+        let (cohort, client) = st.queue.pop_front().expect("checked non-empty");
+        st.pending += 1;
+        if let Some(map) = &self.state_shards {
+            let owner = map.owner(client as u64) as usize;
+            if owner != dev {
+                let msg =
+                    Msg::StateFetch { round: cohort, clients: vec![client as u64] }.encode();
+                met.state_bytes += msg.len() as u64;
+                met.state_msgs += 1;
+                self.transport.send(owner + 1, msg)?;
+                // The device stays reserved (no outstanding entry) until
+                // the fetch reply releases the deferred task.
+                st.pending_fetch.entry(client as u64).or_default().push_back((dev, cohort));
+                return Ok(());
+            }
+        }
+        self.send_async_task(dev, cohort, client, version, met)?;
+        st.outstanding[dev] = Some((cohort, client, version));
+        Ok(())
+    }
+
+    /// Merge one flush batch with its staleness weights and advance the
+    /// global model.
+    fn apply_async_flush(
+        &mut self,
+        updates: &mut Vec<ClientUpdate>,
+        decisions: &[UpdateDecision],
+    ) -> RoundAggregate {
+        debug_assert_eq!(updates.len(), decisions.len());
+        let mut flat = LocalAgg::new(0);
+        for (u, d) in updates.drain(..).zip(decisions) {
+            if d.applied {
+                flat.add(&u.staleness_scaled(d.weight));
+            }
+        }
+        let mut agg = GlobalAgg::new();
+        agg.merge(flat.finish());
+        let result = agg.finish();
+        self.apply_round(&result);
+        result
+    }
+
+    /// The streaming async loop (`--scheme async`): every device holds
+    /// one outstanding task at a time; completed updates buffer at the
+    /// server and the [`FlushLedger`] decides when to flush, each
+    /// update's staleness weight, and what to discard.  One
+    /// `RoundMetrics` is recorded per flush.
+    fn run_async(mut self, client_sizes: Vec<usize>) -> Result<TrainSummary> {
+        let k = self.cfg.n_devices;
+        let buffer = if self.cfg.buffer == 0 {
+            self.cfg.clients_per_round
+        } else {
+            self.cfg.buffer
+        };
+        let mut ledger = FlushLedger::new(FlushPolicy {
+            buffer,
+            max_staleness: self.cfg.max_staleness,
+            weight: self.cfg.staleness_weight,
+        });
+        // The identical cohort stream the sync path would select.
+        let mut queue: std::collections::VecDeque<(usize, usize)> = Default::default();
+        for round in 0..self.cfg.rounds {
+            for c in self.cfg.selection.select(
+                round,
+                self.cfg.n_clients,
+                self.cfg.clients_per_round,
+                &client_sizes,
+                self.cfg.seed,
+            ) {
+                queue.push_back((round, c));
+            }
+        }
+        let total = queue.len();
+        let mut met = AsyncMeters::default();
+        let mut sw = Stopwatch::start();
+
+        // Version-0 model to every device before any task.
+        let bc0 = self.broadcast(0);
+        for dev in 1..=k {
+            let m = Msg::AsyncFlush { version: 0, broadcast: bc0.clone() }.encode();
+            met.bytes_down += m.len() as u64;
+            met.trips += 1;
+            self.transport.send(dev, m)?;
+        }
+
+        let mut st = AsyncLoop {
+            queue,
+            outstanding: vec![None; k],
+            pending_fetch: Default::default(),
+            idle: Vec::new(),
+            pending: 0,
+            window: buffer.saturating_mul(self.cfg.max_staleness + 1),
+        };
+        let mut buffered: Vec<ClientUpdate> = Vec::new();
+        for dev in 0..k {
+            self.dispatch_async(dev, &mut st, ledger.version(), &mut met)?;
+        }
+
+        let mut done = 0usize;
+        while done < total {
+            let (from, raw) = self.transport.recv(None)?;
+            match Msg::decode(&raw)? {
+                Msg::TaskDone { device, update, record, .. } => {
+                    met.bytes_up += raw.len() as u64;
+                    met.trips += 1;
+                    met.busy += record.secs;
+                    self.scheduler.record(record);
+                    let (_, _, born) = st.outstanding[device]
+                        .take()
+                        .context("TaskDone from a device with no outstanding task")?;
+                    done += 1;
+                    buffered.push(update);
+                    if let Some(decisions) = ledger.on_update(born) {
+                        st.pending -= decisions.len();
+                        let result = self.apply_async_flush(&mut buffered, &decisions);
+                        self.broadcast_flush(&ledger, &decisions, &result, &mut met, &mut sw)?;
+                        // The flush reopened the staleness gate: parked
+                        // devices pull their next client now.
+                        let parked: Vec<usize> = st.idle.drain(..).collect();
+                        for dev in parked {
+                            self.dispatch_async(dev, &mut st, ledger.version(), &mut met)?;
+                        }
+                    }
+                    // Work-conserving: the freed device pulls its next
+                    // client immediately — no barrier (parks if the
+                    // staleness gate is closed).
+                    self.dispatch_async(device, &mut st, ledger.version(), &mut met)?;
+                }
+                Msg::StatePut { round, states } => {
+                    met.state_bytes += raw.len() as u64;
+                    met.state_msgs += 1;
+                    let mut returns = Vec::new();
+                    for (c, b) in states {
+                        // A fetch *reply* comes from c's owner and
+                        // matches a pending prefetch (owners never
+                        // write-back their own clients); anything else
+                        // is a write-back return headed for the owner.
+                        let owner = self
+                            .state_shards
+                            .as_ref()
+                            .map(|m| m.owner(c) as usize + 1)
+                            .unwrap_or(0);
+                        let is_reply = from == owner
+                            && st.pending_fetch.get(&c).map(|q| !q.is_empty()).unwrap_or(false);
+                        if is_reply {
+                            let q = st.pending_fetch.get_mut(&c).expect("checked above");
+                            let (dev, cohort) = q.pop_front().expect("checked above");
+                            if q.is_empty() {
+                                st.pending_fetch.remove(&c);
+                            }
+                            let fwd = Msg::StatePut { round, states: vec![(c, b)] }.encode();
+                            met.state_bytes += fwd.len() as u64;
+                            met.state_msgs += 1;
+                            self.transport.send(dev + 1, fwd)?;
+                            let v = ledger.version();
+                            self.send_async_task(dev, cohort, c as usize, v, &mut met)?;
+                            st.outstanding[dev] = Some((cohort, c as usize, v));
+                        } else {
+                            returns.push((c, b));
+                        }
+                    }
+                    if !returns.is_empty() {
+                        let (b, n) = self.route_state_returns(round, returns)?;
+                        met.state_bytes += b;
+                        met.state_msgs += n;
+                    }
+                }
+                other => bail!("async loop expected TaskDone/StatePut, got {other:?}"),
+            }
+        }
+        // Partial tail: whatever is still buffered flushes once.
+        if let Some(decisions) = ledger.finalize() {
+            let result = self.apply_async_flush(&mut buffered, &decisions);
+            self.broadcast_flush(&ledger, &decisions, &result, &mut met, &mut sw)?;
+        }
+        for dev in 1..=k {
+            self.transport.send(dev, Msg::Shutdown.encode())?;
+        }
+        let (final_loss, final_acc) = self.metrics.final_eval();
+        Ok(TrainSummary {
+            metrics: self.metrics,
+            final_params: self.global,
+            final_loss,
+            final_acc,
+        })
+    }
+
+    /// Post-flush bookkeeping: broadcast the refreshed model to every
+    /// device and record one `RoundMetrics` for the flush interval.
+    fn broadcast_flush(
+        &mut self,
+        ledger: &FlushLedger,
+        decisions: &[UpdateDecision],
+        result: &RoundAggregate,
+        met: &mut AsyncMeters,
+        sw: &mut Stopwatch,
+    ) -> Result<()> {
+        let flush_idx = ledger.flushes - 1;
+        let bc = self.broadcast(flush_idx);
+        for dev in 1..=self.cfg.n_devices {
+            let m = Msg::AsyncFlush { version: ledger.version(), broadcast: bc.clone() }.encode();
+            met.bytes_down += m.len() as u64;
+            met.trips += 1;
+            self.transport.send(dev, m)?;
+        }
+        let spent = std::mem::take(met);
+        let interval_sw = std::mem::replace(sw, Stopwatch::start());
+        let mut rm = self.finish_metrics(
+            flush_idx,
+            interval_sw,
+            0.0,
+            spent.busy,
+            spent.bytes_down,
+            spent.bytes_up,
+            spent.trips,
+            spent.state_bytes,
+            spent.state_msgs,
+            result,
+        )?;
+        rm.flush_updates = decisions.iter().filter(|d| d.applied).count();
+        rm.stale_dropped = decisions.iter().filter(|d| !d.applied).count();
+        self.metrics.push(rm);
+        Ok(())
     }
 
     /// Parrot batch round (SP degenerates to K=1 with the same code).

@@ -54,6 +54,8 @@ pub struct Worker<T: Transport> {
     dataset: FederatedDataset,
     /// Cached broadcast + round codec for FA TaskCached messages.
     cached_bc: Option<(Broadcast, Codec)>,
+    /// Current async-mode model + its version (set by `AsyncFlush`).
+    async_bc: Option<(Broadcast, u64)>,
 }
 
 /// Build the deterministic dataset every participant reconstructs
@@ -112,6 +114,7 @@ impl<T: Transport> Worker<T> {
             returns: Vec::new(),
             dataset,
             cached_bc: None,
+            async_bc: None,
         })
     }
 
@@ -200,6 +203,36 @@ impl<T: Transport> Worker<T> {
                         self.state.save(c, &b)?;
                     }
                     self.state.flush()?;
+                }
+                Msg::AsyncFlush { version, broadcast } => {
+                    // Flush boundary = write-back consistency point: the
+                    // async analogue of the Parrot round boundary.
+                    self.state.flush()?;
+                    self.async_bc = Some((broadcast, version));
+                }
+                Msg::AsyncTask { round, client, version, codec } => {
+                    let (bc, held) = self
+                        .async_bc
+                        .clone()
+                        .context("AsyncTask before the initial AsyncFlush")?;
+                    anyhow::ensure!(
+                        held == version,
+                        "async model skew: device holds v{held}, task dispatched against \
+                         v{version}"
+                    );
+                    let (update, record) = self.run_task(round, &bc, client)?;
+                    // Non-owned state rides back to its owner (via the
+                    // server) ahead of the task result.
+                    if !self.returns.is_empty() {
+                        let states: Vec<(u64, Option<Vec<u8>>)> =
+                            self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
+                        self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+                    }
+                    self.staged.clear();
+                    self.transport.send(
+                        0,
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                    )?;
                 }
                 Msg::Task { round, broadcast, client, codec } => {
                     self.cached_bc = Some((broadcast.clone(), codec));

@@ -1,0 +1,281 @@
+//! `parrot exp asyncscale` — asynchronous buffered execution at
+//! acceptance scale: 1000 clients × 32 devices under straggler
+//! injection, sweeping (buffer, staleness bound, staleness law) against
+//! the synchronous Parrot baseline on the identical selection stream.
+//!
+//! Two hard checks run inline (the harness fails loudly if either
+//! breaks):
+//!
+//! - **degenerate pin**: `buffer == M_p`, `max_staleness == 0` must
+//!   reproduce the synchronous Parrot timeline exactly — per-flush
+//!   interval, bytes and trips equal to the sync per-round columns on
+//!   the same seed;
+//! - **work conservation**: at least one buffered configuration must
+//!   strictly reduce the total makespan vs sync Parrot — the straggler
+//!   no longer holds the whole cluster at a barrier.
+//!
+//! `--smoke` (wired into `scripts/ci.sh`) shrinks the run and adds the
+//! sim-vs-deploy flush differential: the virtual engine's recorded
+//! arrival sequence is replayed through the deploy-side
+//! [`FlushLedger`] (the exact bookkeeping the streaming server runs),
+//! and flush counts, per-staleness histograms, applied and
+//! stale-dropped counters must all agree.
+
+use crate::aggregation::StalenessWeight;
+use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::coordinator::asyncbuf::{FlushLedger, FlushPolicy};
+use crate::data::{Partition, PartitionKind};
+use crate::simulation::{
+    run_async_detailed, run_virtual, AsyncSpec, CommModel, DynamicsSpec, SlowdownLaw,
+    StragglerSpec, VRound, VirtualSim,
+};
+use crate::util::cli::Args;
+use anyhow::{ensure, Result};
+
+fn sim_for(scheme: Scheme, m: usize, k: usize, seed: u64, partition: &Partition) -> VirtualSim {
+    VirtualSim::new(
+        scheme,
+        ClusterProfile::heterogeneous(k),
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition.clone(),
+        1,
+        seed,
+    )
+    .with_dynamics(DynamicsSpec {
+        straggler: StragglerSpec { prob: 0.15, law: SlowdownLaw::Fixed(6.0), drop_prob: 0.0 },
+        ..Default::default()
+    })
+}
+
+fn totals(rs: &[VRound]) -> (f64, u64, u64) {
+    (
+        rs.iter().map(|r| r.total_secs).sum(),
+        rs.iter().map(|r| r.bytes).sum(),
+        rs.iter().map(|r| r.trips).sum(),
+    )
+}
+
+fn mean_staleness(rs: &[VRound]) -> f64 {
+    let (mut weighted, mut n) = (0usize, 0usize);
+    for r in rs {
+        for (s, &cnt) in r.staleness_hist.iter().enumerate() {
+            weighted += s * cnt;
+            n += cnt;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        weighted as f64 / n as f64
+    }
+}
+
+/// The degenerate pin: one flush per round, every column equal.
+fn ensure_degenerate_matches(sync: &[VRound], degenerate: &[VRound]) -> Result<()> {
+    ensure!(
+        sync.len() == degenerate.len(),
+        "degenerate async produced {} flushes for {} sync rounds",
+        degenerate.len(),
+        sync.len()
+    );
+    for (s, a) in sync.iter().zip(degenerate) {
+        ensure!(
+            (s.total_secs - a.total_secs).abs() <= 1e-9 * s.total_secs.max(1.0),
+            "round {}: sync {}s vs degenerate async {}s",
+            s.round,
+            s.total_secs,
+            a.total_secs
+        );
+        ensure!(s.bytes == a.bytes, "round {}: bytes {} vs {}", s.round, s.bytes, a.bytes);
+        ensure!(s.trips == a.trips, "round {}: trips {} vs {}", s.round, s.trips, a.trips);
+        ensure!(a.stale_dropped == 0, "round {}: degenerate mode dropped updates", s.round);
+    }
+    Ok(())
+}
+
+pub fn asyncscale(args: &Args) -> Result<()> {
+    if args.flag("smoke") {
+        return smoke(args);
+    }
+    let m = args.usize_or("clients", 1000)?;
+    let m_p = args.usize_or("per-round", 100)?;
+    let k = args.usize_or("devices", 32)?;
+    let rounds = args.usize_or("rounds", 8)?;
+    let seed = args.u64_or("seed", 29)?;
+    let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+    println!(
+        "Async buffered execution — M={m}, M_p={m_p}, K={k}, R={rounds} cohorts, \
+         stragglers 0.15:x6 on a heterogeneous cluster (vs sync Parrot)"
+    );
+    println!(
+        "{:<26} {:>10} {:>8} {:>8} {:>9} {:>8} {:>9}",
+        "config", "total(s)", "flushes", "applied", "stale-dr", "mean-s", "util"
+    );
+    let util = |rs: &[VRound]| {
+        let u: f64 = rs.iter().map(|r| r.utilization()).sum();
+        u / rs.len().max(1) as f64
+    };
+
+    let mut sync = sim_for(Scheme::Parrot, m, k, seed, &partition);
+    let rs_sync = run_virtual(&mut sync, rounds, m_p, seed ^ 0xA5);
+    let (sync_total, _, _) = totals(&rs_sync);
+    println!(
+        "{:<26} {:>10.2} {:>8} {:>8} {:>9} {:>8} {:>8.1}%",
+        "sync parrot (baseline)",
+        sync_total,
+        rounds,
+        rounds * m_p,
+        "-",
+        "-",
+        100.0 * util(&rs_sync)
+    );
+    let mut csv = vec![format!("sync,,,{sync_total:.3},{rounds},{},0,0", rounds * m_p)];
+
+    // Degenerate pin: buffer == M_p, S == 0 must equal sync exactly.
+    let mut deg = sim_for(Scheme::Async, m, k, seed, &partition);
+    deg.async_spec =
+        AsyncSpec { buffer: 0, max_staleness: 0, weight: StalenessWeight::Const };
+    let rs_deg = run_virtual(&mut deg, rounds, m_p, seed ^ 0xA5);
+    ensure_degenerate_matches(&rs_sync, &rs_deg)?;
+    let (deg_total, _, _) = totals(&rs_deg);
+    println!(
+        "{:<26} {:>10.2} {:>8} {:>8} {:>9} {:>8.2} {:>8.1}%  (== sync, pinned)",
+        format!("async b={m_p} S=0 const"),
+        deg_total,
+        rs_deg.len(),
+        rs_deg.iter().map(|r| r.flush_updates).sum::<usize>(),
+        rs_deg.iter().map(|r| r.stale_dropped).sum::<usize>(),
+        mean_staleness(&rs_deg),
+        100.0 * util(&rs_deg)
+    );
+
+    let grid: [(usize, usize, StalenessWeight); 4] = [
+        (m_p / 2, 2, StalenessWeight::Poly(0.5)),
+        (m_p / 4, 3, StalenessWeight::Poly(0.5)),
+        (m_p / 4, 3, StalenessWeight::Const),
+        (m_p / 2, 4, StalenessWeight::Const),
+    ];
+    let mut best = f64::INFINITY;
+    for (buffer, max_staleness, weight) in grid {
+        let buffer = buffer.max(1);
+        let mut sim = sim_for(Scheme::Async, m, k, seed, &partition);
+        sim.async_spec = AsyncSpec { buffer, max_staleness, weight };
+        let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0xA5);
+        let (total, _, _) = totals(&rs);
+        best = best.min(total);
+        let applied: usize = rs.iter().map(|r| r.flush_updates).sum();
+        let stale: usize = rs.iter().map(|r| r.stale_dropped).sum();
+        println!(
+            "{:<26} {:>10.2} {:>8} {:>8} {:>9} {:>8.2} {:>8.1}%",
+            format!("async b={buffer} S={max_staleness} {}", weight.name()),
+            total,
+            rs.len(),
+            applied,
+            stale,
+            mean_staleness(&rs),
+            100.0 * util(&rs)
+        );
+        csv.push(format!(
+            "async,{buffer},{max_staleness},{total:.3},{},{applied},{stale},{}",
+            rs.len(),
+            weight.name()
+        ));
+    }
+    ensure!(
+        best < sync_total,
+        "no buffered configuration beat sync Parrot: best {best:.2}s vs {sync_total:.2}s"
+    );
+    println!(
+        "\n(buffered async removes the round barrier: the straggler only delays its own"
+    );
+    println!(" flush, the other executors keep pulling cohorts inside the staleness window;");
+    println!(" the degenerate configuration is pinned equal to the sync timeline.)");
+    super::save_csv(
+        args,
+        "asyncscale",
+        "config,buffer,max_staleness,total_s,flushes,applied,stale_dropped,weight",
+        &csv,
+    )
+}
+
+/// The `--smoke` differential (scripts/ci.sh): a small async run whose
+/// engine-side flush counters must be reproduced by the deploy-side
+/// [`FlushLedger`] replaying the identical arrival sequence, plus the
+/// degenerate sync pin at smoke scale.
+pub fn smoke(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 19)?;
+    let m = args.usize_or("clients", 60)?;
+    let m_p = 16usize;
+    let k = 4usize;
+    let rounds = args.usize_or("rounds", 5)?;
+    let (buffer, max_staleness) = (8usize, 1usize);
+    let weight = StalenessWeight::Poly(0.5);
+    let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+
+    // (1) virtual async run, arrival sequence recorded by the engine.
+    let mut sim = sim_for(Scheme::Async, m, k, seed, &partition);
+    sim.async_spec = AsyncSpec { buffer, max_staleness, weight };
+    let (rs, outcome) = run_async_detailed(&mut sim, rounds, m_p, seed ^ 0x55);
+
+    // (2) deploy-side replay: the same arrivals through the ledger the
+    // streaming server runs.
+    let mut ledger = FlushLedger::new(FlushPolicy { buffer, max_staleness, weight });
+    for &born in &outcome.arrivals {
+        let _ = ledger.on_update(born);
+    }
+    let _ = ledger.finalize();
+
+    let eng_flushes = rs
+        .iter()
+        .filter(|r| r.flush_updates + r.stale_dropped > 0)
+        .count();
+    let eng_applied: usize = rs.iter().map(|r| r.flush_updates).sum();
+    let eng_stale: usize = rs.iter().map(|r| r.stale_dropped).sum();
+    let mut eng_hist = vec![0usize; max_staleness + 1];
+    for r in &rs {
+        for (s, &n) in r.staleness_hist.iter().enumerate() {
+            eng_hist[s] += n;
+        }
+    }
+    ensure!(
+        ledger.flushes == eng_flushes,
+        "flush count mismatch: engine {eng_flushes} vs ledger {}",
+        ledger.flushes
+    );
+    ensure!(
+        ledger.applied == eng_applied,
+        "applied mismatch: engine {eng_applied} vs ledger {}",
+        ledger.applied
+    );
+    ensure!(
+        ledger.stale_dropped == eng_stale,
+        "stale-drop mismatch: engine {eng_stale} vs ledger {}",
+        ledger.stale_dropped
+    );
+    ensure!(
+        ledger.staleness_hist == eng_hist,
+        "staleness histogram mismatch: engine {eng_hist:?} vs ledger {:?}",
+        ledger.staleness_hist
+    );
+    ensure!(eng_applied + eng_stale == outcome.completed, "arrivals lost");
+
+    // (3) degenerate pin at smoke scale.
+    let mut sync = sim_for(Scheme::Parrot, m, k, seed, &partition);
+    let rs_sync = run_virtual(&mut sync, rounds, m_p, seed ^ 0x55);
+    let mut deg = sim_for(Scheme::Async, m, k, seed, &partition);
+    deg.async_spec =
+        AsyncSpec { buffer: 0, max_staleness: 0, weight: StalenessWeight::Const };
+    let rs_deg = run_virtual(&mut deg, rounds, m_p, seed ^ 0x55);
+    ensure_degenerate_matches(&rs_sync, &rs_deg)?;
+
+    println!(
+        "asyncscale smoke: sim/deploy agree on {} flushes ({} applied, {} stale-dropped, \
+         hist {:?}); degenerate pin == sync over {} rounds — OK",
+        ledger.flushes, ledger.applied, ledger.stale_dropped, ledger.staleness_hist, rounds
+    );
+    Ok(())
+}

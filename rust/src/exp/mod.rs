@@ -5,14 +5,18 @@
 //! writes machine-readable JSON + CSV under `results/`.  Invoke through
 //! the launcher: `parrot exp <id>` (ids: table1 table2 table3 fig4 fig5
 //! fig6 fig7 fig8 fig9 fig10 fig11 dynamics compression statescale
-//! ablate all).  `dynamics` sweeps the §4.4 availability/churn/
-//! straggler scenarios on the discrete-event engine; `compression`
-//! sweeps the `--compress` codecs (bytes / round time / reconstruction
-//! error) across schemes; `statescale` sweeps the distributed
-//! client-state store (1000 stateful clients × cache budget × shard
-//! count) against the local-only baseline.
+//! asyncscale ablate all).  `dynamics` sweeps the §4.4 availability/
+//! churn/straggler scenarios on the discrete-event engine;
+//! `compression` sweeps the `--compress` codecs (bytes / round time /
+//! reconstruction error) across schemes; `statescale` sweeps the
+//! distributed client-state store (1000 stateful clients × cache budget
+//! × shard count) against the local-only baseline; `asyncscale` sweeps
+//! asynchronous buffered execution (buffer × staleness law) against
+//! sync Parrot under straggler injection, with the degenerate
+//! configuration pinned equal to the sync timeline.
 
 pub mod ablation;
+pub mod asyncscale;
 pub mod compression;
 pub mod convergence;
 pub mod dynamics;
@@ -69,11 +73,13 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "dynamics" => dynamics::dynamics(args),
         "compression" => compression::compression(args),
         "statescale" => statescale::statescale(args),
+        "asyncscale" => asyncscale::asyncscale(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
                 "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
-                "fig10", "fig11", "dynamics", "compression", "statescale", "fig4",
+                "fig10", "fig11", "dynamics", "compression", "statescale", "asyncscale",
+                "fig4",
             ] {
                 println!("\n################ {id} ################");
                 run(id, args)?;
@@ -82,7 +88,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         }
         _ => bail!(
             "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
-             compression statescale ablate all"
+             compression statescale asyncscale ablate all"
         ),
     }
 }

@@ -38,7 +38,7 @@ pub fn table1(args: &Args) -> Result<()> {
             Scheme::SP => 1,
             Scheme::RwDist => m,
             Scheme::SdDist => m_p,
-            Scheme::FaDist | Scheme::Parrot => k,
+            Scheme::FaDist | Scheme::Parrot | Scheme::Async => k,
         };
         let mem = mm.memory(scheme, m, m_p, k) / MB;
         let mem_mgr = mm.memory_with_manager(scheme, m, m_p, k) / MB;

@@ -26,7 +26,7 @@ parrot — FedML Parrot reproduction (heterogeneity-aware FL simulation)
 USAGE:
   parrot run   [--config FILE] [--algorithm A] [--model M] [--clients N] [--per-round P]
                [--devices K] [--rounds R] [--epochs E] [--lr F] [--mu F]
-               [--partition natural|dirichlet:A|qskew:S] [--scheme sp|fa|parrot]
+               [--partition natural|dirichlet:A|qskew:S] [--scheme sp|fa|parrot|async]
                [--scheduler uniform|greedy|window:T] [--cluster homo|hete|dyn|c]
                [--seed S] [--artifacts DIR] [--state-dir DIR]
                [--availability always|P|periodic:T:O] [--churn leave@R:D[:T],join@R:D[:T],rand:PL:PJ]
@@ -34,7 +34,8 @@ USAGE:
                [--compress none|fp16|qint8|topk:F]
                [--state-shards N] [--state-writeback [on|off]] [--state-affinity PCT]
                [--state-cache-mb MB] [--scheduler ...|affinity:P|window:T+affinity:P]
-  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|ablate|all> [--results DIR] [...]
+               [--buffer K] [--max-staleness S] [--staleness-weight const|poly:A]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|asyncscale|ablate|all> [--results DIR] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]

@@ -91,7 +91,14 @@ pub fn greedy_assign_with_cost(
             if !alive[kk] {
                 continue;
             }
-            let new_wk = w[kk] + e.predict(n) + extra(client, kk);
+            let step = e.predict(n) + extra(client, kk);
+            // A degenerate fit (NaN/∞ — OLS on < 2 distinct points fed
+            // garbage) must not win the argmin through NaN comparisons;
+            // skip it outright so only priceable devices compete.
+            if !step.is_finite() {
+                continue;
+            }
+            let new_wk = w[kk] + step;
             // makespan if assigned to kk
             let mut ms = new_wk;
             for (jj, &wj) in w.iter().enumerate() {
@@ -103,6 +110,18 @@ pub fn greedy_assign_with_cost(
                 best_cost = ms;
                 best = kk;
             }
+        }
+        if best == usize::MAX {
+            // Every alive device priced this client at NaN/∞: fall back
+            // to the least-loaded alive slot so the partition invariant
+            // (every client placed exactly once) still holds.
+            for kk in 0..k {
+                if alive[kk] && (best == usize::MAX || w[kk] < w[best]) {
+                    best = kk;
+                }
+            }
+            assignment[best].push(client);
+            continue; // the un-priceable step does not inflate w[best]
         }
         w[best] += est[best].predict(n) + extra(client, best);
         assignment[best].push(client);
@@ -357,6 +376,43 @@ mod tests {
         let b = greedy_assign_with_cost(&clients, &est, &[true; 4], &[0.0; 4], &|_, _| 0.0);
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn degenerate_estimates_never_win_and_never_panic() {
+        // Device 0's fit is poisoned (NaN slope → +∞ predictions): it
+        // must receive no work, and the healthy device absorbs all of
+        // it without the argmin panicking on unset `best`.
+        for bad in [f64::NAN, f64::INFINITY] {
+            let est = vec![
+                DeviceEstimate { t_sample: bad, b: 0.1, r2: 0.0, n_points: 1 },
+                DeviceEstimate { t_sample: 0.01, b: 0.1, r2: 1.0, n_points: 9 },
+            ];
+            let clients: Vec<(usize, usize)> = (0..8).map(|i| (i, 100)).collect();
+            let (asg, w) = greedy_assign(&clients, &est);
+            assert!(asg[0].is_empty(), "t_sample={bad}: degenerate device won work: {asg:?}");
+            assert_eq!(asg[1].len(), 8);
+            assert!(w[1].is_finite());
+        }
+        // Every device degenerate: clients still land somewhere (least-
+        // loaded fallback), partition invariant intact, no panic.
+        let est = vec![
+            DeviceEstimate { t_sample: f64::NAN, b: 0.0, r2: 0.0, n_points: 0 },
+            DeviceEstimate { t_sample: f64::INFINITY, b: 0.0, r2: 0.0, n_points: 0 },
+        ];
+        let clients: Vec<(usize, usize)> = (0..5).map(|i| (i, 50)).collect();
+        let (asg, w) = greedy_assign(&clients, &est);
+        let mut seen: Vec<usize> = asg.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..5).collect::<Vec<_>>());
+        assert!(w.iter().all(|x| x.is_finite()), "{w:?}");
+        // An ∞ extra-cost hook (unreachable owner) is skipped the same way.
+        let est = homo(2);
+        let extra = |_c: usize, k: usize| if k == 0 { f64::INFINITY } else { 0.0 };
+        let (asg, _) =
+            greedy_assign_with_cost(&clients, &est, &[true, true], &[0.0, 0.0], &extra);
+        assert!(asg[0].is_empty(), "{asg:?}");
+        assert_eq!(asg[1].len(), 5);
     }
 
     #[test]

@@ -118,7 +118,27 @@ impl Scheduler {
         clients: &[(usize, usize)],
         alive: &[bool],
     ) -> Schedule {
+        let zero = vec![0.0; self.n_devices];
+        self.schedule_from(round, clients, alive, &zero)
+    }
+
+    /// [`Scheduler::schedule_masked`] generalized for mid-stream
+    /// re-planning: each device starts from `base_load` already-
+    /// committed seconds.  With an all-zero base this is exactly
+    /// `schedule_masked` — the async dispatcher admits a cohort against
+    /// the executors' current projected loads through this entry point,
+    /// applying Alg. 3's placement rule incrementally instead of from a
+    /// round barrier.  (The uniform/warm-up branch ignores the base: it
+    /// has no load objective to weigh it against.)
+    pub fn schedule_from(
+        &mut self,
+        round: usize,
+        clients: &[(usize, usize)],
+        alive: &[bool],
+        base_load: &[f64],
+    ) -> Schedule {
         assert_eq!(alive.len(), self.n_devices, "alive mask length");
+        assert_eq!(base_load.len(), self.n_devices, "base load length");
         let sw = crate::util::timer::Stopwatch::start();
         let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
         let in_warmup = round < self.warmup_rounds;
@@ -133,6 +153,13 @@ impl Scheduler {
                 estimates: None,
             };
         }
+        // Time-Window kinds never look behind round − τ again, so the
+        // stale records can go — this is also what bounds history memory
+        // on long runs.  saturating_sub: scheduling at round < τ must
+        // not underflow (and prunes nothing).
+        if let Some(w) = self.window() {
+            self.history.prune(round.saturating_sub(w));
+        }
         let window = self.window();
         let estimates = self.history.estimate(self.n_devices, round, window);
         let penalty = self.affinity_penalty();
@@ -145,9 +172,9 @@ impl Scheduler {
                     penalty
                 }
             };
-            greedy_assign_with_cost(clients, &estimates, alive, &vec![0.0; self.n_devices], &extra)
+            greedy_assign_with_cost(clients, &estimates, alive, base_load, &extra)
         } else {
-            greedy_assign_from(clients, &estimates, alive, &vec![0.0; self.n_devices])
+            greedy_assign_from(clients, &estimates, alive, base_load)
         };
         Schedule {
             assignment,
@@ -349,6 +376,67 @@ mod tests {
         // The windowed variant threads its window through estimation.
         let w = Scheduler::new(SchedulerKind::StateAffinity { window: 4, weight_pct: 50 }, 0, 3);
         assert_eq!(w.window(), Some(4));
+    }
+
+    #[test]
+    fn window_prune_bounds_history_and_survives_early_rounds() {
+        let mut s = Scheduler::new(SchedulerKind::TimeWindow(3), 0, 2);
+        for r in 0..10 {
+            for d in 0..2 {
+                s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+            }
+        }
+        // round < window: saturating_sub keeps everything, no underflow.
+        let sch = s.schedule(2, &clients(&[50, 40]));
+        assert!(sch.used_model);
+        assert_eq!(s.history.len(), 40, "nothing pruned before the window fills");
+        // Past the window, records older than round − τ are dropped —
+        // exactly the set the windowed estimate would never read again.
+        s.schedule(10, &clients(&[50, 40]));
+        assert!(s.history.records().iter().all(|r| r.round >= 7), "{:?}", s.history.len());
+        assert_eq!(s.history.len(), 3 * 2 * 2);
+        // Un-windowed kinds keep full history.
+        let mut g = Scheduler::new(SchedulerKind::Greedy, 0, 2);
+        for r in 0..10 {
+            g.record(TaskRecord { round: r, device: 0, n_samples: 100, secs: 1.0 });
+            g.record(TaskRecord { round: r, device: 1, n_samples: 200, secs: 2.0 });
+        }
+        g.schedule(10, &clients(&[50, 40]));
+        assert_eq!(g.history.len(), 20);
+    }
+
+    #[test]
+    fn schedule_from_zero_base_matches_schedule_masked() {
+        let seed_records = |s: &mut Scheduler| {
+            for r in 0..3 {
+                for d in 0..3 {
+                    s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                    s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+                }
+            }
+        };
+        let cs = clients(&[90, 70, 50, 30, 20, 10]);
+        let mut a = Scheduler::new(SchedulerKind::Greedy, 0, 3);
+        let mut b = Scheduler::new(SchedulerKind::Greedy, 0, 3);
+        seed_records(&mut a);
+        seed_records(&mut b);
+        let alive = [true, true, true];
+        let sa = a.schedule_masked(3, &cs, &alive);
+        let sb = b.schedule_from(3, &cs, &alive, &[0.0, 0.0, 0.0]);
+        assert_eq!(sa.assignment, sb.assignment);
+        assert_eq!(sa.predicted, sb.predicted);
+        // A loaded device receives less incremental work.
+        let mut c = Scheduler::new(SchedulerKind::Greedy, 0, 3);
+        seed_records(&mut c);
+        let sc = c.schedule_from(3, &cs, &alive, &[100.0, 0.0, 0.0]);
+        assert!(
+            sc.assignment[0].len() <= sb.assignment[0].len(),
+            "{:?} vs {:?}",
+            sc.assignment,
+            sb.assignment
+        );
+        assert!(sc.assignment[0].is_empty(), "100s head start dwarfs this cohort");
     }
 
     #[test]

@@ -35,8 +35,18 @@ pub struct DeviceEstimate {
 
 impl DeviceEstimate {
     /// Predicted task time for `n` effective samples (Eq. 2).
+    ///
+    /// A degenerate fit (NaN/∞ coefficients, e.g. OLS fed garbage
+    /// runtimes) predicts +∞ rather than leaking NaN into the greedy
+    /// comparisons — NaN compares false against everything, which would
+    /// otherwise let a broken device silently win (or lose) every
+    /// placement.
     pub fn predict(&self, n: usize) -> f64 {
-        (self.t_sample * n as f64 + self.b).max(0.0)
+        let t = self.t_sample * n as f64 + self.b;
+        if !t.is_finite() {
+            return f64::INFINITY;
+        }
+        t.max(0.0)
     }
 }
 
@@ -112,24 +122,35 @@ impl History {
             all_n += r.n_samples as f64;
             all_t += r.secs;
         }
-        let global_ratio = if all_n > 0.0 { all_t / all_n } else { 1.0 };
+        let global_ratio = if all_n > 0.0 && (all_t / all_n).is_finite() {
+            all_t / all_n
+        } else {
+            1.0
+        };
         (0..k)
             .map(|d| {
                 if let Some(fit) = linear_regression(&xs[d], &ys[d]) {
                     // Negative slope or intercept can appear under heavy
-                    // noise; clamp to the physical region.
-                    let t_sample = fit.slope.max(1e-9);
-                    let b = fit.intercept.max(0.0);
-                    return DeviceEstimate { t_sample, b, r2: fit.r2, n_points: fit.n };
+                    // noise; clamp to the physical region.  Non-finite
+                    // coefficients (∞ runtimes in the design) fall
+                    // through to the ratio ladder instead of poisoning
+                    // the greedy comparisons.
+                    if fit.slope.is_finite() && fit.intercept.is_finite() {
+                        let t_sample = fit.slope.max(1e-9);
+                        let b = fit.intercept.max(0.0);
+                        return DeviceEstimate { t_sample, b, r2: fit.r2, n_points: fit.n };
+                    }
                 }
                 if !xs[d].is_empty() {
                     let t = ys[d].iter().sum::<f64>() / xs[d].iter().sum::<f64>().max(1e-9);
-                    return DeviceEstimate {
-                        t_sample: t.max(1e-9),
-                        b: 0.0,
-                        r2: 0.0,
-                        n_points: xs[d].len(),
-                    };
+                    if t.is_finite() {
+                        return DeviceEstimate {
+                            t_sample: t.max(1e-9),
+                            b: 0.0,
+                            r2: 0.0,
+                            n_points: xs[d].len(),
+                        };
+                    }
                 }
                 DeviceEstimate { t_sample: global_ratio.max(1e-9), b: 0.0, r2: 0.0, n_points: 0 }
             })
@@ -242,6 +263,41 @@ mod tests {
         let est = h.estimate(2, 4, None);
         assert_eq!(est[0].n_points, 0);
         assert!(est[1].n_points > 0);
+    }
+
+    #[test]
+    fn degenerate_fit_predicts_infinity_not_nan() {
+        // NaN/∞ coefficients must surface as +∞ predictions (never NaN):
+        // the greedy pass skips infinite candidates explicitly, while a
+        // NaN would silently falsify every comparison.
+        for bad in [f64::NAN, f64::INFINITY] {
+            let e = DeviceEstimate { t_sample: bad, b: 0.1, r2: 0.0, n_points: 1 };
+            assert_eq!(e.predict(100), f64::INFINITY, "t_sample={bad}");
+            let e = DeviceEstimate { t_sample: 0.01, b: bad, r2: 0.0, n_points: 1 };
+            assert_eq!(e.predict(100), f64::INFINITY, "b={bad}");
+        }
+        // finite fits are untouched
+        let e = DeviceEstimate { t_sample: 0.01, b: 0.5, r2: 1.0, n_points: 4 };
+        assert!((e.predict(100) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_runtimes_fall_through_the_estimate_ladder() {
+        // A device whose recorded secs are ∞ (e.g. a wedged executor
+        // clock) must not produce non-finite coefficients.
+        let mut h = History::new();
+        h.push(rec(0, 0, 100, f64::INFINITY));
+        h.push(rec(0, 0, 200, f64::INFINITY));
+        h.push(rec(0, 1, 100, 1.0));
+        h.push(rec(0, 1, 200, 2.0));
+        let est = h.estimate(2, 1, None);
+        for (d, e) in est.iter().enumerate() {
+            assert!(
+                e.t_sample.is_finite() && e.b.is_finite(),
+                "device {d}: {e:?}"
+            );
+        }
+        assert!((est[1].t_sample - 0.01).abs() < 1e-9, "healthy device unaffected");
     }
 
     #[test]

@@ -58,7 +58,10 @@ pub mod engine;
 pub use availability::{
     AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, DynamicsSpec, SlowdownLaw, StragglerSpec,
 };
-pub use engine::{Event, RoundOutcome, RoundPlan, SimTask, TaskState};
+pub use engine::{
+    AsyncCohort, AsyncComm, AsyncOutcome, AsyncSpec, Event, FlushRecord, RoundOutcome, RoundPlan,
+    SimTask, TaskState,
+};
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::compress::Codec;
@@ -165,6 +168,16 @@ pub struct VRound {
     pub state_secs: f64,
     /// Shard-handoff bytes from device churn (ShardTransfer path).
     pub shard_transfer_bytes: u64,
+    /// Buffer-flush accounting (async scheme: one `VRound` per flush;
+    /// identically zero/empty for the synchronous schemes).
+    /// Client updates applied by this flush (staleness within bound).
+    pub flush_updates: usize,
+    /// Device aggregates merged by this flush.
+    pub flush_aggs: usize,
+    /// Updates discarded for exceeding `--max-staleness`.
+    pub stale_dropped: usize,
+    /// `staleness_hist[s]` = applied updates that were s flushes old.
+    pub staleness_hist: Vec<usize>,
 }
 
 impl VRound {
@@ -201,6 +214,10 @@ impl VRound {
             state_bytes: 0,
             state_secs: 0.0,
             shard_transfer_bytes: 0,
+            flush_updates: 0,
+            flush_aggs: 0,
+            stale_dropped: 0,
+            staleness_hist: Vec::new(),
         }
     }
 }
@@ -227,8 +244,11 @@ pub struct VirtualSim {
     pub dynamics: DynamicsSpec,
     /// Client-state store simulation (None = stateless / legacy runs).
     /// Only schemes whose executors map 1:1 to persistent workers (SP,
-    /// Parrot) drive it; attach via [`VirtualSim::with_state_store`].
+    /// Parrot, Async) drive it; attach via [`VirtualSim::with_state_store`].
     pub state: Option<StateSim>,
+    /// Buffered-async parameters (`Scheme::Async` only).  `buffer == 0`
+    /// resolves to M_p at run time — the sync-degenerate default.
+    pub async_spec: AsyncSpec,
     /// Persistent per-device-slot alive mask (FA/Parrot executors map
     /// 1:1 to devices; RW/SD executors are fresh per round).
     device_alive: Vec<bool>,
@@ -261,6 +281,11 @@ impl VirtualSim {
             noise: 0.05,
             dynamics: DynamicsSpec::default(),
             state: None,
+            async_spec: AsyncSpec {
+                buffer: 0,
+                max_staleness: 0,
+                weight: crate::aggregation::StalenessWeight::Const,
+            },
             device_alive: vec![true; k],
             dyn_seed: seed ^ 0xD15C_0E7E,
             rng: Rng::new(seed ^ 0x51D_CAFE),
@@ -333,6 +358,10 @@ impl VirtualSim {
             Scheme::RwDist | Scheme::SdDist => (self.plan_sd(&sizes), 0.0),
             Scheme::FaDist => (self.plan_fa(&sizes, k), 0.0),
             Scheme::Parrot => self.plan_parrot(r, &sizes, k),
+            Scheme::Async => unreachable!(
+                "the async scheme has no round barrier — run_virtual routes it \
+                 through run_async_virtual"
+            ),
         };
         let prev_alive = self.device_alive.clone();
         let outcome = engine::run_round(
@@ -469,6 +498,10 @@ impl VirtualSim {
             state_bytes: outcome.state_bytes,
             state_secs: outcome.state_secs,
             shard_transfer_bytes,
+            flush_updates: 0,
+            flush_aggs: 0,
+            stale_dropped: 0,
+            staleness_hist: Vec::new(),
         }
     }
 
@@ -627,9 +660,14 @@ impl VirtualSim {
 
 /// Run `rounds` rounds selecting `m_p` clients uniformly per round;
 /// returns per-round outcomes.  The shared driver for every timing
-/// figure harness.
+/// figure harness.  `Scheme::Async` routes through the work-conserving
+/// dispatcher ([`run_async_virtual`]): same selection stream, one
+/// `VRound` per buffer flush instead of per round.
 #[allow(clippy::too_many_arguments)]
 pub fn run_virtual(sim: &mut VirtualSim, rounds: usize, m_p: usize, seed: u64) -> Vec<VRound> {
+    if sim.scheme == Scheme::Async {
+        return run_async_virtual(sim, rounds, m_p, seed);
+    }
     let selector = Rng::new(seed ^ 0xF1A_C0DE);
     let m = sim.partition.n_clients();
     (0..rounds)
@@ -639,6 +677,171 @@ pub fn run_virtual(sim: &mut VirtualSim, rounds: usize, m_p: usize, seed: u64) -
             sim.round(r, &selected)
         })
         .collect()
+}
+
+/// [`run_async_detailed`] keeping only the per-flush `VRound`s.
+pub fn run_async_virtual(sim: &mut VirtualSim, rounds: usize, m_p: usize, seed: u64) -> Vec<VRound> {
+    run_async_detailed(sim, rounds, m_p, seed).0
+}
+
+/// Asynchronous buffered execution of `rounds` cohorts × `m_p` clients
+/// on the work-conserving dispatcher: identical selection, availability
+/// filter, noise draws and (at zero base load) greedy placement as the
+/// synchronous driver, but cohorts are admitted on demand and the
+/// server flushes every `buffer` client updates with staleness-weighted
+/// aggregation.  Returns one `VRound` per flush plus the raw
+/// [`AsyncOutcome`] (arrival sequence, per-flush records) for the
+/// sim-vs-deploy flush-ledger differential.
+pub fn run_async_detailed(
+    sim: &mut VirtualSim,
+    rounds: usize,
+    m_p: usize,
+    seed: u64,
+) -> (Vec<VRound>, AsyncOutcome) {
+    assert_eq!(sim.scheme, Scheme::Async, "run_async_detailed needs Scheme::Async");
+    let m = sim.partition.n_clients();
+    let m_p_eff = m_p.min(m).max(1);
+    let spec = AsyncSpec {
+        buffer: if sim.async_spec.buffer == 0 { m_p_eff } else { sim.async_spec.buffer },
+        ..sim.async_spec
+    };
+    let k = sim.cluster.n_devices();
+    let comm = AsyncComm {
+        s_a_down: sim.comm.s_a,
+        s_a_up: sim.comm.s_a_up(),
+        s_e: sim.comm.s_e,
+    };
+    let avail_seed = sim.dyn_seed ^ 0xA11A;
+    let dyn_seed = sim.dyn_seed;
+    let noise_sigma = sim.noise;
+    let selector = Rng::new(seed ^ 0xF1A_C0DE);
+
+    let VirtualSim {
+        ref cluster,
+        ref cost,
+        ref mut scheduler,
+        ref partition,
+        local_epochs,
+        ref dynamics,
+        ref mut state,
+        ref mut rng,
+        ..
+    } = *sim;
+    let availability = &dynamics.availability;
+
+    let mut source = move |sched: &mut Scheduler,
+                           c: usize,
+                           alive: &[bool],
+                           base: &[f64]|
+          -> Option<AsyncCohort> {
+        if c >= rounds {
+            return None;
+        }
+        let mut sel = selector.derive(c as u64);
+        let selected = sel.choose(m, m_p_eff);
+        let scheduled: Vec<usize> = selected
+            .iter()
+            .cloned()
+            .filter(|&cl| availability.is_available(c, cl, avail_seed))
+            .collect();
+        let unavailable = selected.len() - scheduled.len();
+        let sizes: Vec<(usize, usize)> = scheduled
+            .iter()
+            .map(|&cl| (cl, partition.sizes[cl] * local_epochs))
+            .collect();
+        if sizes.is_empty() {
+            return Some(AsyncCohort {
+                tasks: Vec::new(),
+                assigned: vec![Vec::new(); k],
+                state: StatePlan::default(),
+                sched_secs: 0.0,
+                unavailable,
+            });
+        }
+        // Incremental Alg. 3: greedy placement from the executors'
+        // current projected loads (all zero exactly at a flush
+        // boundary, where this equals the barrier schedule).
+        let mut schedule = sched.schedule_from(c, &sizes, alive, base);
+        let est = schedule.estimates.take();
+        let size_of: std::collections::HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
+        let mut assigned = vec![Vec::new(); k];
+        for (dev, clients) in schedule.assignment.iter().enumerate() {
+            for &cl in clients {
+                let n = size_of[&cl];
+                let mut task =
+                    SimTask::new(cl, n, (1.0 + noise_sigma * rng.normal()).max(0.2));
+                if let Some(est) = &est {
+                    task.predicted = Some(est[dev].predict(n));
+                }
+                assigned[dev].push(tasks.len());
+                tasks.push(task);
+            }
+        }
+        // State prefetch follows the dispatcher's rolling horizon: the
+        // cohort is planned on the store at admission time, not from a
+        // fixed whole-round plan.
+        let splan = match state.as_mut() {
+            Some(st) if st.store.cfg().n_workers == k => st.store.plan_for_tasks(
+                c as u64,
+                &assigned,
+                |t| tasks[t].client as u64,
+                tasks.len(),
+                st.prefetch,
+            ),
+            _ => StatePlan::default(),
+        };
+        Some(AsyncCohort {
+            tasks,
+            assigned,
+            state: splan,
+            sched_secs: schedule.overhead_secs,
+            unavailable,
+        })
+    };
+
+    let outcome = engine::run_async(
+        k,
+        cluster,
+        cost,
+        dynamics,
+        dyn_seed,
+        spec,
+        comm,
+        scheduler,
+        &mut source,
+    );
+
+    let vrounds = outcome
+        .flushes
+        .iter()
+        .map(|f| VRound {
+            round: f.flush,
+            total_secs: f.interval,
+            compute_secs: f.busy.iter().cloned().fold(0.0, f64::max),
+            comm_secs: f.chain_secs,
+            bytes: f.bytes,
+            trips: f.trips,
+            sched_secs: f.sched_secs,
+            device_busy: f.busy.clone(),
+            device_comm: vec![0.0; k],
+            est_err: f.est_err,
+            scheduled_clients: f.completed + f.dropped,
+            unavailable_clients: f.unavailable,
+            dropped_clients: f.dropped,
+            wasted_secs: f.wasted_secs,
+            departures: 0,
+            joins: 0,
+            state_bytes: f.state_bytes,
+            state_secs: f.state_secs,
+            shard_transfer_bytes: 0,
+            flush_updates: f.updates,
+            flush_aggs: f.aggs,
+            stale_dropped: f.stale_dropped,
+            staleness_hist: f.staleness_hist.clone(),
+        })
+        .collect();
+    (vrounds, outcome)
 }
 
 #[cfg(test)]
@@ -944,6 +1147,180 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ------------------------------------------------ async scheme
+
+    use crate::aggregation::StalenessWeight;
+
+    #[test]
+    fn prop_async_degenerate_reproduces_sync_parrot_timeline() {
+        // The acceptance pin: `buffer == M_p` + `max_staleness == 0`
+        // closes the admission gate after every cohort and ships the
+        // buffered aggregates through the exact hierarchical tail, so
+        // the work-conserving dispatcher must replay the synchronous
+        // Parrot timeline event-for-event on any seed — same noise
+        // draws, same straggler draws, same placements, same byte and
+        // busy columns — including under straggler injection on a
+        // heterogeneous cluster.
+        for (k, m_p, hetero, stragglers, seed) in [
+            (4usize, 60usize, false, false, 3u64),
+            (8, 100, true, false, 5),
+            (8, 80, true, true, 11),
+            (3, 40, false, true, 23),
+        ] {
+            let cluster = if hetero {
+                ClusterProfile::heterogeneous(k)
+            } else {
+                ClusterProfile::homogeneous(k)
+            };
+            let partition = Partition::generate(PartitionKind::Natural, 400, 62, 100, 17);
+            let dynamics = if stragglers {
+                DynamicsSpec {
+                    straggler: StragglerSpec {
+                        prob: 0.2,
+                        law: SlowdownLaw::Fixed(5.0),
+                        drop_prob: 0.0,
+                    },
+                    ..Default::default()
+                }
+            } else {
+                DynamicsSpec::default()
+            };
+            let build = |scheme| {
+                VirtualSim::new(
+                    scheme,
+                    cluster.clone(),
+                    WorkloadCost::femnist(),
+                    CommModel::femnist(),
+                    SchedulerKind::Greedy,
+                    2,
+                    partition.clone(),
+                    1,
+                    seed,
+                )
+                .with_dynamics(dynamics.clone())
+            };
+            let mut sync = build(Scheme::Parrot);
+            let mut asy = build(Scheme::Async);
+            // buffer 0 resolves to M_p; staleness window 0.
+            asy.async_spec =
+                AsyncSpec { buffer: 0, max_staleness: 0, weight: StalenessWeight::Const };
+            let rs = run_virtual(&mut sync, 6, m_p, 99 ^ seed);
+            let ra = run_virtual(&mut asy, 6, m_p, 99 ^ seed);
+            assert_eq!(ra.len(), rs.len(), "k={k} m_p={m_p}: one flush per round");
+            for (s, a) in rs.iter().zip(&ra) {
+                assert!(
+                    (s.total_secs - a.total_secs).abs() < 1e-6 * s.total_secs.max(1.0),
+                    "k={k} m_p={m_p} stragglers={stragglers} r={}: sync {} vs async {}",
+                    s.round,
+                    s.total_secs,
+                    a.total_secs
+                );
+                assert_eq!(s.bytes, a.bytes, "r={}", s.round);
+                assert_eq!(s.trips, a.trips, "r={}", s.round);
+                assert!((s.comm_secs - a.comm_secs).abs() < 1e-9);
+                assert_eq!(s.device_busy.len(), a.device_busy.len());
+                for (b, c) in s.device_busy.iter().zip(&a.device_busy) {
+                    assert!((b - c).abs() < 1e-9, "busy mismatch r={}: {b} vs {c}", s.round);
+                }
+                // Degenerate flushes apply the whole cohort at staleness 0.
+                assert_eq!(a.flush_updates, s.scheduled_clients, "r={}", s.round);
+                assert_eq!(a.stale_dropped, 0);
+                assert_eq!(a.staleness_hist[0], a.flush_updates);
+            }
+        }
+    }
+
+    #[test]
+    fn async_buffering_cuts_makespan_under_stragglers() {
+        // The asyncscale acceptance shape at test scale: under heavy
+        // straggler injection on a heterogeneous cluster, buffered
+        // async with staleness room must strictly beat the synchronous
+        // Parrot makespan on the identical selection stream — the
+        // straggler no longer holds the whole cluster at a barrier.
+        let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 9);
+        let dynamics = DynamicsSpec {
+            straggler: StragglerSpec {
+                prob: 0.2,
+                law: SlowdownLaw::Fixed(8.0),
+                drop_prob: 0.0,
+            },
+            ..Default::default()
+        };
+        let build = |scheme| {
+            VirtualSim::new(
+                scheme,
+                ClusterProfile::heterogeneous(8),
+                WorkloadCost::femnist(),
+                CommModel::femnist(),
+                SchedulerKind::Greedy,
+                2,
+                partition.clone(),
+                1,
+                7,
+            )
+            .with_dynamics(dynamics.clone())
+        };
+        let mut sync = build(Scheme::Parrot);
+        let sync_total: f64 =
+            run_virtual(&mut sync, 6, 64, 13).iter().map(|r| r.total_secs).sum();
+        let mut asy = build(Scheme::Async);
+        asy.async_spec =
+            AsyncSpec { buffer: 32, max_staleness: 2, weight: StalenessWeight::Poly(0.5) };
+        let ra = run_virtual(&mut asy, 6, 64, 13);
+        let async_total: f64 = ra.iter().map(|r| r.total_secs).sum();
+        assert!(
+            async_total < sync_total,
+            "async buffered {async_total:.2}s !< sync Parrot {sync_total:.2}s"
+        );
+        // Flush ledger sanity on the same run.
+        let applied: usize = ra.iter().map(|r| r.flush_updates).sum();
+        let stale: usize = ra.iter().map(|r| r.stale_dropped).sum();
+        let completed: usize =
+            ra.iter().map(|r| r.scheduled_clients - r.dropped_clients).sum();
+        assert_eq!(applied + stale, completed, "every update flushed exactly once");
+        assert!(ra.iter().all(|r| r.flush_aggs <= 8));
+    }
+
+    #[test]
+    fn async_state_accounting_balances_engine_vs_store() {
+        use crate::statestore::{SimStore, SimStoreCfg};
+        // The PR-3 booking invariant under overlapped flushes: the
+        // engine's independently booked StateLoad/StateFlush columns
+        // must equal the store's own counters even though cohorts are
+        // admitted mid-stream and tails ride later flush chains.
+        let partition = Partition::generate(PartitionKind::Natural, 60, 62, 100, 7);
+        let s_d: u64 = 1 << 16;
+        let mut sim = VirtualSim::new(
+            Scheme::Async,
+            ClusterProfile::homogeneous(4),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Greedy,
+            2,
+            partition,
+            1,
+            3,
+        )
+        .with_state_store(
+            SimStore::new(SimStoreCfg::new(4, 4, s_d, 64 * s_d as usize).write_back(true)),
+            true,
+        );
+        sim.noise = 0.0;
+        sim.async_spec =
+            AsyncSpec { buffer: 10, max_staleness: 2, weight: StalenessWeight::Poly(0.5) };
+        let rs = run_virtual(&mut sim, 6, 30, 11);
+        let engine_bytes: u64 = rs.iter().map(|r| r.state_bytes).sum();
+        let m = sim.state.as_ref().expect("store attached").store.metrics;
+        assert_eq!(
+            engine_bytes,
+            m.total_bytes(),
+            "async engine state bytes must equal the store's counters"
+        );
+        assert!(engine_bytes > 0);
+        let total_secs: f64 = rs.iter().map(|r| r.total_secs).sum();
+        assert!(total_secs.is_finite() && total_secs > 0.0);
     }
 
     #[test]

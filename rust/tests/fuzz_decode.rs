@@ -121,6 +121,20 @@ fn sample_msgs(g: &mut Gen) -> Vec<Msg> {
                 })
                 .collect(),
         },
+        Msg::AsyncFlush {
+            version: g.int(0, 1 << 20) as u64,
+            broadcast: Broadcast {
+                round: g.int(0, 50),
+                params: gen_params(g),
+                extra: if g.bool() { Some(gen_params(g)) } else { None },
+            },
+        },
+        Msg::AsyncTask {
+            round: g.int(0, 50),
+            client: g.int(0, 1000),
+            version: g.int(0, 1 << 20) as u64,
+            codec: gen_codec(g),
+        },
     ]
 }
 

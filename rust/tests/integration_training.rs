@@ -85,6 +85,59 @@ fn all_algorithms_run_and_learn() {
 }
 
 #[test]
+fn async_scheme_streams_flushes_and_learns() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The streaming async loop end-to-end on real compute: R x M_p
+    // tasks flow through AsyncTask/TaskDone with staleness-weighted
+    // flushes every `buffer` updates; one RoundMetrics per flush.
+    let mut cfg = base_cfg(80);
+    cfg.scheme = parrot::config::Scheme::Async;
+    cfg.rounds = 4;
+    cfg.clients_per_round = 6;
+    cfg.buffer = 3;
+    cfg.max_staleness = 2;
+    cfg.staleness_weight = parrot::aggregation::StalenessWeight::Poly(0.5);
+    cfg.eval_every = 8; // one eval on the final flush
+    let summary = run_simulation(cfg).unwrap();
+    // 24 updates / buffer 3 = 8 flushes (plus maybe an empty-partial none).
+    assert_eq!(summary.metrics.rounds.len(), 8, "one RoundMetrics per flush");
+    let applied: usize = summary.metrics.rounds.iter().map(|r| r.flush_updates).sum();
+    let stale: usize = summary.metrics.rounds.iter().map(|r| r.stale_dropped).sum();
+    assert_eq!(applied + stale, 24, "every update flushed exactly once");
+    for r in &summary.metrics.rounds {
+        assert!(r.bytes_up > 0 && r.bytes_down > 0);
+        assert!(r.wall_secs > 0.0);
+    }
+    let loss = summary.final_loss.expect("eval ran");
+    assert!(loss.is_finite() && loss < 4.2, "implausible final loss {loss}");
+}
+
+#[test]
+fn async_sharded_state_prefetch_round_trips() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Async + sharded state: the rolling-horizon prefetch (StateFetch ->
+    // StatePut forward -> deferred AsyncTask) and the write-back return
+    // path must move state through the coordinator without losing any.
+    let mut cfg = base_cfg(81);
+    cfg.algorithm = "scaffold".into();
+    cfg.scheme = parrot::config::Scheme::Async;
+    cfg.rounds = 3;
+    cfg.clients_per_round = 8;
+    cfg.buffer = 4;
+    cfg.max_staleness = 1;
+    cfg.state_shards = 2;
+    cfg.state_writeback = true;
+    cfg.eval_every = 0;
+    let summary = run_simulation(cfg).unwrap();
+    let state_bytes: u64 = summary.metrics.rounds.iter().map(|r| r.state_bytes).sum();
+    assert!(state_bytes > 0, "off-owner tasks must move state through the server");
+}
+
+#[test]
 fn stateful_algorithms_persist_state() {
     if !artifacts_ready() {
         return;

@@ -59,4 +59,19 @@ if [ "$FAST" -eq 0 ]; then
   rm -rf "$SMOKE_RESULTS"
 fi
 
+# Async-buffered smoke: the virtual dispatcher's flush counters must be
+# reproduced by the deploy-side FlushLedger replaying the identical
+# arrival sequence, and the degenerate (buffer = M_p, max-staleness 0)
+# configuration must match the sync Parrot timeline exactly.
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot exp asyncscale --smoke (seed $SEED)"
+  SMOKE_RESULTS="$(mktemp -d)"
+  if ! target/release/parrot exp asyncscale --smoke \
+      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: asyncscale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+    exit 1
+  fi
+  rm -rf "$SMOKE_RESULTS"
+fi
+
 echo "ci.sh: all green"
