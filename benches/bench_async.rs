@@ -56,7 +56,7 @@ fn drive(n_tasks: usize, cohort_size: usize, k: usize, buffer: usize, stal: usiz
         &dynamics,
         7,
         AsyncSpec { buffer, max_staleness: stal, weight: StalenessWeight::Poly(0.5) },
-        AsyncComm { s_a_down: 44_000_000, s_a_up: 44_000_000, s_e: 0 },
+        AsyncComm { s_a_down: 44_000_000, s_a_up: 44_000_000, s_e: 0, tier: None },
         &mut sched,
         &mut source,
     );

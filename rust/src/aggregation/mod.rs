@@ -370,6 +370,71 @@ impl DeviceAggregate {
     }
 }
 
+/// Fold `src`'s per-entry slots into `dst` — the single merge law every
+/// aggregation tier shares (device→server, device→group, group→group):
+/// averaged accumulators add sums/weights/counts, Collect lists extend.
+fn merge_entry_maps(dst: &mut BTreeMap<String, Slot>, src: BTreeMap<String, Slot>) {
+    for (name, slot) in src {
+        match (dst.get_mut(&name), slot) {
+            (None, s) => {
+                dst.insert(name, s);
+            }
+            (
+                Some(Slot::Params { accum, count, .. }),
+                Slot::Params { accum: a2, count: c2, .. },
+            ) => {
+                accum.merge(&a2);
+                *count += c2;
+            }
+            (
+                Some(Slot::Scalar { sum, weight, count, .. }),
+                Slot::Scalar { sum: s2, weight: w2, count: c2, .. },
+            ) => {
+                *sum += s2;
+                *weight += w2;
+                *count += c2;
+            }
+            (Some(Slot::Collected(v)), Slot::Collected(v2)) => v.extend(v2),
+            _ => panic!("slot kind mismatch for entry {name}"),
+        }
+    }
+}
+
+/// One intermediate aggregation tier (an edge/group aggregator in a
+/// `--topology groups:G | tree:SPEC` run): merges [`DeviceAggregate`]s
+/// and produces another [`DeviceAggregate`], so tiers compose to any
+/// depth — a group aggregate merges upward *exactly* like a device
+/// aggregate (all four [`AggOp`]s, every codec), which is what the
+/// depth-invariance property harness pins.
+pub struct TierAgg {
+    agg: DeviceAggregate,
+}
+
+impl TierAgg {
+    /// `id` labels the tier on the wire (its `DeviceAggregate::device`).
+    pub fn new(id: usize) -> TierAgg {
+        TierAgg {
+            agg: DeviceAggregate { device: id, entries: BTreeMap::new(), n_clients: 0 },
+        }
+    }
+
+    /// Fold one child aggregate (a device's, or a deeper tier's).
+    pub fn merge(&mut self, child: DeviceAggregate) {
+        self.agg.n_clients += child.n_clients;
+        merge_entry_maps(&mut self.agg.entries, child.entries);
+    }
+
+    /// Clients represented so far across all merged children.
+    pub fn n_clients(&self) -> usize {
+        self.agg.n_clients
+    }
+
+    /// The merged aggregate, ready to encode for the next tier up.
+    pub fn finish(self) -> DeviceAggregate {
+        self.agg
+    }
+}
+
 /// The finalized round result at the server.
 #[derive(Debug, Clone, Default)]
 pub struct RoundAggregate {
@@ -396,30 +461,7 @@ impl GlobalAgg {
 
     pub fn merge(&mut self, dev: DeviceAggregate) {
         self.n_clients += dev.n_clients;
-        for (name, slot) in dev.entries {
-            match (self.entries.get_mut(&name), slot) {
-                (None, s) => {
-                    self.entries.insert(name, s);
-                }
-                (
-                    Some(Slot::Params { accum, count, .. }),
-                    Slot::Params { accum: a2, count: c2, .. },
-                ) => {
-                    accum.merge(&a2);
-                    *count += c2;
-                }
-                (
-                    Some(Slot::Scalar { sum, weight, count, .. }),
-                    Slot::Scalar { sum: s2, weight: w2, count: c2, .. },
-                ) => {
-                    *sum += s2;
-                    *weight += w2;
-                    *count += c2;
-                }
-                (Some(Slot::Collected(v)), Slot::Collected(v2)) => v.extend(v2),
-                _ => panic!("slot kind mismatch for entry {name}"),
-            }
-        }
+        merge_entry_maps(&mut self.entries, dev.entries);
     }
 
     /// Apply each entry's OP and produce the round result.
@@ -660,6 +702,52 @@ mod tests {
                 Ok(())
             });
         }
+    }
+
+    #[test]
+    fn tier_agg_composes_to_any_depth() {
+        // device -> group -> super-group -> server must equal flat for
+        // every OP, with wire round trips at every tier boundary.
+        let mut rng = Rng::new(17);
+        let shapes = vec![vec![3, 2], vec![4]];
+        let updates: Vec<ClientUpdate> =
+            (0..12).map(|c| mk_update(&mut rng, c, &shapes)).collect();
+        let flat = flat_aggregate(&updates);
+
+        // 4 devices -> 2 groups -> 1 super-group.
+        let mut groups: Vec<TierAgg> = (0..2).map(TierAgg::new).collect();
+        for dev in 0..4 {
+            let mut local = LocalAgg::new(dev);
+            for (i, u) in updates.iter().enumerate() {
+                if i % 4 == dev {
+                    local.add(u);
+                }
+            }
+            let wire = local.finish().encoded();
+            groups[dev % 2].merge(DeviceAggregate::decode(&wire).unwrap());
+        }
+        let mut root = TierAgg::new(9);
+        for g in groups {
+            assert_eq!(g.n_clients(), 6);
+            let wire = g.finish().encoded();
+            root.merge(DeviceAggregate::decode(&wire).unwrap());
+        }
+        let mut global = GlobalAgg::new();
+        let wire = root.finish().encoded();
+        global.merge(DeviceAggregate::decode(&wire).unwrap());
+        let hier = global.finish();
+
+        assert_eq!(hier.n_clients, 12);
+        for name in ["delta", "delta_c", "h"] {
+            let d = flat.params[name].max_abs_diff(&hier.params[name]);
+            assert!(d < 1e-5, "{name} diff {d}");
+        }
+        assert!((flat.scalars["gsq"] - hier.scalars["gsq"]).abs() < 1e-9);
+        let mut f: Vec<usize> = flat.collected["tau"].iter().map(|x| x.0).collect();
+        let mut h: Vec<usize> = hier.collected["tau"].iter().map(|x| x.0).collect();
+        f.sort_unstable();
+        h.sort_unstable();
+        assert_eq!(f, h, "Collect survives every tier verbatim");
     }
 
     #[test]

@@ -19,6 +19,239 @@
 
 use anyhow::{bail, Result};
 
+/// The aggregation/communication topology of the cluster
+/// (`--topology flat | groups:G | tree:SPEC`).
+///
+/// Parrot's two-tier `LocalAgg → GlobalAgg` pipeline generalizes to an
+/// arbitrary-depth tree: devices live in leaf *groups* (edge
+/// aggregators / sub-clusters), groups merge their members' aggregates
+/// exactly like devices merge clients' (see
+/// [`TierAgg`](crate::aggregation::TierAgg)), and only the merged
+/// group aggregate crosses the root-adjacent (WAN) link.  The tree is
+/// described by per-level fanouts from the server down: `tree:4x2` =
+/// 4 edge sites each split into 2 sub-groups (depth 2);
+/// `groups:G` == `tree:G` (depth 1); `flat` = no aggregator tier (the
+/// legacy device→server pair, byte-identical to the pre-topology
+/// engine).  Devices are assigned to leaf groups round-robin.
+///
+/// Link model: intra-group legs ride the cluster's base (LAN) link;
+/// root-adjacent legs ride the WAN link — by default the same as the
+/// base link (so grouping is compared at equal link speed), overridable
+/// via `groups:G:BW:LAT` / `tree:SPEC:BW:LAT` with `BW` in Gbps and
+/// `LAT` in milliseconds.  Per-group compute profiles
+/// ([`Topology::group_compute`]) multiply the members' task times —
+/// unequal edge sites, the FedHC/Pollen-style heterogeneous
+/// infrastructure knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Aggregation-level fanouts from the server down; empty = flat.
+    /// Leaf-group count = the product of all fanouts.
+    pub levels: Vec<usize>,
+    /// Root-adjacent (WAN) link override (bytes/sec, secs); None = the
+    /// cluster's base link.
+    pub wan: Option<(f64, f64)>,
+    /// Per-leaf-group compute multiplier (1.0 = neutral); empty = all
+    /// groups neutral.
+    pub group_compute: Vec<f64>,
+}
+
+impl Topology {
+    /// The legacy device→server pair (no aggregator tier).
+    pub fn flat() -> Topology {
+        Topology { levels: Vec::new(), wan: None, group_compute: Vec::new() }
+    }
+
+    /// `g` edge groups directly under the server (depth 1).
+    pub fn groups(g: usize) -> Topology {
+        Topology { levels: vec![g], wan: None, group_compute: Vec::new() }
+    }
+
+    /// Arbitrary-depth tree from per-level fanouts.
+    pub fn tree(levels: Vec<usize>) -> Topology {
+        Topology { levels, wan: None, group_compute: Vec::new() }
+    }
+
+    /// Builder: per-leaf-group compute multipliers.
+    pub fn with_group_compute(mut self, scales: Vec<f64>) -> Topology {
+        self.group_compute = scales;
+        self
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Number of aggregation levels between devices and server.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Leaf-group count (0 when flat).
+    pub fn n_groups(&self) -> usize {
+        if self.is_flat() {
+            0
+        } else {
+            self.levels.iter().product()
+        }
+    }
+
+    /// Root-adjacent node count (the aggregates the server merges).
+    pub fn n_top(&self) -> usize {
+        *self.levels.first().unwrap_or(&0)
+    }
+
+    /// Leaf group hosting device `slot` (round-robin placement).
+    pub fn group_of(&self, device: usize) -> usize {
+        let g = self.n_groups();
+        if g == 0 {
+            0
+        } else {
+            device % g
+        }
+    }
+
+    /// Root-adjacent ancestor of leaf group `leaf`.
+    pub fn top_of(&self, leaf: usize) -> usize {
+        let g = self.n_groups();
+        let top = self.n_top();
+        if g == 0 || top == 0 {
+            0
+        } else {
+            leaf / (g / top)
+        }
+    }
+
+    /// Per-leaf-group member device lists over `k` device slots.
+    pub fn members(&self, k: usize) -> Vec<Vec<usize>> {
+        let g = self.n_groups();
+        let mut out = vec![Vec::new(); g];
+        if g == 0 {
+            return out;
+        }
+        for d in 0..k {
+            out[d % g].push(d);
+        }
+        out
+    }
+
+    /// Compute multiplier for device `slot` (per-group profile).
+    pub fn compute_scale(&self, device: usize) -> f64 {
+        if self.is_flat() || self.group_compute.is_empty() {
+            return 1.0;
+        }
+        self.group_compute
+            .get(self.group_of(device))
+            .copied()
+            .unwrap_or(1.0)
+    }
+
+    /// The WAN link given the cluster's base link.
+    pub fn wan_link(&self, base_bandwidth: f64, base_latency: f64) -> (f64, f64) {
+        self.wan.unwrap_or((base_bandwidth, base_latency))
+    }
+
+    /// Parse `flat | groups:G[:BW:LAT] | tree:F1xF2[x...][:BW:LAT]`
+    /// (BW in Gbps, LAT in milliseconds — the WAN link override).
+    pub fn parse(s: &str) -> Result<Topology> {
+        if s == "flat" {
+            return Ok(Topology::flat());
+        }
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("unknown topology {s:?} (flat|groups:G|tree:SPEC)"))?;
+        let mut parts = rest.split(':');
+        let spec = parts.next().unwrap_or("");
+        let levels: Vec<usize> = match kind {
+            "groups" => vec![spec
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad group count {spec:?}"))?],
+            "tree" => spec
+                .split('x')
+                .map(|f| {
+                    f.parse()
+                        .map_err(|_| anyhow::anyhow!("bad tree fanout {f:?} in {spec:?}"))
+                })
+                .collect::<Result<Vec<usize>>>()?,
+            _ => bail!("unknown topology {s:?} (flat|groups:G|tree:SPEC)"),
+        };
+        let mut topo = Topology::tree(levels);
+        if let Some(bw) = parts.next() {
+            let lat = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("topology WAN override needs BW:LAT, got {s:?}"))?;
+            let bw_gbps: f64 = bw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad WAN bandwidth {bw:?} (Gbps)"))?;
+            let lat_ms: f64 = lat
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad WAN latency {lat:?} (ms)"))?;
+            if bw_gbps <= 0.0 || !bw_gbps.is_finite() || lat_ms < 0.0 || !lat_ms.is_finite() {
+                bail!("WAN override must have BW > 0 and LAT >= 0, got {s:?}");
+            }
+            topo.wan = Some((bw_gbps * 1e9 / 8.0, lat_ms * 1e-3));
+        }
+        if parts.next().is_some() {
+            bail!("trailing topology fields in {s:?}");
+        }
+        topo.validate_shape()?;
+        Ok(topo)
+    }
+
+    pub fn name(&self) -> String {
+        if self.is_flat() {
+            return "flat".into();
+        }
+        let spec = if self.depth() == 1 {
+            format!("groups:{}", self.levels[0])
+        } else {
+            format!(
+                "tree:{}",
+                self.levels
+                    .iter()
+                    .map(|f| f.to_string())
+                    .collect::<Vec<_>>()
+                    .join("x")
+            )
+        };
+        match self.wan {
+            None => spec,
+            Some((bw, lat)) => format!("{spec}:{}:{}", bw * 8.0 / 1e9, lat * 1e3),
+        }
+    }
+
+    /// Structural checks independent of the device count.
+    fn validate_shape(&self) -> Result<()> {
+        if self.levels.iter().any(|&f| f == 0) {
+            bail!("topology fanouts must be >= 1: {:?}", self.levels);
+        }
+        for &s in &self.group_compute {
+            if s <= 0.0 || !s.is_finite() {
+                bail!("group compute multipliers must be finite and > 0, got {s}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Full validation against a device count.
+    pub fn validate(&self, n_devices: usize) -> Result<()> {
+        self.validate_shape()?;
+        if self.is_flat() {
+            return Ok(());
+        }
+        let g = self.n_groups();
+        if g > n_devices {
+            bail!("topology has {g} leaf groups but only {n_devices} devices");
+        }
+        if !self.group_compute.is_empty() && self.group_compute.len() != g {
+            bail!(
+                "group_compute has {} entries for {g} groups",
+                self.group_compute.len()
+            );
+        }
+        Ok(())
+    }
+}
+
 /// How a device's effective speed varies over rounds.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Dynamics {
@@ -104,6 +337,9 @@ pub struct ClusterProfile {
     pub bandwidth: f64,
     /// Per-message latency in seconds (one communication trip).
     pub latency: f64,
+    /// Aggregation/communication topology (`--topology`); flat default
+    /// keeps the legacy device→server pair byte-identical.
+    pub topology: Topology,
 }
 
 impl ClusterProfile {
@@ -118,6 +354,7 @@ impl ClusterProfile {
             devices: vec![DeviceModel::uniform(); k],
             bandwidth: 10e9 / 8.0,
             latency: 1e-3,
+            topology: Topology::flat(),
         }
     }
 
@@ -136,6 +373,7 @@ impl ClusterProfile {
             devices,
             bandwidth: 10e9 / 8.0,
             latency: 1e-3,
+            topology: Topology::flat(),
         }
     }
 
@@ -152,6 +390,7 @@ impl ClusterProfile {
             ],
             bandwidth: 10e9 / 8.0,
             latency: 1e-3,
+            topology: Topology::flat(),
         }
     }
 
@@ -169,6 +408,7 @@ impl ClusterProfile {
             devices,
             bandwidth: 10e9 / 8.0,
             latency: 1e-3,
+            topology: Topology::flat(),
         }
     }
 
@@ -180,6 +420,12 @@ impl ClusterProfile {
             "c" | "cluster_c" => ClusterProfile::cluster_c(k),
             _ => bail!("unknown cluster profile {s:?} (homo|hete|dyn|c)"),
         })
+    }
+
+    /// Builder: attach an aggregation topology.
+    pub fn with_topology(mut self, topology: Topology) -> ClusterProfile {
+        self.topology = topology;
+        self
     }
 
     /// Seconds to move `bytes` one way, including one trip latency.
@@ -197,6 +443,8 @@ impl ClusterProfile {
 
     /// Modeled runtime of a task of `n_samples`·`epochs` on device `k`
     /// at round `r` (Eq. 2 with the heterogeneity multipliers applied).
+    /// A grouped topology's per-group compute profile multiplies on top
+    /// (1.0 for flat topologies and neutral groups).
     pub fn task_time(
         &self,
         cost: &WorkloadCost,
@@ -205,7 +453,7 @@ impl ClusterProfile {
         n_samples: usize,
         epochs: usize,
     ) -> f64 {
-        let slow = self.devices[k].slowdown(r, k);
+        let slow = self.devices[k].slowdown(r, k) * self.topology.compute_scale(k);
         (cost.t_sample * (n_samples * epochs) as f64 + cost.b_fixed) * slow
     }
 }
@@ -274,6 +522,82 @@ mod tests {
         assert_eq!(ClusterProfile::parse("homo", 4).unwrap().n_devices(), 4);
         assert_eq!(ClusterProfile::parse("c", 8).unwrap().name, "cluster_c");
         assert!(ClusterProfile::parse("wat", 4).is_err());
+    }
+
+    #[test]
+    fn topology_parse_round_trips_and_validates() {
+        assert!(Topology::parse("flat").unwrap().is_flat());
+        let g = Topology::parse("groups:8").unwrap();
+        assert_eq!(g.n_groups(), 8);
+        assert_eq!(g.depth(), 1);
+        assert_eq!(g.n_top(), 8);
+        let t = Topology::parse("tree:4x2").unwrap();
+        assert_eq!(t.n_groups(), 8);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.n_top(), 4);
+        // round trips through name()
+        for s in ["flat", "groups:8", "tree:4x2", "tree:2x3x2"] {
+            let topo = Topology::parse(s).unwrap();
+            assert_eq!(Topology::parse(&topo.name()).unwrap(), topo, "{s}");
+        }
+        // WAN override: 1 Gbps, 20 ms
+        let w = Topology::parse("groups:4:1:20").unwrap();
+        let (bw, lat) = w.wan_link(1.0, 1.0);
+        assert!((bw - 1e9 / 8.0).abs() < 1.0, "{bw}");
+        assert!((lat - 0.02).abs() < 1e-12, "{lat}");
+        // default WAN == base link
+        assert_eq!(g.wan_link(7.0, 0.5), (7.0, 0.5));
+        // rejects
+        assert!(Topology::parse("groups:x").is_err());
+        assert!(Topology::parse("tree:4x0").is_err());
+        assert!(Topology::parse("rings:3").is_err());
+        assert!(Topology::parse("groups:4:1").is_err());
+        assert!(Topology::parse("groups:4:0:20").is_err());
+        assert!(Topology::parse("groups:4:1:20:9").is_err());
+    }
+
+    #[test]
+    fn topology_membership_round_robin_and_ancestry() {
+        let t = Topology::parse("tree:2x2").unwrap(); // 4 leaf groups
+        let members = t.members(10);
+        assert_eq!(members.len(), 4);
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 10);
+        for (g, mem) in members.iter().enumerate() {
+            assert!(!mem.is_empty(), "round-robin leaves no group empty at k >= groups");
+            for &d in mem {
+                assert_eq!(t.group_of(d), g);
+            }
+        }
+        // leaf -> top ancestry: leaves 0,1 under top 0; 2,3 under top 1
+        assert_eq!(t.top_of(0), 0);
+        assert_eq!(t.top_of(1), 0);
+        assert_eq!(t.top_of(2), 1);
+        assert_eq!(t.top_of(3), 1);
+        // validation against device counts
+        assert!(t.validate(4).is_ok());
+        assert!(t.validate(3).is_err(), "more groups than devices");
+        assert!(Topology::flat().validate(1).is_ok());
+    }
+
+    #[test]
+    fn group_compute_profile_scales_task_time() {
+        let mut c = ClusterProfile::homogeneous(4);
+        let w = WorkloadCost::femnist();
+        let base = c.task_time(&w, 0, 0, 100, 1);
+        c.topology =
+            Topology::groups(2).with_group_compute(vec![1.0, 2.0]);
+        // devices 0,2 in group 0 (neutral); 1,3 in group 1 (2x slower)
+        assert!((c.task_time(&w, 0, 0, 100, 1) - base).abs() < 1e-12);
+        assert!((c.task_time(&w, 1, 0, 100, 1) - 2.0 * base).abs() < 1e-12);
+        assert!((c.task_time(&w, 2, 0, 100, 1) - base).abs() < 1e-12);
+        // group_compute length mismatch rejected
+        let bad = Topology::groups(2).with_group_compute(vec![1.0]);
+        assert!(bad.validate(4).is_err());
+        assert!(Topology::groups(2)
+            .with_group_compute(vec![1.0, 0.0])
+            .validate(4)
+            .is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! only in the transport field (§3.2 zero-code-change migration).
 
 use crate::aggregation::StalenessWeight;
-use crate::cluster::ClusterProfile;
+use crate::cluster::{ClusterProfile, Topology};
 use crate::compress::Codec;
 use crate::coordinator::selection::Selection;
 use crate::data::PartitionKind;
@@ -278,10 +278,19 @@ impl RunConfig {
             self.scheduler = SchedulerKind::parse(s)?;
         }
         self.warmup_rounds = a.usize_or("warmup", self.warmup_rounds)?;
+        // Rebuilding the cluster (profile switch or device-count change)
+        // must not silently drop a topology set earlier (config file →
+        // CLI overlay ordering).
         if let Some(c) = a.get("cluster") {
-            self.cluster = ClusterProfile::parse(c, self.n_devices)?;
+            let topo = self.cluster.topology.clone();
+            self.cluster = ClusterProfile::parse(c, self.n_devices)?.with_topology(topo);
         } else if self.cluster.n_devices() != self.n_devices {
-            self.cluster = ClusterProfile::homogeneous(self.n_devices);
+            let topo = self.cluster.topology.clone();
+            self.cluster =
+                ClusterProfile::homogeneous(self.n_devices).with_topology(topo);
+        }
+        if let Some(t) = a.get("topology") {
+            self.cluster.topology = Topology::parse(t)?;
         }
         self.seed = a.u64_or("seed", self.seed)?;
         self.artifact_dir = a.get_or("artifacts", &self.artifact_dir).to_string();
@@ -367,6 +376,25 @@ impl RunConfig {
                 self.cluster.n_devices(),
                 self.n_devices
             );
+        }
+        let topo = &self.cluster.topology;
+        topo.validate(self.n_devices)?;
+        if !topo.is_flat() {
+            if !matches!(self.scheme, Scheme::Parrot | Scheme::Async) {
+                bail!(
+                    "--topology {} requires hierarchical aggregation \
+                     (--scheme parrot|async); {:?} has no aggregator tier",
+                    topo.name(),
+                    self.scheme
+                );
+            }
+            if self.scheme == Scheme::Async && topo.depth() > 1 {
+                bail!(
+                    "--scheme async prices one aggregator tier: use --topology \
+                     groups:G, not {}",
+                    topo.name()
+                );
+            }
         }
         if self.state_shards > self.n_devices {
             bail!(
@@ -559,6 +587,54 @@ mod tests {
         assert!(RunConfig::default()
             .apply_args(&args(&["--scheme", "async", "--state-shards", "2"]))
             .is_ok());
+    }
+
+    #[test]
+    fn topology_flag_parses_and_validates() {
+        // Default: flat, byte-identical to the pre-topology engine.
+        assert!(RunConfig::default().cluster.topology.is_flat());
+        let c = RunConfig::default()
+            .apply_args(&args(&["--topology", "groups:2"]))
+            .unwrap();
+        assert_eq!(c.cluster.topology.n_groups(), 2);
+        // Survives a cluster rebuild from a later device-count overlay.
+        let c2 = c.apply_args(&args(&["--devices", "8"])).unwrap();
+        assert_eq!(c2.cluster.topology.n_groups(), 2);
+        assert_eq!(c2.cluster.n_devices(), 8);
+        // ... and a profile switch.
+        let c3 = c2.apply_args(&args(&["--cluster", "hete"])).unwrap();
+        assert_eq!(c3.cluster.topology.n_groups(), 2);
+        // Trees parse; deeper-than-one rejected for async only.
+        let t = RunConfig::default()
+            .apply_args(&args(&["--devices", "8", "--per-round", "24", "--topology", "tree:2x2"]))
+            .unwrap();
+        assert_eq!(t.cluster.topology.depth(), 2);
+        assert!(RunConfig::default()
+            .apply_args(&args(&[
+                "--devices", "8", "--per-round", "24", "--scheme", "async",
+                "--topology", "tree:2x2",
+            ]))
+            .is_err());
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--scheme", "async", "--topology", "groups:2"]))
+            .is_ok());
+        // More groups than devices is a config error.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--topology", "groups:99"]))
+            .is_err());
+        // Schemes without an aggregator tier reject grouping.
+        for scheme in ["fa", "sd", "rw", "sp"] {
+            assert!(
+                RunConfig::default()
+                    .apply_args(&args(&["--scheme", scheme, "--topology", "groups:2"]))
+                    .is_err(),
+                "{scheme}"
+            );
+        }
+        // Bad specs rejected.
+        assert!(RunConfig::default()
+            .apply_args(&args(&["--topology", "rings:2"]))
+            .is_err());
     }
 
     #[test]

@@ -66,6 +66,29 @@ pub enum Msg {
     /// here as a protocol check).  The reply is a normal `TaskDone`;
     /// the server tracks the dispatch version for staleness weighting.
     AsyncTask { round: usize, client: usize, version: u64, codec: Codec },
+    /// Server → device (grouped topology, `--topology groups:G`): a
+    /// Parrot round addressed through the device's edge group.  The
+    /// device replies `GroupDone`; the group-aggregator role merges the
+    /// group's device aggregates with a
+    /// [`TierAgg`](crate::aggregation::TierAgg) before anything crosses
+    /// the WAN.
+    GroupRound {
+        round: usize,
+        group: u32,
+        broadcast: Broadcast,
+        clients: Vec<usize>,
+        codec: Codec,
+    },
+    /// Device → group aggregator: the grouped analogue of `RoundDone`,
+    /// tagged with the device's group so the tier merge can route it.
+    GroupDone {
+        group: u32,
+        device: usize,
+        aggregate: DeviceAggregate,
+        records: Vec<TaskRecord>,
+        busy_secs: f64,
+        codec: Codec,
+    },
 }
 
 fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) {
@@ -238,6 +261,29 @@ impl Msg {
                 enc.put_u64(*version);
                 codec.encode_meta(&mut enc);
             }
+            Msg::GroupRound { round, group, broadcast, clients, codec } => {
+                enc.put_u8(12);
+                enc.put_u32(*round as u32);
+                enc.put_u32(*group);
+                codec.encode_meta(&mut enc);
+                encode_broadcast(&mut enc, broadcast);
+                enc.put_u32(clients.len() as u32);
+                for &c in clients {
+                    enc.put_u32(c as u32);
+                }
+            }
+            Msg::GroupDone { group, device, aggregate, records, busy_secs, codec } => {
+                enc.put_u8(13);
+                enc.put_u32(*group);
+                enc.put_u32(*device as u32);
+                codec.encode_meta(&mut enc);
+                enc.put_bytes(&aggregate.encoded_with(*codec));
+                enc.put_u32(records.len() as u32);
+                for r in records {
+                    encode_record(&mut enc, r);
+                }
+                enc.put_f64(*busy_secs);
+            }
         }
         enc.finish()
     }
@@ -341,6 +387,34 @@ impl Msg {
                 let version = dec.u64()?;
                 let codec = Codec::decode_meta(&mut dec)?;
                 Msg::AsyncTask { round, client, version, codec }
+            }
+            12 => {
+                let round = dec.u32()? as usize;
+                let group = dec.u32()?;
+                let codec = Codec::decode_meta(&mut dec)?;
+                let broadcast = decode_broadcast(&mut dec)?;
+                // Each client id is 4 wire bytes.
+                let n = dec.count(4)?;
+                let mut clients = Vec::with_capacity(n);
+                for _ in 0..n {
+                    clients.push(dec.u32()? as usize);
+                }
+                Msg::GroupRound { round, group, broadcast, clients, codec }
+            }
+            13 => {
+                let group = dec.u32()?;
+                let device = dec.u32()? as usize;
+                let codec = Codec::decode_meta(&mut dec)?;
+                let agg_bytes = dec.bytes()?;
+                let aggregate = DeviceAggregate::decode(&agg_bytes)?;
+                // A task record is 4 + 4 + 4 + 8 bytes on the wire.
+                let n = dec.count(20)?;
+                let mut records = Vec::with_capacity(n);
+                for _ in 0..n {
+                    records.push(decode_record(&mut dec)?);
+                }
+                let busy_secs = dec.f64()?;
+                Msg::GroupDone { group, device, aggregate, records, busy_secs, codec }
             }
             t => bail!("unknown msg tag {t}"),
         })
@@ -546,6 +620,55 @@ mod tests {
             other => panic!("Msg::AsyncTask must round-trip to itself, decoded {other:?}"),
         }
         // Truncated async frames error cleanly (bounds-check discipline).
+        let buf = m.encode();
+        for cut in 0..buf.len() {
+            assert!(Msg::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn group_messages_round_trip() {
+        let m = Msg::GroupRound {
+            round: 5,
+            group: 3,
+            broadcast: Broadcast { round: 5, params: params(1.0), extra: None },
+            clients: vec![9, 2, 7],
+            codec: Codec::QInt8,
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::GroupRound { round, group, broadcast, clients, codec } => {
+                assert_eq!((round, group), (5, 3));
+                assert_eq!(broadcast.params, params(1.0));
+                assert_eq!(clients, vec![9, 2, 7]);
+                assert_eq!(codec, Codec::QInt8);
+            }
+            other => panic!("Msg::GroupRound must round-trip to itself, decoded {other:?}"),
+        }
+        let mut la = LocalAgg::new(2);
+        la.add(&ClientUpdate {
+            client: 4,
+            weight: 1.5,
+            entries: vec![("delta".into(), AggOp::WeightedAvg, Payload::Params(params(2.0)))],
+        });
+        let m = Msg::GroupDone {
+            group: 1,
+            device: 2,
+            aggregate: la.finish(),
+            records: vec![TaskRecord { round: 5, device: 2, n_samples: 30, secs: 0.75 }],
+            busy_secs: 1.5,
+            codec: Codec::None,
+        };
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::GroupDone { group, device, aggregate, records, busy_secs, codec } => {
+                assert_eq!((group, device), (1, 2));
+                assert_eq!(aggregate.n_clients, 1);
+                assert_eq!(records.len(), 1);
+                assert_eq!(busy_secs, 1.5);
+                assert_eq!(codec, Codec::None);
+            }
+            other => panic!("Msg::GroupDone must round-trip to itself, decoded {other:?}"),
+        }
+        // Truncated group frames error cleanly.
         let buf = m.encode();
         for cut in 0..buf.len() {
             assert!(Msg::decode(&buf[..cut]).is_err(), "cut at {cut}");

@@ -36,6 +36,13 @@ pub struct RoundMetrics {
     pub flush_updates: usize,
     /// Async scheme: updates discarded for exceeding `--max-staleness`.
     pub stale_dropped: usize,
+    /// Grouped topology: group aggregates merged at the server this
+    /// round (0 on a flat topology).
+    pub group_aggs: usize,
+    /// Grouped topology: measured bytes that crossed the root-adjacent
+    /// (WAN) boundary — one `GroupRound` frame per active group down,
+    /// one merged+encoded group aggregate per group up.
+    pub cross_group_bytes: u64,
 }
 
 /// Whole-run accumulation.
@@ -117,6 +124,8 @@ impl RunMetrics {
                                 .set("utilization", r.utilization)
                                 .set("flush_updates", r.flush_updates)
                                 .set("stale_dropped", r.stale_dropped)
+                                .set("group_aggs", r.group_aggs)
+                                .set("cross_group_bytes", r.cross_group_bytes as i64)
                         })
                         .collect(),
                 ),

@@ -10,7 +10,9 @@
 //! FA pull mode (O(M_p) trips, no local aggregation) — the latter is the
 //! faithful FedScale/Flower-style baseline on identical compute.
 
-use crate::aggregation::{ClientUpdate, GlobalAgg, LocalAgg, RoundAggregate};
+use crate::aggregation::{
+    ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, RoundAggregate, TierAgg,
+};
 use crate::algorithms::{Algo, Broadcast, ServerCtx, ServerState};
 use crate::config::{RunConfig, Scheme};
 use crate::coordinator::asyncbuf::{FlushLedger, FlushPolicy, UpdateDecision};
@@ -536,13 +538,27 @@ impl<T: Transport> Server<T> {
     }
 
     /// Parrot batch round (SP degenerates to K=1 with the same code).
+    /// On a grouped topology (`--topology groups:G | tree:SPEC`) the
+    /// round runs through the group-aggregator role: devices reply
+    /// `GroupDone`, each group's aggregates merge in a [`TierAgg`], and
+    /// only the merged+encoded group aggregate is accounted as crossing
+    /// the WAN (`RoundMetrics::cross_group_bytes`) before the global
+    /// merge — the deploy-side mirror of the engine's tiered tail.
     fn round_parrot(&mut self, round: usize, selected: &[usize]) -> Result<RoundMetrics> {
         let sw = Stopwatch::start();
+        let topo = self.cfg.cluster.topology.clone();
+        let grouped = !topo.is_flat();
         let sizes: Vec<(usize, usize)> = selected
             .iter()
             .map(|&c| (c, self.dataset.client_size(c) * self.cfg.local_epochs))
             .collect();
-        let schedule = self.scheduler.schedule(round, &sizes);
+        let schedule = if grouped {
+            let groups = topo.members(self.cfg.n_devices);
+            let alive = vec![true; self.cfg.n_devices];
+            self.scheduler.schedule_grouped(round, &sizes, &alive, &groups)
+        } else {
+            self.scheduler.schedule(round, &sizes)
+        };
         let bc = self.broadcast(round);
 
         // Plan-driven prefetch: non-owned states must be staged at the
@@ -552,25 +568,49 @@ impl<T: Transport> Server<T> {
 
         let mut bytes_down = 0u64;
         let mut trips = 0u64;
+        let mut cross_bytes = 0u64;
+        let mut top_seen = vec![false; topo.n_top()];
         let mut active = Vec::new();
         for (k, clients) in schedule.assignment.iter().enumerate() {
             if clients.is_empty() {
                 continue;
             }
-            let msg = Msg::Round {
-                round,
-                broadcast: bc.clone(),
-                clients: clients.clone(),
-                codec: self.cfg.compress,
-            }
-            .encode();
+            let msg = if grouped {
+                Msg::GroupRound {
+                    round,
+                    group: topo.group_of(k) as u32,
+                    broadcast: bc.clone(),
+                    clients: clients.clone(),
+                    codec: self.cfg.compress,
+                }
+                .encode()
+            } else {
+                Msg::Round {
+                    round,
+                    broadcast: bc.clone(),
+                    clients: clients.clone(),
+                    codec: self.cfg.compress,
+                }
+                .encode()
+            };
             bytes_down += msg.len() as u64;
             trips += 1;
+            if grouped {
+                // One broadcast per root-adjacent site crosses the WAN;
+                // the deeper relays and member replicas are intra-site.
+                let t = topo.top_of(topo.group_of(k));
+                if !top_seen[t] {
+                    top_seen[t] = true;
+                    cross_bytes += msg.len() as u64;
+                }
+            }
             self.transport.send(k + 1, msg)?;
             active.push(k);
         }
 
         let mut agg = GlobalAgg::new();
+        let mut tiers: Vec<Option<TierAgg>> =
+            (0..topo.n_groups()).map(|_| None).collect();
         let mut bytes_up = 0u64;
         let mut busy = 0.0f64;
         let mut done = 0usize;
@@ -578,9 +618,23 @@ impl<T: Transport> Server<T> {
             let (_, raw) = self.transport.recv(None)?;
             match Msg::decode(&raw)? {
                 Msg::RoundDone { aggregate, records, busy_secs, .. } => {
+                    anyhow::ensure!(!grouped, "flat RoundDone during a grouped round");
                     bytes_up += raw.len() as u64;
                     trips += 1;
                     agg.merge(aggregate);
+                    for r in records {
+                        self.scheduler.record(r);
+                    }
+                    busy += busy_secs;
+                    done += 1;
+                }
+                Msg::GroupDone { group, aggregate, records, busy_secs, .. } => {
+                    anyhow::ensure!(grouped, "GroupDone during a flat round");
+                    let g = group as usize;
+                    anyhow::ensure!(g < tiers.len(), "GroupDone for unknown group {g}");
+                    bytes_up += raw.len() as u64;
+                    trips += 1;
+                    tiers[g].get_or_insert_with(|| TierAgg::new(g)).merge(aggregate);
                     for r in records {
                         self.scheduler.record(r);
                     }
@@ -598,9 +652,38 @@ impl<T: Transport> Server<T> {
                 other => bail!("expected RoundDone, got {other:?}"),
             }
         }
+        // Group-aggregator role: fold the leaf tiers up the topology
+        // tree, one wire re-encode per tier boundary (sim and deploy
+        // apply identical tier-boundary quantization at every level);
+        // only the root-adjacent aggregates are metered as crossing the
+        // WAN — exactly the engine's tiered-tail structure, any depth.
+        let mut group_aggs = 0usize;
+        let mut level_aggs = tiers;
+        for level in (1..topo.depth()).rev() {
+            let fan = topo.levels[level];
+            let n_parents = level_aggs.len() / fan.max(1);
+            let mut parents: Vec<Option<TierAgg>> = (0..n_parents).map(|_| None).collect();
+            for (child, t) in level_aggs.into_iter().enumerate() {
+                if let Some(t) = t {
+                    let wire = t.finish().encoded_with(self.cfg.compress);
+                    parents[child / fan]
+                        .get_or_insert_with(|| TierAgg::new(child / fan))
+                        .merge(DeviceAggregate::decode(&wire)?);
+                }
+            }
+            level_aggs = parents;
+        }
+        for tier in level_aggs {
+            if let Some(t) = tier {
+                let wire = t.finish().encoded_with(self.cfg.compress);
+                cross_bytes += wire.len() as u64;
+                group_aggs += 1;
+                agg.merge(DeviceAggregate::decode(&wire)?);
+            }
+        }
         let result = agg.finish();
         self.apply_round(&result);
-        self.finish_metrics(
+        let mut rm = self.finish_metrics(
             round,
             sw,
             schedule.overhead_secs,
@@ -611,7 +694,10 @@ impl<T: Transport> Server<T> {
             state_bytes,
             state_msgs,
             &result,
-        )
+        )?;
+        rm.group_aggs = group_aggs;
+        rm.cross_group_bytes = cross_bytes;
+        Ok(rm)
     }
 
     /// FA pull round: one task per message, params shipped per task

@@ -138,32 +138,31 @@ impl<T: Transport> Worker<T> {
                     return Ok(());
                 }
                 Msg::Round { round, broadcast, clients, codec } => {
-                    let sw = Stopwatch::start();
-                    let mut local = LocalAgg::new(self.device);
-                    let mut records = Vec::with_capacity(clients.len());
-                    for client in clients {
-                        let (update, rec) = self.run_task(round, &broadcast, client)?;
-                        local.add(&update);
-                        records.push(rec);
-                    }
-                    // Ship updated non-owned states back to their
-                    // owners (via the server) before the round result.
-                    if !self.returns.is_empty() {
-                        let states: Vec<(u64, Option<Vec<u8>>)> =
-                            self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
-                        self.transport.send(0, Msg::StatePut { round, states }.encode())?;
-                    }
-                    // Stale prefetches must not leak into later rounds.
-                    self.staged.clear();
-                    // Round boundary: write-back flush.
-                    self.state.flush()?;
+                    let (aggregate, records, busy_secs) =
+                        self.run_assigned_round(round, &broadcast, clients)?;
                     // Upload with the codec the server negotiated for
                     // this round.
                     let msg = Msg::RoundDone {
                         device: self.device,
-                        aggregate: local.finish(),
+                        aggregate,
                         records,
-                        busy_secs: sw.elapsed_secs(),
+                        busy_secs,
+                        codec,
+                    };
+                    self.transport.send(0, msg.encode())?;
+                }
+                Msg::GroupRound { round, group, broadcast, clients, codec } => {
+                    // Grouped topology: identical round body, but the
+                    // reply carries the device's edge group so the
+                    // group-aggregator tier can merge it before the WAN.
+                    let (aggregate, records, busy_secs) =
+                        self.run_assigned_round(round, &broadcast, clients)?;
+                    let msg = Msg::GroupDone {
+                        group,
+                        device: self.device,
+                        aggregate,
+                        records,
+                        busy_secs,
                         codec,
                     };
                     self.transport.send(0, msg.encode())?;
@@ -256,6 +255,38 @@ impl<T: Transport> Worker<T> {
                 other => anyhow::bail!("worker got unexpected message {other:?}"),
             }
         }
+    }
+
+    /// One assigned Parrot round: train every client sequentially, fold
+    /// into the local aggregate, return state write-backs, flush at the
+    /// round boundary.  Shared by the flat (`Round`→`RoundDone`) and
+    /// grouped (`GroupRound`→`GroupDone`) paths.
+    fn run_assigned_round(
+        &mut self,
+        round: usize,
+        broadcast: &Broadcast,
+        clients: Vec<usize>,
+    ) -> Result<(crate::aggregation::DeviceAggregate, Vec<TaskRecord>, f64)> {
+        let sw = Stopwatch::start();
+        let mut local = LocalAgg::new(self.device);
+        let mut records = Vec::with_capacity(clients.len());
+        for client in clients {
+            let (update, rec) = self.run_task(round, broadcast, client)?;
+            local.add(&update);
+            records.push(rec);
+        }
+        // Ship updated non-owned states back to their owners (via the
+        // server) before the round result.
+        if !self.returns.is_empty() {
+            let states: Vec<(u64, Option<Vec<u8>>)> =
+                self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
+            self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+        }
+        // Stale prefetches must not leak into later rounds.
+        self.staged.clear();
+        // Round boundary: write-back flush.
+        self.state.flush()?;
+        Ok((local.finish(), records, sw.elapsed_secs()))
     }
 
     /// Train one client sequentially (the paper's §3.3).

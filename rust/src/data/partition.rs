@@ -35,7 +35,10 @@ pub struct Partition {
 
 impl Partition {
     /// Generate a partition for `m` clients over `n_classes`, with mean
-    /// per-client size `mean_size`.
+    /// per-client size `mean_size`.  The realized sizes are normalized
+    /// so the pool totals *exactly* `m · mean_size` (the raw draws only
+    /// hit it in expectation), with a floor of 2 samples per client —
+    /// no partitioner can emit a zero-size client.
     pub fn generate(
         kind: PartitionKind,
         m: usize,
@@ -81,6 +84,7 @@ impl Partition {
                 }
             }
         }
+        normalize_sizes(&mut sizes, m * mean_size);
         Partition { kind_name: kind.name(), sizes, label_mix }
     }
 
@@ -103,6 +107,82 @@ impl Partition {
             .sum::<f64>()
             / n;
         var.sqrt() / mean
+    }
+}
+
+/// Rescale `sizes` so they sum to exactly `target` (largest-remainder
+/// rounding, ties by index) while keeping every client at ≥ 2 samples.
+/// Deterministic: no randomness, stable ordering.  Requires
+/// `target >= 2 * sizes.len()` (guaranteed by the `mean_size >= 2`
+/// generate() precondition).
+fn normalize_sizes(sizes: &mut [usize], target: usize) {
+    let m = sizes.len();
+    if m == 0 {
+        return;
+    }
+    let total: usize = sizes.iter().sum();
+    if total == target {
+        return;
+    }
+    let scale = target as f64 / total.max(1) as f64;
+    // Floor-scale with the fractional remainders kept for distribution.
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(m);
+    let mut assigned = 0usize;
+    for (i, s) in sizes.iter_mut().enumerate() {
+        let scaled = *s as f64 * scale;
+        let lo = scaled.floor().max(0.0) as usize;
+        *s = lo;
+        assigned += lo;
+        fracs.push((i, scaled - lo as f64));
+    }
+    // Largest remainder first (ties by index) for the leftover units.
+    fracs.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let mut leftover = target.saturating_sub(assigned);
+    for &(i, _) in &fracs {
+        if leftover == 0 {
+            break;
+        }
+        sizes[i] += 1;
+        leftover -= 1;
+    }
+    // Deterministic argmax: first index holding the maximum.
+    fn argmax(sizes: &[usize]) -> usize {
+        let mut big = 0usize;
+        for (i, &s) in sizes.iter().enumerate() {
+            if s > sizes[big] {
+                big = i;
+            }
+        }
+        big
+    }
+    // fp pathologies only: if flooring still overshot, shave the
+    // largest entries back down (never below the floor of 2).
+    let mut excess = sizes.iter().sum::<usize>().saturating_sub(target);
+    while excess > 0 {
+        let big = argmax(sizes);
+        if sizes[big] <= 2 {
+            break;
+        }
+        sizes[big] -= 1;
+        excess -= 1;
+    }
+    // Re-impose the ≥2 floor, paying for each raise from the largest
+    // clients so the exact total is preserved.
+    for i in 0..m {
+        while sizes[i] < 2 {
+            let big = argmax(sizes);
+            if big == i || sizes[big] <= 2 {
+                // Degenerate (target ~ 2m): just raise without payment.
+                sizes[i] += 1;
+            } else {
+                sizes[i] += 1;
+                sizes[big] -= 1;
+            }
+        }
     }
 }
 
@@ -199,6 +279,103 @@ mod tests {
         assert_eq!(a.sizes, b.sizes);
         let c = Partition::generate(PartitionKind::Natural, 100, 62, 100, 8);
         assert_ne!(a.sizes, c.sizes);
+    }
+
+    #[test]
+    fn sizes_sum_exactly_to_pool_for_every_kind_and_seed() {
+        // The generate() contract: the realized pool is exactly
+        // m · mean_size, whatever the law and the seed.
+        for kind in [
+            PartitionKind::Natural,
+            PartitionKind::Dirichlet(0.1),
+            PartitionKind::QuantitySkew(5.0),
+        ] {
+            for seed in [0u64, 1, 7, 42, 12345] {
+                for (m, mean) in [(1usize, 50usize), (17, 3), (200, 100), (1000, 60)] {
+                    let p = Partition::generate(kind, m, 10, mean, seed);
+                    assert_eq!(
+                        p.total_samples(),
+                        m * mean,
+                        "{}: m={m} mean={mean} seed={seed}",
+                        p.kind_name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_partitioner_emits_zero_size_clients() {
+        // Regression companion to the SizeWeighted zero-size exclusion:
+        // selection may assume every client has data, so the
+        // partitioners must never produce a 0- (or 1-) sample client —
+        // even at the degenerate mean where the floor binds everywhere.
+        for kind in [
+            PartitionKind::Natural,
+            PartitionKind::Dirichlet(0.1),
+            PartitionKind::QuantitySkew(9.0), // heaviest tail
+        ] {
+            for seed in [3u64, 11, 99] {
+                let p = Partition::generate(kind, 500, 62, 2, seed);
+                assert!(
+                    p.sizes.iter().all(|&s| s >= 2),
+                    "{}: min size {:?}",
+                    p.kind_name,
+                    p.sizes.iter().min()
+                );
+                assert_eq!(p.total_samples(), 1000);
+            }
+        }
+    }
+
+    #[test]
+    fn every_label_mix_row_is_a_distribution() {
+        for kind in [
+            PartitionKind::Natural,
+            PartitionKind::Dirichlet(0.1),
+            PartitionKind::Dirichlet(100.0),
+            PartitionKind::QuantitySkew(5.0),
+        ] {
+            let p = Partition::generate(kind, 120, 17, 50, 9);
+            assert_eq!(p.label_mix.len(), 120);
+            for (c, mix) in p.label_mix.iter().enumerate() {
+                assert_eq!(mix.len(), 17, "{}: client {c}", p.kind_name);
+                let sum: f64 = mix.iter().sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-9,
+                    "{}: client {c} mix sums to {sum}",
+                    p.kind_name
+                );
+                assert!(mix.iter().all(|&q| (0.0..=1.0 + 1e-12).contains(&q)));
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_identical_partition_across_kinds() {
+        for kind in [
+            PartitionKind::Natural,
+            PartitionKind::Dirichlet(0.5),
+            PartitionKind::QuantitySkew(5.0),
+        ] {
+            let a = Partition::generate(kind, 150, 12, 80, 31);
+            let b = Partition::generate(kind, 150, 12, 80, 31);
+            assert_eq!(a.sizes, b.sizes);
+            assert_eq!(a.label_mix, b.label_mix, "{}", a.kind_name);
+            let c = Partition::generate(kind, 150, 12, 80, 32);
+            assert_ne!(a.sizes, c.sizes, "{}", a.kind_name);
+        }
+    }
+
+    #[test]
+    fn normalization_preserves_the_size_ordering_shape() {
+        // Rescaling must not reshuffle who is big and who is small:
+        // ranks are preserved up to the ±1 largest-remainder rounding.
+        let p = Partition::generate(PartitionKind::QuantitySkew(5.0), 400, 10, 100, 5);
+        let max = *p.sizes.iter().max().unwrap();
+        let min = *p.sizes.iter().min().unwrap();
+        assert!(max > 4 * min, "quantity skew must survive normalization: {max} vs {min}");
+        assert_eq!(p.total_samples(), 40_000);
     }
 
     #[test]

@@ -209,9 +209,20 @@ pub fn asyncscale(args: &Args) -> Result<()> {
 pub fn smoke(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 19)?;
     let m = args.usize_or("clients", 60)?;
+    let rounds = args.usize_or("rounds", 5)?;
+    let _ = smoke_rows(seed, m, rounds)?;
+    Ok(())
+}
+
+/// The smoke differential proper, returning its deterministic summary
+/// rows (`config,buffer,max_staleness,total_s,flushes,applied,
+/// stale_dropped,hist`) — every column is virtual-time, so a fixed
+/// seed pins the table exactly; the golden-trace regression suite
+/// compares these against a committed snapshot.  All inline agreement
+/// checks (ledger differential + degenerate sync pin) still run.
+pub fn smoke_rows(seed: u64, m: usize, rounds: usize) -> Result<Vec<String>> {
     let m_p = 16usize;
     let k = 4usize;
-    let rounds = args.usize_or("rounds", 5)?;
     let (buffer, max_staleness) = (8usize, 1usize);
     let weight = StalenessWeight::Poly(0.5);
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
@@ -277,5 +288,28 @@ pub fn smoke(args: &Args) -> Result<()> {
          hist {:?}); degenerate pin == sync over {} rounds — OK",
         ledger.flushes, ledger.applied, ledger.stale_dropped, ledger.staleness_hist, rounds
     );
-    Ok(())
+    let hist = eng_hist
+        .iter()
+        .map(|n| n.to_string())
+        .collect::<Vec<_>>()
+        .join("|");
+    let (sync_total, sync_bytes, sync_trips) = totals(&rs_sync);
+    let (deg_total, _, _) = totals(&rs_deg);
+    let (buf_total, buf_bytes, buf_trips) = totals(&rs);
+    Ok(vec![
+        format!(
+            "sync,,,{sync_total:.6},{},{},0,,{sync_bytes},{sync_trips}",
+            rs_sync.len(),
+            rs_sync.iter().map(|r| r.scheduled_clients).sum::<usize>()
+        ),
+        format!(
+            "degenerate,{m_p},0,{deg_total:.6},{},{},0,,,",
+            rs_deg.len(),
+            rs_deg.iter().map(|r| r.flush_updates).sum::<usize>()
+        ),
+        format!(
+            "buffered,{buffer},{max_staleness},{buf_total:.6},{eng_flushes},{eng_applied},\
+             {eng_stale},{hist},{buf_bytes},{buf_trips}"
+        ),
+    ])
 }

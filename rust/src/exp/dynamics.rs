@@ -64,24 +64,19 @@ fn scenarios(rounds: usize) -> Vec<(&'static str, DynamicsSpec)> {
     ]
 }
 
-pub fn dynamics(args: &Args) -> Result<()> {
-    let rounds = args.usize_or("rounds", 9)?;
-    let m = args.usize_or("clients", 1000)?;
-    let m_p = args.usize_or("per-round", 100)?;
-    let k = args.usize_or("devices", 32)?;
-    let seed = args.u64_or("seed", 51)?;
-    // Upload codec (--compress): comm-byte/time columns book *encoded*
-    // upload sizes, so the sweep reflects compression too.
-    let codec = Codec::parse(args.get_or("compress", "none"))?;
-    println!(
-        "Dynamic scenarios — M={m}, M_p={m_p}, K={k}, R={rounds}, compress={} \
-         (discrete-event engine)",
-        codec.name()
-    );
-    println!(
-        "{:<10} {:<14} {:>10} {:>8} {:>9} {:>10} {:>7} {:>6}",
-        "scheme", "scenario", "round(s)", "util", "dropped", "wasted(s)", "leaves", "joins"
-    );
+/// One sweep over scheme × scenario: CSV-formatted summary rows (the
+/// table the golden-trace suite pins), optionally printed as a table.
+/// Every column is virtual-time-deterministic for a fixed seed — no
+/// wallclock leaks in.
+pub fn sweep_rows(
+    rounds: usize,
+    m: usize,
+    m_p: usize,
+    k: usize,
+    seed: u64,
+    codec: Codec,
+    print: bool,
+) -> Vec<String> {
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
     let mut csv = Vec::new();
     for (scheme, sched) in [
@@ -109,23 +104,55 @@ pub fn dynamics(args: &Args) -> Result<()> {
             let wasted: f64 = rs.iter().map(|r| r.wasted_secs).sum();
             let leaves: usize = rs.iter().map(|r| r.departures).sum();
             let joins: usize = rs.iter().map(|r| r.joins).sum();
-            println!(
-                "{:<10} {:<14} {:>10.2} {:>7.1}% {:>9} {:>10.1} {:>7} {:>6}",
-                scheme.name(),
-                tag,
-                t,
-                100.0 * util,
-                dropped,
-                wasted,
-                leaves,
-                joins
-            );
+            if print {
+                println!(
+                    "{:<10} {:<14} {:>10.2} {:>7.1}% {:>9} {:>10.1} {:>7} {:>6}",
+                    scheme.name(),
+                    tag,
+                    t,
+                    100.0 * util,
+                    dropped,
+                    wasted,
+                    leaves,
+                    joins
+                );
+            }
             csv.push(format!(
                 "{},{tag},{t:.3},{util:.4},{dropped},{wasted:.2},{leaves},{joins}",
                 scheme.name()
             ));
         }
     }
+    csv
+}
+
+/// The fixed-seed reduced-scale table `--smoke` prints and the
+/// golden-trace regression suite pins against its committed snapshot.
+pub fn smoke_rows(seed: u64) -> Vec<String> {
+    sweep_rows(6, 120, 24, 8, seed, Codec::None, false)
+}
+
+pub fn dynamics(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let rounds = args.usize_or("rounds", if smoke { 6 } else { 9 })?;
+    let m = args.usize_or("clients", if smoke { 120 } else { 1000 })?;
+    let m_p = args.usize_or("per-round", if smoke { 24 } else { 100 })?;
+    let k = args.usize_or("devices", if smoke { 8 } else { 32 })?;
+    let seed = args.u64_or("seed", 51)?;
+    // Upload codec (--compress): comm-byte/time columns book *encoded*
+    // upload sizes, so the sweep reflects compression too.
+    let codec = Codec::parse(args.get_or("compress", "none"))?;
+    println!(
+        "Dynamic scenarios — M={m}, M_p={m_p}, K={k}, R={rounds}, compress={} \
+         (discrete-event engine{})",
+        codec.name(),
+        if smoke { ", smoke scale" } else { "" }
+    );
+    println!(
+        "{:<10} {:<14} {:>10} {:>8} {:>9} {:>10} {:>7} {:>6}",
+        "scheme", "scenario", "round(s)", "util", "dropped", "wasted(s)", "leaves", "joins"
+    );
+    let csv = sweep_rows(rounds, m, m_p, k, seed, codec, true);
     println!("\n(expected: availability < 1 shrinks effective M_p; churn re-places the");
     println!(" departed device's tasks via the greedy step; stragglers stretch FA/SD");
     println!(" rounds more than Parrot's, whose scheduler re-learns the slow devices.)");

@@ -5,15 +5,18 @@
 //! writes machine-readable JSON + CSV under `results/`.  Invoke through
 //! the launcher: `parrot exp <id>` (ids: table1 table2 table3 fig4 fig5
 //! fig6 fig7 fig8 fig9 fig10 fig11 dynamics compression statescale
-//! asyncscale ablate all).  `dynamics` sweeps the §4.4 availability/
-//! churn/straggler scenarios on the discrete-event engine;
+//! asyncscale toposcale ablate all).  `dynamics` sweeps the §4.4
+//! availability/churn/straggler scenarios on the discrete-event engine;
 //! `compression` sweeps the `--compress` codecs (bytes / round time /
 //! reconstruction error) across schemes; `statescale` sweeps the
 //! distributed client-state store (1000 stateful clients × cache budget
 //! × shard count) against the local-only baseline; `asyncscale` sweeps
 //! asynchronous buffered execution (buffer × staleness law) against
 //! sync Parrot under straggler injection, with the degenerate
-//! configuration pinned equal to the sync timeline.
+//! configuration pinned equal to the sync timeline; `toposcale` sweeps
+//! multi-level hierarchical topologies (`--topology
+//! flat|groups:G|tree:SPEC`) and asserts cross-WAN bytes shrink with
+//! grouping at (near-)equal makespan.
 
 pub mod ablation;
 pub mod asyncscale;
@@ -23,6 +26,7 @@ pub mod dynamics;
 pub mod figures;
 pub mod statescale;
 pub mod tables;
+pub mod toposcale;
 
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
@@ -74,12 +78,13 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "compression" => compression::compression(args),
         "statescale" => statescale::statescale(args),
         "asyncscale" => asyncscale::asyncscale(args),
+        "toposcale" => toposcale::toposcale(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
                 "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
                 "fig10", "fig11", "dynamics", "compression", "statescale", "asyncscale",
-                "fig4",
+                "toposcale", "fig4",
             ] {
                 println!("\n################ {id} ################");
                 run(id, args)?;
@@ -88,7 +93,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         }
         _ => bail!(
             "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
-             compression statescale asyncscale ablate all"
+             compression statescale asyncscale toposcale ablate all"
         ),
     }
 }

@@ -1,0 +1,320 @@
+//! `parrot exp toposcale` — multi-level hierarchical topologies at
+//! acceptance scale: 1000 clients × 32 devices, sweeping
+//! {flat, groups:4, groups:8, groups:16} × {sync Parrot, async
+//! buffered} on the discrete-event engine.  Two hard checks run inline
+//! (the harness fails loudly if either breaks):
+//!
+//! - **cross-WAN shrinkage**: every grouped topology must move strictly
+//!   fewer cross-group (root-adjacent) bytes than flat, monotonically
+//!   shrinking with the group count — the Table-1 comm argument applied
+//!   one tier up (s_a·G instead of s_a·K across the WAN);
+//! - **(near-)equal makespan**: at equal link speed, grouping must not
+//!   cost more than a few percent of total virtual time (the extra LAN
+//!   hop is small next to the compute phase).
+//!
+//! `--smoke` (wired into `scripts/ci.sh`) shrinks the sweep and adds
+//! the sim-vs-deploy group-aggregate differential: the deploy-side
+//! `LocalAgg → TierAgg → GlobalAgg` pipeline — with a wire
+//! encode/decode at every tier boundary, per codec — must agree with
+//! the engine on the group-aggregate structure and reproduce the flat
+//! aggregation's model state within the codec's analytic tolerance at
+//! 1000 clients (`--topology groups:8`), the depth-invariance
+//! acceptance check on the deploy path.
+
+use crate::aggregation::{
+    flat_aggregate, AggOp, ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, Payload,
+    StalenessWeight, TierAgg,
+};
+use crate::cluster::{ClusterProfile, Topology, WorkloadCost};
+use crate::compress::Codec;
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::{Partition, PartitionKind};
+use crate::model::ParamSet;
+use crate::simulation::{run_virtual, AsyncSpec, CommModel, VRound, VirtualSim};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// One swept configuration's totals.
+struct TopoRun {
+    total_secs: f64,
+    bytes: u64,
+    cross_bytes: u64,
+    min_group_aggs: usize,
+    max_group_aggs: usize,
+}
+
+fn run_one(
+    scheme: Scheme,
+    topo: &Topology,
+    partition: &Partition,
+    m_p: usize,
+    k: usize,
+    rounds: usize,
+    seed: u64,
+) -> TopoRun {
+    let cluster = ClusterProfile::heterogeneous(k).with_topology(topo.clone());
+    let mut sim = VirtualSim::new(
+        scheme,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition.clone(),
+        1,
+        seed,
+    );
+    if scheme == Scheme::Async {
+        sim.async_spec = AsyncSpec {
+            buffer: (m_p / 2).max(1),
+            max_staleness: 2,
+            weight: StalenessWeight::Poly(0.5),
+        };
+    }
+    let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0x70F0);
+    summarize(&rs)
+}
+
+fn summarize(rs: &[VRound]) -> TopoRun {
+    // Zero-update async tail records carry no tail chain; skip them for
+    // the group-structure extrema.
+    let tails: Vec<&VRound> = rs.iter().filter(|r| r.group_aggs > 0).collect();
+    TopoRun {
+        total_secs: rs.iter().map(|r| r.total_secs).sum(),
+        bytes: rs.iter().map(|r| r.bytes).sum(),
+        cross_bytes: rs.iter().map(|r| r.cross_group_bytes).sum(),
+        min_group_aggs: tails.iter().map(|r| r.group_aggs).min().unwrap_or(0),
+        max_group_aggs: tails.iter().map(|r| r.group_aggs).max().unwrap_or(0),
+    }
+}
+
+pub fn toposcale(args: &Args) -> Result<()> {
+    if args.flag("smoke") {
+        return smoke(args);
+    }
+    let m = args.usize_or("clients", 1000)?;
+    let m_p = args.usize_or("per-round", 100)?;
+    let k = args.usize_or("devices", 32)?;
+    let rounds = args.usize_or("rounds", 6)?;
+    let seed = args.u64_or("seed", 37)?;
+    let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+    println!(
+        "Hierarchical topologies — M={m}, M_p={m_p}, K={k}, R={rounds} \
+         (heterogeneous cluster, equal LAN/WAN link speed)"
+    );
+    println!(
+        "{:<8} {:<12} {:>10} {:>12} {:>14} {:>10}",
+        "mode", "topology", "total(s)", "bytes(MB)", "cross-WAN(MB)", "grp-aggs"
+    );
+    let mb = |b: u64| b as f64 / (1 << 20) as f64;
+    let mut csv = Vec::new();
+    for (mode, scheme) in [("sync", Scheme::Parrot), ("async", Scheme::Async)] {
+        let mut sweep: Vec<(String, usize, TopoRun)> = Vec::new();
+        for spec in ["flat", "groups:16", "groups:8", "groups:4"] {
+            let topo = Topology::parse(spec)?;
+            let groups = topo.n_groups();
+            let run = run_one(scheme, &topo, &partition, m_p, k, rounds, seed);
+            println!(
+                "{:<8} {:<12} {:>10.2} {:>12.1} {:>14.1} {:>7}-{:<3}",
+                mode,
+                spec,
+                run.total_secs,
+                mb(run.bytes),
+                mb(run.cross_bytes),
+                run.min_group_aggs,
+                run.max_group_aggs
+            );
+            csv.push(format!(
+                "{mode},{spec},{:.3},{},{},{}",
+                run.total_secs, run.bytes, run.cross_bytes, run.max_group_aggs
+            ));
+            sweep.push((spec.to_string(), groups, run));
+        }
+        // Inline acceptance: cross-WAN bytes shrink strictly and
+        // monotonically with grouping, at (near-)equal makespan.
+        let flat = &sweep[0].2;
+        for w in sweep.windows(2) {
+            let (a_name, _, a) = &w[0];
+            let (b_name, _, b) = &w[1];
+            ensure!(
+                b.cross_bytes < a.cross_bytes,
+                "{mode}: cross-WAN bytes must shrink {a_name} -> {b_name}: {} !> {}",
+                a.cross_bytes,
+                b.cross_bytes
+            );
+        }
+        for (name, _, run) in sweep.iter().skip(1) {
+            ensure!(
+                run.total_secs <= flat.total_secs * 1.15 + 1.0,
+                "{mode}/{name}: grouping must keep (near-)equal makespan: \
+                 {:.2}s vs flat {:.2}s",
+                run.total_secs,
+                flat.total_secs
+            );
+        }
+    }
+    println!("\n(grouping moves the K member uploads onto intra-site LAN links; only the");
+    println!(" merged group aggregates — s_a·G instead of s_a·K — cross the WAN, so the");
+    println!(" cross-WAN column shrinks with the group count at near-equal round time.)");
+    super::save_csv(
+        args,
+        "toposcale",
+        "mode,topology,total_s,bytes,cross_group_bytes,group_aggs",
+        &csv,
+    )
+}
+
+/// Synthetic client updates for the deploy-side differential: all four
+/// OPs (WeightedAvg / Avg / Sum / Collect), params + scalars.
+fn mk_updates(m: usize, seed: u64) -> Vec<ClientUpdate> {
+    let shapes = vec![vec![8, 4], vec![6]];
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|c| {
+            let mk_params = |rng: &mut Rng| {
+                let tensors = shapes
+                    .iter()
+                    .map(|s| {
+                        (0..s.iter().product::<usize>())
+                            .map(|_| rng.normal_f32(0.0, 1.0))
+                            .collect()
+                    })
+                    .collect();
+                ParamSet { shapes: shapes.clone(), tensors }
+            };
+            ClientUpdate {
+                client: c,
+                weight: rng.range_f64(1.0, 50.0),
+                entries: vec![
+                    ("delta".into(), AggOp::WeightedAvg, Payload::Params(mk_params(&mut rng))),
+                    ("delta_c".into(), AggOp::Avg, Payload::Params(mk_params(&mut rng))),
+                    ("h".into(), AggOp::Sum, Payload::Params(mk_params(&mut rng))),
+                    ("gsq".into(), AggOp::Sum, Payload::Scalar(rng.next_f64())),
+                    ("tau".into(), AggOp::Collect, Payload::Scalar(rng.next_f64())),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// The `--smoke` differential (scripts/ci.sh): a reduced engine sweep
+/// (cross-WAN shrinkage + near-equal makespan + group-aggregate
+/// structure) plus the deploy-side tier pipeline at 1000 clients.
+pub fn smoke(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 23)?;
+    let (m, m_p, k, rounds) = (1000usize, 100usize, 32usize, 3usize);
+    let n_groups = 8usize;
+    let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+    let topo = Topology::groups(n_groups);
+
+    // (1) engine: flat vs groups:8 on the identical stream.
+    let flat = run_one(Scheme::Parrot, &Topology::flat(), &partition, m_p, k, rounds, seed);
+    let grouped = run_one(Scheme::Parrot, &topo, &partition, m_p, k, rounds, seed);
+    ensure!(
+        grouped.cross_bytes < flat.cross_bytes,
+        "cross-WAN bytes must shrink with grouping: {} !< {}",
+        grouped.cross_bytes,
+        flat.cross_bytes
+    );
+    ensure!(
+        grouped.total_secs <= flat.total_secs * 1.15 + 1.0,
+        "grouped makespan {:.2}s vs flat {:.2}s",
+        grouped.total_secs,
+        flat.total_secs
+    );
+    ensure!(
+        grouped.min_group_aggs == n_groups && grouped.max_group_aggs == n_groups,
+        "engine must merge exactly {n_groups} group aggregates per round, saw {}-{}",
+        grouped.min_group_aggs,
+        grouped.max_group_aggs
+    );
+
+    // (2) deploy-side group-aggregate differential at 1000 clients:
+    // member LocalAggs merge into per-group TierAggs, the merged group
+    // aggregates re-encode for the WAN leg, and the global result must
+    // match flat aggregation within the codec's analytic tolerance —
+    // with the group structure agreeing with the engine's column.
+    let updates = mk_updates(m, seed ^ 0x0770);
+    let members = topo.members(k);
+    let flat_result = flat_aggregate(&updates);
+    let total_weight: f64 = updates.iter().map(|u| u.weight).sum();
+    for codec in [Codec::None, Codec::QInt8] {
+        let mut bounds: BTreeMap<String, f64> = BTreeMap::new();
+        let mut member_wire = 0u64;
+        let mut group_wire = 0u64;
+        let mut global = GlobalAgg::new();
+        let mut n_group_aggs = 0usize;
+        for (g, devs) in members.iter().enumerate() {
+            let mut tier = TierAgg::new(g);
+            for &d in devs {
+                let mut local = LocalAgg::new(d);
+                for u in &updates {
+                    if u.client % k == d {
+                        local.add(u);
+                    }
+                }
+                let agg = local.finish();
+                for (name, b) in agg.reconstruction_bounds(codec) {
+                    *bounds.entry(name).or_insert(0.0) += b;
+                }
+                let wire = agg.encoded_with(codec);
+                member_wire += wire.len() as u64;
+                tier.merge(DeviceAggregate::decode(&wire)?);
+            }
+            let merged = tier.finish();
+            for (name, b) in merged.reconstruction_bounds(codec) {
+                *bounds.entry(name).or_insert(0.0) += b;
+            }
+            let wire = merged.encoded_with(codec);
+            group_wire += wire.len() as u64;
+            n_group_aggs += 1;
+            global.merge(DeviceAggregate::decode(&wire)?);
+        }
+        let hier = global.finish();
+        ensure!(
+            n_group_aggs == n_groups && grouped.max_group_aggs == n_group_aggs,
+            "sim/deploy group-aggregate structure disagrees: engine {} vs deploy {}",
+            grouped.max_group_aggs,
+            n_group_aggs
+        );
+        ensure!(
+            group_wire < member_wire,
+            "{}: merged group aggregates must cross the WAN smaller than the \
+             member uploads: {group_wire} !< {member_wire}",
+            codec.name()
+        );
+        ensure!(hier.n_clients == m, "client count lost in the tier pipeline");
+        let slack = 1e-3;
+        for (name, denom) in [("delta", total_weight), ("delta_c", m as f64), ("h", 1.0)] {
+            let tol = bounds.get(name).copied().unwrap_or(0.0) / denom + slack;
+            let d = flat_result.params[name].max_abs_diff(&hier.params[name]) as f64;
+            ensure!(
+                d <= tol,
+                "{}: {name} drifted {d} > tolerance {tol} through the tiers",
+                codec.name()
+            );
+        }
+        ensure!(
+            (flat_result.scalars["gsq"] - hier.scalars["gsq"]).abs() < 1e-9,
+            "{}: scalar sums must survive the tiers exactly",
+            codec.name()
+        );
+        ensure!(
+            flat_result.collected["tau"].len() == hier.collected["tau"].len(),
+            "{}: Collect entries lost in the tiers",
+            codec.name()
+        );
+    }
+    println!(
+        "toposcale smoke: groups:{n_groups} at {m} clients — cross-WAN {:.1} MB vs flat \
+         {:.1} MB at makespan {:.2}s vs {:.2}s; deploy tier pipeline matches flat \
+         aggregation per codec and the engine's {n_groups} group aggregates — OK",
+        grouped.cross_bytes as f64 / (1 << 20) as f64,
+        flat.cross_bytes as f64 / (1 << 20) as f64,
+        grouped.total_secs,
+        flat.total_secs,
+    );
+    Ok(())
+}

@@ -185,6 +185,162 @@ impl Scheduler {
         }
     }
 
+    /// Two-stage placement over a grouped topology (multi-level
+    /// hierarchy, `--topology groups:G | tree:SPEC`): clients go first
+    /// to a *group* (by state affinity + load through the Alg. 3 cost
+    /// hook, each group priced as the parallel service rate of its
+    /// alive members), then to a device *within* that group by the
+    /// plain greedy min-max step.  `groups[g]` lists group g's device
+    /// slots.  Warm-up / uniform rounds fall back to the flat
+    /// round-robin split (group-agnostic, like `schedule_masked`).
+    pub fn schedule_grouped(
+        &mut self,
+        round: usize,
+        clients: &[(usize, usize)],
+        alive: &[bool],
+        groups: &[Vec<usize>],
+    ) -> Schedule {
+        let zero = vec![0.0; self.n_devices];
+        self.schedule_grouped_from(round, clients, alive, &zero, groups)
+    }
+
+    /// [`Scheduler::schedule_grouped`] generalized for mid-stream
+    /// re-planning (the async dispatcher's incremental admissions):
+    /// each device starts from `base_load` committed seconds.
+    pub fn schedule_grouped_from(
+        &mut self,
+        round: usize,
+        clients: &[(usize, usize)],
+        alive: &[bool],
+        base_load: &[f64],
+        groups: &[Vec<usize>],
+    ) -> Schedule {
+        assert_eq!(alive.len(), self.n_devices, "alive mask length");
+        assert_eq!(base_load.len(), self.n_devices, "base load length");
+        assert!(!groups.is_empty(), "schedule_grouped needs at least one group");
+        let sw = crate::util::timer::Stopwatch::start();
+        let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
+        if uniform_only || round < self.warmup_rounds {
+            let assignment = uniform_assign_masked(clients, alive);
+            return Schedule {
+                assignment,
+                predicted: vec![0.0; self.n_devices],
+                overhead_secs: sw.elapsed_secs(),
+                used_model: false,
+                estimates: None,
+            };
+        }
+        if let Some(w) = self.window() {
+            self.history.prune(round.saturating_sub(w));
+        }
+        let window = self.window();
+        let estimates = self.history.estimate(self.n_devices, round, window);
+
+        // --- stage 1: client -> group -------------------------------
+        // A group's service model: parallel rate of its alive members
+        // (t_sample = 1/Σ 1/t_k, b = mean b_k); its head start = the
+        // mean committed load per member.  Dead/unpriceable groups
+        // price at +∞ and never win (the greedy NaN/∞ guard).
+        let mut device_group = vec![usize::MAX; self.n_devices];
+        for (g, members) in groups.iter().enumerate() {
+            for &d in members {
+                if d < self.n_devices {
+                    device_group[d] = g;
+                }
+            }
+        }
+        let mut gests = Vec::with_capacity(groups.len());
+        let mut galive = Vec::with_capacity(groups.len());
+        let mut gbase = Vec::with_capacity(groups.len());
+        for members in groups {
+            let mut rate = 0.0f64;
+            let mut b_sum = 0.0f64;
+            let mut n = 0usize;
+            let mut base_sum = 0.0f64;
+            for &d in members {
+                if d < self.n_devices && alive[d] {
+                    let e = &estimates[d];
+                    if e.t_sample.is_finite() && e.t_sample > 0.0 {
+                        rate += 1.0 / e.t_sample;
+                    }
+                    if e.b.is_finite() {
+                        b_sum += e.b;
+                    }
+                    base_sum += base_load[d];
+                    n += 1;
+                }
+            }
+            let ok = n > 0 && rate > 0.0;
+            galive.push(ok);
+            gbase.push(if n > 0 { base_sum / n as f64 } else { 0.0 });
+            gests.push(if ok {
+                DeviceEstimate { t_sample: 1.0 / rate, b: b_sum / n as f64, r2: 1.0, n_points: n }
+            } else {
+                DeviceEstimate { t_sample: f64::INFINITY, b: 0.0, r2: 0.0, n_points: 0 }
+            });
+        }
+        // Every group unpriceable (degenerate fits on every alive
+        // device): degrade to the flat greedy step, whose least-loaded
+        // fallback keeps the every-client-placed-exactly-once
+        // invariant — matching the flat scheduler's behavior instead of
+        // silently scheduling nothing.
+        if !galive.iter().any(|&a| a) {
+            let (assignment, predicted) =
+                greedy_assign_from(clients, &estimates, alive, base_load);
+            return Schedule {
+                assignment,
+                predicted,
+                overhead_secs: sw.elapsed_secs(),
+                used_model: true,
+                estimates: Some(estimates),
+            };
+        }
+        let penalty = self.affinity_penalty();
+        let (group_assign, _) = if penalty > 0.0 {
+            let ctx = self.affinity.as_ref().expect("penalty > 0 implies ctx");
+            let extra = |client: usize, g: usize| {
+                let owner = ctx.owner_worker(client);
+                if device_group.get(owner).copied() == Some(g) {
+                    0.0
+                } else {
+                    penalty
+                }
+            };
+            greedy_assign_with_cost(clients, &gests, &galive, &gbase, &extra)
+        } else {
+            greedy_assign_from(clients, &gests, &galive, &gbase)
+        };
+
+        // --- stage 2: client -> device within the group -------------
+        let size_of: std::collections::HashMap<usize, usize> = clients.iter().cloned().collect();
+        let mut assignment = vec![Vec::new(); self.n_devices];
+        let mut predicted = base_load.to_vec();
+        for (g, members) in groups.iter().enumerate() {
+            if group_assign[g].is_empty() {
+                continue;
+            }
+            let sub: Vec<(usize, usize)> =
+                group_assign[g].iter().map(|&c| (c, size_of[&c])).collect();
+            let sub_est: Vec<DeviceEstimate> =
+                members.iter().map(|&d| estimates[d]).collect();
+            let sub_alive: Vec<bool> = members.iter().map(|&d| alive[d]).collect();
+            let sub_base: Vec<f64> = members.iter().map(|&d| base_load[d]).collect();
+            let (sub_assign, sub_w) =
+                greedy_assign_from(&sub, &sub_est, &sub_alive, &sub_base);
+            for (local, &d) in members.iter().enumerate() {
+                assignment[d].extend(sub_assign[local].iter().cloned());
+                predicted[d] = sub_w[local];
+            }
+        }
+        Schedule {
+            assignment,
+            predicted,
+            overhead_secs: sw.elapsed_secs(),
+            used_model: true,
+            estimates: Some(estimates),
+        }
+    }
+
     /// Re-place tasks orphaned by a mid-round device departure: the
     /// same greedy min-max step (Eq. 4) over the surviving devices,
     /// starting from each survivor's already-committed `base_load`
@@ -376,6 +532,134 @@ mod tests {
         // The windowed variant threads its window through estimation.
         let w = Scheduler::new(SchedulerKind::StateAffinity { window: 4, weight_pct: 50 }, 0, 3);
         assert_eq!(w.window(), Some(4));
+    }
+
+    #[test]
+    fn grouped_schedule_partitions_and_balances_across_groups() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 4);
+        for r in 0..3 {
+            for d in 0..4 {
+                s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+            }
+        }
+        let groups = vec![vec![0, 2], vec![1, 3]];
+        let cs = clients(&[90, 80, 70, 60, 50, 40, 30, 20]);
+        let sch = s.schedule_grouped(3, &cs, &[true; 4], &groups);
+        assert!(sch.used_model);
+        // Every client placed exactly once.
+        let mut seen: Vec<usize> = sch.assignment.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        // Homogeneous equal groups: the split must not be lopsided.
+        let g0: usize = sch.assignment[0].len() + sch.assignment[2].len();
+        let g1: usize = sch.assignment[1].len() + sch.assignment[3].len();
+        assert!(g0 >= 2 && g1 >= 2, "groups {g0}/{g1}: {:?}", sch.assignment);
+        // Warm-up falls back to the flat uniform split.
+        let mut w = Scheduler::new(SchedulerKind::Greedy, 5, 4);
+        let sw = w.schedule_grouped(0, &cs, &[true; 4], &groups);
+        assert!(!sw.used_model);
+        assert_eq!(sw.assignment.iter().map(|a| a.len()).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn grouped_schedule_respects_dead_groups_and_member_masks() {
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 4);
+        for r in 0..3 {
+            for d in 0..4 {
+                s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: 1.0 });
+                s.record(TaskRecord { round: r, device: d, n_samples: 200, secs: 2.0 });
+            }
+        }
+        let groups = vec![vec![0, 2], vec![1, 3]];
+        let cs = clients(&[90, 80, 70, 60]);
+        // Group 1 entirely dead: everything lands on group 0's members.
+        let sch = s.schedule_grouped(3, &cs, &[true, false, true, false], &groups);
+        assert!(sch.assignment[1].is_empty() && sch.assignment[3].is_empty());
+        assert_eq!(sch.assignment[0].len() + sch.assignment[2].len(), 4);
+        // One dead member inside a group: its slot stays empty.
+        let sch2 = s.schedule_grouped(3, &cs, &[true, true, false, true], &groups);
+        assert!(sch2.assignment[2].is_empty(), "{:?}", sch2.assignment);
+        let total: usize = sch2.assignment.iter().map(|a| a.len()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn grouped_schedule_with_all_degenerate_fits_still_places_everyone() {
+        // Poisoned history (NaN runtimes) makes every device estimate
+        // non-finite, so no group can be priced — the grouped path must
+        // degrade to the flat greedy step's least-loaded fallback, not
+        // silently schedule nothing.
+        let mut s = Scheduler::new(SchedulerKind::Greedy, 0, 4);
+        for d in 0..4 {
+            s.record(TaskRecord { round: 0, device: d, n_samples: 100, secs: f64::NAN });
+            s.record(TaskRecord { round: 0, device: d, n_samples: 200, secs: f64::NAN });
+        }
+        let groups = vec![vec![0, 2], vec![1, 3]];
+        let cs = clients(&[90, 80, 70, 60, 50]);
+        let sch = s.schedule_grouped(1, &cs, &[true; 4], &groups);
+        let mut seen: Vec<usize> = sch.assignment.iter().flatten().cloned().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..5).collect::<Vec<_>>(), "{:?}", sch.assignment);
+        assert!(sch.predicted.iter().all(|p| p.is_finite()), "{:?}", sch.predicted);
+    }
+
+    #[test]
+    fn grouped_schedule_prefers_fast_groups_and_owner_groups() {
+        use crate::statestore::ShardMap;
+        // Devices 0,2 (group 0) are 4x faster than 1,3 (group 1).
+        let mk = |kind| {
+            let mut s = Scheduler::new(kind, 0, 4);
+            for r in 0..3 {
+                for d in 0..4 {
+                    let slow = if d % 2 == 0 { 1.0 } else { 4.0 };
+                    s.record(TaskRecord { round: r, device: d, n_samples: 100, secs: slow });
+                    s.record(TaskRecord {
+                        round: r,
+                        device: d,
+                        n_samples: 200,
+                        secs: 2.0 * slow,
+                    });
+                }
+            }
+            s
+        };
+        let groups = vec![vec![0, 2], vec![1, 3]];
+        let cs = clients(&[100; 12]);
+        let mut s = mk(SchedulerKind::Greedy);
+        let sch = s.schedule_grouped(3, &cs, &[true; 4], &groups);
+        let g0: usize = sch.assignment[0].len() + sch.assignment[2].len();
+        let g1: usize = sch.assignment[1].len() + sch.assignment[3].len();
+        assert!(g0 > g1, "fast group must absorb more: {g0} vs {g1}");
+        // A dominant affinity pulls every client to its owner's group.
+        let map = ShardMap::new(4);
+        let mut aff = mk(SchedulerKind::StateAffinity { window: 0, weight_pct: 100 });
+        aff.set_affinity(Some(AffinityCtx {
+            map: map.clone(),
+            n_workers: 4,
+            remote_secs: 1e5,
+        }));
+        let sch = aff.schedule_grouped(3, &cs, &[true; 4], &groups);
+        for (dev, list) in sch.assignment.iter().enumerate() {
+            for &c in list {
+                let owner = map.owner(c as u64) as usize % 4;
+                let owner_group = owner % 2; // groups split even/odd slots
+                assert_eq!(
+                    dev % 2,
+                    owner_group,
+                    "client {c} (owner {owner}) landed outside the owner's group: {:?}",
+                    sch.assignment
+                );
+            }
+        }
+        // Zero-weight affinity degrades to plain grouped greedy.
+        let mut zero = mk(SchedulerKind::StateAffinity { window: 0, weight_pct: 0 });
+        zero.set_affinity(Some(AffinityCtx { map, n_workers: 4, remote_secs: 1e5 }));
+        let mut plain = mk(SchedulerKind::Greedy);
+        assert_eq!(
+            zero.schedule_grouped(3, &cs, &[true; 4], &groups).assignment,
+            plain.schedule_grouped(3, &cs, &[true; 4], &groups).assignment
+        );
     }
 
     #[test]

@@ -144,7 +144,7 @@ pub enum ReassignPolicy {
 /// Round-tail communication shape (after the compute phase drains).
 /// Down and up legs carry distinct byte counts: the broadcast ships raw
 /// f32 params while uploads ship the round codec's *encoded* size.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TailComm {
     /// No round-tail communication (SP; FA pays per task instead).
     None,
@@ -154,8 +154,48 @@ pub enum TailComm {
     PerExecutor { down: u64, up: u64 },
     /// One broadcast + one locally-aggregated upload per alive device,
     /// plus the special-params payload (Parrot's hierarchical
-    /// aggregation: upload = s_a·K + s_e·M_p, with s_a encoded).
+    /// aggregation: upload = s_a·K + s_e·M_p, with s_a encoded).  Every
+    /// leg is root-adjacent, so the whole tail books as cross-group
+    /// (WAN) bytes — the flat baseline the `--topology` sweeps compare
+    /// against.
     Hierarchical { s_a_down: u64, s_a_up: u64, s_e_total: u64 },
+    /// Multi-level hierarchical aggregation over a grouped topology
+    /// (`--topology groups:G | tree:SPEC`): member devices merge into
+    /// their leaf-group aggregator over the LAN (group tail bursts
+    /// overlap across groups), intermediate tiers merge upward, and
+    /// only the root-adjacent aggregates serialize into the server NIC
+    /// over the WAN.
+    Tiered(TieredTail),
+}
+
+/// The grouped tail's shape and links (see [`TailComm::Tiered`]).
+///
+/// Pricing model: the down broadcast is one multicast wave per level
+/// (WAN hop, then LAN relays); the up path serializes children into
+/// each parent's NIC (first pays the full payload, the rest pipeline at
+/// one trip latency each — the same law as the flat hierarchical tail)
+/// with sibling parents overlapping; the root-adjacent chain plus the
+/// uncompressible special-params payload ride the WAN.  Leaf-group
+/// liveness is exact (churn-aware); the special-params transfer time is
+/// charged on the WAN leg only (the bottleneck), though its bytes are
+/// metered on every hop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TieredTail {
+    pub s_a_down: u64,
+    pub s_a_up: u64,
+    pub s_e_total: u64,
+    /// Leaf-group id per executor slot.
+    pub group_of: Vec<usize>,
+    /// Leaf-group count (== `levels.iter().product()`).
+    pub n_groups: usize,
+    /// Per-level fanouts from the server down (len = tree depth ≥ 1).
+    pub levels: Vec<usize>,
+    /// Root-adjacent (WAN) link.
+    pub wan_bandwidth: f64,
+    pub wan_latency: f64,
+    /// Intra-group (LAN) link — the cluster's base link.
+    pub lan_bandwidth: f64,
+    pub lan_latency: f64,
 }
 
 /// What a scheme policy hands the engine for one round.
@@ -232,6 +272,14 @@ pub struct RoundOutcome {
     /// Seconds executors stalled waiting on state loads, plus the
     /// round-tail flush time.
     pub state_secs: f64,
+    /// Bytes that crossed the root-adjacent (WAN) links in the round
+    /// tail.  Flat hierarchical tails book every leg here (device↔server
+    /// is root-adjacent); grouped tails book only the top-tier legs —
+    /// the cross-WAN-shrinkage metric of the `--topology` sweeps.
+    pub cross_group_bytes: u64,
+    /// Aggregates the server merged in the tail (alive devices for the
+    /// flat tail, root-adjacent groups for a tiered one).
+    pub group_aggs: usize,
 }
 
 struct Core<'a> {
@@ -260,6 +308,8 @@ struct Core<'a> {
     seq: u64,
     bytes: u64,
     trips: u64,
+    cross_bytes: u64,
+    group_aggs: usize,
     wasted: f64,
     dropped: usize,
     completed: usize,
@@ -546,9 +596,136 @@ impl<'a> Core<'a> {
         }
     }
 
+    /// Price the multi-level tail of a grouped topology (see
+    /// [`TieredTail`] for the model).  Returns the advanced clock.
+    fn run_tiered_tail(&mut self, tt: &TieredTail, initial_mask: &[bool], start: f64) -> f64 {
+        let mut t = start;
+        // An empty fanout list degrades to one level of n_groups.
+        let levels: Vec<usize> =
+            if tt.levels.is_empty() { vec![tt.n_groups] } else { tt.levels.clone() };
+        let depth = levels.len();
+        // Nodes per level, top-down: node_counts[0] = levels[0], ...,
+        // node_counts[depth-1] = n_groups.
+        let mut node_counts = Vec::with_capacity(depth);
+        let mut prod = 1usize;
+        for &f in &levels {
+            prod *= f;
+            node_counts.push(prod);
+        }
+        // Leaf-group liveness, at round start (broadcast) and now (up).
+        let mut init_members = vec![0usize; tt.n_groups];
+        let mut alive_members = vec![0usize; tt.n_groups];
+        for (slot, &grp) in tt.group_of.iter().enumerate() {
+            if slot < self.execs.len() {
+                if initial_mask.get(slot).copied().unwrap_or(false) {
+                    init_members[grp] += 1;
+                }
+                if self.execs[slot].alive {
+                    alive_members[grp] += 1;
+                }
+            }
+        }
+        // Active node masks per level, for a leaf-activity predicate.
+        let active_at = |leaf_active: &[bool], level: usize| -> Vec<bool> {
+            let stride = tt.n_groups / node_counts[level];
+            let mut v = vec![false; node_counts[level]];
+            for (leaf, &a) in leaf_active.iter().enumerate() {
+                if a {
+                    v[leaf / stride] = true;
+                }
+            }
+            v
+        };
+
+        // ---- down: one multicast wave per level ----------------------
+        let init_leaf: Vec<bool> = init_members.iter().map(|&m| m > 0).collect();
+        let init_devices: u64 = init_members.iter().map(|&m| m as u64).sum();
+        if init_devices > 0 {
+            // WAN hop to the root-adjacent nodes.
+            let top_down = active_at(&init_leaf, 0).iter().filter(|&&a| a).count() as u64;
+            t += tt.wan_latency + tt.s_a_down as f64 / tt.wan_bandwidth;
+            self.cross_bytes += tt.s_a_down * top_down;
+            self.bytes += tt.s_a_down * top_down;
+            self.trips += top_down;
+            // LAN relay hops through the intermediate levels.
+            for level in 1..depth {
+                let n = active_at(&init_leaf, level).iter().filter(|&&a| a).count() as u64;
+                t += tt.lan_latency + tt.s_a_down as f64 / tt.lan_bandwidth;
+                self.bytes += tt.s_a_down * n;
+                self.trips += n;
+            }
+            // Final LAN hop: leaf aggregator -> member devices.
+            t += tt.lan_latency + tt.s_a_down as f64 / tt.lan_bandwidth;
+            self.bytes += tt.s_a_down * init_devices;
+            self.trips += init_devices;
+        }
+
+        // ---- up: member bursts overlap across groups, then merge -----
+        let alive_leaf: Vec<bool> = alive_members.iter().map(|&m| m > 0).collect();
+        let k_up: u64 = alive_members.iter().map(|&m| m as u64).sum();
+        if k_up == 0 {
+            self.group_aggs = 0;
+            return t;
+        }
+        // Leaf groups: each group's members serialize into its
+        // aggregator NIC; groups run concurrently (max, not sum).
+        let mut leaf_burst = 0.0f64;
+        for &m in &alive_members {
+            if m > 0 {
+                let tg = tt.lan_latency
+                    + tt.s_a_up as f64 / tt.lan_bandwidth
+                    + (m - 1) as f64 * tt.lan_latency;
+                leaf_burst = leaf_burst.max(tg);
+            }
+        }
+        t += leaf_burst;
+        self.bytes += tt.s_a_up * k_up + tt.s_e_total;
+        self.trips += k_up;
+        // Intermediate merge levels, bottom-up: at level `level` the
+        // active nodes upload their merged aggregate to their parents;
+        // children of one parent serialize, parents overlap.
+        for level in (1..depth).rev() {
+            let children = active_at(&alive_leaf, level);
+            let fan = levels[level];
+            let mut burst = 0.0f64;
+            let mut n_children = 0u64;
+            for parent in 0..node_counts[level - 1] {
+                let c = (0..fan)
+                    .filter(|j| children[parent * fan + j])
+                    .count() as u64;
+                if c > 0 {
+                    let tp = tt.lan_latency
+                        + tt.s_a_up as f64 / tt.lan_bandwidth
+                        + (c - 1) as f64 * tt.lan_latency;
+                    burst = burst.max(tp);
+                    n_children += c;
+                }
+            }
+            t += burst;
+            self.bytes += tt.s_a_up * n_children + tt.s_e_total;
+            self.trips += n_children;
+        }
+        // Root-adjacent chain: the top-tier aggregates serialize into
+        // the server NIC over the WAN, special params at the end.
+        let n_top = active_at(&alive_leaf, 0).iter().filter(|&&a| a).count() as u64;
+        t += tt.wan_latency + tt.s_a_up as f64 / tt.wan_bandwidth;
+        t += (n_top - 1) as f64 * tt.wan_latency;
+        self.bytes += tt.s_a_up * n_top + tt.s_e_total;
+        self.trips += n_top;
+        if tt.s_e_total > 0 {
+            t += tt.s_e_total as f64 / tt.wan_bandwidth;
+        }
+        self.cross_bytes += tt.s_a_up * n_top + tt.s_e_total;
+        self.group_aggs = n_top as usize;
+        t
+    }
+
     /// The round-tail comm chain, expressed as the serialized CommDone
     /// sequence over the server NIC (bytes/trips booked per leg).
-    fn run_tail(&mut self, tail: TailComm, initial_alive: usize) {
+    /// `initial_mask` is the per-slot alive mask at round start (the
+    /// broadcast went to those executors).
+    fn run_tail(&mut self, tail: TailComm, initial_mask: &[bool]) {
+        let initial_alive = initial_mask.iter().filter(|&&a| a).count();
         let end = self.work_end;
         let mut t = end;
         match tail {
@@ -585,8 +762,13 @@ impl<'a> Core<'a> {
                     if s_e_total > 0 {
                         t += s_e_total as f64 / self.cluster.bandwidth;
                     }
+                    self.cross_bytes += s_a_up * k_up + s_e_total;
                 }
+                // Flat tail: every leg is root-adjacent.
+                self.cross_bytes += s_a_down * initial_alive as u64;
+                self.group_aggs = k_up as usize;
             }
+            TailComm::Tiered(tt) => t = self.run_tiered_tail(&tt, initial_mask, t),
         }
         // StateFlush leg: round-boundary dirty write-back plus remote
         // write-back returns, serialized after the comm tail.
@@ -602,7 +784,7 @@ impl<'a> Core<'a> {
     }
 
     fn run(mut self, tail: TailComm, mut sched: Option<&mut Scheduler>) -> RoundOutcome {
-        let initial_alive = self.alive_count();
+        let initial_mask: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
         for slot in 0..self.execs.len() {
             self.try_start(slot);
         }
@@ -658,7 +840,7 @@ impl<'a> Core<'a> {
                 }
             }
         }
-        self.run_tail(tail, initial_alive);
+        self.run_tail(tail, &initial_mask);
         RoundOutcome {
             busy: self.execs.iter().map(|e| e.busy).collect(),
             comm_occ: self.execs.iter().map(|e| e.comm).collect(),
@@ -675,6 +857,8 @@ impl<'a> Core<'a> {
             joins: self.joins,
             state_bytes: self.state_bytes,
             state_secs: self.state_secs,
+            cross_group_bytes: self.cross_bytes,
+            group_aggs: self.group_aggs,
         }
     }
 }
@@ -734,6 +918,8 @@ pub fn run_round(
         seq: 0,
         bytes: 0,
         trips: 0,
+        cross_bytes: 0,
+        group_aggs: 0,
         wasted: 0.0,
         dropped: 0,
         completed: 0,
@@ -822,12 +1008,30 @@ pub struct AsyncSpec {
 }
 
 /// Comm sizes of the async path (the hierarchical shape of Parrot).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct AsyncComm {
     pub s_a_down: u64,
     pub s_a_up: u64,
     /// Special-params bytes per client update.
     pub s_e: u64,
+    /// Grouped-topology pricing (`--topology groups:G` with `--scheme
+    /// async`): member bursts merge at the edge aggregator over the
+    /// LAN, only merged group aggregates cross the WAN.  None = flat.
+    pub tier: Option<AsyncTier>,
+}
+
+/// Depth-1 grouping for the async flush chain (deeper trees are
+/// rejected by config validation — the work-conserving dispatcher
+/// prices exactly one aggregator tier).
+#[derive(Debug, Clone)]
+pub struct AsyncTier {
+    pub n_groups: usize,
+    /// Leaf-group id per executor slot.
+    pub group_of: Vec<usize>,
+    pub wan_bandwidth: f64,
+    pub wan_latency: f64,
+    pub lan_bandwidth: f64,
+    pub lan_latency: f64,
 }
 
 /// One admitted cohort from the dispatcher's source callback: tasks,
@@ -862,6 +1066,12 @@ pub struct FlushRecord {
     pub stale_dropped: usize,
     /// `staleness_hist[s]` = applied updates that were `s` flushes old.
     pub staleness_hist: Vec<usize>,
+    /// Group aggregates this flush merged at the server (contributing
+    /// devices for a flat run, contributing groups when grouped).
+    pub group_aggs: usize,
+    /// Bytes that crossed the root-adjacent (WAN) links in this flush
+    /// chain (all of them for a flat run).
+    pub cross_group_bytes: u64,
     /// Per-executor productive compute seconds in this interval.
     pub busy: Vec<f64>,
     pub completed: usize,
@@ -916,9 +1126,11 @@ struct ChainBatch {
     /// (device, born version) per buffered update.
     updates: Vec<(usize, u64)>,
     aggs: usize,
+    group_aggs: usize,
     chain_secs: f64,
     bytes: u64,
     trips: u64,
+    cross_bytes: u64,
     state_tail_bytes: u64,
     state_tail_secs: f64,
 }
@@ -1137,17 +1349,75 @@ impl<'a> AsyncCore<'a> {
             seen[dev] = true;
         }
         let aggs = seen.iter().filter(|&&s| s).count();
-        let mut secs = self.cluster.comm_time(self.comm.s_a_down as usize);
-        let mut bytes = self.comm.s_a_down * self.devs.len() as u64;
-        let mut trips = self.devs.len() as u64;
-        if aggs > 0 {
-            secs += self.cluster.comm_time(self.comm.s_a_up as usize)
-                + (aggs - 1) as f64 * self.cluster.latency;
-            let s_e_total = self.comm.s_e * n_updates as u64;
-            bytes += self.comm.s_a_up * aggs as u64 + s_e_total;
-            trips += aggs as u64;
-            if s_e_total > 0 {
-                secs += s_e_total as f64 / self.cluster.bandwidth;
+        let s_e_total = self.comm.s_e * n_updates as u64;
+        let mut secs: f64;
+        let mut bytes: u64;
+        let mut trips: u64;
+        let cross_bytes: u64;
+        let group_aggs: usize;
+        match &self.comm.tier {
+            None => {
+                // Flat: the sync hierarchical burst — every leg WAN.
+                secs = self.cluster.comm_time(self.comm.s_a_down as usize);
+                bytes = self.comm.s_a_down * self.devs.len() as u64;
+                trips = self.devs.len() as u64;
+                let mut cross = self.comm.s_a_down * self.devs.len() as u64;
+                if aggs > 0 {
+                    secs += self.cluster.comm_time(self.comm.s_a_up as usize)
+                        + (aggs - 1) as f64 * self.cluster.latency;
+                    bytes += self.comm.s_a_up * aggs as u64 + s_e_total;
+                    trips += aggs as u64;
+                    cross += self.comm.s_a_up * aggs as u64 + s_e_total;
+                    if s_e_total > 0 {
+                        secs += s_e_total as f64 / self.cluster.bandwidth;
+                    }
+                }
+                cross_bytes = cross;
+                group_aggs = aggs;
+            }
+            Some(tier) => {
+                // Grouped: contributing members merge at their edge
+                // aggregator (bursts overlap across groups), merged
+                // group aggregates serialize into the server over the
+                // WAN; the refreshed model fans back out WAN→LAN.
+                let mut members = vec![0usize; tier.n_groups];
+                for (dev, &s) in seen.iter().enumerate() {
+                    if s {
+                        members[tier.group_of[dev]] += 1;
+                    }
+                }
+                let g_aggs = members.iter().filter(|&&m| m > 0).count();
+                // Down: one WAN wave to the groups + one LAN wave to
+                // every device.
+                secs = tier.wan_latency + self.comm.s_a_down as f64 / tier.wan_bandwidth
+                    + tier.lan_latency
+                    + self.comm.s_a_down as f64 / tier.lan_bandwidth;
+                bytes = self.comm.s_a_down * (tier.n_groups + self.devs.len()) as u64;
+                trips = (tier.n_groups + self.devs.len()) as u64;
+                let mut cross = self.comm.s_a_down * tier.n_groups as u64;
+                if g_aggs > 0 {
+                    let mut burst = 0.0f64;
+                    for &m in &members {
+                        if m > 0 {
+                            let tg = tier.lan_latency
+                                + self.comm.s_a_up as f64 / tier.lan_bandwidth
+                                + (m - 1) as f64 * tier.lan_latency;
+                            burst = burst.max(tg);
+                        }
+                    }
+                    secs += burst
+                        + tier.wan_latency
+                        + self.comm.s_a_up as f64 / tier.wan_bandwidth
+                        + (g_aggs - 1) as f64 * tier.wan_latency;
+                    bytes += self.comm.s_a_up * (aggs + g_aggs) as u64 + 2 * s_e_total;
+                    trips += (aggs + g_aggs) as u64;
+                    cross += self.comm.s_a_up * g_aggs as u64 + s_e_total;
+                    if s_e_total > 0 {
+                        secs += s_e_total as f64 / tier.wan_bandwidth;
+                    }
+                }
+                cross_bytes = cross;
+                group_aggs = g_aggs;
             }
         }
         let state_tail_bytes = std::mem::take(&mut self.ready_tail_bytes);
@@ -1159,9 +1429,11 @@ impl<'a> AsyncCore<'a> {
         self.chains.push_back(ChainBatch {
             updates,
             aggs,
+            group_aggs,
             chain_secs: secs,
             bytes,
             trips,
+            cross_bytes,
             state_tail_bytes,
             state_tail_secs,
         });
@@ -1211,6 +1483,8 @@ impl<'a> AsyncCore<'a> {
             aggs: batch.aggs,
             stale_dropped,
             staleness_hist: hist,
+            group_aggs: batch.group_aggs,
+            cross_group_bytes: batch.cross_bytes,
             busy,
             completed: acc.completed,
             dropped: acc.dropped,
@@ -1364,6 +1638,8 @@ impl<'a> AsyncCore<'a> {
                 aggs: 0,
                 stale_dropped: 0,
                 staleness_hist: vec![0; self.spec.max_staleness + 1],
+                group_aggs: 0,
+                cross_group_bytes: 0,
                 busy,
                 completed: acc.completed,
                 dropped: acc.dropped,
@@ -1798,6 +2074,141 @@ mod tests {
         assert_eq!(out.trips, 8);
     }
 
+    // ------------------------------------------------ tiered tails
+
+    fn tiered(k: usize, n_groups: usize, c: &ClusterProfile) -> TieredTail {
+        TieredTail {
+            s_a_down: 1_000_000,
+            s_a_up: 1_000_000,
+            s_e_total: 0,
+            group_of: (0..k).map(|d| d % n_groups).collect(),
+            n_groups,
+            levels: vec![n_groups],
+            wan_bandwidth: c.bandwidth,
+            wan_latency: c.latency,
+            lan_bandwidth: c.bandwidth,
+            lan_latency: c.latency,
+        }
+    }
+
+    #[test]
+    fn flat_hierarchical_tail_books_everything_as_cross_group() {
+        let cost = WorkloadCost::femnist();
+        let plan = plan_assigned(
+            4,
+            &[100; 8],
+            TailComm::Hierarchical { s_a_down: 500, s_a_up: 300, s_e_total: 40 },
+        );
+        let out = run_round(plan, &homo(4), &cost, 0, &static_dynamics(), 1, None);
+        assert_eq!(out.bytes, 4 * 500 + 4 * 300 + 40);
+        assert_eq!(out.cross_group_bytes, out.bytes, "flat tail: every leg is WAN");
+        assert_eq!(out.group_aggs, 4);
+    }
+
+    #[test]
+    fn tiered_tail_prices_groups_and_shrinks_cross_bytes() {
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(4);
+        let tt = tiered(4, 2, &cluster);
+        let (s_a, lat, bw) = (1_000_000u64, cluster.latency, cluster.bandwidth);
+        let plan = plan_assigned(4, &[100; 8], TailComm::Tiered(tt));
+        let out = run_round(plan, &cluster, &cost, 0, &static_dynamics(), 1, None);
+        // bytes: down = s_a·(2 groups + 4 devices); up = s_a·(4 members
+        // + 2 group aggregates).
+        assert_eq!(out.bytes, s_a * (2 + 4) + s_a * (4 + 2));
+        // cross-WAN: only the root-adjacent legs.
+        assert_eq!(out.cross_group_bytes, s_a * 2 + s_a * 2);
+        assert_eq!(out.group_aggs, 2);
+        assert_eq!(out.trips, (2 + 4) + (4 + 2));
+        // time: down wave (WAN hop + member hop) + member burst
+        // (2 members serialize per group, groups overlap) + WAN chain
+        // (2 group aggregates).
+        let payload = s_a as f64 / bw;
+        let want_tail = (lat + payload) + (lat + payload)       // down
+            + (lat + payload + lat)                             // leaf burst
+            + (lat + payload + lat);                            // WAN chain
+        assert!(
+            (out.end - out.work_end - want_tail).abs() < 1e-9,
+            "tail {} vs {want_tail}",
+            out.end - out.work_end
+        );
+        // The flat tail at the same sizes crosses strictly more WAN
+        // bytes (4 uploads + 4 broadcasts vs 2 + 2).
+        let flat = run_round(
+            plan_assigned(
+                4,
+                &[100; 8],
+                TailComm::Hierarchical { s_a_down: s_a, s_a_up: s_a, s_e_total: 0 },
+            ),
+            &cluster,
+            &cost,
+            0,
+            &static_dynamics(),
+            1,
+            None,
+        );
+        assert!(out.cross_group_bytes < flat.cross_group_bytes);
+    }
+
+    #[test]
+    fn tiered_tail_depth_two_adds_one_merge_hop() {
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(4);
+        let mut tt = tiered(4, 4, &cluster); // 4 leaf groups, 1 device each
+        tt.levels = vec![2, 2]; // ... under 2 top-level sites
+        let (s_a, lat, bw) = (1_000_000u64, cluster.latency, cluster.bandwidth);
+        let plan = plan_assigned(4, &[100; 4], TailComm::Tiered(tt));
+        let out = run_round(plan, &cluster, &cost, 0, &static_dynamics(), 1, None);
+        let payload = s_a as f64 / bw;
+        // down: WAN hop + intermediate relay + member hop; up: leaf
+        // burst (1 member) + intermediate merge (2 children serialize,
+        // parents overlap) + WAN chain (2 top aggregates).
+        let want_tail = (lat + payload) + (lat + payload) + (lat + payload)
+            + (lat + payload)
+            + (lat + payload + lat)
+            + (lat + payload + lat);
+        assert!(
+            (out.end - out.work_end - want_tail).abs() < 1e-9,
+            "tail {} vs {want_tail}",
+            out.end - out.work_end
+        );
+        // bytes: down 2 top + 4 leaf relays + 4 devices; up 4 members +
+        // 4 leaf aggs + 2 top aggs.  Cross-WAN: 2 down + 2 up.
+        assert_eq!(out.bytes, s_a * (2 + 4 + 4) + s_a * (4 + 4 + 2));
+        assert_eq!(out.cross_group_bytes, s_a * 4);
+        assert_eq!(out.group_aggs, 2, "the server merges the top tier");
+    }
+
+    #[test]
+    fn tiered_tail_skips_dead_groups() {
+        // Both devices of group 1 never existed (alive=false from the
+        // start): its legs must not be priced or booked.
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(4);
+        let tt = tiered(4, 2, &cluster);
+        let s_a = 1_000_000u64;
+        let tasks: Vec<SimTask> = (0..4).map(|i| SimTask::new(i, 100, 1.0)).collect();
+        let plan = RoundPlan {
+            tasks,
+            n_exec: 4,
+            alive: vec![true, false, true, false], // group 1 = slots 1,3 dead
+            assigned: vec![vec![0, 1], Vec::new(), vec![2, 3], Vec::new()],
+            pull: Vec::new(),
+            refill: RefillPolicy::Assigned,
+            reassign: ReassignPolicy::LeastLoaded,
+            per_task_comm: (0.0, 0.0),
+            per_task_bytes: (0, 0),
+            tail: TailComm::Tiered(tt),
+            state: StatePlan::default(),
+            record_history: false,
+        };
+        let out = run_round(plan, &cluster, &cost, 0, &static_dynamics(), 1, None);
+        assert_eq!(out.group_aggs, 1, "only group 0 reports");
+        // down: 1 group + 2 devices; up: 2 members + 1 group aggregate.
+        assert_eq!(out.bytes, s_a * (1 + 2) + s_a * (2 + 1));
+        assert_eq!(out.cross_group_bytes, s_a * 2);
+    }
+
     // ------------------------------------------------ async dispatcher
 
     use crate::config::SchedulerKind;
@@ -1831,7 +2242,7 @@ mod tests {
     }
 
     fn no_comm() -> AsyncComm {
-        AsyncComm { s_a_down: 0, s_a_up: 0, s_e: 0 }
+        AsyncComm { s_a_down: 0, s_a_up: 0, s_e: 0, tier: None }
     }
 
     fn flat_weight() -> AsyncSpec {

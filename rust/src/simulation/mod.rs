@@ -59,8 +59,8 @@ pub use availability::{
     AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, DynamicsSpec, SlowdownLaw, StragglerSpec,
 };
 pub use engine::{
-    AsyncCohort, AsyncComm, AsyncOutcome, AsyncSpec, Event, FlushRecord, RoundOutcome, RoundPlan,
-    SimTask, TaskState,
+    AsyncCohort, AsyncComm, AsyncOutcome, AsyncSpec, AsyncTier, Event, FlushRecord, RoundOutcome,
+    RoundPlan, SimTask, TaskState, TieredTail,
 };
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
@@ -178,6 +178,14 @@ pub struct VRound {
     pub stale_dropped: usize,
     /// `staleness_hist[s]` = applied updates that were s flushes old.
     pub staleness_hist: Vec<usize>,
+    /// Aggregates the server merged in the round/flush tail: alive
+    /// devices on a flat topology, root-adjacent group aggregates on a
+    /// grouped one (`--topology groups:G | tree:SPEC`).
+    pub group_aggs: usize,
+    /// Bytes that crossed the root-adjacent (WAN) links in the tail —
+    /// all of them on a flat topology, only the top-tier legs on a
+    /// grouped one.  The cross-WAN metric of `parrot exp toposcale`.
+    pub cross_group_bytes: u64,
 }
 
 impl VRound {
@@ -218,6 +226,8 @@ impl VRound {
             flush_aggs: 0,
             stale_dropped: 0,
             staleness_hist: Vec::new(),
+            group_aggs: 0,
+            cross_group_bytes: 0,
         }
     }
 }
@@ -502,6 +512,8 @@ impl VirtualSim {
             flush_aggs: 0,
             stale_dropped: 0,
             staleness_hist: Vec::new(),
+            group_aggs: outcome.group_aggs,
+            cross_group_bytes: outcome.cross_group_bytes,
         }
     }
 
@@ -613,10 +625,19 @@ impl VirtualSim {
     }
 
     /// Parrot: Alg. 3 schedule over the alive devices, hierarchical
-    /// aggregation comm model, history fed back per task.
+    /// aggregation comm model, history fed back per task.  On a grouped
+    /// topology the schedule runs two-stage (client→group by
+    /// affinity+load, then client→device within the group) and the tail
+    /// prices intra-group vs cross-group legs separately.
     fn plan_parrot(&mut self, r: usize, sizes: &[(usize, usize)], k: usize) -> (RoundPlan, f64) {
         let alive = self.device_alive.clone();
-        let mut schedule = self.scheduler.schedule_masked(r, sizes, &alive);
+        let topo = self.cluster.topology.clone();
+        let mut schedule = if topo.is_flat() {
+            self.scheduler.schedule_masked(r, sizes, &alive)
+        } else {
+            let groups = topo.members(k);
+            self.scheduler.schedule_grouped(r, sizes, &alive, &groups)
+        };
         // The estimates the greedy pass used — predictions are fixed
         // at plan time, before any of this round's records land.
         let est = schedule.estimates.take();
@@ -636,6 +657,27 @@ impl VirtualSim {
         }
         let m_p = sizes.len() as u64;
         let state = self.plan_state(r, k, &assigned, &tasks);
+        let tail = if topo.is_flat() {
+            TailComm::Hierarchical {
+                s_a_down: self.comm.s_a,
+                s_a_up: self.comm.s_a_up(),
+                s_e_total: self.comm.s_e * m_p,
+            }
+        } else {
+            let (wan_bw, wan_lat) = topo.wan_link(self.cluster.bandwidth, self.cluster.latency);
+            TailComm::Tiered(TieredTail {
+                s_a_down: self.comm.s_a,
+                s_a_up: self.comm.s_a_up(),
+                s_e_total: self.comm.s_e * m_p,
+                group_of: (0..k).map(|d| topo.group_of(d)).collect(),
+                n_groups: topo.n_groups(),
+                levels: topo.levels.clone(),
+                wan_bandwidth: wan_bw,
+                wan_latency: wan_lat,
+                lan_bandwidth: self.cluster.bandwidth,
+                lan_latency: self.cluster.latency,
+            })
+        };
         let plan = RoundPlan {
             tasks,
             n_exec: k,
@@ -646,11 +688,7 @@ impl VirtualSim {
             reassign: ReassignPolicy::Greedy,
             per_task_comm: (0.0, 0.0),
             per_task_bytes: (0, 0),
-            tail: TailComm::Hierarchical {
-                s_a_down: self.comm.s_a,
-                s_a_up: self.comm.s_a_up(),
-                s_e_total: self.comm.s_e * m_p,
-            },
+            tail,
             state,
             record_history: true,
         };
@@ -706,10 +744,26 @@ pub fn run_async_detailed(
         ..sim.async_spec
     };
     let k = sim.cluster.n_devices();
+    let topo = sim.cluster.topology.clone();
+    let tier = if topo.is_flat() {
+        None
+    } else {
+        let (wan_bw, wan_lat) = topo.wan_link(sim.cluster.bandwidth, sim.cluster.latency);
+        Some(AsyncTier {
+            n_groups: topo.n_groups(),
+            group_of: (0..k).map(|d| topo.group_of(d)).collect(),
+            wan_bandwidth: wan_bw,
+            wan_latency: wan_lat,
+            lan_bandwidth: sim.cluster.bandwidth,
+            lan_latency: sim.cluster.latency,
+        })
+    };
+    let groups = topo.members(k);
     let comm = AsyncComm {
         s_a_down: sim.comm.s_a,
         s_a_up: sim.comm.s_a_up(),
         s_e: sim.comm.s_e,
+        tier,
     };
     let avail_seed = sim.dyn_seed ^ 0xA11A;
     let dyn_seed = sim.dyn_seed;
@@ -760,8 +814,13 @@ pub fn run_async_detailed(
         }
         // Incremental Alg. 3: greedy placement from the executors'
         // current projected loads (all zero exactly at a flush
-        // boundary, where this equals the barrier schedule).
-        let mut schedule = sched.schedule_from(c, &sizes, alive, base);
+        // boundary, where this equals the barrier schedule).  Grouped
+        // topologies place two-stage (client→group, then →device).
+        let mut schedule = if groups.is_empty() {
+            sched.schedule_from(c, &sizes, alive, base)
+        } else {
+            sched.schedule_grouped_from(c, &sizes, alive, base, &groups)
+        };
         let est = schedule.estimates.take();
         let size_of: std::collections::HashMap<usize, usize> = sizes.iter().cloned().collect();
         let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
@@ -839,6 +898,8 @@ pub fn run_async_detailed(
             flush_aggs: f.aggs,
             stale_dropped: f.stale_dropped,
             staleness_hist: f.staleness_hist.clone(),
+            group_aggs: f.group_aggs,
+            cross_group_bytes: f.cross_group_bytes,
         })
         .collect();
     (vrounds, outcome)

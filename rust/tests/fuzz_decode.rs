@@ -135,6 +135,31 @@ fn sample_msgs(g: &mut Gen) -> Vec<Msg> {
             version: g.int(0, 1 << 20) as u64,
             codec: gen_codec(g),
         },
+        Msg::GroupRound {
+            round: g.int(0, 50),
+            group: g.int(0, 32) as u32,
+            broadcast: Broadcast {
+                round: g.int(0, 50),
+                params: gen_params(g),
+                extra: if g.bool() { Some(gen_params(g)) } else { None },
+            },
+            clients: (0..g.int(0, 20)).map(|_| g.int(0, 1000)).collect(),
+            codec: gen_codec(g),
+        },
+        Msg::GroupDone {
+            group: g.int(0, 32) as u32,
+            device: g.int(0, 8),
+            aggregate: {
+                let mut la = LocalAgg::new(g.int(0, 8));
+                for _ in 0..g.int(1, 3) {
+                    la.add(&gen_update(g));
+                }
+                la.finish()
+            },
+            records: vec![record],
+            busy_secs: g.f64(0.0, 10.0),
+            codec: gen_codec(g),
+        },
     ]
 }
 
@@ -235,6 +260,38 @@ fn hostile_length_prefixes_error_before_allocating() {
     enc.put_u8(0); // codec none
     enc.put_bytes(&agg_bytes);
     enc.put_u32(u32::MAX); // record count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // GroupRound with a huge client list after a valid empty broadcast
+    let mut enc = Encoder::new();
+    enc.put_u8(12); // GroupRound tag
+    enc.put_u32(1); // round
+    enc.put_u32(3); // group
+    enc.put_u8(0); // codec none
+    enc.put_u32(0); // broadcast round
+    enc.put_u32(0); // empty param set
+    enc.put_u8(0); // no extra
+    enc.put_u32(u32::MAX); // client count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // GroupDone with a huge record count after a valid empty aggregate
+    let agg_bytes = LocalAgg::new(0).finish().encoded();
+    let mut enc = Encoder::new();
+    enc.put_u8(13); // GroupDone tag
+    enc.put_u32(2); // group
+    enc.put_u32(0); // device
+    enc.put_u8(0); // codec none
+    enc.put_bytes(&agg_bytes);
+    enc.put_u32(u32::MAX); // record count
+    assert!(Msg::decode(&enc.finish()).is_err());
+
+    // GroupDone whose aggregate blob length prefix overruns the frame
+    let mut enc = Encoder::new();
+    enc.put_u8(13);
+    enc.put_u32(2);
+    enc.put_u32(0);
+    enc.put_u8(0);
+    enc.put_u32(u32::MAX); // aggregate blob length, no payload
     assert!(Msg::decode(&enc.finish()).is_err());
 
     // State-store frames: huge client/state counts and a huge blob

@@ -1,0 +1,110 @@
+//! Golden-trace regression suite: pins the summary tables of
+//! `parrot exp dynamics --smoke` and `parrot exp asyncscale --smoke`
+//! (fixed seeds, virtual-time-only columns) against committed
+//! snapshots, so engine/scheduler refactors cannot silently change the
+//! timelines.
+//!
+//! Comparison rules: integer columns must match exactly; float columns
+//! are tolerance-banded (relative 1e-6) to absorb innocuous
+//! cross-platform fp noise while still catching real drift; everything
+//! else is compared as a string.
+//!
+//! Snapshots are *blessed on first run*: if `rust/tests/golden/<name>`
+//! is missing, the test writes the freshly computed table there and
+//! passes (scripts/ci.sh runs the test suite twice per invocation, so
+//! a blessed snapshot is verified within the same CI run).  To
+//! intentionally re-pin after a behavior change, delete the snapshot
+//! file and re-run `cargo test --test golden_traces`, then commit the
+//! regenerated file with the change that moved it.
+
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+}
+
+/// Compare one CSV field under the integer-exact / float-banded rules.
+fn field_matches(want: &str, got: &str) -> Result<(), String> {
+    if want == got {
+        return Ok(());
+    }
+    if let (Ok(a), Ok(b)) = (want.parse::<i64>(), got.parse::<i64>()) {
+        if a == b {
+            return Ok(());
+        }
+        return Err(format!("integer column {a} != {b}"));
+    }
+    if let (Ok(a), Ok(b)) = (want.parse::<f64>(), got.parse::<f64>()) {
+        let tol = 1e-6 * a.abs().max(1.0);
+        if (a - b).abs() <= tol {
+            return Ok(());
+        }
+        return Err(format!("float column {b} outside {a} ± {tol}"));
+    }
+    Err(format!("column {want:?} != {got:?}"))
+}
+
+fn check_golden(name: &str, rows: &[String]) {
+    let path = golden_dir().join(name);
+    if !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+        let mut body = rows.join("\n");
+        body.push('\n');
+        std::fs::write(&path, body).expect("write golden snapshot");
+        eprintln!(
+            "golden_traces: blessed new snapshot {} ({} rows) — commit it",
+            path.display(),
+            rows.len()
+        );
+        return;
+    }
+    let want_body = std::fs::read_to_string(&path).expect("read golden snapshot");
+    let want: Vec<&str> = want_body.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(
+        want.len(),
+        rows.len(),
+        "{name}: snapshot has {} rows, run produced {} — timelines drifted \
+         (delete the snapshot to re-pin deliberately)",
+        want.len(),
+        rows.len()
+    );
+    for (i, (w, g)) in want.iter().zip(rows).enumerate() {
+        let wf: Vec<&str> = w.split(',').collect();
+        let gf: Vec<&str> = g.split(',').collect();
+        assert_eq!(
+            wf.len(),
+            gf.len(),
+            "{name} row {i}: column count changed\n  snapshot: {w}\n  run:      {g}"
+        );
+        for (j, (a, b)) in wf.iter().zip(&gf).enumerate() {
+            if let Err(e) = field_matches(a, b) {
+                panic!(
+                    "{name} row {i} col {j}: {e}\n  snapshot: {w}\n  run:      {g}\n\
+                     (engine/scheduler timeline drifted; delete \
+                     rust/tests/golden/{name} to re-pin deliberately)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_dynamics_smoke_table() {
+    // Fixed seed 51 — the `exp dynamics --smoke` default.
+    let rows = parrot::exp::dynamics::smoke_rows(51);
+    assert_eq!(rows.len(), 15, "3 schemes x 5 scenarios");
+    check_golden("dynamics_smoke.csv", &rows);
+}
+
+#[test]
+fn golden_asyncscale_smoke_table() {
+    // Fixed seed 19 — the `exp asyncscale --smoke` default.  smoke_rows
+    // also re-runs the ledger differential and the degenerate sync pin.
+    let rows = parrot::exp::asyncscale::smoke_rows(19, 60, 5)
+        .expect("asyncscale smoke differential must hold");
+    assert_eq!(rows.len(), 3, "sync / degenerate / buffered rows");
+    check_golden("asyncscale_smoke.csv", &rows);
+}

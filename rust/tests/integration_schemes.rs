@@ -2,8 +2,10 @@
 //! comparative claims as executable assertions (the same engine the
 //! Fig-5..11 harnesses use, at reduced scale for test budget).
 
-use parrot::aggregation::{AggOp, ClientUpdate, LocalAgg, Payload};
-use parrot::cluster::{ClusterProfile, WorkloadCost};
+use parrot::aggregation::{
+    flat_aggregate, AggOp, ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, Payload, TierAgg,
+};
+use parrot::cluster::{ClusterProfile, Topology, WorkloadCost};
 use parrot::compress::{self, Codec};
 use parrot::config::{Scheme, SchedulerKind};
 use parrot::data::{Partition, PartitionKind};
@@ -12,7 +14,9 @@ use parrot::simulation::{
     run_virtual, AvailabilityModel, ChurnEvent, ChurnKind, ChurnSpec, CommModel, DynamicsSpec,
     SlowdownLaw, StragglerSpec, VRound, VirtualSim,
 };
+use parrot::util::prop::{self, Gen};
 use parrot::util::rng::Rng;
+use std::collections::BTreeMap;
 
 fn sim(
     scheme: Scheme,
@@ -208,6 +212,218 @@ fn dynamic_sweep_at_paper_scale_completes_with_nondegenerate_utilization() {
     let (rw, fa) = (utils[0].1, utils[1].1);
     assert!((rw - fa).abs() > 1e-3, "RW/SD {rw} vs FA {fa} should differ");
     assert!(utils.iter().all(|&(_, u)| u < 0.999));
+}
+
+// ---------------------------------------------------------------
+// Depth-invariance property harness: hierarchical aggregation over a
+// *random tree* (depth 1–4, uneven fan-out, empty branches allowed)
+// equals flat aggregation for every AggOp × codec, with a wire
+// encode/decode at every tier boundary.  Runs under the printed
+// PARROT_PROP_SEED (scripts/ci.sh replays the suite on a random seed).
+
+fn prop_params(rng: &mut Rng, shapes: &[Vec<usize>]) -> ParamSet {
+    let tensors = shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<usize>().max(1))
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect()
+        })
+        .collect();
+    ParamSet { shapes: shapes.to_vec(), tensors }
+}
+
+fn prop_update(rng: &mut Rng, client: usize, shapes: &[Vec<usize>]) -> ClientUpdate {
+    ClientUpdate {
+        client,
+        weight: rng.range_f64(1.0, 100.0),
+        entries: vec![
+            ("delta".into(), AggOp::WeightedAvg, Payload::Params(prop_params(rng, shapes))),
+            ("delta_c".into(), AggOp::Avg, Payload::Params(prop_params(rng, shapes))),
+            ("h".into(), AggOp::Sum, Payload::Params(prop_params(rng, shapes))),
+            ("snap".into(), AggOp::Collect, Payload::Params(prop_params(rng, shapes))),
+            ("tau".into(), AggOp::Collect, Payload::Scalar(rng.next_f64())),
+            ("gsq".into(), AggOp::Sum, Payload::Scalar(rng.next_f64())),
+        ],
+    }
+}
+
+/// Aggregate `idxs` through a random tree of `depth` remaining tier
+/// levels; every child is serialized with `codec` before merging into
+/// its parent (exactly what the wire does), and each encode's
+/// reconstruction bound accumulates into `bounds`.
+fn tier_aggregate(
+    g: &mut Gen,
+    updates: &[ClientUpdate],
+    idxs: &[usize],
+    depth: usize,
+    codec: Codec,
+    bounds: &mut BTreeMap<String, f64>,
+    next_id: &mut usize,
+) -> DeviceAggregate {
+    let id = *next_id;
+    *next_id += 1;
+    if depth == 0 || idxs.len() <= 1 {
+        let mut local = LocalAgg::new(id);
+        for &i in idxs {
+            local.add(&updates[i]);
+        }
+        return local.finish();
+    }
+    // Uneven fan-out: each update lands in a uniformly random child —
+    // some children may stay empty (an aggregator with no clients).
+    let fan = g.int(1, 4);
+    let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); fan];
+    for &i in idxs {
+        let c = g.int(0, fan - 1);
+        chunks[c].push(i);
+    }
+    let mut tier = TierAgg::new(id);
+    for ch in chunks {
+        let child = tier_aggregate(g, updates, &ch, depth - 1, codec, bounds, next_id);
+        for (name, b) in child.reconstruction_bounds(codec) {
+            *bounds.entry(name).or_insert(0.0) += b;
+        }
+        let wire = child.encoded_with(codec);
+        tier.merge(DeviceAggregate::decode(&wire).expect("tier wire round trip"));
+    }
+    tier.finish()
+}
+
+#[test]
+fn prop_depth_invariance_tree_aggregation_equals_flat() {
+    // The §4.2 guarantee lifted to arbitrary-depth topologies: a tree
+    // of TierAggs (groups-of-groups, uneven fan-out) must reproduce
+    // flat aggregation within the codec's accumulated analytic bound,
+    // and Collect ("Special Params") entries must survive every tier
+    // verbatim.
+    for codec in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.4)] {
+        prop::check(&format!("depth invariance under {}", codec.name()), 20, |g| {
+            let shapes = vec![vec![g.int(1, 6), g.int(1, 6)], vec![g.int(1, 12)]];
+            let m = g.int(1, 24);
+            let depth = g.int(1, 4);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let updates: Vec<ClientUpdate> =
+                (0..m).map(|c| prop_update(&mut rng, c, &shapes)).collect();
+            let flat = flat_aggregate(&updates);
+            let total_weight: f64 = updates.iter().map(|u| u.weight).sum();
+
+            let mut bounds: BTreeMap<String, f64> = BTreeMap::new();
+            let mut next_id = 0usize;
+            let idxs: Vec<usize> = (0..m).collect();
+            let root =
+                tier_aggregate(g, &updates, &idxs, depth, codec, &mut bounds, &mut next_id);
+            // The server's final merge consumes the root's wire form
+            // too — one more encode, one more bound contribution.
+            for (name, b) in root.reconstruction_bounds(codec) {
+                *bounds.entry(name).or_insert(0.0) += b;
+            }
+            let wire = root.encoded_with(codec);
+            let mut global = GlobalAgg::new();
+            global.merge(DeviceAggregate::decode(&wire).map_err(|e| e.to_string())?);
+            let hier = global.finish();
+
+            if hier.n_clients != m {
+                return Err(format!("client count {} != {m}", hier.n_clients));
+            }
+            // f32 reassociation slack: sums add in tree order, not flat
+            // order; deeper trees reassociate more.
+            let slack = 1e-3;
+            let checks = [
+                ("delta", bounds.get("delta").copied().unwrap_or(0.0) / total_weight),
+                ("delta_c", bounds.get("delta_c").copied().unwrap_or(0.0) / m as f64),
+                ("h", bounds.get("h").copied().unwrap_or(0.0)),
+            ];
+            for (name, tol) in checks {
+                let d = flat.params[name].max_abs_diff(&hier.params[name]) as f64;
+                if d > tol + slack {
+                    return Err(format!(
+                        "{} depth={depth} m={m}: {name} diff {d} > bound {tol} + {slack}",
+                        codec.name()
+                    ));
+                }
+            }
+            if (flat.scalars["gsq"] - hier.scalars["gsq"]).abs() > 1e-9 {
+                return Err("gsq sum drifted through the tiers".into());
+            }
+            // Collect survives every tier verbatim, any depth.
+            for coll in ["tau", "snap"] {
+                let mut f: Vec<&(usize, Payload)> = flat.collected[coll].iter().collect();
+                let mut h: Vec<&(usize, Payload)> = hier.collected[coll].iter().collect();
+                f.sort_by_key(|x| x.0);
+                h.sort_by_key(|x| x.0);
+                if f.len() != h.len() {
+                    return Err(format!("{coll}: collected count mismatch"));
+                }
+                for (a, b) in f.iter().zip(&h) {
+                    if a.0 != b.0 {
+                        return Err(format!("{coll}: client set mismatch"));
+                    }
+                    let exact = match (&a.1, &b.1) {
+                        (Payload::Params(p), Payload::Params(q)) => p.max_abs_diff(q) == 0.0,
+                        (x, y) => x == y,
+                    };
+                    if !exact {
+                        return Err(format!(
+                            "{}: {coll} not forwarded verbatim at depth {depth}",
+                            codec.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn grouped_topology_engine_matches_flat_aggregation_semantics() {
+    // The engine-side acceptance shape at test scale: a grouped
+    // topology must strictly shrink cross-WAN bytes vs flat on the
+    // identical stream at (near-)equal makespan, with the group
+    // structure visible in the new VRound columns.
+    let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 21);
+    let run = |topology: Topology| {
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(8).with_topology(topology),
+            WorkloadCost::femnist(),
+            CommModel::femnist(),
+            SchedulerKind::Greedy,
+            2,
+            partition.clone(),
+            1,
+            9,
+        );
+        run_virtual(&mut sim, 6, 64, 5)
+    };
+    let flat = run(Topology::flat());
+    let grouped = run(Topology::groups(4));
+    let total = |rs: &[VRound]| rs.iter().map(|r| r.total_secs).sum::<f64>();
+    let cross = |rs: &[VRound]| rs.iter().map(|r| r.cross_group_bytes).sum::<u64>();
+    assert!(
+        cross(&grouped) < cross(&flat),
+        "grouping must shrink cross-WAN bytes: {} !< {}",
+        cross(&grouped),
+        cross(&flat)
+    );
+    assert!(
+        total(&grouped) <= total(&flat) * 1.15 + 1.0,
+        "grouped makespan {:.2} vs flat {:.2}",
+        total(&grouped),
+        total(&flat)
+    );
+    for r in &grouped {
+        assert_eq!(r.group_aggs, 4, "round {}: all four groups must report", r.round);
+        assert!(r.cross_group_bytes < r.bytes, "round {}: some legs are LAN", r.round);
+    }
+    for r in &flat {
+        assert_eq!(r.group_aggs, 8, "flat: one aggregate per device");
+        assert_eq!(r.cross_group_bytes, r.bytes, "flat: every leg is WAN");
+    }
+    // Same number of clients trained either way.
+    let done = |rs: &[VRound]| rs.iter().map(|r| r.scheduled_clients).sum::<usize>();
+    assert_eq!(done(&flat), done(&grouped));
 }
 
 #[test]

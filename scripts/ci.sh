@@ -26,10 +26,29 @@ cargo clippy --all-targets -- -D warnings
 if [ "$FAST" -eq 0 ]; then
   echo "==> cargo build --release"
   cargo build --release
+
+  # Benches only compile when invoked by hand and can rot silently;
+  # --no-run keeps them building without paying for a measurement run.
+  echo "==> cargo bench --no-run"
+  cargo bench --no-run
 fi
 
 echo "==> cargo test -q  (property/fuzz suites run on their fixed default seed)"
 cargo test -q
+
+# Golden-trace snapshots: a first run blesses missing snapshots, so a
+# second pass in the same CI invocation genuinely verifies them.
+echo "==> cargo test -q --test golden_traces (verify committed/blessed snapshots)"
+cargo test -q --test golden_traces
+# Freshly blessed snapshots only protect future runs once committed.
+if command -v git >/dev/null 2>&1; then
+  UNTRACKED_GOLDEN="$(git ls-files --others --exclude-standard rust/tests/golden 2>/dev/null || true)"
+  if [ -n "$UNTRACKED_GOLDEN" ]; then
+    echo "ci.sh: NOTE — newly blessed golden snapshots are uncommitted:" >&2
+    echo "$UNTRACKED_GOLDEN" >&2
+    echo "ci.sh: commit them so timeline drift is caught across revisions." >&2
+  fi
+fi
 
 # Second property/fuzz pass on a fresh random master seed, so the
 # suites keep exploring new cases run-to-run.  On failure the seed is
@@ -69,6 +88,22 @@ if [ "$FAST" -eq 0 ]; then
   if ! target/release/parrot exp asyncscale --smoke \
       --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
     echo "ci.sh: asyncscale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+    exit 1
+  fi
+  rm -rf "$SMOKE_RESULTS"
+fi
+
+# Topology smoke: the engine must shrink cross-WAN bytes with grouping
+# at (near-)equal makespan, and the deploy-side LocalAgg -> TierAgg ->
+# GlobalAgg pipeline (wire round trips at every tier, per codec) must
+# match flat aggregation and the engine's group-aggregate structure at
+# 1000 clients.
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot exp toposcale --smoke (seed $SEED)"
+  SMOKE_RESULTS="$(mktemp -d)"
+  if ! target/release/parrot exp toposcale --smoke \
+      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: toposcale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
     exit 1
   fi
   rm -rf "$SMOKE_RESULTS"
