@@ -65,10 +65,10 @@ fn main() {
         la.add(u);
     }
     let dev = la.finish();
-    let wire = dev.encoded();
+    let wire = dev.encoded().unwrap();
     println!("device aggregate wire size: {:.2} MB", wire.len() as f64 / (1 << 20) as f64);
 
-    b.bench_throughput("device_agg.encode (bytes)", wire.len(), || dev.encoded());
+    b.bench_throughput("device_agg.encode (bytes)", wire.len(), || dev.encoded().unwrap());
     b.bench_throughput("device_agg.decode (bytes)", wire.len(), || {
         parrot::aggregation::DeviceAggregate::decode(&wire).unwrap()
     });
@@ -111,5 +111,5 @@ fn main() {
         acc.add_scaled(&a, 0.5);
     });
     b.bench_throughput("param delta (elems)", numel, || a.delta(&c));
-    b.bench_throughput("param to_bytes (elems)", numel, || a.to_bytes());
+    b.bench_throughput("param to_bytes (elems)", numel, || a.to_bytes().unwrap());
 }

@@ -63,7 +63,7 @@ fn main() {
     // Sanity: scheduled makespan beats uniform on heterogeneous devices.
     let est = estimates(8);
     let cs = clients(100, 7);
-    let sizes: std::collections::HashMap<usize, usize> = cs.iter().cloned().collect();
+    let sizes = parrot::scheduler::greedy::size_table(&cs);
     let (ga, _) = greedy_assign(&cs, &est);
     let ua = uniform_assign(&cs, 8);
     let gm = parrot::scheduler::greedy::makespan(&ga, &sizes, &est);

@@ -10,6 +10,10 @@
 //! HLO, replayed by the L3 coordinator over K simulated devices, with
 //! the loss going down and accuracy climbing far above chance.
 
+// Wallclock here is reporting-only (progress lines), not simulation
+// state; exempt from the ambient-clock ban.
+#![allow(clippy::disallowed_methods)]
+
 use parrot::config::RunConfig;
 use parrot::coordinator::run_simulation;
 use parrot::util::cli::Args;

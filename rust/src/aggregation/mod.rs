@@ -11,6 +11,11 @@
 //! from M_p to K (Table 1).  Collect entries are forwarded verbatim —
 //! the s_e·M_p term the paper says cannot be optimized further.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use crate::compress::Codec;
 use crate::model::params::{ParamSet, WeightedAccum};
 use crate::util::codec::{Decoder, Encoder};
@@ -71,21 +76,23 @@ impl Payload {
     /// Wire size under a codec — what actually crosses the transport.
     pub fn encoded_size(&self, codec: Codec) -> usize {
         let mut enc = Encoder::new();
-        self.encode_with(&mut enc, codec);
+        self.encode_with(&mut enc, codec)
+            .expect("payload exceeds wire limits");
         enc.len()
     }
 
-    pub(crate) fn encode_with(&self, enc: &mut Encoder, codec: Codec) {
+    pub(crate) fn encode_with(&self, enc: &mut Encoder, codec: Codec) -> Result<()> {
         match self {
             Payload::Params(p) => {
                 enc.put_u8(0);
-                p.encode_with(enc, codec);
+                p.encode_with(enc, codec)?;
             }
             Payload::Scalar(x) => {
                 enc.put_u8(1);
                 enc.put_f64(*x);
             }
         }
+        Ok(())
     }
 
     pub(crate) fn decode(dec: &mut Decoder) -> Result<Payload> {
@@ -250,7 +257,7 @@ impl LocalAgg {
 
 impl DeviceAggregate {
     /// Serialized wire form (the comm-size metric of Table 1), raw f32.
-    pub fn encoded(&self) -> Vec<u8> {
+    pub fn encoded(&self) -> Result<Vec<u8>> {
         self.encoded_with(Codec::None)
     }
 
@@ -260,18 +267,18 @@ impl DeviceAggregate {
     /// term the paper says cannot be optimized further.  The stream is
     /// self-describing (per-tensor codec tags), so `decode` needs no
     /// negotiation context.
-    pub fn encoded_with(&self, codec: Codec) -> Vec<u8> {
+    pub fn encoded_with(&self, codec: Codec) -> Result<Vec<u8>> {
         let mut enc = Encoder::new();
         enc.put_u32(self.device as u32);
         enc.put_u32(self.n_clients as u32);
-        enc.put_u32(self.entries.len() as u32);
+        enc.put_len(self.entries.len())?;
         for (name, slot) in &self.entries {
-            enc.put_str(name);
+            enc.put_str(name)?;
             match slot {
                 Slot::Params { op, accum, count } => {
                     enc.put_u8(0);
                     enc.put_u8(op.code());
-                    accum.sum.encode_with(&mut enc, codec);
+                    accum.sum.encode_with(&mut enc, codec)?;
                     enc.put_f64(accum.weight);
                     enc.put_u32(*count as u32);
                 }
@@ -284,15 +291,15 @@ impl DeviceAggregate {
                 }
                 Slot::Collected(items) => {
                     enc.put_u8(2);
-                    enc.put_u32(items.len() as u32);
+                    enc.put_len(items.len())?;
                     for (client, p) in items {
                         enc.put_u32(*client as u32);
-                        p.encode_with(&mut enc, Codec::None);
+                        p.encode_with(&mut enc, Codec::None)?;
                     }
                 }
             }
         }
-        enc.finish()
+        Ok(enc.finish())
     }
 
     pub fn decode(buf: &[u8]) -> Result<DeviceAggregate> {
@@ -338,13 +345,15 @@ impl DeviceAggregate {
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.encoded().len()
+        self.encoded().expect("aggregate exceeds wire limits").len()
     }
 
     /// Encoded wire size under a codec — the measured per-upload byte
     /// count the compression experiments report.
     pub fn size_bytes_with(&self, codec: Codec) -> usize {
-        self.encoded_with(codec).len()
+        self.encoded_with(codec)
+            .expect("aggregate exceeds wire limits")
+            .len()
     }
 
     /// Per-Params-entry worst-case element error of `encoded_with
@@ -585,7 +594,7 @@ mod tests {
                     }
                 }
                 // Serialize across the "network" like the real path does.
-                let wire = local.finish().encoded();
+                let wire = local.finish().encoded().unwrap();
                 global.merge(DeviceAggregate::decode(&wire).unwrap());
             }
             let hier = global.finish();
@@ -646,7 +655,7 @@ mod tests {
                     for (name, b) in agg.reconstruction_bounds(codec) {
                         *bounds.entry(name).or_insert(0.0) += b;
                     }
-                    let wire = agg.encoded_with(codec);
+                    let wire = agg.encoded_with(codec).unwrap();
                     global.merge(DeviceAggregate::decode(&wire).unwrap());
                 }
                 let hier = global.finish();
@@ -723,17 +732,17 @@ mod tests {
                     local.add(u);
                 }
             }
-            let wire = local.finish().encoded();
+            let wire = local.finish().encoded().unwrap();
             groups[dev % 2].merge(DeviceAggregate::decode(&wire).unwrap());
         }
         let mut root = TierAgg::new(9);
         for g in groups {
             assert_eq!(g.n_clients(), 6);
-            let wire = g.finish().encoded();
+            let wire = g.finish().encoded().unwrap();
             root.merge(DeviceAggregate::decode(&wire).unwrap());
         }
         let mut global = GlobalAgg::new();
-        let wire = root.finish().encoded();
+        let wire = root.finish().encoded().unwrap();
         global.merge(DeviceAggregate::decode(&wire).unwrap());
         let hier = global.finish();
 
@@ -822,11 +831,11 @@ mod tests {
             local.add(&mk_update(&mut rng, c, &shapes));
         }
         let agg = local.finish();
-        let wire = agg.encoded();
+        let wire = agg.encoded().unwrap();
         let back = DeviceAggregate::decode(&wire).unwrap();
         assert_eq!(back.device, 2);
         assert_eq!(back.n_clients, 5);
-        assert_eq!(back.encoded(), wire);
+        assert_eq!(back.encoded().unwrap(), wire);
     }
 
     #[test]
@@ -868,7 +877,7 @@ mod tests {
         let raw = p.encoded_size(Codec::None);
         // encoded_size is the measured wire length, codec-sensitive
         let mut enc = Encoder::new();
-        p.encode_with(&mut enc, Codec::None);
+        p.encode_with(&mut enc, Codec::None).unwrap();
         assert_eq!(raw, enc.len());
         assert!(p.encoded_size(Codec::Fp16) < raw);
         assert!(p.encoded_size(Codec::QInt8) * 3 < raw);

@@ -1,0 +1,179 @@
+//! Baseline ratchet for `parrot lint`.
+//!
+//! The committed `lint.baseline` grandfathers pre-existing findings as
+//! `(rule, file) -> count` entries.  The ratchet only turns one way:
+//!
+//!   * actual > baseline  — new debt; the run FAILS,
+//!   * actual < baseline  — debt paid down; the run passes but warns
+//!     so the baseline gets tightened (`--write-baseline`),
+//!   * a baseline entry whose file has no findings at all is stale and
+//!     also warns.
+//!
+//! Counts (not line numbers) key the ratchet so unrelated edits that
+//! shift lines don't churn the committed file.
+
+use super::rules::Finding;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// `(rule, file) -> grandfathered count`, ordered for stable renders.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    pub entries: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    /// Parse the committed format: one `rule file count` triple per
+    /// line, `#` comments and blank lines ignored.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let mut entries = BTreeMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (rule, file, count) = match (it.next(), it.next(), it.next(), it.next()) {
+                (Some(r), Some(f), Some(c), None) => (r, f, c),
+                _ => bail!("lint baseline line {}: expected `rule file count`, got {raw:?}", i + 1),
+            };
+            let count: usize = count
+                .parse()
+                .map_err(|_| anyhow::anyhow!("lint baseline line {}: bad count {count:?}", i + 1))?;
+            if count == 0 {
+                bail!("lint baseline line {}: zero-count entry is noise — delete it", i + 1);
+            }
+            entries.insert((rule.to_string(), file.to_string()), count);
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Render findings back into the committed format (the
+    /// `--write-baseline` path).
+    pub fn render(findings: &[Finding]) -> String {
+        let counts = count_by_group(findings);
+        let mut out = String::from(
+            "# parrot lint baseline — grandfathered findings, keyed (rule, file, count).\n\
+             # The ratchet only goes down: counts may shrink, never grow.\n\
+             # Regenerate (after deliberately paying debt down) with:\n\
+             #   parrot lint --write-baseline\n",
+        );
+        for ((rule, file), n) in &counts {
+            out.push_str(&format!("{rule} {file} {n}\n"));
+        }
+        out
+    }
+}
+
+/// Findings grouped to baseline keys.
+pub fn count_by_group(findings: &[Finding]) -> BTreeMap<(String, String), usize> {
+    let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for f in findings {
+        *counts.entry((f.rule.to_string(), f.file.clone())).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Outcome of resolving a run against the baseline.
+#[derive(Debug, Default)]
+pub struct Resolution {
+    /// Findings in groups that exceed their grandfathered count —
+    /// these fail the run.  The whole offending group is listed (the
+    /// analyzer cannot know which of N+1 findings is "the new one").
+    pub violations: Vec<Finding>,
+    /// `(rule, file, baseline, actual)` where actual < baseline:
+    /// tighten the committed file.
+    pub slack: Vec<(String, String, usize, usize)>,
+}
+
+pub fn resolve(findings: &[Finding], baseline: &Baseline) -> Resolution {
+    let counts = count_by_group(findings);
+    let mut res = Resolution::default();
+    for (key, &actual) in &counts {
+        let allowed = baseline.entries.get(key).copied().unwrap_or(0);
+        if actual > allowed {
+            res.violations.extend(
+                findings
+                    .iter()
+                    .filter(|f| f.rule == key.0 && f.file == key.1)
+                    .cloned(),
+            );
+        } else if actual < allowed {
+            res.slack.push((key.0.clone(), key.1.clone(), allowed, actual));
+        }
+    }
+    for (key, &allowed) in &baseline.entries {
+        if !counts.contains_key(key) {
+            res.slack.push((key.0.clone(), key.1.clone(), allowed, 0));
+        }
+    }
+    res.violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    res.slack.sort();
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: usize) -> Finding {
+        Finding { rule, file: file.to_string(), line, message: String::new() }
+    }
+
+    #[test]
+    fn parse_render_round_trip() {
+        let b = Baseline::parse("# comment\npanicking-decode util/codec.rs 2\n").unwrap();
+        assert_eq!(
+            b.entries.get(&("panicking-decode".into(), "util/codec.rs".into())),
+            Some(&2)
+        );
+        let fs = vec![
+            finding("panicking-decode", "util/codec.rs", 10),
+            finding("panicking-decode", "util/codec.rs", 20),
+        ];
+        let rendered = Baseline::render(&fs);
+        assert_eq!(Baseline::parse(&rendered).unwrap(), b);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_zero_entries() {
+        assert!(Baseline::parse("only-two fields\n").is_err());
+        assert!(Baseline::parse("rule file notanumber\n").is_err());
+        assert!(Baseline::parse("rule file 0\n").is_err());
+    }
+
+    #[test]
+    fn ratchet_fails_above_warns_below() {
+        let base = Baseline::parse("panicking-decode util/codec.rs 2\n").unwrap();
+        let two = vec![
+            finding("panicking-decode", "util/codec.rs", 10),
+            finding("panicking-decode", "util/codec.rs", 20),
+        ];
+        // at baseline: clean, no slack
+        let r = resolve(&two, &base);
+        assert!(r.violations.is_empty() && r.slack.is_empty());
+
+        // one extra finding: the whole group fails
+        let mut three = two.clone();
+        three.push(finding("panicking-decode", "util/codec.rs", 30));
+        let r = resolve(&three, &base);
+        assert_eq!(r.violations.len(), 3);
+
+        // debt paid down: passes, slack reported for tightening
+        let one = &two[..1];
+        let r = resolve(one, &base);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.slack, vec![("panicking-decode".into(), "util/codec.rs".into(), 2, 1)]);
+
+        // stale entry (file now clean) is slack too
+        let r = resolve(&[], &base);
+        assert_eq!(r.slack, vec![("panicking-decode".into(), "util/codec.rs".into(), 2, 0)]);
+    }
+
+    #[test]
+    fn new_files_start_clean() {
+        let base = Baseline::default();
+        let r = resolve(&[finding("unordered-iter", "simulation/new.rs", 5)], &base);
+        assert_eq!(r.violations.len(), 1);
+    }
+}

@@ -1,0 +1,433 @@
+//! Source lexer for `parrot lint` — comment/string stripping plus
+//! span tracking, with no external parser dependency (DESIGN.md §6:
+//! the build is fully offline, so `syn` is not an option).
+//!
+//! The model is deliberately sub-AST: rules match on *stripped* source
+//! text (comments and literal contents blanked to spaces, line
+//! structure preserved), scoped by three facts this file recovers:
+//!
+//!   * which lines sit inside a `#[cfg(test)]` item (test code is
+//!     exempt from most rules),
+//!   * the brace-matched span and name of every `fn`,
+//!   * the brace-matched span, self-type and trait of every `impl`.
+//!
+//! That is enough to express all five determinism/wire-safety rules
+//! without type inference, and it keeps the analyzer honest: anything
+//! it cannot see (macro-generated code) is out of scope by
+//! construction, not silently half-checked.
+
+/// A brace-matched `fn` item: 1-based inclusive line span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A brace-matched `impl` block: `impl Type` or `impl Trait for Type`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ImplSpan {
+    pub type_name: String,
+    pub trait_name: Option<String>,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// One analyzed source file.
+pub struct SourceMap {
+    /// Stripped source split into lines (same count as the input).
+    pub lines: Vec<String>,
+    /// `is_test[i]` — line `i+1` is inside a `#[cfg(test)]` item.
+    pub is_test: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    pub impls: Vec<ImplSpan>,
+}
+
+impl SourceMap {
+    /// Is 1-based `line` inside test-only code?
+    pub fn line_is_test(&self, line: usize) -> bool {
+        self.is_test.get(line.wrapping_sub(1)).copied().unwrap_or(false)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and literal contents to spaces, preserving byte
+/// positions and newlines so line/column arithmetic stays valid.
+pub fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                // line comment
+                while i < b.len() && b[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // block comment — Rust block comments nest
+                let mut depth = 0usize;
+                while i < b.len() {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                // plain (or raw, if preceded by r/#) string literal;
+                // raw-ness only changes the terminator.
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j > 0 && b[j - 1] == b'#' {
+                    hashes += 1;
+                    j -= 1;
+                }
+                // bare r"..." — make sure the r is not the tail of an
+                // identifier (`var"` is not valid Rust anyway, keep
+                // the check cheap).
+                let prefix_r = j > 0 && b[j - 1] == b'r';
+                let r_own_token = j < 2 || !is_ident(b[j - 2]);
+                let raw = prefix_r && (hashes > 0 || r_own_token);
+                out[i] = b' ';
+                i += 1;
+                while i < b.len() {
+                    if raw {
+                        if b[i] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == b'#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                out[i] = b' ';
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                    } else if b[i] == b'\\' && i + 1 < b.len() {
+                        out[i] = b' ';
+                        if b[i + 1] != b'\n' {
+                            out[i + 1] = b' ';
+                        }
+                        i += 2;
+                        continue;
+                    } else if b[i] == b'"' {
+                        out[i] = b' ';
+                        i += 1;
+                        break;
+                    }
+                    if b[i] != b'\n' {
+                        out[i] = b' ';
+                    }
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // lifetime (`'a`) vs char literal (`'a'`, `'\n'`):
+                // a lifetime is `'` + ident NOT followed by a closing
+                // quote right after one ident char.
+                let is_lifetime = i + 1 < b.len()
+                    && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_')
+                    && !(i + 2 < b.len() && b[i + 2] == b'\'');
+                if is_lifetime {
+                    i += 1;
+                    while i < b.len() && is_ident(b[i]) {
+                        i += 1;
+                    }
+                } else {
+                    out[i] = b' ';
+                    i += 1;
+                    while i < b.len() {
+                        if b[i] == b'\\' && i + 1 < b.len() {
+                            out[i] = b' ';
+                            out[i + 1] = b' ';
+                            i += 2;
+                            continue;
+                        }
+                        if b[i] == b'\'' {
+                            out[i] = b' ';
+                            i += 1;
+                            break;
+                        }
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    // The replacement is byte-for-byte ASCII spaces over a valid UTF-8
+    // input, so the result stays valid UTF-8.
+    String::from_utf8(out).expect("strip preserves utf8")
+}
+
+/// 1-based line number of byte offset `pos` given sorted line starts.
+fn line_of(line_starts: &[usize], pos: usize) -> usize {
+    match line_starts.binary_search(&pos) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+/// Offset of the matching `}` for the `{` at `open` (stripped text, so
+/// braces inside literals/comments are already gone). Returns the last
+/// byte on unbalanced input instead of failing — a truncated file
+/// still gets best-effort spans.
+fn match_brace(flat: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < flat.len() {
+        match flat[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    flat.len().saturating_sub(1)
+}
+
+/// Next `{` or `;` at/after `from` — whichever comes first decides
+/// whether the item has a body.
+fn body_or_semi(flat: &[u8], from: usize) -> Option<(usize, bool)> {
+    let mut i = from;
+    while i < flat.len() {
+        match flat[i] {
+            b'{' => return Some((i, true)),
+            b';' => return Some((i, false)),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Word occurrences of `kw` in `flat` (ident-boundary checked).
+fn keyword_positions(flat: &[u8], kw: &str) -> Vec<usize> {
+    let k = kw.as_bytes();
+    let mut out = Vec::new();
+    if flat.len() < k.len() {
+        return out;
+    }
+    for i in 0..=flat.len() - k.len() {
+        if &flat[i..i + k.len()] == k
+            && (i == 0 || !is_ident(flat[i - 1]))
+            && (i + k.len() == flat.len() || !is_ident(flat[i + k.len()]))
+        {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Last path segment of a type/trait expression: `a::b::C<'x>` → `C`.
+fn last_segment(expr: &str) -> String {
+    let head = expr.split('<').next().unwrap_or("").trim();
+    head.rsplit("::").next().unwrap_or("").trim().to_string()
+}
+
+/// Split an impl header (text between `impl` and the body `{`) into
+/// (trait, self type), skipping leading generics.
+fn parse_impl_header(header: &str) -> (Option<String>, String) {
+    let mut rest = header.trim();
+    if let Some(stripped) = rest.strip_prefix('<') {
+        // skip the generic parameter list by angle-bracket matching
+        let mut depth = 1usize;
+        let mut cut = stripped.len();
+        for (i, c) in stripped.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        rest = stripped[cut..].trim();
+    }
+    // drop a trailing where-clause
+    if let Some(w) = rest.find(" where ") {
+        rest = rest[..w].trim();
+    }
+    match rest.split_once(" for ") {
+        Some((tr, ty)) => (Some(last_segment(tr)), last_segment(ty)),
+        None => (None, last_segment(rest)),
+    }
+}
+
+/// Full per-file analysis: strip, then recover test regions and
+/// fn/impl spans.
+pub fn analyze_source(src: &str) -> SourceMap {
+    let stripped = strip(src);
+    let flat = stripped.as_bytes();
+    let lines: Vec<String> = stripped.split('\n').map(|s| s.to_string()).collect();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in flat.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+
+    let mut is_test = vec![false; lines.len()];
+    for pos in keyword_positions(flat, "cfg") {
+        // match the exact `#[cfg(test)]` attribute shape (repo style)
+        let tail = &stripped[pos..];
+        if !tail.starts_with("cfg(test)") {
+            continue;
+        }
+        if let Some((body, has_body)) = body_or_semi(flat, pos) {
+            let end = if has_body { match_brace(flat, body) } else { body };
+            let (a, b) = (line_of(&line_starts, pos), line_of(&line_starts, end));
+            for l in a..=b {
+                if l >= 1 && l <= is_test.len() {
+                    is_test[l - 1] = true;
+                }
+            }
+        }
+    }
+
+    let mut fns = Vec::new();
+    for pos in keyword_positions(flat, "fn") {
+        let mut i = pos + 2;
+        while i < flat.len() && (flat[i] as char).is_whitespace() {
+            i += 1;
+        }
+        let name_start = i;
+        while i < flat.len() && is_ident(flat[i]) {
+            i += 1;
+        }
+        if i == name_start {
+            continue; // `fn` in a closure type like `Fn()` is boundary-checked out already
+        }
+        let name = stripped[name_start..i].to_string();
+        if let Some((body, true)) = body_or_semi(flat, i) {
+            let end = match_brace(flat, body);
+            fns.push(FnSpan {
+                name,
+                start: line_of(&line_starts, pos),
+                end: line_of(&line_starts, end),
+            });
+        }
+    }
+
+    let mut impls = Vec::new();
+    for pos in keyword_positions(flat, "impl") {
+        if let Some((body, true)) = body_or_semi(flat, pos + 4) {
+            let header = &stripped[pos + 4..body];
+            let (trait_name, type_name) = parse_impl_header(header);
+            if type_name.is_empty() {
+                continue;
+            }
+            let end = match_brace(flat, body);
+            impls.push(ImplSpan {
+                type_name,
+                trait_name,
+                start: line_of(&line_starts, pos),
+                end: line_of(&line_starts, end),
+            });
+        }
+    }
+
+    SourceMap { lines, is_test, fns, impls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings_but_keeps_positions() {
+        let src = "let a = 1; // HashMap in a comment\nlet s = \"thread_rng\"; let b = 2;\n";
+        let out = strip(src);
+        assert!(!out.contains("HashMap"));
+        assert!(!out.contains("thread_rng"));
+        // positions preserved: `let b = 2;` still at its column
+        assert_eq!(out.len(), src.len());
+        assert!(out.lines().nth(1).unwrap().contains("let b = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_nested_comments_chars_lifetimes() {
+        let src = r###"let r = r#"HashMap "quoted" inside"#; /* outer /* HashMap */ still */ let c = '"'; fn f<'a>(x: &'a str) {}"###;
+        let out = strip(src);
+        assert!(!out.contains("HashMap"));
+        assert!(out.contains("fn f<'a>"), "lifetimes must survive: {out}");
+        assert!(out.contains("let c ="));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { m.unwrap(); }\n}\nfn live2() {}\n";
+        let m = analyze_source(src);
+        assert!(!m.line_is_test(1));
+        assert!(m.line_is_test(2));
+        assert!(m.line_is_test(4));
+        assert!(!m.line_is_test(6));
+    }
+
+    #[test]
+    fn fn_and_impl_spans_are_brace_accurate() {
+        let src = "\
+impl<'a> Decoder<'a> {
+    pub fn u32(&mut self) -> u32 {
+        0
+    }
+}
+impl Transport for LocalEndpoint {
+    fn id(&self) -> usize { 0 }
+}
+fn free_standing() {
+    let x = 1;
+}
+";
+        let m = analyze_source(src);
+        let dec = m.impls.iter().find(|i| i.type_name == "Decoder").unwrap();
+        assert_eq!((dec.start, dec.end), (1, 5));
+        assert_eq!(dec.trait_name, None);
+        let tr = m.impls.iter().find(|i| i.type_name == "LocalEndpoint").unwrap();
+        assert_eq!(tr.trait_name.as_deref(), Some("Transport"));
+        let f = m.fns.iter().find(|f| f.name == "free_standing").unwrap();
+        assert_eq!((f.start, f.end), (9, 11));
+        let u = m.fns.iter().find(|f| f.name == "u32").unwrap();
+        assert_eq!((u.start, u.end), (2, 4));
+    }
+
+    #[test]
+    fn trait_method_declarations_have_no_span() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n    fn with_default(&self) -> usize { 1 }\n}\n";
+        let m = analyze_source(src);
+        assert!(m.fns.iter().all(|f| f.name != "decl"));
+        assert!(m.fns.iter().any(|f| f.name == "with_default"));
+    }
+}

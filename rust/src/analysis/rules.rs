@@ -1,0 +1,360 @@
+//! The five `parrot lint` rules and their module-scoped policy.
+//!
+//! Policy table (see README "Determinism discipline" for rationale):
+//!
+//! | rule              | scope                                   | why |
+//! |-------------------|-----------------------------------------|-----|
+//! | `unordered-iter`  | determinism-critical modules            | Hash* iteration order reorders events/reductions |
+//! | `ambient-entropy` | everywhere but `util/timer`,`util/bench`| wallclock/OS entropy breaks same-seed ≡ same-trace |
+//! | `panicking-decode`| `Decoder` impls + decode fns            | hostile frames must error, not kill the server |
+//! | `unchecked-narrow`| everywhere                              | `len() as u32` truncates wire prefixes silently |
+//! | `float-order`     | `aggregation` merge paths               | float sums over Hash* collections are order-defined |
+//!
+//! Detection is deliberately textual-over-stripped-source (no type
+//! inference): `unordered-iter` flags any `HashMap`/`HashSet` mention
+//! in a strict module, because a Hash* collection in scope is one
+//! `for` loop away from nondeterministic iteration — the fix the rule
+//! demands (BTreeMap / sorted snapshot / indexed `Vec` table) removes
+//! the mention itself. Test code (`#[cfg(test)]` regions) is exempt
+//! everywhere: tests assert on sorted views and may build hostile
+//! inputs however they like.
+
+use super::lexer::{analyze_source, SourceMap};
+
+/// Modules whose event/merge order is observable in traces; Hash*
+/// containers are banned here outright.
+pub const STRICT_MODULES: &[&str] =
+    &["simulation", "scheduler", "aggregation", "statestore", "compress", "cluster"];
+
+/// The only files allowed to touch wallclock/OS entropy: the
+/// stopwatch used for *reporting* elapsed real time, and the bench
+/// harness.  All simulation randomness goes through seeded
+/// `util::rng::Rng`.
+pub const ENTROPY_ALLOWLIST: &[&str] = &["util/timer.rs", "util/bench.rs"];
+
+/// One rule violation at a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, e.g. `statestore/lru.rs`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Top-level module of a source-root-relative path:
+/// `statestore/lru.rs` → `statestore`; `lib.rs` → `lib`.
+fn top_module(rel_path: &str) -> &str {
+    match rel_path.split_once('/') {
+        Some((m, _)) => m,
+        None => rel_path.strip_suffix(".rs").unwrap_or(rel_path),
+    }
+}
+
+fn word_in(line: &str, word: &str) -> bool {
+    let b = line.as_bytes();
+    let w = word.as_bytes();
+    if b.len() < w.len() {
+        return false;
+    }
+    for i in 0..=b.len() - w.len() {
+        if &b[i..i + w.len()] == w {
+            let pre_ok = i == 0 || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+            let post = i + w.len();
+            let post_ok =
+                post == b.len() || !(b[post].is_ascii_alphanumeric() || b[post] == b'_');
+            if pre_ok && post_ok {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn rule_unordered_iter(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    if !STRICT_MODULES.contains(&top_module(rel)) {
+        return;
+    }
+    for (i, line) in map.lines.iter().enumerate() {
+        let ln = i + 1;
+        if map.line_is_test(ln) {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            if word_in(line, ty) {
+                out.push(Finding {
+                    rule: "unordered-iter",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "{ty} in determinism-critical module `{}`: iteration order is \
+                         nondeterministic — use BTreeMap, a sorted snapshot, or an \
+                         indexed Vec table",
+                        top_module(rel)
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn rule_ambient_entropy(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    if ENTROPY_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    const PATTERNS: &[&str] =
+        &["thread_rng", "from_entropy", "SystemTime::now", "Instant::now"];
+    for (i, line) in map.lines.iter().enumerate() {
+        let ln = i + 1;
+        if map.line_is_test(ln) {
+            continue;
+        }
+        for p in PATTERNS {
+            if line.contains(p) {
+                out.push(Finding {
+                    rule: "ambient-entropy",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{p}` outside util/timer.rs+util/bench.rs: ambient entropy \
+                         breaks same-seed ≡ same-trace — route through seeded \
+                         util::rng::Rng / virtual time"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn rule_panicking_decode(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    // Scope: lines inside an `impl Decoder`/`impl ... for Decoder`
+    // block, or inside a fn whose name marks it as a decode path.
+    let decode_fn = |name: &str| {
+        name.starts_with("decode") || name.contains("from_bytes") || name.contains("from_le_bytes")
+    };
+    let mut in_scope = vec![false; map.lines.len()];
+    for im in &map.impls {
+        if im.type_name == "Decoder" || im.trait_name.as_deref() == Some("Decoder") {
+            for l in im.start..=im.end.min(map.lines.len()) {
+                in_scope[l - 1] = true;
+            }
+        }
+    }
+    for f in &map.fns {
+        if decode_fn(&f.name) {
+            for l in f.start..=f.end.min(map.lines.len()) {
+                in_scope[l - 1] = true;
+            }
+        }
+    }
+    const PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+    for (i, line) in map.lines.iter().enumerate() {
+        let ln = i + 1;
+        if !in_scope[i] || map.line_is_test(ln) {
+            continue;
+        }
+        for p in PATTERNS {
+            if line.contains(p) {
+                out.push(Finding {
+                    rule: "panicking-decode",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{p}` on a decode path: wire input is untrusted — a hostile or \
+                         truncated frame must surface as Err, not a panic",
+                        p = p.trim_matches(|c| c == '.' || c == '(')
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn rule_unchecked_narrow(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    for (i, line) in map.lines.iter().enumerate() {
+        let ln = i + 1;
+        if map.line_is_test(ln) {
+            continue;
+        }
+        for p in [".len() as u32", ".len() as u16"] {
+            if line.contains(p) {
+                out.push(Finding {
+                    rule: "unchecked-narrow",
+                    file: rel.to_string(),
+                    line: ln,
+                    message: format!(
+                        "`{p}` truncates silently past 4 GiB (or 64 KiB) — use \
+                         Encoder::put_len / Encoder::try_put_u32, which reject \
+                         oversized lengths as Err",
+                        p = p.trim_start_matches('.')
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn rule_float_order(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    if top_module(rel) != "aggregation" {
+        return;
+    }
+    // Per-fn: a float fold/sum is only order-stable if its source
+    // collection is ordered.  Without type inference we approximate:
+    // flag fold/sum lines in fns that also mention a Hash* container.
+    const ACCUM: &[&str] = &[".sum::<f32>", ".sum::<f64>", ".fold("];
+    for f in &map.fns {
+        let lines = f.start..=f.end.min(map.lines.len());
+        let mentions_hash = lines.clone().any(|l| {
+            !map.line_is_test(l)
+                && (word_in(&map.lines[l - 1], "HashMap") || word_in(&map.lines[l - 1], "HashSet"))
+        });
+        if !mentions_hash {
+            continue;
+        }
+        for l in lines {
+            if map.line_is_test(l) {
+                continue;
+            }
+            if ACCUM.iter().any(|p| map.lines[l - 1].contains(p)) {
+                out.push(Finding {
+                    rule: "float-order",
+                    file: rel.to_string(),
+                    line: l,
+                    message: format!(
+                        "float accumulation in `{}` alongside a Hash* collection: \
+                         f32/f64 addition is not associative, so unordered sources \
+                         make the merged value run-dependent — iterate an ordered view",
+                        f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Run all five rules over one file. `rel_path` is relative to the
+/// scanned source root (`rust/src`), with `/` separators.
+pub fn check_file(rel_path: &str, src: &str) -> Vec<Finding> {
+    let map = analyze_source(src);
+    let mut out = Vec::new();
+    rule_unordered_iter(rel_path, &map, &mut out);
+    rule_ambient_entropy(rel_path, &map, &mut out);
+    rule_panicking_decode(rel_path, &map, &mut out);
+    rule_unchecked_narrow(rel_path, &map, &mut out);
+    rule_float_order(rel_path, &map, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIXTURE_STRICT: &str = "\
+use std::collections::HashMap;
+
+pub fn plan(sizes: &HashMap<usize, usize>) -> usize {
+    let mut total = 0;
+    for (_, s) in sizes.iter() {
+        total += s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn test_ok() {
+        let m: HashMap<usize, usize> = HashMap::new();
+        assert_eq!(m.len(), 0);
+    }
+}
+";
+
+    #[test]
+    fn unordered_iter_flags_strict_module_not_tests() {
+        let f = check_file("simulation/fake.rs", FIXTURE_STRICT);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "unordered-iter").map(|x| x.line).collect();
+        // line 1 (use) and line 3 (signature); the test-module mentions
+        // on lines 13 and 17 are exempt.
+        assert_eq!(hits, vec![1, 3]);
+    }
+
+    #[test]
+    fn unordered_iter_ignores_non_strict_modules() {
+        assert!(check_file("transport/fake.rs", FIXTURE_STRICT)
+            .iter()
+            .all(|x| x.rule != "unordered-iter"));
+    }
+
+    #[test]
+    fn ambient_entropy_flags_everywhere_but_allowlist() {
+        let src = "fn seed() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+        let f = check_file("coordinator/fake.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == "ambient-entropy").count(), 1);
+        assert_eq!(f[0].line, 2);
+        assert!(check_file("util/timer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panicking_decode_scopes_to_decoder_impls_and_decode_fns() {
+        let src = "\
+impl<'a> Decoder<'a> {
+    pub fn u32(&mut self) -> u32 {
+        self.take(4).try_into().unwrap()
+    }
+}
+pub fn decode_header(b: &[u8]) -> u8 {
+    b.first().copied().expect(\"empty\")
+}
+pub fn encode_header(v: u8) -> Vec<u8> {
+    let x: Option<u8> = Some(v);
+    vec![x.unwrap()]
+}
+";
+        let f = check_file("util/fake.rs", src);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "panicking-decode").map(|x| x.line).collect();
+        // line 3 (Decoder impl) + line 7 (decode_* fn); the unwrap in
+        // encode_header (line 11) is out of scope.
+        assert_eq!(hits, vec![3, 7]);
+    }
+
+    #[test]
+    fn unchecked_narrow_flags_len_casts_with_span_accuracy() {
+        let src = "fn put(e: &mut E, xs: &[f32]) {\n    e.put_u32(xs.len() as u32);\n    e.put_u16(xs.len() as u16);\n    e.put_u32(xs.len().try_into().unwrap());\n}\n";
+        let f = check_file("model/fake.rs", src);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "unchecked-narrow").map(|x| x.line).collect();
+        assert_eq!(hits, vec![2, 3]);
+    }
+
+    #[test]
+    fn float_order_needs_hash_source_and_aggregation_module() {
+        let src = "\
+use std::collections::HashMap;
+fn merge(weights: &HashMap<u64, f64>) -> f64 {
+    weights.values().sum::<f64>()
+}
+fn stable(weights: &[f64]) -> f64 {
+    weights.iter().sum::<f64>()
+}
+";
+        let f = check_file("aggregation/fake.rs", src);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "float-order").map(|x| x.line).collect();
+        assert_eq!(hits, vec![3]);
+        // same code outside aggregation: no float-order findings
+        assert!(check_file("exp/fake.rs", src).iter().all(|x| x.rule != "float-order"));
+    }
+
+    #[test]
+    fn violations_in_comments_and_strings_are_invisible() {
+        let src = "// HashMap iteration would be bad\nfn f() -> &'static str {\n    \"thread_rng .len() as u32\"\n}\n";
+        assert!(check_file("simulation/fake.rs", src).is_empty());
+    }
+}

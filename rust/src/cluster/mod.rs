@@ -17,6 +17,11 @@
 //! the extra (slowdown−1)·T̂ exactly as the paper does; the virtual-time
 //! engine multiplies modeled task durations.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use anyhow::{bail, Result};
 
 /// The aggregation/communication topology of the cluster

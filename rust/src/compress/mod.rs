@@ -32,6 +32,11 @@
 //! the s_e·M_p term the paper says cannot be optimized — so only the
 //! averaged-OP tensors are ever lossy on the wire.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use crate::util::codec::{Decoder, Encoder};
 use anyhow::{bail, ensure, Result};
 
@@ -289,7 +294,7 @@ fn qint8_params(xs: &[f32]) -> (f32, f32) {
 /// Indices of the k largest-magnitude elements, ascending (ties break
 /// toward the lower index, so the selection is deterministic).
 fn top_k_indices(xs: &[f32], k: usize) -> Vec<u32> {
-    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    let mut idx: Vec<u32> = (0..xs.len()).map(|i| i as u32).collect();
     if k < xs.len() {
         idx.select_nth_unstable_by(k, |&a, &b| {
             xs[b as usize]
@@ -307,16 +312,17 @@ fn top_k_indices(xs: &[f32], k: usize) -> Vec<u32> {
 
 /// Encode one tensor as a self-describing stream: codec tag, u32
 /// length, codec payload.  Total length = `codec.wire_bytes(n) + 5`.
-pub fn encode_f32s(enc: &mut Encoder, xs: &[f32], codec: Codec) {
+/// Errs only if a tensor's length exceeds the u32 wire prefix.
+pub fn encode_f32s(enc: &mut Encoder, xs: &[f32], codec: Codec) -> Result<()> {
     enc.put_u8(codec.code());
     match codec {
-        Codec::None => enc.put_f32s(xs),
+        Codec::None => enc.put_f32s(xs)?,
         Codec::Fp16 => {
             let halves: Vec<u16> = xs.iter().map(|&x| f32_to_f16_bits(x)).collect();
-            enc.put_u16s(&halves);
+            enc.put_u16s(&halves)?;
         }
         Codec::QInt8 => {
-            enc.put_u32(xs.len() as u32);
+            enc.put_len(xs.len())?;
             let (min, scale) = qint8_params(xs);
             enc.put_f32(min);
             enc.put_f32(scale);
@@ -331,15 +337,16 @@ pub fn encode_f32s(enc: &mut Encoder, xs: &[f32], codec: Codec) {
             }
         }
         Codec::TopK(_) => {
-            enc.put_u32(xs.len() as u32);
+            enc.put_len(xs.len())?;
             let k = codec.top_k(xs.len());
-            enc.put_u32(k as u32);
+            enc.try_put_u32(k)?;
             for i in top_k_indices(xs, k) {
                 enc.put_u32(i);
                 enc.put_f32(xs[i as usize]);
             }
         }
     }
+    Ok(())
 }
 
 /// Decode one self-describing tensor.  Every length prefix is
@@ -396,7 +403,7 @@ pub fn decode_f32s(dec: &mut Decoder) -> Result<Vec<f32>> {
 /// (measured, so it is the ground truth `wire_bytes` is checked against).
 pub fn encoded_len(xs: &[f32], codec: Codec) -> usize {
     let mut enc = Encoder::new();
-    encode_f32s(&mut enc, xs, codec);
+    encode_f32s(&mut enc, xs, codec).expect("tensor exceeds wire limits");
     enc.len()
 }
 
@@ -411,7 +418,7 @@ mod tests {
 
     fn round_trip(xs: &[f32], codec: Codec) -> Vec<f32> {
         let mut enc = Encoder::new();
-        encode_f32s(&mut enc, xs, codec);
+        encode_f32s(&mut enc, xs, codec).unwrap();
         let buf = enc.finish();
         assert_eq!(buf.len(), codec.wire_bytes(xs.len()) + 5, "{codec:?}");
         let mut dec = Decoder::new(&buf);
@@ -555,7 +562,7 @@ mod tests {
         let xs: Vec<f32> = (0..50).map(|i| i as f32).collect();
         for codec in ALL_CODECS {
             let mut enc = Encoder::new();
-            encode_f32s(&mut enc, &xs, codec);
+            encode_f32s(&mut enc, &xs, codec).unwrap();
             let buf = enc.finish();
             for cut in 0..buf.len() {
                 let _ = decode_f32s(&mut Decoder::new(&buf[..cut]));

@@ -91,16 +91,17 @@ pub enum Msg {
     },
 }
 
-fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) {
+fn encode_broadcast(enc: &mut Encoder, bc: &Broadcast) -> Result<()> {
     enc.put_u32(bc.round as u32);
-    bc.params.encode(enc);
+    bc.params.encode(enc)?;
     match &bc.extra {
         None => enc.put_u8(0),
         Some(p) => {
             enc.put_u8(1);
-            p.encode(enc);
+            p.encode(enc)?;
         }
     }
+    Ok(())
 }
 
 fn decode_broadcast(dec: &mut Decoder) -> Result<Broadcast> {
@@ -114,12 +115,12 @@ fn decode_broadcast(dec: &mut Decoder) -> Result<Broadcast> {
     Ok(Broadcast { round, params, extra })
 }
 
-fn encode_update(enc: &mut Encoder, u: &ClientUpdate, codec: Codec) {
+fn encode_update(enc: &mut Encoder, u: &ClientUpdate, codec: Codec) -> Result<()> {
     enc.put_u32(u.client as u32);
     enc.put_f64(u.weight);
-    enc.put_u32(u.entries.len() as u32);
+    enc.put_len(u.entries.len())?;
     for (name, op, p) in &u.entries {
-        enc.put_str(name);
+        enc.put_str(name)?;
         enc.put_u8(match op {
             AggOp::WeightedAvg => 0,
             AggOp::Avg => 1,
@@ -128,8 +129,9 @@ fn encode_update(enc: &mut Encoder, u: &ClientUpdate, codec: Codec) {
         });
         // Special Params (Collect) always ship verbatim (§4.2).
         let c = if *op == AggOp::Collect { Codec::None } else { codec };
-        p.encode_with(enc, c);
+        p.encode_with(enc, c)?;
     }
+    Ok(())
 }
 
 fn decode_update(dec: &mut Decoder) -> Result<ClientUpdate> {
@@ -169,15 +171,15 @@ fn decode_record(dec: &mut Decoder) -> Result<TaskRecord> {
 }
 
 impl Msg {
-    pub fn encode(&self) -> Vec<u8> {
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let mut enc = Encoder::new();
         match self {
             Msg::Round { round, broadcast, clients, codec } => {
                 enc.put_u8(0);
                 enc.put_u32(*round as u32);
                 codec.encode_meta(&mut enc);
-                encode_broadcast(&mut enc, broadcast);
-                enc.put_u32(clients.len() as u32);
+                encode_broadcast(&mut enc, broadcast)?;
+                enc.put_len(clients.len())?;
                 for &c in clients {
                     enc.put_u32(c as u32);
                 }
@@ -186,7 +188,7 @@ impl Msg {
                 enc.put_u8(1);
                 enc.put_u32(*round as u32);
                 codec.encode_meta(&mut enc);
-                encode_broadcast(&mut enc, broadcast);
+                encode_broadcast(&mut enc, broadcast)?;
                 enc.put_u32(*client as u32);
             }
             Msg::TaskCached { round, client } => {
@@ -199,8 +201,8 @@ impl Msg {
                 enc.put_u8(4);
                 enc.put_u32(*device as u32);
                 codec.encode_meta(&mut enc);
-                enc.put_bytes(&aggregate.encoded_with(*codec));
-                enc.put_u32(records.len() as u32);
+                enc.put_bytes(&aggregate.encoded_with(*codec)?)?;
+                enc.put_len(records.len())?;
                 for r in records {
                     encode_record(&mut enc, r);
                 }
@@ -210,7 +212,7 @@ impl Msg {
                 enc.put_u8(5);
                 enc.put_u32(*device as u32);
                 codec.encode_meta(&mut enc);
-                encode_update(&mut enc, update, *codec);
+                encode_update(&mut enc, update, *codec)?;
                 encode_record(&mut enc, record);
             }
             Msg::Idle { device } => {
@@ -220,7 +222,7 @@ impl Msg {
             Msg::StateFetch { round, clients } => {
                 enc.put_u8(7);
                 enc.put_u32(*round as u32);
-                enc.put_u32(clients.len() as u32);
+                enc.put_len(clients.len())?;
                 for &c in clients {
                     enc.put_u64(c);
                 }
@@ -228,14 +230,14 @@ impl Msg {
             Msg::StatePut { round, states } => {
                 enc.put_u8(8);
                 enc.put_u32(*round as u32);
-                enc.put_u32(states.len() as u32);
+                enc.put_len(states.len())?;
                 for (c, bytes) in states {
                     enc.put_u64(*c);
                     match bytes {
                         None => enc.put_u8(0),
                         Some(b) => {
                             enc.put_u8(1);
-                            enc.put_bytes(b);
+                            enc.put_bytes(b)?;
                         }
                     }
                 }
@@ -243,16 +245,16 @@ impl Msg {
             Msg::ShardTransfer { from_shard, states } => {
                 enc.put_u8(9);
                 enc.put_u32(*from_shard);
-                enc.put_u32(states.len() as u32);
+                enc.put_len(states.len())?;
                 for (c, bytes) in states {
                     enc.put_u64(*c);
-                    enc.put_bytes(bytes);
+                    enc.put_bytes(bytes)?;
                 }
             }
             Msg::AsyncFlush { version, broadcast } => {
                 enc.put_u8(10);
                 enc.put_u64(*version);
-                encode_broadcast(&mut enc, broadcast);
+                encode_broadcast(&mut enc, broadcast)?;
             }
             Msg::AsyncTask { round, client, version, codec } => {
                 enc.put_u8(11);
@@ -266,8 +268,8 @@ impl Msg {
                 enc.put_u32(*round as u32);
                 enc.put_u32(*group);
                 codec.encode_meta(&mut enc);
-                encode_broadcast(&mut enc, broadcast);
-                enc.put_u32(clients.len() as u32);
+                encode_broadcast(&mut enc, broadcast)?;
+                enc.put_len(clients.len())?;
                 for &c in clients {
                     enc.put_u32(c as u32);
                 }
@@ -277,15 +279,15 @@ impl Msg {
                 enc.put_u32(*group);
                 enc.put_u32(*device as u32);
                 codec.encode_meta(&mut enc);
-                enc.put_bytes(&aggregate.encoded_with(*codec));
-                enc.put_u32(records.len() as u32);
+                enc.put_bytes(&aggregate.encoded_with(*codec)?)?;
+                enc.put_len(records.len())?;
                 for r in records {
                     encode_record(&mut enc, r);
                 }
                 enc.put_f64(*busy_secs);
             }
         }
-        enc.finish()
+        Ok(enc.finish())
     }
 
     pub fn decode(buf: &[u8]) -> Result<Msg> {
@@ -438,7 +440,7 @@ mod tests {
             clients: vec![3, 1, 4, 1, 5],
             codec: Codec::TopK(0.25),
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::Round { round, broadcast, clients, codec } => {
                 assert_eq!(round, 7);
                 assert_eq!(broadcast.params, params(1.5));
@@ -465,7 +467,7 @@ mod tests {
             busy_secs: 2.5,
             codec: Codec::None,
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::RoundDone { device, records, busy_secs, codec, .. } => {
                 assert_eq!(device, 3);
                 assert_eq!(records.len(), 1);
@@ -503,6 +505,7 @@ mod tests {
                 codec,
             }
             .encode()
+            .unwrap()
         };
         let raw = mk(Codec::None);
         for codec in [Codec::Fp16, Codec::QInt8, Codec::TopK(0.1)] {
@@ -532,7 +535,7 @@ mod tests {
             record: TaskRecord { round: 0, device: 2, n_samples: 60, secs: 0.5 },
             codec: Codec::Fp16,
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::TaskDone { update, codec, .. } => {
                 assert_eq!(update.client, 9);
                 assert_eq!(update.entries.len(), 2);
@@ -547,13 +550,16 @@ mod tests {
 
     #[test]
     fn small_variants() {
-        assert!(matches!(Msg::decode(&Msg::Shutdown.encode()).unwrap(), Msg::Shutdown));
         assert!(matches!(
-            Msg::decode(&Msg::Idle { device: 4 }.encode()).unwrap(),
+            Msg::decode(&Msg::Shutdown.encode().unwrap()).unwrap(),
+            Msg::Shutdown
+        ));
+        assert!(matches!(
+            Msg::decode(&Msg::Idle { device: 4 }.encode().unwrap()).unwrap(),
             Msg::Idle { device: 4 }
         ));
         assert!(matches!(
-            Msg::decode(&Msg::TaskCached { round: 2, client: 11 }.encode()).unwrap(),
+            Msg::decode(&Msg::TaskCached { round: 2, client: 11 }.encode().unwrap()).unwrap(),
             Msg::TaskCached { round: 2, client: 11 }
         ));
     }
@@ -561,7 +567,7 @@ mod tests {
     #[test]
     fn state_messages_round_trip() {
         let m = Msg::StateFetch { round: 4, clients: vec![9, 1, 1 << 40] };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::StateFetch { round, clients } => {
                 assert_eq!(round, 4);
                 assert_eq!(clients, vec![9, 1, 1 << 40]);
@@ -572,7 +578,7 @@ mod tests {
             round: 7,
             states: vec![(3, Some(vec![1, 2, 3])), (11, None), (42, Some(Vec::new()))],
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::StatePut { round, states } => {
                 assert_eq!(round, 7);
                 assert_eq!(states.len(), 3);
@@ -586,7 +592,7 @@ mod tests {
             from_shard: 2,
             states: vec![(5, vec![9u8; 64]), (6, vec![])],
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::ShardTransfer { from_shard, states } => {
                 assert_eq!(from_shard, 2);
                 assert_eq!(states[0].1.len(), 64);
@@ -602,7 +608,7 @@ mod tests {
             version: 1 << 40,
             broadcast: Broadcast { round: 3, params: params(2.5), extra: None },
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::AsyncFlush { version, broadcast } => {
                 assert_eq!(version, 1 << 40);
                 assert_eq!(broadcast.round, 3);
@@ -612,7 +618,7 @@ mod tests {
             other => panic!("Msg::AsyncFlush must round-trip to itself, decoded {other:?}"),
         }
         let m = Msg::AsyncTask { round: 9, client: 1234, version: 7, codec: Codec::QInt8 };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::AsyncTask { round, client, version, codec } => {
                 assert_eq!((round, client, version), (9, 1234, 7));
                 assert_eq!(codec, Codec::QInt8);
@@ -620,7 +626,7 @@ mod tests {
             other => panic!("Msg::AsyncTask must round-trip to itself, decoded {other:?}"),
         }
         // Truncated async frames error cleanly (bounds-check discipline).
-        let buf = m.encode();
+        let buf = m.encode().unwrap();
         for cut in 0..buf.len() {
             assert!(Msg::decode(&buf[..cut]).is_err(), "cut at {cut}");
         }
@@ -635,7 +641,7 @@ mod tests {
             clients: vec![9, 2, 7],
             codec: Codec::QInt8,
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::GroupRound { round, group, broadcast, clients, codec } => {
                 assert_eq!((round, group), (5, 3));
                 assert_eq!(broadcast.params, params(1.0));
@@ -658,7 +664,7 @@ mod tests {
             busy_secs: 1.5,
             codec: Codec::None,
         };
-        match Msg::decode(&m.encode()).unwrap() {
+        match Msg::decode(&m.encode().unwrap()).unwrap() {
             Msg::GroupDone { group, device, aggregate, records, busy_secs, codec } => {
                 assert_eq!((group, device), (1, 2));
                 assert_eq!(aggregate.n_clients, 1);
@@ -669,7 +675,7 @@ mod tests {
             other => panic!("Msg::GroupDone must round-trip to itself, decoded {other:?}"),
         }
         // Truncated group frames error cleanly.
-        let buf = m.encode();
+        let buf = m.encode().unwrap();
         for cut in 0..buf.len() {
             assert!(Msg::decode(&buf[..cut]).is_err(), "cut at {cut}");
         }
@@ -709,7 +715,7 @@ mod tests {
     fn garbage_rejected() {
         assert!(Msg::decode(&[99]).is_err());
         assert!(Msg::decode(&[]).is_err());
-        let mut good = Msg::Shutdown.encode();
+        let mut good = Msg::Shutdown.encode().unwrap();
         good.push(42); // trailing garbage tolerated? No - decode only reads 1 byte; fine.
         assert!(Msg::decode(&good).is_ok());
     }

@@ -153,7 +153,7 @@ impl<T: Transport> Server<T> {
             self.metrics.push(rm);
         }
         for k in 1..=self.cfg.n_devices {
-            self.transport.send(k, Msg::Shutdown.encode())?;
+            self.transport.send(k, Msg::Shutdown.encode()?)?;
         }
         let (final_loss, final_acc) = self.metrics.final_eval();
         Ok(TrainSummary {
@@ -202,7 +202,7 @@ impl<T: Transport> Server<T> {
             if cs.is_empty() {
                 continue;
             }
-            let m = Msg::StateFetch { round, clients: cs.clone() }.encode();
+            let m = Msg::StateFetch { round, clients: cs.clone() }.encode()?;
             state_bytes += m.len() as u64;
             state_msgs += 1;
             self.transport.send(owner + 1, m)?;
@@ -233,7 +233,7 @@ impl<T: Transport> Server<T> {
             for &c in cs {
                 states.push((c, have.remove(&c).flatten()));
             }
-            let m = Msg::StatePut { round, states }.encode();
+            let m = Msg::StatePut { round, states }.encode()?;
             state_bytes += m.len() as u64;
             state_msgs += 1;
             self.transport.send(dev + 1, m)?;
@@ -261,7 +261,7 @@ impl<T: Transport> Server<T> {
             if sts.is_empty() {
                 continue;
             }
-            let m = Msg::StatePut { round, states: sts }.encode();
+            let m = Msg::StatePut { round, states: sts }.encode()?;
             state_bytes += m.len() as u64;
             state_msgs += 1;
             self.transport.send(owner + 1, m)?;
@@ -279,7 +279,7 @@ impl<T: Transport> Server<T> {
         met: &mut AsyncMeters,
     ) -> Result<()> {
         let msg = Msg::AsyncTask { round: cohort, client, version, codec: self.cfg.compress }
-            .encode();
+            .encode()?;
         met.bytes_down += msg.len() as u64;
         met.trips += 1;
         self.transport.send(dev + 1, msg)
@@ -318,7 +318,7 @@ impl<T: Transport> Server<T> {
             let owner = map.owner(client as u64) as usize;
             if owner != dev {
                 let msg =
-                    Msg::StateFetch { round: cohort, clients: vec![client as u64] }.encode();
+                    Msg::StateFetch { round: cohort, clients: vec![client as u64] }.encode()?;
                 met.state_bytes += msg.len() as u64;
                 met.state_msgs += 1;
                 self.transport.send(owner + 1, msg)?;
@@ -391,7 +391,7 @@ impl<T: Transport> Server<T> {
         // Version-0 model to every device before any task.
         let bc0 = self.broadcast(0);
         for dev in 1..=k {
-            let m = Msg::AsyncFlush { version: 0, broadcast: bc0.clone() }.encode();
+            let m = Msg::AsyncFlush { version: 0, broadcast: bc0.clone() }.encode()?;
             met.bytes_down += m.len() as u64;
             met.trips += 1;
             self.transport.send(dev, m)?;
@@ -462,7 +462,7 @@ impl<T: Transport> Server<T> {
                             if q.is_empty() {
                                 st.pending_fetch.remove(&c);
                             }
-                            let fwd = Msg::StatePut { round, states: vec![(c, b)] }.encode();
+                            let fwd = Msg::StatePut { round, states: vec![(c, b)] }.encode()?;
                             met.state_bytes += fwd.len() as u64;
                             met.state_msgs += 1;
                             self.transport.send(dev + 1, fwd)?;
@@ -488,7 +488,7 @@ impl<T: Transport> Server<T> {
             self.broadcast_flush(&ledger, &decisions, &result, &mut met, &mut sw)?;
         }
         for dev in 1..=k {
-            self.transport.send(dev, Msg::Shutdown.encode())?;
+            self.transport.send(dev, Msg::Shutdown.encode()?)?;
         }
         let (final_loss, final_acc) = self.metrics.final_eval();
         Ok(TrainSummary {
@@ -512,7 +512,8 @@ impl<T: Transport> Server<T> {
         let flush_idx = ledger.flushes - 1;
         let bc = self.broadcast(flush_idx);
         for dev in 1..=self.cfg.n_devices {
-            let m = Msg::AsyncFlush { version: ledger.version(), broadcast: bc.clone() }.encode();
+            let m =
+                Msg::AsyncFlush { version: ledger.version(), broadcast: bc.clone() }.encode()?;
             met.bytes_down += m.len() as u64;
             met.trips += 1;
             self.transport.send(dev, m)?;
@@ -583,7 +584,7 @@ impl<T: Transport> Server<T> {
                     clients: clients.clone(),
                     codec: self.cfg.compress,
                 }
-                .encode()
+                .encode()?
             } else {
                 Msg::Round {
                     round,
@@ -591,7 +592,7 @@ impl<T: Transport> Server<T> {
                     clients: clients.clone(),
                     codec: self.cfg.compress,
                 }
-                .encode()
+                .encode()?
             };
             bytes_down += msg.len() as u64;
             trips += 1;
@@ -665,7 +666,7 @@ impl<T: Transport> Server<T> {
             let mut parents: Vec<Option<TierAgg>> = (0..n_parents).map(|_| None).collect();
             for (child, t) in level_aggs.into_iter().enumerate() {
                 if let Some(t) = t {
-                    let wire = t.finish().encoded_with(self.cfg.compress);
+                    let wire = t.finish().encoded_with(self.cfg.compress)?;
                     parents[child / fan]
                         .get_or_insert_with(|| TierAgg::new(child / fan))
                         .merge(DeviceAggregate::decode(&wire)?);
@@ -675,7 +676,7 @@ impl<T: Transport> Server<T> {
         }
         for tier in level_aggs {
             if let Some(t) = tier {
-                let wire = t.finish().encoded_with(self.cfg.compress);
+                let wire = t.finish().encoded_with(self.cfg.compress)?;
                 cross_bytes += wire.len() as u64;
                 group_aggs += 1;
                 agg.merge(DeviceAggregate::decode(&wire)?);
@@ -724,7 +725,7 @@ impl<T: Transport> Server<T> {
                     client,
                     codec: self.cfg.compress,
                 }
-                .encode();
+                .encode()?;
                 bytes_down += msg.len() as u64;
                 trips += 1;
                 self.transport.send(dev, msg)?;
@@ -751,7 +752,7 @@ impl<T: Transport> Server<T> {
                             client,
                             codec: self.cfg.compress,
                         }
-                        .encode();
+                        .encode()?;
                         bytes_down += msg.len() as u64;
                         trips += 1;
                         self.transport.send(device + 1, msg)?;

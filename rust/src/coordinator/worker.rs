@@ -149,7 +149,7 @@ impl<T: Transport> Worker<T> {
                         busy_secs,
                         codec,
                     };
-                    self.transport.send(0, msg.encode())?;
+                    self.transport.send(0, msg.encode()?)?;
                 }
                 Msg::GroupRound { round, group, broadcast, clients, codec } => {
                     // Grouped topology: identical round body, but the
@@ -165,7 +165,7 @@ impl<T: Transport> Worker<T> {
                         busy_secs,
                         codec,
                     };
-                    self.transport.send(0, msg.encode())?;
+                    self.transport.send(0, msg.encode()?)?;
                 }
                 Msg::StateFetch { round, clients } => {
                     // The server wants these (owned) states for
@@ -174,7 +174,7 @@ impl<T: Transport> Worker<T> {
                     for c in clients {
                         states.push((c, self.state.load(c)?));
                     }
-                    self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+                    self.transport.send(0, Msg::StatePut { round, states }.encode()?)?;
                 }
                 Msg::StatePut { states, .. } => {
                     for (c, bytes) in states {
@@ -225,12 +225,12 @@ impl<T: Transport> Worker<T> {
                     if !self.returns.is_empty() {
                         let states: Vec<(u64, Option<Vec<u8>>)> =
                             self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
-                        self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+                        self.transport.send(0, Msg::StatePut { round, states }.encode()?)?;
                     }
                     self.staged.clear();
                     self.transport.send(
                         0,
-                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode()?,
                     )?;
                 }
                 Msg::Task { round, broadcast, client, codec } => {
@@ -238,7 +238,7 @@ impl<T: Transport> Worker<T> {
                     let (update, record) = self.run_task(round, &broadcast, client)?;
                     self.transport.send(
                         0,
-                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode()?,
                     )?;
                 }
                 Msg::TaskCached { round, client } => {
@@ -249,7 +249,7 @@ impl<T: Transport> Worker<T> {
                     let (update, record) = self.run_task(round, &bc, client)?;
                     self.transport.send(
                         0,
-                        Msg::TaskDone { device: self.device, update, record, codec }.encode(),
+                        Msg::TaskDone { device: self.device, update, record, codec }.encode()?,
                     )?;
                 }
                 other => anyhow::bail!("worker got unexpected message {other:?}"),
@@ -280,7 +280,7 @@ impl<T: Transport> Worker<T> {
         if !self.returns.is_empty() {
             let states: Vec<(u64, Option<Vec<u8>>)> =
                 self.returns.drain(..).map(|(c, b)| (c, Some(b))).collect();
-            self.transport.send(0, Msg::StatePut { round, states }.encode())?;
+            self.transport.send(0, Msg::StatePut { round, states }.encode()?)?;
         }
         // Stale prefetches must not leak into later rounds.
         self.staged.clear();
@@ -366,7 +366,7 @@ impl<T: Transport> Worker<T> {
             } else {
                 // Queue the write-back return for the round-end
                 // StatePut to the owner (via the server).
-                self.returns.push((client as u64, ns.to_bytes()));
+                self.returns.push((client as u64, ns.to_bytes()?));
             }
         }
         let record = TaskRecord {

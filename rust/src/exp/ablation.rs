@@ -74,7 +74,7 @@ pub fn ablate(args: &Args) -> Result<()> {
     let mut rng = crate::util::rng::Rng::new(11);
     let clients: Vec<(usize, usize)> =
         (0..100).map(|i| (i, 20 + rng.below(400) as usize)).collect();
-    let sizes: std::collections::HashMap<usize, usize> = clients.iter().cloned().collect();
+    let sizes = crate::scheduler::greedy::size_table(&clients);
     let (sorted_asg, _) = greedy_assign(&clients, &est);
     // unsorted variant: same placement rule, arrival order
     let mut w = vec![0.0f64; 8];
@@ -155,7 +155,7 @@ pub fn ablate(args: &Args) -> Result<()> {
             // zipf-ish: low ids much hotter
             let c = (rng.next_f64().powi(3) * 64.0) as u64;
             if sm.load(c)?.is_none() {
-                sm.save(c, &state.to_bytes())?;
+                sm.save(c, &state.to_bytes()?)?;
             }
         }
         let hit = sm.metrics.cache_hits as f64 / sm.metrics.loads as f64;

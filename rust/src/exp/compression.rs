@@ -55,7 +55,7 @@ pub fn compression(args: &Args) -> Result<()> {
         let mut bound = 0.0f64;
         for t in &params.tensors {
             let mut e = crate::util::codec::Encoder::new();
-            compress::encode_f32s(&mut e, t, codec);
+            compress::encode_f32s(&mut e, t, codec)?;
             let buf = e.finish();
             enc_bytes += buf.len();
             let back =

@@ -199,17 +199,15 @@ fn mk_updates(m: usize, seed: u64) -> Vec<ClientUpdate> {
         .collect()
 }
 
-/// The `--smoke` differential (scripts/ci.sh): a reduced engine sweep
-/// (cross-WAN shrinkage + near-equal makespan + group-aggregate
-/// structure) plus the deploy-side tier pipeline at 1000 clients.
-pub fn smoke(args: &Args) -> Result<()> {
-    let seed = args.u64_or("seed", 23)?;
+/// The reduced engine sweep behind `--smoke`: flat vs groups:8 at
+/// 1000 clients with the inline shrinkage / makespan / group-structure
+/// checks applied.  Split out so the double-run determinism harness
+/// (`rust/tests/determinism.rs`) can drive it without the deploy leg.
+fn smoke_engine(seed: u64) -> Result<(TopoRun, TopoRun)> {
     let (m, m_p, k, rounds) = (1000usize, 100usize, 32usize, 3usize);
     let n_groups = 8usize;
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
     let topo = Topology::groups(n_groups);
-
-    // (1) engine: flat vs groups:8 on the identical stream.
     let flat = run_one(Scheme::Parrot, &Topology::flat(), &partition, m_p, k, rounds, seed);
     let grouped = run_one(Scheme::Parrot, &topo, &partition, m_p, k, rounds, seed);
     ensure!(
@@ -230,6 +228,33 @@ pub fn smoke(args: &Args) -> Result<()> {
         grouped.min_group_aggs,
         grouped.max_group_aggs
     );
+    Ok((flat, grouped))
+}
+
+/// Deterministic engine rows for the double-run differential: two runs
+/// under the same seed must produce byte-identical rows.
+pub fn smoke_rows(seed: u64) -> Result<Vec<String>> {
+    let (flat, grouped) = smoke_engine(seed)?;
+    let row = |name: &str, r: &TopoRun| {
+        format!(
+            "{name},{:.6},{},{},{}-{}",
+            r.total_secs, r.bytes, r.cross_bytes, r.min_group_aggs, r.max_group_aggs
+        )
+    };
+    Ok(vec![row("flat", &flat), row("grouped", &grouped)])
+}
+
+/// The `--smoke` differential (scripts/ci.sh): a reduced engine sweep
+/// (cross-WAN shrinkage + near-equal makespan + group-aggregate
+/// structure) plus the deploy-side tier pipeline at 1000 clients.
+pub fn smoke(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 23)?;
+    let (m, k) = (1000usize, 32usize);
+    let n_groups = 8usize;
+    let topo = Topology::groups(n_groups);
+
+    // (1) engine: flat vs groups:8 on the identical stream.
+    let (flat, grouped) = smoke_engine(seed)?;
 
     // (2) deploy-side group-aggregate differential at 1000 clients:
     // member LocalAggs merge into per-group TierAggs, the merged group
@@ -259,7 +284,7 @@ pub fn smoke(args: &Args) -> Result<()> {
                 for (name, b) in agg.reconstruction_bounds(codec) {
                     *bounds.entry(name).or_insert(0.0) += b;
                 }
-                let wire = agg.encoded_with(codec);
+                let wire = agg.encoded_with(codec)?;
                 member_wire += wire.len() as u64;
                 tier.merge(DeviceAggregate::decode(&wire)?);
             }
@@ -267,7 +292,7 @@ pub fn smoke(args: &Args) -> Result<()> {
             for (name, b) in merged.reconstruction_bounds(codec) {
                 *bounds.entry(name).or_insert(0.0) += b;
             }
-            let wire = merged.encoded_with(codec);
+            let wire = merged.encoded_with(codec)?;
             group_wire += wire.len() as u64;
             n_group_aggs += 1;
             global.merge(DeviceAggregate::decode(&wire)?);

@@ -19,6 +19,15 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a harness in [`exp`].
 
+// Determinism discipline (README): `clippy.toml` disallows HashMap/
+// HashSet and wallclock entropy so editors surface the core `parrot
+// lint` rules live.  The ban is scoped, not global — allow at the
+// crate root, deny in the determinism-critical modules (simulation,
+// scheduler, aggregation, statestore, compress, cluster), whose
+// iteration/merge order is observable in traces.
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
+pub mod analysis;
 pub mod util;
 pub mod compress;
 pub mod config;

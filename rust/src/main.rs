@@ -40,6 +40,7 @@ USAGE:
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]
+  parrot lint   [--root DIR] [--format human|json] [--baseline FILE] [--write-baseline]
 ";
 
 fn main() {
@@ -75,6 +76,7 @@ fn real_main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
         "info" => cmd_info(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -166,6 +168,18 @@ fn cmd_worker(args: &Args) -> Result<()> {
     println!("parrot worker {id} connecting to {addr}");
     let transport = TcpWorkerEndpoint::connect(addr, id)?;
     Worker::new(transport, cfg)?.run()
+}
+
+/// Determinism & wire-safety static analysis over `rust/src` with the
+/// committed `lint.baseline` ratchet (see README "Determinism
+/// discipline").  Exits nonzero on any non-baselined finding.
+fn cmd_lint(args: &Args) -> Result<()> {
+    parrot::analysis::run_cli(
+        args.get_or("root", "."),
+        args.get_or("format", "human"),
+        args.get_or("baseline", "lint.baseline"),
+        args.flag("write-baseline"),
+    )
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -125,22 +125,24 @@ impl ParamSet {
     /// Serialize (state-manager snapshot / transport message payload).
     /// Lossless raw-f32 tensors; see [`ParamSet::encode_with`] for the
     /// compressed wire forms.
-    pub fn encode(&self, enc: &mut Encoder) {
-        self.encode_with(enc, Codec::None);
+    pub fn encode(&self, enc: &mut Encoder) -> Result<()> {
+        self.encode_with(enc, Codec::None)
     }
 
     /// Serialize with a wire codec: each tensor is written as a
     /// self-describing compressed stream (`compress::encode_f32s`), so
     /// [`ParamSet::decode`] needs no out-of-band codec knowledge.
-    pub fn encode_with(&self, enc: &mut Encoder, codec: Codec) {
-        enc.put_u32(self.tensors.len() as u32);
+    /// Errs only on counts past the u32 wire prefixes.
+    pub fn encode_with(&self, enc: &mut Encoder, codec: Codec) -> Result<()> {
+        enc.put_len(self.tensors.len())?;
         for (shape, t) in self.shapes.iter().zip(&self.tensors) {
-            enc.put_u32(shape.len() as u32);
+            enc.put_len(shape.len())?;
             for &d in shape {
-                enc.put_u32(d as u32);
+                enc.try_put_u32(d)?;
             }
-            compress::encode_f32s(enc, t, codec);
+            compress::encode_f32s(enc, t, codec)?;
         }
+        Ok(())
     }
 
     pub fn decode(dec: &mut Decoder) -> Result<ParamSet> {
@@ -174,10 +176,10 @@ impl ParamSet {
         Ok(ParamSet { shapes, tensors })
     }
 
-    pub fn to_bytes(&self) -> Vec<u8> {
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
         let mut enc = Encoder::with_capacity(self.size_bytes() + 64);
-        self.encode(&mut enc);
-        enc.finish()
+        self.encode(&mut enc)?;
+        Ok(enc.finish())
     }
 
     pub fn from_bytes(buf: &[u8]) -> Result<ParamSet> {
@@ -282,7 +284,7 @@ mod tests {
     #[test]
     fn codec_round_trip() {
         let p = ParamSet::init_he(&shapes(), 9);
-        let q = ParamSet::from_bytes(&p.to_bytes()).unwrap();
+        let q = ParamSet::from_bytes(&p.to_bytes().unwrap()).unwrap();
         assert_eq!(p, q);
     }
 
@@ -291,7 +293,7 @@ mod tests {
         let p = ParamSet::init_he(&shapes(), 11);
         for codec in crate::compress::ALL_CODECS {
             let mut enc = Encoder::new();
-            p.encode_with(&mut enc, codec);
+            p.encode_with(&mut enc, codec).unwrap();
             let buf = enc.finish();
             let q = ParamSet::from_bytes(&buf).unwrap();
             assert_eq!(q.shapes, p.shapes);
@@ -314,7 +316,7 @@ mod tests {
     #[test]
     fn codec_rejects_corrupt() {
         let p = ParamSet::init_he(&shapes(), 9);
-        let mut b = p.to_bytes();
+        let mut b = p.to_bytes().unwrap();
         b.truncate(b.len() - 3);
         assert!(ParamSet::from_bytes(&b).is_err());
     }

@@ -129,20 +129,30 @@ pub fn greedy_assign_with_cost(
     (assignment, w)
 }
 
+/// Client-id-indexed size table for [`makespan`]: ids index directly
+/// into the Vec (selections are dense in practice), so lookups stay
+/// deterministic and allocation-light where an unordered map was used
+/// before.
+pub fn size_table(clients: &[(usize, usize)]) -> Vec<usize> {
+    let len = clients.iter().map(|&(c, _)| c + 1).max().unwrap_or(0);
+    let mut sizes = vec![0usize; len];
+    for &(c, n) in clients {
+        sizes[c] = n;
+    }
+    sizes
+}
+
 /// Predicted makespan of an assignment under the given estimates —
 /// the objective of Eq. 3 (used by tests and the ablation benches).
-pub fn makespan(
-    assignment: &[Vec<usize>],
-    sizes: &std::collections::HashMap<usize, usize>,
-    est: &[DeviceEstimate],
-) -> f64 {
+/// `sizes` is the client-id-indexed table from [`size_table`].
+pub fn makespan(assignment: &[Vec<usize>], sizes: &[usize], est: &[DeviceEstimate]) -> f64 {
     assignment
         .iter()
         .enumerate()
         .map(|(k, tasks)| {
             tasks
                 .iter()
-                .map(|c| est[k].predict(sizes[c]))
+                .map(|&c| est[k].predict(sizes[c]))
                 .sum::<f64>()
         })
         .fold(0.0, f64::max)
@@ -152,14 +162,9 @@ pub fn makespan(
 mod tests {
     use super::*;
     use crate::util::prop;
-    use std::collections::HashMap;
 
     fn homo(k: usize) -> Vec<DeviceEstimate> {
         vec![DeviceEstimate { t_sample: 0.01, b: 0.1, r2: 1.0, n_points: 10 }; k]
-    }
-
-    fn sizes_map(clients: &[(usize, usize)]) -> HashMap<usize, usize> {
-        clients.iter().cloned().collect()
     }
 
     #[test]
@@ -238,7 +243,7 @@ mod tests {
                     n_points: 10,
                 })
                 .collect();
-            let sizes = sizes_map(&clients);
+            let sizes = size_table(&clients);
             let (gasg, _) = greedy_assign(&clients, &est);
             let uasg = uniform_assign(&clients, k);
             let gm = makespan(&gasg, &sizes, &est);
@@ -267,7 +272,7 @@ mod tests {
             let clients: Vec<(usize, usize)> =
                 (0..m).map(|i| (i, g.int(2, 400))).collect();
             let est = homo(k);
-            let sizes = sizes_map(&clients);
+            let sizes = size_table(&clients);
             let (asg, _) = greedy_assign(&clients, &est);
             let ms = makespan(&asg, &sizes, &est);
             let total: f64 = clients.iter().map(|&(_, n)| est[0].predict(n)).sum();

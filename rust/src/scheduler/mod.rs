@@ -11,6 +11,11 @@
 //! The [`Scheduler`] facade ties both to the config's
 //! [`SchedulerKind`](crate::config::SchedulerKind) and owns the history.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 pub mod greedy;
 pub mod workload;
 
@@ -312,7 +317,7 @@ impl Scheduler {
         };
 
         // --- stage 2: client -> device within the group -------------
-        let size_of: std::collections::HashMap<usize, usize> = clients.iter().cloned().collect();
+        let size_of = greedy::size_table(clients);
         let mut assignment = vec![Vec::new(); self.n_devices];
         let mut predicted = base_load.to_vec();
         for (g, members) in groups.iter().enumerate() {
@@ -320,7 +325,7 @@ impl Scheduler {
                 continue;
             }
             let sub: Vec<(usize, usize)> =
-                group_assign[g].iter().map(|&c| (c, size_of[&c])).collect();
+                group_assign[g].iter().map(|&c| (c, size_of[c])).collect();
             let sub_est: Vec<DeviceEstimate> =
                 members.iter().map(|&d| estimates[d]).collect();
             let sub_alive: Vec<bool> = members.iter().map(|&d| alive[d]).collect();

@@ -52,6 +52,11 @@
 //! as `comm_secs`), `device_comm` holds per-executor comm occupancy,
 //! and `total_secs` is the event-clock round end.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 pub mod availability;
 pub mod engine;
 
@@ -641,12 +646,12 @@ impl VirtualSim {
         // The estimates the greedy pass used — predictions are fixed
         // at plan time, before any of this round's records land.
         let est = schedule.estimates.take();
-        let size_of: std::collections::HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let size_of = crate::scheduler::greedy::size_table(sizes);
         let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
         let mut assigned = vec![Vec::new(); k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &c in clients {
-                let n = size_of[&c];
+                let n = size_of[c];
                 let mut task = SimTask::new(c, n, self.draw_noise());
                 if let Some(est) = &est {
                     task.predicted = Some(est[dev].predict(n));
@@ -822,12 +827,12 @@ pub fn run_async_detailed(
             sched.schedule_grouped_from(c, &sizes, alive, base, &groups)
         };
         let est = schedule.estimates.take();
-        let size_of: std::collections::HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let size_of = crate::scheduler::greedy::size_table(&sizes);
         let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
         let mut assigned = vec![Vec::new(); k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &cl in clients {
-                let n = size_of[&cl];
+                let n = size_of[cl];
                 let mut task =
                     SimTask::new(cl, n, (1.0 + noise_sigma * rng.normal()).max(0.2));
                 if let Some(est) = &est {
@@ -910,7 +915,6 @@ mod tests {
     use super::*;
     use crate::data::PartitionKind;
     use crate::scheduler::TaskRecord;
-    use std::collections::HashMap;
 
     fn mk(scheme: Scheme, k: usize, sched: SchedulerKind) -> VirtualSim {
         let partition =
@@ -1139,11 +1143,11 @@ mod tests {
             .map(|&c| (c, sim.partition.sizes[c] * sim.local_epochs))
             .collect();
         let schedule = sim.scheduler.schedule(r, &sizes);
-        let size_of: HashMap<usize, usize> = sizes.iter().cloned().collect();
+        let size_of = crate::scheduler::greedy::size_table(&sizes);
         let mut busy = vec![0.0f64; k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &c in clients {
-                let n = size_of[&c];
+                let n = size_of[c];
                 let base = sim.cluster.task_time(&sim.cost, dev, r, n, 1);
                 let t = base * sim.draw_noise();
                 busy[dev] += t;

@@ -209,7 +209,7 @@ impl StateManager {
 
     /// Typed convenience: ParamSet state (covers SCAFFOLD c_i / FedDyn h_i).
     pub fn save_params(&mut self, client: u64, p: &ParamSet) -> Result<()> {
-        self.save(client, &p.to_bytes())
+        self.save(client, &p.to_bytes()?)
     }
 
     pub fn load_params(&mut self, client: u64) -> Result<Option<ParamSet>> {

@@ -19,7 +19,7 @@
 //! payloads, so the same policy runs over real byte blobs (disk tier
 //! behind it) and over size-only accounting blobs (virtual tier).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// Anything the cache can budget: real bytes, or a size-only stand-in.
 pub trait CacheCost {
@@ -52,7 +52,9 @@ pub struct Evicted<V> {
 #[derive(Debug)]
 pub struct WriteBackCache<V: CacheCost> {
     budget: usize,
-    entries: HashMap<u64, Entry<V>>,
+    /// Keyed by client id; ordered so every whole-cache walk (iter,
+    /// dirty scan, drain) is deterministic without a sort pass.
+    entries: BTreeMap<u64, Entry<V>>,
     /// Recency index: tick → client. Ticks are unique (monotone clock),
     /// so the least-recently-used entry is always `first_key_value`.
     order: BTreeMap<u64, u64>,
@@ -66,7 +68,7 @@ impl<V: CacheCost> WriteBackCache<V> {
     pub fn new(budget: usize) -> WriteBackCache<V> {
         WriteBackCache {
             budget,
-            entries: HashMap::new(),
+            entries: BTreeMap::new(),
             order: BTreeMap::new(),
             resident: 0,
             peak: 0,
@@ -173,22 +175,23 @@ impl<V: CacheCost> WriteBackCache<V> {
 
     /// Dirty entry ids in ascending client order (deterministic flush).
     pub fn dirty_ids(&self) -> Vec<u64> {
-        let mut ids: Vec<u64> =
-            self.entries.iter().filter(|(_, e)| e.dirty).map(|(&c, _)| c).collect();
-        ids.sort_unstable();
-        ids
+        self.entries.iter().filter(|(_, e)| e.dirty).map(|(&c, _)| c).collect()
     }
 
-    /// Iterate resident entries (no recency effect, arbitrary order).
+    /// Iterate resident entries (no recency effect, ascending client id).
     pub fn iter(&self) -> impl Iterator<Item = (u64, &V)> {
         self.entries.iter().map(|(&c, e)| (c, &e.value))
     }
 
-    /// Take everything out (shard handoff): `(client, value, dirty)`.
+    /// Take everything out (shard handoff): `(client, value, dirty)`,
+    /// ascending client id.
     pub fn drain(&mut self) -> Vec<(u64, V, bool)> {
         self.order.clear();
         self.resident = 0;
-        self.entries.drain().map(|(c, e)| (c, e.value, e.dirty)).collect()
+        std::mem::take(&mut self.entries)
+            .into_iter()
+            .map(|(c, e)| (c, e.value, e.dirty))
+            .collect()
     }
 
     /// Reset contents, recency clock, and the peak watermark.

@@ -30,6 +30,11 @@
 //! ([`SchedulerKind::StateAffinity`](crate::config::SchedulerKind))
 //! that prefers placing a client's task on the worker owning its state.
 
+// Determinism-critical module: re-enable the workspace-wide clippy
+// bans on unordered collections and ambient clocks (see clippy.toml
+// and the crate-root allow in lib.rs).
+#![deny(clippy::disallowed_types, clippy::disallowed_methods)]
+
 pub mod lru;
 pub mod shard;
 pub mod simstore;

@@ -39,7 +39,7 @@
 use super::lru::{CacheCost, Evicted, WriteBackCache};
 use super::shard::ShardMap;
 use super::{StateLeg, StatePlan};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Disk-host tag for the unsharded shared-disk baseline.
 const SHARED: usize = usize::MAX;
@@ -151,7 +151,8 @@ pub struct SimStore {
     shards: Option<ShardMap>,
     caches: Vec<WriteBackCache<Blob>>,
     /// client → (blob, hosting worker; [`SHARED`] in local-only mode).
-    disk: HashMap<u64, (Blob, usize)>,
+    /// Ordered so handoff/rejoin scans move states deterministically.
+    disk: BTreeMap<u64, (Blob, usize)>,
     pub metrics: StoreMetrics,
 }
 
@@ -162,7 +163,7 @@ impl SimStore {
         SimStore {
             shards: if cfg.n_shards > 0 { Some(ShardMap::new(cfg.n_shards)) } else { None },
             caches: (0..cfg.n_workers).map(|_| WriteBackCache::new(cfg.cache_budget)).collect(),
-            disk: HashMap::new(),
+            disk: BTreeMap::new(),
             metrics: StoreMetrics::default(),
             cfg,
         }
@@ -195,8 +196,8 @@ impl SimStore {
 
     /// Latest known version per client across all tiers (differential
     /// handoff test: a handoff must not lose or regress any of these).
-    pub fn snapshot(&self) -> std::collections::BTreeMap<u64, u64> {
-        let mut out: std::collections::BTreeMap<u64, u64> =
+    pub fn snapshot(&self) -> BTreeMap<u64, u64> {
+        let mut out: BTreeMap<u64, u64> =
             self.disk.iter().map(|(&c, &(b, _))| (c, b.version)).collect();
         for cache in &self.caches {
             for (c, blob) in cache.iter() {
@@ -451,8 +452,8 @@ impl SimStore {
             return 0;
         }
         // Collect first (immutable scans), mutate after.
-        let mut moving: std::collections::BTreeMap<u64, Option<usize>> = Default::default();
-        let mut cache_host: HashMap<u64, usize> = HashMap::new();
+        let mut moving: BTreeMap<u64, Option<usize>> = BTreeMap::new();
+        let mut cache_host: BTreeMap<u64, usize> = BTreeMap::new();
         {
             let map = self.shards.as_ref().expect("sharded");
             let n = self.cfg.n_workers;

@@ -89,25 +89,30 @@ impl Transport for LocalEndpoint {
 
 /// Frame = 4-byte LE length + 4-byte LE sender id + payload.
 fn write_frame(stream: &mut TcpStream, from: usize, msg: &[u8]) -> Result<()> {
+    let len = u32::try_from(msg.len()).map_err(|_| {
+        anyhow!("frame payload of {} bytes exceeds the u32 length prefix", msg.len())
+    })?;
     let mut hdr = [0u8; 8];
-    hdr[..4].copy_from_slice(&(msg.len() as u32).to_le_bytes());
+    hdr[..4].copy_from_slice(&len.to_le_bytes());
     hdr[4..].copy_from_slice(&(from as u32).to_le_bytes());
-    stream.write_all(&hdr)?;
-    stream.write_all(msg)?;
+    stream.write_all(&hdr).context("write frame header")?;
+    stream.write_all(msg).context("write frame payload")?;
     stream.flush()?;
     Ok(())
 }
 
 fn read_frame(stream: &mut TcpStream) -> Result<(usize, Vec<u8>)> {
     let mut hdr = [0u8; 8];
-    stream.read_exact(&mut hdr)?;
-    let len = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
-    let from = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+    stream.read_exact(&mut hdr).context("read frame header")?;
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+    let from = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
     if len > 1 << 30 {
         bail!("frame too large: {len}");
     }
     let mut buf = vec![0u8; len];
-    stream.read_exact(&mut buf)?;
+    stream
+        .read_exact(&mut buf)
+        .with_context(|| format!("frame truncated: peer {from} promised {len} bytes"))?;
     Ok((from, buf))
 }
 
@@ -146,7 +151,7 @@ impl TcpListenerHandle {
         for _ in 0..k {
             let (mut stream, _) = self.listener.accept()?;
             stream.set_nodelay(true).ok();
-            let (id, _) = read_frame(&mut stream)?; // hello frame
+            let (id, _) = read_frame(&mut stream).context("worker hello frame")?;
             outs.insert(id, Arc::new(Mutex::new(stream.try_clone()?)));
             let tx = tx.clone();
             std::thread::spawn(move || loop {
@@ -179,7 +184,8 @@ impl Transport for TcpServerEndpoint {
 
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
         let s = self.outs.get(&to).ok_or_else(|| anyhow!("no worker {to}"))?;
-        write_frame(&mut s.lock().unwrap(), 0, &msg)
+        let mut s = s.lock().map_err(|_| anyhow!("connection to worker {to} poisoned"))?;
+        write_frame(&mut s, 0, &msg)
     }
 
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
@@ -225,7 +231,9 @@ impl Transport for TcpWorkerEndpoint {
 
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
         anyhow::ensure!(to == 0, "workers only talk to the server");
-        write_frame(&mut self.stream.lock().unwrap(), self.id, &msg)
+        let mut s =
+            self.stream.lock().map_err(|_| anyhow!("server connection mutex poisoned"))?;
+        write_frame(&mut s, self.id, &msg)
     }
 
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
@@ -306,5 +314,30 @@ mod tests {
         w1.send(0, b"ack1".to_vec()).unwrap();
         w2.send(0, b"ac2".to_vec()).unwrap();
         server_thread.join().unwrap();
+    }
+
+    #[test]
+    fn half_written_frame_degrades_to_error() {
+        // A peer that dies mid-frame must surface as a recv error on
+        // the server side — never as a short frame delivered as data.
+        let handle = TcpListenerHandle::listen("127.0.0.1:0").unwrap();
+        let addr = handle.local_addr().unwrap().to_string();
+        let server_thread = std::thread::spawn(move || {
+            let server = handle.accept(1).unwrap();
+            server.recv(Some(Duration::from_millis(500)))
+        });
+        {
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            write_frame(&mut stream, 1, b"hello").unwrap(); // announce id
+            // Promise 100 payload bytes, deliver 3, drop the socket.
+            let mut hdr = [0u8; 8];
+            hdr[..4].copy_from_slice(&100u32.to_le_bytes());
+            hdr[4..].copy_from_slice(&1u32.to_le_bytes());
+            stream.write_all(&hdr).unwrap();
+            stream.write_all(&[1, 2, 3]).unwrap();
+            stream.flush().unwrap();
+        }
+        let got = server_thread.join().unwrap();
+        assert!(got.is_err(), "truncated frame must not surface as data: {got:?}");
     }
 }

@@ -5,7 +5,7 @@
 //! The format is versionless-simple by design: every record the system
 //! persists is written and read by this same build.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Append-only encoder.
 #[derive(Default)]
@@ -46,9 +46,30 @@ impl Encoder {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    pub fn put_str(&mut self, s: &str) {
-        self.put_u32(s.len() as u32);
+    /// Checked u32 length prefix: every `len()` that crosses the wire
+    /// goes through here.  A bare `as u32` cast truncates silently
+    /// past 4 GiB — the decoder would then happily read a frame whose
+    /// tail is misparsed as fresh records (`parrot lint` rule
+    /// `unchecked-narrow` bans the cast).
+    pub fn put_len(&mut self, n: usize) -> Result<()> {
+        let v = u32::try_from(n)
+            .map_err(|_| anyhow!("length {n} exceeds the u32 wire prefix"))?;
+        self.put_u32(v);
+        Ok(())
+    }
+
+    /// Checked u32 narrowing for non-length values feeding the wire
+    /// (element counts, ids).
+    pub fn try_put_u32(&mut self, v: usize) -> Result<()> {
+        let v = u32::try_from(v).map_err(|_| anyhow!("value {v} exceeds u32 on the wire"))?;
+        self.put_u32(v);
+        Ok(())
+    }
+
+    pub fn put_str(&mut self, s: &str) -> Result<()> {
+        self.put_len(s.len())?;
         self.buf.extend_from_slice(s.as_bytes());
+        Ok(())
     }
 
     /// f32 slice with length prefix; the workhorse for parameter tensors.
@@ -57,8 +78,8 @@ impl Encoder {
     /// single bulk copy — the per-element `to_le_bytes` loop measured
     /// ~4 GB/s, the memcpy path >20 GB/s, and this sits on the
     /// device-aggregate upload path of every round.
-    pub fn put_f32s(&mut self, xs: &[f32]) {
-        self.put_u32(xs.len() as u32);
+    pub fn put_f32s(&mut self, xs: &[f32]) -> Result<()> {
+        self.put_len(xs.len())?;
         #[cfg(target_endian = "little")]
         {
             let raw = unsafe {
@@ -73,11 +94,12 @@ impl Encoder {
                 self.buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        Ok(())
     }
 
     /// u16 slice with length prefix (fp16-compressed tensors).
-    pub fn put_u16s(&mut self, xs: &[u16]) {
-        self.put_u32(xs.len() as u32);
+    pub fn put_u16s(&mut self, xs: &[u16]) -> Result<()> {
+        self.put_len(xs.len())?;
         #[cfg(target_endian = "little")]
         {
             let raw = unsafe {
@@ -92,11 +114,13 @@ impl Encoder {
                 self.buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        Ok(())
     }
 
-    pub fn put_bytes(&mut self, xs: &[u8]) {
-        self.put_u32(xs.len() as u32);
+    pub fn put_bytes(&mut self, xs: &[u8]) -> Result<()> {
+        self.put_len(xs.len())?;
         self.buf.extend_from_slice(xs);
+        Ok(())
     }
 
     pub fn finish(self) -> Vec<u8> {
@@ -143,28 +167,39 @@ impl<'a> Decoder<'a> {
         Ok(s)
     }
 
+    /// Fixed-size read without a panicking conversion: `take`
+    /// bounds-checks, the copy length is `N` by construction.  This
+    /// keeps the whole decode path free of `unwrap`/`expect` (`parrot
+    /// lint` rule `panicking-decode`).
+    fn take_array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
     pub fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_array()?))
     }
 
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_array()?))
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_array()?))
     }
 
     pub fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_array()?))
     }
 
     pub fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.take_array()?))
     }
 
     pub fn str(&mut self) -> Result<String> {
@@ -192,7 +227,7 @@ impl<'a> Decoder<'a> {
         {
             let mut out = Vec::with_capacity(n);
             for c in raw.chunks_exact(4) {
-                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+                out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
             }
             Ok(out)
         }
@@ -217,7 +252,7 @@ impl<'a> Decoder<'a> {
         {
             let mut out = Vec::with_capacity(n);
             for c in raw.chunks_exact(2) {
-                out.push(u16::from_le_bytes(c.try_into().unwrap()));
+                out.push(u16::from_le_bytes([c[0], c[1]]));
             }
             Ok(out)
         }
@@ -312,7 +347,7 @@ mod tests {
         e.put_u64(u64::MAX);
         e.put_f32(-1.5);
         e.put_f64(std::f64::consts::PI);
-        e.put_str("parrot");
+        e.put_str("parrot").unwrap();
         let buf = e.finish();
         let mut d = Decoder::new(&buf);
         assert_eq!(d.u8().unwrap(), 7);
@@ -328,7 +363,7 @@ mod tests {
     fn round_trip_f32s() {
         let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 17.0).collect();
         let mut e = Encoder::new();
-        e.put_f32s(&xs);
+        e.put_f32s(&xs).unwrap();
         let buf = e.finish();
         assert_eq!(buf.len(), 4 + 4 * xs.len());
         let mut d = Decoder::new(&buf);
@@ -346,7 +381,7 @@ mod tests {
         let xs: Vec<u16> = (0..300).map(|i| (i * 211) as u16).collect();
         let mut e = Encoder::new();
         e.put_u16(0xBEEF);
-        e.put_u16s(&xs);
+        e.put_u16s(&xs).unwrap();
         let buf = e.finish();
         assert_eq!(buf.len(), 2 + 4 + 2 * xs.len());
         let mut d = Decoder::new(&buf);
@@ -370,7 +405,7 @@ mod tests {
         // a valid count passes and leaves the cursor on the payload
         let mut e = Encoder::new();
         e.put_u32(3);
-        e.put_bytes(&[]); // 4 more bytes of tail
+        e.put_bytes(&[]).unwrap(); // 4 more bytes of tail
         let buf = e.finish();
         let mut d = Decoder::new(&buf);
         assert_eq!(d.count(1).unwrap(), 3);
@@ -379,7 +414,7 @@ mod tests {
     #[test]
     fn truncated_string_is_error() {
         let mut e = Encoder::new();
-        e.put_str("hello");
+        e.put_str("hello").unwrap();
         let mut buf = e.finish();
         buf.truncate(6);
         let mut d = Decoder::new(&buf);
@@ -397,11 +432,27 @@ mod tests {
     #[test]
     fn empty_slices() {
         let mut e = Encoder::new();
-        e.put_f32s(&[]);
-        e.put_bytes(&[]);
+        e.put_f32s(&[]).unwrap();
+        e.put_bytes(&[]).unwrap();
         let buf = e.finish();
         let mut d = Decoder::new(&buf);
         assert!(d.f32s().unwrap().is_empty());
         assert!(d.bytes().unwrap().is_empty());
+    }
+
+    #[test]
+    fn put_len_rejects_lengths_past_u32() {
+        // No 4 GiB allocation needed: the helper checks the *value*,
+        // not a real buffer.
+        let over = u32::MAX as usize + 1;
+        let mut e = Encoder::new();
+        assert!(e.put_len(over).is_err());
+        assert!(e.try_put_u32(over).is_err());
+        assert!(e.is_empty(), "a rejected prefix must write nothing");
+        e.put_len(u32::MAX as usize).unwrap();
+        e.try_put_u32(7).unwrap();
+        let mut d = Decoder::new(&e.finish());
+        assert_eq!(d.u32().unwrap(), u32::MAX);
+        assert_eq!(d.u32().unwrap(), 7);
     }
 }

@@ -1,0 +1,70 @@
+//! Double-run determinism differential (README "Determinism
+//! discipline"): the engine halves of the `--smoke` experiment drivers
+//! must produce byte-identical summary rows when run twice in the same
+//! process under the same seed.  This is the dynamic complement to the
+//! static `parrot lint` pass — a stray HashMap iteration, ambient
+//! clock, or order-sensitive float fold anywhere under these drivers
+//! shows up here as a row diff.
+//!
+//! Seeded like the prop/fuzz suites: `PARROT_PROP_SEED=<u64>` (decimal
+//! or 0x-hex), defaulting to the fixed CI seed.  Failures print the
+//! seed for replay.
+
+use anyhow::Result;
+use parrot::exp::{asyncscale, dynamics, toposcale};
+
+/// Same contract as the (private) master seed in `util::prop`:
+/// `PARROT_PROP_SEED` as decimal or 0x-hex, default 0xC0FF_EE00.
+fn seed() -> u64 {
+    match std::env::var("PARROT_PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(h) => u64::from_str_radix(h, 16).ok(),
+                None => s.parse().ok(),
+            };
+            parsed.unwrap_or_else(|| {
+                panic!("PARROT_PROP_SEED must be a u64 (decimal or 0x-hex), got {s:?}")
+            })
+        }
+        Err(_) => 0xC0FF_EE00,
+    }
+}
+
+fn assert_identical(name: &str, s: u64, a: &[String], b: &[String]) {
+    assert_eq!(
+        a, b,
+        "{name} rows diverged across two identical runs — nondeterminism in the \
+         engine path (replay with PARROT_PROP_SEED={s:#x})"
+    );
+    assert!(!a.is_empty(), "{name} produced no rows (PARROT_PROP_SEED={s:#x})");
+}
+
+#[test]
+fn dynamics_rows_are_run_invariant() {
+    let s = seed();
+    println!("dynamics double-run under PARROT_PROP_SEED={s:#x}");
+    let a = dynamics::smoke_rows(s);
+    let b = dynamics::smoke_rows(s);
+    assert_identical("dynamics", s, &a, &b);
+}
+
+#[test]
+fn asyncscale_rows_are_run_invariant() -> Result<()> {
+    let s = seed();
+    println!("asyncscale double-run under PARROT_PROP_SEED={s:#x}");
+    let a = asyncscale::smoke_rows(s, 60, 5)?;
+    let b = asyncscale::smoke_rows(s, 60, 5)?;
+    assert_identical("asyncscale", s, &a, &b);
+    Ok(())
+}
+
+#[test]
+fn toposcale_rows_are_run_invariant() -> Result<()> {
+    let s = seed();
+    println!("toposcale double-run under PARROT_PROP_SEED={s:#x}");
+    let a = toposcale::smoke_rows(s)?;
+    let b = toposcale::smoke_rows(s)?;
+    assert_identical("toposcale", s, &a, &b);
+    Ok(())
+}

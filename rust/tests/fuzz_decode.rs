@@ -167,7 +167,7 @@ fn sample_msgs(g: &mut Gen) -> Vec<Msg> {
 fn fuzz_truncated_frames_error_not_panic() {
     check("truncated frames", 30, |g| {
         for msg in sample_msgs(g) {
-            let buf = msg.encode();
+            let buf = msg.encode().unwrap();
             // The intact frame must decode.
             Msg::decode(&buf).map_err(|e| format!("valid frame rejected: {e}"))?;
             // Any prefix must fail cleanly (or trivially succeed for
@@ -189,7 +189,7 @@ fn fuzz_truncated_frames_error_not_panic() {
 fn fuzz_bit_flipped_frames_error_not_panic() {
     check("bit-flipped frames", 30, |g| {
         for msg in sample_msgs(g) {
-            let clean = msg.encode();
+            let clean = msg.encode().unwrap();
             for _ in 0..6 {
                 let mut buf = clean.clone();
                 for _ in 0..g.int(1, 4) {
@@ -212,7 +212,7 @@ fn fuzz_compressed_aggregate_wire_corruption() {
         }
         let agg = la.finish();
         for codec in [Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.3)] {
-            let clean = agg.encoded_with(codec);
+            let clean = agg.encoded_with(codec).unwrap();
             DeviceAggregate::decode(&clean)
                 .map_err(|e| format!("{codec:?}: valid aggregate rejected: {e}"))?;
             for _ in 0..6 {
@@ -253,12 +253,12 @@ fn hostile_length_prefixes_error_before_allocating() {
     assert!(Msg::decode(&enc.finish()).is_err());
 
     // RoundDone with a huge record count after a valid empty aggregate
-    let agg_bytes = LocalAgg::new(0).finish().encoded();
+    let agg_bytes = LocalAgg::new(0).finish().encoded().unwrap();
     let mut enc = Encoder::new();
     enc.put_u8(4); // RoundDone tag
     enc.put_u32(0); // device
     enc.put_u8(0); // codec none
-    enc.put_bytes(&agg_bytes);
+    enc.put_bytes(&agg_bytes).unwrap();
     enc.put_u32(u32::MAX); // record count
     assert!(Msg::decode(&enc.finish()).is_err());
 
@@ -275,13 +275,13 @@ fn hostile_length_prefixes_error_before_allocating() {
     assert!(Msg::decode(&enc.finish()).is_err());
 
     // GroupDone with a huge record count after a valid empty aggregate
-    let agg_bytes = LocalAgg::new(0).finish().encoded();
+    let agg_bytes = LocalAgg::new(0).finish().encoded().unwrap();
     let mut enc = Encoder::new();
     enc.put_u8(13); // GroupDone tag
     enc.put_u32(2); // group
     enc.put_u32(0); // device
     enc.put_u8(0); // codec none
-    enc.put_bytes(&agg_bytes);
+    enc.put_bytes(&agg_bytes).unwrap();
     enc.put_u32(u32::MAX); // record count
     assert!(Msg::decode(&enc.finish()).is_err());
 

@@ -284,7 +284,7 @@ fn tier_aggregate(
         for (name, b) in child.reconstruction_bounds(codec) {
             *bounds.entry(name).or_insert(0.0) += b;
         }
-        let wire = child.encoded_with(codec);
+        let wire = child.encoded_with(codec).unwrap();
         tier.merge(DeviceAggregate::decode(&wire).expect("tier wire round trip"));
     }
     tier.finish()
@@ -318,7 +318,7 @@ fn prop_depth_invariance_tree_aggregation_equals_flat() {
             for (name, b) in root.reconstruction_bounds(codec) {
                 *bounds.entry(name).or_insert(0.0) += b;
             }
-            let wire = root.encoded_with(codec);
+            let wire = root.encoded_with(codec).unwrap();
             let mut global = GlobalAgg::new();
             global.merge(DeviceAggregate::decode(&wire).map_err(|e| e.to_string())?);
             let hier = global.finish();

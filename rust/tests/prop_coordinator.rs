@@ -4,6 +4,10 @@
 //! loads, hierarchical==flat aggregation through the *wire* encoding,
 //! and state-manager durability under arbitrary interleavings.
 
+// The shadow model below deliberately uses a HashMap: the property
+// is that the store matches it regardless of iteration order.
+#![allow(clippy::disallowed_types)]
+
 use parrot::aggregation::{AggOp, ClientUpdate, DeviceAggregate, GlobalAgg, LocalAgg, Payload};
 use parrot::compress::Codec;
 use parrot::config::SchedulerKind;
@@ -47,7 +51,7 @@ fn prop_message_codec_round_trip() {
             clients: clients.clone(),
             codec: *g.pick(&[Codec::None, Codec::Fp16, Codec::QInt8, Codec::TopK(0.5)]),
         };
-        match Msg::decode(&msg.encode()) {
+        match Msg::decode(&msg.encode().unwrap()) {
             Ok(Msg::Round { clients: c2, broadcast, .. }) => {
                 if c2 != clients {
                     return Err("clients mutated".into());
@@ -148,7 +152,7 @@ fn prop_hierarchical_equals_flat_through_wire() {
                 busy_secs: 0.0,
                 codec: Codec::None,
             };
-            match Msg::decode(&msg.encode()) {
+            match Msg::decode(&msg.encode().unwrap()) {
                 Ok(Msg::RoundDone { aggregate, .. }) => global.merge(aggregate),
                 _ => return Err("wire round trip failed".into()),
             }
@@ -180,9 +184,9 @@ fn prop_device_aggregate_wire_stable() {
             });
         }
         let agg = la.finish();
-        let wire = agg.encoded();
+        let wire = agg.encoded().unwrap();
         let back = DeviceAggregate::decode(&wire).map_err(|e| e.to_string())?;
-        if back.encoded() != wire {
+        if back.encoded().unwrap() != wire {
             return Err("re-encode differs".into());
         }
         if back.n_clients != n {

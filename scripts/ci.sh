@@ -33,6 +33,18 @@ if [ "$FAST" -eq 0 ]; then
   cargo bench --no-run
 fi
 
+# Determinism & wire-safety static analysis (rust/src/analysis): the
+# committed lint.baseline is a one-way ratchet — new findings fail the
+# gate, fixed findings must be re-baselined with --write-baseline.
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot lint --format json (baseline ratchet)"
+  if ! target/release/parrot lint --format json; then
+    echo "ci.sh: parrot lint found new violations — run 'target/release/parrot lint'" >&2
+    echo "ci.sh: for the human-readable report; fix them (do not grow lint.baseline)." >&2
+    exit 1
+  fi
+fi
+
 echo "==> cargo test -q  (property/fuzz suites run on their fixed default seed)"
 cargo test -q
 
