@@ -196,6 +196,10 @@ pub struct RunConfig {
     /// Async scheme: staleness discount law
     /// (`--staleness-weight const|poly:a`).
     pub staleness_weight: StalenessWeight,
+    /// Engine worker threads for the group-sharded simulation path
+    /// (`--threads`; ≥ 1).  Purely a wall-clock knob — the timeline is
+    /// byte-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -231,6 +235,7 @@ impl Default for RunConfig {
             buffer: 0,
             max_staleness: 0,
             staleness_weight: StalenessWeight::Const,
+            threads: 1,
         }
     }
 }
@@ -352,6 +357,7 @@ impl RunConfig {
         if let Some(w) = a.get("staleness-weight") {
             self.staleness_weight = StalenessWeight::parse(w)?;
         }
+        self.threads = a.usize_or("threads", self.threads)?;
         self.validate()?;
         Ok(self)
     }
@@ -446,6 +452,9 @@ impl RunConfig {
             bail!(
                 "--buffer/--max-staleness/--staleness-weight only apply to --scheme async"
             );
+        }
+        if self.threads == 0 {
+            bail!("--threads must be >= 1 (1 = the single-worker sharded engine)");
         }
         self.dynamics.validate()?;
         Ok(())

@@ -210,7 +210,8 @@ pub fn smoke(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 19)?;
     let m = args.usize_or("clients", 60)?;
     let rounds = args.usize_or("rounds", 5)?;
-    let _ = smoke_rows(seed, m, rounds)?;
+    let threads = args.usize_or("threads", 1)?;
+    let _ = smoke_rows(seed, m, rounds, threads)?;
     Ok(())
 }
 
@@ -220,7 +221,10 @@ pub fn smoke(args: &Args) -> Result<()> {
 /// seed pins the table exactly; the golden-trace regression suite
 /// compares these against a committed snapshot.  All inline agreement
 /// checks (ledger differential + degenerate sync pin) still run.
-pub fn smoke_rows(seed: u64, m: usize, rounds: usize) -> Result<Vec<String>> {
+/// `threads` sizes the engine's worker pool; the async path is
+/// inherently single-streamed, so only the sync pin ever shards — the
+/// rows must be byte-identical for every value regardless.
+pub fn smoke_rows(seed: u64, m: usize, rounds: usize, threads: usize) -> Result<Vec<String>> {
     let m_p = 16usize;
     let k = 4usize;
     let (buffer, max_staleness) = (8usize, 1usize);
@@ -228,7 +232,7 @@ pub fn smoke_rows(seed: u64, m: usize, rounds: usize) -> Result<Vec<String>> {
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
 
     // (1) virtual async run, arrival sequence recorded by the engine.
-    let mut sim = sim_for(Scheme::Async, m, k, seed, &partition);
+    let mut sim = sim_for(Scheme::Async, m, k, seed, &partition).with_threads(threads);
     sim.async_spec = AsyncSpec { buffer, max_staleness, weight };
     let (rs, outcome) = run_async_detailed(&mut sim, rounds, m_p, seed ^ 0x55);
 
@@ -275,9 +279,9 @@ pub fn smoke_rows(seed: u64, m: usize, rounds: usize) -> Result<Vec<String>> {
     ensure!(eng_applied + eng_stale == outcome.completed, "arrivals lost");
 
     // (3) degenerate pin at smoke scale.
-    let mut sync = sim_for(Scheme::Parrot, m, k, seed, &partition);
+    let mut sync = sim_for(Scheme::Parrot, m, k, seed, &partition).with_threads(threads);
     let rs_sync = run_virtual(&mut sync, rounds, m_p, seed ^ 0x55);
-    let mut deg = sim_for(Scheme::Async, m, k, seed, &partition);
+    let mut deg = sim_for(Scheme::Async, m, k, seed, &partition).with_threads(threads);
     deg.async_spec =
         AsyncSpec { buffer: 0, max_staleness: 0, weight: StalenessWeight::Const };
     let rs_deg = run_virtual(&mut deg, rounds, m_p, seed ^ 0x55);

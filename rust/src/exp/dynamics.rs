@@ -68,6 +68,7 @@ fn scenarios(rounds: usize) -> Vec<(&'static str, DynamicsSpec)> {
 /// table the golden-trace suite pins), optionally printed as a table.
 /// Every column is virtual-time-deterministic for a fixed seed — no
 /// wallclock leaks in.
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_rows(
     rounds: usize,
     m: usize,
@@ -75,6 +76,7 @@ pub fn sweep_rows(
     k: usize,
     seed: u64,
     codec: Codec,
+    threads: usize,
     print: bool,
 ) -> Vec<String> {
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
@@ -96,7 +98,8 @@ pub fn sweep_rows(
                 1,
                 seed,
             )
-            .with_dynamics(dynamics);
+            .with_dynamics(dynamics)
+            .with_threads(threads);
             let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0xDD);
             let t = mean_tail(&rs, rounds / 3);
             let util = rs.iter().map(|r| r.utilization()).sum::<f64>() / rs.len() as f64;
@@ -128,8 +131,10 @@ pub fn sweep_rows(
 
 /// The fixed-seed reduced-scale table `--smoke` prints and the
 /// golden-trace regression suite pins against its committed snapshot.
-pub fn smoke_rows(seed: u64) -> Vec<String> {
-    sweep_rows(6, 120, 24, 8, seed, Codec::None, false)
+/// `threads` sizes the sharded engine's worker pool; rows must be
+/// byte-identical for every value (the determinism suite pins 1/2/8).
+pub fn smoke_rows(seed: u64, threads: usize) -> Vec<String> {
+    sweep_rows(6, 120, 24, 8, seed, Codec::None, threads, false)
 }
 
 pub fn dynamics(args: &Args) -> Result<()> {
@@ -139,6 +144,7 @@ pub fn dynamics(args: &Args) -> Result<()> {
     let m_p = args.usize_or("per-round", if smoke { 24 } else { 100 })?;
     let k = args.usize_or("devices", if smoke { 8 } else { 32 })?;
     let seed = args.u64_or("seed", 51)?;
+    let threads = args.usize_or("threads", 1)?;
     // Upload codec (--compress): comm-byte/time columns book *encoded*
     // upload sizes, so the sweep reflects compression too.
     let codec = Codec::parse(args.get_or("compress", "none"))?;
@@ -152,7 +158,7 @@ pub fn dynamics(args: &Args) -> Result<()> {
         "{:<10} {:<14} {:>10} {:>8} {:>9} {:>10} {:>7} {:>6}",
         "scheme", "scenario", "round(s)", "util", "dropped", "wasted(s)", "leaves", "joins"
     );
-    let csv = sweep_rows(rounds, m, m_p, k, seed, codec, true);
+    let csv = sweep_rows(rounds, m, m_p, k, seed, codec, threads, true);
     println!("\n(expected: availability < 1 shrinks effective M_p; churn re-places the");
     println!(" departed device's tasks via the greedy step; stragglers stretch FA/SD");
     println!(" rounds more than Parrot's, whose scheduler re-learns the slow devices.)");

@@ -16,7 +16,10 @@
 //! configuration pinned equal to the sync timeline; `toposcale` sweeps
 //! multi-level hierarchical topologies (`--topology
 //! flat|groups:G|tree:SPEC`) and asserts cross-WAN bytes shrink with
-//! grouping at (near-)equal makespan.
+//! grouping at (near-)equal makespan; `parscale` sweeps the
+//! group-sharded parallel engine (`--threads` 1/2/4/8 × topology),
+//! asserts byte-identical rows at every thread count, and reports the
+//! wall-clock speedup (`BENCH_parscale.json`).
 
 pub mod ablation;
 pub mod asyncscale;
@@ -24,6 +27,7 @@ pub mod compression;
 pub mod convergence;
 pub mod dynamics;
 pub mod figures;
+pub mod parscale;
 pub mod statescale;
 pub mod tables;
 pub mod toposcale;
@@ -79,12 +83,13 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "statescale" => statescale::statescale(args),
         "asyncscale" => asyncscale::asyncscale(args),
         "toposcale" => toposcale::toposcale(args),
+        "parscale" => parscale::parscale(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
                 "table1", "table2", "table3", "fig5", "fig6", "fig7", "fig8", "fig9",
                 "fig10", "fig11", "dynamics", "compression", "statescale", "asyncscale",
-                "toposcale", "fig4",
+                "toposcale", "parscale", "fig4",
             ] {
                 println!("\n################ {id} ################");
                 run(id, args)?;
@@ -93,7 +98,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         }
         _ => bail!(
             "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
-             compression statescale asyncscale toposcale ablate all"
+             compression statescale asyncscale toposcale parscale ablate all"
         ),
     }
 }

@@ -1,0 +1,190 @@
+//! `parrot exp parscale` — the group-sharded parallel engine at
+//! acceptance scale: 1000 clients × 32 devices, sweeping
+//! {flat, groups:16, tree:4x4} × `--threads` {1, 2, 4, 8} on the
+//! identical seed.
+//!
+//! Two things are measured, one is asserted:
+//!
+//! - **thread invariance (hard check)**: for every topology the
+//!   per-round engine rows (virtual time, bytes, cross-WAN bytes,
+//!   group aggregates, drops, waste) must be *byte-identical* across
+//!   every swept thread count — the headline invariant of the sharded
+//!   engine.  Any divergence fails the harness and prints the seed.
+//! - **wall-clock speedup (reported)**: the engine-only wall seconds
+//!   (`VirtualSim::engine_secs` — scheduler and row bookkeeping
+//!   excluded) per thread count, and the speedup over `--threads 1`.
+//!   On a multi-core host the full sweep asserts the grouped topology
+//!   gains (>1×) at 8 threads; on a single-core host the parallel
+//!   workers only interleave, so the assertion is skipped (and says
+//!   so) — the invariance check is the part that must hold anywhere.
+//!
+//! `--smoke` (wired into `scripts/ci.sh`) shrinks the sweep to
+//! {flat, groups:16} × threads {1, 2} and reports without the speedup
+//! assertion.  Results land in `BENCH_parscale.json`; the committed
+//! copy at the repo root records the reference host's numbers.
+
+use crate::cluster::{ClusterProfile, Topology, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::{Partition, PartitionKind};
+use crate::simulation::{run_virtual, CommModel, VRound, VirtualSim};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+
+fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One engine row per round: every virtual-time column the sharded
+/// merge could plausibly perturb.  Byte-compared across thread counts.
+fn row(spec: &str, r: &VRound) -> String {
+    format!(
+        "{spec},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{:.9}",
+        r.round,
+        r.total_secs,
+        r.compute_secs,
+        r.comm_secs,
+        r.bytes,
+        r.trips,
+        r.cross_group_bytes,
+        r.group_aggs,
+        r.scheduled_clients,
+        r.dropped_clients,
+        r.wasted_secs
+    )
+}
+
+/// Run one (topology, threads) cell; returns the per-round rows and
+/// the engine-only wall seconds.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    spec: &str,
+    topo: &Topology,
+    partition: &Partition,
+    m_p: usize,
+    k: usize,
+    rounds: usize,
+    seed: u64,
+    threads: usize,
+) -> (Vec<String>, f64) {
+    let cluster = ClusterProfile::heterogeneous(k).with_topology(topo.clone());
+    let mut sim = VirtualSim::new(
+        Scheme::Parrot,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition.clone(),
+        1,
+        seed,
+    )
+    .with_threads(threads);
+    let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0x70F0);
+    (rs.iter().map(|r| row(spec, r)).collect(), sim.engine_secs)
+}
+
+pub fn parscale(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let m = args.usize_or("clients", 1000)?;
+    let m_p = args.usize_or("per-round", if smoke { 50 } else { 100 })?;
+    let k = args.usize_or("devices", 32)?;
+    let rounds = args.usize_or("rounds", if smoke { 2 } else { 3 })?;
+    let seed = args.u64_or("seed", 41)?;
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let topologies: &[&str] =
+        if smoke { &["flat", "groups:16"] } else { &["flat", "groups:16", "tree:4x4"] };
+    let hp = host_parallelism();
+    println!(
+        "Parallel sharded engine — M={m}, M_p={m_p}, K={k}, R={rounds}, \
+         host parallelism {hp}{}",
+        if smoke { " (smoke scale)" } else { "" }
+    );
+    println!(
+        "{:<10} {:>7} {:>12} {:>9}  {}",
+        "topology", "threads", "engine(s)", "speedup", "rows"
+    );
+
+    let mut topo_reports = Vec::new();
+    let mut grouped_speedup_at_max = 1.0f64;
+    for spec in topologies {
+        let topo = Topology::parse(spec)?;
+        let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+        let mut reference: Option<Vec<String>> = None;
+        let mut secs_at = Vec::new();
+        let mut speedups = Vec::new();
+        for &t in thread_counts {
+            let (rows, secs) = run_cell(spec, &topo, &partition, m_p, k, rounds, seed, t);
+            if let Some(base) = reference.as_ref() {
+                ensure!(
+                    base == &rows,
+                    "{spec}: rows diverged between --threads {} and --threads {t} — \
+                     the sharded engine leaked thread-count dependence \
+                     (replay with --seed {seed})",
+                    thread_counts[0]
+                );
+            } else {
+                reference = Some(rows);
+            }
+            let base_secs = secs_at.first().copied().unwrap_or(secs);
+            let speedup = if secs > 0.0 { base_secs / secs } else { 1.0 };
+            secs_at.push(secs);
+            speedups.push(speedup);
+            println!(
+                "{:<10} {:>7} {:>12.4} {:>8.2}x  {}",
+                spec,
+                t,
+                secs,
+                speedup,
+                if t == thread_counts[0] { "reference" } else { "identical" }
+            );
+        }
+        if *spec == "groups:16" {
+            grouped_speedup_at_max = *speedups.last().unwrap_or(&1.0);
+        }
+        let rows = reference.unwrap_or_default();
+        ensure!(!rows.is_empty(), "{spec}: engine produced no rounds");
+        topo_reports.push(
+            Json::obj()
+                .set("topology", *spec)
+                .set("rows_identical", true)
+                .set("engine_secs", secs_at)
+                .set("speedup_vs_1", speedups)
+                .set("rows", rows),
+        );
+    }
+
+    if !smoke {
+        if hp >= 2 {
+            ensure!(
+                grouped_speedup_at_max > 1.0,
+                "groups:16 at {} threads must beat --threads 1 on a {hp}-way host: \
+                 speedup {grouped_speedup_at_max:.2}x",
+                thread_counts.last().unwrap()
+            );
+        } else {
+            println!(
+                "(single-core host: workers interleave, skipping the >1x speedup \
+                 assertion; thread invariance checked above)"
+            );
+        }
+    }
+    println!(
+        "\n(same seed, same rows at every thread count — the shard decomposition and"
+    );
+    println!(" merge order are fixed by the topology and seed, threads only size the");
+    println!(" worker pool; speedup comes from running leaf-group shards in parallel.)");
+
+    let json = Json::obj()
+        .set("name", "parscale")
+        .set("smoke", smoke)
+        .set("clients", m)
+        .set("per_round", m_p)
+        .set("devices", k)
+        .set("rounds", rounds)
+        .set("seed", format!("{seed:#x}"))
+        .set("host_parallelism", hp)
+        .set("threads", thread_counts.to_vec())
+        .set("topologies", Json::Arr(topo_reports));
+    super::save_json(args, "BENCH_parscale", &json)
+}

@@ -45,6 +45,7 @@ struct TopoRun {
     max_group_aggs: usize,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_one(
     scheme: Scheme,
     topo: &Topology,
@@ -53,6 +54,7 @@ fn run_one(
     k: usize,
     rounds: usize,
     seed: u64,
+    threads: usize,
 ) -> TopoRun {
     let cluster = ClusterProfile::heterogeneous(k).with_topology(topo.clone());
     let mut sim = VirtualSim::new(
@@ -65,7 +67,8 @@ fn run_one(
         partition.clone(),
         1,
         seed,
-    );
+    )
+    .with_threads(threads);
     if scheme == Scheme::Async {
         sim.async_spec = AsyncSpec {
             buffer: (m_p / 2).max(1),
@@ -99,6 +102,7 @@ pub fn toposcale(args: &Args) -> Result<()> {
     let k = args.usize_or("devices", 32)?;
     let rounds = args.usize_or("rounds", 6)?;
     let seed = args.u64_or("seed", 37)?;
+    let threads = args.usize_or("threads", 1)?;
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
     println!(
         "Hierarchical topologies — M={m}, M_p={m_p}, K={k}, R={rounds} \
@@ -115,7 +119,7 @@ pub fn toposcale(args: &Args) -> Result<()> {
         for spec in ["flat", "groups:16", "groups:8", "groups:4"] {
             let topo = Topology::parse(spec)?;
             let groups = topo.n_groups();
-            let run = run_one(scheme, &topo, &partition, m_p, k, rounds, seed);
+            let run = run_one(scheme, &topo, &partition, m_p, k, rounds, seed, threads);
             println!(
                 "{:<8} {:<12} {:>10.2} {:>12.1} {:>14.1} {:>7}-{:<3}",
                 mode,
@@ -203,13 +207,14 @@ fn mk_updates(m: usize, seed: u64) -> Vec<ClientUpdate> {
 /// 1000 clients with the inline shrinkage / makespan / group-structure
 /// checks applied.  Split out so the double-run determinism harness
 /// (`rust/tests/determinism.rs`) can drive it without the deploy leg.
-fn smoke_engine(seed: u64) -> Result<(TopoRun, TopoRun)> {
+fn smoke_engine(seed: u64, threads: usize) -> Result<(TopoRun, TopoRun)> {
     let (m, m_p, k, rounds) = (1000usize, 100usize, 32usize, 3usize);
     let n_groups = 8usize;
     let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
     let topo = Topology::groups(n_groups);
-    let flat = run_one(Scheme::Parrot, &Topology::flat(), &partition, m_p, k, rounds, seed);
-    let grouped = run_one(Scheme::Parrot, &topo, &partition, m_p, k, rounds, seed);
+    let flat =
+        run_one(Scheme::Parrot, &Topology::flat(), &partition, m_p, k, rounds, seed, threads);
+    let grouped = run_one(Scheme::Parrot, &topo, &partition, m_p, k, rounds, seed, threads);
     ensure!(
         grouped.cross_bytes < flat.cross_bytes,
         "cross-WAN bytes must shrink with grouping: {} !< {}",
@@ -232,9 +237,11 @@ fn smoke_engine(seed: u64) -> Result<(TopoRun, TopoRun)> {
 }
 
 /// Deterministic engine rows for the double-run differential: two runs
-/// under the same seed must produce byte-identical rows.
-pub fn smoke_rows(seed: u64) -> Result<Vec<String>> {
-    let (flat, grouped) = smoke_engine(seed)?;
+/// under the same seed must produce byte-identical rows — and, since
+/// the grouped leg runs the sharded engine, identical across every
+/// `threads` value too (the 1-vs-2-vs-8 differential pins this).
+pub fn smoke_rows(seed: u64, threads: usize) -> Result<Vec<String>> {
+    let (flat, grouped) = smoke_engine(seed, threads)?;
     let row = |name: &str, r: &TopoRun| {
         format!(
             "{name},{:.6},{},{},{}-{}",
@@ -249,12 +256,13 @@ pub fn smoke_rows(seed: u64) -> Result<Vec<String>> {
 /// structure) plus the deploy-side tier pipeline at 1000 clients.
 pub fn smoke(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 23)?;
+    let threads = args.usize_or("threads", 1)?;
     let (m, k) = (1000usize, 32usize);
     let n_groups = 8usize;
     let topo = Topology::groups(n_groups);
 
     // (1) engine: flat vs groups:8 on the identical stream.
-    let (flat, grouped) = smoke_engine(seed)?;
+    let (flat, grouped) = smoke_engine(seed, threads)?;
 
     // (2) deploy-side group-aggregate differential at 1000 clients:
     // member LocalAggs merge into per-group TierAggs, the merged group

@@ -35,8 +35,8 @@ USAGE:
                [--state-shards N] [--state-writeback [on|off]] [--state-affinity PCT]
                [--state-cache-mb MB] [--scheduler ...|affinity:P|window:T+affinity:P]
                [--buffer K] [--max-staleness S] [--staleness-weight const|poly:A]
-               [--topology flat|groups:G[:BW:LAT]|tree:F1xF2[:BW:LAT]]
-  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|asyncscale|toposcale|ablate|all> [--results DIR] [...]
+               [--topology flat|groups:G[:BW:LAT]|tree:F1xF2[:BW:LAT]] [--threads N]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|asyncscale|toposcale|parscale|ablate|all> [--results DIR] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]

@@ -27,6 +27,37 @@
 //! With a fully static [`DynamicsSpec`] the engine reproduces the
 //! legacy closed-form per-scheme loops exactly (property-tested in
 //! [`super::tests`]): same noise draws, same placements, same totals.
+//!
+//! ## Group-sharded execution (`--threads N`)
+//!
+//! Grouped plans (`Assigned` refill + a [`TailComm::Tiered`] tail with
+//! more than one leaf group) run one event-heap *shard per leaf group*:
+//! all intra-round interaction (task starts, per-task comm, churn
+//! orphaning) is confined to a group, and the only cross-WAN
+//! interaction is the tiered round tail, which starts strictly after
+//! every shard's compute phase has drained.  That tail is the
+//! conservative lookahead barrier: a shard may advance freely to the
+//! end of its own timeline because the earliest possible cross-WAN
+//! event — the tier merge — cannot precede `max(shard work_end)`, and
+//! no shard observes a cross-WAN event before that barrier time.
+//!
+//! Determinism is by construction, not by locking: the *same* sharded
+//! algorithm runs at every `--threads N` (threads only bounds the
+//! worker pool), each shard owns a disjoint slice of executors/tasks
+//! with its own derived RNG stream and a namespaced event-sequence
+//! counter (`seq = shard + k·n_shards`), and shard results merge in
+//! shard-index order — so per-shard queues recombine on
+//! `(virtual_time, global_seq)` exactly as the single heap orders
+//! [`Scheduled`], and same seed ≡ same trace holds for any thread
+//! count (pinned by `tests/determinism.rs` and the
+//! `prop_sharded_pop_sequence_is_thread_invariant` property).
+//!
+//! Shard-local couplings, by design: orphan reassignment stays inside
+//! the departing executor's group (`Greedy` degrades to the
+//! least-loaded rule over the group's survivors), and the
+//! "last executor never leaves" guard is per group — a leaf group
+//! never fully dies mid-round.  Flat, shared-pull, and async plans are
+//! untouched and run the legacy single-heap path.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -51,6 +82,36 @@ pub enum Event {
     /// (async scheme only — the work-conserving dispatcher's analogue
     /// of the round-tail `CommDone` chain).
     FlushDone,
+}
+
+/// One popped-event record for the merge-order differential: the event
+/// virtual time (as IEEE bits — times are non-negative, so bit order
+/// equals numeric order), the global sequence number, and the event
+/// discriminant.  Byte-comparable across thread counts.
+pub type TraceRow = (u64, u64, u8);
+
+fn event_discr(e: &Event) -> u8 {
+    match e {
+        Event::TaskStart { .. } => 0,
+        Event::TaskDone { .. } => 1,
+        Event::CommDone { .. } => 2,
+        Event::DeviceJoin { .. } => 3,
+        Event::DeviceLeave { .. } => 4,
+        Event::ClientUnavailable { .. } => 5,
+        Event::FlushDone => 6,
+    }
+}
+
+/// A scheduler-history side effect raised during a shard's event phase.
+/// Workers cannot share `&mut Scheduler`, so sharded cores buffer these
+/// tagged with `(virtual_time, global_seq)` and the merge step applies
+/// them in global event order — per-device subsequences (all ops of a
+/// device come from its own shard) land in the same relative order the
+/// single-heap path would produce.
+#[derive(Debug)]
+enum HistOp {
+    Record(TaskRecord),
+    Prune(usize),
 }
 
 /// Heap entry: earliest virtual time pops first; ties break by
@@ -306,6 +367,15 @@ struct Core<'a> {
     now: f64,
     work_end: f64,
     seq: u64,
+    /// Sequence-number stride: 1 for the single-heap path; `n_shards`
+    /// for a shard core (seq starts at the shard id), so merged shard
+    /// sequences interleave without collisions.
+    seq_stride: u64,
+    /// `Some` on shard cores: scheduler-history ops buffered for the
+    /// post-join merge instead of applied live.
+    sched_ops: Option<Vec<(f64, u64, HistOp)>>,
+    /// Pop-order log for the thread-count differential (None = off).
+    trace: Option<Vec<TraceRow>>,
     bytes: u64,
     trips: u64,
     cross_bytes: u64,
@@ -320,7 +390,7 @@ struct Core<'a> {
 impl<'a> Core<'a> {
     fn push(&mut self, time: f64, epoch: u64, event: Event) {
         self.heap.push(Scheduled { time, seq: self.seq, epoch, event });
-        self.seq += 1;
+        self.seq += self.seq_stride;
     }
 
     fn alive_count(&self) -> usize {
@@ -432,13 +502,16 @@ impl<'a> Core<'a> {
         self.completed += 1;
         self.work_end = self.now;
         if self.record_history {
-            if let Some(s) = sched.as_deref_mut() {
-                s.record(TaskRecord {
-                    round: self.round,
-                    device: slot,
-                    n_samples: self.tasks[task].n_eff,
-                    secs: dur,
-                });
+            let rec = TaskRecord {
+                round: self.round,
+                device: slot,
+                n_samples: self.tasks[task].n_eff,
+                secs: dur,
+            };
+            if let Some(buf) = self.sched_ops.as_mut() {
+                buf.push((self.now, self.seq, HistOp::Record(rec)));
+            } else if let Some(s) = sched.as_deref_mut() {
+                s.record(rec);
             }
         }
         if self.comm_up > 0.0 || self.bytes_up > 0 {
@@ -508,7 +581,9 @@ impl<'a> Core<'a> {
         }
         orphans.extend(self.execs[slot].queue.drain(..));
         if self.record_history {
-            if let Some(s) = sched.as_deref_mut() {
+            if let Some(buf) = self.sched_ops.as_mut() {
+                buf.push((self.now, self.seq, HistOp::Prune(slot)));
+            } else if let Some(s) = sched.as_deref_mut() {
                 s.prune_device(slot);
             }
         }
@@ -591,6 +666,15 @@ impl<'a> Core<'a> {
                     best_load = l;
                     best = i;
                 }
+            }
+            if best == usize::MAX {
+                // No executor could take the task — every slot is dead
+                // (or every projected load compared as NaN).  Mirror the
+                // all-dead early return in `place_orphans`: the orphan
+                // is dropped, not a crash.
+                self.tasks[t].state = TaskState::Dropped;
+                self.dropped += 1;
+                continue;
             }
             self.execs[best].queue.push_back(t);
         }
@@ -783,13 +867,19 @@ impl<'a> Core<'a> {
         self.now = t;
     }
 
-    fn run(mut self, tail: TailComm, mut sched: Option<&mut Scheduler>) -> RoundOutcome {
-        let initial_mask: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
+    /// The compute phase: drain the event heap, then sweep unplaceable
+    /// tasks to `Dropped` and book the state legs of tasks that never
+    /// started.  Everything before the round tail — on the sharded
+    /// path each shard core runs exactly this over its own group.
+    fn run_events(&mut self, sched: &mut Option<&mut Scheduler>) {
         for slot in 0..self.execs.len() {
             self.try_start(slot);
         }
         while let Some(s) = self.heap.pop() {
             self.now = self.now.max(s.time);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.push((s.time.to_bits(), s.seq, event_discr(&s.event)));
+            }
             match s.event {
                 Event::TaskStart { task, device } => {
                     if s.epoch != self.execs[device].epoch || !self.execs[device].alive {
@@ -801,7 +891,7 @@ impl<'a> Core<'a> {
                     if s.epoch != self.execs[device].epoch {
                         continue;
                     }
-                    self.on_task_done(device, task, &mut sched);
+                    self.on_task_done(device, task, sched);
                 }
                 Event::CommDone { device, bytes } => {
                     if s.epoch != self.execs[device].epoch {
@@ -809,7 +899,7 @@ impl<'a> Core<'a> {
                     }
                     self.on_comm_done(device, bytes);
                 }
-                Event::DeviceLeave { device } => self.on_device_leave(device, &mut sched),
+                Event::DeviceLeave { device } => self.on_device_leave(device, sched),
                 Event::DeviceJoin { device } => self.on_device_join(device),
                 Event::ClientUnavailable { task, device } => {
                     if s.epoch != self.execs[device].epoch {
@@ -840,7 +930,12 @@ impl<'a> Core<'a> {
                 }
             }
         }
-        self.run_tail(tail, &initial_mask);
+    }
+
+    /// Price the round tail and assemble the outcome (runs once, on
+    /// merged state in the sharded path).
+    fn finish(mut self, tail: TailComm, initial_mask: &[bool]) -> RoundOutcome {
+        self.run_tail(tail, initial_mask);
         RoundOutcome {
             busy: self.execs.iter().map(|e| e.busy).collect(),
             comm_occ: self.execs.iter().map(|e| e.comm).collect(),
@@ -861,13 +956,21 @@ impl<'a> Core<'a> {
             group_aggs: self.group_aggs,
         }
     }
+
+    /// Single-heap execution: events, then the tail (the legacy path —
+    /// flat, shared-pull, and async-degenerate plans).  Returns the pop
+    /// trace alongside the outcome when tracing was requested.
+    fn run(mut self, tail: TailComm, mut sched: Option<&mut Scheduler>) -> (RoundOutcome, Option<Vec<TraceRow>>) {
+        let initial_mask: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
+        self.run_events(&mut sched);
+        let trace = self.trace.take();
+        (self.finish(tail, &initial_mask), trace)
+    }
 }
 
-/// Execute one round of `plan` on the discrete-event core.
-///
-/// `dyn_seed` seeds the dynamics stream (stragglers, drops, random
-/// churn) — a stream separate from the measurement-noise draws so that
-/// enabling dynamics never perturbs the base timeline's noise sequence.
+/// Execute one round of `plan` on the discrete-event core
+/// (compatibility wrapper over [`run_round_opts`] with one worker and
+/// no event trace — same result for every thread count).
 pub fn run_round(
     plan: RoundPlan,
     cluster: &ClusterProfile,
@@ -877,9 +980,13 @@ pub fn run_round(
     dyn_seed: u64,
     scheduler: Option<&mut Scheduler>,
 ) -> RoundOutcome {
-    debug_assert_eq!(plan.alive.len(), plan.n_exec);
-    let mut rng = Rng::new(dyn_seed).derive(round as u64);
-    let execs: Vec<ExecState> = (0..plan.n_exec)
+    run_round_opts(plan, cluster, cost, round, dynamics, dyn_seed, scheduler, 1, None)
+}
+
+/// Fresh per-executor runtime state from the plan's alive mask and
+/// assigned queues.
+fn exec_states(plan: &RoundPlan) -> Vec<ExecState> {
+    (0..plan.n_exec)
         .map(|i| ExecState {
             alive: plan.alive[i],
             epoch: 0,
@@ -889,8 +996,61 @@ pub fn run_round(
             queue: plan.assigned.get(i).map(|q| q.iter().cloned().collect()).unwrap_or_default(),
             current: None,
         })
-        .collect();
+        .collect()
+}
 
+/// Execute one round of `plan` on the discrete-event core.
+///
+/// `dyn_seed` seeds the dynamics stream (stragglers, drops, random
+/// churn) — a stream separate from the measurement-noise draws so that
+/// enabling dynamics never perturbs the base timeline's noise sequence.
+///
+/// `threads` bounds the worker pool for the group-sharded path (see
+/// the module docs); the outcome is byte-identical for every value —
+/// grouped plans always run the sharded algorithm, everything else
+/// always runs the single heap.  `trace` collects the merged event pop
+/// sequence `(time_bits, seq, discriminant)` when provided.
+#[allow(clippy::too_many_arguments)]
+pub fn run_round_opts(
+    plan: RoundPlan,
+    cluster: &ClusterProfile,
+    cost: &WorkloadCost,
+    round: usize,
+    dynamics: &DynamicsSpec,
+    dyn_seed: u64,
+    scheduler: Option<&mut Scheduler>,
+    threads: usize,
+    trace: Option<&mut Vec<TraceRow>>,
+) -> RoundOutcome {
+    debug_assert_eq!(plan.alive.len(), plan.n_exec);
+    let tiered = match &plan.tail {
+        TailComm::Tiered(tt)
+            if plan.refill == RefillPolicy::Assigned
+                && tt.n_groups > 1
+                && !plan.tasks.is_empty() =>
+        {
+            Some(tt.clone())
+        }
+        _ => None,
+    };
+    if let Some(tt) = tiered {
+        return run_round_sharded(
+            plan,
+            tt,
+            cluster,
+            cost,
+            round,
+            dynamics,
+            dyn_seed,
+            scheduler,
+            threads.max(1),
+            trace,
+        );
+    }
+
+    // ---- legacy single-heap path (flat / shared-pull plans) ----------
+    let mut rng = Rng::new(dyn_seed).derive(round as u64);
+    let execs = exec_states(&plan);
     let n_tasks = plan.tasks.len();
     let mut core = Core {
         round,
@@ -916,6 +1076,9 @@ pub fn run_round(
         now: 0.0,
         work_end: 0.0,
         seq: 0,
+        seq_stride: 1,
+        sched_ops: None,
+        trace: trace.is_some().then(Vec::new),
         bytes: 0,
         trips: 0,
         cross_bytes: 0,
@@ -928,7 +1091,11 @@ pub fn run_round(
     };
 
     if core.tasks.is_empty() {
-        return core.run(TailComm::None, scheduler);
+        let (out, tr) = core.run(TailComm::None, scheduler);
+        if let (Some(dst), Some(tr)) = (trace, tr) {
+            *dst = tr;
+        }
+        return out;
     }
 
     // Scripted churn for this round.
@@ -963,7 +1130,444 @@ pub fn run_round(
         }
     }
 
-    core.run(plan.tail, scheduler)
+    let (out, tr) = core.run(plan.tail, scheduler);
+    if let (Some(dst), Some(tr)) = (trace, tr) {
+        *dst = tr;
+    }
+    out
+}
+
+/// One leaf group's slice of the round, built serially before the
+/// workers launch (all index mapping is thread-count independent).
+struct ShardInput {
+    shard: usize,
+    /// Global slot per local executor index (increasing order).
+    slots: Vec<usize>,
+    /// Global task index per local task index (increasing order).
+    task_globals: Vec<usize>,
+    tasks: Vec<SimTask>,
+    alive: Vec<bool>,
+    /// Per local executor: queue of *local* task indices.
+    queues: Vec<VecDeque<usize>>,
+    /// Local state legs (no flush tail — the parent prices it once).
+    state: StatePlan,
+    /// Churn events for this group, in global draw order, with
+    /// device ids already translated to local slots.
+    churn: Vec<(f64, Event)>,
+}
+
+/// What a shard worker hands back for the merge.
+struct ShardOut {
+    shard: usize,
+    slots: Vec<usize>,
+    task_globals: Vec<usize>,
+    tasks: Vec<SimTask>,
+    execs: Vec<ExecState>,
+    work_end: f64,
+    bytes: u64,
+    trips: u64,
+    state_bytes: u64,
+    state_secs: f64,
+    wasted: f64,
+    dropped: usize,
+    completed: usize,
+    departures: usize,
+    joins: usize,
+    ops: Vec<(f64, u64, HistOp)>,
+    trace: Vec<TraceRow>,
+}
+
+/// Run one shard's compute phase to completion on its own heap.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    input: ShardInput,
+    plan: &RoundPlan,
+    cluster: &ClusterProfile,
+    cost: &WorkloadCost,
+    dynamics: &DynamicsSpec,
+    round: usize,
+    dyn_seed: u64,
+    n_shards: usize,
+    want_trace: bool,
+) -> ShardOut {
+    let ShardInput { shard, slots, task_globals, tasks, alive, queues, state, churn } = input;
+    let n_tasks = tasks.len();
+    let execs: Vec<ExecState> = alive
+        .iter()
+        .zip(queues)
+        .map(|(&alive, queue)| ExecState {
+            alive,
+            epoch: 0,
+            busy: 0.0,
+            comm: 0.0,
+            wasted: 0.0,
+            queue,
+            current: None,
+        })
+        .collect();
+    let mut core = Core {
+        round,
+        cluster,
+        cost,
+        dynamics,
+        // One derived dynamics stream per shard: straggler/drop draws
+        // are consumed group-locally, so the stream cannot depend on
+        // cross-group event interleaving (or the worker count).
+        rng: Rng::new(dyn_seed).derive(round as u64).derive(0x57A6).derive(shard as u64),
+        tasks,
+        execs,
+        shared: VecDeque::new(),
+        refill: plan.refill,
+        reassign: plan.reassign,
+        comm_down: plan.per_task_comm.0,
+        comm_up: plan.per_task_comm.1,
+        bytes_down: plan.per_task_bytes.0,
+        bytes_up: plan.per_task_bytes.1,
+        state,
+        state_booked: vec![false; n_tasks],
+        state_bytes: 0,
+        state_secs: 0.0,
+        record_history: plan.record_history,
+        heap: BinaryHeap::new(),
+        now: 0.0,
+        work_end: 0.0,
+        // Namespaced sequence counter: shard + k·n_shards, so merged
+        // shard queues interleave on (time, seq) without collisions.
+        seq: shard as u64,
+        seq_stride: n_shards as u64,
+        sched_ops: Some(Vec::new()),
+        trace: want_trace.then(Vec::new),
+        bytes: 0,
+        trips: 0,
+        cross_bytes: 0,
+        group_aggs: 0,
+        wasted: 0.0,
+        dropped: 0,
+        completed: 0,
+        departures: 0,
+        joins: 0,
+    };
+    for (t, event) in churn {
+        core.push(t, 0, event);
+    }
+    let mut no_sched: Option<&mut Scheduler> = None;
+    core.run_events(&mut no_sched);
+    ShardOut {
+        shard,
+        slots,
+        task_globals,
+        tasks: core.tasks,
+        execs: core.execs,
+        work_end: core.work_end,
+        bytes: core.bytes,
+        trips: core.trips,
+        state_bytes: core.state_bytes,
+        state_secs: core.state_secs,
+        wasted: core.wasted,
+        dropped: core.dropped,
+        completed: core.completed,
+        departures: core.departures,
+        joins: core.joins,
+        ops: core.sched_ops.take().unwrap_or_default(),
+        trace: core.trace.take().unwrap_or_default(),
+    }
+}
+
+/// The group-sharded round: one event-heap shard per leaf group on up
+/// to `threads` scoped workers, merged at the WAN barrier (the tiered
+/// tail).  See the module docs for the determinism argument.
+#[allow(clippy::too_many_arguments)]
+fn run_round_sharded(
+    plan: RoundPlan,
+    tt: TieredTail,
+    cluster: &ClusterProfile,
+    cost: &WorkloadCost,
+    round: usize,
+    dynamics: &DynamicsSpec,
+    dyn_seed: u64,
+    scheduler: Option<&mut Scheduler>,
+    threads: usize,
+    trace: Option<&mut Vec<TraceRow>>,
+) -> RoundOutcome {
+    let n_shards = tt.n_groups;
+    let n_exec = plan.n_exec;
+    let shard_of: Vec<usize> = (0..n_exec)
+        .map(|s| tt.group_of.get(s).copied().unwrap_or(0).min(n_shards - 1))
+        .collect();
+
+    // Local index spaces: executors and tasks, per shard.
+    let mut slots: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    let mut slot_local = vec![0usize; n_exec];
+    for s in 0..n_exec {
+        slot_local[s] = slots[shard_of[s]].len();
+        slots[shard_of[s]].push(s);
+    }
+    // Task ownership follows the assigned executor; tasks no queue
+    // mentions stay with the parent and are dropped in the merge sweep
+    // (the single heap would never start them either).
+    let mut task_shard = vec![usize::MAX; plan.tasks.len()];
+    for (exec, q) in plan.assigned.iter().enumerate() {
+        for &t in q {
+            if exec < n_exec && t < task_shard.len() {
+                task_shard[t] = shard_of[exec];
+            }
+        }
+    }
+    let mut task_globals: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    let mut task_local = vec![0usize; plan.tasks.len()];
+    for (t, &sh) in task_shard.iter().enumerate() {
+        if sh != usize::MAX {
+            task_local[t] = task_globals[sh].len();
+            task_globals[sh].push(t);
+        }
+    }
+
+    // Churn events, drawn in the legacy global order (scripted events
+    // first, then one pass over the slots for the random draws — the
+    // round stream is consumed identically to the single-heap path),
+    // then routed to the owning shard.  Events for slots outside the
+    // executor space are no-ops on the single heap and are skipped.
+    let mut rng = Rng::new(dyn_seed).derive(round as u64);
+    let mut churn: Vec<Vec<(f64, Event)>> = vec![Vec::new(); n_shards];
+    for ev in dynamics.churn.scripted(round) {
+        if ev.device >= n_exec {
+            continue;
+        }
+        let device = slot_local[ev.device];
+        let event = match ev.kind {
+            ChurnKind::Leave => Event::DeviceLeave { device },
+            ChurnKind::Join => Event::DeviceJoin { device },
+        };
+        churn[shard_of[ev.device]].push((ev.secs.max(0.0), event));
+    }
+    if dynamics.churn.leave_prob > 0.0 || dynamics.churn.join_prob > 0.0 {
+        let total_base: f64 = plan
+            .tasks
+            .iter()
+            .map(|t| (cost.t_sample * t.n_eff as f64 + cost.b_fixed) * t.noise)
+            .sum();
+        let alive_count = plan.alive.iter().filter(|&&a| a).count();
+        let horizon = total_base / alive_count.max(1) as f64;
+        for slot in 0..n_exec {
+            if plan.alive[slot] {
+                if dynamics.churn.leave_prob > 0.0 && rng.next_f64() < dynamics.churn.leave_prob
+                {
+                    let t = rng.next_f64() * horizon;
+                    churn[shard_of[slot]]
+                        .push((t, Event::DeviceLeave { device: slot_local[slot] }));
+                }
+            } else if dynamics.churn.join_prob > 0.0 && rng.next_f64() < dynamics.churn.join_prob
+            {
+                let t = rng.next_f64() * horizon;
+                churn[shard_of[slot]].push((t, Event::DeviceJoin { device: slot_local[slot] }));
+            }
+        }
+    }
+
+    let want_trace = trace.is_some();
+    let mut inputs: Vec<ShardInput> = Vec::with_capacity(n_shards);
+    for (sh, churn) in churn.into_iter().enumerate() {
+        let tasks: Vec<SimTask> =
+            task_globals[sh].iter().map(|&g| plan.tasks[g].clone()).collect();
+        let alive: Vec<bool> = slots[sh].iter().map(|&g| plan.alive[g]).collect();
+        let queues: Vec<VecDeque<usize>> = slots[sh]
+            .iter()
+            .map(|&g| {
+                plan.assigned
+                    .get(g)
+                    .map(|q| q.iter().map(|&t| task_local[t]).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let state = StatePlan {
+            legs: if plan.state.legs.is_empty() {
+                Vec::new()
+            } else {
+                task_globals[sh]
+                    .iter()
+                    .map(|&g| plan.state.legs.get(g).copied().unwrap_or_default())
+                    .collect()
+            },
+            prefetch: plan.state.prefetch,
+            tail_secs: 0.0,
+            tail_bytes: 0,
+        };
+        inputs.push(ShardInput {
+            shard: sh,
+            slots: slots[sh].clone(),
+            task_globals: task_globals[sh].clone(),
+            tasks,
+            alive,
+            queues,
+            state,
+            churn,
+        });
+    }
+
+    // Static shard→worker round-robin on scoped threads: the partition
+    // changes with `threads`, the per-shard computations do not — so
+    // the merged result is identical for every worker count.  One
+    // worker spawns no threads at all.
+    let workers = threads.min(n_shards).max(1);
+    let mut per_worker: Vec<Vec<ShardInput>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, input) in inputs.into_iter().enumerate() {
+        per_worker[i % workers].push(input);
+    }
+    let plan_ref = &plan;
+    let run_batch = |batch: Vec<ShardInput>| -> Vec<ShardOut> {
+        batch
+            .into_iter()
+            .map(|input| {
+                run_shard(
+                    input, plan_ref, cluster, cost, dynamics, round, dyn_seed, n_shards,
+                    want_trace,
+                )
+            })
+            .collect()
+    };
+    let mut outs: Vec<ShardOut> = std::thread::scope(|scope| {
+        let mut batches = per_worker.into_iter();
+        let mine = batches.next().unwrap_or_default();
+        let handles: Vec<_> = batches.map(|batch| scope.spawn(|| run_batch(batch))).collect();
+        let mut all = run_batch(mine);
+        for h in handles {
+            all.extend(h.join().expect("shard worker panicked"));
+        }
+        all
+    });
+    outs.sort_by_key(|o| o.shard);
+
+    // ---- merge at the WAN barrier, in shard-index order --------------
+    let record_history = plan.record_history;
+    let initial_mask = plan.alive.clone();
+    let execs = exec_states(&plan);
+    let n_tasks = plan.tasks.len();
+    let mut parent = Core {
+        round,
+        cluster,
+        cost,
+        dynamics,
+        rng: Rng::new(dyn_seed).derive(round as u64).derive(0x57A6),
+        tasks: plan.tasks,
+        execs,
+        shared: VecDeque::new(),
+        refill: plan.refill,
+        reassign: plan.reassign,
+        comm_down: plan.per_task_comm.0,
+        comm_up: plan.per_task_comm.1,
+        bytes_down: plan.per_task_bytes.0,
+        bytes_up: plan.per_task_bytes.1,
+        state: plan.state,
+        state_booked: vec![false; n_tasks],
+        state_bytes: 0,
+        state_secs: 0.0,
+        record_history,
+        heap: BinaryHeap::new(),
+        now: 0.0,
+        work_end: 0.0,
+        seq: 0,
+        seq_stride: 1,
+        sched_ops: None,
+        trace: None,
+        bytes: 0,
+        trips: 0,
+        cross_bytes: 0,
+        group_aggs: 0,
+        wasted: 0.0,
+        dropped: 0,
+        completed: 0,
+        departures: 0,
+        joins: 0,
+    };
+    let mut all_ops: Vec<(f64, u64, HistOp)> = Vec::new();
+    let mut merged_trace: Vec<TraceRow> = Vec::new();
+    for out in outs {
+        let ShardOut {
+            shard: _,
+            slots,
+            task_globals,
+            tasks,
+            execs,
+            work_end,
+            bytes,
+            trips,
+            state_bytes,
+            state_secs,
+            wasted,
+            dropped,
+            completed,
+            departures,
+            joins,
+            ops,
+            trace,
+        } = out;
+        for (local, e) in execs.into_iter().enumerate() {
+            parent.execs[slots[local]] = e;
+        }
+        for (local, t) in tasks.into_iter().enumerate() {
+            parent.tasks[task_globals[local]] = t;
+        }
+        parent.work_end = parent.work_end.max(work_end);
+        parent.bytes += bytes;
+        parent.trips += trips;
+        parent.state_bytes += state_bytes;
+        parent.state_secs += state_secs;
+        parent.wasted += wasted;
+        parent.dropped += dropped;
+        parent.completed += completed;
+        parent.departures += departures;
+        parent.joins += joins;
+        for (time, seq, op) in ops {
+            let op = match op {
+                HistOp::Record(mut r) => {
+                    r.device = slots[r.device];
+                    HistOp::Record(r)
+                }
+                HistOp::Prune(d) => HistOp::Prune(slots[d]),
+            };
+            all_ops.push((time, seq, op));
+        }
+        merged_trace.extend(trace);
+    }
+    // Tasks no shard owned (never queued anywhere): the single heap
+    // would sweep them to Dropped and book their state legs.
+    for t in 0..n_tasks {
+        if task_shard[t] == usize::MAX {
+            if parent.tasks[t].state == TaskState::Pending {
+                parent.tasks[t].state = TaskState::Dropped;
+                parent.dropped += 1;
+            }
+            if !parent.state.legs.is_empty() {
+                parent.state_bytes += parent.state.legs.get(t).map(|l| l.bytes).unwrap_or(0);
+            }
+        }
+    }
+    // Scheduler history: shard-buffered ops applied in global
+    // (time, seq) order — seq values are shard-namespaced, so the sort
+    // is a total order and per-device subsequences keep their shard's
+    // relative order.
+    if record_history {
+        all_ops.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        if let Some(s) = scheduler {
+            for (_, _, op) in all_ops {
+                match op {
+                    HistOp::Record(r) => s.record(r),
+                    HistOp::Prune(d) => s.prune_device(d),
+                }
+            }
+        }
+    }
+    if let Some(dst) = trace {
+        merged_trace.sort_by(|a, b| {
+            f64::from_bits(a.0).total_cmp(&f64::from_bits(b.0)).then(a.1.cmp(&b.1))
+        });
+        *dst = merged_trace;
+    }
+    // The conservative barrier: every shard has drained, so the tiered
+    // tail (the earliest possible cross-WAN interaction) starts at the
+    // global work end.
+    parent.now = parent.work_end;
+    parent.finish(TailComm::Tiered(tt), &initial_mask)
 }
 
 // ===================================================================
@@ -2442,5 +3046,272 @@ mod tests {
         );
         let state_secs: f64 = out.flushes.iter().map(|f| f.state_secs).sum();
         assert!((state_secs - 2.0 * (legs_per as f64 * 0.05 + 0.1)).abs() < 1e-9);
+    }
+
+    // ------------------------------------------------ orphan placement
+
+    /// Build a Core directly over `plan` (the single-heap shape) so the
+    /// placement paths can be driven with hand-picked liveness.
+    fn core_for<'a>(
+        plan: RoundPlan,
+        cluster: &'a ClusterProfile,
+        cost: &'a WorkloadCost,
+        dynamics: &'a DynamicsSpec,
+    ) -> Core<'a> {
+        let execs = exec_states(&plan);
+        let n_tasks = plan.tasks.len();
+        Core {
+            round: 0,
+            cluster,
+            cost,
+            dynamics,
+            rng: Rng::new(7),
+            tasks: plan.tasks,
+            execs,
+            shared: plan.pull.into_iter().collect(),
+            refill: plan.refill,
+            reassign: plan.reassign,
+            comm_down: plan.per_task_comm.0,
+            comm_up: plan.per_task_comm.1,
+            bytes_down: plan.per_task_bytes.0,
+            bytes_up: plan.per_task_bytes.1,
+            state: plan.state,
+            state_booked: vec![false; n_tasks],
+            state_bytes: 0,
+            state_secs: 0.0,
+            record_history: plan.record_history,
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            work_end: 0.0,
+            seq: 0,
+            seq_stride: 1,
+            sched_ops: None,
+            trace: None,
+            bytes: 0,
+            trips: 0,
+            cross_bytes: 0,
+            group_aggs: 0,
+            wasted: 0.0,
+            dropped: 0,
+            completed: 0,
+            departures: 0,
+            joins: 0,
+        }
+    }
+
+    /// Regression: `place_least_loaded` used to index `execs[usize::MAX]`
+    /// when every executor was dead (no candidate beat `f64::INFINITY`).
+    /// The orphans must be dropped and counted, not a panic.
+    #[test]
+    fn place_least_loaded_with_all_executors_dead_drops_orphans() {
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(2);
+        let dynamics = static_dynamics();
+        let mut plan = plan_assigned(2, &[100, 100], TailComm::None);
+        plan.reassign = ReassignPolicy::LeastLoaded;
+        let mut core = core_for(plan, &cluster, &cost, &dynamics);
+        for e in &mut core.execs {
+            e.alive = false;
+            e.queue.clear();
+        }
+        core.place_least_loaded(vec![0, 1]);
+        assert_eq!(core.dropped, 2);
+        assert!(core.tasks.iter().all(|t| t.state == TaskState::Dropped));
+        assert!(core.execs.iter().all(|e| e.queue.is_empty()));
+    }
+
+    /// The same guard on the `Greedy` fallback route: without a
+    /// scheduler the greedy policy degrades to least-loaded placement,
+    /// and with every slot dead `place_orphans` must drop (not panic).
+    #[test]
+    fn greedy_fallback_with_all_executors_dead_drops_orphans() {
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(3);
+        let dynamics = static_dynamics();
+        let mut plan = plan_assigned(3, &[100, 100, 100], TailComm::None);
+        plan.reassign = ReassignPolicy::Greedy;
+        let mut core = core_for(plan, &cluster, &cost, &dynamics);
+        for e in &mut core.execs {
+            e.alive = false;
+            e.queue.clear();
+        }
+        let mut no_sched: Option<&mut Scheduler> = None;
+        core.place_orphans(vec![0, 1, 2], &mut no_sched);
+        assert_eq!(core.dropped, 3);
+        assert!(core.tasks.iter().all(|t| t.state == TaskState::Dropped));
+        // ...and with one survivor the fallback still places there.
+        let mut plan2 = plan_assigned(3, &[100, 100, 100], TailComm::None);
+        plan2.reassign = ReassignPolicy::Greedy;
+        let mut core2 = core_for(plan2, &cluster, &cost, &dynamics);
+        for e in &mut core2.execs {
+            e.alive = false;
+            e.queue.clear();
+        }
+        core2.execs[1].alive = true;
+        core2.place_orphans(vec![0, 2], &mut no_sched);
+        assert_eq!(core2.dropped, 0);
+        assert_eq!(core2.execs[1].queue.len(), 2);
+    }
+
+    /// End-to-end: scripted total churn mid-round under LeastLoaded —
+    /// every device receives a Leave.  The last-executor guard keeps one
+    /// alive, the round completes, and nothing panics.
+    #[test]
+    fn total_churn_mid_round_completes_without_panic() {
+        let cost = WorkloadCost::femnist();
+        for reassign in [ReassignPolicy::LeastLoaded, ReassignPolicy::Greedy] {
+            let mut plan = plan_assigned(3, &[300; 9], TailComm::None);
+            plan.reassign = reassign;
+            let dynamics = DynamicsSpec {
+                churn: ChurnSpec {
+                    events: (0..3)
+                        .map(|d| ChurnEvent {
+                            round: 0,
+                            device: d,
+                            secs: 0.2,
+                            kind: ChurnKind::Leave,
+                        })
+                        .collect(),
+                    leave_prob: 0.0,
+                    join_prob: 0.0,
+                },
+                ..Default::default()
+            };
+            let out = run_round(plan, &homo(3), &cost, 0, &dynamics, 1, None);
+            assert_eq!(out.departures, 2, "the last executor never leaves");
+            assert_eq!(
+                out.completed_tasks + out.dropped_tasks,
+                9,
+                "every task resolves: {:?}",
+                out
+            );
+            assert_eq!(out.completed_tasks, 9, "orphans land on the survivor");
+        }
+    }
+
+    // ------------------------------------------------ sharded engine
+
+    /// Tentpole pin (satellite 4): on random grouped topologies with
+    /// churn and straggler/drop injection, the sharded engine's merged
+    /// pop sequence `(time, seq, discriminant)` and every outcome column
+    /// must match the `--threads 1` run event-for-event at 2 and 8
+    /// workers.  Failures print the generator seed via the prop harness
+    /// (`PARROT_PROP_SEED` contract).
+    #[test]
+    fn prop_sharded_pop_sequence_is_thread_invariant() {
+        crate::util::prop::check("sharded pop sequence thread-invariant", 12, |g| {
+            let k = g.int(2, 10);
+            let n_groups = g.int(2, k.min(5));
+            let n_tasks = g.int(1, 24);
+            let sizes: Vec<usize> = (0..n_tasks).map(|_| g.int(20, 400)).collect();
+            let straggler_prob = g.f64(0.0, 0.5);
+            let drop_prob = g.f64(0.0, 0.25);
+            let slowdown = g.f64(1.5, 6.0);
+            let leave_prob = g.f64(0.0, 0.15);
+            let join_prob = g.f64(0.0, 0.15);
+            let events: Vec<ChurnEvent> = (0..g.int(0, 3))
+                .map(|_| ChurnEvent {
+                    round: 0,
+                    device: g.int(0, k - 1),
+                    secs: g.f64(0.0, 2.0),
+                    kind: if g.bool() { ChurnKind::Leave } else { ChurnKind::Join },
+                })
+                .collect();
+            let reassign = *g.pick(&[
+                ReassignPolicy::LeastLoaded,
+                ReassignPolicy::Requeue,
+                ReassignPolicy::Greedy,
+            ]);
+            let dyn_seed = g.rng.next_u64();
+            let cluster = ClusterProfile::heterogeneous(k);
+            let cost = WorkloadCost::femnist();
+            let dynamics = DynamicsSpec {
+                churn: ChurnSpec { events: events.clone(), leave_prob, join_prob },
+                straggler: StragglerSpec {
+                    prob: straggler_prob,
+                    law: SlowdownLaw::Fixed(slowdown),
+                    drop_prob,
+                },
+                ..Default::default()
+            };
+            // RoundPlan is not Clone: regenerate it per run from the
+            // drawn parameters.
+            let mk_plan = || {
+                let mut plan = plan_assigned(
+                    k,
+                    &sizes,
+                    TailComm::Tiered(tiered(k, n_groups, &cluster)),
+                );
+                plan.reassign = reassign;
+                plan
+            };
+            let run_at = |threads: usize| {
+                let mut tr: Vec<TraceRow> = Vec::new();
+                let out = run_round_opts(
+                    mk_plan(),
+                    &cluster,
+                    &cost,
+                    0,
+                    &dynamics,
+                    dyn_seed,
+                    None,
+                    threads,
+                    Some(&mut tr),
+                );
+                (out, tr)
+            };
+            let (base, base_tr) = run_at(1);
+            if base_tr.is_empty() {
+                return Err("sharded run recorded no pop events".into());
+            }
+            for threads in [2usize, 8] {
+                let (out, tr) = run_at(threads);
+                if tr != base_tr {
+                    let i = tr
+                        .iter()
+                        .zip(&base_tr)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(base_tr.len().min(tr.len()));
+                    return Err(format!(
+                        "pop sequence diverged at --threads {threads}, event {i}: \
+                         {:?} vs {:?} (lens {} vs {})",
+                        tr.get(i),
+                        base_tr.get(i),
+                        tr.len(),
+                        base_tr.len()
+                    ));
+                }
+                let summary = |o: &RoundOutcome| {
+                    (
+                        o.end.to_bits(),
+                        o.work_end.to_bits(),
+                        o.bytes,
+                        o.trips,
+                        o.completed_tasks,
+                        o.dropped_tasks,
+                        o.departures,
+                        o.joins,
+                        o.cross_group_bytes,
+                        o.group_aggs,
+                    )
+                };
+                if summary(&out) != summary(&base) {
+                    return Err(format!(
+                        "outcome diverged at --threads {threads}: {:?} vs {:?}",
+                        summary(&out),
+                        summary(&base)
+                    ));
+                }
+                let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if bits(&out.busy) != bits(&base.busy) {
+                    return Err(format!(
+                        "per-executor busy columns diverged at --threads {threads}: \
+                         {:?} vs {:?}",
+                        out.busy, base.busy
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

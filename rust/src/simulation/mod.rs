@@ -264,6 +264,13 @@ pub struct VirtualSim {
     /// Buffered-async parameters (`Scheme::Async` only).  `buffer == 0`
     /// resolves to M_p at run time — the sync-degenerate default.
     pub async_spec: AsyncSpec,
+    /// Worker-pool bound for the group-sharded engine path (grouped
+    /// Parrot plans); the timeline is byte-identical for every value —
+    /// see "Group-sharded execution" in [`engine`].
+    pub threads: usize,
+    /// Accumulated wallclock seconds inside [`engine::run_round_opts`]
+    /// across all rounds — the `parscale` sweep's speedup numerator.
+    pub engine_secs: f64,
     /// Persistent per-device-slot alive mask (FA/Parrot executors map
     /// 1:1 to devices; RW/SD executors are fresh per round).
     device_alive: Vec<bool>,
@@ -301,6 +308,8 @@ impl VirtualSim {
                 max_staleness: 0,
                 weight: crate::aggregation::StalenessWeight::Const,
             },
+            threads: 1,
+            engine_secs: 0.0,
             device_alive: vec![true; k],
             dyn_seed: seed ^ 0xD15C_0E7E,
             rng: Rng::new(seed ^ 0x51D_CAFE),
@@ -310,6 +319,13 @@ impl VirtualSim {
     /// Builder-style dynamics injection.
     pub fn with_dynamics(mut self, dynamics: DynamicsSpec) -> VirtualSim {
         self.dynamics = dynamics;
+        self
+    }
+
+    /// Builder-style engine worker bound (`--threads`).  Purely a
+    /// wall-clock knob: every value produces the same timeline.
+    pub fn with_threads(mut self, threads: usize) -> VirtualSim {
+        self.threads = threads.max(1);
         self
     }
 
@@ -379,7 +395,8 @@ impl VirtualSim {
             ),
         };
         let prev_alive = self.device_alive.clone();
-        let outcome = engine::run_round(
+        let sw = crate::util::timer::Stopwatch::start();
+        let outcome = engine::run_round_opts(
             plan,
             &self.cluster,
             &self.cost,
@@ -387,7 +404,10 @@ impl VirtualSim {
             &self.dynamics,
             self.dyn_seed,
             Some(&mut self.scheduler),
+            self.threads,
+            None,
         );
+        self.engine_secs += sw.elapsed_secs();
         // Device slots persist across rounds for the schemes whose
         // executors map 1:1 to physical devices.
         let mut transfer = 0u64;
@@ -1211,6 +1231,81 @@ mod tests {
                     assert!((a - b).abs() < 1e-9, "busy mismatch: {a} vs {b}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn prop_grouped_vrounds_are_thread_invariant() {
+        // The headline sharded-engine invariant at the VirtualSim
+        // level: a grouped Parrot run under full dynamics (availability
+        // + scripted and random churn + stragglers/drops) must produce
+        // byte-identical VRound rows for every worker-pool size.
+        // (`sched_secs` is real wallclock and is deliberately excluded;
+        // every other column is virtual and must match to the bit.)
+        use crate::cluster::Topology;
+        let dynamics = DynamicsSpec {
+            availability: AvailabilityModel::Bernoulli(0.85),
+            churn: ChurnSpec {
+                events: vec![
+                    ChurnEvent { round: 1, device: 2, secs: 1.0, kind: ChurnKind::Leave },
+                    ChurnEvent { round: 3, device: 2, secs: 0.0, kind: ChurnKind::Join },
+                ],
+                leave_prob: 0.05,
+                join_prob: 0.05,
+            },
+            straggler: StragglerSpec {
+                prob: 0.2,
+                law: SlowdownLaw::Fixed(4.0),
+                drop_prob: 0.05,
+            },
+        };
+        let row = |r: &VRound| {
+            format!(
+                "{} {:x} {:x} {:x} {} {} {} {} {} {} {} {:x} {} {:x} {} {} {:x?}",
+                r.round,
+                r.total_secs.to_bits(),
+                r.compute_secs.to_bits(),
+                r.comm_secs.to_bits(),
+                r.bytes,
+                r.trips,
+                r.scheduled_clients,
+                r.unavailable_clients,
+                r.dropped_clients,
+                r.departures,
+                r.joins,
+                r.wasted_secs.to_bits(),
+                r.state_bytes,
+                r.state_secs.to_bits(),
+                r.cross_group_bytes,
+                r.group_aggs,
+                r.device_busy.iter().map(|b| b.to_bits()).collect::<Vec<_>>()
+            )
+        };
+        let rows_at = |threads: usize| -> Vec<String> {
+            let partition = Partition::generate(PartitionKind::Natural, 300, 62, 100, 7);
+            let mut sim = VirtualSim::new(
+                Scheme::Parrot,
+                ClusterProfile::heterogeneous(8).with_topology(Topology::groups(4)),
+                WorkloadCost::femnist(),
+                CommModel::femnist(),
+                SchedulerKind::TimeWindow(5),
+                2,
+                partition,
+                1,
+                31,
+            )
+            .with_dynamics(dynamics.clone())
+            .with_threads(threads);
+            run_virtual(&mut sim, 5, 60, 31 ^ 0xDD).iter().map(row).collect()
+        };
+        let reference = rows_at(1);
+        assert!(!reference.is_empty());
+        for threads in [2usize, 8] {
+            assert_eq!(
+                reference,
+                rows_at(threads),
+                "grouped VRound rows diverged between --threads 1 and --threads {threads}"
+            );
         }
     }
 

@@ -319,9 +319,15 @@ pub fn f32s_from_le_bytes(raw: &[u8]) -> Result<Vec<f32>> {
     if raw.len() % 4 != 0 {
         bail!("raw length {} not a multiple of 4", raw.len());
     }
+    // `chunks_exact(4)` guarantees 4-byte windows, so the slice
+    // pattern is irrefutable — no fallible conversion on the decode
+    // path (`parrot lint` panicking-decode).
     Ok(raw
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| match *c {
+            [a, b, c2, d] => f32::from_le_bytes([a, b, c2, d]),
+            _ => f32::from_le_bytes([0; 4]),
+        })
         .collect())
 }
 
@@ -331,7 +337,10 @@ pub fn i32s_from_le_bytes(raw: &[u8]) -> Result<Vec<i32>> {
     }
     Ok(raw
         .chunks_exact(4)
-        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| match *c {
+            [a, b, c2, d] => i32::from_le_bytes([a, b, c2, d]),
+            _ => i32::from_le_bytes([0; 4]),
+        })
         .collect())
 }
 

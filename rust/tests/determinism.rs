@@ -1,10 +1,19 @@
-//! Double-run determinism differential (README "Determinism
-//! discipline"): the engine halves of the `--smoke` experiment drivers
-//! must produce byte-identical summary rows when run twice in the same
-//! process under the same seed.  This is the dynamic complement to the
-//! static `parrot lint` pass — a stray HashMap iteration, ambient
-//! clock, or order-sensitive float fold anywhere under these drivers
-//! shows up here as a row diff.
+//! Determinism differentials (README "Determinism discipline"): the
+//! engine halves of the `--smoke` experiment drivers must produce
+//! byte-identical summary rows
+//!
+//!   * when run twice in the same process under the same seed
+//!     (double-run differential), and
+//!   * for ANY `--threads N` — the headline invariant of the
+//!     group-sharded engine: `--threads 1`, `2` and `8` must yield the
+//!     same rows byte-for-byte (thread differential).  Threads only
+//!     size the worker pool; the shard decomposition, per-shard RNG
+//!     streams and merge order are fixed by the topology and seed.
+//!
+//! This is the dynamic complement to the static `parrot lint` pass — a
+//! stray HashMap iteration, ambient clock, order-sensitive float fold,
+//! or any cross-shard leak anywhere under these drivers shows up here
+//! as a row diff.
 //!
 //! Seeded like the prop/fuzz suites: `PARROT_PROP_SEED=<u64>` (decimal
 //! or 0x-hex), defaulting to the fixed CI seed.  Failures print the
@@ -40,12 +49,28 @@ fn assert_identical(name: &str, s: u64, a: &[String], b: &[String]) {
     assert!(!a.is_empty(), "{name} produced no rows (PARROT_PROP_SEED={s:#x})");
 }
 
+/// The thread-differential assertion: `rows_at[0]` is the
+/// single-threaded reference, the rest came from larger worker pools.
+fn assert_thread_invariant(name: &str, s: u64, rows_at: &[(usize, Vec<String>)]) {
+    let (_, reference) = &rows_at[0];
+    assert!(!reference.is_empty(), "{name} produced no rows (PARROT_PROP_SEED={s:#x})");
+    for (threads, rows) in &rows_at[1..] {
+        assert_eq!(
+            reference, rows,
+            "{name} rows diverged between --threads {} and --threads {threads} — \
+             the sharded engine leaked thread-count dependence \
+             (replay with PARROT_PROP_SEED={s:#x})",
+            rows_at[0].0
+        );
+    }
+}
+
 #[test]
 fn dynamics_rows_are_run_invariant() {
     let s = seed();
     println!("dynamics double-run under PARROT_PROP_SEED={s:#x}");
-    let a = dynamics::smoke_rows(s);
-    let b = dynamics::smoke_rows(s);
+    let a = dynamics::smoke_rows(s, 1);
+    let b = dynamics::smoke_rows(s, 1);
     assert_identical("dynamics", s, &a, &b);
 }
 
@@ -53,8 +78,8 @@ fn dynamics_rows_are_run_invariant() {
 fn asyncscale_rows_are_run_invariant() -> Result<()> {
     let s = seed();
     println!("asyncscale double-run under PARROT_PROP_SEED={s:#x}");
-    let a = asyncscale::smoke_rows(s, 60, 5)?;
-    let b = asyncscale::smoke_rows(s, 60, 5)?;
+    let a = asyncscale::smoke_rows(s, 60, 5, 1)?;
+    let b = asyncscale::smoke_rows(s, 60, 5, 1)?;
     assert_identical("asyncscale", s, &a, &b);
     Ok(())
 }
@@ -63,8 +88,41 @@ fn asyncscale_rows_are_run_invariant() -> Result<()> {
 fn toposcale_rows_are_run_invariant() -> Result<()> {
     let s = seed();
     println!("toposcale double-run under PARROT_PROP_SEED={s:#x}");
-    let a = toposcale::smoke_rows(s)?;
-    let b = toposcale::smoke_rows(s)?;
+    let a = toposcale::smoke_rows(s, 1)?;
+    let b = toposcale::smoke_rows(s, 1)?;
     assert_identical("toposcale", s, &a, &b);
+    Ok(())
+}
+
+#[test]
+fn dynamics_rows_are_thread_invariant() {
+    let s = seed();
+    println!("dynamics 1-vs-2-vs-8-thread differential under PARROT_PROP_SEED={s:#x}");
+    let rows_at: Vec<(usize, Vec<String>)> =
+        [1, 2, 8].map(|t| (t, dynamics::smoke_rows(s, t))).into_iter().collect();
+    assert_thread_invariant("dynamics", s, &rows_at);
+}
+
+#[test]
+fn asyncscale_rows_are_thread_invariant() -> Result<()> {
+    let s = seed();
+    println!("asyncscale 1-vs-2-vs-8-thread differential under PARROT_PROP_SEED={s:#x}");
+    let mut rows_at = Vec::new();
+    for t in [1, 2, 8] {
+        rows_at.push((t, asyncscale::smoke_rows(s, 60, 5, t)?));
+    }
+    assert_thread_invariant("asyncscale", s, &rows_at);
+    Ok(())
+}
+
+#[test]
+fn toposcale_rows_are_thread_invariant() -> Result<()> {
+    let s = seed();
+    println!("toposcale 1-vs-2-vs-8-thread differential under PARROT_PROP_SEED={s:#x}");
+    let mut rows_at = Vec::new();
+    for t in [1, 2, 8] {
+        rows_at.push((t, toposcale::smoke_rows(s, t)?));
+    }
+    assert_thread_invariant("toposcale", s, &rows_at);
     Ok(())
 }

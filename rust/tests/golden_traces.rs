@@ -94,7 +94,7 @@ fn check_golden(name: &str, rows: &[String]) {
 #[test]
 fn golden_dynamics_smoke_table() {
     // Fixed seed 51 — the `exp dynamics --smoke` default.
-    let rows = parrot::exp::dynamics::smoke_rows(51);
+    let rows = parrot::exp::dynamics::smoke_rows(51, 1);
     assert_eq!(rows.len(), 15, "3 schemes x 5 scenarios");
     check_golden("dynamics_smoke.csv", &rows);
 }
@@ -103,7 +103,7 @@ fn golden_dynamics_smoke_table() {
 fn golden_asyncscale_smoke_table() {
     // Fixed seed 19 — the `exp asyncscale --smoke` default.  smoke_rows
     // also re-runs the ledger differential and the degenerate sync pin.
-    let rows = parrot::exp::asyncscale::smoke_rows(19, 60, 5)
+    let rows = parrot::exp::asyncscale::smoke_rows(19, 60, 5, 1)
         .expect("asyncscale smoke differential must hold");
     assert_eq!(rows.len(), 3, "sync / degenerate / buffered rows");
     check_golden("asyncscale_smoke.csv", &rows);

@@ -14,8 +14,12 @@ FAST=0
 [ "${1:-}" = "--fast" ] && FAST=1
 
 # Master seed for every randomized pass below (property/fuzz re-runs
-# and the statescale smoke); printed so any failure is replayable.
-SEED="${PARROT_PROP_SEED:-$((RANDOM * 32768 + RANDOM))}"
+# and the experiment smokes); printed so any failure is replayable.
+# Full-width u64: four 15-bit $RANDOM draws spread across the word.
+# The seed is passed through UNMODIFIED everywhere below — truncating
+# it (the old `% 100000`) made the printed repro seed differ from the
+# seed actually run, and collapsed the explored space to 10^5 values.
+SEED="${PARROT_PROP_SEED:-$(( (RANDOM << 45) ^ (RANDOM << 30) ^ (RANDOM << 15) ^ RANDOM ))}"
 
 echo "==> cargo fmt --check"
 cargo fmt --check
@@ -83,8 +87,8 @@ if [ "$FAST" -eq 0 ]; then
   echo "==> parrot exp statescale --smoke (seed $SEED)"
   SMOKE_RESULTS="$(mktemp -d)"
   if ! target/release/parrot exp statescale --smoke --shards 2 \
-      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
-    echo "ci.sh: statescale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: statescale smoke failure — reproduce with --seed $SEED" >&2
     exit 1
   fi
   rm -rf "$SMOKE_RESULTS"
@@ -98,8 +102,8 @@ if [ "$FAST" -eq 0 ]; then
   echo "==> parrot exp asyncscale --smoke (seed $SEED)"
   SMOKE_RESULTS="$(mktemp -d)"
   if ! target/release/parrot exp asyncscale --smoke \
-      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
-    echo "ci.sh: asyncscale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: asyncscale smoke failure — reproduce with --seed $SEED" >&2
     exit 1
   fi
   rm -rf "$SMOKE_RESULTS"
@@ -114,8 +118,28 @@ if [ "$FAST" -eq 0 ]; then
   echo "==> parrot exp toposcale --smoke (seed $SEED)"
   SMOKE_RESULTS="$(mktemp -d)"
   if ! target/release/parrot exp toposcale --smoke \
-      --seed "$((SEED % 100000))" --results "$SMOKE_RESULTS"; then
-    echo "ci.sh: toposcale smoke failure — reproduce with --seed $((SEED % 100000))" >&2
+      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: toposcale smoke failure — reproduce with --seed $SEED" >&2
+    exit 1
+  fi
+  rm -rf "$SMOKE_RESULTS"
+fi
+
+# Parallel-engine thread differential: the 1-vs-2-vs-8 row comparison
+# in the determinism suite, then the parscale smoke (flat + groups:16
+# at --threads {1,2}) which re-asserts byte-identical rows in-process
+# and reports the engine wall-clock per thread count.
+echo "==> cargo test -q --test determinism (thread differential, seed $SEED)"
+if ! PARROT_PROP_SEED="$SEED" cargo test -q --test determinism; then
+  echo "ci.sh: determinism failure — reproduce with PARROT_PROP_SEED=$SEED" >&2
+  exit 1
+fi
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot exp parscale --smoke (seed $SEED)"
+  SMOKE_RESULTS="$(mktemp -d)"
+  if ! target/release/parrot exp parscale --smoke \
+      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: parscale smoke failure — reproduce with --seed $SEED" >&2
     exit 1
   fi
   rm -rf "$SMOKE_RESULTS"
