@@ -24,7 +24,7 @@ use super::lexer::{analyze_source, SourceMap};
 /// Modules whose event/merge order is observable in traces; Hash*
 /// containers are banned here outright.
 pub const STRICT_MODULES: &[&str] =
-    &["simulation", "scheduler", "aggregation", "statestore", "compress", "cluster"];
+    &["simulation", "scheduler", "aggregation", "statestore", "compress", "cluster", "obs"];
 
 /// The only files allowed to touch wallclock/OS entropy: the
 /// stopwatch used for *reporting* elapsed real time, and the bench
@@ -282,6 +282,23 @@ mod tests {
         // line 1 (use) and line 3 (signature); the test-module mentions
         // on lines 13 and 17 are exempt.
         assert_eq!(hits, vec![1, 3]);
+    }
+
+    #[test]
+    fn unordered_iter_covers_obs() {
+        // The trace/metrics layer feeds byte-compared artifacts: obs is
+        // a strict root like the engine itself.
+        let f = check_file("obs/fake.rs", FIXTURE_STRICT);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "unordered-iter").map(|x| x.line).collect();
+        assert_eq!(hits, vec![1, 3]);
+    }
+
+    #[test]
+    fn ambient_entropy_covers_obs() {
+        let src = "fn stamp() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+        let f = check_file("obs/chrome.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == "ambient-entropy").count(), 1);
     }
 
     #[test]

@@ -200,6 +200,11 @@ pub struct RunConfig {
     /// (`--threads`; ≥ 1).  Purely a wall-clock knob — the timeline is
     /// byte-identical for every value.
     pub threads: usize,
+    /// Chrome trace-event export path (`--trace PATH`); None = tracing
+    /// off (the no-op sink).  Sim exports carry virtual time and are
+    /// byte-identical per seed for every `--threads`; deploy exports
+    /// carry wallclock time through the same span taxonomy.
+    pub trace: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -236,6 +241,7 @@ impl Default for RunConfig {
             max_staleness: 0,
             staleness_weight: StalenessWeight::Const,
             threads: 1,
+            trace: None,
         }
     }
 }
@@ -358,6 +364,9 @@ impl RunConfig {
             self.staleness_weight = StalenessWeight::parse(w)?;
         }
         self.threads = a.usize_or("threads", self.threads)?;
+        if let Some(path) = a.get("trace") {
+            self.trace = Some(path.to_string());
+        }
         self.validate()?;
         Ok(self)
     }

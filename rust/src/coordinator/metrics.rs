@@ -1,6 +1,7 @@
 //! Measured per-round / per-run accounting, plus the analytic memory
 //! model behind Tables 1 and 3.
 
+use crate::obs::Registry;
 use crate::util::json::Json;
 
 /// One round's measured numbers.
@@ -36,6 +37,10 @@ pub struct RoundMetrics {
     pub flush_updates: usize,
     /// Async scheme: updates discarded for exceeding `--max-staleness`.
     pub stale_dropped: usize,
+    /// Async scheme: `staleness_hist[s]` = applied updates that were
+    /// `s` flushes old (mirrors the sim's `VRound::staleness_hist`;
+    /// empty for the synchronous schemes).
+    pub staleness_hist: Vec<usize>,
     /// Grouped topology: group aggregates merged at the server this
     /// round (0 on a flat topology).
     pub group_aggs: usize,
@@ -91,6 +96,19 @@ impl RunMetrics {
         self.rounds.iter().map(|r| r.state_bytes).sum()
     }
 
+    /// Measured cross-WAN bytes across the run (0 on a flat topology).
+    pub fn total_cross_group_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.cross_group_bytes).sum()
+    }
+
+    /// Mean device utilization across rounds (unweighted).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.utilization).sum::<f64>() / self.rounds.len() as f64
+    }
+
     pub fn final_eval(&self) -> (Option<f64>, Option<f64>) {
         for r in self.rounds.iter().rev() {
             if r.eval_acc.is_some() {
@@ -100,7 +118,35 @@ impl RunMetrics {
         (None, None)
     }
 
-    pub fn to_json(&self) -> Json {
+    /// Run counters/histograms under the `deploy.` namespace — the
+    /// wallclock mirror of `simulation::registry_from_rounds` (same
+    /// metric shapes, different clock).
+    pub fn registry(&self) -> Registry {
+        let mut reg = Registry::new();
+        for r in &self.rounds {
+            reg.inc("deploy.rounds");
+            reg.add("deploy.bytes", r.bytes_down + r.bytes_up);
+            reg.add("deploy.trips", r.trips);
+            reg.add("deploy.state_bytes", r.state_bytes);
+            reg.add("deploy.state_msgs", r.state_msgs);
+            reg.add("deploy.cross_group_bytes", r.cross_group_bytes);
+            reg.add("deploy.group_aggs", r.group_aggs as u64);
+            reg.add("deploy.flush_applied", r.flush_updates as u64);
+            reg.add("deploy.stale_dropped", r.stale_dropped as u64);
+            reg.observe_secs("deploy.round_secs", r.wall_secs);
+            for (s, &n) in r.staleness_hist.iter().enumerate() {
+                for _ in 0..n {
+                    reg.observe("deploy.staleness", s as u64);
+                }
+            }
+        }
+        reg
+    }
+
+    /// Render the run — per-round rows plus the run-level aggregates
+    /// the sim side already reports (`warmup` feeds the steady-state
+    /// mean, mirroring the paper's warm-up exclusion).
+    pub fn to_json(&self, warmup: usize) -> Json {
         Json::Obj(vec![
             (
                 "rounds".into(),
@@ -124,6 +170,15 @@ impl RunMetrics {
                                 .set("utilization", r.utilization)
                                 .set("flush_updates", r.flush_updates)
                                 .set("stale_dropped", r.stale_dropped)
+                                .set(
+                                    "staleness_hist",
+                                    Json::Arr(
+                                        r.staleness_hist
+                                            .iter()
+                                            .map(|&n| Json::Int(n as i64))
+                                            .collect(),
+                                    ),
+                                )
                                 .set("group_aggs", r.group_aggs)
                                 .set("cross_group_bytes", r.cross_group_bytes as i64)
                         })
@@ -131,8 +186,18 @@ impl RunMetrics {
                 ),
             ),
             ("mean_round_secs".into(), Json::Num(self.mean_round_secs())),
+            (
+                "mean_round_secs_after_warmup".into(),
+                Json::Num(self.mean_round_secs_after(warmup)),
+            ),
+            ("mean_utilization".into(), Json::Num(self.mean_utilization())),
             ("total_bytes".into(), Json::Int(self.total_bytes() as i64)),
             ("total_trips".into(), Json::Int(self.total_trips() as i64)),
+            ("total_state_bytes".into(), Json::Int(self.total_state_bytes() as i64)),
+            (
+                "total_cross_group_bytes".into(),
+                Json::Int(self.total_cross_group_bytes() as i64),
+            ),
         ])
     }
 }
@@ -304,7 +369,11 @@ mod tests {
                 bytes_up: 10,
                 bytes_down: 5,
                 trips: 3,
+                state_bytes: 7,
+                cross_group_bytes: 2,
+                utilization: 0.5,
                 eval_acc: if i == 3 { Some(0.9) } else { None },
+                staleness_hist: vec![i, 1],
                 ..Default::default()
             });
         }
@@ -312,8 +381,20 @@ mod tests {
         assert!((rm.mean_round_secs_after(2) - 3.5).abs() < 1e-12);
         assert_eq!(rm.total_bytes(), 60);
         assert_eq!(rm.total_trips(), 12);
+        assert_eq!(rm.total_state_bytes(), 28);
+        assert_eq!(rm.total_cross_group_bytes(), 8);
+        assert!((rm.mean_utilization() - 0.5).abs() < 1e-12);
         assert_eq!(rm.final_eval().1, Some(0.9));
-        let js = rm.to_json().render();
+        let js = rm.to_json(2).render();
         assert!(js.contains("\"mean_round_secs\":2.5"));
+        assert!(js.contains("\"mean_round_secs_after_warmup\":3.5"));
+        assert!(js.contains("\"mean_utilization\":0.5"));
+        assert!(js.contains("\"total_state_bytes\":28"));
+        assert!(js.contains("\"total_cross_group_bytes\":8"));
+        assert!(js.contains("\"staleness_hist\":[3,1]"));
+        let reg = rm.registry();
+        assert_eq!(reg.get("deploy.rounds"), 4);
+        assert_eq!(reg.get("deploy.bytes"), 60);
+        assert_eq!(reg.hist("deploy.staleness").unwrap().count, 10);
     }
 }

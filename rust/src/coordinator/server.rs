@@ -21,8 +21,9 @@ use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
 use crate::coordinator::worker::{build_dataset, initial_params, Worker};
 use crate::data::FederatedDataset;
 use crate::model::ParamSet;
+use crate::obs::{chrome, EvKind, Tracer, Track};
 use crate::runtime::{Executable, Runtime};
-use crate::scheduler::{AffinityCtx, Scheduler};
+use crate::scheduler::{AffinityCtx, Scheduler, TaskRecord};
 use crate::statestore::ShardMap;
 use crate::transport::{local, Transport};
 use crate::util::timer::Stopwatch;
@@ -84,6 +85,13 @@ pub struct Server<T: Transport> {
     /// local state, or a stateless algorithm).
     state_shards: Option<ShardMap>,
     pub metrics: RunMetrics,
+    /// Wallclock tracer (`--trace PATH`): the same typed span API the
+    /// virtual engine records into, stamped in seconds since server
+    /// construction.  `None` = tracing off (a branch per emission).
+    tracer: Option<Tracer>,
+    run_sw: Stopwatch,
+    /// Running task index for trace labelling.
+    task_seq: usize,
 }
 
 impl<T: Transport> Server<T> {
@@ -112,6 +120,7 @@ impl<T: Transport> Server<T> {
                 remote_secs: 2.0 * (cfg.cluster.latency + s_d / cfg.cluster.bandwidth),
             }));
         }
+        let tracer = cfg.trace.is_some().then(Tracer::new);
         Ok(Server {
             transport,
             cfg,
@@ -123,7 +132,53 @@ impl<T: Transport> Server<T> {
             eval_exe,
             state_shards,
             metrics: RunMetrics::default(),
+            tracer,
+            run_sw: Stopwatch::start(),
+            task_seq: 0,
         })
+    }
+
+    /// Seconds since server construction — the wallclock trace clock.
+    fn tnow(&self) -> f64 {
+        self.run_sw.elapsed_secs()
+    }
+
+    /// `--trace PATH`: render the wallclock span trace plus the run's
+    /// counter registry (including the transport's wire meters) to
+    /// Chrome trace-event JSON — the same exporter the virtual engine
+    /// uses, so both sides load in Perfetto identically.
+    fn write_trace(&mut self) -> Result<()> {
+        let Some(path) = self.cfg.trace.clone() else { return Ok(()) };
+        let Some(tr) = self.tracer.take() else { return Ok(()) };
+        let mut reg = self.metrics.registry();
+        if let Some(m) = self.transport.meter() {
+            m.export(&mut reg, "deploy.transport");
+        }
+        std::fs::write(&path, chrome::render(&tr, Some(&reg)))
+            .with_context(|| format!("writing Chrome trace to {path}"))
+    }
+
+    /// Tile one returned task record onto its device's compute lane:
+    /// devices run their assigned client list in order, so stacking the
+    /// measured per-task seconds forward from the round start recovers
+    /// the lane (records only come back batched at round end).
+    fn trace_task(
+        &mut self,
+        r: TaskRecord,
+        queues: &mut [std::collections::VecDeque<usize>],
+        cursor: &mut [f64],
+    ) {
+        if self.tracer.is_none() {
+            return;
+        }
+        let client = queues[r.device].pop_front().unwrap_or(0);
+        let s = cursor[r.device];
+        cursor[r.device] = s + r.secs;
+        let task = self.task_seq;
+        self.task_seq += 1;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.span(s, s + r.secs, Track::Device(r.device), EvKind::Task { task, client });
+        }
     }
 
     /// Run R rounds and shut the workers down.
@@ -142,6 +197,7 @@ impl<T: Transport> Server<T> {
                 &client_sizes,
                 self.cfg.seed,
             );
+            let t0 = self.tnow();
             let rm = match self.cfg.scheme {
                 Scheme::Parrot | Scheme::SP => self.round_parrot(round, &selected)?,
                 Scheme::FaDist => self.round_fa(round, &selected)?,
@@ -150,11 +206,17 @@ impl<T: Transport> Server<T> {
                      not on real compute"
                 ),
             };
+            let t1 = self.tnow();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.instant(t0, Track::Run, EvKind::Sched { round, placed: selected.len() });
+                tr.span(t0, t1, Track::Run, EvKind::Round { round });
+            }
             self.metrics.push(rm);
         }
         for k in 1..=self.cfg.n_devices {
             self.transport.send(k, Msg::Shutdown.encode()?)?;
         }
+        self.write_trace()?;
         let (final_loss, final_acc) = self.metrics.final_eval();
         Ok(TrainSummary {
             metrics: self.metrics,
@@ -237,6 +299,13 @@ impl<T: Transport> Server<T> {
             state_bytes += m.len() as u64;
             state_msgs += 1;
             self.transport.send(dev + 1, m)?;
+        }
+        let prefetched: usize = need.iter().map(|v| v.len()).sum();
+        if prefetched > 0 {
+            let t = self.tnow();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.instant(t, Track::Server, EvKind::StateLoad { clients: prefetched });
+            }
         }
         Ok((state_bytes, state_msgs))
     }
@@ -419,11 +488,24 @@ impl<T: Transport> Server<T> {
                     met.trips += 1;
                     met.busy += record.secs;
                     self.scheduler.record(record);
-                    let (_, _, born) = st.outstanding[device]
+                    let (_, client, born) = st.outstanding[device]
                         .take()
                         .context("TaskDone from a device with no outstanding task")?;
                     done += 1;
                     buffered.push(update);
+                    let t1 = self.tnow();
+                    let task = self.task_seq;
+                    self.task_seq += 1;
+                    if let Some(tr) = self.tracer.as_mut() {
+                        // One outstanding task per device: the span is
+                        // the arrival minus the measured compute time.
+                        tr.span(
+                            (t1 - record.secs).max(0.0),
+                            t1,
+                            Track::Device(device),
+                            EvKind::Task { task, client },
+                        );
+                    }
                     if let Some(decisions) = ledger.on_update(born) {
                         st.pending -= decisions.len();
                         let result = self.apply_async_flush(&mut buffered, &decisions);
@@ -443,6 +525,12 @@ impl<T: Transport> Server<T> {
                 Msg::StatePut { round, states } => {
                     met.state_bytes += raw.len() as u64;
                     met.state_msgs += 1;
+                    let t = self.tnow();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.instant(t, Track::Server, EvKind::StateFlush {
+                            bytes: raw.len() as u64,
+                        });
+                    }
                     let mut returns = Vec::new();
                     for (c, b) in states {
                         // A fetch *reply* comes from c's owner and
@@ -490,6 +578,7 @@ impl<T: Transport> Server<T> {
         for dev in 1..=k {
             self.transport.send(dev, Msg::Shutdown.encode()?)?;
         }
+        self.write_trace()?;
         let (final_loss, final_acc) = self.metrics.final_eval();
         Ok(TrainSummary {
             metrics: self.metrics,
@@ -510,6 +599,7 @@ impl<T: Transport> Server<T> {
         sw: &mut Stopwatch,
     ) -> Result<()> {
         let flush_idx = ledger.flushes - 1;
+        let t0 = self.tnow();
         let bc = self.broadcast(flush_idx);
         for dev in 1..=self.cfg.n_devices {
             let m =
@@ -534,6 +624,22 @@ impl<T: Transport> Server<T> {
         )?;
         rm.flush_updates = decisions.iter().filter(|d| d.applied).count();
         rm.stale_dropped = decisions.iter().filter(|d| !d.applied).count();
+        // Per-flush staleness histogram over the APPLIED updates — the
+        // deploy mirror of `VRound::staleness_hist` (applied staleness
+        // is bounded by `max_staleness` by construction).
+        let mut hist = vec![0usize; self.cfg.max_staleness + 1];
+        for d in decisions.iter().filter(|d| d.applied) {
+            hist[d.staleness] += 1;
+        }
+        rm.staleness_hist = hist;
+        let t1 = self.tnow();
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.span(t0, t1, Track::Server, EvKind::Flush {
+                flush: flush_idx,
+                applied: rm.flush_updates,
+                stale: rm.stale_dropped,
+            });
+        }
         self.metrics.push(rm);
         Ok(())
     }
@@ -547,6 +653,7 @@ impl<T: Transport> Server<T> {
     /// merge — the deploy-side mirror of the engine's tiered tail.
     fn round_parrot(&mut self, round: usize, selected: &[usize]) -> Result<RoundMetrics> {
         let sw = Stopwatch::start();
+        let round_t0 = self.tnow();
         let topo = self.cfg.cluster.topology.clone();
         let grouped = !topo.is_flat();
         let sizes: Vec<(usize, usize)> = selected
@@ -561,6 +668,16 @@ impl<T: Transport> Server<T> {
             self.scheduler.schedule(round, &sizes)
         };
         let bc = self.broadcast(round);
+
+        // Trace reconstruction state: each device executes its assigned
+        // client list in order, so tiling the returned per-task seconds
+        // forward from the round start recovers each compute lane.
+        let mut trace_q: Vec<std::collections::VecDeque<usize>> = schedule
+            .assignment
+            .iter()
+            .map(|cs| cs.iter().copied().collect())
+            .collect();
+        let mut trace_cursor = vec![round_t0; self.cfg.n_devices];
 
         // Plan-driven prefetch: non-owned states must be staged at the
         // executors before the Round messages land (transport FIFO).
@@ -625,6 +742,7 @@ impl<T: Transport> Server<T> {
                     agg.merge(aggregate);
                     for r in records {
                         self.scheduler.record(r);
+                        self.trace_task(r, &mut trace_q, &mut trace_cursor);
                     }
                     busy += busy_secs;
                     done += 1;
@@ -638,6 +756,7 @@ impl<T: Transport> Server<T> {
                     tiers[g].get_or_insert_with(|| TierAgg::new(g)).merge(aggregate);
                     for r in records {
                         self.scheduler.record(r);
+                        self.trace_task(r, &mut trace_q, &mut trace_cursor);
                     }
                     busy += busy_secs;
                     done += 1;
@@ -646,6 +765,12 @@ impl<T: Transport> Server<T> {
                 Msg::StatePut { round: r, states } => {
                     state_bytes += raw.len() as u64;
                     state_msgs += 1;
+                    let t = self.tnow();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.instant(t, Track::Server, EvKind::StateFlush {
+                            bytes: raw.len() as u64,
+                        });
+                    }
                     let (b, m) = self.route_state_returns(r, states)?;
                     state_bytes += b;
                     state_msgs += m;

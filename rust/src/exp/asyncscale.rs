@@ -26,6 +26,7 @@ use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::config::{Scheme, SchedulerKind};
 use crate::coordinator::asyncbuf::{FlushLedger, FlushPolicy};
 use crate::data::{Partition, PartitionKind};
+use crate::obs::Registry;
 use crate::simulation::{
     run_async_detailed, run_virtual, AsyncSpec, CommModel, DynamicsSpec, SlowdownLaw,
     StragglerSpec, VRound, VirtualSim,
@@ -212,6 +213,20 @@ pub fn smoke(args: &Args) -> Result<()> {
     let rounds = args.usize_or("rounds", 5)?;
     let threads = args.usize_or("threads", 1)?;
     let _ = smoke_rows(seed, m, rounds, threads)?;
+    if let Some(path) = args.get("trace") {
+        // One traced async cell on the differential's knobs: the flush
+        // chains, staleness decisions and admissions land as spans.
+        let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+        let mut sim =
+            sim_for(Scheme::Async, m, 4, seed, &partition).with_threads(threads).with_tracing();
+        sim.async_spec =
+            AsyncSpec { buffer: 8, max_staleness: 1, weight: StalenessWeight::Poly(0.5) };
+        let (rs, _) = run_async_detailed(&mut sim, rounds, 16, seed ^ 0x55);
+        let tracer = sim.tracer.take().expect("tracing was enabled");
+        let reg = crate::simulation::registry_from_rounds(&rs);
+        std::fs::write(path, crate::obs::chrome::render(&tracer, Some(&reg)))?;
+        println!("[saved {path} (Chrome trace; open in Perfetto)]");
+    }
     Ok(())
 }
 
@@ -278,6 +293,41 @@ pub fn smoke_rows(seed: u64, m: usize, rounds: usize, threads: usize) -> Result<
     );
     ensure!(eng_applied + eng_stale == outcome.completed, "arrivals lost");
 
+    // (2b) Counter parity as rendered bytes: both sides publish the
+    // same metric names into an obs Registry — the engine side
+    // incrementally per flush interval, the ledger side from its run
+    // totals in a different insertion order — and the rendered JSON
+    // must be byte-equal (the registry's render-time name sort is what
+    // makes cross-path parity a byte comparison).
+    let mut eng_reg = Registry::new();
+    for r in &rs {
+        if r.flush_updates + r.stale_dropped > 0 {
+            eng_reg.inc("async.flushes");
+        }
+        eng_reg.add("async.applied", r.flush_updates as u64);
+        eng_reg.add("async.stale_dropped", r.stale_dropped as u64);
+        for (s, &n) in r.staleness_hist.iter().enumerate() {
+            for _ in 0..n {
+                eng_reg.observe("async.staleness", s as u64);
+            }
+        }
+    }
+    let mut led_reg = Registry::new();
+    for (s, &n) in ledger.staleness_hist.iter().enumerate() {
+        for _ in 0..n {
+            led_reg.observe("async.staleness", s as u64);
+        }
+    }
+    led_reg.add("async.stale_dropped", ledger.stale_dropped as u64);
+    led_reg.add("async.flushes", ledger.flushes as u64);
+    led_reg.add("async.applied", ledger.applied as u64);
+    ensure!(
+        eng_reg.to_json().render() == led_reg.to_json().render(),
+        "rendered metrics registries diverged between engine and ledger:\n  engine: {}\n  ledger: {}",
+        eng_reg.to_json().render(),
+        led_reg.to_json().render()
+    );
+
     // (3) degenerate pin at smoke scale.
     let mut sync = sim_for(Scheme::Parrot, m, k, seed, &partition).with_threads(threads);
     let rs_sync = run_virtual(&mut sync, rounds, m_p, seed ^ 0x55);
@@ -289,7 +339,7 @@ pub fn smoke_rows(seed: u64, m: usize, rounds: usize, threads: usize) -> Result<
 
     println!(
         "asyncscale smoke: sim/deploy agree on {} flushes ({} applied, {} stale-dropped, \
-         hist {:?}); degenerate pin == sync over {} rounds — OK",
+         hist {:?}) incl. rendered registry parity; degenerate pin == sync over {} rounds — OK",
         ledger.flushes, ledger.applied, ledger.stale_dropped, ledger.staleness_hist, rounds
     );
     let hist = eng_hist

@@ -162,6 +162,32 @@ pub fn dynamics(args: &Args) -> Result<()> {
     println!("\n(expected: availability < 1 shrinks effective M_p; churn re-places the");
     println!(" departed device's tasks via the greedy step; stragglers stretch FA/SD");
     println!(" rounds more than Parrot's, whose scheduler re-learns the slow devices.)");
+    if let Some(path) = args.get("trace") {
+        // Re-run the richest cell (Parrot × full-dynamic) with tracing
+        // on: churn instants, aborted tasks and straggler-stretched
+        // spans all land in the timeline.
+        let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+        let (_, dyn_spec) = scenarios(rounds).pop().expect("full-dynamic is the last scenario");
+        let mut sim = VirtualSim::new(
+            Scheme::Parrot,
+            ClusterProfile::heterogeneous(k),
+            WorkloadCost::femnist(),
+            CommModel::femnist().with_codec(codec),
+            SchedulerKind::TimeWindow(5),
+            2,
+            partition,
+            1,
+            seed,
+        )
+        .with_dynamics(dyn_spec)
+        .with_threads(threads)
+        .with_tracing();
+        let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0xDD);
+        let tracer = sim.tracer.take().expect("tracing was enabled");
+        let reg = crate::simulation::registry_from_rounds(&rs);
+        std::fs::write(path, crate::obs::chrome::render(&tracer, Some(&reg)))?;
+        println!("[saved {path} (Chrome trace; open in Perfetto)]");
+    }
     super::save_csv(
         args,
         "dynamics",

@@ -26,7 +26,8 @@
 use crate::cluster::{ClusterProfile, Topology, WorkloadCost};
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::{Partition, PartitionKind};
-use crate::simulation::{run_virtual, CommModel, VRound, VirtualSim};
+use crate::obs::chrome;
+use crate::simulation::{registry_from_rounds, run_virtual, CommModel, VRound, VirtualSim};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{ensure, Result};
@@ -82,6 +83,39 @@ fn run_cell(
     .with_threads(threads);
     let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0x70F0);
     (rs.iter().map(|r| row(spec, r)).collect(), sim.engine_secs)
+}
+
+/// One traced grouped smoke cell for the determinism suite
+/// (`tests/determinism.rs`): run a `groups:4` Parrot sim — the grouped
+/// plan always takes the sharded engine path — with tracing on, check
+/// the expanded rows are well formed, and return the rendered Chrome
+/// trace bytes (registry snapshot included).  The bytes must be
+/// identical for every `threads` value on one seed.
+pub fn smoke_trace(seed: u64, threads: usize) -> Result<String> {
+    let topo = Topology::parse("groups:4")?;
+    let partition = Partition::generate(PartitionKind::Natural, 200, 62, 100, seed);
+    let cluster = ClusterProfile::heterogeneous(8).with_topology(topo);
+    let mut sim = VirtualSim::new(
+        Scheme::Parrot,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition,
+        1,
+        seed,
+    )
+    .with_threads(threads)
+    .with_tracing();
+    let rs = run_virtual(&mut sim, 3, 32, seed ^ 0x70F0);
+    ensure!(!rs.is_empty(), "traced smoke cell produced no rounds");
+    let tracer = sim.tracer.take().expect("tracing was enabled");
+    ensure!(!tracer.is_empty(), "traced smoke cell recorded no events");
+    let rows = chrome::expand(&tracer);
+    chrome::check_well_formed(&rows)
+        .map_err(|e| anyhow::anyhow!("malformed trace (--seed {seed:#x}): {e}"))?;
+    Ok(chrome::render_events(&rows, Some(&registry_from_rounds(&rs))))
 }
 
 pub fn parscale(args: &Args) -> Result<()> {
@@ -174,6 +208,12 @@ pub fn parscale(args: &Args) -> Result<()> {
     );
     println!(" merge order are fixed by the topology and seed, threads only size the");
     println!(" worker pool; speedup comes from running leaf-group shards in parallel.)");
+
+    if let Some(path) = args.get("trace") {
+        let bytes = smoke_trace(seed, *thread_counts.last().unwrap())?;
+        std::fs::write(path, bytes)?;
+        println!("[saved {path} (Chrome trace; open in Perfetto)]");
+    }
 
     let json = Json::obj()
         .set("name", "parscale")

@@ -23,11 +23,12 @@
 // HashSet and wallclock entropy so editors surface the core `parrot
 // lint` rules live.  The ban is scoped, not global — allow at the
 // crate root, deny in the determinism-critical modules (simulation,
-// scheduler, aggregation, statestore, compress, cluster), whose
+// scheduler, aggregation, statestore, compress, cluster, obs), whose
 // iteration/merge order is observable in traces.
 #![allow(clippy::disallowed_types, clippy::disallowed_methods)]
 
 pub mod analysis;
+pub mod obs;
 pub mod util;
 pub mod compress;
 pub mod config;

@@ -1,0 +1,279 @@
+//! Chrome trace-event export: the [`Tracer`]'s spans/instants rendered
+//! as the JSON object format `chrome://tracing` and Perfetto load
+//! (`{"traceEvents":[...]}`), via the hand-rolled `util::json` — no
+//! serde, no dependencies.
+//!
+//! Layout: pid 0, one tid per [`Track`] (0 = run, 1 = server,
+//! `2+2i` = device-i compute, `3+2i` = device-i NIC), named by `"M"`
+//! metadata events.  Spans expand to `B`/`E` pairs, instants to `i`;
+//! the global order is a total sort on `(ts, tid, phase, index)` with
+//! `E` before `B` at equal timestamps so back-to-back spans close
+//! before the next opens — per track the file is monotone in `ts` and
+//! every prefix has at least as many `B` as `E` ([`check_well_formed`]).
+//! A registry snapshot rides along under a top-level `"metrics"` key
+//! (Perfetto ignores unknown keys).
+
+use super::{Ev, EvKind, Registry, Track, Tracer};
+use crate::util::json::Json;
+
+/// One rendered trace-event row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChromeEvent {
+    pub name: &'static str,
+    /// `'B'` | `'E'` | `'i'` | `'M'`.
+    pub ph: char,
+    /// Microseconds.
+    pub ts: f64,
+    pub tid: usize,
+    pub args: Option<Json>,
+}
+
+fn tid(track: Track) -> usize {
+    match track {
+        Track::Run => 0,
+        Track::Server => 1,
+        Track::Device(i) => 2 + 2 * i,
+        Track::Net(i) => 3 + 2 * i,
+    }
+}
+
+fn track_label(t: usize) -> String {
+    match t {
+        0 => "run".into(),
+        1 => "server".into(),
+        t if t % 2 == 0 => format!("device-{}", (t - 2) / 2),
+        t => format!("net-{}", (t - 3) / 2),
+    }
+}
+
+fn args_of(kind: &EvKind) -> Json {
+    match *kind {
+        EvKind::Task { task, client } => Json::obj().set("task", task).set("client", client),
+        EvKind::TaskAborted { task } => Json::obj().set("task", task),
+        EvKind::StateLoad { clients } => Json::obj().set("clients", clients),
+        EvKind::CommDown { task, bytes } | EvKind::CommUp { task, bytes } => {
+            Json::obj().set("task", task).set("bytes", Json::Int(bytes as i64))
+        }
+        EvKind::Tail { bytes, cross_bytes, group_aggs } => Json::obj()
+            .set("bytes", Json::Int(bytes as i64))
+            .set("cross_bytes", Json::Int(cross_bytes as i64))
+            .set("group_aggs", group_aggs),
+        EvKind::StateFlush { bytes } => Json::obj().set("bytes", Json::Int(bytes as i64)),
+        EvKind::Flush { flush, applied, stale } => {
+            Json::obj().set("flush", flush).set("applied", applied).set("stale", stale)
+        }
+        EvKind::Sched { round, placed } => {
+            Json::obj().set("round", round).set("placed", placed)
+        }
+        EvKind::Round { round } => Json::obj().set("round", round),
+        EvKind::DeviceLeave { device } | EvKind::DeviceJoin { device } => {
+            Json::obj().set("device", device)
+        }
+        EvKind::ShardTransfer { worker, bytes } => {
+            Json::obj().set("worker", worker).set("bytes", Json::Int(bytes as i64))
+        }
+    }
+}
+
+fn phase_rank(ph: char) -> u8 {
+    // E before B at equal (ts, tid): a span that ends exactly where the
+    // next begins closes first, keeping every prefix B-balanced.
+    match ph {
+        'E' => 0,
+        'B' => 1,
+        _ => 2,
+    }
+}
+
+/// Expand the tracer's events into the sorted rendered row sequence
+/// (metadata first, then the totally ordered timeline).
+pub fn expand(tracer: &Tracer) -> Vec<ChromeEvent> {
+    let mut rows: Vec<ChromeEvent> = Vec::with_capacity(2 * tracer.events.len());
+    for e in &tracer.events {
+        let Ev { t0, t1, track, ref kind, .. } = *e;
+        let t = tid(track);
+        if t1 > t0 {
+            rows.push(ChromeEvent {
+                name: kind.name(),
+                ph: 'B',
+                ts: t0 * 1e6,
+                tid: t,
+                args: Some(args_of(kind)),
+            });
+            rows.push(ChromeEvent { name: kind.name(), ph: 'E', ts: t1 * 1e6, tid: t, args: None });
+        } else {
+            rows.push(ChromeEvent {
+                name: kind.name(),
+                ph: 'i',
+                ts: t0 * 1e6,
+                tid: t,
+                args: Some(args_of(kind)),
+            });
+        }
+    }
+    // Total order: the index tiebreak makes the sort a pure function of
+    // the tracer's (already deterministic) event sequence.
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    order.sort_by(|&a, &b| {
+        rows[a]
+            .ts
+            .total_cmp(&rows[b].ts)
+            .then(rows[a].tid.cmp(&rows[b].tid))
+            .then(phase_rank(rows[a].ph).cmp(&phase_rank(rows[b].ph)))
+            .then(a.cmp(&b))
+    });
+    let mut sorted: Vec<ChromeEvent> = order.into_iter().map(|i| rows[i].clone()).collect();
+
+    // Thread-name metadata, one per distinct tid, ahead of the timeline.
+    let mut tids: Vec<usize> = sorted.iter().map(|r| r.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut out: Vec<ChromeEvent> = tids
+        .into_iter()
+        .map(|t| ChromeEvent {
+            name: "thread_name",
+            ph: 'M',
+            ts: 0.0,
+            tid: t,
+            args: Some(Json::obj().set("name", track_label(t))),
+        })
+        .collect();
+    out.append(&mut sorted);
+    out
+}
+
+fn row_json(r: &ChromeEvent) -> Json {
+    let mut j = Json::obj()
+        .set("name", r.name)
+        .set("ph", r.ph.to_string())
+        .set("ts", Json::Num(r.ts))
+        .set("pid", 0usize)
+        .set("tid", r.tid);
+    if r.ph == 'i' {
+        j = j.set("s", "t"); // thread-scoped instant
+    }
+    if let Some(a) = &r.args {
+        j = j.set("args", a.clone());
+    }
+    j
+}
+
+/// Render rows (+ optional registry snapshot) to the final file bytes.
+pub fn render_events(rows: &[ChromeEvent], metrics: Option<&Registry>) -> String {
+    let mut top = Json::obj()
+        .set("traceEvents", Json::Arr(rows.iter().map(row_json).collect()))
+        .set("displayTimeUnit", "ms");
+    if let Some(reg) = metrics {
+        top = top.set("metrics", reg.to_json());
+    }
+    top.render()
+}
+
+/// Expand + render in one call.
+pub fn render(tracer: &Tracer, metrics: Option<&Registry>) -> String {
+    render_events(&expand(tracer), metrics)
+}
+
+/// Structural invariants of an expanded row sequence: per track the
+/// timeline is monotone non-decreasing in `ts`, every `E` closes an
+/// open `B`, and every track ends balanced.  Returns a description of
+/// the first violation.
+pub fn check_well_formed(rows: &[ChromeEvent]) -> Result<(), String> {
+    // Per-tid (last_ts, open span depth), dense-indexed.
+    let max_tid = rows.iter().map(|r| r.tid).max().unwrap_or(0);
+    let mut last_ts = vec![f64::NEG_INFINITY; max_tid + 1];
+    let mut depth = vec![0i64; max_tid + 1];
+    for (i, r) in rows.iter().enumerate() {
+        if r.ph == 'M' {
+            continue;
+        }
+        if r.ts < last_ts[r.tid] {
+            return Err(format!(
+                "row {i}: ts {} went backwards on tid {} (last {})",
+                r.ts, r.tid, last_ts[r.tid]
+            ));
+        }
+        last_ts[r.tid] = r.ts;
+        match r.ph {
+            'B' => depth[r.tid] += 1,
+            'E' => {
+                depth[r.tid] -= 1;
+                if depth[r.tid] < 0 {
+                    return Err(format!("row {i}: E without open B on tid {}", r.tid));
+                }
+            }
+            'i' => {}
+            ph => return Err(format!("row {i}: unknown phase {ph:?}")),
+        }
+    }
+    for (t, d) in depth.iter().enumerate() {
+        if *d != 0 {
+            return Err(format!("tid {t}: {d} span(s) left open"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_tracer() -> Tracer {
+        let mut t = Tracer::new();
+        t.span(0.0, 4.0, Track::Run, EvKind::Round { round: 0 });
+        t.span(0.0, 2.0, Track::Device(0), EvKind::Task { task: 0, client: 5 });
+        // Back-to-back spans sharing an endpoint on one track.
+        t.span(2.0, 3.0, Track::Device(0), EvKind::Task { task: 1, client: 6 });
+        t.span(2.0, 2.5, Track::Net(0), EvKind::CommUp { task: 0, bytes: 128 });
+        t.instant(3.0, Track::Server, EvKind::DeviceLeave { device: 1 });
+        t.span(3.0, 4.0, Track::Server, EvKind::Tail {
+            bytes: 256,
+            cross_bytes: 64,
+            group_aggs: 2,
+        });
+        t
+    }
+
+    #[test]
+    fn expand_is_well_formed_and_e_precedes_b_at_shared_endpoints() {
+        let rows = expand(&demo_tracer());
+        check_well_formed(&rows).unwrap();
+        // device-0: task#0's E at ts=2e6 must precede task#1's B at 2e6.
+        let d0: Vec<&ChromeEvent> =
+            rows.iter().filter(|r| r.tid == 2 && r.ph != 'M').collect();
+        let ends: Vec<usize> =
+            d0.iter().enumerate().filter(|(_, r)| r.ph == 'E').map(|(i, _)| i).collect();
+        let begins: Vec<usize> =
+            d0.iter().enumerate().filter(|(_, r)| r.ph == 'B').map(|(i, _)| i).collect();
+        assert_eq!(begins.len(), 2);
+        assert_eq!(ends.len(), 2);
+        assert!(ends[0] < begins[1], "E(2.0) must sort before B(2.0): {d0:?}");
+    }
+
+    #[test]
+    fn render_produces_loadable_json_with_metadata_and_metrics() {
+        let mut reg = Registry::new();
+        reg.add("engine.tasks", 2);
+        let s = render(&demo_tracer(), Some(&reg));
+        assert!(s.starts_with("{\"traceEvents\":["), "{s}");
+        assert!(s.contains("\"ph\":\"M\""), "{s}");
+        assert!(s.contains("\"thread_name\""), "{s}");
+        assert!(s.contains("\"device-0\""), "{s}");
+        assert!(s.contains("\"s\":\"t\""), "{s}");
+        assert!(s.contains("\"metrics\":{"), "{s}");
+        assert!(s.contains("\"engine.tasks\":2"), "{s}");
+    }
+
+    #[test]
+    fn check_rejects_unbalanced_and_backwards_rows() {
+        let open = vec![ChromeEvent { name: "task", ph: 'B', ts: 0.0, tid: 2, args: None }];
+        assert!(check_well_formed(&open).is_err());
+        let back = vec![
+            ChromeEvent { name: "a", ph: 'i', ts: 5.0, tid: 0, args: None },
+            ChromeEvent { name: "b", ph: 'i', ts: 4.0, tid: 0, args: None },
+        ];
+        assert!(check_well_formed(&back).is_err());
+        let stray = vec![ChromeEvent { name: "task", ph: 'E', ts: 0.0, tid: 2, args: None }];
+        assert!(check_well_formed(&stray).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Unified deterministic observability: typed span/event tracing plus
+//! a named-metrics registry, shared by the virtual-time engine and the
+//! real coordinator path, with Chrome trace-event export ([`chrome`]).
+//!
+//! One API, two clocks: the engine emits events in *virtual* seconds
+//! under its `(time, seq)` merge key (so per-shard buffers merge into
+//! the same sequence for any `--threads N` and the rendered file is
+//! byte-identical per seed — pinned in `tests/determinism.rs`), while
+//! the server/worker path emits the same [`Ev`] values with *wallclock*
+//! seconds measured by its own `Stopwatch`.  The tracer is an `Option`
+//! sink everywhere: disabled runs carry a `None` and pay only a branch.
+//!
+//! `obs` is a strict `parrot lint` root: no `Hash*` containers, no
+//! ambient clocks — every timestamp is an argument, never sampled here.
+
+pub mod chrome;
+pub mod registry;
+
+pub use registry::Registry;
+
+/// One horizontal lane of the exported timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// Run-level framing: round / flush-interval spans.
+    Run,
+    /// Server lane: aggregation tails, state flushes, async flush chains.
+    Server,
+    /// Executor `i`'s compute lane.
+    Device(usize),
+    /// Executor `i`'s NIC lane (upload/download legs).
+    Net(usize),
+}
+
+/// What happened.  Field order is the rendered `args` order — keep it
+/// stable, the trace differential compares bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EvKind {
+    /// One client task's compute on an executor.
+    Task { task: usize, client: usize },
+    /// A task cut short (client became unavailable / device left).
+    TaskAborted { task: usize },
+    /// Client-state staging before compute (prefetch stall or a
+    /// deploy-side batched prefetch of `clients` states).
+    StateLoad { clients: usize },
+    /// Download leg (params to the executor) for one task.
+    CommDown { task: usize, bytes: u64 },
+    /// Upload leg (aggregate back) after one task.
+    CommUp { task: usize, bytes: u64 },
+    /// The hierarchical aggregation tail (LAN fold + WAN crossing).
+    Tail { bytes: u64, cross_bytes: u64, group_aggs: usize },
+    /// State write-back leg at the end of the tail.
+    StateFlush { bytes: u64 },
+    /// One async buffered flush (merge + re-broadcast).
+    Flush { flush: usize, applied: usize, stale: usize },
+    /// A scheduler decision (placement of `placed` tasks).
+    Sched { round: usize, placed: usize },
+    /// Round / flush-interval framing span.
+    Round { round: usize },
+    DeviceLeave { device: usize },
+    DeviceJoin { device: usize },
+    /// State-shard ownership movement after churn.
+    ShardTransfer { worker: usize, bytes: u64 },
+}
+
+impl EvKind {
+    /// Chrome event name (the `name` field — one per variant).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvKind::Task { .. } => "task",
+            EvKind::TaskAborted { .. } => "task-aborted",
+            EvKind::StateLoad { .. } => "state-load",
+            EvKind::CommDown { .. } => "comm-down",
+            EvKind::CommUp { .. } => "comm-up",
+            EvKind::Tail { .. } => "tail",
+            EvKind::StateFlush { .. } => "state-flush",
+            EvKind::Flush { .. } => "flush",
+            EvKind::Sched { .. } => "sched",
+            EvKind::Round { .. } => "round",
+            EvKind::DeviceLeave { .. } => "device-leave",
+            EvKind::DeviceJoin { .. } => "device-join",
+            EvKind::ShardTransfer { .. } => "shard-transfer",
+        }
+    }
+}
+
+/// One trace event: a span when `t1 > t0`, an instant otherwise.
+///
+/// `(at, seq)` is the deterministic order key: the engine stamps the
+/// emitting pop's `(time bits, namespaced seq)` so per-shard buffers
+/// merge exactly like the event queue itself; tracer-level emitters
+/// get a private monotone sequence.  `t0`/`t1` are seconds on the
+/// emitter's clock (virtual or wallclock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ev {
+    pub at: u64,
+    pub seq: u64,
+    pub t0: f64,
+    pub t1: f64,
+    pub track: Track,
+    pub kind: EvKind,
+}
+
+/// An append-only event sink.  Engine rounds record into plain
+/// `Vec<Ev>` buffers (merged on `(at, seq)`); the run-level tracer
+/// absorbs those per-round buffers shifted onto the run's clock and
+/// takes run-level emissions (round framing, scheduler decisions,
+/// churn-driven shard transfers) directly.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    pub events: Vec<Ev>,
+    seq: u64,
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    fn next_key(&mut self, t0: f64) -> (u64, u64) {
+        let k = (t0.to_bits(), self.seq);
+        self.seq += 1;
+        k
+    }
+
+    /// Record a span `[t0, t1]`.
+    pub fn span(&mut self, t0: f64, t1: f64, track: Track, kind: EvKind) {
+        let (at, seq) = self.next_key(t0);
+        self.events.push(Ev { at, seq, t0, t1, track, kind });
+    }
+
+    /// Record a zero-width instant at `t`.
+    pub fn instant(&mut self, t: f64, track: Track, kind: EvKind) {
+        self.span(t, t, track, kind);
+    }
+
+    /// Absorb one engine round's merged buffer, shifting its (round-
+    /// local) virtual times by `offset` onto the run clock.  The
+    /// buffer's own `(at, seq)` order is preserved as file order.
+    pub fn absorb(&mut self, events: &[Ev], offset: f64) {
+        for e in events {
+            let mut e = *e;
+            e.t0 += offset;
+            e.t1 += offset;
+            e.seq = self.seq;
+            self.seq += 1;
+            self.events.push(e);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_instants_keep_order() {
+        let mut t = Tracer::new();
+        t.span(0.0, 1.5, Track::Device(0), EvKind::Task { task: 0, client: 7 });
+        t.instant(1.5, Track::Server, EvKind::DeviceLeave { device: 2 });
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].kind.name(), "task");
+        assert!(t.events[0].t1 > t.events[0].t0);
+        // Instants collapse to t1 == t0.
+        assert_eq!(t.events[1].t0, t.events[1].t1);
+        assert!(t.events[0].seq < t.events[1].seq);
+    }
+
+    #[test]
+    fn absorb_shifts_onto_the_run_clock() {
+        let mut t = Tracer::new();
+        let round: Vec<Ev> = vec![Ev {
+            at: 0,
+            seq: 3,
+            t0: 1.0,
+            t1: 2.0,
+            track: Track::Net(1),
+            kind: EvKind::CommUp { task: 4, bytes: 10 },
+        }];
+        t.absorb(&round, 100.0);
+        assert_eq!(t.events[0].t0, 101.0);
+        assert_eq!(t.events[0].t1, 102.0);
+        // The run-level sequence replaces the engine's round-local one.
+        assert_eq!(t.events[0].seq, 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Named counters and log-bucketed histograms, Vec-backed so the
+//! rendered output is a pure function of the recorded values — no
+//! `Hash*` iteration order anywhere near it.  Registries on the sim
+//! and deploy paths use the same dotted names (`area.metric`, e.g.
+//! `async.flushes`, `transport.sent_bytes`), which is what makes the
+//! sim-vs-deploy counter-parity differential a byte comparison.
+
+use crate::util::json::Json;
+
+/// A power-of-two histogram: bucket 0 counts zeros, bucket `b >= 1`
+/// counts values in `[2^(b-1), 2^b)`.  Pure integer math — no float
+/// log, so bucketing is identical on every host.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Hist {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Hist {
+    pub fn observe(&mut self, v: u64) {
+        let b = (u64::BITS - v.leading_zeros()) as usize;
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+}
+
+/// The registry: linear-scan name lookup (metric cardinality is tens,
+/// not thousands), render-time name sort so two registries filled in
+/// different orders still render identically.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    hists: Vec<(String, Hist)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `delta` to counter `name` (created at 0 on first touch).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name.to_string(), delta)),
+        }
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Record one sample into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        match self.hists.iter_mut().find(|(n, _)| n == name) {
+            Some((_, h)) => h.observe(v),
+            None => {
+                let mut h = Hist::default();
+                h.observe(v);
+                self.hists.push((name.to_string(), h));
+            }
+        }
+    }
+
+    /// Seconds sample, bucketed at microsecond resolution.
+    pub fn observe_secs(&mut self, name: &str, secs: f64) {
+        self.observe(name, (secs.max(0.0) * 1e6) as u64);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Stable render: names sorted, buckets as-is (already dense).
+    pub fn to_json(&self) -> Json {
+        let mut counters: Vec<&(String, u64)> = self.counters.iter().collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut hists: Vec<&(String, Hist)> = self.hists.iter().collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj()
+            .set(
+                "counters",
+                Json::Obj(
+                    counters
+                        .into_iter()
+                        .map(|(n, v)| (n.clone(), Json::Int(*v as i64)))
+                        .collect(),
+                ),
+            )
+            .set(
+                "histograms",
+                Json::Obj(
+                    hists
+                        .into_iter()
+                        .map(|(n, h)| {
+                            (
+                                n.clone(),
+                                Json::obj()
+                                    .set(
+                                        "buckets",
+                                        Json::Arr(
+                                            h.buckets
+                                                .iter()
+                                                .map(|&b| Json::Int(b as i64))
+                                                .collect(),
+                                        ),
+                                    )
+                                    .set("count", Json::Int(h.count as i64))
+                                    .set("sum", Json::Int(h.sum as i64)),
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut r = Registry::new();
+        r.inc("a.x");
+        r.add("a.x", 4);
+        r.add("a.y", 2);
+        assert_eq!(r.get("a.x"), 5);
+        assert_eq!(r.get("a.y"), 2);
+        assert_eq!(r.get("missing"), 0);
+    }
+
+    #[test]
+    fn hist_log2_buckets() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 2, 3, 4, 7, 8] {
+            h.observe(v);
+        }
+        // bucket 0: {0}; 1: {1}; 2: {2,3}; 3: {4..7}; 4: {8..15}
+        assert_eq!(h.buckets, vec![1, 1, 2, 2, 1]);
+        assert_eq!(h.count, 7);
+        assert_eq!(h.sum, 25);
+    }
+
+    #[test]
+    fn render_is_insertion_order_independent() {
+        let mut a = Registry::new();
+        a.add("z.last", 1);
+        a.add("a.first", 2);
+        a.observe("h.two", 3);
+        a.observe("h.one", 1);
+        let mut b = Registry::new();
+        b.observe("h.one", 1);
+        b.add("a.first", 2);
+        b.observe("h.two", 3);
+        b.add("z.last", 1);
+        assert_eq!(a.to_json().render(), b.to_json().render());
+        let js = a.to_json().render();
+        assert!(js.contains("\"a.first\":2"), "{js}");
+        assert!(js.contains("\"h.two\""), "{js}");
+    }
+}

@@ -63,6 +63,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
+use crate::obs::{Ev, EvKind, Track};
 use crate::scheduler::{Scheduler, TaskRecord};
 use crate::statestore::StatePlan;
 use crate::util::rng::Rng;
@@ -84,23 +85,12 @@ pub enum Event {
     FlushDone,
 }
 
-/// One popped-event record for the merge-order differential: the event
-/// virtual time (as IEEE bits — times are non-negative, so bit order
-/// equals numeric order), the global sequence number, and the event
-/// discriminant.  Byte-comparable across thread counts.
-pub type TraceRow = (u64, u64, u8);
-
-fn event_discr(e: &Event) -> u8 {
-    match e {
-        Event::TaskStart { .. } => 0,
-        Event::TaskDone { .. } => 1,
-        Event::CommDone { .. } => 2,
-        Event::DeviceJoin { .. } => 3,
-        Event::DeviceLeave { .. } => 4,
-        Event::ClientUnavailable { .. } => 5,
-        Event::FlushDone => 6,
-    }
-}
+// Typed trace events ([`crate::obs::Ev`]) replace the old bare
+// `(time, seq, discriminant)` pop log: handlers emit spans/instants
+// keyed by the emitting pop's `(time bits, namespaced seq)`, so
+// per-shard buffers still merge on exactly the order the single heap
+// would pop — same merge law, but the rows now carry what happened
+// (task/comm/state spans) instead of just that something popped.
 
 /// A scheduler-history side effect raised during a shard's event phase.
 /// Workers cannot share `&mut Scheduler`, so sharded cores buffer these
@@ -374,8 +364,11 @@ struct Core<'a> {
     /// `Some` on shard cores: scheduler-history ops buffered for the
     /// post-join merge instead of applied live.
     sched_ops: Option<Vec<(f64, u64, HistOp)>>,
-    /// Pop-order log for the thread-count differential (None = off).
-    trace: Option<Vec<TraceRow>>,
+    /// Typed event sink (None = tracing off, pure branch cost).
+    trace: Option<Vec<Ev>>,
+    /// The current pop's `(time bits, seq)` — the deterministic order
+    /// key stamped onto every event emitted while handling it.
+    key: (u64, u64),
     bytes: u64,
     trips: u64,
     cross_bytes: u64,
@@ -391,6 +384,13 @@ impl<'a> Core<'a> {
     fn push(&mut self, time: f64, epoch: u64, event: Event) {
         self.heap.push(Scheduled { time, seq: self.seq, epoch, event });
         self.seq += self.seq_stride;
+    }
+
+    /// Record a span (`t1 > t0`) or instant under the current pop key.
+    fn emit(&mut self, t0: f64, t1: f64, track: Track, kind: EvKind) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(Ev { at: self.key.0, seq: self.key.1, t0, t1, track, kind });
+        }
     }
 
     fn alive_count(&self) -> usize {
@@ -469,6 +469,23 @@ impl<'a> Core<'a> {
         // The stall shifts the task's effective start so downstream
         // elapsed/projected arithmetic stays exact.
         self.execs[slot].current = Some((task, self.now + stall, dur));
+        if stall > 0.0 {
+            self.emit(
+                self.now,
+                self.now + stall,
+                Track::Device(slot),
+                EvKind::StateLoad { clients: 1 },
+            );
+        }
+        if self.comm_down > 0.0 {
+            let (t0, bytes) = (self.now + stall, self.bytes_down);
+            self.emit(
+                t0,
+                t0 + self.comm_down,
+                Track::Net(slot),
+                EvKind::CommDown { task, bytes },
+            );
+        }
         if self.bytes_down > 0 {
             self.bytes += self.bytes_down;
             self.trips += 1;
@@ -501,6 +518,8 @@ impl<'a> Core<'a> {
         self.tasks[task].realized = dur;
         self.completed += 1;
         self.work_end = self.now;
+        let client = self.tasks[task].client;
+        self.emit(self.now - dur, self.now, Track::Device(slot), EvKind::Task { task, client });
         if self.record_history {
             let rec = TaskRecord {
                 round: self.round,
@@ -515,6 +534,12 @@ impl<'a> Core<'a> {
             }
         }
         if self.comm_up > 0.0 || self.bytes_up > 0 {
+            self.emit(
+                self.now,
+                self.now + self.comm_up,
+                Track::Net(slot),
+                EvKind::CommUp { task, bytes: self.bytes_up },
+            );
             let epoch = self.execs[slot].epoch;
             self.push(
                 self.now + self.comm_up,
@@ -543,6 +568,7 @@ impl<'a> Core<'a> {
             self.execs[slot].current.take().expect("ClientUnavailable without a current task");
         debug_assert_eq!(cur, task);
         let elapsed = (self.now - start - self.comm_down).max(0.0);
+        self.emit(self.now - elapsed, self.now, Track::Device(slot), EvKind::TaskAborted { task });
         self.execs[slot].wasted += elapsed;
         self.wasted += elapsed;
         // The down leg did happen (the drop fires during compute).
@@ -564,6 +590,7 @@ impl<'a> Core<'a> {
         self.execs[slot].alive = false;
         self.execs[slot].epoch += 1;
         self.departures += 1;
+        self.emit(self.now, self.now, Track::Device(slot), EvKind::DeviceLeave { device: slot });
         let mut orphans: Vec<usize> = Vec::new();
         if let Some((task, start, dur)) = self.execs[slot].current.take() {
             if self.tasks[task].state != TaskState::Done {
@@ -603,6 +630,7 @@ impl<'a> Core<'a> {
         }
         self.execs[slot].alive = true;
         self.joins += 1;
+        self.emit(self.now, self.now, Track::Device(slot), EvKind::DeviceJoin { device: slot });
         self.try_start(slot);
     }
 
@@ -812,6 +840,7 @@ impl<'a> Core<'a> {
         let initial_alive = initial_mask.iter().filter(|&&a| a).count();
         let end = self.work_end;
         let mut t = end;
+        let (bytes0, cross0) = (self.bytes, self.cross_bytes);
         match tail {
             TailComm::None => {}
             TailComm::PerExecutor { down, up } => {
@@ -854,9 +883,21 @@ impl<'a> Core<'a> {
             }
             TailComm::Tiered(tt) => t = self.run_tiered_tail(&tt, initial_mask, t),
         }
+        if t > end {
+            let (db, dc) = (self.bytes - bytes0, self.cross_bytes - cross0);
+            let ga = self.group_aggs;
+            self.emit(
+                end,
+                t,
+                Track::Server,
+                EvKind::Tail { bytes: db, cross_bytes: dc, group_aggs: ga },
+            );
+        }
         // StateFlush leg: round-boundary dirty write-back plus remote
         // write-back returns, serialized after the comm tail.
         if self.state.tail_secs > 0.0 || self.state.tail_bytes > 0 {
+            let bytes = self.state.tail_bytes;
+            self.emit(t, t + self.state.tail_secs, Track::Server, EvKind::StateFlush { bytes });
             t += self.state.tail_secs;
             self.state_secs += self.state.tail_secs;
             self.state_bytes += self.state.tail_bytes;
@@ -877,9 +918,7 @@ impl<'a> Core<'a> {
         }
         while let Some(s) = self.heap.pop() {
             self.now = self.now.max(s.time);
-            if let Some(tr) = self.trace.as_mut() {
-                tr.push((s.time.to_bits(), s.seq, event_discr(&s.event)));
-            }
+            self.key = (s.time.to_bits(), s.seq);
             match s.event {
                 Event::TaskStart { task, device } => {
                     if s.epoch != self.execs[device].epoch || !self.execs[device].alive {
@@ -933,10 +972,17 @@ impl<'a> Core<'a> {
     }
 
     /// Price the round tail and assemble the outcome (runs once, on
-    /// merged state in the sharded path).
-    fn finish(mut self, tail: TailComm, initial_mask: &[bool]) -> RoundOutcome {
+    /// merged state in the sharded path).  The trace comes back with
+    /// the outcome so tail spans — emitted inside `run_tail` — are
+    /// part of it.
+    fn finish(
+        mut self,
+        tail: TailComm,
+        initial_mask: &[bool],
+    ) -> (RoundOutcome, Option<Vec<Ev>>) {
         self.run_tail(tail, initial_mask);
-        RoundOutcome {
+        let trace = self.trace.take();
+        let outcome = RoundOutcome {
             busy: self.execs.iter().map(|e| e.busy).collect(),
             comm_occ: self.execs.iter().map(|e| e.comm).collect(),
             alive: self.execs.iter().map(|e| e.alive).collect(),
@@ -954,17 +1000,21 @@ impl<'a> Core<'a> {
             state_secs: self.state_secs,
             cross_group_bytes: self.cross_bytes,
             group_aggs: self.group_aggs,
-        }
+        };
+        (outcome, trace)
     }
 
     /// Single-heap execution: events, then the tail (the legacy path —
-    /// flat, shared-pull, and async-degenerate plans).  Returns the pop
-    /// trace alongside the outcome when tracing was requested.
-    fn run(mut self, tail: TailComm, mut sched: Option<&mut Scheduler>) -> (RoundOutcome, Option<Vec<TraceRow>>) {
+    /// flat, shared-pull, and async-degenerate plans).  Returns the
+    /// typed event trace alongside the outcome when tracing was on.
+    fn run(
+        mut self,
+        tail: TailComm,
+        mut sched: Option<&mut Scheduler>,
+    ) -> (RoundOutcome, Option<Vec<Ev>>) {
         let initial_mask: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
         self.run_events(&mut sched);
-        let trace = self.trace.take();
-        (self.finish(tail, &initial_mask), trace)
+        self.finish(tail, &initial_mask)
     }
 }
 
@@ -1008,8 +1058,8 @@ fn exec_states(plan: &RoundPlan) -> Vec<ExecState> {
 /// `threads` bounds the worker pool for the group-sharded path (see
 /// the module docs); the outcome is byte-identical for every value —
 /// grouped plans always run the sharded algorithm, everything else
-/// always runs the single heap.  `trace` collects the merged event pop
-/// sequence `(time_bits, seq, discriminant)` when provided.
+/// always runs the single heap.  `trace` collects the typed span/event
+/// stream ([`Ev`]) in merged `(time_bits, seq)` order when provided.
 #[allow(clippy::too_many_arguments)]
 pub fn run_round_opts(
     plan: RoundPlan,
@@ -1020,7 +1070,7 @@ pub fn run_round_opts(
     dyn_seed: u64,
     scheduler: Option<&mut Scheduler>,
     threads: usize,
-    trace: Option<&mut Vec<TraceRow>>,
+    trace: Option<&mut Vec<Ev>>,
 ) -> RoundOutcome {
     debug_assert_eq!(plan.alive.len(), plan.n_exec);
     let tiered = match &plan.tail {
@@ -1079,6 +1129,7 @@ pub fn run_round_opts(
         seq_stride: 1,
         sched_ops: None,
         trace: trace.is_some().then(Vec::new),
+        key: (0, 0),
         bytes: 0,
         trips: 0,
         cross_bytes: 0,
@@ -1174,7 +1225,7 @@ struct ShardOut {
     departures: usize,
     joins: usize,
     ops: Vec<(f64, u64, HistOp)>,
-    trace: Vec<TraceRow>,
+    trace: Vec<Ev>,
 }
 
 /// Run one shard's compute phase to completion on its own heap.
@@ -1237,6 +1288,10 @@ fn run_shard(
         seq_stride: n_shards as u64,
         sched_ops: Some(Vec::new()),
         trace: want_trace.then(Vec::new),
+        // Until the first pop, emissions (the initial try_start sweep)
+        // carry the construction key: rounds start at now = 0.0, whose
+        // bit pattern is 0, so the merge still orders them by shard id.
+        key: (0, shard as u64),
         bytes: 0,
         trips: 0,
         cross_bytes: 0,
@@ -1287,7 +1342,7 @@ fn run_round_sharded(
     dyn_seed: u64,
     scheduler: Option<&mut Scheduler>,
     threads: usize,
-    trace: Option<&mut Vec<TraceRow>>,
+    trace: Option<&mut Vec<Ev>>,
 ) -> RoundOutcome {
     let n_shards = tt.n_groups;
     let n_exec = plan.n_exec;
@@ -1469,6 +1524,7 @@ fn run_round_sharded(
         seq_stride: 1,
         sched_ops: None,
         trace: None,
+        key: (0, 0),
         bytes: 0,
         trips: 0,
         cross_bytes: 0,
@@ -1480,7 +1536,7 @@ fn run_round_sharded(
         joins: 0,
     };
     let mut all_ops: Vec<(f64, u64, HistOp)> = Vec::new();
-    let mut merged_trace: Vec<TraceRow> = Vec::new();
+    let mut merged_trace: Vec<Ev> = Vec::new();
     for out in outs {
         let ShardOut {
             shard: _,
@@ -1527,7 +1583,36 @@ fn run_round_sharded(
             };
             all_ops.push((time, seq, op));
         }
-        merged_trace.extend(trace);
+        // Shard traces carry local slot/task ids; translate back to the
+        // global index space so the merged trace matches the single
+        // heap's labelling.
+        for mut e in trace {
+            e.track = match e.track {
+                Track::Device(i) => Track::Device(slots[i]),
+                Track::Net(i) => Track::Net(slots[i]),
+                other => other,
+            };
+            e.kind = match e.kind {
+                EvKind::Task { task, client } => {
+                    EvKind::Task { task: task_globals[task], client }
+                }
+                EvKind::TaskAborted { task } => {
+                    EvKind::TaskAborted { task: task_globals[task] }
+                }
+                EvKind::CommDown { task, bytes } => {
+                    EvKind::CommDown { task: task_globals[task], bytes }
+                }
+                EvKind::CommUp { task, bytes } => {
+                    EvKind::CommUp { task: task_globals[task], bytes }
+                }
+                EvKind::DeviceLeave { device } => {
+                    EvKind::DeviceLeave { device: slots[device] }
+                }
+                EvKind::DeviceJoin { device } => EvKind::DeviceJoin { device: slots[device] },
+                other => other,
+            };
+            merged_trace.push(e);
+        }
     }
     // Tasks no shard owned (never queued anywhere): the single heap
     // would sweep them to Dropped and book their state legs.
@@ -1557,17 +1642,25 @@ fn run_round_sharded(
             }
         }
     }
-    if let Some(dst) = trace {
+    if want_trace {
+        // Merge on the pop key `(time, seq)` — the namespaced seq makes
+        // this a total order across shards, and the stable sort keeps
+        // each pop's multi-event emission order intact.  The parent
+        // appends the tail spans afterwards (never re-sorted).
         merged_trace.sort_by(|a, b| {
-            f64::from_bits(a.0).total_cmp(&f64::from_bits(b.0)).then(a.1.cmp(&b.1))
+            f64::from_bits(a.at).total_cmp(&f64::from_bits(b.at)).then(a.seq.cmp(&b.seq))
         });
-        *dst = merged_trace;
+        parent.trace = Some(merged_trace);
     }
     // The conservative barrier: every shard has drained, so the tiered
     // tail (the earliest possible cross-WAN interaction) starts at the
     // global work end.
     parent.now = parent.work_end;
-    parent.finish(TailComm::Tiered(tt), &initial_mask)
+    let (out, tr) = parent.finish(TailComm::Tiered(tt), &initial_mask);
+    if let (Some(dst), Some(tr)) = (trace, tr) {
+        *dst = tr;
+    }
+    out
 }
 
 // ===================================================================
@@ -1709,6 +1802,8 @@ struct ATask {
     n_eff: usize,
     noise: f64,
     predicted: Option<f64>,
+    /// Global client id (trace labelling only).
+    client: usize,
     cohort: usize,
     leg: StateLeg,
     has_leg: bool,
@@ -1794,12 +1889,23 @@ struct AsyncCore<'a> {
     completed: usize,
     dropped: usize,
     wasted: f64,
+    /// Typed event trace (None = tracing off).  The dispatcher is
+    /// single-heap and single-threaded, so emission order is already
+    /// the total order — `seq` is just the buffer index.
+    trace: Option<Vec<Ev>>,
 }
 
 impl<'a> AsyncCore<'a> {
     fn push(&mut self, time: f64, event: Event) {
         self.heap.push(Scheduled { time, seq: self.seq, epoch: 0, event });
         self.seq += 1;
+    }
+
+    fn emit(&mut self, t0: f64, t1: f64, track: Track, kind: EvKind) {
+        if let Some(tr) = self.trace.as_mut() {
+            let seq = tr.len() as u64;
+            tr.push(Ev { at: t0.to_bits(), seq, t0, t1, track, kind });
+        }
     }
 
     fn base_secs(&self, slot: usize, task: usize) -> f64 {
@@ -1859,6 +1965,10 @@ impl<'a> AsyncCore<'a> {
         let stall = self.state_stall(task);
         self.tasks[task].born = self.version;
         self.devs[slot].current = Some((task, self.now + stall, dur));
+        if stall > 0.0 {
+            let (t0, t1) = (self.now, self.now + stall);
+            self.emit(t0, t1, Track::Device(slot), EvKind::StateLoad { clients: 1 });
+        }
         let st = &self.dynamics.straggler;
         if st.drop_prob > 0.0 && self.cohort_rng[c].next_f64() < st.drop_prob {
             let frac = self.cohort_rng[c].next_f64();
@@ -1896,6 +2006,8 @@ impl<'a> AsyncCore<'a> {
         self.devs[slot].busy += dur;
         self.completed += 1;
         self.acc.completed += 1;
+        let client = self.tasks[task].client;
+        self.emit(self.now - dur, self.now, Track::Device(slot), EvKind::Task { task, client });
         if let Some(p) = self.tasks[task].predicted {
             self.acc.act.push(dur);
             self.acc.pred.push(p);
@@ -1929,6 +2041,7 @@ impl<'a> AsyncCore<'a> {
             self.devs[slot].current.take().expect("ClientUnavailable without a current task");
         debug_assert_eq!(cur, task);
         let elapsed = (self.now - start).max(0.0).min(dur.max(0.0));
+        self.emit(self.now - elapsed, self.now, Track::Device(slot), EvKind::TaskAborted { task });
         self.wasted += elapsed;
         self.acc.wasted += elapsed;
         self.dropped += 1;
@@ -2076,6 +2189,12 @@ impl<'a> AsyncCore<'a> {
             Some(crate::util::stats::mape(&self.acc.act, &self.acc.pred))
         };
         let acc = std::mem::take(&mut self.acc);
+        // The chain occupied the NIC for chain_secs ending now.
+        self.emit(self.now - batch.chain_secs, self.now, Track::Server, EvKind::Flush {
+            flush: self.flushes.len(),
+            applied,
+            stale: stale_dropped,
+        });
         self.flushes.push(FlushRecord {
             flush: self.flushes.len(),
             end: self.now,
@@ -2135,6 +2254,11 @@ impl<'a> AsyncCore<'a> {
             self.cohort_tail.push((cohort.state.tail_bytes, cohort.state.tail_secs));
             self.acc.sched_secs += cohort.sched_secs;
             self.acc.unavailable += cohort.unavailable;
+            // Virtual-time admission marker; the wallclock sched cost
+            // stays in `sched_secs` only (never in the trace, which
+            // must be run-to-run identical).
+            let placed = cohort.tasks.len();
+            self.emit(self.now, self.now, Track::Run, EvKind::Sched { round: id, placed });
             if cohort.tasks.is_empty() {
                 continue; // fully-unavailable cohort: nothing to run
             }
@@ -2148,6 +2272,7 @@ impl<'a> AsyncCore<'a> {
                     n_eff: t.n_eff,
                     noise: t.noise,
                     predicted: t.predicted,
+                    client: t.client,
                     cohort: id,
                     leg,
                     has_leg,
@@ -2170,7 +2295,11 @@ impl<'a> AsyncCore<'a> {
         }
     }
 
-    fn run(mut self, scheduler: &mut Scheduler, source: &mut AsyncSource<'_>) -> AsyncOutcome {
+    fn run(
+        mut self,
+        scheduler: &mut Scheduler,
+        source: &mut AsyncSource<'_>,
+    ) -> (AsyncOutcome, Option<Vec<Ev>>) {
         self.try_admit(scheduler, source);
         loop {
             match self.heap.pop() {
@@ -2255,7 +2384,8 @@ impl<'a> AsyncCore<'a> {
                 est_err: None,
             });
         }
-        AsyncOutcome {
+        let trace = self.trace.take();
+        let outcome = AsyncOutcome {
             end: self.now,
             busy: self.devs.iter().map(|d| d.busy).collect(),
             completed: self.completed,
@@ -2264,7 +2394,8 @@ impl<'a> AsyncCore<'a> {
             arrivals: self.arrivals,
             cohorts: self.next_cohort,
             flushes: self.flushes,
-        }
+        };
+        (outcome, trace)
     }
 }
 
@@ -2284,6 +2415,7 @@ pub fn run_async(
     comm: AsyncComm,
     scheduler: &mut Scheduler,
     source: &mut AsyncSource<'_>,
+    trace: Option<&mut Vec<Ev>>,
 ) -> AsyncOutcome {
     assert!(spec.buffer >= 1, "async buffer must be >= 1");
     assert!(n_exec >= 1, "async dispatch needs at least one executor");
@@ -2321,8 +2453,13 @@ pub fn run_async(
         completed: 0,
         dropped: 0,
         wasted: 0.0,
+        trace: trace.is_some().then(Vec::new),
     };
-    core.run(scheduler, source)
+    let (out, tr) = core.run(scheduler, source);
+    if let (Some(dst), Some(tr)) = (trace, tr) {
+        *dst = tr;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -2873,6 +3010,7 @@ mod tests {
             no_comm(),
             &mut sched,
             &mut source,
+            None,
         );
         assert_eq!(out.completed, 12);
         assert_eq!(out.cohorts, 3);
@@ -2919,6 +3057,7 @@ mod tests {
                 no_comm(),
                 &mut sched,
                 &mut source,
+                None,
             )
         };
         let barrier = run(4, 0); // flush per cohort, no pipeline depth
@@ -2955,6 +3094,7 @@ mod tests {
             no_comm(),
             &mut sched,
             &mut source,
+            None,
         );
         let stale: usize = out.flushes.iter().map(|f| f.stale_dropped).sum();
         let applied: usize = out.flushes.iter().map(|f| f.updates).sum();
@@ -2977,6 +3117,7 @@ mod tests {
             no_comm(),
             &mut sched2,
             &mut source2,
+            None,
         );
         let stale2: usize = out2.flushes.iter().map(|f| f.stale_dropped).sum();
         assert_eq!(stale2, 0);
@@ -3037,6 +3178,7 @@ mod tests {
             no_comm(),
             &mut sched,
             &mut source,
+            None,
         );
         let state_bytes: u64 = out.flushes.iter().map(|f| f.state_bytes).sum();
         assert_eq!(
@@ -3087,6 +3229,7 @@ mod tests {
             seq_stride: 1,
             sched_ops: None,
             trace: None,
+            key: (0, 0),
             bytes: 0,
             trips: 0,
             cross_bytes: 0,
@@ -3193,9 +3336,10 @@ mod tests {
 
     /// Tentpole pin (satellite 4): on random grouped topologies with
     /// churn and straggler/drop injection, the sharded engine's merged
-    /// pop sequence `(time, seq, discriminant)` and every outcome column
-    /// must match the `--threads 1` run event-for-event at 2 and 8
-    /// workers.  Failures print the generator seed via the prop harness
+    /// typed event trace (every [`Ev`] field, including the `(time,
+    /// seq)` merge key) and every outcome column must match the
+    /// `--threads 1` run event-for-event at 2 and 8 workers.  Failures
+    /// print the generator seed via the prop harness
     /// (`PARROT_PROP_SEED` contract).
     #[test]
     fn prop_sharded_pop_sequence_is_thread_invariant() {
@@ -3246,7 +3390,7 @@ mod tests {
                 plan
             };
             let run_at = |threads: usize| {
-                let mut tr: Vec<TraceRow> = Vec::new();
+                let mut tr: Vec<Ev> = Vec::new();
                 let out = run_round_opts(
                     mk_plan(),
                     &cluster,

@@ -72,6 +72,7 @@ use crate::cluster::{ClusterProfile, WorkloadCost};
 use crate::compress::Codec;
 use crate::config::{Scheme, SchedulerKind};
 use crate::data::Partition;
+use crate::obs::{Ev, EvKind, Registry, Track, Tracer};
 use crate::scheduler::{AffinityCtx, Scheduler};
 use crate::statestore::{SimStore, StatePlan};
 use crate::util::rng::Rng;
@@ -271,6 +272,15 @@ pub struct VirtualSim {
     /// Accumulated wallclock seconds inside [`engine::run_round_opts`]
     /// across all rounds — the `parscale` sweep's speedup numerator.
     pub engine_secs: f64,
+    /// Typed span/event tracer (`--trace`): per-round engine buffers
+    /// are absorbed onto one monotone run clock.  None (the default)
+    /// is a no-op sink — the engine skips event construction entirely.
+    /// Everything recorded here is *virtual* time, so the trace is
+    /// byte-identical run-to-run and for every `--threads` value.
+    pub tracer: Option<Tracer>,
+    /// Run-clock offset for the next round's engine buffer (Σ of the
+    /// previous rounds' `total_secs`).
+    vclock: f64,
     /// Persistent per-device-slot alive mask (FA/Parrot executors map
     /// 1:1 to devices; RW/SD executors are fresh per round).
     device_alive: Vec<bool>,
@@ -310,6 +320,8 @@ impl VirtualSim {
             },
             threads: 1,
             engine_secs: 0.0,
+            tracer: None,
+            vclock: 0.0,
             device_alive: vec![true; k],
             dyn_seed: seed ^ 0xD15C_0E7E,
             rng: Rng::new(seed ^ 0x51D_CAFE),
@@ -326,6 +338,14 @@ impl VirtualSim {
     /// wall-clock knob: every value produces the same timeline.
     pub fn with_threads(mut self, threads: usize) -> VirtualSim {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder-style tracing switch (`--trace`): attach an empty
+    /// [`Tracer`]; render it with [`crate::obs::chrome::render`] after
+    /// the run.
+    pub fn with_tracing(mut self) -> VirtualSim {
+        self.tracer = Some(Tracer::new());
         self
     }
 
@@ -395,6 +415,7 @@ impl VirtualSim {
             ),
         };
         let prev_alive = self.device_alive.clone();
+        let mut tbuf: Vec<Ev> = Vec::new();
         let sw = crate::util::timer::Stopwatch::start();
         let outcome = engine::run_round_opts(
             plan,
@@ -405,9 +426,20 @@ impl VirtualSim {
             self.dyn_seed,
             Some(&mut self.scheduler),
             self.threads,
-            None,
+            self.tracer.is_some().then_some(&mut tbuf),
         );
         self.engine_secs += sw.elapsed_secs();
+        // Absorb the round's engine events onto the monotone run clock
+        // and frame them with the round span + placement marker.  The
+        // Sched instant carries only virtual facts (placed count), never
+        // the wallclock `sched_secs` — the trace must be replayable.
+        let t0 = self.vclock;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.span(t0, t0 + outcome.end, Track::Run, EvKind::Round { round: r });
+            tr.instant(t0, Track::Run, EvKind::Sched { round: r, placed: sizes.len() });
+            tr.absorb(&tbuf, t0);
+        }
+        self.vclock += outcome.end;
         // Device slots persist across rounds for the schemes whose
         // executors map 1:1 to physical devices.
         let mut transfer = 0u64;
@@ -434,7 +466,16 @@ impl VirtualSim {
                 continue;
             }
             let st = self.state.as_mut().expect("checked above");
-            bytes += if was { st.store.handoff(slot) } else { st.store.rejoin(slot) };
+            let moved = if was { st.store.handoff(slot) } else { st.store.rejoin(slot) };
+            bytes += moved;
+            if moved > 0 {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.instant(self.vclock, Track::Server, EvKind::ShardTransfer {
+                        worker: slot,
+                        bytes: moved,
+                    });
+                }
+            }
             // The ring may change even when no state moved yet (e.g. a
             // departure before the shard hosted anything) — the
             // scheduler's view must follow the ring, not the bytes.
@@ -452,6 +493,10 @@ impl VirtualSim {
     /// silently lost for the rest of the run.
     fn idle_round(&mut self, r: usize, unavailable: usize) -> VRound {
         let mut v = VRound::empty(r, unavailable);
+        if let Some(tr) = self.tracer.as_mut() {
+            // Zero-width marker: the round happened, nothing ran.
+            tr.instant(self.vclock, Track::Run, EvKind::Round { round: r });
+        }
         if matches!(self.scheme, Scheme::FaDist | Scheme::Parrot) {
             let prev_alive = self.device_alive.clone();
             let events: Vec<ChurnEvent> = self.dynamics.churn.scripted(r).copied().collect();
@@ -804,6 +849,7 @@ pub fn run_async_detailed(
         ref dynamics,
         ref mut state,
         ref mut rng,
+        ref mut tracer,
         ..
     } = *sim;
     let availability = &dynamics.availability;
@@ -884,6 +930,8 @@ pub fn run_async_detailed(
         })
     };
 
+    let mut tbuf: Vec<Ev> = Vec::new();
+    let want_trace = tracer.is_some();
     let outcome = engine::run_async(
         k,
         cluster,
@@ -894,7 +942,13 @@ pub fn run_async_detailed(
         comm,
         scheduler,
         &mut source,
+        want_trace.then_some(&mut tbuf),
     );
+    // The dispatcher owns the whole timeline (no per-round restart), so
+    // its events land on the run clock at offset 0.
+    if let Some(tr) = tracer.as_mut() {
+        tr.absorb(&tbuf, 0.0);
+    }
 
     let vrounds = outcome
         .flushes
@@ -928,6 +982,37 @@ pub fn run_async_detailed(
         })
         .collect();
     (vrounds, outcome)
+}
+
+/// Fold per-round rows into an [`obs::Registry`](crate::obs::Registry)
+/// snapshot — the `metrics` block of a `--trace` export, and one side
+/// of the sim-vs-deploy counter-parity differential (`parrot exp
+/// asyncscale --smoke`).  Names follow the dotted `area.metric` scheme
+/// documented in the README's Observability section.
+pub fn registry_from_rounds(rs: &[VRound]) -> Registry {
+    let mut reg = Registry::new();
+    for r in rs {
+        reg.inc("sim.rounds");
+        reg.add("sim.bytes", r.bytes);
+        reg.add("sim.trips", r.trips);
+        reg.add("sim.state_bytes", r.state_bytes);
+        reg.add("sim.cross_group_bytes", r.cross_group_bytes);
+        reg.add("sim.shard_transfer_bytes", r.shard_transfer_bytes);
+        reg.add("sim.scheduled_clients", r.scheduled_clients as u64);
+        reg.add("sim.unavailable_clients", r.unavailable_clients as u64);
+        reg.add("sim.dropped_clients", r.dropped_clients as u64);
+        reg.add("sim.departures", r.departures as u64);
+        reg.add("sim.joins", r.joins as u64);
+        reg.add("sim.flush_applied", r.flush_updates as u64);
+        reg.add("sim.stale_dropped", r.stale_dropped as u64);
+        reg.observe_secs("sim.round_secs", r.total_secs);
+        for (s, &n) in r.staleness_hist.iter().enumerate() {
+            for _ in 0..n {
+                reg.observe("sim.staleness", s as u64);
+            }
+        }
+    }
+    reg
 }
 
 #[cfg(test)]
@@ -1149,6 +1234,32 @@ mod tests {
             let u = r.utilization();
             assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
         }
+    }
+
+    #[test]
+    fn tracing_is_timeline_neutral_and_exports_well_formed() {
+        // Attaching the tracer must not perturb a single virtual bit,
+        // and the absorbed run must expand to a well-formed Chrome
+        // trace with monotone per-track timestamps.
+        let mut plain = mk(Scheme::Parrot, 4, SchedulerKind::Greedy);
+        let mut traced = mk(Scheme::Parrot, 4, SchedulerKind::Greedy).with_tracing();
+        let a = run_virtual(&mut plain, 3, 40, 1);
+        let b = run_virtual(&mut traced, 3, 40, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.total_secs.to_bits(), y.total_secs.to_bits());
+            assert_eq!(x.bytes, y.bytes);
+            assert_eq!(x.device_busy.len(), y.device_busy.len());
+        }
+        let tr = traced.tracer.take().expect("tracer attached");
+        assert!(!tr.is_empty(), "a 3-round Parrot run must record events");
+        let rows = crate::obs::chrome::expand(&tr);
+        crate::obs::chrome::check_well_formed(&rows).unwrap();
+        let reg = registry_from_rounds(&b);
+        assert_eq!(reg.get("sim.rounds"), 3);
+        let s = crate::obs::chrome::render(&tr, Some(&reg));
+        assert!(s.starts_with("{\"traceEvents\":["), "{}", &s[..s.len().min(80)]);
+        assert!(s.contains("\"sim.bytes\""), "registry snapshot rides along");
     }
 
     // ------------------------------------------------ event-core tests

@@ -13,9 +13,53 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Passive wire meters an endpoint can expose for observability
+/// (`--trace`): message and byte totals per direction.  `Relaxed`
+/// atomics — the counts feed the exported metrics registry only, never
+/// control flow, so no ordering is load-bearing.
+#[derive(Debug, Default)]
+pub struct TransportMeter {
+    sent_msgs: AtomicU64,
+    sent_bytes: AtomicU64,
+    recv_msgs: AtomicU64,
+    recv_bytes: AtomicU64,
+}
+
+impl TransportMeter {
+    fn on_send(&self, bytes: usize) {
+        self.sent_msgs.fetch_add(1, Ordering::Relaxed);
+        self.sent_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn on_recv(&self, bytes: usize) {
+        self.recv_msgs.fetch_add(1, Ordering::Relaxed);
+        self.recv_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Snapshot as `(sent_msgs, sent_bytes, recv_msgs, recv_bytes)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.sent_msgs.load(Ordering::Relaxed),
+            self.sent_bytes.load(Ordering::Relaxed),
+            self.recv_msgs.load(Ordering::Relaxed),
+            self.recv_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Export the snapshot as `<prefix>.{sent,recv}_{msgs,bytes}`.
+    pub fn export(&self, reg: &mut crate::obs::Registry, prefix: &str) {
+        let (sm, sb, rm, rb) = self.snapshot();
+        reg.add(&format!("{prefix}.sent_msgs"), sm);
+        reg.add(&format!("{prefix}.sent_bytes"), sb);
+        reg.add(&format!("{prefix}.recv_msgs"), rm);
+        reg.add(&format!("{prefix}.recv_bytes"), rb);
+    }
+}
 
 /// A bidirectional message endpoint.
 pub trait Transport: Send {
@@ -25,6 +69,10 @@ pub trait Transport: Send {
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()>;
     /// Blocking receive; `timeout` None = wait forever.
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)>;
+    /// This endpoint's wire meters, when it keeps any.
+    fn meter(&self) -> Option<&TransportMeter> {
+        None
+    }
 }
 
 // ------------------------------------------------------------------ local
@@ -34,6 +82,7 @@ pub struct LocalEndpoint {
     id: usize,
     inbox: Receiver<(usize, Vec<u8>)>,
     peers: HashMap<usize, Sender<(usize, Vec<u8>)>>,
+    meter: TransportMeter,
 }
 
 /// Build a fully-connected local network: returns K+1 endpoints
@@ -57,6 +106,7 @@ pub fn local(k: usize) -> Vec<LocalEndpoint> {
                 .enumerate()
                 .map(|(j, tx)| (j, tx.clone()))
                 .collect(),
+            meter: TransportMeter::default(),
         })
         .collect()
 }
@@ -67,6 +117,7 @@ impl Transport for LocalEndpoint {
     }
 
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
+        self.meter.on_send(msg.len());
         self.peers
             .get(&to)
             .ok_or_else(|| anyhow!("no endpoint {to}"))?
@@ -75,13 +126,19 @@ impl Transport for LocalEndpoint {
     }
 
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
-        match timeout {
+        let got = match timeout {
             None => self.inbox.recv().map_err(|_| anyhow!("all senders hung up")),
             Some(t) => self
                 .inbox
                 .recv_timeout(t)
                 .map_err(|e| anyhow!("recv timeout/disconnect: {e}")),
-        }
+        }?;
+        self.meter.on_recv(got.1.len());
+        Ok(got)
+    }
+
+    fn meter(&self) -> Option<&TransportMeter> {
+        Some(&self.meter)
     }
 }
 
@@ -121,6 +178,7 @@ fn read_frame(stream: &mut TcpStream) -> Result<(usize, Vec<u8>)> {
 pub struct TcpServerEndpoint {
     inbox: Receiver<(usize, Vec<u8>)>,
     outs: HashMap<usize, Arc<Mutex<TcpStream>>>,
+    meter: TransportMeter,
 }
 
 /// A bound-but-not-yet-accepting listener.  Binding and accepting are
@@ -165,7 +223,7 @@ impl TcpListenerHandle {
                 }
             });
         }
-        Ok(TcpServerEndpoint { inbox, outs })
+        Ok(TcpServerEndpoint { inbox, outs, meter: TransportMeter::default() })
     }
 }
 
@@ -183,16 +241,23 @@ impl Transport for TcpServerEndpoint {
     }
 
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
+        self.meter.on_send(msg.len());
         let s = self.outs.get(&to).ok_or_else(|| anyhow!("no worker {to}"))?;
         let mut s = s.lock().map_err(|_| anyhow!("connection to worker {to} poisoned"))?;
         write_frame(&mut s, 0, &msg)
     }
 
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
-        match timeout {
+        let got = match timeout {
             None => self.inbox.recv().map_err(|_| anyhow!("workers hung up")),
             Some(t) => self.inbox.recv_timeout(t).map_err(|e| anyhow!("recv: {e}")),
-        }
+        }?;
+        self.meter.on_recv(got.1.len());
+        Ok(got)
+    }
+
+    fn meter(&self) -> Option<&TransportMeter> {
+        Some(&self.meter)
     }
 }
 
@@ -201,6 +266,7 @@ pub struct TcpWorkerEndpoint {
     id: usize,
     stream: Arc<Mutex<TcpStream>>,
     inbox: Receiver<(usize, Vec<u8>)>,
+    meter: TransportMeter,
 }
 
 impl TcpWorkerEndpoint {
@@ -220,7 +286,12 @@ impl TcpWorkerEndpoint {
                 Err(_) => break,
             }
         });
-        Ok(TcpWorkerEndpoint { id, stream: Arc::new(Mutex::new(stream)), inbox })
+        Ok(TcpWorkerEndpoint {
+            id,
+            stream: Arc::new(Mutex::new(stream)),
+            inbox,
+            meter: TransportMeter::default(),
+        })
     }
 }
 
@@ -231,16 +302,23 @@ impl Transport for TcpWorkerEndpoint {
 
     fn send(&self, to: usize, msg: Vec<u8>) -> Result<()> {
         anyhow::ensure!(to == 0, "workers only talk to the server");
+        self.meter.on_send(msg.len());
         let mut s =
             self.stream.lock().map_err(|_| anyhow!("server connection mutex poisoned"))?;
         write_frame(&mut s, self.id, &msg)
     }
 
     fn recv(&self, timeout: Option<Duration>) -> Result<(usize, Vec<u8>)> {
-        match timeout {
+        let got = match timeout {
             None => self.inbox.recv().map_err(|_| anyhow!("server hung up")),
             Some(t) => self.inbox.recv_timeout(t).map_err(|e| anyhow!("recv: {e}")),
-        }
+        }?;
+        self.meter.on_recv(got.1.len());
+        Ok(got)
+    }
+
+    fn meter(&self) -> Option<&TransportMeter> {
+        Some(&self.meter)
     }
 }
 
@@ -269,6 +347,10 @@ mod tests {
         got.sort_by_key(|(from, _)| *from);
         assert_eq!(got[0].0, 1);
         assert_eq!(got[1].1, b"done 2");
+        // The endpoint meters every frame it moved, both directions.
+        let (sm, sb, rm, rb) = server.meter().unwrap().snapshot();
+        assert_eq!((sm, sb), (2, 20));
+        assert_eq!((rm, rb), (2, 12));
     }
 
     #[test]

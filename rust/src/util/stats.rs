@@ -67,7 +67,10 @@ pub fn summarize(samples: &[f64]) -> Summary {
     let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
         / n.max(2) as f64;
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN samples sort to the top instead of panicking (the
+    // SizeWeighted scheduler precedent) — a poisoned series still
+    // yields a summary, with NaN visible in max/p95.
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
     Summary {
         n,
@@ -139,6 +142,16 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_survives_nan_samples() {
+        // partial_cmp().unwrap() used to panic here; total_cmp sorts
+        // NaN above every finite value.
+        let s = summarize(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
     }
 
     #[test]

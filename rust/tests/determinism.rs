@@ -20,7 +20,7 @@
 //! seed for replay.
 
 use anyhow::Result;
-use parrot::exp::{asyncscale, dynamics, toposcale};
+use parrot::exp::{asyncscale, dynamics, parscale, toposcale};
 
 /// Same contract as the (private) master seed in `util::prop`:
 /// `PARROT_PROP_SEED` as decimal or 0x-hex, default 0xC0FF_EE00.
@@ -124,5 +124,50 @@ fn toposcale_rows_are_thread_invariant() -> Result<()> {
         rows_at.push((t, toposcale::smoke_rows(s, t)?));
     }
     assert_thread_invariant("toposcale", s, &rows_at);
+    Ok(())
+}
+
+/// The trace differential: the rendered Chrome trace-event file of a
+/// grouped (always-sharded) traced cell must be byte-identical for
+/// `--threads` 1, 2 and 8 on one seed.  `smoke_trace` also runs
+/// `chrome::check_well_formed` internally (balanced B/E pairs, per-
+/// track monotone timestamps), so a pass here certifies structure too.
+#[test]
+fn chrome_trace_bytes_are_thread_invariant() -> Result<()> {
+    let s = seed();
+    println!("trace-export 1-vs-2-vs-8-thread differential under PARROT_PROP_SEED={s:#x}");
+    let reference = parscale::smoke_trace(s, 1)?;
+    assert!(
+        reference.starts_with("{\"traceEvents\":["),
+        "trace export is not Chrome trace-event JSON (PARROT_PROP_SEED={s:#x})"
+    );
+    assert!(
+        reference.contains("\"sim.bytes\""),
+        "trace export lost its metrics registry (PARROT_PROP_SEED={s:#x})"
+    );
+    for t in [2usize, 8] {
+        let other = parscale::smoke_trace(s, t)?;
+        assert_eq!(
+            reference, other,
+            "exported trace bytes diverged between --threads 1 and --threads {t} — \
+             the tracer leaked thread-count dependence \
+             (replay with PARROT_PROP_SEED={s:#x})"
+        );
+    }
+    Ok(())
+}
+
+/// Double-run: tracing itself must be a pure function of the seed.
+#[test]
+fn chrome_trace_bytes_are_run_invariant() -> Result<()> {
+    let s = seed();
+    println!("trace-export double-run under PARROT_PROP_SEED={s:#x}");
+    let a = parscale::smoke_trace(s, 2)?;
+    let b = parscale::smoke_trace(s, 2)?;
+    assert_eq!(
+        a, b,
+        "exported trace bytes diverged across two identical runs \
+         (replay with PARROT_PROP_SEED={s:#x})"
+    );
     Ok(())
 }

@@ -135,13 +135,29 @@ if ! PARROT_PROP_SEED="$SEED" cargo test -q --test determinism; then
   exit 1
 fi
 if [ "$FAST" -eq 0 ]; then
-  echo "==> parrot exp parscale --smoke (seed $SEED)"
+  echo "==> parrot exp parscale --smoke --trace (seed $SEED)"
   SMOKE_RESULTS="$(mktemp -d)"
+  TRACE_FILE="$SMOKE_RESULTS/trace.json"
   if ! target/release/parrot exp parscale --smoke \
-      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+      --seed "$SEED" --results "$SMOKE_RESULTS" --trace "$TRACE_FILE"; then
     echo "ci.sh: parscale smoke failure — reproduce with --seed $SEED" >&2
     exit 1
   fi
+  # Observability smoke: the exported Chrome trace must exist, be
+  # non-empty, and open with the trace-event envelope (the determinism
+  # suite above already asserted the bytes are thread-invariant and
+  # well-formed; this checks the --trace plumbing end to end).
+  if [ ! -s "$TRACE_FILE" ]; then
+    echo "ci.sh: --trace produced no/empty file — reproduce with --seed $SEED" >&2
+    exit 1
+  fi
+  case "$(head -c 16 "$TRACE_FILE")" in
+    '{"traceEvents":['*) ;;
+    *)
+      echo "ci.sh: --trace output is not Chrome trace-event JSON — reproduce with --seed $SEED" >&2
+      exit 1
+      ;;
+  esac
   rm -rf "$SMOKE_RESULTS"
 fi
 
