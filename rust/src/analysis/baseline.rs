@@ -48,6 +48,22 @@ impl Baseline {
         Ok(Baseline { entries })
     }
 
+    /// Reject entries naming rules the analyzer doesn't emit — a
+    /// typo'd or removed rule name would otherwise grandfather
+    /// nothing while looking like it does.
+    pub fn validate_rules(&self, known: &[&str]) -> Result<()> {
+        for (rule, file) in self.entries.keys() {
+            if !known.contains(&rule.as_str()) {
+                bail!(
+                    "lint baseline: unknown rule {rule:?} (entry for {file}) — \
+                     known rules: {}",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Render findings back into the committed format (the
     /// `--write-baseline` path).
     pub fn render(findings: &[Finding]) -> String {
@@ -168,6 +184,15 @@ mod tests {
         // stale entry (file now clean) is slack too
         let r = resolve(&[], &base);
         assert_eq!(r.slack, vec![("panicking-decode".into(), "util/codec.rs".into(), 2, 0)]);
+    }
+
+    #[test]
+    fn validate_rules_rejects_unknown_names() {
+        let b = Baseline::parse("panicking-decode util/codec.rs 2\n").unwrap();
+        assert!(b.validate_rules(&["panicking-decode", "unordered-iter"]).is_ok());
+        let err = b.validate_rules(&["unordered-iter"]).unwrap_err().to_string();
+        assert!(err.contains("unknown rule"), "{err}");
+        assert!(err.contains("panicking-decode"), "{err}");
     }
 
     #[test]

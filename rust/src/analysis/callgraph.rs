@@ -1,0 +1,598 @@
+//! Whole-program call graph over the stripped source.
+//!
+//! `parrot lint` v1 was per-file: a strict module calling a `util`
+//! helper that iterates a `HashMap` passed clean.  This module
+//! recovers enough of the call structure — with zero external deps,
+//! over the same stripped text the lexer produces — for the effect
+//! propagation in [`super::effects`] to close that hole.
+//!
+//! Resolution is deliberately conservative and *honest* about its
+//! limits (README "Effect propagation"):
+//!
+//!   * `Type::method(...)` resolves exactly against the crate-wide
+//!     `(impl type, fn name)` index; `Self::m` uses the enclosing
+//!     impl.  A method named on a crate impl type that does not exist
+//!     is reported as unresolved, not ignored.
+//!   * `module::free_fn(...)` resolves when exactly one free fn of
+//!     that name lives in a file whose path mentions the qualifier.
+//!   * bare `free_fn(...)` prefers the same file, then a unique
+//!     crate-wide match.
+//!   * `.method(...)` resolves only when exactly one crate fn of that
+//!     name takes `self` AND the name is not a std-prelude-shaped
+//!     name (`len`, `push`, `iter`, ...) that would mostly bind to
+//!     std types.  Ambiguous receivers are reported as unresolved.
+//!
+//! Unresolved crate-like calls are surfaced as a summary (stderr +
+//! [`CallGraph::unresolved`]), never as rule findings: they mark the
+//! analysis boundary, not violations, so the baseline stays empty.
+//!
+//! Test lines produce no edges and test fns are not call targets:
+//! effect propagation only cares about the shipped binary.
+
+use super::lexer::SourceMap;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One scanned source file: path relative to the source root plus its
+/// lexer analysis.  Loaded once in `analysis::run` and shared by the
+/// token rules, the call graph, and the wire extractor.
+pub struct SourceFile {
+    pub rel: String,
+    pub map: SourceMap,
+}
+
+/// One `fn` item in the whole-program index.
+#[derive(Debug, Clone)]
+pub struct FnNode {
+    pub file_idx: usize,
+    /// Source-root-relative path (duplicated for message rendering).
+    pub file: String,
+    pub name: String,
+    /// Self type of the innermost enclosing `impl`, if any.
+    pub owner: Option<String>,
+    pub start: usize,
+    pub end: usize,
+    pub is_test: bool,
+    pub has_self: bool,
+}
+
+/// A resolved call: `caller` fn invokes `callee` fn at `line`.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    pub caller: usize,
+    pub callee: usize,
+    /// 1-based line in the caller's file.
+    pub line: usize,
+    /// Source text of the call path, e.g. `crate::util::timer::wall_secs`.
+    pub text: String,
+}
+
+/// A call that looks crate-local but could not be pinned to one fn.
+#[derive(Debug, Clone)]
+pub struct Unresolved {
+    pub file: String,
+    pub line: usize,
+    pub call: String,
+    pub reason: &'static str,
+}
+
+pub struct CallGraph {
+    pub fns: Vec<FnNode>,
+    pub calls: Vec<CallSite>,
+    pub unresolved: Vec<Unresolved>,
+    /// Per file: 0-based line -> innermost enclosing fn id.
+    pub line_fn: Vec<Vec<Option<usize>>>,
+}
+
+/// Method names shaped like std-prelude/container API: a `.name(` of
+/// one of these overwhelmingly binds to std types, so treating the
+/// lone crate fn of the same name as the target would fabricate
+/// edges.  These are skipped silently (documented policy), everything
+/// else ambiguous is *reported*.
+const METHOD_BLOCKLIST: &[&str] = &[
+    "abs", "all", "any", "as_bytes", "as_str", "borrow", "borrow_mut", "ceil", "chain", "clear",
+    "clone", "cloned", "cmp", "collect", "contains", "contains_key", "copied", "count", "drain",
+    "entry", "enumerate", "eq", "expect", "extend", "filter", "filter_map", "find", "first",
+    "flat_map", "flatten", "floor", "flush", "fmt", "fold", "from", "get", "get_mut", "get_or",
+    "hash", "index", "insert", "into_iter", "is_empty", "is_some", "is_none", "iter", "iter_mut",
+    "join", "keys", "last", "len", "load", "lock", "map", "max", "mean", "min", "name", "new",
+    "next", "parse", "pop", "position", "powf", "push", "read", "recv", "resize", "retain", "rev",
+    "round", "run", "send", "snapshot", "sort", "sort_by", "sort_by_key", "split", "sqrt",
+    "start", "finish", "store", "sum", "swap", "take", "to_string", "to_vec", "unwrap",
+    "unwrap_or", "values", "write", "zip",
+];
+
+/// Idents that read like calls but are control flow / binding syntax.
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "super", "trait", "type", "union", "unsafe", "use", "where",
+    "while",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+/// One syntactic call candidate on a line: the `::`-separated path and
+/// whether it was written as a `.method(` receiver call.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) struct CallCand {
+    pub segs: Vec<String>,
+    pub dotted: bool,
+    /// `.method(` specifically on a literal `self.` receiver.
+    pub recv_self: bool,
+}
+
+/// Extract call candidates from one stripped line.  Macros (`name!`)
+/// and `fn` definitions are skipped; turbofish (`::<T>`) is skipped
+/// inside paths.
+pub(crate) fn scan_calls(line: &str) -> Vec<CallCand> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut prev_word = String::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if !is_ident_start(b[i]) || (i > 0 && is_ident(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < b.len() && is_ident(b[i]) {
+            i += 1;
+        }
+        let mut segs = vec![line[start..i].to_string()];
+        loop {
+            if i + 1 < b.len() && b[i] == b':' && b[i + 1] == b':' {
+                let j = i + 2;
+                if j < b.len() && b[j] == b'<' {
+                    // turbofish: skip the balanced angle group
+                    let mut depth = 1usize;
+                    let mut k = j + 1;
+                    while k < b.len() && depth > 0 {
+                        match b[k] {
+                            b'<' => depth += 1,
+                            b'>' => depth -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    i = k;
+                    continue;
+                }
+                if j < b.len() && is_ident_start(b[j]) {
+                    let mut k = j;
+                    while k < b.len() && is_ident(b[k]) {
+                        k += 1;
+                    }
+                    segs.push(line[j..k].to_string());
+                    i = k;
+                    continue;
+                }
+            }
+            break;
+        }
+        let dotted = start > 0 && b[start - 1] == b'.';
+        let recv_self = dotted && start >= 5 && &line[start - 5..start] == "self.";
+        let mut k = i;
+        while k < b.len() && b[k] == b' ' {
+            k += 1;
+        }
+        let is_macro = k < b.len() && b[k] == b'!';
+        let is_call = k < b.len() && b[k] == b'(';
+        let this_word = segs.last().cloned().unwrap_or_default();
+        if is_call && !is_macro && prev_word != "fn" {
+            out.push(CallCand { segs, dotted, recv_self });
+        }
+        prev_word = this_word;
+    }
+    out
+}
+
+/// Directory components + file stem of a root-relative path:
+/// `util/timer.rs` -> `["util", "timer"]`.
+fn path_components(rel: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for (i, part) in rel.split('/').enumerate() {
+        let is_last = i + 1 == rel.split('/').count();
+        let p = if is_last { part.strip_suffix(".rs").unwrap_or(part) } else { part };
+        if !p.is_empty() {
+            out.push(p.to_string());
+        }
+    }
+    out
+}
+
+/// Join enough leading lines of a fn span to cover its signature, and
+/// report whether the first parameter group starts with `self`.
+fn signature_has_self(map: &SourceMap, start: usize, end: usize) -> bool {
+    let last = end.min(start + 9).min(map.lines.len());
+    let sig: String = map.lines[start - 1..last].join(" ");
+    let Some(open) = sig.find('(') else { return false };
+    let rest = &sig[open + 1..];
+    let stop = rest.find(&[',', ')'][..]).unwrap_or(rest.len());
+    let first = rest[..stop].trim().trim_start_matches('&');
+    let first = first.trim_start_matches("mut ").trim();
+    // `'a self` / `self` / `mut self` / `self: ...`
+    first == "self" || first.starts_with("self:") || first.ends_with(" self")
+}
+
+impl CallGraph {
+    pub fn build(files: &[SourceFile]) -> CallGraph {
+        // 1. fn index with owners and innermost-span line attribution.
+        let mut fns: Vec<FnNode> = Vec::new();
+        let mut line_fn: Vec<Vec<Option<usize>>> = Vec::new();
+        for (file_idx, sf) in files.iter().enumerate() {
+            let map = &sf.map;
+            let mut per_line: Vec<Option<usize>> = vec![None; map.lines.len()];
+            let mut span_len: Vec<usize> = vec![usize::MAX; map.lines.len()];
+            for f in &map.fns {
+                let owner = map
+                    .impls
+                    .iter()
+                    .filter(|im| im.start <= f.start && f.start <= im.end)
+                    .min_by_key(|im| im.end - im.start)
+                    .map(|im| im.type_name.clone());
+                let id = fns.len();
+                fns.push(FnNode {
+                    file_idx,
+                    file: sf.rel.clone(),
+                    name: f.name.clone(),
+                    owner,
+                    start: f.start,
+                    end: f.end,
+                    is_test: map.line_is_test(f.start),
+                    has_self: signature_has_self(map, f.start, f.end),
+                });
+                let len = f.end - f.start;
+                for l in f.start..=f.end.min(map.lines.len()) {
+                    if len < span_len[l - 1] {
+                        span_len[l - 1] = len;
+                        per_line[l - 1] = Some(id);
+                    }
+                }
+            }
+            line_fn.push(per_line);
+        }
+
+        // 2. lookup indexes over non-test fns.
+        let mut typed: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+        let mut free: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut impl_types: BTreeSet<String> = BTreeSet::new();
+        for sf in files {
+            for im in &sf.map.impls {
+                impl_types.insert(im.type_name.clone());
+            }
+        }
+        let mut module_names: BTreeSet<String> = BTreeSet::new();
+        for sf in files {
+            for c in path_components(&sf.rel) {
+                module_names.insert(c);
+            }
+        }
+        for (id, f) in fns.iter().enumerate() {
+            if f.is_test {
+                continue;
+            }
+            match &f.owner {
+                Some(o) => {
+                    typed.entry((o.clone(), f.name.clone())).or_default().push(id);
+                }
+                None => {
+                    free.entry(f.name.clone()).or_default().push(id);
+                }
+            }
+            if f.has_self {
+                methods.entry(f.name.clone()).or_default().push(id);
+            }
+        }
+
+        // 3. scan non-test lines and resolve.
+        let mut calls: Vec<CallSite> = Vec::new();
+        let mut unresolved: Vec<Unresolved> = Vec::new();
+        for (file_idx, sf) in files.iter().enumerate() {
+            let map = &sf.map;
+            for (i, line) in map.lines.iter().enumerate() {
+                let ln = i + 1;
+                if map.line_is_test(ln) {
+                    continue;
+                }
+                let Some(caller) = line_fn[file_idx][i] else { continue };
+                if fns[caller].is_test {
+                    continue;
+                }
+                for cand in scan_calls(line) {
+                    resolve(
+                        &cand, caller, file_idx, ln, &fns, &typed, &free, &methods, &impl_types,
+                        &module_names, files, &mut calls, &mut unresolved,
+                    );
+                }
+            }
+        }
+        CallGraph { fns, calls, unresolved, line_fn }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn resolve(
+    cand: &CallCand,
+    caller: usize,
+    file_idx: usize,
+    line: usize,
+    fns: &[FnNode],
+    typed: &BTreeMap<(String, String), Vec<usize>>,
+    free: &BTreeMap<String, Vec<usize>>,
+    methods: &BTreeMap<String, Vec<usize>>,
+    impl_types: &BTreeSet<String>,
+    module_names: &BTreeSet<String>,
+    files: &[SourceFile],
+    calls: &mut Vec<CallSite>,
+    unresolved: &mut Vec<Unresolved>,
+) {
+    let name = cand.segs.last().expect("candidate has a segment").clone();
+    // Uppercase-initial last segment: tuple-struct / enum-variant
+    // constructor (`Some(`, `Slot::Collected(`) — not a fn call.
+    if name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        return;
+    }
+    let text = if cand.dotted && cand.segs.len() == 1 {
+        format!(".{name}")
+    } else {
+        cand.segs.join("::")
+    };
+    let file = files[file_idx].rel.clone();
+    fn push_edges(
+        ids: &[usize],
+        caller: usize,
+        line: usize,
+        text: &str,
+        calls: &mut Vec<CallSite>,
+    ) {
+        for &id in ids {
+            calls.push(CallSite { caller, callee: id, line, text: text.to_string() });
+        }
+    }
+
+    if cand.segs.len() == 1 && cand.dotted {
+        // `.method(` — receiver type unknown.  A literal `self.`
+        // receiver resolves exactly through the enclosing impl.
+        if cand.recv_self {
+            if let Some(owner) = fns[caller].owner.clone() {
+                if let Some(ids) = typed.get(&(owner, name.clone())) {
+                    push_edges(ids, caller, line, &text, calls);
+                    return;
+                }
+            }
+        }
+        if METHOD_BLOCKLIST.contains(&name.as_str()) {
+            return;
+        }
+        match methods.get(&name).map(|v| v.as_slice()).unwrap_or(&[]) {
+            [] => {}
+            [one] => push_edges(&[*one], caller, line, &text, calls),
+            _ => unresolved.push(Unresolved {
+                file,
+                line,
+                call: text,
+                reason: "method name defined on several crate types; receiver unknown",
+            }),
+        }
+        return;
+    }
+
+    if cand.segs.len() == 1 {
+        // bare `free_fn(` — same file first, then unique crate-wide.
+        if KEYWORDS.contains(&name.as_str()) || name == "self" {
+            return;
+        }
+        let all = free.get(&name).map(|v| v.as_slice()).unwrap_or(&[]);
+        let same: Vec<usize> =
+            all.iter().copied().filter(|&id| fns[id].file_idx == file_idx).collect();
+        if !same.is_empty() {
+            push_edges(&same, caller, line, &text, calls);
+            return;
+        }
+        match all {
+            [] => {}
+            [one] => push_edges(&[*one], caller, line, &text, calls),
+            _ => unresolved.push(Unresolved {
+                file,
+                line,
+                call: text,
+                reason: "free fn name defined in several modules; no qualifier",
+            }),
+        }
+        return;
+    }
+
+    let qual = cand.segs[cand.segs.len() - 2].clone();
+    if qual == "Self" || qual.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        // `Type::method(` / `Self::method(`
+        let owner = if qual == "Self" { fns[caller].owner.clone() } else { Some(qual.clone()) };
+        let Some(owner) = owner else { return };
+        if let Some(ids) = typed.get(&(owner.clone(), name.clone())) {
+            push_edges(ids, caller, line, &text, calls);
+        } else if impl_types.contains(&owner) {
+            unresolved.push(Unresolved {
+                file,
+                line,
+                call: text,
+                reason: "no such method on this crate impl type (trait/derive method?)",
+            });
+        }
+        return;
+    }
+
+    // `module::free_fn(` — match the qualifier against path components.
+    let all = free.get(&name).map(|v| v.as_slice()).unwrap_or(&[]);
+    let by_module: Vec<usize> = if ["crate", "self", "super"].contains(&qual.as_str()) {
+        all.to_vec()
+    } else {
+        all.iter()
+            .copied()
+            .filter(|&id| path_components(&fns[id].file).iter().any(|c| *c == qual))
+            .collect()
+    };
+    match by_module.as_slice() {
+        [one] => push_edges(&[*one], caller, line, &text, calls),
+        [] => {
+            let crate_like = cand
+                .segs
+                .iter()
+                .any(|s| ["crate", "self", "super"].contains(&s.as_str()) || module_names.contains(s));
+            if crate_like {
+                unresolved.push(Unresolved {
+                    file,
+                    line,
+                    call: text,
+                    reason: "crate-flavored path does not resolve to a known free fn",
+                });
+            }
+        }
+        _ => unresolved.push(Unresolved {
+            file,
+            line,
+            call: text,
+            reason: "qualifier matches several free fns",
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::analyze_source;
+    use super::*;
+
+    fn sf(rel: &str, src: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), map: analyze_source(src) }
+    }
+
+    fn find_fn<'a>(cg: &'a CallGraph, name: &str) -> &'a FnNode {
+        cg.fns.iter().find(|f| f.name == name).unwrap()
+    }
+
+    fn edges<'a>(cg: &'a CallGraph, caller: &str) -> Vec<&'a str> {
+        let cid =
+            cg.fns.iter().position(|f| f.name == caller).expect("caller indexed");
+        cg.calls
+            .iter()
+            .filter(|c| c.caller == cid)
+            .map(|c| cg.fns[c.callee].name.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn scan_finds_paths_methods_and_skips_macros() {
+        let cands = scan_calls("    let x = crate::util::timer::wall_secs() + helper(y);");
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].segs, vec!["crate", "util", "timer", "wall_secs"]);
+        assert!(!cands[0].dotted);
+        assert_eq!(cands[1].segs, vec!["helper"]);
+        assert!(scan_calls("    bail!(\"nope\"); format!(\"x\");").is_empty());
+        let dotted = scan_calls("    let n = xs.iter().sum::<f64>();");
+        assert!(dotted.iter().all(|c| c.dotted));
+        assert_eq!(dotted[1].segs, vec!["sum"], "turbofish skipped: {dotted:?}");
+    }
+
+    #[test]
+    fn fn_definitions_are_not_call_sites() {
+        assert!(scan_calls("pub fn schedule_from(devices: &[u64]) -> Plan {").is_empty());
+        assert!(scan_calls("    fn decl(&self) -> usize;").is_empty());
+    }
+
+    #[test]
+    fn typed_and_module_calls_resolve_exactly() {
+        let files = vec![
+            sf(
+                "util/timer.rs",
+                "pub struct Stopwatch;\nimpl Stopwatch {\n    pub fn start() -> Self { Stopwatch }\n}\npub fn wall_secs() -> f64 { 0.0 }\n",
+            ),
+            sf(
+                "scheduler/mod.rs",
+                "pub fn plan() {\n    let sw = crate::util::timer::Stopwatch::start();\n    let t = crate::util::timer::wall_secs();\n}\n",
+            ),
+        ];
+        let cg = CallGraph::build(&files);
+        assert_eq!(edges(&cg, "plan"), vec!["start", "wall_secs"]);
+        assert!(cg.unresolved.is_empty(), "{:?}", cg.unresolved);
+        assert_eq!(find_fn(&cg, "start").owner.as_deref(), Some("Stopwatch"));
+        assert!(!find_fn(&cg, "start").has_self);
+    }
+
+    #[test]
+    fn bare_calls_prefer_same_file_then_unique_global() {
+        let files = vec![
+            sf("a/mod.rs", "fn helper() {}\npub fn go() { helper(); solo(); }\n"),
+            sf("b/mod.rs", "fn helper() {}\npub fn solo() {}\n"),
+        ];
+        let cg = CallGraph::build(&files);
+        let e = edges(&cg, "go");
+        assert_eq!(e, vec!["helper", "solo"]);
+        let helper_edge = &cg.calls[0];
+        assert_eq!(cg.fns[helper_edge.callee].file, "a/mod.rs", "same-file fn wins");
+    }
+
+    #[test]
+    fn ambiguous_dot_methods_are_reported_not_linked() {
+        let files = vec![
+            sf("a/mod.rs", "pub struct A;\nimpl A {\n    pub fn touch(&self) {}\n}\n"),
+            sf("b/mod.rs", "pub struct B;\nimpl B {\n    pub fn touch(&self) {}\n}\n"),
+            sf("c/mod.rs", "pub fn go(x: &X) {\n    x.touch();\n}\n"),
+        ];
+        let cg = CallGraph::build(&files);
+        assert!(cg.calls.is_empty());
+        assert_eq!(cg.unresolved.len(), 1);
+        assert_eq!(cg.unresolved[0].call, ".touch");
+    }
+
+    #[test]
+    fn unique_dot_method_links_unless_blocklisted() {
+        let files = vec![
+            sf("a/mod.rs", "pub struct A;\nimpl A {\n    pub fn touch(&self) {}\n    pub fn len(&self) -> usize { 0 }\n}\n"),
+            sf("c/mod.rs", "pub fn go(x: &A) {\n    x.touch();\n    x.len();\n}\n"),
+        ];
+        let cg = CallGraph::build(&files);
+        assert_eq!(edges(&cg, "go"), vec!["touch"], "`.len(` is prelude-shaped, skipped");
+        assert!(cg.unresolved.is_empty());
+    }
+
+    #[test]
+    fn self_methods_resolve_through_the_enclosing_impl() {
+        let files = vec![sf(
+            "a/mod.rs",
+            "pub struct A;\nimpl A {\n    pub fn inner(&self) {}\n    pub fn outer(&self) { self.inner(); }\n}\npub struct B;\nimpl B {\n    pub fn inner(&self) {}\n}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        let outer = cg.fns.iter().position(|f| f.name == "outer").unwrap();
+        let call = cg.calls.iter().find(|c| c.caller == outer).unwrap();
+        assert_eq!(cg.fns[call.callee].owner.as_deref(), Some("A"));
+        assert!(cg.unresolved.is_empty(), "self. resolves despite two `inner`s");
+    }
+
+    #[test]
+    fn unknown_method_on_crate_type_is_reported() {
+        let files = vec![
+            sf("a/mod.rs", "pub struct A;\nimpl A {\n    pub fn real(&self) {}\n}\n"),
+            sf("c/mod.rs", "pub fn go() {\n    A::imagined();\n    String::from_utf8(v);\n}\n"),
+        ];
+        let cg = CallGraph::build(&files);
+        assert_eq!(cg.unresolved.len(), 1, "{:?}", cg.unresolved);
+        assert_eq!(cg.unresolved[0].call, "A::imagined");
+    }
+
+    #[test]
+    fn test_code_neither_calls_nor_is_called() {
+        let files = vec![sf(
+            "a/mod.rs",
+            "pub fn live() { helper(); }\nfn helper() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n    #[test]\n    fn t() { super::live(); helper(); }\n}\n",
+        )];
+        let cg = CallGraph::build(&files);
+        assert_eq!(cg.calls.len(), 1);
+        assert_eq!(cg.fns[cg.calls[0].callee].name, "helper");
+        assert!(!cg.fns[cg.calls[0].callee].is_test);
+    }
+}

@@ -1,0 +1,314 @@
+//! Per-fn effect summaries and their fixpoint over the call graph.
+//!
+//! Seeds come from the same token patterns as the per-file rules
+//! (holds-Hash*, ambient-entropy, panicking, float-fold), attributed
+//! to the innermost enclosing fn.  A reverse BFS per effect bit then
+//! closes them over [`super::callgraph`]: a fn *has* an effect if any
+//! resolvable callee has it.  Unresolved calls contribute nothing —
+//! they are reported separately (conservative-unknown), so a missing
+//! edge can hide an effect but never fabricate one.
+//!
+//! The three transitive rules fire on the *call edge* that crosses
+//! the policy boundary — the strict module's call into effectful
+//! non-strict code (or the decode path's call into panicking
+//! non-decode code) — with the witness chain down to the seed line in
+//! the message.  Edges between two strict files are not re-flagged:
+//! the seed itself is already a direct finding there.
+
+use super::callgraph::{CallGraph, SourceFile};
+use super::rules::{self, Finding};
+
+pub const HOLDS_HASH: u8 = 1 << 0;
+pub const AMBIENT_ENTROPY: u8 = 1 << 1;
+pub const PANICKING: u8 = 1 << 2;
+pub const FLOAT_FOLD: u8 = 1 << 3;
+
+const BITS: [u8; 4] = [HOLDS_HASH, AMBIENT_ENTROPY, PANICKING, FLOAT_FOLD];
+
+fn bit_index(bit: u8) -> usize {
+    BITS.iter().position(|&b| b == bit).expect("known effect bit")
+}
+
+pub struct Effects {
+    /// Directly seeded bits per fn.
+    pub seeds: Vec<u8>,
+    /// Seeds closed over the call graph.
+    pub closure: Vec<u8>,
+    /// First line that seeded each bit, per fn.
+    seed_line: Vec<[Option<usize>; 4]>,
+    /// For a propagated bit: the call (index into `cg.calls`) one hop
+    /// toward the seed — enough to reconstruct the whole chain.
+    witness: Vec<[Option<usize>; 4]>,
+}
+
+fn line_seeds(line: &str) -> u8 {
+    let mut bits = 0u8;
+    if rules::word_in(line, "HashMap") || rules::word_in(line, "HashSet") {
+        bits |= HOLDS_HASH;
+    }
+    if rules::ENTROPY_PATTERNS.iter().any(|p| line.contains(p)) {
+        bits |= AMBIENT_ENTROPY;
+    }
+    if rules::PANIC_PATTERNS.iter().any(|p| line.contains(p)) {
+        bits |= PANICKING;
+    }
+    if rules::FLOAT_ACCUM_PATTERNS.iter().any(|p| line.contains(p)) {
+        bits |= FLOAT_FOLD;
+    }
+    bits
+}
+
+/// Seed effect bits from non-test lines and propagate to a fixpoint.
+pub fn compute(cg: &CallGraph, files: &[SourceFile]) -> Effects {
+    let n = cg.fns.len();
+    let mut seeds = vec![0u8; n];
+    let mut seed_line = vec![[None; 4]; n];
+    for (file_idx, sf) in files.iter().enumerate() {
+        for (i, line) in sf.map.lines.iter().enumerate() {
+            let ln = i + 1;
+            if sf.map.line_is_test(ln) {
+                continue;
+            }
+            let Some(fid) = cg.line_fn[file_idx][i] else { continue };
+            let bits = line_seeds(line);
+            if bits == 0 {
+                continue;
+            }
+            seeds[fid] |= bits;
+            for (bi, &bit) in BITS.iter().enumerate() {
+                if bits & bit != 0 && seed_line[fid][bi].is_none() {
+                    seed_line[fid][bi] = Some(ln);
+                }
+            }
+        }
+    }
+
+    // Reverse adjacency: callee -> call indexes targeting it.
+    let mut rev: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (ci, c) in cg.calls.iter().enumerate() {
+        rev[c.callee].push(ci);
+    }
+
+    let mut closure = seeds.clone();
+    let mut witness = vec![[None; 4]; n];
+    for (bi, &bit) in BITS.iter().enumerate() {
+        let mut queue: Vec<usize> =
+            (0..n).filter(|&f| seeds[f] & bit != 0).collect();
+        while let Some(f) = queue.pop() {
+            for &ci in &rev[f] {
+                let caller = cg.calls[ci].caller;
+                if closure[caller] & bit == 0 {
+                    closure[caller] |= bit;
+                    witness[caller][bi] = Some(ci);
+                    queue.push(caller);
+                }
+            }
+        }
+    }
+    Effects { seeds, closure, seed_line, witness }
+}
+
+impl Effects {
+    /// Human-readable chain from the call at `site_ci` down to the
+    /// seed of `bit`: `` `call` -> `call` -> seeded in `fn` (file:line) ``.
+    pub fn chain(&self, cg: &CallGraph, site_ci: usize, bit: u8) -> String {
+        let bi = bit_index(bit);
+        let mut parts = vec![format!("`{}`", cg.calls[site_ci].text)];
+        let mut cur = cg.calls[site_ci].callee;
+        let mut hops = 0;
+        while self.seeds[cur] & bit == 0 && hops < 64 {
+            let Some(ci) = self.witness[cur][bi] else { break };
+            parts.push(format!("`{}`", cg.calls[ci].text));
+            cur = cg.calls[ci].callee;
+            hops += 1;
+        }
+        let f = &cg.fns[cur];
+        let ln = self.seed_line[cur][bi].unwrap_or(f.start);
+        parts.push(format!("seeded in `{}` ({}:{})", f.name, f.file, ln));
+        parts.join(" -> ")
+    }
+}
+
+/// The three interprocedural rules.  Each fires on the boundary edge:
+/// the callee carries the effect in its closure AND sits outside the
+/// caller's policy scope (so the caller's own direct rules are blind
+/// to it).
+pub fn transitive_findings(
+    cg: &CallGraph,
+    fx: &Effects,
+    files: &[SourceFile],
+) -> Vec<Finding> {
+    let decode_scope: Vec<Vec<bool>> =
+        files.iter().map(|sf| rules::decode_scope(&sf.map)).collect();
+    let fn_in_decode_scope = |fid: usize| -> bool {
+        let f = &cg.fns[fid];
+        decode_scope[f.file_idx]
+            .get(f.start - 1)
+            .copied()
+            .unwrap_or(false)
+    };
+
+    let mut out = Vec::new();
+    for (ci, c) in cg.calls.iter().enumerate() {
+        let caller = &cg.fns[c.caller];
+        let callee = &cg.fns[c.callee];
+        if caller.is_test {
+            continue;
+        }
+        let caller_strict = rules::STRICT_MODULES.contains(&rules::top_module(&caller.file));
+        let callee_strict = rules::STRICT_MODULES.contains(&rules::top_module(&callee.file));
+
+        if caller_strict && !callee_strict && fx.closure[c.callee] & HOLDS_HASH != 0 {
+            out.push(Finding {
+                rule: "unordered-iter-transitive",
+                file: caller.file.clone(),
+                line: c.line,
+                message: format!(
+                    "call from determinism-critical module `{}` reaches a Hash* \
+                     container: {} — Hash* iteration order can leak into event/merge \
+                     order through this helper; use an ordered view (BTreeMap/sorted \
+                     snapshot) in the callee or keep the call out of the engine",
+                    rules::top_module(&caller.file),
+                    fx.chain(cg, ci, HOLDS_HASH),
+                ),
+            });
+        }
+        if caller_strict && !callee_strict && fx.closure[c.callee] & AMBIENT_ENTROPY != 0 {
+            out.push(Finding {
+                rule: "ambient-entropy-transitive",
+                file: caller.file.clone(),
+                line: c.line,
+                message: format!(
+                    "call from determinism-critical module `{}` reaches ambient \
+                     entropy: {} — wallclock/OS entropy must be injected by the \
+                     caller that consumes it (fn-pointer clock), not read beneath \
+                     the engine",
+                    rules::top_module(&caller.file),
+                    fx.chain(cg, ci, AMBIENT_ENTROPY),
+                ),
+            });
+        }
+        let line_in_decode =
+            decode_scope[caller.file_idx].get(c.line - 1).copied().unwrap_or(false);
+        if line_in_decode
+            && !fn_in_decode_scope(c.callee)
+            && fx.closure[c.callee] & PANICKING != 0
+        {
+            out.push(Finding {
+                rule: "panicking-decode-transitive",
+                file: caller.file.clone(),
+                line: c.line,
+                message: format!(
+                    "decode path calls a helper that can panic: {} — wire input is \
+                     untrusted, so a hostile frame must surface as Err from the \
+                     helper too, not a panic",
+                    fx.chain(cg, ci, PANICKING),
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::callgraph::CallGraph;
+    use super::super::lexer::analyze_source;
+    use super::*;
+
+    fn sf(rel: &str, src: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), map: analyze_source(src) }
+    }
+
+    fn build(files: Vec<SourceFile>) -> (CallGraph, Effects, Vec<Finding>, Vec<SourceFile>) {
+        let cg = CallGraph::build(&files);
+        let fx = compute(&cg, &files);
+        let findings = transitive_findings(&cg, &fx, &files);
+        (cg, fx, findings, files)
+    }
+
+    #[test]
+    fn entropy_propagates_through_two_hops_with_chain() {
+        let (cg, fx, findings, _files) = build(vec![
+            sf(
+                "util/timer.rs",
+                "pub fn wall_secs() -> f64 {\n    let t = std::time::Instant::now();\n    0.0\n}\n",
+            ),
+            sf("util/helpers.rs", "pub fn stamp() -> f64 {\n    crate::util::timer::wall_secs()\n}\n"),
+            sf(
+                "simulation/mod.rs",
+                "pub fn round_started_at() -> f64 {\n    crate::util::helpers::stamp()\n}\n",
+            ),
+        ]);
+        let stamp = cg.fns.iter().position(|f| f.name == "stamp").unwrap();
+        assert_eq!(fx.seeds[stamp], 0);
+        assert_eq!(fx.closure[stamp] & AMBIENT_ENTROPY, AMBIENT_ENTROPY);
+        let hits: Vec<_> =
+            findings.iter().filter(|f| f.rule == "ambient-entropy-transitive").collect();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].file, "simulation/mod.rs");
+        assert_eq!(hits[0].line, 2);
+        assert!(hits[0].message.contains("`crate::util::helpers::stamp`"), "{}", hits[0].message);
+        assert!(hits[0].message.contains("`crate::util::timer::wall_secs`"));
+        assert!(hits[0].message.contains("(util/timer.rs:2)"));
+    }
+
+    #[test]
+    fn hash_closure_flags_strict_caller_only_at_the_boundary() {
+        let (_cg, _fx, findings, _files) = build(vec![
+            sf(
+                "util/helpers.rs",
+                "use std::collections::HashMap;\npub fn tally() -> u64 {\n    let m: HashMap<u64, u64> = HashMap::new();\n    0\n}\n",
+            ),
+            sf("simulation/mod.rs", "pub fn cost() -> u64 {\n    crate::util::helpers::tally()\n}\n"),
+            sf("exp/mod.rs", "pub fn report() -> u64 {\n    crate::util::helpers::tally()\n}\n"),
+        ]);
+        let hits: Vec<_> =
+            findings.iter().filter(|f| f.rule == "unordered-iter-transitive").collect();
+        assert_eq!(hits.len(), 1, "non-strict exp caller must not be flagged: {hits:?}");
+        assert_eq!(hits[0].file, "simulation/mod.rs");
+    }
+
+    #[test]
+    fn strict_to_strict_edges_are_not_reflagged() {
+        // The Hash* seed inside a strict module is already a direct
+        // `unordered-iter` finding; the transitive rule only reports
+        // boundary crossings into non-strict code.
+        let (_cg, _fx, findings, _files) = build(vec![
+            sf(
+                "scheduler/history.rs",
+                "pub fn lookup() -> u64 {\n    let m: std::collections::HashMap<u64, u64> = Default::default();\n    0\n}\n",
+            ),
+            sf(
+                "scheduler/mod.rs",
+                "pub fn plan() -> u64 {\n    crate::scheduler::history::lookup()\n}\n",
+            ),
+        ]);
+        assert!(findings.iter().all(|f| f.rule != "unordered-iter-transitive"), "{findings:?}");
+    }
+
+    #[test]
+    fn panicking_helper_flagged_from_decode_scope_only() {
+        let (_cg, _fx, findings, _files) = build(vec![sf(
+            "compress/mod.rs",
+            "fn halt(msg: &str) -> ! {\n    panic!(\"{msg}\")\n}\nfn check_tag(b: u8) {\n    halt(\"bad\");\n}\npub fn decode_guarded(dec: &mut Decoder) -> u8 {\n    check_tag(0);\n    0\n}\npub fn encode_guarded(enc: &mut Encoder) {\n    check_tag(0);\n}\n",
+        )]);
+        let hits: Vec<_> =
+            findings.iter().filter(|f| f.rule == "panicking-decode-transitive").collect();
+        assert_eq!(hits.len(), 1, "{findings:?}");
+        assert_eq!(hits[0].line, 8, "only the decode-path call is flagged");
+        assert!(hits[0].message.contains("`check_tag`"));
+        assert!(hits[0].message.contains("`halt`"));
+    }
+
+    #[test]
+    fn calls_between_decode_fns_are_exempt() {
+        let (_cg, _fx, findings, _files) = build(vec![sf(
+            "coordinator/messages.rs",
+            "pub fn decode_inner(dec: &mut Decoder) -> u8 {\n    dec_next().unwrap()\n}\nfn dec_next() -> Option<u8> { None }\npub fn decode_outer(dec: &mut Decoder) -> u8 {\n    decode_inner(dec)\n}\n",
+        )]);
+        // decode_inner's own unwrap is the *direct* rule's business;
+        // decode_outer -> decode_inner stays unflagged here.
+        assert!(findings.iter().all(|f| f.rule != "panicking-decode-transitive"), "{findings:?}");
+    }
+}

@@ -430,4 +430,78 @@ fn free_standing() {
         assert!(m.fns.iter().all(|f| f.name != "decl"));
         assert!(m.fns.iter().any(|f| f.name == "with_default"));
     }
+
+    #[test]
+    fn multi_hash_raw_strings_blank_embedded_terminators() {
+        // `"#` inside an r##"…"## literal is NOT a terminator; the
+        // call-site extractor depends on the brace after it surviving.
+        let src = "let r = r##\"end\"# not yet HashMap\"##; fn after() { x }\n";
+        let out = strip(src);
+        assert!(!out.contains("HashMap"), "{out}");
+        assert!(!out.contains("not yet"), "{out}");
+        assert!(out.contains("fn after() { x }"), "{out}");
+        assert_eq!(out.len(), src.len());
+        let m = analyze_source(src);
+        assert!(m.fns.iter().any(|f| f.name == "after"));
+    }
+
+    #[test]
+    fn byte_strings_and_raw_byte_strings_are_blanked() {
+        let src = "let a = b\"HashMap\\\"still\"; let b = br#\"thread_rng \"q\" tail\"#; fn f() {}\n";
+        let out = strip(src);
+        assert!(!out.contains("HashMap"), "{out}");
+        assert!(!out.contains("still"), "{out}");
+        assert!(!out.contains("thread_rng"), "{out}");
+        assert!(!out.contains("tail"), "{out}");
+        assert_eq!(out.len(), src.len());
+        assert!(analyze_source(src).fns.iter().any(|f| f.name == "f"));
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_swallow_following_code() {
+        // '\'' and b'\\' both end at their real closing quote; the
+        // worst failure mode is treating the escape's quote as the
+        // terminator and blanking real code after it.
+        let src = "let q = '\\''; let s = b'\\\\'; let n = '\\n'; fn g() { HashMap }\n";
+        let out = strip(src);
+        assert!(out.contains("fn g() { HashMap }"), "{out}");
+        assert_eq!(out.len(), src.len());
+        let m = analyze_source(src);
+        let g = m.fns.iter().find(|f| f.name == "g").expect("fn g survives char literals");
+        assert_eq!((g.start, g.end), (1, 1));
+    }
+
+    #[test]
+    fn fn_spans_inside_nested_impl_and_mod_blocks() {
+        let src = "\
+mod outer {
+    pub mod inner {
+        impl Wrapper {
+            pub fn method(&self) -> usize {
+                helper()
+            }
+        }
+        pub fn helper() -> usize {
+            0
+        }
+    }
+}
+";
+        let m = analyze_source(src);
+        let meth = m.fns.iter().find(|f| f.name == "method").unwrap();
+        assert_eq!((meth.start, meth.end), (4, 6));
+        let help = m.fns.iter().find(|f| f.name == "helper").unwrap();
+        assert_eq!((help.start, help.end), (8, 10));
+        let im = m.impls.iter().find(|i| i.type_name == "Wrapper").unwrap();
+        assert_eq!((im.start, im.end), (3, 7));
+        // the nested-fn case the call graph leans on: a fn inside a fn
+        // gets its own (inner) span so line->fn attribution can pick
+        // the innermost one.
+        let src2 = "fn outer_fn() {\n    fn inner_fn() {\n        1;\n    }\n    inner_fn();\n}\n";
+        let m2 = analyze_source(src2);
+        let o = m2.fns.iter().find(|f| f.name == "outer_fn").unwrap();
+        let i = m2.fns.iter().find(|f| f.name == "inner_fn").unwrap();
+        assert_eq!((o.start, o.end), (1, 6));
+        assert_eq!((i.start, i.end), (2, 4));
+    }
 }

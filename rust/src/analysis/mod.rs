@@ -10,7 +10,14 @@
 //!   * [`lexer`] — comment/string-stripping scanner over
 //!     `rust/src/**/*.rs` recovering `#[cfg(test)]` regions and
 //!     fn/impl spans (no external parser; the build is offline),
-//!   * [`rules`] — the five rules and their module-scoped policy,
+//!   * [`rules`] — the per-file rules, their module-scoped policy,
+//!     and the registry behind `--explain`,
+//!   * [`callgraph`] — crate-wide call-site extraction with a
+//!     conservative unknown-and-reported resolution policy,
+//!   * [`effects`] — per-fn effect bits propagated to a fixpoint
+//!     over the call graph (the `*-transitive` rules),
+//!   * [`wire`] — encode/decode opcode-sequence recovery and
+//!     symmetry checking,
 //!   * [`baseline`] — the committed grandfather file and its
 //!     one-way ratchet.
 //!
@@ -19,11 +26,16 @@
 //! runs it after the release build.
 
 pub mod baseline;
+pub mod callgraph;
+pub mod effects;
 pub mod lexer;
 pub mod rules;
+pub mod wire;
 
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use baseline::{Baseline, Resolution};
+use callgraph::{CallGraph, SourceFile, Unresolved};
 use rules::Finding;
 use std::path::{Path, PathBuf};
 
@@ -50,13 +62,29 @@ fn collect_rs_files(dir: &Path) -> Result<Vec<PathBuf>> {
     Ok(out)
 }
 
-/// Run all rules over every `.rs` file under `src_root` (the
-/// `rust/src` directory).  Findings are sorted by (file, line, rule).
-pub fn run(src_root: &Path) -> Result<Vec<Finding>> {
-    let mut findings = Vec::new();
-    for path in collect_rs_files(src_root)? {
+/// One whole-program analysis pass: findings plus the call-graph
+/// accounting behind them.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    /// Call sites the resolver could not link — conservatively
+    /// surfaced, never silently dropped.
+    pub unresolved: Vec<Unresolved>,
+    pub n_fns: usize,
+    pub n_edges: usize,
+}
+
+/// Run every rule — per-file, transitive, and wire — over the tree
+/// rooted at `repo_root` (which must contain `rust/src`).  Findings
+/// are sorted by (file, line, rule).
+pub fn run(repo_root: &Path) -> Result<Analysis> {
+    let src_root = repo_root.join("rust").join("src");
+    if !src_root.is_dir() {
+        bail!("{} has no rust/src — pass the repo root via --root", repo_root.display());
+    }
+    let mut files = Vec::new();
+    for path in collect_rs_files(&src_root)? {
         let rel = path
-            .strip_prefix(src_root)
+            .strip_prefix(&src_root)
             .unwrap_or(&path)
             .components()
             .map(|c| c.as_os_str().to_string_lossy())
@@ -64,63 +92,98 @@ pub fn run(src_root: &Path) -> Result<Vec<Finding>> {
             .join("/");
         let src =
             std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
-        findings.extend(rules::check_file(&rel, &src));
+        files.push(SourceFile { rel, map: lexer::analyze_source(&src) });
     }
+    let mut findings = Vec::new();
+    for sf in &files {
+        findings.extend(rules::check_map(&sf.rel, &sf.map));
+    }
+    let cg = CallGraph::build(&files);
+    let fx = effects::compute(&cg, &files);
+    findings.extend(effects::transitive_findings(&cg, &fx, &files));
+    findings.extend(wire::check(&files, repo_root));
     findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
-    Ok(findings)
-}
-
-/// Minimal JSON string escaping (offline build: no serde).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
+    let (n_fns, n_edges) = (cg.fns.len(), cg.calls.len());
+    Ok(Analysis { findings, unresolved: cg.unresolved, n_fns, n_edges })
 }
 
 /// One JSON-lines record per finding — the `--format json` output
-/// consumed by CI tooling.
+/// consumed by CI tooling.  Built through `util::json` so messages
+/// that quote source (the call-chain messages do) stay valid JSON.
 pub fn to_json_line(f: &Finding, baselined: bool) -> String {
-    format!(
-        "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"baselined\":{},\"message\":\"{}\"}}",
-        json_escape(f.rule),
-        json_escape(&f.file),
-        f.line,
-        baselined,
-        json_escape(&f.message),
-    )
+    Json::obj()
+        .set("rule", f.rule)
+        .set("file", f.file.as_str())
+        .set("line", f.line)
+        .set("baselined", baselined)
+        .set("message", f.message.as_str())
+        .render()
 }
 
 /// Everything `parrot lint` needs to report one run.
 pub struct LintReport {
     pub findings: Vec<Finding>,
     pub resolution: Resolution,
+    pub unresolved: Vec<Unresolved>,
+    pub n_fns: usize,
+    pub n_edges: usize,
 }
 
 /// Analyze `repo_root` (which must contain `rust/src`) against the
 /// baseline text.
 pub fn lint_repo(repo_root: &Path, baseline_text: &str) -> Result<LintReport> {
-    let src_root = repo_root.join("rust").join("src");
-    if !src_root.is_dir() {
-        bail!("{} has no rust/src — pass the repo root via --root", repo_root.display());
-    }
-    let findings = run(&src_root)?;
+    let analysis = run(repo_root)?;
     let base = Baseline::parse(baseline_text)?;
-    let resolution = baseline::resolve(&findings, &base);
-    Ok(LintReport { findings, resolution })
+    let known: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
+    base.validate_rules(&known)?;
+    let resolution = baseline::resolve(&analysis.findings, &base);
+    Ok(LintReport {
+        findings: analysis.findings,
+        resolution,
+        unresolved: analysis.unresolved,
+        n_fns: analysis.n_fns,
+        n_edges: analysis.n_edges,
+    })
+}
+
+/// `parrot lint --explain RULE` — print a rule's policy card (or all
+/// of them for `all`).
+pub fn explain(rule: &str) -> Result<()> {
+    fn card(r: &rules::RuleInfo) {
+        println!("{}", r.name);
+        println!("  scope: {}", r.scope);
+        println!("  why:   {}", r.why);
+        println!("  fix:   {}", r.fix);
+    }
+    if rule == "all" {
+        for (i, r) in rules::RULES.iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            card(r);
+        }
+        return Ok(());
+    }
+    match rules::rule_info(rule) {
+        Some(r) => {
+            card(r);
+            Ok(())
+        }
+        None => bail!(
+            "--explain {rule:?}: unknown rule — known rules: all, {}",
+            rules::RULES.iter().map(|r| r.name).collect::<Vec<_>>().join(", ")
+        ),
+    }
 }
 
 /// The `parrot lint` subcommand body.
-pub fn run_cli(root: &str, format: &str, baseline_path: &str, write_baseline: bool) -> Result<()> {
+pub fn run_cli(
+    root: &str,
+    format: &str,
+    baseline_path: &str,
+    write_baseline: bool,
+    out: Option<&str>,
+) -> Result<()> {
     let repo_root = PathBuf::from(root);
     let base_file = repo_root.join(baseline_path);
     let baseline_text = match std::fs::read_to_string(&base_file) {
@@ -148,10 +211,22 @@ pub fn run_cli(root: &str, format: &str, baseline_path: &str, write_baseline: bo
     }
 
     let is_violation = |f: &Finding| report.resolution.violations.contains(f);
+    // JSON lines are always materialized: they feed `--format json`
+    // *and* `--out` (CI archives the report regardless of the display
+    // format).
+    let json_lines: Vec<String> =
+        report.findings.iter().map(|f| to_json_line(f, !is_violation(f))).collect();
+    if let Some(path) = out {
+        let mut body = json_lines.join("\n");
+        if !body.is_empty() {
+            body.push('\n');
+        }
+        std::fs::write(path, body).with_context(|| format!("write --out {path}"))?;
+    }
     match format {
         "json" => {
-            for f in &report.findings {
-                println!("{}", to_json_line(f, !is_violation(f)));
+            for line in &json_lines {
+                println!("{line}");
             }
         }
         "human" => {
@@ -161,6 +236,21 @@ pub fn run_cli(root: &str, format: &str, baseline_path: &str, write_baseline: bo
             }
         }
         other => bail!("--format {other:?}: expected `human` or `json`"),
+    }
+    if !report.unresolved.is_empty() {
+        eprintln!(
+            "parrot lint: {} call site(s) unresolved across {} fns / {} edges — \
+             treated as unknown (their effects are NOT assumed clean):",
+            report.unresolved.len(),
+            report.n_fns,
+            report.n_edges
+        );
+        for u in report.unresolved.iter().take(20) {
+            eprintln!("  {}:{} `{}` — {}", u.file, u.line, u.call, u.reason);
+        }
+        if report.unresolved.len() > 20 {
+            eprintln!("  … and {} more", report.unresolved.len() - 20);
+        }
     }
     for (rule, file, allowed, actual) in &report.resolution.slack {
         eprintln!(
@@ -187,8 +277,9 @@ mod tests {
 
     /// The whole pipeline over the real tree: the committed baseline
     /// must cover every finding — i.e. the determinism-critical
-    /// modules are Hash*-free, ambient entropy stays in its two
-    /// allowlisted files, and no unchecked `.len() as u32` remains.
+    /// modules are Hash*-free (directly and through helpers), ambient
+    /// entropy stays in its two allowlisted files, every wire pair is
+    /// symmetric, and no unchecked `.len() as u32` remains.
     #[test]
     fn repo_is_clean_under_committed_baseline() {
         let root = Path::new(env!("CARGO_MANIFEST_DIR"));
@@ -267,5 +358,32 @@ mod tests {
             "{\"rule\":\"unordered-iter\",\"file\":\"simulation/mod.rs\",\"line\":7,\
              \"baselined\":false,\"message\":\"say \\\"no\\\" to\\nunordered iteration\"}"
         );
+    }
+
+    /// Call-chain messages quote source with backticks, quotes, and
+    /// backslashes — every emitted line must survive the util::json
+    /// parser (the same one ci.sh's archived report is validated with).
+    #[test]
+    fn emitted_lines_parse_back_through_util_json() {
+        let f = Finding {
+            rule: "ambient-entropy-transitive",
+            file: "simulation/mod.rs".into(),
+            line: 419,
+            message: "chain `a::b` -> `c` quoting \"raw \\ text\"\twith tabs".into(),
+        };
+        let line = to_json_line(&f, true);
+        let parsed = crate::util::json::parse(&line).expect("emitted line must be valid JSON");
+        assert_eq!(parsed.render(), line, "parse->render must round-trip the emitted line");
+    }
+
+    #[test]
+    fn explain_knows_every_registered_rule_and_rejects_unknown() {
+        for r in rules::RULES {
+            explain(r.name).unwrap();
+        }
+        explain("all").unwrap();
+        let err = explain("no-such-rule").unwrap_err().to_string();
+        assert!(err.contains("unknown rule"), "{err}");
+        assert!(err.contains("wire-asymmetry"), "error should list known rules: {err}");
     }
 }

@@ -1,6 +1,10 @@
-//! The five `parrot lint` rules and their module-scoped policy.
+//! The per-file `parrot lint` rules, their module-scoped policy, and
+//! the registry (`RULES`) covering every rule the analyzer emits —
+//! including the interprocedural ones implemented in `effects.rs` and
+//! `wire.rs`.
 //!
-//! Policy table (see README "Determinism discipline" for rationale):
+//! Per-file policy table (see README "Determinism discipline" for
+//! rationale):
 //!
 //! | rule              | scope                                   | why |
 //! |-------------------|-----------------------------------------|-----|
@@ -43,16 +47,26 @@ pub struct Finding {
     pub message: String,
 }
 
+/// Token patterns shared with the interprocedural pass
+/// (`analysis/effects.rs` seeds per-fn effect bits from the same
+/// rules, so direct and transitive findings can never disagree on
+/// what counts as a violation).
+pub(crate) const ENTROPY_PATTERNS: &[&str] =
+    &["thread_rng", "from_entropy", "SystemTime::now", "Instant::now"];
+pub(crate) const PANIC_PATTERNS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+pub(crate) const FLOAT_ACCUM_PATTERNS: &[&str] = &[".sum::<f32>", ".sum::<f64>", ".fold("];
+
 /// Top-level module of a source-root-relative path:
 /// `statestore/lru.rs` → `statestore`; `lib.rs` → `lib`.
-fn top_module(rel_path: &str) -> &str {
+pub(crate) fn top_module(rel_path: &str) -> &str {
     match rel_path.split_once('/') {
         Some((m, _)) => m,
         None => rel_path.strip_suffix(".rs").unwrap_or(rel_path),
     }
 }
 
-fn word_in(line: &str, word: &str) -> bool {
+pub(crate) fn word_in(line: &str, word: &str) -> bool {
     let b = line.as_bytes();
     let w = word.as_bytes();
     if b.len() < w.len() {
@@ -103,14 +117,12 @@ fn rule_ambient_entropy(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
     if ENTROPY_ALLOWLIST.contains(&rel) {
         return;
     }
-    const PATTERNS: &[&str] =
-        &["thread_rng", "from_entropy", "SystemTime::now", "Instant::now"];
     for (i, line) in map.lines.iter().enumerate() {
         let ln = i + 1;
         if map.line_is_test(ln) {
             continue;
         }
-        for p in PATTERNS {
+        for p in ENTROPY_PATTERNS {
             if line.contains(p) {
                 out.push(Finding {
                     rule: "ambient-entropy",
@@ -127,9 +139,10 @@ fn rule_ambient_entropy(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
     }
 }
 
-fn rule_panicking_decode(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
-    // Scope: lines inside an `impl Decoder`/`impl ... for Decoder`
-    // block, or inside a fn whose name marks it as a decode path.
+/// Per-line decode-path scope: lines inside an `impl Decoder`/`impl
+/// ... for Decoder` block, or inside a fn whose name marks it as a
+/// decode path.  Shared with the transitive pass and the wire rules.
+pub(crate) fn decode_scope(map: &SourceMap) -> Vec<bool> {
     let decode_fn = |name: &str| {
         name.starts_with("decode") || name.contains("from_bytes") || name.contains("from_le_bytes")
     };
@@ -148,13 +161,17 @@ fn rule_panicking_decode(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
             }
         }
     }
-    const PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "unreachable!("];
+    in_scope
+}
+
+fn rule_panicking_decode(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    let in_scope = decode_scope(map);
     for (i, line) in map.lines.iter().enumerate() {
         let ln = i + 1;
         if !in_scope[i] || map.line_is_test(ln) {
             continue;
         }
-        for p in PATTERNS {
+        for p in PANIC_PATTERNS {
             if line.contains(p) {
                 out.push(Finding {
                     rule: "panicking-decode",
@@ -202,7 +219,6 @@ fn rule_float_order(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
     // Per-fn: a float fold/sum is only order-stable if its source
     // collection is ordered.  Without type inference we approximate:
     // flag fold/sum lines in fns that also mention a Hash* container.
-    const ACCUM: &[&str] = &[".sum::<f32>", ".sum::<f64>", ".fold("];
     for f in &map.fns {
         let lines = f.start..=f.end.min(map.lines.len());
         let mentions_hash = lines.clone().any(|l| {
@@ -216,7 +232,7 @@ fn rule_float_order(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
             if map.line_is_test(l) {
                 continue;
             }
-            if ACCUM.iter().any(|p| map.lines[l - 1].contains(p)) {
+            if FLOAT_ACCUM_PATTERNS.iter().any(|p| map.lines[l - 1].contains(p)) {
                 out.push(Finding {
                     rule: "float-order",
                     file: rel.to_string(),
@@ -233,18 +249,108 @@ fn rule_float_order(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
     }
 }
 
-/// Run all five rules over one file. `rel_path` is relative to the
-/// scanned source root (`rust/src`), with `/` separators.
-pub fn check_file(rel_path: &str, src: &str) -> Vec<Finding> {
-    let map = analyze_source(src);
+/// Run the five per-file rules over an already-lexed file.  The
+/// interprocedural rules (`*-transitive`, wire symmetry) live in
+/// `effects.rs`/`wire.rs` and run over the whole loaded tree.
+pub fn check_map(rel_path: &str, map: &SourceMap) -> Vec<Finding> {
     let mut out = Vec::new();
-    rule_unordered_iter(rel_path, &map, &mut out);
-    rule_ambient_entropy(rel_path, &map, &mut out);
-    rule_panicking_decode(rel_path, &map, &mut out);
-    rule_unchecked_narrow(rel_path, &map, &mut out);
-    rule_float_order(rel_path, &map, &mut out);
+    rule_unordered_iter(rel_path, map, &mut out);
+    rule_ambient_entropy(rel_path, map, &mut out);
+    rule_panicking_decode(rel_path, map, &mut out);
+    rule_unchecked_narrow(rel_path, map, &mut out);
+    rule_float_order(rel_path, map, &mut out);
     out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     out
+}
+
+/// Run all five per-file rules over one file. `rel_path` is relative
+/// to the scanned source root (`rust/src`), with `/` separators.
+pub fn check_file(rel_path: &str, src: &str) -> Vec<Finding> {
+    check_map(rel_path, &analyze_source(src))
+}
+
+/// Registry entry backing `parrot lint --explain RULE` and baseline
+/// rule-name validation.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub scope: &'static str,
+    pub why: &'static str,
+    pub fix: &'static str,
+}
+
+/// Every rule the analyzer can emit, per-file and interprocedural.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "unordered-iter",
+        scope: "determinism-critical modules (simulation, scheduler, aggregation, statestore, compress, cluster, obs)",
+        why: "HashMap/HashSet iteration order is randomized per process; any event or merge order derived from it breaks same-seed == same-trace",
+        fix: "use BTreeMap/BTreeSet, a sorted snapshot, or an indexed Vec table",
+    },
+    RuleInfo {
+        name: "unordered-iter-transitive",
+        scope: "call sites in determinism-critical modules whose callee (transitively) holds a Hash* container",
+        why: "a strict module can launder nondeterministic iteration through a helper in a non-strict module; the per-file rule cannot see across the call",
+        fix: "give the callee an ordered view (BTreeMap / sorted snapshot), or keep the call out of the engine",
+    },
+    RuleInfo {
+        name: "ambient-entropy",
+        scope: "everywhere except util/timer.rs and util/bench.rs",
+        why: "wallclock/OS entropy makes runs non-replayable; simulation randomness must come from the seeded util::rng::Rng",
+        fix: "route through seeded util::rng::Rng or virtual time",
+    },
+    RuleInfo {
+        name: "ambient-entropy-transitive",
+        scope: "call sites in determinism-critical modules whose callee (transitively) reads wallclock/OS entropy",
+        why: "an engine-path helper that reads Instant::now/SystemTime::now smuggles real time beneath the deterministic engine even when the engine file itself is clean",
+        fix: "inject the clock from the caller that consumes it (fn-pointer clock), so the engine path stays entropy-free",
+    },
+    RuleInfo {
+        name: "panicking-decode",
+        scope: "Decoder impls and decode/from_bytes fns",
+        why: "wire input is untrusted: a hostile or truncated frame must surface as Err, not kill the server",
+        fix: "replace unwrap/expect/panic with `?` and typed errors",
+    },
+    RuleInfo {
+        name: "panicking-decode-transitive",
+        scope: "call sites on decode paths whose callee (transitively) can panic",
+        why: "a decode fn that carefully returns Err still dies if a helper it calls unwraps on the same untrusted bytes",
+        fix: "make the helper return Result and propagate with `?`",
+    },
+    RuleInfo {
+        name: "unchecked-narrow",
+        scope: "everywhere",
+        why: "`.len() as u32/u16` silently truncates past 4 GiB / 64 KiB, corrupting wire length prefixes",
+        fix: "use Encoder::put_len / Encoder::try_put_u32, which reject oversized lengths as Err",
+    },
+    RuleInfo {
+        name: "float-order",
+        scope: "aggregation merge paths",
+        why: "f32/f64 addition is not associative, so summing over an unordered source makes the merged value run-dependent",
+        fix: "iterate an ordered view before folding",
+    },
+    RuleInfo {
+        name: "wire-asymmetry",
+        scope: "every encode_*/decode_* pair (by impl type or file + name suffix), including per-tag Msg::encode/Msg::decode arms",
+        why: "sim==deploy rides on the framed protocol: a width or order mismatch between writer and reader corrupts every field after it",
+        fix: "mirror field order and widths exactly; put_len/try_put_u32 and u32()/count() are the same 4-byte opcode",
+    },
+    RuleInfo {
+        name: "unguarded-len-alloc",
+        scope: "decode paths",
+        why: "an attacker-controlled length prefix driving Vec::with_capacity lets a single hostile frame allocate gigabytes",
+        fix: "bound the length first (ensure!/charge_dense/Decoder::count) before allocating",
+    },
+    RuleInfo {
+        name: "unfuzzed-variant",
+        scope: "the Msg enum vs rust/tests/fuzz_decode.rs::sample_msgs",
+        why: "the fuzz round-trip suite only defends variants it constructs; a new variant outside the sample pool ships with zero hostile-input coverage",
+        fix: "add the variant to sample_msgs",
+    },
+];
+
+/// Look up a rule by name in the registry.
+pub fn rule_info(name: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.name == name)
 }
 
 #[cfg(test)]

@@ -1,0 +1,1131 @@
+//! Wire-schema extraction and encode/decode symmetry checking.
+//!
+//! The sim==deploy contract rides on the framed protocol: every
+//! `encode_*` writer must be mirrored byte-for-byte by its `decode_*`
+//! reader.  PR 6 enforced that only dynamically (fuzz round-trips);
+//! this pass recovers each side's *opcode sequence* from the stripped
+//! source and compares them statically.
+//!
+//! Model:
+//!
+//!   * Ops come from method calls on *tracked* codec values — params
+//!     typed `&mut Encoder`/`&mut Decoder`, or locals bound from
+//!     `Encoder::`/`Decoder::` constructors.  `put_u32`, `put_len`,
+//!     `try_put_u32` and the reader's `u32()`/`count(_)` all collapse
+//!     to the same 4-byte opcode, so LEN==U32 equivalences hold.
+//!   * A call whose argument list mentions a tracked codec and whose
+//!     name is `encode_*`/`decode_*`-shaped becomes a `sub:<suffix>`
+//!     opcode — nested schemas compare by suffix, not by body.
+//!   * `for`/`while` bodies become `loop[...]`; `if`/`match` become
+//!     `alt{...}` branch sets.  Normalization drops empty branches
+//!     (error arms), hoists shared leading ops, collapses
+//!     single-branch alts, and rewrites a per-byte `loop[u8]` to
+//!     `raw` — so an optional-field `match` and its tag-prefix read
+//!     compare equal when they are wire-equivalent.  (The flattening
+//!     means *optionality itself* is not checked, only the byte shape
+//!     of each path.)
+//!   * `Msg::encode`-shaped fns (a single `match` whose arms each
+//!     open with `put_u8(<literal tag>)`) pair arm-by-arm against
+//!     `Msg::decode`-shaped fns (a tag byte read, then a `match` over
+//!     integer literals): per-tag mismatches and missing arms are
+//!     reported individually.  A wildcard decode arm absorbs
+//!     otherwise-unmatched encode tags.
+//!
+//! Pairing key is (impl type | file, name suffix); fns with *no*
+//! tracked codec value are delegators (`to_bytes`, `encoded`) and are
+//! skipped, as are pairs where either side is missing.  Two further
+//! rules share this pass: `unguarded-len-alloc` (a `u32/u16/u64`
+//! length read driving `with_capacity`/`vec![` without a bounds check
+//! first — `count()` reads are pre-checked by the Decoder and exempt)
+//! and `unfuzzed-variant` (`Msg` variants missing from
+//! `rust/tests/fuzz_decode.rs::sample_msgs`).
+
+use super::callgraph::SourceFile;
+use super::lexer::{analyze_source, SourceMap};
+use super::rules::{self, Finding};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Op {
+    Int(u8),
+    Float(u8),
+    Str,
+    Bytes,
+    F32s,
+    U16s,
+    Raw,
+    Sub(String),
+    Loop(Vec<Op>),
+    Alt(Vec<Branch>),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Branch {
+    pattern: String,
+    /// Literal argument of a leading `put_u8(<n>)`, when it is the
+    /// branch's first op — the encode side's wire tag.
+    first_lit: Option<u64>,
+    ops: Vec<Op>,
+}
+
+struct Seq {
+    ops: Vec<Op>,
+    first_lit: Option<u64>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+/// Opcode for a codec method call, shared by both directions so
+/// equivalent widths (`put_len`/`try_put_u32`/`u32`/`count`) unify.
+fn method_op(name: &str) -> Option<Op> {
+    Some(match name {
+        "put_u8" | "u8" => Op::Int(1),
+        "put_u16" | "u16" => Op::Int(2),
+        "put_u32" | "put_len" | "try_put_u32" | "u32" | "count" => Op::Int(4),
+        "put_u64" | "u64" => Op::Int(8),
+        "put_f32" | "f32" => Op::Float(4),
+        "put_f64" | "f64" => Op::Float(8),
+        "put_str" | "str" => Op::Str,
+        "put_bytes" | "bytes" => Op::Bytes,
+        "put_f32s" | "f32s" => Op::F32s,
+        "put_u16s" | "u16s" => Op::U16s,
+        "put_raw" | "raw" => Op::Raw,
+        _ => return None,
+    })
+}
+
+/// `encode`-family name -> pairing suffix (`encode_meta` -> `meta`).
+fn encode_suffix(name: &str) -> Option<String> {
+    match name {
+        "encode" | "encode_with" | "encoded" | "encoded_with" => Some(String::new()),
+        _ => name.strip_prefix("encode_").map(str::to_string),
+    }
+}
+
+fn decode_suffix(name: &str) -> Option<String> {
+    match name {
+        "decode" | "decode_with" | "from_bytes" => Some(String::new()),
+        _ => name.strip_prefix("decode_").map(str::to_string),
+    }
+}
+
+fn sub_label(name: &str) -> Option<String> {
+    encode_suffix(name).or_else(|| decode_suffix(name))
+}
+
+/// Matching `}` for the `{` at `open`, bounded by `end`.
+fn brace_match(b: &[u8], open: usize, end: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < end {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    end.saturating_sub(1)
+}
+
+fn paren_match(b: &[u8], open: usize, end: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < end {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    end.saturating_sub(1)
+}
+
+fn find_brace(b: &[u8], from: usize, end: usize) -> Option<usize> {
+    (from..end).find(|&i| b[i] == b'{')
+}
+
+struct BodyParser<'a> {
+    b: &'a [u8],
+    text: &'a str,
+    tracked: &'a BTreeSet<String>,
+}
+
+fn push_op(ops: &mut Vec<Op>, first_lit: &mut Option<u64>, op: Op, lit: Option<u64>) {
+    if ops.is_empty() && matches!(op, Op::Int(1)) {
+        *first_lit = lit;
+    }
+    ops.push(op);
+}
+
+impl<'a> BodyParser<'a> {
+    fn word(&self, from: usize, end: usize) -> (usize, usize) {
+        let mut j = from;
+        while j < end && is_ident(self.b[j]) {
+            j += 1;
+        }
+        (from, j)
+    }
+
+    fn skip_ws(&self, mut i: usize, end: usize) -> usize {
+        while i < end && (self.b[i] as char).is_whitespace() {
+            i += 1;
+        }
+        i
+    }
+
+    fn parse_range(&self, mut i: usize, end: usize) -> Seq {
+        let b = self.b;
+        let mut ops: Vec<Op> = Vec::new();
+        let mut first_lit: Option<u64> = None;
+        while i < end {
+            if !is_ident_start(b[i]) || (i > 0 && is_ident(b[i - 1])) {
+                i += 1;
+                continue;
+            }
+            let (ws, j) = self.word(i, end);
+            let w = &self.text[ws..j];
+            match w {
+                "for" | "while" | "loop" => {
+                    let Some(open) = find_brace(b, j, end) else {
+                        i = j;
+                        continue;
+                    };
+                    let close = brace_match(b, open, end);
+                    let header = self.parse_range(j, open);
+                    for op in header.ops {
+                        push_op(&mut ops, &mut first_lit, op, None);
+                    }
+                    let body = self.parse_range(open + 1, close);
+                    if !body.ops.is_empty() {
+                        push_op(&mut ops, &mut first_lit, Op::Loop(body.ops), None);
+                    }
+                    i = close + 1;
+                }
+                "if" => {
+                    let (branches, after) = self.parse_if_chain(j, end, &mut ops, &mut first_lit);
+                    if branches.iter().any(|br| !br.ops.is_empty()) {
+                        push_op(&mut ops, &mut first_lit, Op::Alt(branches), None);
+                    }
+                    i = after;
+                }
+                "match" => {
+                    let Some(open) = find_brace(b, j, end) else {
+                        i = j;
+                        continue;
+                    };
+                    let scrut = self.parse_range(j, open);
+                    for op in scrut.ops {
+                        push_op(&mut ops, &mut first_lit, op, None);
+                    }
+                    let close = brace_match(b, open, end);
+                    let arms = self.parse_arms(open + 1, close);
+                    if arms.iter().any(|a| !a.ops.is_empty()) {
+                        push_op(&mut ops, &mut first_lit, Op::Alt(arms), None);
+                    }
+                    i = close + 1;
+                }
+                _ => {
+                    i = self.parse_call_like(ws, j, end, &mut ops, &mut first_lit);
+                }
+            }
+        }
+        Seq { ops, first_lit }
+    }
+
+    /// `if cond { .. } else if cond { .. } else { .. }` -> branches.
+    /// The first condition's ops run unconditionally (emitted into the
+    /// caller's seq); later conditions are folded into their branch.
+    fn parse_if_chain(
+        &self,
+        mut i: usize,
+        end: usize,
+        ops: &mut Vec<Op>,
+        first_lit: &mut Option<u64>,
+    ) -> (Vec<Branch>, usize) {
+        let b = self.b;
+        let mut branches: Vec<Branch> = Vec::new();
+        let mut has_else = false;
+        loop {
+            let Some(open) = find_brace(b, i, end) else { break };
+            let close = brace_match(b, open, end);
+            let cond = self.parse_range(i, open);
+            let body = self.parse_range(open + 1, close);
+            if branches.is_empty() {
+                for op in cond.ops {
+                    push_op(ops, first_lit, op, None);
+                }
+                branches.push(Branch {
+                    pattern: String::new(),
+                    first_lit: body.first_lit,
+                    ops: body.ops,
+                });
+            } else {
+                let mut bo = cond.ops;
+                bo.extend(body.ops);
+                branches.push(Branch { pattern: String::new(), first_lit: None, ops: bo });
+            }
+            i = close + 1;
+            let k = self.skip_ws(i, end);
+            let (es, ee) = self.word(k, end);
+            if ee > es && &self.text[es..ee] == "else" {
+                let k2 = self.skip_ws(ee, end);
+                let (fs, fe) = self.word(k2, end);
+                if fe > fs && &self.text[fs..fe] == "if" {
+                    i = fe;
+                    continue;
+                }
+                // final `else { .. }`
+                if let Some(open2) = find_brace(b, k2, end) {
+                    let close2 = brace_match(b, open2, end);
+                    let body2 = self.parse_range(open2 + 1, close2);
+                    branches.push(Branch {
+                        pattern: String::new(),
+                        first_lit: body2.first_lit,
+                        ops: body2.ops,
+                    });
+                    has_else = true;
+                    i = close2 + 1;
+                }
+            }
+            break;
+        }
+        if !has_else {
+            branches.push(Branch { pattern: String::new(), first_lit: None, ops: Vec::new() });
+        }
+        (branches, i)
+    }
+
+    fn parse_arms(&self, start: usize, end: usize) -> Vec<Branch> {
+        let b = self.b;
+        let mut out = Vec::new();
+        let mut i = start;
+        loop {
+            while i < end && ((b[i] as char).is_whitespace() || b[i] == b',') {
+                i += 1;
+            }
+            if i >= end {
+                break;
+            }
+            let ps = i;
+            let mut depth = 0i32;
+            while i < end {
+                match b[i] {
+                    b'(' | b'[' | b'{' => depth += 1,
+                    b')' | b']' | b'}' => depth -= 1,
+                    b'=' if depth == 0 && i + 1 < end && b[i + 1] == b'>' => break,
+                    _ => {}
+                }
+                i += 1;
+            }
+            if i >= end {
+                break;
+            }
+            let pattern = self.text[ps..i].trim().to_string();
+            i += 2;
+            while i < end && b[i] == b' ' {
+                i += 1;
+            }
+            let seq;
+            if i < end && b[i] == b'{' {
+                let close = brace_match(b, i, end);
+                seq = self.parse_range(i + 1, close);
+                i = close + 1;
+            } else {
+                let es = i;
+                let mut d = 0i32;
+                while i < end {
+                    match b[i] {
+                        b'(' | b'[' | b'{' => d += 1,
+                        b')' | b']' | b'}' => {
+                            if d == 0 {
+                                break;
+                            }
+                            d -= 1;
+                        }
+                        b',' if d == 0 => break,
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                seq = self.parse_range(es, i);
+            }
+            out.push(Branch { pattern, first_lit: seq.first_lit, ops: seq.ops });
+        }
+        out
+    }
+
+    /// Handle a non-keyword ident at `ws..j`: tracked-receiver method
+    /// call, sub-schema call, or plain ident.  Returns the next scan
+    /// position.
+    fn parse_call_like(
+        &self,
+        ws: usize,
+        j: usize,
+        end: usize,
+        ops: &mut Vec<Op>,
+        first_lit: &mut Option<u64>,
+    ) -> usize {
+        let b = self.b;
+        let w = &self.text[ws..j];
+        if self.tracked.contains(w) && j < end && b[j] == b'.' {
+            let (ms, me) = self.word(j + 1, end);
+            if me > ms {
+                let m = &self.text[ms..me];
+                let k = self.skip_ws(me, end);
+                if k < end && b[k] == b'(' {
+                    if let Some(op) = method_op(m) {
+                        let lit = if m == "put_u8" {
+                            let pc = paren_match(b, k, end);
+                            self.text[k + 1..pc].trim().parse::<u64>().ok()
+                        } else {
+                            None
+                        };
+                        push_op(ops, first_lit, op, lit);
+                    }
+                    // args are scanned by the main loop either way
+                    // (e.g. `put_u8(match op { .. })`)
+                    return k + 1;
+                }
+            }
+            return j;
+        }
+        // path call: follow `::` segments to the final name
+        let mut last = w.to_string();
+        let mut after = j;
+        loop {
+            if after + 1 < end && b[after] == b':' && b[after + 1] == b':' {
+                let s2 = after + 2;
+                if s2 < end && is_ident_start(b[s2]) {
+                    let (_, e2) = self.word(s2, end);
+                    last = self.text[s2..e2].to_string();
+                    after = e2;
+                    continue;
+                }
+            }
+            break;
+        }
+        let k = self.skip_ws(after, end);
+        if k < end && b[k] == b'!' {
+            return after; // macro — args scanned naturally
+        }
+        if k < end && b[k] == b'(' {
+            let pc = paren_match(b, k, end);
+            let args = &self.text[k + 1..pc];
+            if let Some(label) = sub_label(&last) {
+                if self.tracked.iter().any(|t| rules::word_in(args, t)) {
+                    push_op(ops, first_lit, Op::Sub(label), None);
+                    return pc + 1; // nested schema: don't double-count its args
+                }
+            }
+            return k + 1;
+        }
+        after
+    }
+}
+
+fn render(ops: &[Op]) -> String {
+    ops.iter().map(render_op).collect::<Vec<_>>().join(" ")
+}
+
+fn render_op(op: &Op) -> String {
+    match op {
+        Op::Int(n) => format!("u{}", 8 * *n as usize),
+        Op::Float(n) => format!("f{}", 8 * *n as usize),
+        Op::Str => "str".into(),
+        Op::Bytes => "bytes".into(),
+        Op::F32s => "f32s".into(),
+        Op::U16s => "u16s".into(),
+        Op::Raw => "raw".into(),
+        Op::Sub(l) => {
+            if l.is_empty() {
+                "sub".into()
+            } else {
+                format!("sub:{l}")
+            }
+        }
+        Op::Loop(body) => format!("loop[{}]", render(body)),
+        Op::Alt(bs) => {
+            let parts: Vec<String> = bs.iter().map(|br| render(&br.ops)).collect();
+            format!("alt{{{}}}", parts.join(" | "))
+        }
+    }
+}
+
+/// Canonicalize: normalize branches, drop empty ones (error arms),
+/// hoist shared leading ops, collapse single branches, `loop[u8]` ->
+/// `raw`.
+fn normalize(ops: Vec<Op>) -> Vec<Op> {
+    let mut out = Vec::new();
+    for op in ops {
+        match op {
+            Op::Loop(body) => {
+                let body = normalize(body);
+                if body.is_empty() {
+                    // loop with no wire effect
+                } else if body == vec![Op::Int(1)] {
+                    out.push(Op::Raw);
+                } else {
+                    out.push(Op::Loop(body));
+                }
+            }
+            Op::Alt(branches) => {
+                let mut bs: Vec<Vec<Op>> =
+                    branches.into_iter().map(|br| normalize(br.ops)).collect();
+                bs.retain(|x| !x.is_empty());
+                while bs.len() >= 2 && bs.iter().all(|x| x.first() == bs[0].first()) {
+                    out.push(bs[0][0].clone());
+                    for x in bs.iter_mut() {
+                        x.remove(0);
+                    }
+                    bs.retain(|x| !x.is_empty());
+                }
+                if bs.is_empty() {
+                    continue;
+                }
+                if bs.len() == 1 {
+                    out.extend(bs.remove(0));
+                    continue;
+                }
+                bs.sort_by_key(|x| render(x));
+                out.push(Op::Alt(
+                    bs.into_iter()
+                        .map(|x| Branch { pattern: String::new(), first_lit: None, ops: x })
+                        .collect(),
+                ));
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// One encode- or decode-named fn with at least one tracked codec
+/// value, ready for pairing.
+struct WireFn {
+    file: String,
+    name: String,
+    start: usize,
+    ops: Vec<Op>,
+}
+
+/// Tracked codec idents: params typed with Encoder/Decoder + locals
+/// bound from their constructors (+ `self` when requested).
+fn tracked_idents(sig: &str, body_lines: &[String], with_self: bool) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    if with_self {
+        out.insert("self".to_string());
+    }
+    if let Some(open) = sig.find('(') {
+        let pb = sig.as_bytes();
+        let close = paren_match(pb, open, sig.len());
+        let params = &sig[open + 1..close];
+        let mut depth = 0i32;
+        let mut piece_start = 0usize;
+        let bytes = params.as_bytes();
+        let mut pieces: Vec<&str> = Vec::new();
+        for (idx, &c) in bytes.iter().enumerate() {
+            match c {
+                b'(' | b'[' | b'<' => depth += 1,
+                b')' | b']' | b'>' => depth -= 1,
+                b',' if depth == 0 => {
+                    pieces.push(&params[piece_start..idx]);
+                    piece_start = idx + 1;
+                }
+                _ => {}
+            }
+        }
+        pieces.push(&params[piece_start..]);
+        for piece in pieces {
+            if !(rules::word_in(piece, "Encoder") || rules::word_in(piece, "Decoder")) {
+                continue;
+            }
+            let Some(name_part) = piece.split(':').next() else { continue };
+            let name = name_part.trim().trim_start_matches("mut ").trim();
+            if !name.is_empty() && name.bytes().all(is_ident) {
+                out.insert(name.to_string());
+            }
+        }
+    }
+    for line in body_lines {
+        let t = line.trim_start();
+        if !t.starts_with("let ") {
+            continue;
+        }
+        if !(line.contains("= Encoder::") || line.contains("= Decoder::")) {
+            continue;
+        }
+        let rest = t["let ".len()..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name: String =
+            rest.bytes().take_while(|&c| is_ident(c)).map(|c| c as char).collect();
+        if !name.is_empty() {
+            out.insert(name);
+        }
+    }
+    out
+}
+
+/// `-> <'` in arrow types never has a `>` problem here: the depth
+/// tracker above only guards comma splitting inside generics.
+fn owner_of(map: &SourceMap, fn_start: usize) -> Option<String> {
+    map.impls
+        .iter()
+        .filter(|im| im.start <= fn_start && fn_start <= im.end)
+        .min_by_key(|im| im.end - im.start)
+        .map(|im| im.type_name.clone())
+}
+
+fn extract_wire_fn(map: &SourceMap, rel: &str, f: &super::lexer::FnSpan) -> Option<WireFn> {
+    let last = f.end.min(map.lines.len());
+    if f.start > last {
+        return None;
+    }
+    let span = map.lines[f.start - 1..last].join("\n");
+    let b = span.as_bytes();
+    let open = find_brace(b, 0, b.len())?;
+    let sig = &span[..open];
+    let body_lines: Vec<String> =
+        map.lines[f.start - 1..last].iter().map(|l| l.to_string()).collect();
+    let tracked = tracked_idents(sig, &body_lines, false);
+    if tracked.is_empty() {
+        return None; // delegator (`to_bytes`, `encoded`): no schema here
+    }
+    let close = brace_match(b, open, b.len());
+    let parser = BodyParser { b, text: &span, tracked: &tracked };
+    let seq = parser.parse_range(open + 1, close);
+    Some(WireFn { file: rel.to_string(), name: f.name.clone(), start: f.start, ops: seq.ops })
+}
+
+/// `Msg::Ping { .. }` -> `Ping`.
+fn variant_label(pattern: &str) -> String {
+    let head = pattern.split(['{', '(']).next().unwrap_or("").trim();
+    head.rsplit("::").next().unwrap_or(head).trim().to_string()
+}
+
+type EncArms = BTreeMap<u64, (String, Vec<Op>)>;
+
+/// Tag-match shape, encode side: exactly `[ match { put_u8(N) .. } ]`.
+fn enc_tag_shape(ops: &[Op]) -> Option<EncArms> {
+    let [Op::Alt(branches)] = ops else { return None };
+    let mut m = EncArms::new();
+    let mut lits = 0usize;
+    for br in branches {
+        match br.first_lit {
+            Some(tag) => {
+                lits += 1;
+                let body: Vec<Op> = br.ops.iter().skip(1).cloned().collect();
+                if m.insert(tag, (variant_label(&br.pattern), body)).is_some() {
+                    return None; // duplicate tag: let the generic compare report it
+                }
+            }
+            None => {
+                if !normalize(br.ops.clone()).is_empty() {
+                    return None;
+                }
+            }
+        }
+    }
+    if lits >= 2 {
+        Some(m)
+    } else {
+        None
+    }
+}
+
+/// Tag-match shape, decode side: `[ u8, match <tag> { N => .. } ]`.
+/// Returns (arms, has_wildcard_arm).
+fn dec_tag_shape(ops: &[Op]) -> Option<(BTreeMap<u64, Vec<Op>>, bool)> {
+    let [Op::Int(1), Op::Alt(branches)] = ops else { return None };
+    let mut m = BTreeMap::new();
+    let mut wildcard = false;
+    let mut lits = 0usize;
+    for br in branches {
+        match br.pattern.trim().parse::<u64>() {
+            Ok(tag) => {
+                lits += 1;
+                m.insert(tag, br.ops.clone());
+            }
+            Err(_) => {
+                if !normalize(br.ops.clone()).is_empty() {
+                    return None; // op-bearing wildcard arm: generic compare
+                }
+                wildcard = true;
+            }
+        }
+    }
+    // Tag-shaped when the match distinguishes at least two wire tags —
+    // a wildcard that absorbs the remaining tags counts as one.
+    if lits >= 2 || (lits == 1 && wildcard) {
+        Some((m, wildcard))
+    } else {
+        None
+    }
+}
+
+fn compare_pair(enc: &WireFn, dec: &WireFn) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if let (Some(enc_arms), Some((dec_arms, wildcard))) =
+        (enc_tag_shape(&enc.ops), dec_tag_shape(&dec.ops))
+    {
+        for (tag, (label, eops)) in &enc_arms {
+            match dec_arms.get(tag) {
+                Some(dops) => {
+                    let a = render(&normalize(eops.clone()));
+                    let d = render(&normalize(dops.clone()));
+                    if a != d {
+                        out.push(Finding {
+                            rule: "wire-asymmetry",
+                            file: dec.file.clone(),
+                            line: dec.start,
+                            message: format!(
+                                "tag {tag} ({label}): `{}` writes [{a}] after the tag byte \
+                                 but `{}` reads [{d}] — field order and widths must mirror \
+                                 exactly (u32 covers put_len/try_put_u32/count)",
+                                enc.name, dec.name
+                            ),
+                        });
+                    }
+                }
+                None if !wildcard => out.push(Finding {
+                    rule: "wire-asymmetry",
+                    file: dec.file.clone(),
+                    line: dec.start,
+                    message: format!(
+                        "tag {tag} ({label}) is written by `{}` but `{}` has no arm for it",
+                        enc.name, dec.name
+                    ),
+                }),
+                None => {}
+            }
+        }
+        for tag in dec_arms.keys() {
+            if !enc_arms.contains_key(tag) {
+                out.push(Finding {
+                    rule: "wire-asymmetry",
+                    file: dec.file.clone(),
+                    line: dec.start,
+                    message: format!(
+                        "`{}` reads tag {tag} but `{}` never writes it",
+                        dec.name, enc.name
+                    ),
+                });
+            }
+        }
+        return out;
+    }
+    let a = render(&normalize(enc.ops.clone()));
+    let d = render(&normalize(dec.ops.clone()));
+    if a != d {
+        out.push(Finding {
+            rule: "wire-asymmetry",
+            file: dec.file.clone(),
+            line: dec.start,
+            message: format!(
+                "`{}` writes [{a}] but `{}` reads [{d}] — field order and widths must \
+                 mirror exactly (u32 covers put_len/try_put_u32/count; error/None arms \
+                 are ignored)",
+                enc.name, dec.name
+            ),
+        });
+    }
+    out
+}
+
+fn pair_findings(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let mut encs: BTreeMap<(String, String), Vec<WireFn>> = BTreeMap::new();
+    let mut decs: BTreeMap<(String, String), Vec<WireFn>> = BTreeMap::new();
+    for sf in files {
+        for f in &sf.map.fns {
+            if sf.map.line_is_test(f.start) {
+                continue;
+            }
+            let (is_enc, suffix) = if let Some(s) = encode_suffix(&f.name) {
+                (true, s)
+            } else if let Some(s) = decode_suffix(&f.name) {
+                (false, s)
+            } else {
+                continue;
+            };
+            let Some(wf) = extract_wire_fn(&sf.map, &sf.rel, f) else { continue };
+            let scope = owner_of(&sf.map, f.start).unwrap_or_else(|| sf.rel.clone());
+            let key = (scope, suffix);
+            if is_enc {
+                encs.entry(key).or_default().push(wf);
+            } else {
+                decs.entry(key).or_default().push(wf);
+            }
+        }
+    }
+    for (key, dlist) in &decs {
+        let Some(elist) = encs.get(key) else { continue };
+        for d in dlist {
+            let mut best: Option<Vec<Finding>> = None;
+            for e in elist {
+                let fs = compare_pair(e, d);
+                if fs.is_empty() {
+                    best = Some(Vec::new());
+                    break;
+                }
+                if best.as_ref().map_or(true, |b| fs.len() < b.len()) {
+                    best = Some(fs);
+                }
+            }
+            out.extend(best.unwrap_or_default());
+        }
+    }
+}
+
+fn is_guard_line(line: &str) -> bool {
+    ["ensure!", "bail!(", "charge_dense(", ".min(", "<=", ">=", " < ", " > ", "assert!"]
+        .iter()
+        .any(|p| line.contains(p))
+}
+
+fn alloc_findings(files: &[SourceFile], out: &mut Vec<Finding>) {
+    const READS: [&str; 3] = [".u32()", ".u16()", ".u64()"];
+    for sf in files {
+        let scope = rules::decode_scope(&sf.map);
+        for f in &sf.map.fns {
+            if sf.map.line_is_test(f.start) || !scope.get(f.start - 1).copied().unwrap_or(false)
+            {
+                continue;
+            }
+            let last = f.end.min(sf.map.lines.len());
+            let span = sf.map.lines[f.start - 1..last].join("\n");
+            let open = find_brace(span.as_bytes(), 0, span.len()).unwrap_or(0);
+            let body_lines: Vec<String> =
+                sf.map.lines[f.start - 1..last].iter().map(|l| l.to_string()).collect();
+            let tracked = tracked_idents(&span[..open], &body_lines, true);
+            if tracked.is_empty() {
+                continue;
+            }
+            let mut unchecked: Vec<String> = Vec::new();
+            for ln in f.start..=last {
+                if sf.map.line_is_test(ln) {
+                    continue;
+                }
+                let line = &sf.map.lines[ln - 1];
+                let guarded = is_guard_line(line);
+                if guarded {
+                    unchecked.retain(|id| !rules::word_in(line, id));
+                }
+                let allocs = line.contains("with_capacity(") || line.contains("vec![");
+                if allocs {
+                    let hit = unchecked.iter().position(|id| rules::word_in(line, id));
+                    if let Some(pos) = hit {
+                        let id = unchecked.remove(pos);
+                        out.push(Finding {
+                            rule: "unguarded-len-alloc",
+                            file: sf.rel.clone(),
+                            line: ln,
+                            message: format!(
+                                "allocation sized by unchecked wire length `{id}` in \
+                                 `{}` — a hostile frame can claim a huge count; bound \
+                                 it (ensure!/charge_dense/Decoder::count) before \
+                                 allocating",
+                                f.name
+                            ),
+                        });
+                    } else if !guarded
+                        && tracked
+                            .iter()
+                            .any(|t| READS.iter().any(|r| line.contains(&format!("{t}{r}"))))
+                    {
+                        out.push(Finding {
+                            rule: "unguarded-len-alloc",
+                            file: sf.rel.clone(),
+                            line: ln,
+                            message: format!(
+                                "allocation sized directly by an unchecked wire read in \
+                                 `{}` — bound the length before allocating",
+                                f.name
+                            ),
+                        });
+                    }
+                }
+                let t = line.trim_start();
+                if t.starts_with("let ") && line.contains(" as usize") {
+                    let reads_len =
+                        tracked.iter().any(|tr| READS.iter().any(|r| line.contains(&format!("{tr}{r}"))));
+                    if reads_len && !guarded {
+                        let rest = t["let ".len()..].trim_start();
+                        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+                        let name: String =
+                            rest.bytes().take_while(|&c| is_ident(c)).map(|c| c as char).collect();
+                        if !name.is_empty() {
+                            unchecked.push(name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `Msg` variants and their declaration lines from the first non-test
+/// `enum Msg` in the tree.
+fn msg_variants(files: &[SourceFile]) -> Option<(String, Vec<(String, usize)>)> {
+    for sf in files {
+        let flat = sf.map.lines.join("\n");
+        let b = flat.as_bytes();
+        let mut pos = 0usize;
+        while let Some(off) = flat[pos..].find("enum") {
+            let at = pos + off;
+            pos = at + 4;
+            let pre_ok = at == 0 || !is_ident(b[at - 1]);
+            let post_ok = at + 4 < b.len() && !is_ident(b[at + 4]);
+            if !pre_ok || !post_ok {
+                continue;
+            }
+            let mut k = at + 4;
+            while k < b.len() && (b[k] as char).is_whitespace() {
+                k += 1;
+            }
+            let mut e = k;
+            while e < b.len() && is_ident(b[e]) {
+                e += 1;
+            }
+            if &flat[k..e] != "Msg" {
+                continue;
+            }
+            let line_no = flat[..at].bytes().filter(|&c| c == b'\n').count() + 1;
+            if sf.map.line_is_test(line_no) {
+                continue;
+            }
+            let Some(open) = find_brace(b, e, b.len()) else { continue };
+            let close = brace_match(b, open, b.len());
+            let mut variants = Vec::new();
+            let mut depth = 0i32;
+            let mut seg_start = open + 1;
+            let mut i = open + 1;
+            while i <= close {
+                let c = b[i];
+                let at_end = i == close;
+                if !at_end {
+                    match c {
+                        b'(' | b'[' | b'{' => depth += 1,
+                        b')' | b']' | b'}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if (c == b',' && depth == 0) || at_end {
+                    let seg = &flat[seg_start..i];
+                    let mut off2 = 0usize;
+                    let sb = seg.as_bytes();
+                    while off2 < sb.len() {
+                        if sb[off2] == b'#' {
+                            // attribute: skip through `]`
+                            while off2 < sb.len() && sb[off2] != b']' {
+                                off2 += 1;
+                            }
+                            off2 += 1;
+                        } else if (sb[off2] as char).is_whitespace() {
+                            off2 += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    let ns = off2;
+                    while off2 < sb.len() && is_ident(sb[off2]) {
+                        off2 += 1;
+                    }
+                    let name = &seg[ns..off2];
+                    if name.chars().next().is_some_and(|ch| ch.is_ascii_uppercase()) {
+                        let vline = flat[..seg_start + ns].bytes().filter(|&ch| ch == b'\n').count() + 1;
+                        variants.push((name.to_string(), vline));
+                    }
+                    seg_start = i + 1;
+                }
+                i += 1;
+            }
+            if !variants.is_empty() {
+                return Some((sf.rel.clone(), variants));
+            }
+        }
+    }
+    None
+}
+
+fn fuzz_findings(files: &[SourceFile], repo_root: &Path, out: &mut Vec<Finding>) {
+    let Some((msg_file, variants)) = msg_variants(files) else { return };
+    let fuzz_path = repo_root.join("rust").join("tests").join("fuzz_decode.rs");
+    let Ok(src) = std::fs::read_to_string(&fuzz_path) else { return };
+    let fmap = analyze_source(&src);
+    let Some(f) = fmap.fns.iter().find(|f| f.name == "sample_msgs") else { return };
+    let last = f.end.min(fmap.lines.len());
+    let span = fmap.lines[f.start - 1..last].join("\n");
+    for (v, line) in variants {
+        let pat = format!("Msg::{v}");
+        let covered = span.match_indices(&pat).any(|(i, _)| {
+            let after = i + pat.len();
+            after >= span.len() || !is_ident(span.as_bytes()[after])
+        });
+        if !covered {
+            out.push(Finding {
+                rule: "unfuzzed-variant",
+                file: msg_file.clone(),
+                line,
+                message: format!(
+                    "`Msg::{v}` is never constructed in \
+                     rust/tests/fuzz_decode.rs::sample_msgs — every variant must \
+                     round-trip under fuzz; add it to the sample pool"
+                ),
+            });
+        }
+    }
+}
+
+/// All three wire rules over the loaded tree.
+pub fn check(files: &[SourceFile], repo_root: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    pair_findings(files, &mut out);
+    alloc_findings(files, &mut out);
+    fuzz_findings(files, repo_root, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(rel: &str, src: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), map: analyze_source(src) }
+    }
+
+    fn pairs_only(files: &[SourceFile]) -> Vec<Finding> {
+        let mut out = Vec::new();
+        pair_findings(files, &mut out);
+        out
+    }
+
+    #[test]
+    fn symmetric_pair_passes_asymmetric_fails() {
+        let good = sf(
+            "compress/mod.rs",
+            "pub fn encode_point(enc: &mut Encoder, x: u32, y: f32) {\n    enc.put_u32(x);\n    enc.put_f32(y);\n}\npub fn decode_point(dec: &mut Decoder) -> (u32, f32) {\n    let x = dec.u32();\n    let y = dec.f32();\n    (x, y)\n}\n",
+        );
+        assert!(pairs_only(&[good]).is_empty());
+        let bad = sf(
+            "compress/mod.rs",
+            "pub fn encode_point(enc: &mut Encoder, x: u32, y: f32) {\n    enc.put_u32(x);\n    enc.put_f32(y);\n}\npub fn decode_point(dec: &mut Decoder) -> (u32, f32) {\n    let y = dec.f32();\n    let x = dec.u32();\n    (x, y)\n}\n",
+        );
+        let f = pairs_only(&[bad]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "wire-asymmetry");
+        assert!(f[0].message.contains("[u32 f32]"), "{}", f[0].message);
+        assert!(f[0].message.contains("[f32 u32]"));
+    }
+
+    #[test]
+    fn loops_subs_and_len_equivalences_unify() {
+        let files = sf(
+            "model/params.rs",
+            "pub fn encode_rows(enc: &mut Encoder, rows: &[Vec[f32]]) {\n    enc.put_len(rows.len())?;\n    for r in rows {\n        enc.try_put_u32(r.id)?;\n        crate::compress::encode_f32s(enc, r, codec)?;\n    }\n}\npub fn decode_rows(dec: &mut Decoder) -> Vec<Row> {\n    let n = dec.count(8)?;\n    for _ in 0..n {\n        let id = dec.u32()?;\n        let xs = crate::compress::decode_f32s(dec)?;\n    }\n}\n",
+        );
+        assert!(pairs_only(&[files]).is_empty());
+    }
+
+    #[test]
+    fn option_tag_match_flattens_symmetrically() {
+        let files = sf(
+            "coordinator/messages.rs",
+            "fn encode_extra(enc: &mut Encoder, extra: &Option<Vec<u8>>) {\n    match extra {\n        None => enc.put_u8(0),\n        Some(p) => {\n            enc.put_u8(1);\n            enc.put_bytes(p);\n        }\n    }\n}\nfn decode_extra(dec: &mut Decoder) -> Option<Vec<u8>> {\n    match dec.u8()? {\n        0 => None,\n        1 => Some(dec.bytes()?.to_vec()),\n        _ => bail!(\"tag\"),\n    }\n}\n",
+        );
+        assert!(pairs_only(&[files]).is_empty(), "{:?}", pairs_only(&[files]));
+    }
+
+    #[test]
+    fn per_byte_loop_equals_raw() {
+        let files = sf(
+            "compress/mod.rs",
+            "pub fn encode_blob(enc: &mut Encoder, xs: &[u8]) {\n    enc.put_len(xs.len())?;\n    for x in xs {\n        enc.put_u8(*x);\n    }\n}\npub fn decode_blob(dec: &mut Decoder) -> Vec<u8> {\n    let n = dec.count(1)?;\n    dec.raw(n)?.to_vec()\n}\n",
+        );
+        assert!(pairs_only(&[files]).is_empty(), "{:?}", pairs_only(&[files]));
+    }
+
+    #[test]
+    fn msg_arm_pairing_reports_tag_level_mismatches() {
+        let files = sf(
+            "coordinator/messages.rs",
+            "impl Msg {\n    pub fn encode(&self) -> Vec<u8> {\n        let mut enc = Encoder::new();\n        match self {\n            Msg::Ping { seq } => {\n                enc.put_u8(0);\n                enc.put_u32(*seq);\n            }\n            Msg::Stop => enc.put_u8(1),\n        }\n        enc.finish()\n    }\n    pub fn decode(buf: &[u8]) -> Msg {\n        let mut dec = Decoder::new(buf);\n        let tag = dec.u8();\n        match tag {\n            0 => Msg::Ping { seq: dec.u64() },\n            _ => Msg::Stop,\n        }\n    }\n}\n",
+        );
+        let f = pairs_only(&[files]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("tag 0 (Ping)"), "{}", f[0].message);
+        assert!(f[0].message.contains("[u32]"));
+        assert!(f[0].message.contains("[u64]"));
+    }
+
+    #[test]
+    fn delegators_without_codec_idents_are_skipped() {
+        let files = sf(
+            "model/params.rs",
+            "impl ParamSet {\n    pub fn encode(&self) -> Vec<u8> {\n        let mut enc = Encoder::new();\n        self.encode_with(&mut enc);\n        enc.finish()\n    }\n    pub fn encode_with(&self, enc: &mut Encoder) {\n        enc.put_u32(self.n);\n    }\n    pub fn from_bytes(bytes: &[u8]) -> Self {\n        Self::decode_all(bytes)\n    }\n    pub fn decode(dec: &mut Decoder) -> Self {\n        ParamSet { n: dec.u32() }\n    }\n}\n",
+        );
+        // `encode` (delegator seq [sub]) never matches `decode` ([u32]),
+        // but `encode_with` does — any-candidate-match passes the pair.
+        assert!(pairs_only(&[files]).is_empty(), "{:?}", pairs_only(&[files]));
+    }
+
+    #[test]
+    fn unguarded_len_alloc_fires_and_guards_suppress() {
+        let bad = sf(
+            "compress/mod.rs",
+            "pub fn decode_table(dec: &mut Decoder) -> Vec<u64> {\n    let n = dec.u32() as usize;\n    let mut out = Vec::with_capacity(n);\n    out\n}\n",
+        );
+        let mut f = Vec::new();
+        alloc_findings(&[bad], &mut f);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unguarded-len-alloc");
+        assert_eq!(f[0].line, 3);
+
+        let good = sf(
+            "compress/mod.rs",
+            "pub fn decode_table(dec: &mut Decoder) -> Vec<u64> {\n    let n = dec.u32() as usize;\n    ensure!(n <= 1024, \"oversized\");\n    let mut out = Vec::with_capacity(n);\n    out\n}\n",
+        );
+        let mut g = Vec::new();
+        alloc_findings(&[good], &mut g);
+        assert!(g.is_empty(), "{g:?}");
+
+        let counted = sf(
+            "compress/mod.rs",
+            "pub fn decode_table(dec: &mut Decoder) -> Vec<u64> {\n    let n = dec.count(8)?;\n    let mut out = Vec::with_capacity(n);\n    out\n}\n",
+        );
+        let mut c = Vec::new();
+        alloc_findings(&[counted], &mut c);
+        assert!(c.is_empty(), "count() is bounds-checked by the Decoder: {c:?}");
+    }
+
+    #[test]
+    fn normalization_drops_error_arms_and_hoists() {
+        let seq = vec![Op::Alt(vec![
+            Branch { pattern: "0".into(), first_lit: None, ops: vec![Op::Int(1)] },
+            Branch {
+                pattern: "1".into(),
+                first_lit: None,
+                ops: vec![Op::Int(1), Op::Bytes],
+            },
+            Branch { pattern: "t".into(), first_lit: None, ops: vec![] },
+        ])];
+        assert_eq!(render(&normalize(seq)), "u8 bytes");
+    }
+}

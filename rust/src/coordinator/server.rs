@@ -100,6 +100,10 @@ impl<T: Transport> Server<T> {
         let algo = Algo::parse(&cfg.algorithm, cfg.mu)?;
         let global = initial_params(&cfg)?;
         let mut scheduler = Scheduler::new(cfg.scheduler, cfg.warmup_rounds, cfg.n_devices);
+        // The real coordinator reports Fig. 8 scheduling overhead in
+        // wallclock seconds; the scheduler itself stays clock-free and
+        // books 0.0 unless a consumer injects one.
+        scheduler.set_wall_clock(crate::util::timer::wall_secs);
         let dataset = build_dataset(&cfg);
         let eval_exe = if cfg.eval_every > 0 {
             let rt = Runtime::cpu(&cfg.artifact_dir)?;

@@ -50,6 +50,9 @@ fn sim_for(
         epochs,
         seed,
     )
+    // Fig. 8 reports real scheduling overhead: this harness consumes
+    // wallclock, so it injects the clock the engine never reads itself.
+    .with_wall_clock(crate::util::timer::wall_secs)
 }
 
 /// Fig. 5 — round time of frameworks (= schemes) × device counts × datasets.

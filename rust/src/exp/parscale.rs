@@ -80,7 +80,10 @@ fn run_cell(
         1,
         seed,
     )
-    .with_threads(threads);
+    .with_threads(threads)
+    // parscale's whole point is the engine wall-clock per thread
+    // count: inject the clock so engine_secs books real seconds.
+    .with_wall_clock(crate::util::timer::wall_secs);
     let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0x70F0);
     (rs.iter().map(|r| row(spec, r)).collect(), sim.engine_secs)
 }

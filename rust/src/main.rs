@@ -42,6 +42,7 @@ USAGE:
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]
   parrot lint   [--root DIR] [--format human|json] [--baseline FILE] [--write-baseline]
+                [--out PATH] (archive the JSON-lines report) [--explain RULE|all]
 ";
 
 fn main() {
@@ -175,11 +176,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// committed `lint.baseline` ratchet (see README "Determinism
 /// discipline").  Exits nonzero on any non-baselined finding.
 fn cmd_lint(args: &Args) -> Result<()> {
+    if let Some(rule) = args.get("explain") {
+        return parrot::analysis::explain(rule);
+    }
     parrot::analysis::run_cli(
         args.get_or("root", "."),
         args.get_or("format", "human"),
         args.get_or("baseline", "lint.baseline"),
         args.flag("write-baseline"),
+        args.get("out"),
     )
 }
 

@@ -77,17 +77,47 @@ pub struct Scheduler {
     /// Ownership ring + movement cost behind the state-affinity term;
     /// None (or a non-affinity `kind`) degrades to plain Alg. 3.
     affinity: Option<AffinityCtx>,
+    /// Injected wallclock for `overhead_secs` accounting (Fig. 8).
+    /// None — the deterministic default — reports 0.0: the scheduler
+    /// itself never reads ambient time, so same-seed runs stay
+    /// byte-identical; deploy-side callers that consume the overhead
+    /// metric inject `util::timer::wall_secs`.
+    clock: Option<fn() -> f64>,
 }
 
 impl Scheduler {
     pub fn new(kind: SchedulerKind, warmup_rounds: usize, n_devices: usize) -> Scheduler {
-        Scheduler { kind, warmup_rounds, history: History::new(), n_devices, affinity: None }
+        Scheduler {
+            kind,
+            warmup_rounds,
+            history: History::new(),
+            n_devices,
+            affinity: None,
+            clock: None,
+        }
     }
 
     /// Attach (or clear) the state-affinity context.  The term only
     /// bites when `kind` is [`SchedulerKind::StateAffinity`].
     pub fn set_affinity(&mut self, ctx: Option<AffinityCtx>) {
         self.affinity = ctx;
+    }
+
+    /// Inject a wallclock for `overhead_secs` accounting.  Without
+    /// one, scheduling overhead reports as 0.0.
+    pub fn set_wall_clock(&mut self, clock: fn() -> f64) {
+        self.clock = Some(clock);
+    }
+
+    fn now(&self) -> Option<f64> {
+        self.clock.map(|c| c())
+    }
+
+    fn overhead_since(&self, t0: Option<f64>) -> f64 {
+        match (self.clock, t0) {
+            (Some(c), Some(t0)) => (c() - t0).max(0.0),
+            _ => 0.0,
+        }
     }
 
     /// Off-owner placement penalty in seconds (0 when affinity is off).
@@ -144,7 +174,7 @@ impl Scheduler {
     ) -> Schedule {
         assert_eq!(alive.len(), self.n_devices, "alive mask length");
         assert_eq!(base_load.len(), self.n_devices, "base load length");
-        let sw = crate::util::timer::Stopwatch::start();
+        let t0 = self.now();
         let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
         let in_warmup = round < self.warmup_rounds;
         if uniform_only || in_warmup {
@@ -153,7 +183,7 @@ impl Scheduler {
             return Schedule {
                 assignment,
                 predicted,
-                overhead_secs: sw.elapsed_secs(),
+                overhead_secs: self.overhead_since(t0),
                 used_model: false,
                 estimates: None,
             };
@@ -184,7 +214,7 @@ impl Scheduler {
         Schedule {
             assignment,
             predicted,
-            overhead_secs: sw.elapsed_secs(),
+            overhead_secs: self.overhead_since(t0),
             used_model: true,
             estimates: Some(estimates),
         }
@@ -223,14 +253,14 @@ impl Scheduler {
         assert_eq!(alive.len(), self.n_devices, "alive mask length");
         assert_eq!(base_load.len(), self.n_devices, "base load length");
         assert!(!groups.is_empty(), "schedule_grouped needs at least one group");
-        let sw = crate::util::timer::Stopwatch::start();
+        let t0 = self.now();
         let uniform_only = matches!(self.kind, SchedulerKind::Uniform);
         if uniform_only || round < self.warmup_rounds {
             let assignment = uniform_assign_masked(clients, alive);
             return Schedule {
                 assignment,
                 predicted: vec![0.0; self.n_devices],
-                overhead_secs: sw.elapsed_secs(),
+                overhead_secs: self.overhead_since(t0),
                 used_model: false,
                 estimates: None,
             };
@@ -295,7 +325,7 @@ impl Scheduler {
             return Schedule {
                 assignment,
                 predicted,
-                overhead_secs: sw.elapsed_secs(),
+                overhead_secs: self.overhead_since(t0),
                 used_model: true,
                 estimates: Some(estimates),
             };
@@ -340,7 +370,7 @@ impl Scheduler {
         Schedule {
             assignment,
             predicted,
-            overhead_secs: sw.elapsed_secs(),
+            overhead_secs: self.overhead_since(t0),
             used_model: true,
             estimates: Some(estimates),
         }

@@ -278,6 +278,14 @@ pub struct VirtualSim {
     /// Everything recorded here is *virtual* time, so the trace is
     /// byte-identical run-to-run and for every `--threads` value.
     pub tracer: Option<Tracer>,
+    /// Injected wallclock for `engine_secs`/`overhead_secs` accounting
+    /// (the `parscale` speedup numerator and Fig. 8's metric).  None —
+    /// the default — books 0.0 everywhere: the engine itself never
+    /// reads ambient time (enforced by `parrot lint`'s
+    /// `ambient-entropy-transitive` rule), so same-seed timelines stay
+    /// byte-identical; harnesses that report wallclock inject
+    /// `util::timer::wall_secs` via [`VirtualSim::with_wall_clock`].
+    clock: Option<fn() -> f64>,
     /// Run-clock offset for the next round's engine buffer (Σ of the
     /// previous rounds' `total_secs`).
     vclock: f64,
@@ -321,6 +329,7 @@ impl VirtualSim {
             threads: 1,
             engine_secs: 0.0,
             tracer: None,
+            clock: None,
             vclock: 0.0,
             device_alive: vec![true; k],
             dyn_seed: seed ^ 0xD15C_0E7E,
@@ -338,6 +347,17 @@ impl VirtualSim {
     /// wall-clock knob: every value produces the same timeline.
     pub fn with_threads(mut self, threads: usize) -> VirtualSim {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder-style wallclock injection: book real engine seconds
+    /// into `engine_secs` and the scheduler's `overhead_secs`.  Only
+    /// harnesses that *report* wallclock (parscale, figures) attach
+    /// one; everything else keeps the 0.0-booking deterministic
+    /// default.
+    pub fn with_wall_clock(mut self, clock: fn() -> f64) -> VirtualSim {
+        self.clock = Some(clock);
+        self.scheduler.set_wall_clock(clock);
         self
     }
 
@@ -416,7 +436,7 @@ impl VirtualSim {
         };
         let prev_alive = self.device_alive.clone();
         let mut tbuf: Vec<Ev> = Vec::new();
-        let sw = crate::util::timer::Stopwatch::start();
+        let wall0 = self.clock.map(|c| c());
         let outcome = engine::run_round_opts(
             plan,
             &self.cluster,
@@ -428,7 +448,9 @@ impl VirtualSim {
             self.threads,
             self.tracer.is_some().then_some(&mut tbuf),
         );
-        self.engine_secs += sw.elapsed_secs();
+        if let (Some(c), Some(w0)) = (self.clock, wall0) {
+            self.engine_secs += (c() - w0).max(0.0);
+        }
         // Absorb the round's engine events onto the monotone run clock
         // and frame them with the round span + placement marker.  The
         // Sched instant carries only virtual facts (placed count), never

@@ -1,9 +1,14 @@
-//! Minimal JSON *writer* for experiment reports (results/*.json).
+//! Minimal JSON writer + parser for experiment reports
+//! (results/*.json) and the lint report's self-validation.
 //!
-//! Only emission is needed — configs are plain `key=value` files parsed
-//! by `config` — so this stays a writer with correct string escaping and
-//! stable field order.
+//! Configs are plain `key=value` files parsed by `config`, so the
+//! writer half stays small (correct string escaping, stable field
+//! order).  The parser half exists so tooling that *emits* JSON lines
+//! (`parrot lint --out`) can assert its own output round-trips — it
+//! is a strict, panic-free recursive-descent parser, not a general
+//! serde replacement.
 
+use anyhow::{bail, Result};
 use std::fmt::Write as _;
 
 /// A JSON value under construction.
@@ -137,6 +142,230 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Parse one complete JSON value; trailing non-whitespace is an
+/// error.  Integral numbers that fit i64 come back as `Json::Int`
+/// (matching what the writer emits for counters), everything else
+/// numeric as `Json::Num`.
+pub fn parse(s: &str) -> Result<Json> {
+    let b = s.as_bytes();
+    let mut p = Parser { b, i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != b.len() {
+        bail!("json: trailing content at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("json: expected {:?} at byte {}", c as char, self.i)
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("json: bad literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("json: unexpected {:?} at byte {}", c as char, self.i),
+            None => bail!("json: unexpected end of input"),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => bail!("json: expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            out.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => bail!("json: expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16> {
+        if self.i + 4 > self.b.len() {
+            bail!("json: truncated \\u escape at byte {}", self.i);
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| anyhow::anyhow!("json: non-ascii \\u escape at byte {}", self.i))?;
+        let v = u16::from_str_radix(s, 16)
+            .map_err(|_| anyhow::anyhow!("json: bad \\u escape at byte {}", self.i))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else { bail!("json: unterminated string") };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else { bail!("json: unterminated escape") };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: a following \uXXXX low half
+                                if self.peek() != Some(b'\\') {
+                                    bail!("json: lone high surrogate at byte {}", self.i);
+                                }
+                                self.i += 1;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("json: bad low surrogate at byte {}", self.i);
+                                }
+                                let cp = 0x10000
+                                    + ((hi as u32 - 0xD800) << 10)
+                                    + (lo as u32 - 0xDC00);
+                                char::from_u32(cp)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                None // lone low surrogate
+                            } else {
+                                char::from_u32(hi as u32)
+                            };
+                            match ch {
+                                Some(ch) => out.push(ch),
+                                None => bail!("json: invalid \\u escape at byte {}", self.i),
+                            }
+                        }
+                        other => {
+                            bail!("json: bad escape \\{} at byte {}", other as char, self.i)
+                        }
+                    }
+                }
+                _ => {
+                    // UTF-8 continuation: step back and take the whole char
+                    let start = self.i - 1;
+                    let rest = std::str::from_utf8(&self.b[start..])
+                        .map_err(|_| anyhow::anyhow!("json: invalid UTF-8 at byte {start}"))?;
+                    let ch = rest.chars().next().unwrap_or('\u{fffd}');
+                    if (ch as u32) < 0x20 {
+                        bail!("json: unescaped control char at byte {start}");
+                    }
+                    out.push(ch);
+                    self.i = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap_or("");
+        if !is_float {
+            if let Ok(v) = text.parse::<i64>() {
+                return Ok(Json::Int(v));
+            }
+        }
+        match text.parse::<f64>() {
+            Ok(v) => Ok(Json::Num(v)),
+            Err(_) => bail!("json: bad number {text:?} at byte {start}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +393,43 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn parse_round_trips_writer_output() {
+        let j = Json::obj()
+            .set("name", "fig5")
+            .set("k", 8usize)
+            .set("neg", -3i64)
+            .set("times", vec![1.5f64, 2.0, 3.25])
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("msg", "a\"b\\c\nd\u{1}é — dash")
+            .set("detail", Json::obj().set("scheme", "parrot"));
+        let rendered = j.render();
+        let back = parse(&rendered).unwrap();
+        assert_eq!(back.render(), rendered);
+    }
+
+    #[test]
+    fn parse_handles_escapes_and_unicode() {
+        let Json::Str(s) = parse(r#""a\u0041\n\t\" \u00e9 \ud83d\ude00""#).unwrap() else {
+            panic!("expected string")
+        };
+        assert_eq!(s, "aA\n\t\" é 😀");
+        // `2` is integral (Int), `2.5` is not
+        assert!(matches!(parse("2").unwrap(), Json::Int(2)));
+        assert!(matches!(parse("2.5").unwrap(), Json::Num(x) if x == 2.5));
+        assert!(matches!(parse("[1, 2 , 3]").unwrap(), Json::Arr(v) if v.len() == 3));
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_truncation() {
+        for bad in [
+            "", "{", "[1,", "\"unterminated", "{\"a\":}", "{\"a\":1,}", "tru", "1 2",
+            "\"\\q\"", "\"\\u12\"", "\"\\ud800x\"", "nullx",
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
     }
 }

@@ -1,7 +1,20 @@
 //! Wallclock timing helpers shared by the coordinator's metrics and the
 //! bench harness.
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
+
+/// Monotonic wallclock seconds since the first call, as a plain `fn`
+/// so it can be *injected* into engine components (`fn() -> f64`
+/// clock fields) from their deploy-side callers.  The engine modules
+/// themselves never read ambient time — `parrot lint`'s
+/// `ambient-entropy-transitive` rule enforces exactly that — so
+/// overhead accounting is wired up only where a real coordinator or
+/// experiment harness consumes it.
+pub fn wall_secs() -> f64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
 
 /// Simple stopwatch.
 pub struct Stopwatch {
@@ -57,6 +70,15 @@ mod tests {
         let sw = Stopwatch::start();
         std::thread::sleep(Duration::from_millis(2));
         assert!(sw.elapsed_secs() >= 0.002);
+    }
+
+    #[test]
+    fn wall_secs_is_monotonic_nonnegative() {
+        let a = wall_secs();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = wall_secs();
+        assert!(a >= 0.0);
+        assert!(b >= a + 0.001, "wall_secs must advance: {a} -> {b}");
     }
 
     #[test]

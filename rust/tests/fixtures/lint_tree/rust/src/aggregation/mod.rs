@@ -1,0 +1,9 @@
+//! Fixture: order-dependent float accumulation over an unordered
+//! source — `float-order`, plus the strict-module Hash* mentions.
+
+use std::collections::HashMap;
+
+/// Sums f64 weights straight out of a HashMap's value iterator.
+pub fn merge(weights: &HashMap<u64, f64>) -> f64 {
+    weights.values().map(|w| *w).sum::<f64>()
+}

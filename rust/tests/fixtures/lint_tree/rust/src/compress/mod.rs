@@ -1,0 +1,59 @@
+//! Fixture: the wire-path violations — an order-swapped codec pair,
+//! an unchecked length cast, an unguarded length allocation, and
+//! decode paths that panic (directly and through a helper).
+
+/// Writes x (u32) then y (f32)...
+pub fn encode_point(enc: &mut Encoder, x: u32, y: f32) {
+    enc.put_u32(x);
+    enc.put_f32(y);
+}
+
+/// ...while the reader takes y first: `wire-asymmetry`.
+pub fn decode_point(dec: &mut Decoder) -> (u32, f32) {
+    let y = dec.f32();
+    let x = dec.u32();
+    (x, y)
+}
+
+/// Length prefix narrowed with a bare cast: `unchecked-narrow`.
+pub fn encode_table(enc: &mut Encoder, xs: &[u64]) {
+    enc.put_u32(xs.len() as u32);
+    for &x in xs {
+        enc.put_u64(x);
+    }
+}
+
+/// Wire-symmetric with `encode_table`, but the count drives
+/// `Vec::with_capacity` before any bound: `unguarded-len-alloc`.
+pub fn decode_table(dec: &mut Decoder) -> Vec<u64> {
+    let n = dec.u32() as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.u64());
+    }
+    out
+}
+
+/// Panics on hostile input: `panicking-decode`.
+pub fn decode_tag(dec: &mut Decoder) -> u8 {
+    let b = dec.u8();
+    if b > 3 {
+        panic!("bad tag {b}")
+    }
+    b
+}
+
+/// Not decode-named, so the direct rule is blind to it; seeds
+/// PANICKING for the transitive pass.
+fn check_tag(b: u8) -> u8 {
+    if b > 3 {
+        panic!("tag out of range")
+    }
+    b
+}
+
+/// Calls the panicking helper from a decode path:
+/// `panicking-decode-transitive`.
+pub fn decode_guarded(dec: &mut Decoder) -> u8 {
+    check_tag(dec.u8())
+}

@@ -1,0 +1,32 @@
+//! Fixture: the framed control protocol — one variant's field width
+//! mismatches between the encode and decode arms (`wire-asymmetry` at
+//! tag level) and one variant is missing from the fuzz sample pool
+//! (`unfuzzed-variant`).
+
+pub enum Msg {
+    Ping { seq: u64 },
+    Stop,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        match self {
+            Msg::Ping { seq } => {
+                enc.put_u8(0);
+                enc.put_u32(*seq as u32);
+            }
+            Msg::Stop => enc.put_u8(1),
+        }
+        enc.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Msg {
+        let mut dec = Decoder::new(buf);
+        let tag = dec.u8();
+        match tag {
+            0 => Msg::Ping { seq: dec.u64() },
+            _ => Msg::Stop,
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Fixture: the strict engine module — direct Hash*/entropy findings
+//! plus the two transitive boundary crossings into util helpers.
+
+use std::collections::HashSet;
+
+/// Direct strict-module Hash* use: `unordered-iter` fires twice, on
+/// the `use` above and on the binding below.
+pub fn dedupe(xs: &[u64]) -> usize {
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut n = 0;
+    for &x in xs {
+        if seen.insert(x) {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Direct ambient entropy in a strict module: `ambient-entropy`.
+pub fn jitter_seed() -> u64 {
+    let t = std::time::Instant::now();
+    let _ = t;
+    7
+}
+
+/// Strict module calling a util helper that holds a HashMap:
+/// `unordered-iter-transitive` fires on the call line.
+pub fn round_cost(xs: &[u64]) -> usize {
+    crate::util::helpers::tally(xs)
+}
+
+/// Strict module reaching the clock through two hops:
+/// `ambient-entropy-transitive` with the full witness chain.
+pub fn round_started_at() -> f64 {
+    crate::util::helpers::stamp()
+}

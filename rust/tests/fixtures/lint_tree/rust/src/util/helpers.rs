@@ -1,0 +1,20 @@
+//! Fixture: non-strict helpers that launder effects — a Hash* tally
+//! and a wallclock stamp.  Neither is a direct finding here (util is
+//! not determinism-critical); both must be caught at the strict-module
+//! call sites by effect propagation.
+
+use std::collections::HashMap;
+
+/// Holds a HashMap: seeds HOLDS_HASH for the transitive pass.
+pub fn tally(xs: &[u64]) -> usize {
+    let mut m: HashMap<u64, u64> = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m.len()
+}
+
+/// One hop from the clock: AMBIENT_ENTROPY arrives transitively.
+pub fn stamp() -> f64 {
+    crate::util::timer::wall_secs()
+}

@@ -1,0 +1,11 @@
+//! Fixture: the allowlisted clock.  Ambient entropy is legal in this
+//! file (and util/bench.rs) per the `ambient-entropy` policy, but it
+//! still seeds the effect bit that `ambient-entropy-transitive`
+//! propagates up to strict-module callers.
+
+/// Seconds of real time — entropy-allowlisted, effect-seeding.
+pub fn wall_secs() -> f64 {
+    let t = std::time::SystemTime::now();
+    let _ = t;
+    0.0
+}

@@ -1,0 +1,6 @@
+//! Fixture fuzz pool: one variant is deliberately absent from
+//! `sample_msgs`, so the analyzer must report it as `unfuzzed-variant`.
+
+pub fn sample_msgs() -> Vec<Msg> {
+    vec![Msg::Ping { seq: 7 }]
+}

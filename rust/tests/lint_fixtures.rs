@@ -1,0 +1,157 @@
+//! Fixture self-test for the `parrot lint` analyzer: the miniature
+//! repo tree under `rust/tests/fixtures/lint_tree/` plants exactly one
+//! instance of every violation class, and the whole pipeline must
+//!
+//!   (a) fire all eleven registered rules with zero unresolved call
+//!       sites,
+//!   (b) reproduce the golden JSON-lines report (blessed on first run,
+//!       like golden_traces.rs — scripts/ci.sh runs the suite twice per
+//!       invocation, so a fresh snapshot is verified in the same run),
+//!   (c) emit lines that parse back through `util::json::parse`.
+//!
+//! This is the static backing for the ci.sh gate's "fails on injected
+//! violations" guarantee: if a rule rots, the fixture count drifts and
+//! this suite — not a production incident — reports it.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn fixture_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("fixtures")
+        .join("lint_tree")
+}
+
+fn analyze() -> parrot::analysis::Analysis {
+    parrot::analysis::run(&fixture_root()).expect("analyze fixture tree")
+}
+
+fn render(findings: &[parrot::analysis::rules::Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| format!("  {}:{} {}: {}", f.file, f.line, f.rule, f.message))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn every_rule_fires_and_every_call_resolves() {
+    let analysis = analyze();
+    assert!(
+        analysis.unresolved.is_empty(),
+        "the fixture tree must resolve every call site: {:?}",
+        analysis.unresolved
+    );
+    let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in &analysis.findings {
+        *by_rule.entry(f.rule).or_insert(0) += 1;
+    }
+    let want: BTreeMap<&str, usize> = [
+        ("unordered-iter", 4),
+        ("unordered-iter-transitive", 1),
+        ("ambient-entropy", 1),
+        ("ambient-entropy-transitive", 1),
+        ("panicking-decode", 1),
+        ("panicking-decode-transitive", 1),
+        ("unchecked-narrow", 1),
+        ("float-order", 1),
+        ("wire-asymmetry", 2),
+        ("unguarded-len-alloc", 1),
+        ("unfuzzed-variant", 1),
+    ]
+    .into_iter()
+    .collect();
+    assert_eq!(
+        by_rule,
+        want,
+        "per-rule finding counts drifted on the fixture tree:\n{}",
+        render(&analysis.findings)
+    );
+    for r in parrot::analysis::rules::RULES {
+        assert!(by_rule.contains_key(r.name), "registered rule `{}` never fired", r.name);
+    }
+
+    // Anchor spot-checks: the messages carry the interesting payloads.
+    let msg_of = |rule: &str| {
+        analysis
+            .findings
+            .iter()
+            .find(|f| f.rule == rule)
+            .unwrap_or_else(|| panic!("{rule} finding present"))
+            .message
+            .clone()
+    };
+    let chain = msg_of("ambient-entropy-transitive");
+    assert!(chain.contains("`crate::util::helpers::stamp`"), "{chain}");
+    assert!(chain.contains("`crate::util::timer::wall_secs`"), "{chain}");
+    assert!(chain.contains("util/timer.rs"), "two-hop witness chain: {chain}");
+    let tagged = analysis
+        .findings
+        .iter()
+        .find(|f| f.rule == "wire-asymmetry" && f.file == "coordinator/messages.rs")
+        .expect("Msg arm-level asymmetry finding");
+    assert!(tagged.message.contains("tag 0 (Ping)"), "{}", tagged.message);
+    let swapped = analysis
+        .findings
+        .iter()
+        .find(|f| f.rule == "wire-asymmetry" && f.file == "compress/mod.rs")
+        .expect("generic order-swap asymmetry finding");
+    assert!(swapped.message.contains("[u32 f32]"), "{}", swapped.message);
+    assert!(msg_of("unfuzzed-variant").contains("`Msg::Stop`"));
+}
+
+#[test]
+fn fixture_report_matches_golden_snapshot() {
+    let analysis = analyze();
+    let lines: Vec<String> =
+        analysis.findings.iter().map(|f| parrot::analysis::to_json_line(f, false)).collect();
+    assert!(!lines.is_empty(), "fixture tree produced no findings");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("lint_fixtures.jsonl");
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+        let mut body = lines.join("\n");
+        body.push('\n');
+        std::fs::write(&path, body).expect("write golden snapshot");
+        eprintln!(
+            "lint_fixtures: blessed new snapshot {} ({} lines) — commit it",
+            path.display(),
+            lines.len()
+        );
+        return;
+    }
+    let want_body = std::fs::read_to_string(&path).expect("read golden snapshot");
+    let want: Vec<&str> = want_body.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(
+        want.len(),
+        lines.len(),
+        "snapshot has {} lines, run produced {} — analyzer output drifted \
+         (delete the snapshot to re-pin deliberately)",
+        want.len(),
+        lines.len()
+    );
+    for (i, (w, g)) in want.iter().zip(&lines).enumerate() {
+        assert_eq!(
+            *w,
+            g.as_str(),
+            "lint_fixtures.jsonl line {i} drifted (delete rust/tests/golden/\
+             lint_fixtures.jsonl to re-pin deliberately)"
+        );
+    }
+}
+
+#[test]
+fn every_emitted_line_parses_through_util_json() {
+    let analysis = analyze();
+    for (i, f) in analysis.findings.iter().enumerate() {
+        let line = parrot::analysis::to_json_line(f, i % 2 == 0);
+        let v = parrot::util::json::parse(&line)
+            .unwrap_or_else(|e| panic!("line {i} is not valid JSON ({e}): {line}"));
+        assert_eq!(v.render(), line, "parse -> render must round-trip line {i}");
+    }
+}

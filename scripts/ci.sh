@@ -42,9 +42,22 @@ fi
 # gate, fixed findings must be re-baselined with --write-baseline.
 if [ "$FAST" -eq 0 ]; then
   echo "==> parrot lint --format json (baseline ratchet)"
-  if ! target/release/parrot lint --format json; then
+  LINT_OUT="$(mktemp)"
+  if ! target/release/parrot lint --format json --out "$LINT_OUT"; then
     echo "ci.sh: parrot lint found new violations — run 'target/release/parrot lint'" >&2
     echo "ci.sh: for the human-readable report; fix them (do not grow lint.baseline)." >&2
+    echo "ci.sh: JSON-lines report archived at $LINT_OUT" >&2
+    exit 1
+  fi
+  rm -f "$LINT_OUT"
+  # The ratchet is fully paid down: the committed baseline must stay
+  # comment-only.  The binary already validates rule names in entries;
+  # this guards against re-grandfathering findings instead of fixing
+  # them.
+  if grep -Evq '^[[:space:]]*(#|$)' lint.baseline; then
+    echo "ci.sh: lint.baseline has non-comment entries — the ratchet is one-way:" >&2
+    grep -Ev '^[[:space:]]*(#|$)' lint.baseline >&2
+    echo "ci.sh: fix the findings instead of re-grandfathering them." >&2
     exit 1
   fi
 fi
@@ -56,6 +69,11 @@ cargo test -q
 # second pass in the same CI invocation genuinely verifies them.
 echo "==> cargo test -q --test golden_traces (verify committed/blessed snapshots)"
 cargo test -q --test golden_traces
+# Lint fixture self-test: the analyzer must fire all eleven rules on
+# the injected-violation tree and match its golden JSON-lines report
+# (same bless-then-verify contract as golden_traces above).
+echo "==> cargo test -q --test lint_fixtures (analyzer fixture self-test)"
+cargo test -q --test lint_fixtures
 # Freshly blessed snapshots only protect future runs once committed.
 if command -v git >/dev/null 2>&1; then
   UNTRACKED_GOLDEN="$(git ls-files --others --exclude-standard rust/tests/golden 2>/dev/null || true)"
