@@ -9,7 +9,7 @@ use parrot::cluster::{ClusterProfile, WorkloadCost};
 use parrot::config::SchedulerKind;
 use parrot::scheduler::Scheduler;
 use parrot::simulation::engine::{run_async, AsyncCohort, AsyncComm, AsyncSpec};
-use parrot::simulation::{DynamicsSpec, SimTask};
+use parrot::simulation::{DynamicsSpec, SimTask, TaskTable};
 use parrot::statestore::StatePlan;
 use parrot::util::bench::{header, Bencher};
 
@@ -33,12 +33,12 @@ fn drive(n_tasks: usize, cohort_size: usize, k: usize, buffer: usize, stal: usiz
         let clients: Vec<(usize, usize)> =
             (0..cohort_size).map(|i| (i, 50 + (i * 13) % 300)).collect();
         let schedule = s.schedule_from(c, &clients, alive, base);
-        let mut tasks = Vec::with_capacity(cohort_size);
+        let mut tasks = TaskTable::with_capacity(cohort_size);
         let mut assigned = vec![Vec::new(); alive.len()];
         for (dev, cls) in schedule.assignment.iter().enumerate() {
             for &cl in cls {
-                assigned[dev].push(tasks.len());
-                tasks.push(SimTask::new(cl, 50 + (cl * 13) % 300, 1.0));
+                let id = tasks.push(SimTask::new(cl, 50 + (cl * 13) % 300, 1.0));
+                assigned[dev].push(id);
             }
         }
         Some(AsyncCohort {
@@ -59,6 +59,7 @@ fn drive(n_tasks: usize, cohort_size: usize, k: usize, buffer: usize, stal: usiz
         AsyncComm { s_a_down: 44_000_000, s_a_up: 44_000_000, s_e: 0, tier: None },
         &mut sched,
         &mut source,
+        None,
     );
     out.completed
 }

@@ -1,0 +1,80 @@
+//! Megascale admission benches: per-task heap allocation (one boxed
+//! task object per queued client — the pre-SoA layout's allocation
+//! profile) vs struct-of-arrays [`TaskTable`] admission at 100k queued
+//! tasks, plus the column-scan read path the engine hot loops use.
+//! Run: cargo bench --bench bench_megascale
+
+use parrot::simulation::{SimTask, TaskTable};
+use parrot::util::bench::{header, Bencher};
+
+const N: usize = 100_000;
+
+fn task(i: usize) -> SimTask {
+    SimTask::new(i, 50 + (i * 13) % 300, 1.0 + (i % 7) as f64 * 0.01)
+}
+
+/// The old layout's allocation profile: one heap object per queued
+/// task, plus per-device queue Vecs holding the indices.
+fn admit_boxed(k: usize) -> usize {
+    let mut tasks: Vec<Box<SimTask>> = Vec::with_capacity(N);
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for i in 0..N {
+        tasks.push(Box::new(task(i)));
+        assigned[i % k].push(i);
+    }
+    let mut acc = 0usize;
+    for q in &assigned {
+        for &t in q {
+            acc = acc.wrapping_add(tasks[t].n_eff);
+        }
+    }
+    acc
+}
+
+/// The SoA layout: six flat columns, one push per task, dense ids.
+fn admit_soa(k: usize) -> usize {
+    let mut tasks = TaskTable::with_capacity(N);
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for i in 0..N {
+        let id = tasks.push(task(i));
+        assigned[i % k].push(id);
+    }
+    let mut acc = 0usize;
+    for q in &assigned {
+        for &t in q {
+            acc = acc.wrapping_add(tasks.n_eff[t]);
+        }
+    }
+    acc
+}
+
+/// The engine's hot read path: a straight column scan (duration
+/// model: n_eff × noise per task) over an already-admitted table.
+fn scan_soa(tasks: &TaskTable) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..tasks.len() {
+        acc += tasks.n_eff[i] as f64 * tasks.noise[i];
+    }
+    acc
+}
+
+fn scan_boxed(tasks: &[Box<SimTask>]) -> f64 {
+    let mut acc = 0.0f64;
+    for t in tasks {
+        acc += t.n_eff as f64 * t.noise;
+    }
+    acc
+}
+
+fn main() {
+    header("megascale admission (100k queued tasks)");
+    let mut b = Bencher::new("megascale").with_iters(2, 10);
+
+    b.bench_throughput("admit 100k boxed tasks, K=64 (tasks)", N, || admit_boxed(64));
+    b.bench_throughput("admit 100k SoA tasks,   K=64 (tasks)", N, || admit_soa(64));
+
+    let boxed: Vec<Box<SimTask>> = (0..N).map(|i| Box::new(task(i))).collect();
+    let soa: TaskTable = (0..N).map(task).collect();
+    b.bench_throughput("scan 100k boxed tasks (tasks)", N, || scan_boxed(&boxed));
+    b.bench_throughput("scan 100k SoA columns (tasks)", N, || scan_soa(&soa));
+}

@@ -17,7 +17,7 @@
 #![deny(clippy::disallowed_types, clippy::disallowed_methods)]
 
 use crate::compress::Codec;
-use crate::model::params::{ParamSet, WeightedAccum};
+use crate::model::params::{AggPool, ParamSet, WeightedAccum};
 use crate::util::codec::{Decoder, Encoder};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -215,13 +215,29 @@ impl LocalAgg {
 
     /// Fold one finished client's update into the local aggregate.
     pub fn add(&mut self, update: &ClientUpdate) {
+        self.add_in(update, None);
+    }
+
+    /// [`LocalAgg::add`] drawing new accumulator buffers from a pool —
+    /// the megascale per-round path: entry accumulators reuse the
+    /// previous round's recycled tensors instead of allocating per
+    /// entry.  Numerically identical to `add` (property-tested below).
+    pub fn add_pooled(&mut self, update: &ClientUpdate, pool: &mut AggPool) {
+        self.add_in(update, Some(pool));
+    }
+
+    fn add_in(&mut self, update: &ClientUpdate, mut pool: Option<&mut AggPool>) {
         self.agg.n_clients += 1;
         for (name, op, payload) in &update.entries {
+            let pool = pool.as_deref_mut();
             let slot = self.agg.entries.entry(name.clone()).or_insert_with(|| match (op, payload) {
                 (AggOp::Collect, _) => Slot::Collected(Vec::new()),
                 (_, Payload::Params(p)) => Slot::Params {
                     op: *op,
-                    accum: WeightedAccum::new(&p.shapes),
+                    accum: match pool {
+                        Some(pool) => WeightedAccum::new_in(&p.shapes, pool),
+                        None => WeightedAccum::new(&p.shapes),
+                    },
                     count: 0,
                 },
                 (_, Payload::Scalar(_)) => Slot::Scalar { op: *op, sum: 0.0, weight: 0.0, count: 0 },
@@ -356,6 +372,19 @@ impl DeviceAggregate {
             .len()
     }
 
+    /// Hand every averaged-entry accumulator buffer back to `pool` —
+    /// called after the aggregate has been encoded to the wire, so the
+    /// next round's [`LocalAgg`] accumulators reuse this round's
+    /// allocations (Collect payloads and scalars carry no pooled
+    /// buffers and are simply dropped).
+    pub fn recycle_into(self, pool: &mut AggPool) {
+        for (_, slot) in self.entries {
+            if let Slot::Params { accum, .. } = slot {
+                accum.sum.recycle_into(pool);
+            }
+        }
+    }
+
     /// Per-Params-entry worst-case element error of `encoded_with
     /// (codec)` (max over the entry's tensors of the codec's documented
     /// bound on the *shipped sums*).  Collect entries ship verbatim and
@@ -383,6 +412,18 @@ impl DeviceAggregate {
 /// aggregation tier shares (device→server, device→group, group→group):
 /// averaged accumulators add sums/weights/counts, Collect lists extend.
 fn merge_entry_maps(dst: &mut BTreeMap<String, Slot>, src: BTreeMap<String, Slot>) {
+    merge_entry_maps_in(dst, src, None)
+}
+
+/// [`merge_entry_maps`], recycling each consumed child accumulator's
+/// tensor buffers into `pool` (the child's sums were just added into
+/// `dst` and would otherwise be freed) — so a K-child merge feeds K−1
+/// buffer sets back for the next round's aggregates.
+fn merge_entry_maps_in(
+    dst: &mut BTreeMap<String, Slot>,
+    src: BTreeMap<String, Slot>,
+    mut pool: Option<&mut AggPool>,
+) {
     for (name, slot) in src {
         match (dst.get_mut(&name), slot) {
             (None, s) => {
@@ -394,6 +435,9 @@ fn merge_entry_maps(dst: &mut BTreeMap<String, Slot>, src: BTreeMap<String, Slot
             ) => {
                 accum.merge(&a2);
                 *count += c2;
+                if let Some(pool) = pool.as_deref_mut() {
+                    a2.sum.recycle_into(pool);
+                }
             }
             (
                 Some(Slot::Scalar { sum, weight, count, .. }),
@@ -431,6 +475,13 @@ impl TierAgg {
     pub fn merge(&mut self, child: DeviceAggregate) {
         self.agg.n_clients += child.n_clients;
         merge_entry_maps(&mut self.agg.entries, child.entries);
+    }
+
+    /// [`TierAgg::merge`], recycling the consumed child's accumulator
+    /// buffers into `pool` once their sums have been folded in.
+    pub fn merge_pooled(&mut self, child: DeviceAggregate, pool: &mut AggPool) {
+        self.agg.n_clients += child.n_clients;
+        merge_entry_maps_in(&mut self.agg.entries, child.entries, Some(pool));
     }
 
     /// Clients represented so far across all merged children.
@@ -471,6 +522,13 @@ impl GlobalAgg {
     pub fn merge(&mut self, dev: DeviceAggregate) {
         self.n_clients += dev.n_clients;
         merge_entry_maps(&mut self.entries, dev.entries);
+    }
+
+    /// [`GlobalAgg::merge`], recycling the consumed aggregate's
+    /// accumulator buffers into `pool` once their sums are folded in.
+    pub fn merge_pooled(&mut self, dev: DeviceAggregate, pool: &mut AggPool) {
+        self.n_clients += dev.n_clients;
+        merge_entry_maps_in(&mut self.entries, dev.entries, Some(pool));
     }
 
     /// Apply each entry's OP and produce the round result.
@@ -757,6 +815,124 @@ mod tests {
         f.sort_unstable();
         h.sort_unstable();
         assert_eq!(f, h, "Collect survives every tier verbatim");
+    }
+
+    #[test]
+    fn prop_pooled_aggregation_is_byte_identical_to_unpooled() {
+        // The megascale pooled path must be a pure allocation strategy:
+        // running the identical device→tier→server pipeline through
+        // `add_pooled`/`merge_pooled` (with recycled buffers hot from a
+        // previous round) must produce byte-identical wire encodings at
+        // every tier and an identical finished round aggregate.
+        prop::check("pooled == unpooled aggregation", 20, |g| {
+            let shapes = vec![vec![g.int(1, 8), g.int(1, 8)], vec![g.int(1, 16)]];
+            let m = g.int(1, 24);
+            let k = g.int(1, 5);
+            let seed = g.rng.next_u64();
+            let mk_updates = |seed: u64| -> Vec<ClientUpdate> {
+                let mut rng = Rng::new(seed);
+                (0..m).map(|c| mk_update(&mut rng, c, &shapes)).collect()
+            };
+            let mut pool = AggPool::new();
+            // Warm the pool so the pooled run actually exercises reuse,
+            // not just the miss path.
+            ParamSet::zeros(&shapes).recycle_into(&mut pool);
+            let warm_recycled = pool.recycled;
+
+            let run = |pool: &mut Option<&mut AggPool>| -> (Vec<Vec<u8>>, RoundAggregate) {
+                let updates = mk_updates(seed);
+                let mut global = GlobalAgg::new();
+                let mut wires = Vec::new();
+                for dev in 0..k {
+                    let mut local = LocalAgg::new(dev);
+                    for (i, u) in updates.iter().enumerate() {
+                        if i % k == dev {
+                            match pool.as_deref_mut() {
+                                Some(p) => local.add_pooled(u, p),
+                                None => local.add(u),
+                            }
+                        }
+                    }
+                    let wire = local.finish().encoded().unwrap();
+                    let decoded = DeviceAggregate::decode(&wire).unwrap();
+                    match pool.as_deref_mut() {
+                        Some(p) => global.merge_pooled(decoded, p),
+                        None => global.merge(decoded),
+                    }
+                    wires.push(wire);
+                }
+                (wires, global.finish())
+            };
+            let (wires_plain, flat) = run(&mut None);
+            let (wires_pooled, pooled) = run(&mut Some(&mut pool));
+            if wires_plain != wires_pooled {
+                return Err("per-device wire encodings diverged under pooling".into());
+            }
+            for name in flat.params.keys() {
+                if flat.params[name] != pooled.params[name] {
+                    return Err(format!("params entry {name} diverged under pooling"));
+                }
+            }
+            if flat.scalars != pooled.scalars || flat.n_clients != pooled.n_clients {
+                return Err("scalar/n_clients columns diverged under pooling".into());
+            }
+            // The pool genuinely cycled: with at least two non-empty
+            // devices, the global merge recycled the later devices'
+            // param buffers after folding them in.
+            if m >= 2 && k >= 2 && pool.recycled == warm_recycled {
+                return Err("pooled run never recycled a buffer".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_tier_pipeline_reuses_buffers_across_rounds() {
+        // Round-over-round reuse through the full device→tier→server
+        // pipeline: after round 1 the pool holds the merged-away
+        // buffers, and round 2's accumulators must be served from them
+        // (hits, not misses) while still matching the unpooled result.
+        let shapes = vec![vec![6, 4], vec![8]];
+        let mut pool = AggPool::new();
+        let mut rng = Rng::new(23);
+        let updates: Vec<ClientUpdate> =
+            (0..12).map(|c| mk_update(&mut rng, c, &shapes)).collect();
+        let run_pooled = |pool: &mut AggPool, updates: &[ClientUpdate]| {
+            let mut root = TierAgg::new(0);
+            for dev in 0..4 {
+                let mut local = LocalAgg::new(dev);
+                for (i, u) in updates.iter().enumerate() {
+                    if i % 4 == dev {
+                        local.add_pooled(u, pool);
+                    }
+                }
+                // Ship, then hand the shipped aggregate's buffers back
+                // — the worker-side reuse loop.
+                let agg = local.finish();
+                let wire = agg.encoded().unwrap();
+                agg.recycle_into(pool);
+                root.merge_pooled(DeviceAggregate::decode(&wire).unwrap(), pool);
+            }
+            let mut global = GlobalAgg::new();
+            let root_agg = root.finish();
+            let wire = root_agg.encoded().unwrap();
+            root_agg.recycle_into(pool);
+            global.merge_pooled(DeviceAggregate::decode(&wire).unwrap(), pool);
+            global.finish()
+        };
+        let r1 = run_pooled(&mut pool, &updates);
+        let (misses_r1, recycled_r1) = (pool.misses, pool.recycled);
+        assert!(recycled_r1 > 0, "tier merges must recycle consumed children");
+        let r2 = run_pooled(&mut pool, &updates);
+        assert!(pool.hits > 0, "round 2 must be served from round 1's buffers");
+        assert_eq!(
+            pool.misses, misses_r1,
+            "round 2 must not touch the allocator for accumulators"
+        );
+        for name in ["delta", "delta_c", "h"] {
+            assert_eq!(r1.params[name], r2.params[name], "{name}");
+        }
+        assert_eq!(flat_aggregate(&updates).params["delta"], r1.params["delta"]);
     }
 
     #[test]

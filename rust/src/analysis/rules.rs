@@ -11,7 +11,7 @@
 //! | `unordered-iter`  | determinism-critical modules            | Hash* iteration order reorders events/reductions |
 //! | `ambient-entropy` | everywhere but `util/timer`,`util/bench`| wallclock/OS entropy breaks same-seed ≡ same-trace |
 //! | `panicking-decode`| `Decoder` impls + decode fns            | hostile frames must error, not kill the server |
-//! | `unchecked-narrow`| everywhere                              | `len() as u32` truncates wire prefixes silently |
+//! | `unchecked-narrow`| everywhere (+ config casts in strict)   | `len() as u32` truncates wire prefixes silently; `cfg.x as usize` wraps on fat configs |
 //! | `float-order`     | `aggregation` merge paths               | float sums over Hash* collections are order-defined |
 //!
 //! Detection is deliberately textual-over-stripped-source (no type
@@ -188,7 +188,35 @@ fn rule_panicking_decode(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
     }
 }
 
+/// Does `line` narrow a config-sourced integer with `as`?  Matches
+/// `cfg.<field> as usize|u32|u16` with a word boundary before `cfg`
+/// (the `.` in `self.cfg.x` is a boundary, `scfg.x` is not a match).
+/// Config fields are u64-sized and operator-controlled, so the cast
+/// silently wraps instead of erroring on oversized values.
+fn cfg_narrow_in(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while let Some(p) = line[i..].find("cfg.") {
+        let start = i + p;
+        let pre_ok =
+            start == 0 || !(b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_');
+        let mut j = start + 4;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        if pre_ok
+            && j > start + 4
+            && [" as usize", " as u32", " as u16"].iter().any(|t| line[j..].starts_with(t))
+        {
+            return true;
+        }
+        i = start + 4;
+    }
+    false
+}
+
 fn rule_unchecked_narrow(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
+    let strict = STRICT_MODULES.contains(&top_module(rel));
     for (i, line) in map.lines.iter().enumerate() {
         let ln = i + 1;
         if map.line_is_test(ln) {
@@ -208,6 +236,18 @@ fn rule_unchecked_narrow(rel: &str, map: &SourceMap, out: &mut Vec<Finding>) {
                     ),
                 });
             }
+        }
+        if strict && cfg_narrow_in(line) {
+            out.push(Finding {
+                rule: "unchecked-narrow",
+                file: rel.to_string(),
+                line: ln,
+                message: "config-sourced integer narrowed with `as` in a strict \
+                          module: config fields are u64-sized, so the cast wraps \
+                          silently on oversized values — use usize::try_from / \
+                          u32::try_from and surface the failure"
+                    .to_string(),
+            });
         }
     }
 }
@@ -318,9 +358,9 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         name: "unchecked-narrow",
-        scope: "everywhere",
-        why: "`.len() as u32/u16` silently truncates past 4 GiB / 64 KiB, corrupting wire length prefixes",
-        fix: "use Encoder::put_len / Encoder::try_put_u32, which reject oversized lengths as Err",
+        scope: "everywhere for `.len() as u32/u16`; strict modules additionally for `cfg.<field> as usize/u32/u16`",
+        why: "`.len() as u32/u16` silently truncates past 4 GiB / 64 KiB, corrupting wire length prefixes; config-sourced casts wrap silently on oversized operator input",
+        fix: "use Encoder::put_len / Encoder::try_put_u32 for lengths, usize::try_from / u32::try_from for config fields",
     },
     RuleInfo {
         name: "float-order",
@@ -454,6 +494,33 @@ pub fn encode_header(v: u8) -> Vec<u8> {
         let hits: Vec<usize> =
             f.iter().filter(|x| x.rule == "unchecked-narrow").map(|x| x.line).collect();
         assert_eq!(hits, vec![2, 3]);
+    }
+
+    #[test]
+    fn unchecked_narrow_flags_config_casts_in_strict_modules_only() {
+        let src = "\
+fn plan(&self) -> usize {
+    let b = cfg.state_bytes as usize;
+    let w = self.cfg.shards as u32;
+    let f = cfg.bandwidth as f64;
+    let ok = usize::try_from(cfg.state_bytes);
+    b
+}
+";
+        let f = check_file("statestore/fake.rs", src);
+        let hits: Vec<usize> =
+            f.iter().filter(|x| x.rule == "unchecked-narrow").map(|x| x.line).collect();
+        // lines 2 and 3 narrow config fields; `as f64` (line 4) widens
+        // and try_from (line 5) is the demanded fix.
+        assert_eq!(hits, vec![2, 3]);
+        // Outside strict modules config casts stay legal (exp sweeps
+        // cast clamped sweep axes all over).
+        assert!(check_file("exp/fake.rs", src)
+            .iter()
+            .all(|x| x.rule != "unchecked-narrow"));
+        // `scfg.` is not a config-field access.
+        let near = "fn f() -> usize {\n    scfg.bytes as usize\n}\n";
+        assert!(check_file("statestore/fake.rs", near).is_empty());
     }
 
     #[test]

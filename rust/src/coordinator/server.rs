@@ -20,6 +20,7 @@ use crate::coordinator::messages::Msg;
 use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
 use crate::coordinator::worker::{build_dataset, initial_params, Worker};
 use crate::data::FederatedDataset;
+use crate::model::params::AggPool;
 use crate::model::ParamSet;
 use crate::obs::{chrome, EvKind, Tracer, Track};
 use crate::runtime::{Executable, Runtime};
@@ -92,6 +93,9 @@ pub struct Server<T: Transport> {
     run_sw: Stopwatch,
     /// Running task index for trace labelling.
     task_seq: usize,
+    /// Size-class buffer pool reused across rounds by the tier-fold and
+    /// global merges (decoded aggregates recycle into it after merging).
+    pool: AggPool,
 }
 
 impl<T: Transport> Server<T> {
@@ -139,6 +143,7 @@ impl<T: Transport> Server<T> {
             tracer,
             run_sw: Stopwatch::start(),
             task_seq: 0,
+            pool: AggPool::new(),
         })
     }
 
@@ -417,11 +422,11 @@ impl<T: Transport> Server<T> {
         let mut flat = LocalAgg::new(0);
         for (u, d) in updates.drain(..).zip(decisions) {
             if d.applied {
-                flat.add(&u.staleness_scaled(d.weight));
+                flat.add_pooled(&u.staleness_scaled(d.weight), &mut self.pool);
             }
         }
         let mut agg = GlobalAgg::new();
-        agg.merge(flat.finish());
+        agg.merge_pooled(flat.finish(), &mut self.pool);
         let result = agg.finish();
         self.apply_round(&result);
         result
@@ -743,7 +748,7 @@ impl<T: Transport> Server<T> {
                     anyhow::ensure!(!grouped, "flat RoundDone during a grouped round");
                     bytes_up += raw.len() as u64;
                     trips += 1;
-                    agg.merge(aggregate);
+                    agg.merge_pooled(aggregate, &mut self.pool);
                     for r in records {
                         self.scheduler.record(r);
                         self.trace_task(r, &mut trace_q, &mut trace_cursor);
@@ -757,7 +762,9 @@ impl<T: Transport> Server<T> {
                     anyhow::ensure!(g < tiers.len(), "GroupDone for unknown group {g}");
                     bytes_up += raw.len() as u64;
                     trips += 1;
-                    tiers[g].get_or_insert_with(|| TierAgg::new(g)).merge(aggregate);
+                    tiers[g]
+                        .get_or_insert_with(|| TierAgg::new(g))
+                        .merge_pooled(aggregate, &mut self.pool);
                     for r in records {
                         self.scheduler.record(r);
                         self.trace_task(r, &mut trace_q, &mut trace_cursor);
@@ -795,20 +802,26 @@ impl<T: Transport> Server<T> {
             let mut parents: Vec<Option<TierAgg>> = (0..n_parents).map(|_| None).collect();
             for (child, t) in level_aggs.into_iter().enumerate() {
                 if let Some(t) = t {
-                    let wire = t.finish().encoded_with(self.cfg.compress)?;
+                    let folded = t.finish();
+                    let wire = folded.encoded_with(self.cfg.compress)?;
+                    // The tier aggregate is re-encoded at the boundary;
+                    // its buffers come back for the parent's accumulators.
+                    folded.recycle_into(&mut self.pool);
                     parents[child / fan]
                         .get_or_insert_with(|| TierAgg::new(child / fan))
-                        .merge(DeviceAggregate::decode(&wire)?);
+                        .merge_pooled(DeviceAggregate::decode(&wire)?, &mut self.pool);
                 }
             }
             level_aggs = parents;
         }
         for tier in level_aggs {
             if let Some(t) = tier {
-                let wire = t.finish().encoded_with(self.cfg.compress)?;
+                let folded = t.finish();
+                let wire = folded.encoded_with(self.cfg.compress)?;
+                folded.recycle_into(&mut self.pool);
                 cross_bytes += wire.len() as u64;
                 group_aggs += 1;
-                agg.merge(DeviceAggregate::decode(&wire)?);
+                agg.merge_pooled(DeviceAggregate::decode(&wire)?, &mut self.pool);
             }
         }
         let result = agg.finish();
@@ -869,7 +882,7 @@ impl<T: Transport> Server<T> {
             trips += 1;
             match Msg::decode(&raw)? {
                 Msg::TaskDone { device, update, record, .. } => {
-                    flat.add(&update);
+                    flat.add_pooled(&update, &mut self.pool);
                     self.scheduler.record(record);
                     n_done += 1;
                     outstanding -= 1;
@@ -893,7 +906,7 @@ impl<T: Transport> Server<T> {
         }
         debug_assert_eq!(outstanding, 0);
         let mut agg = GlobalAgg::new();
-        agg.merge(flat.finish());
+        agg.merge_pooled(flat.finish(), &mut self.pool);
         let result = agg.finish();
         self.apply_round(&result);
         self.finish_metrics(round, sw, 0.0, 0.0, bytes_down, bytes_up, trips, 0, 0, &result)

@@ -26,6 +26,7 @@ use crate::compress::Codec;
 use crate::config::RunConfig;
 use crate::coordinator::messages::Msg;
 use crate::data::{FederatedDataset, Partition, SynthConfig};
+use crate::model::params::AggPool;
 use crate::model::ParamSet;
 use crate::runtime::{Executable, Runtime};
 use crate::scheduler::TaskRecord;
@@ -56,6 +57,10 @@ pub struct Worker<T: Transport> {
     cached_bc: Option<(Broadcast, Codec)>,
     /// Current async-mode model + its version (set by `AsyncFlush`).
     async_bc: Option<(Broadcast, u64)>,
+    /// Size-class buffer pool for per-client aggregation merges: shipped
+    /// aggregates are recycled after encoding so steady-state rounds
+    /// allocate no accumulator buffers.
+    pool: AggPool,
 }
 
 /// Build the deterministic dataset every participant reconstructs
@@ -115,6 +120,7 @@ impl<T: Transport> Worker<T> {
             dataset,
             cached_bc: None,
             async_bc: None,
+            pool: AggPool::new(),
         })
     }
 
@@ -149,7 +155,13 @@ impl<T: Transport> Worker<T> {
                         busy_secs,
                         codec,
                     };
-                    self.transport.send(0, msg.encode()?)?;
+                    let wire = msg.encode()?;
+                    // The aggregate is on the wire; its buffers feed the
+                    // next round's accumulators instead of the allocator.
+                    if let Msg::RoundDone { aggregate, .. } = msg {
+                        aggregate.recycle_into(&mut self.pool);
+                    }
+                    self.transport.send(0, wire)?;
                 }
                 Msg::GroupRound { round, group, broadcast, clients, codec } => {
                     // Grouped topology: identical round body, but the
@@ -165,7 +177,11 @@ impl<T: Transport> Worker<T> {
                         busy_secs,
                         codec,
                     };
-                    self.transport.send(0, msg.encode()?)?;
+                    let wire = msg.encode()?;
+                    if let Msg::GroupDone { aggregate, .. } = msg {
+                        aggregate.recycle_into(&mut self.pool);
+                    }
+                    self.transport.send(0, wire)?;
                 }
                 Msg::StateFetch { round, clients } => {
                     // The server wants these (owned) states for
@@ -272,7 +288,7 @@ impl<T: Transport> Worker<T> {
         let mut records = Vec::with_capacity(clients.len());
         for client in clients {
             let (update, rec) = self.run_task(round, broadcast, client)?;
-            local.add(&update);
+            local.add_pooled(&update, &mut self.pool);
             records.push(rec);
         }
         // Ship updated non-owned states back to their owners (via the

@@ -1,0 +1,247 @@
+//! `parrot exp megascale` — the SoA-table engine at population scale:
+//! 100k (smoke) to 1M (full) simulated clients, sweeping
+//! clients × devices × {flat, groups:16} × `--threads` {1, 2, 8} on
+//! the identical seed.
+//!
+//! This is the acceptance harness for the megascale restructuring
+//! (struct-of-arrays client/task tables, arena-batched cohort events,
+//! pooled aggregation buffers): the population no longer materializes
+//! one heap object per client, so the sweep's footprint is bounded by
+//! the dense per-client columns plus the round's task table.
+//!
+//! Two things are measured, one is asserted:
+//!
+//! - **thread invariance (hard check)**: for every cell the per-round
+//!   engine rows — every virtual-time/byte column *plus* the
+//!   deterministic heap-pop count (`VRound::engine_events`) — must be
+//!   byte-identical across `--threads` {1, 2, 8}.  Any divergence
+//!   fails the harness and prints the seed.
+//! - **throughput and footprint (reported)**: events/sec (heap pops
+//!   over engine-only wall seconds) per thread count, and the
+//!   process's peak RSS (`VmHWM`) after each cell.  Both are
+//!   host-dependent, so they live in the JSON only and never in the
+//!   byte-compared rows.
+//!
+//! `--smoke` (wired into `scripts/ci.sh`) runs the 100k-client cell
+//! set only.  Results land in `BENCH_megascale.json`; the committed
+//! copy at the repo root records the reference host's numbers.
+
+use crate::cluster::{ClusterProfile, Topology, WorkloadCost};
+use crate::config::{Scheme, SchedulerKind};
+use crate::data::{Partition, PartitionKind};
+use crate::obs::chrome;
+use crate::simulation::{registry_from_rounds, run_virtual, CommModel, VRound, VirtualSim};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+
+/// Peak resident set size (`VmHWM`) in KiB from `/proc/self/status`;
+/// 0 when procfs is unavailable (non-Linux hosts).  JSON-only — peak
+/// RSS is a host fact, not an engine output, so it is never part of
+/// the byte-compared rows.
+pub fn peak_rss_kib() -> u64 {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// One engine row per round: parscale's virtual-time/byte columns plus
+/// the deterministic event count.  Byte-compared across thread counts.
+fn row(spec: &str, r: &VRound) -> String {
+    format!(
+        "{spec},{},{:.9},{:.9},{:.9},{},{},{},{},{},{},{:.9},{}",
+        r.round,
+        r.total_secs,
+        r.compute_secs,
+        r.comm_secs,
+        r.bytes,
+        r.trips,
+        r.cross_group_bytes,
+        r.group_aggs,
+        r.scheduled_clients,
+        r.dropped_clients,
+        r.wasted_secs,
+        r.engine_events
+    )
+}
+
+/// Run one (clients, devices, topology, threads) cell; returns the
+/// per-round rows, the engine-only wall seconds, and the total heap
+/// pops (the deterministic events/sec numerator).
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    spec: &str,
+    topo: &Topology,
+    partition: &Partition,
+    m_p: usize,
+    k: usize,
+    rounds: usize,
+    seed: u64,
+    threads: usize,
+) -> (Vec<String>, f64, u64) {
+    let cluster = ClusterProfile::heterogeneous(k).with_topology(topo.clone());
+    let mut sim = VirtualSim::new(
+        Scheme::Parrot,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition.clone(),
+        1,
+        seed,
+    )
+    .with_threads(threads)
+    // events/sec needs a real denominator: inject the clock so
+    // engine_secs books engine-only wall seconds.
+    .with_wall_clock(crate::util::timer::wall_secs);
+    let rs = run_virtual(&mut sim, rounds, m_p, seed ^ 0x3E6A);
+    (rs.iter().map(|r| row(spec, r)).collect(), sim.engine_secs, sim.engine_events)
+}
+
+/// The determinism-suite smoke cell (`tests/determinism.rs`): a
+/// 100k-client grouped Parrot sim — the grouped plan always takes the
+/// sharded engine path — whose per-round rows (including the event
+/// count) must be byte-identical for every `threads` value on one seed.
+pub fn smoke_rows(seed: u64, threads: usize) -> Result<Vec<String>> {
+    let topo = Topology::parse("groups:16")?;
+    let partition = Partition::generate(PartitionKind::Natural, 100_000, 62, 100, seed);
+    let (rows, _, _) =
+        run_cell("megascale-smoke", &topo, &partition, 2048, 64, 2, seed, threads);
+    ensure!(!rows.is_empty(), "megascale smoke cell produced no rounds");
+    Ok(rows)
+}
+
+/// The traced variant of the smoke cell: returns the rendered Chrome
+/// trace bytes (registry snapshot included), which must be identical
+/// across runs and thread counts on one seed.
+pub fn smoke_trace(seed: u64, threads: usize) -> Result<String> {
+    let topo = Topology::parse("groups:16")?;
+    let partition = Partition::generate(PartitionKind::Natural, 100_000, 62, 100, seed);
+    let cluster = ClusterProfile::heterogeneous(64).with_topology(topo);
+    let mut sim = VirtualSim::new(
+        Scheme::Parrot,
+        cluster,
+        WorkloadCost::femnist(),
+        CommModel::femnist(),
+        SchedulerKind::Greedy,
+        2,
+        partition,
+        1,
+        seed,
+    )
+    .with_threads(threads)
+    .with_tracing();
+    let rs = run_virtual(&mut sim, 2, 2048, seed ^ 0x3E6A);
+    ensure!(!rs.is_empty(), "traced megascale cell produced no rounds");
+    let tracer = sim.tracer.take().expect("tracing was enabled");
+    ensure!(!tracer.is_empty(), "traced megascale cell recorded no events");
+    let rows = chrome::expand(&tracer);
+    chrome::check_well_formed(&rows)
+        .map_err(|e| anyhow::anyhow!("malformed trace (--seed {seed:#x}): {e}"))?;
+    Ok(chrome::render_events(&rows, Some(&registry_from_rounds(&rs))))
+}
+
+pub fn megascale(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let rounds = args.usize_or("rounds", 2)?;
+    let seed = args.u64_or("seed", 47)?;
+    let m_p = args.usize_or("per-round", if smoke { 4096 } else { 8192 })?;
+    let thread_counts: &[usize] = &[1, 2, 8];
+    let client_counts: &[usize] = if smoke { &[100_000] } else { &[100_000, 1_000_000] };
+    let device_counts: &[usize] = if smoke { &[64] } else { &[64, 256] };
+    let topologies: &[&str] = &["flat", "groups:16"];
+    println!(
+        "Megascale SoA engine — M={client_counts:?}, M_p={m_p}, K={device_counts:?}, \
+         R={rounds}{}",
+        if smoke { " (smoke scale)" } else { "" }
+    );
+    println!(
+        "{:<26} {:>7} {:>12} {:>12} {:>12}  {}",
+        "cell", "threads", "engine(s)", "events/s", "peakRSS(MiB)", "rows"
+    );
+
+    let mut cells = Vec::new();
+    for &m in client_counts {
+        // One deterministic partition per population, shared by every
+        // cell at that scale (the sweep axes must not perturb it).
+        let partition = Partition::generate(PartitionKind::Natural, m, 62, 100, seed);
+        for &k in device_counts {
+            for spec in topologies {
+                let topo = Topology::parse(spec)?;
+                let cell = format!("m{m}-k{k}-{spec}");
+                let mut reference: Option<Vec<String>> = None;
+                let mut secs_at = Vec::new();
+                let mut events_per_sec = Vec::new();
+                let mut total_events = 0u64;
+                for &t in thread_counts {
+                    let (rows, secs, events) =
+                        run_cell(&cell, &topo, &partition, m_p, k, rounds, seed, t);
+                    if let Some(base) = reference.as_ref() {
+                        ensure!(
+                            base == &rows,
+                            "{cell}: rows diverged between --threads {} and --threads \
+                             {t} — the SoA engine leaked thread-count dependence \
+                             (replay with --seed {seed})",
+                            thread_counts[0]
+                        );
+                    } else {
+                        reference = Some(rows);
+                    }
+                    total_events = events;
+                    let eps = if secs > 0.0 { events as f64 / secs } else { 0.0 };
+                    secs_at.push(secs);
+                    events_per_sec.push(eps);
+                    println!(
+                        "{:<26} {:>7} {:>12.4} {:>12.0} {:>12.1}  {}",
+                        cell,
+                        t,
+                        secs,
+                        eps,
+                        peak_rss_kib() as f64 / 1024.0,
+                        if t == thread_counts[0] { "reference" } else { "identical" }
+                    );
+                }
+                let rows = reference.unwrap_or_default();
+                ensure!(!rows.is_empty(), "{cell}: engine produced no rounds");
+                cells.push(
+                    Json::obj()
+                        .set("clients", m)
+                        .set("devices", k)
+                        .set("topology", *spec)
+                        .set("rows_identical", true)
+                        .set("engine_events", total_events as i64)
+                        .set("engine_secs", secs_at)
+                        .set("events_per_sec", events_per_sec)
+                        .set("peak_rss_kib", peak_rss_kib() as i64)
+                        .set("rows", rows),
+                );
+            }
+        }
+    }
+    println!(
+        "\n(same seed, same rows — including the heap-pop count — at every thread"
+    );
+    println!(" count; events/sec and peak RSS are host facts and live in the JSON only.)");
+
+    if let Some(path) = args.get("trace") {
+        let bytes = smoke_trace(seed, *thread_counts.last().unwrap())?;
+        std::fs::write(path, bytes)?;
+        println!("[saved {path} (Chrome trace; open in Perfetto)]");
+    }
+
+    let json = Json::obj()
+        .set("name", "megascale")
+        .set("smoke", smoke)
+        .set("per_round", m_p)
+        .set("rounds", rounds)
+        .set("seed", format!("{seed:#x}"))
+        .set("threads", thread_counts.to_vec())
+        .set("peak_rss_kib", peak_rss_kib() as i64)
+        .set("cells", Json::Arr(cells));
+    super::save_json(args, "BENCH_megascale", &json)
+}

@@ -19,7 +19,11 @@
 //! grouping at (near-)equal makespan; `parscale` sweeps the
 //! group-sharded parallel engine (`--threads` 1/2/4/8 × topology),
 //! asserts byte-identical rows at every thread count, and reports the
-//! wall-clock speedup (`BENCH_parscale.json`).
+//! wall-clock speedup (`BENCH_parscale.json`); `megascale` sweeps the
+//! SoA-table engine at population scale (100k smoke / 1M full clients
+//! × devices × topology × threads), asserts byte-identical rows —
+//! including the deterministic heap-pop count — and reports events/sec
+//! plus peak RSS (`BENCH_megascale.json`).
 
 pub mod ablation;
 pub mod asyncscale;
@@ -27,6 +31,7 @@ pub mod compression;
 pub mod convergence;
 pub mod dynamics;
 pub mod figures;
+pub mod megascale;
 pub mod parscale;
 pub mod statescale;
 pub mod tables;
@@ -84,6 +89,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "asyncscale" => asyncscale::asyncscale(args),
         "toposcale" => toposcale::toposcale(args),
         "parscale" => parscale::parscale(args),
+        "megascale" => megascale::megascale(args),
         "ablate" => ablation::ablate(args),
         "all" => {
             for id in [
@@ -98,7 +104,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         }
         _ => bail!(
             "unknown experiment {id:?}; ids: table1 table2 table3 fig4..fig11 dynamics \
-             compression statescale asyncscale toposcale parscale ablate all"
+             compression statescale asyncscale toposcale parscale megascale ablate all"
         ),
     }
 }

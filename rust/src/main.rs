@@ -37,7 +37,7 @@ USAGE:
                [--buffer K] [--max-staleness S] [--staleness-weight const|poly:A]
                [--topology flat|groups:G[:BW:LAT]|tree:F1xF2[:BW:LAT]] [--threads N]
                [--trace PATH]  (Chrome trace-event JSON; load in Perfetto)
-  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|asyncscale|toposcale|parscale|ablate|all> [--results DIR] [--trace PATH] [...]
+  parrot exp <table1|table2|table3|fig4|...|fig11|dynamics|compression|statescale|asyncscale|toposcale|parscale|megascale|ablate|all> [--results DIR] [--trace PATH] [...]
   parrot serve  --addr HOST:PORT --devices K [run flags]
   parrot worker --addr HOST:PORT --id I      [run flags]
   parrot info   [--artifacts DIR]

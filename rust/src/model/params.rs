@@ -36,6 +36,28 @@ impl ParamSet {
         ParamSet::zeros(&other.shapes)
     }
 
+    /// [`ParamSet::zeros`] drawing its tensor buffers from a pool
+    /// instead of the allocator — the per-round aggregation scratch
+    /// path (see [`AggPool`]).  Identical contents (all zeros), only
+    /// the buffers' provenance differs.
+    pub fn zeros_in(shapes: &[Vec<usize>], pool: &mut AggPool) -> ParamSet {
+        ParamSet {
+            shapes: shapes.to_vec(),
+            tensors: shapes
+                .iter()
+                .map(|s| pool.take(s.iter().product::<usize>().max(1)))
+                .collect(),
+        }
+    }
+
+    /// Hand this set's tensor buffers back to `pool` for reuse.  The
+    /// shapes are dropped; only the f32 backing stores are retained.
+    pub fn recycle_into(self, pool: &mut AggPool) {
+        for t in self.tensors {
+            pool.put(t);
+        }
+    }
+
     /// He-normal init matching `ModelSpec.init` semantics on the Python
     /// side (weights ~ N(0, 2/fan_in), 1-d tensors zero).  Numerically
     /// different draws than jax's PRNG — used when Rust owns init; the
@@ -202,6 +224,13 @@ impl WeightedAccum {
         WeightedAccum { sum: ParamSet::zeros(shapes), weight: 0.0 }
     }
 
+    /// [`WeightedAccum::new`] with pooled tensor buffers — the
+    /// aggregator tiers' per-round accumulators reuse the previous
+    /// round's buffers instead of allocating one per entry per merge.
+    pub fn new_in(shapes: &[Vec<usize>], pool: &mut AggPool) -> WeightedAccum {
+        WeightedAccum { sum: ParamSet::zeros_in(shapes, pool), weight: 0.0 }
+    }
+
     pub fn add(&mut self, p: &ParamSet, w: f64) {
         self.sum.add_scaled(p, w as f32);
         self.weight += w;
@@ -221,6 +250,83 @@ impl WeightedAccum {
         let mut m = self.sum.clone();
         m.scale((1.0 / self.weight) as f32);
         Some(m)
+    }
+}
+
+/// Size-class buffer pool for aggregation scratch: freed `Vec<f32>`
+/// tensor buffers are binned by ceil-log2 capacity and handed back out
+/// zeroed, so the per-round device/tier/server merges reuse the
+/// previous round's allocations instead of allocating one buffer per
+/// client per entry.  Exclusive ownership (one pool per aggregation
+/// actor, `&mut` everywhere) — no locking, no unordered iteration, and
+/// the pooled results are element-for-element identical to the
+/// allocator path (property-tested in `aggregation::tests`).
+#[derive(Debug, Default)]
+pub struct AggPool {
+    /// `classes[c]` holds free buffers of capacity in (2^(c-1), 2^c].
+    classes: Vec<SizeClass>,
+    /// `take` calls served from a free list.
+    pub hits: u64,
+    /// `take` calls that fell through to the allocator.
+    pub misses: u64,
+    /// Buffers handed back via `put`.
+    pub recycled: u64,
+}
+
+#[derive(Debug, Default)]
+struct SizeClass {
+    free: Vec<Vec<f32>>,
+}
+
+impl AggPool {
+    pub fn new() -> AggPool {
+        AggPool::default()
+    }
+
+    /// Ceil-log2 size class of a buffer length (class 0 holds lengths
+    /// 0 and 1).
+    fn class_of(len: usize) -> usize {
+        (usize::BITS - len.max(1).wrapping_sub(1).leading_zeros()) as usize
+    }
+
+    fn class_mut(&mut self, c: usize) -> &mut SizeClass {
+        if c >= self.classes.len() {
+            self.classes.resize_with(c + 1, SizeClass::default);
+        }
+        &mut self.classes[c]
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing a freed
+    /// buffer of the same size class when one is available.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let c = Self::class_of(len);
+        match self.class_mut(c).free.pop() {
+            Some(mut buf) => {
+                self.hits += 1;
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer for reuse; contents are discarded.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let c = Self::class_of(buf.capacity());
+        self.recycled += 1;
+        self.class_mut(c).free.push(buf);
+    }
+
+    /// Free buffers currently parked across all size classes.
+    pub fn free_buffers(&self) -> usize {
+        self.classes.iter().map(|c| c.free.len()).sum()
     }
 }
 
@@ -366,5 +472,44 @@ mod tests {
     #[test]
     fn empty_accum_mean_none() {
         assert!(WeightedAccum::new(&shapes()).mean().is_none());
+    }
+
+    #[test]
+    fn pool_reuses_and_zeroes_buffers() {
+        let mut pool = AggPool::new();
+        let mut a = pool.take(12);
+        assert_eq!(pool.misses, 1);
+        assert!(a.iter().all(|&x| x == 0.0));
+        a[3] = 7.5;
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.recycled, 1);
+        assert_eq!(pool.free_buffers(), 1);
+        // Same size class (12 and 16 both round up to 2^4): the freed
+        // buffer comes back, zeroed, with its capacity intact.
+        let b = pool.take(16);
+        assert_eq!(pool.hits, 1);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 0.0), "recycled buffer must be re-zeroed");
+        assert!(b.capacity() >= cap);
+        assert_eq!(pool.free_buffers(), 0);
+        // Different class: allocator path again.
+        let c = pool.take(1000);
+        assert_eq!(pool.misses, 2);
+        assert_eq!(c.len(), 1000);
+    }
+
+    #[test]
+    fn zeros_in_matches_zeros() {
+        let mut pool = AggPool::new();
+        let a = ParamSet::zeros(&shapes());
+        let b = ParamSet::zeros_in(&shapes(), &mut pool);
+        assert_eq!(a, b);
+        // Round-trip: recycle, re-take from the pool, still identical.
+        b.recycle_into(&mut pool);
+        assert_eq!(pool.free_buffers(), 3);
+        let c = ParamSet::zeros_in(&shapes(), &mut pool);
+        assert_eq!(a, c);
+        assert_eq!(pool.hits, 3);
     }
 }

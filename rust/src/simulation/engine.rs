@@ -146,8 +146,10 @@ pub enum TaskState {
     Dropped,
 }
 
-/// One client task flowing through the engine.
-#[derive(Debug, Clone)]
+/// One client task flowing through the engine.  Plan builders still
+/// construct tasks one at a time through this row view; the engine
+/// stores them columnar in a [`TaskTable`].
+#[derive(Debug, Clone, Copy)]
 pub struct SimTask {
     pub client: usize,
     /// Effective samples N_m · E.
@@ -167,6 +169,99 @@ pub struct SimTask {
 impl SimTask {
     pub fn new(client: usize, n_eff: usize, noise: f64) -> SimTask {
         SimTask { client, n_eff, noise, predicted: None, state: TaskState::Pending, realized: 0.0 }
+    }
+}
+
+/// Struct-of-arrays task storage: [`SimTask`]'s fields as parallel
+/// columns indexed by dense task id.  The megascale layout — one
+/// 100k-task round is six flat allocations instead of 100k heap
+/// objects, shards borrow the immutable columns instead of cloning
+/// their slice of tasks, and the mutable columns (`state`, `realized`)
+/// are the only per-round scratch.
+#[derive(Debug, Clone, Default)]
+pub struct TaskTable {
+    pub client: Vec<usize>,
+    pub n_eff: Vec<usize>,
+    pub noise: Vec<f64>,
+    pub predicted: Vec<Option<f64>>,
+    pub state: Vec<TaskState>,
+    pub realized: Vec<f64>,
+}
+
+impl TaskTable {
+    pub fn new() -> TaskTable {
+        TaskTable::default()
+    }
+
+    pub fn with_capacity(n: usize) -> TaskTable {
+        TaskTable {
+            client: Vec::with_capacity(n),
+            n_eff: Vec::with_capacity(n),
+            noise: Vec::with_capacity(n),
+            predicted: Vec::with_capacity(n),
+            state: Vec::with_capacity(n),
+            realized: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.client.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.client.is_empty()
+    }
+
+    /// Append one task; returns its dense id.
+    pub fn push(&mut self, t: SimTask) -> usize {
+        let id = self.client.len();
+        self.client.push(t.client);
+        self.n_eff.push(t.n_eff);
+        self.noise.push(t.noise);
+        self.predicted.push(t.predicted);
+        self.state.push(t.state);
+        self.realized.push(t.realized);
+        id
+    }
+
+    /// Row view of task `i` (copies the scalars out of the columns).
+    pub fn row(&self, i: usize) -> SimTask {
+        SimTask {
+            client: self.client[i],
+            n_eff: self.n_eff[i],
+            noise: self.noise[i],
+            predicted: self.predicted[i],
+            state: self.state[i],
+            realized: self.realized[i],
+        }
+    }
+
+    /// Iterate row views in task-id order.
+    pub fn rows(&self) -> impl Iterator<Item = SimTask> + '_ {
+        (0..self.len()).map(|i| self.row(i))
+    }
+
+    /// Re-attach the engine's mutable columns (`state`, `realized`)
+    /// to this table's immutable ones.  The engine borrows the
+    /// immutable columns for the round and hands back only what it
+    /// mutated; this stitches the full table together for the outcome.
+    pub fn restore(mut self, run: TaskTable) -> TaskTable {
+        debug_assert_eq!(run.state.len(), self.len());
+        debug_assert_eq!(run.realized.len(), self.len());
+        self.state = run.state;
+        self.realized = run.realized;
+        self
+    }
+}
+
+impl FromIterator<SimTask> for TaskTable {
+    fn from_iter<I: IntoIterator<Item = SimTask>>(iter: I) -> TaskTable {
+        let it = iter.into_iter();
+        let mut t = TaskTable::with_capacity(it.size_hint().0);
+        for task in it {
+            t.push(task);
+        }
+        t
     }
 }
 
@@ -252,7 +347,7 @@ pub struct TieredTail {
 /// What a scheme policy hands the engine for one round.
 #[derive(Debug)]
 pub struct RoundPlan {
-    pub tasks: Vec<SimTask>,
+    pub tasks: TaskTable,
     /// Executor count (SP: 1, RW/SD: M_p, FA/Parrot: K).
     pub n_exec: usize,
     /// Initial alive mask per executor slot (length `n_exec`).
@@ -296,7 +391,10 @@ struct ExecState {
 /// Everything the round produced.
 #[derive(Debug)]
 pub struct RoundOutcome {
-    pub tasks: Vec<SimTask>,
+    pub tasks: TaskTable,
+    /// Heap pops handled this round (deterministic event throughput
+    /// numerator for the megascale events/sec column).
+    pub events: u64,
     /// Per-executor productive compute seconds.
     pub busy: Vec<f64>,
     /// Per-executor per-task comm occupancy seconds.
@@ -339,8 +437,21 @@ struct Core<'a> {
     cost: &'a WorkloadCost,
     dynamics: &'a DynamicsSpec,
     rng: Rng,
-    tasks: Vec<SimTask>,
+    /// Immutable task columns, borrowed from the round's [`TaskTable`]
+    /// (global task-id space; shard cores index them through `ids`).
+    clients: &'a [usize],
+    n_effs: &'a [usize],
+    noises: &'a [f64],
+    /// Local→global task-id map for shard cores (`None` = identity:
+    /// the single-heap path and the merge parent run in global ids).
+    ids: Option<&'a [usize]>,
+    /// Mutable task columns, owned for the round (local id space).
+    task_state: Vec<TaskState>,
+    task_realized: Vec<f64>,
     execs: Vec<ExecState>,
+    /// Incrementally-maintained alive-executor count (kept in lockstep
+    /// with `execs[..].alive` by DeviceJoin/DeviceLeave).
+    alive: usize,
     shared: VecDeque<usize>,
     refill: RefillPolicy,
     reassign: ReassignPolicy,
@@ -348,7 +459,14 @@ struct Core<'a> {
     comm_up: f64,
     bytes_down: u64,
     bytes_up: u64,
-    state: StatePlan,
+    /// Per-task `StateLoad` legs, global task-id indexed (borrowed from
+    /// the plan; shard cores read through `ids`).
+    state_legs: &'a [StateLeg],
+    state_prefetch: bool,
+    /// Round-tail `StateFlush` leg (priced once, by whoever runs the
+    /// tail — zeroed on shard cores).
+    state_tail_bytes: u64,
+    state_tail_secs: f64,
     state_booked: Vec<bool>,
     state_bytes: u64,
     state_secs: f64,
@@ -378,9 +496,20 @@ struct Core<'a> {
     completed: usize,
     departures: usize,
     joins: usize,
+    /// Heap pops handled (the deterministic events/sec numerator).
+    events: u64,
 }
 
 impl<'a> Core<'a> {
+    /// Global task id for local id `t`.
+    #[inline]
+    fn gid(&self, t: usize) -> usize {
+        match self.ids {
+            Some(m) => m[t],
+            None => t,
+        }
+    }
+
     fn push(&mut self, time: f64, epoch: u64, event: Event) {
         self.heap.push(Scheduled { time, seq: self.seq, epoch, event });
         self.seq += self.seq_stride;
@@ -393,16 +522,20 @@ impl<'a> Core<'a> {
         }
     }
 
-    fn alive_count(&self) -> usize {
+    /// O(devices) reference scan for the incremental `alive` counter —
+    /// kept only as the regression-test oracle (the counter replaced it
+    /// on the per-event paths).
+    #[cfg(test)]
+    fn alive_scan(&self) -> usize {
         self.execs.iter().filter(|e| e.alive).count()
     }
 
     /// Compute seconds of `task` on executor `slot` (heterogeneity ×
     /// pre-drawn noise; straggler injection is applied at TaskStart).
     fn base_secs(&self, slot: usize, task: usize) -> f64 {
-        let t = &self.tasks[task];
+        let g = self.gid(task);
         let model = self.cluster.executor_model(slot);
-        self.cluster.task_time(self.cost, model, self.round, t.n_eff, 1) * t.noise
+        self.cluster.task_time(self.cost, model, self.round, self.n_effs[g], 1) * self.noises[g]
     }
 
     /// Remaining committed seconds on `slot` (in-flight + queued) — the
@@ -447,13 +580,13 @@ impl<'a> Core<'a> {
     /// accounting), so a second `TaskStart` must not double-charge the
     /// load into `state_secs` or the timeline.
     fn state_stall(&mut self, task: usize) -> f64 {
-        if self.state.legs.is_empty() || self.state_booked[task] {
+        if self.state_legs.is_empty() || self.state_booked[task] {
             return 0.0;
         }
-        let leg = self.state.legs.get(task).copied().unwrap_or_default();
+        let leg = self.state_legs.get(self.gid(task)).copied().unwrap_or_default();
         self.state_booked[task] = true;
         self.state_bytes += leg.bytes;
-        let stall = if self.state.prefetch { (leg.ready - self.now).max(0.0) } else { leg.secs };
+        let stall = if self.state_prefetch { (leg.ready - self.now).max(0.0) } else { leg.secs };
         self.state_secs += stall;
         stall
     }
@@ -465,7 +598,7 @@ impl<'a> Core<'a> {
             dur *= st.law.sample(&mut self.rng);
         }
         let stall = self.state_stall(task);
-        self.tasks[task].state = TaskState::Running;
+        self.task_state[task] = TaskState::Running;
         // The stall shifts the task's effective start so downstream
         // elapsed/projected arithmetic stays exact.
         self.execs[slot].current = Some((task, self.now + stall, dur));
@@ -514,17 +647,17 @@ impl<'a> Core<'a> {
         // The down leg has completed by now; the up leg is booked at
         // its own CommDone (a departure mid-upload loses that leg).
         self.execs[slot].comm += self.comm_down;
-        self.tasks[task].state = TaskState::Done;
-        self.tasks[task].realized = dur;
+        self.task_state[task] = TaskState::Done;
+        self.task_realized[task] = dur;
         self.completed += 1;
         self.work_end = self.now;
-        let client = self.tasks[task].client;
+        let client = self.clients[self.gid(task)];
         self.emit(self.now - dur, self.now, Track::Device(slot), EvKind::Task { task, client });
         if self.record_history {
             let rec = TaskRecord {
                 round: self.round,
                 device: slot,
-                n_samples: self.tasks[task].n_eff,
+                n_samples: self.n_effs[self.gid(task)],
                 secs: dur,
             };
             if let Some(buf) = self.sched_ops.as_mut() {
@@ -573,7 +706,7 @@ impl<'a> Core<'a> {
         self.wasted += elapsed;
         // The down leg did happen (the drop fires during compute).
         self.execs[slot].comm += self.comm_down;
-        self.tasks[task].state = TaskState::Dropped;
+        self.task_state[task] = TaskState::Dropped;
         self.dropped += 1;
         self.work_end = self.now;
         self.try_start(slot);
@@ -583,23 +716,24 @@ impl<'a> Core<'a> {
         if slot >= self.execs.len() || !self.execs[slot].alive {
             return;
         }
-        if self.alive_count() <= 1 {
+        if self.alive <= 1 {
             // Never orphan the whole round: the last executor stays.
             return;
         }
         self.execs[slot].alive = false;
+        self.alive -= 1;
         self.execs[slot].epoch += 1;
         self.departures += 1;
         self.emit(self.now, self.now, Track::Device(slot), EvKind::DeviceLeave { device: slot });
         let mut orphans: Vec<usize> = Vec::new();
         if let Some((task, start, dur)) = self.execs[slot].current.take() {
-            if self.tasks[task].state != TaskState::Done {
+            if self.task_state[task] != TaskState::Done {
                 // Abort the in-flight task: partial work is wasted.
                 let elapsed =
                     (self.now - start - self.comm_down).max(0.0).min(dur.max(0.0));
                 self.execs[slot].wasted += elapsed;
                 self.wasted += elapsed;
-                self.tasks[task].state = TaskState::Pending;
+                self.task_state[task] = TaskState::Pending;
                 orphans.push(task);
             }
             // A Done task whose upload leg was in flight keeps its
@@ -629,6 +763,7 @@ impl<'a> Core<'a> {
             return;
         }
         self.execs[slot].alive = true;
+        self.alive += 1;
         self.joins += 1;
         self.emit(self.now, self.now, Track::Device(slot), EvKind::DeviceJoin { device: slot });
         self.try_start(slot);
@@ -641,7 +776,7 @@ impl<'a> Core<'a> {
         let alive: Vec<bool> = self.execs.iter().map(|e| e.alive).collect();
         if !alive.iter().any(|&a| a) {
             for t in orphans {
-                self.tasks[t].state = TaskState::Dropped;
+                self.task_state[t] = TaskState::Dropped;
                 self.dropped += 1;
             }
             return;
@@ -660,7 +795,7 @@ impl<'a> Core<'a> {
                 };
                 if can_greedy {
                     let items: Vec<(usize, usize)> =
-                        orphans.iter().map(|&t| (t, self.tasks[t].n_eff)).collect();
+                        orphans.iter().map(|&t| (t, self.n_effs[self.gid(t)])).collect();
                     let base: Vec<f64> =
                         (0..self.execs.len()).map(|i| self.projected_load(i)).collect();
                     let placed = sched.as_deref_mut().unwrap().reassign_orphans(
@@ -700,7 +835,7 @@ impl<'a> Core<'a> {
                 // (or every projected load compared as NaN).  Mirror the
                 // all-dead early return in `place_orphans`: the orphan
                 // is dropped, not a crash.
-                self.tasks[t].state = TaskState::Dropped;
+                self.task_state[t] = TaskState::Dropped;
                 self.dropped += 1;
                 continue;
             }
@@ -845,7 +980,7 @@ impl<'a> Core<'a> {
             TailComm::None => {}
             TailComm::PerExecutor { down, up } => {
                 // Broadcast down to every scheduled task's executor.
-                let scheduled = self.tasks.len() as u64;
+                let scheduled = self.task_state.len() as u64;
                 self.bytes += down * scheduled;
                 self.trips += scheduled;
                 t += self.cluster.comm_time(down as usize);
@@ -858,7 +993,7 @@ impl<'a> Core<'a> {
                 }
             }
             TailComm::Hierarchical { s_a_down, s_a_up, s_e_total } => {
-                let k_up = self.alive_count() as u64;
+                let k_up = self.alive as u64;
                 // Broadcast s_a down per initially-alive device.
                 self.bytes += s_a_down * initial_alive as u64;
                 self.trips += initial_alive as u64;
@@ -895,12 +1030,12 @@ impl<'a> Core<'a> {
         }
         // StateFlush leg: round-boundary dirty write-back plus remote
         // write-back returns, serialized after the comm tail.
-        if self.state.tail_secs > 0.0 || self.state.tail_bytes > 0 {
-            let bytes = self.state.tail_bytes;
-            self.emit(t, t + self.state.tail_secs, Track::Server, EvKind::StateFlush { bytes });
-            t += self.state.tail_secs;
-            self.state_secs += self.state.tail_secs;
-            self.state_bytes += self.state.tail_bytes;
+        if self.state_tail_secs > 0.0 || self.state_tail_bytes > 0 {
+            let bytes = self.state_tail_bytes;
+            self.emit(t, t + self.state_tail_secs, Track::Server, EvKind::StateFlush { bytes });
+            t += self.state_tail_secs;
+            self.state_secs += self.state_tail_secs;
+            self.state_bytes += self.state_tail_bytes;
         }
         // Late churn events may have advanced `now` past the last real
         // work; the round ends when work + tail comm end, not when the
@@ -917,6 +1052,7 @@ impl<'a> Core<'a> {
             self.try_start(slot);
         }
         while let Some(s) = self.heap.pop() {
+            self.events += 1;
             self.now = self.now.max(s.time);
             self.key = (s.time.to_bits(), s.seq);
             match s.event {
@@ -950,9 +1086,9 @@ impl<'a> Core<'a> {
             }
         }
         // Anything still pending had nowhere to run.
-        for t in &mut self.tasks {
-            if t.state == TaskState::Pending {
-                t.state = TaskState::Dropped;
+        for st in &mut self.task_state {
+            if *st == TaskState::Pending {
+                *st = TaskState::Dropped;
                 self.dropped += 1;
             }
         }
@@ -961,11 +1097,12 @@ impl<'a> Core<'a> {
         // will still flush) their state, so the bytes were spent even
         // though no compute happened — this is what keeps the engine's
         // state column equal to the store's counters under drops.
-        if !self.state.legs.is_empty() {
+        if !self.state_legs.is_empty() {
             for t in 0..self.state_booked.len() {
                 if !self.state_booked[t] {
                     self.state_booked[t] = true;
-                    self.state_bytes += self.state.legs.get(t).map(|l| l.bytes).unwrap_or(0);
+                    let g = self.gid(t);
+                    self.state_bytes += self.state_legs.get(g).map(|l| l.bytes).unwrap_or(0);
                 }
             }
         }
@@ -986,7 +1123,17 @@ impl<'a> Core<'a> {
             busy: self.execs.iter().map(|e| e.busy).collect(),
             comm_occ: self.execs.iter().map(|e| e.comm).collect(),
             alive: self.execs.iter().map(|e| e.alive).collect(),
-            tasks: self.tasks,
+            // Only the mutable columns are owned here; the caller
+            // re-attaches the immutable ones via `TaskTable::restore`.
+            tasks: TaskTable {
+                client: Vec::new(),
+                n_eff: Vec::new(),
+                noise: Vec::new(),
+                predicted: Vec::new(),
+                state: self.task_state,
+                realized: self.task_realized,
+            },
+            events: self.events,
             work_end: self.work_end,
             end: self.now,
             bytes: self.bytes,
@@ -1101,15 +1248,24 @@ pub fn run_round_opts(
     // ---- legacy single-heap path (flat / shared-pull plans) ----------
     let mut rng = Rng::new(dyn_seed).derive(round as u64);
     let execs = exec_states(&plan);
-    let n_tasks = plan.tasks.len();
+    let mut table = plan.tasks;
+    let state = plan.state;
+    let n_tasks = table.len();
+    let alive_now = execs.iter().filter(|e| e.alive).count();
     let mut core = Core {
         round,
         cluster,
         cost,
         dynamics,
         rng: rng.derive(0x57A6),
-        tasks: plan.tasks,
+        clients: &table.client,
+        n_effs: &table.n_eff,
+        noises: &table.noise,
+        ids: None,
+        task_state: std::mem::take(&mut table.state),
+        task_realized: std::mem::take(&mut table.realized),
         execs,
+        alive: alive_now,
         shared: plan.pull.into_iter().collect(),
         refill: plan.refill,
         reassign: plan.reassign,
@@ -1117,7 +1273,10 @@ pub fn run_round_opts(
         comm_up: plan.per_task_comm.1,
         bytes_down: plan.per_task_bytes.0,
         bytes_up: plan.per_task_bytes.1,
-        state: plan.state,
+        state_legs: &state.legs,
+        state_prefetch: state.prefetch,
+        state_tail_bytes: state.tail_bytes,
+        state_tail_secs: state.tail_secs,
         state_booked: vec![false; n_tasks],
         state_bytes: 0,
         state_secs: 0.0,
@@ -1139,13 +1298,16 @@ pub fn run_round_opts(
         completed: 0,
         departures: 0,
         joins: 0,
+        events: 0,
     };
 
-    if core.tasks.is_empty() {
-        let (out, tr) = core.run(TailComm::None, scheduler);
+    if n_tasks == 0 {
+        let (mut out, tr) = core.run(TailComm::None, scheduler);
         if let (Some(dst), Some(tr)) = (trace, tr) {
             *dst = tr;
         }
+        let run_cols = std::mem::take(&mut out.tasks);
+        out.tasks = table.restore(run_cols);
         return out;
     }
 
@@ -1160,12 +1322,13 @@ pub fn run_round_opts(
     // Random churn: departure/rejoin times drawn within a crude
     // makespan estimate so they actually land mid-round.
     if dynamics.churn.leave_prob > 0.0 || dynamics.churn.join_prob > 0.0 {
-        let total_base: f64 = core
-            .tasks
+        let total_base: f64 = table
+            .n_eff
             .iter()
-            .map(|t| (cost.t_sample * t.n_eff as f64 + cost.b_fixed) * t.noise)
+            .zip(&table.noise)
+            .map(|(&n, &noise)| (cost.t_sample * n as f64 + cost.b_fixed) * noise)
             .sum();
-        let horizon = total_base / core.alive_count().max(1) as f64;
+        let horizon = total_base / core.alive.max(1) as f64;
         for slot in 0..core.execs.len() {
             if core.execs[slot].alive {
                 if dynamics.churn.leave_prob > 0.0 && rng.next_f64() < dynamics.churn.leave_prob
@@ -1181,38 +1344,46 @@ pub fn run_round_opts(
         }
     }
 
-    let (out, tr) = core.run(plan.tail, scheduler);
+    let (mut out, tr) = core.run(plan.tail, scheduler);
     if let (Some(dst), Some(tr)) = (trace, tr) {
         *dst = tr;
     }
+    let run_cols = std::mem::take(&mut out.tasks);
+    out.tasks = table.restore(run_cols);
     out
 }
 
 /// One leaf group's slice of the round, built serially before the
 /// workers launch (all index mapping is thread-count independent).
-struct ShardInput {
+/// Shards *borrow* the global task table and state legs — index-range
+/// views instead of per-shard deep clones; only the per-shard runtime
+/// scratch (alive mask, queues, churn) is owned.
+struct ShardInput<'a> {
     shard: usize,
     /// Global slot per local executor index (increasing order).
-    slots: Vec<usize>,
+    slots: &'a [usize],
     /// Global task index per local task index (increasing order).
-    task_globals: Vec<usize>,
-    tasks: Vec<SimTask>,
+    task_globals: &'a [usize],
+    /// The round's global task columns (read through `task_globals`).
+    table: &'a TaskTable,
+    /// Global state legs (no flush tail — the parent prices it once).
+    legs: &'a [StateLeg],
+    prefetch: bool,
     alive: Vec<bool>,
     /// Per local executor: queue of *local* task indices.
     queues: Vec<VecDeque<usize>>,
-    /// Local state legs (no flush tail — the parent prices it once).
-    state: StatePlan,
     /// Churn events for this group, in global draw order, with
     /// device ids already translated to local slots.
     churn: Vec<(f64, Event)>,
 }
 
-/// What a shard worker hands back for the merge.
+/// What a shard worker hands back for the merge: the mutable task
+/// columns (local id space) plus counters — the index maps stay with
+/// the parent.
 struct ShardOut {
     shard: usize,
-    slots: Vec<usize>,
-    task_globals: Vec<usize>,
-    tasks: Vec<SimTask>,
+    task_state: Vec<TaskState>,
+    task_realized: Vec<f64>,
     execs: Vec<ExecState>,
     work_end: f64,
     bytes: u64,
@@ -1224,6 +1395,7 @@ struct ShardOut {
     completed: usize,
     departures: usize,
     joins: usize,
+    events: u64,
     ops: Vec<(f64, u64, HistOp)>,
     trace: Vec<Ev>,
 }
@@ -1241,8 +1413,10 @@ fn run_shard(
     n_shards: usize,
     want_trace: bool,
 ) -> ShardOut {
-    let ShardInput { shard, slots, task_globals, tasks, alive, queues, state, churn } = input;
-    let n_tasks = tasks.len();
+    let ShardInput { shard, slots: _, task_globals, table, legs, prefetch, alive, queues, churn } =
+        input;
+    let n_tasks = task_globals.len();
+    let alive_now = alive.iter().filter(|&&a| a).count();
     let execs: Vec<ExecState> = alive
         .iter()
         .zip(queues)
@@ -1265,8 +1439,16 @@ fn run_shard(
         // are consumed group-locally, so the stream cannot depend on
         // cross-group event interleaving (or the worker count).
         rng: Rng::new(dyn_seed).derive(round as u64).derive(0x57A6).derive(shard as u64),
-        tasks,
+        // Index-range views over the global columns — local task ids
+        // reach them through the `ids` map; nothing is cloned.
+        clients: &table.client,
+        n_effs: &table.n_eff,
+        noises: &table.noise,
+        ids: Some(task_globals),
+        task_state: task_globals.iter().map(|&g| table.state[g]).collect(),
+        task_realized: task_globals.iter().map(|&g| table.realized[g]).collect(),
         execs,
+        alive: alive_now,
         shared: VecDeque::new(),
         refill: plan.refill,
         reassign: plan.reassign,
@@ -1274,7 +1456,10 @@ fn run_shard(
         comm_up: plan.per_task_comm.1,
         bytes_down: plan.per_task_bytes.0,
         bytes_up: plan.per_task_bytes.1,
-        state,
+        state_legs: legs,
+        state_prefetch: prefetch,
+        state_tail_bytes: 0,
+        state_tail_secs: 0.0,
         state_booked: vec![false; n_tasks],
         state_bytes: 0,
         state_secs: 0.0,
@@ -1301,6 +1486,7 @@ fn run_shard(
         completed: 0,
         departures: 0,
         joins: 0,
+        events: 0,
     };
     for (t, event) in churn {
         core.push(t, 0, event);
@@ -1309,9 +1495,8 @@ fn run_shard(
     core.run_events(&mut no_sched);
     ShardOut {
         shard,
-        slots,
-        task_globals,
-        tasks: core.tasks,
+        task_state: core.task_state,
+        task_realized: core.task_realized,
         execs: core.execs,
         work_end: core.work_end,
         bytes: core.bytes,
@@ -1323,6 +1508,7 @@ fn run_shard(
         completed: core.completed,
         departures: core.departures,
         joins: core.joins,
+        events: core.events,
         ops: core.sched_ops.take().unwrap_or_default(),
         trace: core.trace.take().unwrap_or_default(),
     }
@@ -1398,8 +1584,10 @@ fn run_round_sharded(
     if dynamics.churn.leave_prob > 0.0 || dynamics.churn.join_prob > 0.0 {
         let total_base: f64 = plan
             .tasks
+            .n_eff
             .iter()
-            .map(|t| (cost.t_sample * t.n_eff as f64 + cost.b_fixed) * t.noise)
+            .zip(&plan.tasks.noise)
+            .map(|(&n, &noise)| (cost.t_sample * n as f64 + cost.b_fixed) * noise)
             .sum();
         let alive_count = plan.alive.iter().filter(|&&a| a).count();
         let horizon = total_base / alive_count.max(1) as f64;
@@ -1422,8 +1610,6 @@ fn run_round_sharded(
     let want_trace = trace.is_some();
     let mut inputs: Vec<ShardInput> = Vec::with_capacity(n_shards);
     for (sh, churn) in churn.into_iter().enumerate() {
-        let tasks: Vec<SimTask> =
-            task_globals[sh].iter().map(|&g| plan.tasks[g].clone()).collect();
         let alive: Vec<bool> = slots[sh].iter().map(|&g| plan.alive[g]).collect();
         let queues: Vec<VecDeque<usize>> = slots[sh]
             .iter()
@@ -1434,27 +1620,15 @@ fn run_round_sharded(
                     .unwrap_or_default()
             })
             .collect();
-        let state = StatePlan {
-            legs: if plan.state.legs.is_empty() {
-                Vec::new()
-            } else {
-                task_globals[sh]
-                    .iter()
-                    .map(|&g| plan.state.legs.get(g).copied().unwrap_or_default())
-                    .collect()
-            },
-            prefetch: plan.state.prefetch,
-            tail_secs: 0.0,
-            tail_bytes: 0,
-        };
         inputs.push(ShardInput {
             shard: sh,
-            slots: slots[sh].clone(),
-            task_globals: task_globals[sh].clone(),
-            tasks,
+            slots: &slots[sh],
+            task_globals: &task_globals[sh],
+            table: &plan.tasks,
+            legs: &plan.state.legs,
+            prefetch: plan.state.prefetch,
             alive,
             queues,
-            state,
             churn,
         });
     }
@@ -1496,15 +1670,24 @@ fn run_round_sharded(
     let record_history = plan.record_history;
     let initial_mask = plan.alive.clone();
     let execs = exec_states(&plan);
-    let n_tasks = plan.tasks.len();
+    let alive_init = execs.iter().filter(|e| e.alive).count();
+    let mut table = plan.tasks;
+    let state = plan.state;
+    let n_tasks = table.len();
     let mut parent = Core {
         round,
         cluster,
         cost,
         dynamics,
         rng: Rng::new(dyn_seed).derive(round as u64).derive(0x57A6),
-        tasks: plan.tasks,
+        clients: &table.client,
+        n_effs: &table.n_eff,
+        noises: &table.noise,
+        ids: None,
+        task_state: std::mem::take(&mut table.state),
+        task_realized: std::mem::take(&mut table.realized),
         execs,
+        alive: alive_init,
         shared: VecDeque::new(),
         refill: plan.refill,
         reassign: plan.reassign,
@@ -1512,7 +1695,10 @@ fn run_round_sharded(
         comm_up: plan.per_task_comm.1,
         bytes_down: plan.per_task_bytes.0,
         bytes_up: plan.per_task_bytes.1,
-        state: plan.state,
+        state_legs: &state.legs,
+        state_prefetch: state.prefetch,
+        state_tail_bytes: state.tail_bytes,
+        state_tail_secs: state.tail_secs,
         state_booked: vec![false; n_tasks],
         state_bytes: 0,
         state_secs: 0.0,
@@ -1534,15 +1720,15 @@ fn run_round_sharded(
         completed: 0,
         departures: 0,
         joins: 0,
+        events: 0,
     };
     let mut all_ops: Vec<(f64, u64, HistOp)> = Vec::new();
     let mut merged_trace: Vec<Ev> = Vec::new();
     for out in outs {
         let ShardOut {
-            shard: _,
-            slots,
-            task_globals,
-            tasks,
+            shard,
+            task_state,
+            task_realized,
             execs,
             work_end,
             bytes,
@@ -1554,15 +1740,21 @@ fn run_round_sharded(
             completed,
             departures,
             joins,
+            events,
             ops,
             trace,
         } = out;
+        let (slots, task_globals) = (&slots[shard], &task_globals[shard]);
         for (local, e) in execs.into_iter().enumerate() {
             parent.execs[slots[local]] = e;
         }
-        for (local, t) in tasks.into_iter().enumerate() {
-            parent.tasks[task_globals[local]] = t;
+        for (local, st) in task_state.into_iter().enumerate() {
+            parent.task_state[task_globals[local]] = st;
         }
+        for (local, r) in task_realized.into_iter().enumerate() {
+            parent.task_realized[task_globals[local]] = r;
+        }
+        parent.events += events;
         parent.work_end = parent.work_end.max(work_end);
         parent.bytes += bytes;
         parent.trips += trips;
@@ -1618,15 +1810,18 @@ fn run_round_sharded(
     // would sweep them to Dropped and book their state legs.
     for t in 0..n_tasks {
         if task_shard[t] == usize::MAX {
-            if parent.tasks[t].state == TaskState::Pending {
-                parent.tasks[t].state = TaskState::Dropped;
+            if parent.task_state[t] == TaskState::Pending {
+                parent.task_state[t] = TaskState::Dropped;
                 parent.dropped += 1;
             }
-            if !parent.state.legs.is_empty() {
-                parent.state_bytes += parent.state.legs.get(t).map(|l| l.bytes).unwrap_or(0);
+            if !parent.state_legs.is_empty() {
+                parent.state_bytes += parent.state_legs.get(t).map(|l| l.bytes).unwrap_or(0);
             }
         }
     }
+    // The scattered exec states carry post-churn liveness; resync the
+    // incremental counter before the tail prices against it.
+    parent.alive = parent.execs.iter().filter(|e| e.alive).count();
     // Scheduler history: shard-buffered ops applied in global
     // (time, seq) order — seq values are shard-namespaced, so the sort
     // is a total order and per-device subsequences keep their shard's
@@ -1656,10 +1851,12 @@ fn run_round_sharded(
     // tail (the earliest possible cross-WAN interaction) starts at the
     // global work end.
     parent.now = parent.work_end;
-    let (out, tr) = parent.finish(TailComm::Tiered(tt), &initial_mask);
+    let (mut out, tr) = parent.finish(TailComm::Tiered(tt), &initial_mask);
     if let (Some(dst), Some(tr)) = (trace, tr) {
         *dst = tr;
     }
+    let run_cols = std::mem::take(&mut out.tasks);
+    out.tasks = table.restore(run_cols);
     out
 }
 
@@ -1733,9 +1930,11 @@ pub struct AsyncTier {
 
 /// One admitted cohort from the dispatcher's source callback: tasks,
 /// their per-executor queues, and the cohort's state-store plan (leg
-/// `ready` times relative to the admission instant).
+/// `ready` times relative to the admission instant).  The task columns
+/// are spliced wholesale into the dispatcher's arena at admission — a
+/// cohort is an `(arena start, len)` range, not a Vec of task objects.
 pub struct AsyncCohort {
-    pub tasks: Vec<SimTask>,
+    pub tasks: TaskTable,
     pub assigned: Vec<Vec<usize>>,
     pub state: StatePlan,
     pub sched_secs: f64,
@@ -1795,22 +1994,8 @@ pub struct AsyncOutcome {
     /// sequence (`parrot exp asyncscale --smoke`).
     pub arrivals: Vec<u64>,
     pub cohorts: usize,
-}
-
-/// One in-flight task of the async dispatcher.
-struct ATask {
-    n_eff: usize,
-    noise: f64,
-    predicted: Option<f64>,
-    /// Global client id (trace labelling only).
-    client: usize,
-    cohort: usize,
-    leg: StateLeg,
-    has_leg: bool,
-    prefetch: bool,
-    leg_booked: bool,
-    /// Model version the executor held when the task started.
-    born: u64,
+    /// Heap pops handled (deterministic events/sec numerator).
+    pub events: u64,
 }
 
 struct ADev {
@@ -1860,7 +2045,24 @@ struct AsyncCore<'a> {
     dyn_seed: u64,
     spec: AsyncSpec,
     comm: AsyncComm,
-    tasks: Vec<ATask>,
+    // Arena-allocated task columns (append-only, admission order): one
+    // in-flight task = one index across these parallel vectors.
+    a_n_eff: Vec<usize>,
+    a_noise: Vec<f64>,
+    a_predicted: Vec<Option<f64>>,
+    /// Global client id (trace labelling only).
+    a_client: Vec<usize>,
+    a_cohort: Vec<usize>,
+    /// Model version the executor held when the task started.
+    a_born: Vec<u64>,
+    a_leg_booked: Vec<bool>,
+    /// Per cohort: `(arena start, len)` of its task range.
+    cohort_range: Vec<(usize, usize)>,
+    /// Per cohort: its state plan (legs local-indexed; `ready` times
+    /// relative to the admission instant in `cohort_admit`).
+    cohort_state: Vec<StatePlan>,
+    /// Per cohort: absolute admission time.
+    cohort_admit: Vec<f64>,
     devs: Vec<ADev>,
     heap: BinaryHeap<Scheduled>,
     seq: u64,
@@ -1889,6 +2091,8 @@ struct AsyncCore<'a> {
     completed: usize,
     dropped: usize,
     wasted: f64,
+    /// Heap pops handled (deterministic events/sec numerator).
+    events: u64,
     /// Typed event trace (None = tracing off).  The dispatcher is
     /// single-heap and single-threaded, so emission order is already
     /// the total order — `seq` is just the buffer index.
@@ -1909,9 +2113,9 @@ impl<'a> AsyncCore<'a> {
     }
 
     fn base_secs(&self, slot: usize, task: usize) -> f64 {
-        let t = &self.tasks[task];
         let model = self.cluster.executor_model(slot);
-        self.cluster.task_time(self.cost, model, t.cohort, t.n_eff, 1) * t.noise
+        let (cohort, n_eff) = (self.a_cohort[task], self.a_n_eff[task]);
+        self.cluster.task_time(self.cost, model, cohort, n_eff, 1) * self.a_noise[task]
     }
 
     /// Remaining committed seconds on `slot` (in-flight + queued), in
@@ -1941,14 +2145,20 @@ impl<'a> AsyncCore<'a> {
     }
 
     /// Book the task's state leg exactly once and return its stall
-    /// (same discipline as the sync engine's `state_stall`).
+    /// (same discipline as the sync engine's `state_stall`).  Legs live
+    /// in the owning cohort's plan, reached through the cohort's arena
+    /// range; plan-relative `ready` times shift by the admission
+    /// instant.
     fn state_stall(&mut self, task: usize) -> f64 {
-        let t = &self.tasks[task];
-        if !t.has_leg || t.leg_booked {
+        let c = self.a_cohort[task];
+        if self.cohort_state[c].legs.is_empty() || self.a_leg_booked[task] {
             return 0.0;
         }
-        let (leg, prefetch) = (t.leg, t.prefetch);
-        self.tasks[task].leg_booked = true;
+        let (start, _) = self.cohort_range[c];
+        let mut leg = self.cohort_state[c].legs.get(task - start).copied().unwrap_or_default();
+        leg.ready += self.cohort_admit[c];
+        let prefetch = self.cohort_state[c].prefetch;
+        self.a_leg_booked[task] = true;
         self.acc.state_bytes += leg.bytes;
         let stall = if prefetch { (leg.ready - self.now).max(0.0) } else { leg.secs };
         self.acc.state_secs += stall;
@@ -1957,13 +2167,13 @@ impl<'a> AsyncCore<'a> {
 
     fn on_task_start(&mut self, slot: usize, task: usize) {
         let mut dur = self.base_secs(slot, task);
-        let c = self.tasks[task].cohort;
+        let c = self.a_cohort[task];
         let st = &self.dynamics.straggler;
         if st.prob > 0.0 && self.cohort_rng[c].next_f64() < st.prob {
             dur *= st.law.sample(&mut self.cohort_rng[c]);
         }
         let stall = self.state_stall(task);
-        self.tasks[task].born = self.version;
+        self.a_born[task] = self.version;
         self.devs[slot].current = Some((task, self.now + stall, dur));
         if stall > 0.0 {
             let (t0, t1) = (self.now, self.now + stall);
@@ -2006,22 +2216,22 @@ impl<'a> AsyncCore<'a> {
         self.devs[slot].busy += dur;
         self.completed += 1;
         self.acc.completed += 1;
-        let client = self.tasks[task].client;
+        let client = self.a_client[task];
         self.emit(self.now - dur, self.now, Track::Device(slot), EvKind::Task { task, client });
-        if let Some(p) = self.tasks[task].predicted {
+        if let Some(p) = self.a_predicted[task] {
             self.acc.act.push(dur);
             self.acc.pred.push(p);
         }
         scheduler.record(TaskRecord {
-            round: self.tasks[task].cohort,
+            round: self.a_cohort[task],
             device: slot,
-            n_samples: self.tasks[task].n_eff,
+            n_samples: self.a_n_eff[task],
             secs: dur,
         });
-        let born = self.tasks[task].born;
+        let born = self.a_born[task];
         self.buffered.push((slot, born));
         self.arrivals.push(born);
-        self.cohort_settled(self.tasks[task].cohort);
+        self.cohort_settled(self.a_cohort[task]);
         self.devs[slot].current = None;
         self.try_start(slot);
         if self.buffered.len() >= self.spec.buffer {
@@ -2047,7 +2257,7 @@ impl<'a> AsyncCore<'a> {
         self.dropped += 1;
         self.acc.dropped += 1;
         self.pending -= 1;
-        self.cohort_settled(self.tasks[task].cohort);
+        self.cohort_settled(self.a_cohort[task]);
         self.try_start(slot);
         self.try_admit(scheduler, source);
     }
@@ -2259,33 +2469,37 @@ impl<'a> AsyncCore<'a> {
             // must be run-to-run identical).
             let placed = cohort.tasks.len();
             self.emit(self.now, self.now, Track::Run, EvKind::Sched { round: id, placed });
-            if cohort.tasks.is_empty() {
+            // Batch admission: the cohort becomes an `(arena start,
+            // len)` range — its columns are spliced into the arena
+            // wholesale (six memcpy-style extends, not one heap object
+            // per task) and its state plan is kept cohort-level, with
+            // prefetch `ready` times resolved lazily against the
+            // admission instant.  Ranges are recorded for empty cohorts
+            // too, so cohort id stays a valid index everywhere.
+            let n = cohort.tasks.len();
+            let base_id = self.a_client.len();
+            self.cohort_range.push((base_id, n));
+            self.cohort_admit.push(self.now);
+            let AsyncCohort { tasks, assigned, state, .. } = cohort;
+            self.cohort_state.push(state);
+            if n == 0 {
                 continue; // fully-unavailable cohort: nothing to run
             }
-            let base_id = self.tasks.len();
-            let has_leg = !cohort.state.legs.is_empty();
-            for (local, t) in cohort.tasks.iter().enumerate() {
-                let mut leg = cohort.state.legs.get(local).copied().unwrap_or_default();
-                // Plan-relative prefetch ready times become absolute.
-                leg.ready += self.now;
-                self.tasks.push(ATask {
-                    n_eff: t.n_eff,
-                    noise: t.noise,
-                    predicted: t.predicted,
-                    client: t.client,
-                    cohort: id,
-                    leg,
-                    has_leg,
-                    prefetch: cohort.state.prefetch,
-                    leg_booked: false,
-                    born: 0,
-                });
-            }
-            self.pending += cohort.tasks.len();
-            for (slot, q) in cohort.assigned.iter().enumerate() {
-                for &local in q {
-                    self.devs[slot].queue.push_back(base_id + local);
-                }
+            self.a_n_eff.extend_from_slice(&tasks.n_eff);
+            self.a_noise.extend_from_slice(&tasks.noise);
+            self.a_predicted.extend_from_slice(&tasks.predicted);
+            self.a_client.extend_from_slice(&tasks.client);
+            self.a_cohort.resize(base_id + n, id);
+            self.a_born.resize(base_id + n, 0);
+            self.a_leg_booked.resize(base_id + n, false);
+            self.pending += n;
+            // Per-executor batched scheduling: one queue extend per
+            // executor instead of one push per task.  Event-identical
+            // to the per-task loop — an idle executor by invariant has
+            // an empty queue, so its first claim is the same task, and
+            // `try_start` on a busy slot consumes no sequence numbers.
+            for (slot, q) in assigned.iter().enumerate() {
+                self.devs[slot].queue.extend(q.iter().map(|&local| base_id + local));
             }
             // Mirror the sync engine's initial sweep: freed executors
             // claim their first task in slot order.
@@ -2304,6 +2518,7 @@ impl<'a> AsyncCore<'a> {
         loop {
             match self.heap.pop() {
                 Some(s) => {
+                    self.events += 1;
                     self.now = self.now.max(s.time);
                     match s.event {
                         Event::TaskStart { task, device } => self.on_task_start(device, task),
@@ -2335,10 +2550,18 @@ impl<'a> AsyncCore<'a> {
         // churn, but the exactly-once invariant is cheap to keep), and
         // any settled-cohort flush tail a trailing drop left behind —
         // the store already spent those bytes.
-        for t in &mut self.tasks {
-            if t.has_leg && !t.leg_booked {
-                t.leg_booked = true;
-                self.acc.state_bytes += t.leg.bytes;
+        for c in 0..self.cohort_state.len() {
+            if self.cohort_state[c].legs.is_empty() {
+                continue;
+            }
+            let (start, n) = self.cohort_range[c];
+            for local in 0..n {
+                let t = start + local;
+                if !self.a_leg_booked[t] {
+                    self.a_leg_booked[t] = true;
+                    self.acc.state_bytes +=
+                        self.cohort_state[c].legs.get(local).map(|l| l.bytes).unwrap_or(0);
+                }
             }
         }
         self.acc.state_bytes += std::mem::take(&mut self.ready_tail_bytes);
@@ -2393,6 +2616,7 @@ impl<'a> AsyncCore<'a> {
             wasted_secs: self.wasted,
             arrivals: self.arrivals,
             cohorts: self.next_cohort,
+            events: self.events,
             flushes: self.flushes,
         };
         (outcome, trace)
@@ -2426,7 +2650,16 @@ pub fn run_async(
         dyn_seed,
         spec,
         comm,
-        tasks: Vec::new(),
+        a_n_eff: Vec::new(),
+        a_noise: Vec::new(),
+        a_predicted: Vec::new(),
+        a_client: Vec::new(),
+        a_cohort: Vec::new(),
+        a_born: Vec::new(),
+        a_leg_booked: Vec::new(),
+        cohort_range: Vec::new(),
+        cohort_state: Vec::new(),
+        cohort_admit: Vec::new(),
         devs: (0..n_exec)
             .map(|_| ADev { queue: VecDeque::new(), current: None, busy: 0.0 })
             .collect(),
@@ -2453,6 +2686,7 @@ pub fn run_async(
         completed: 0,
         dropped: 0,
         wasted: 0.0,
+        events: 0,
         trace: trace.is_some().then(Vec::new),
     };
     let (out, tr) = core.run(scheduler, source);
@@ -2472,7 +2706,7 @@ mod tests {
     }
 
     fn plan_assigned(n_exec: usize, sizes: &[usize], tail: TailComm) -> RoundPlan {
-        let tasks: Vec<SimTask> =
+        let tasks: TaskTable =
             sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
         let mut assigned = vec![Vec::new(); n_exec];
         for i in 0..tasks.len() {
@@ -2528,7 +2762,7 @@ mod tests {
     fn shared_pull_balances_like_earliest_free() {
         let cost = WorkloadCost::femnist();
         let sizes = [500usize, 400, 300, 200, 100, 50];
-        let tasks: Vec<SimTask> =
+        let tasks: TaskTable =
             sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
         let plan = RoundPlan {
             pull: (0..tasks.len()).collect(),
@@ -2591,7 +2825,7 @@ mod tests {
     fn device_join_pulls_shared_work() {
         let cost = WorkloadCost::femnist();
         let sizes = vec![400usize; 8];
-        let tasks: Vec<SimTask> =
+        let tasks: TaskTable =
             sizes.iter().enumerate().map(|(i, &n)| SimTask::new(i, n, 1.0)).collect();
         let plan = RoundPlan {
             pull: (0..tasks.len()).collect(),
@@ -2928,7 +3162,7 @@ mod tests {
         let cluster = homo(4);
         let tt = tiered(4, 2, &cluster);
         let s_a = 1_000_000u64;
-        let tasks: Vec<SimTask> = (0..4).map(|i| SimTask::new(i, 100, 1.0)).collect();
+        let tasks: TaskTable = (0..4).map(|i| SimTask::new(i, 100, 1.0)).collect();
         let plan = RoundPlan {
             tasks,
             n_exec: 4,
@@ -2964,7 +3198,7 @@ mod tests {
             let clients: Vec<(usize, usize)> =
                 sizes.iter().enumerate().map(|(i, &n)| (i, n)).collect();
             let schedule = sched.schedule_from(c, &clients, alive, base);
-            let mut tasks = Vec::new();
+            let mut tasks = TaskTable::new();
             let mut assigned = vec![Vec::new(); alive.len()];
             for (dev, cls) in schedule.assignment.iter().enumerate() {
                 for &cl in cls {
@@ -3147,7 +3381,7 @@ mod tests {
             }
             let clients: Vec<(usize, usize)> = (0..legs_per).map(|i| (i, 200)).collect();
             let schedule = s.schedule_from(c, &clients, alive, base);
-            let mut tasks = Vec::new();
+            let mut tasks = TaskTable::new();
             let mut assigned = vec![Vec::new(); alive.len()];
             for (dev, cls) in schedule.assignment.iter().enumerate() {
                 for &cl in cls {
@@ -3195,12 +3429,13 @@ mod tests {
     /// Build a Core directly over `plan` (the single-heap shape) so the
     /// placement paths can be driven with hand-picked liveness.
     fn core_for<'a>(
-        plan: RoundPlan,
+        plan: &'a RoundPlan,
         cluster: &'a ClusterProfile,
         cost: &'a WorkloadCost,
         dynamics: &'a DynamicsSpec,
     ) -> Core<'a> {
-        let execs = exec_states(&plan);
+        let execs = exec_states(plan);
+        let alive = execs.iter().filter(|e| e.alive).count();
         let n_tasks = plan.tasks.len();
         Core {
             round: 0,
@@ -3208,16 +3443,25 @@ mod tests {
             cost,
             dynamics,
             rng: Rng::new(7),
-            tasks: plan.tasks,
+            clients: &plan.tasks.client,
+            n_effs: &plan.tasks.n_eff,
+            noises: &plan.tasks.noise,
+            ids: None,
+            task_state: plan.tasks.state.clone(),
+            task_realized: plan.tasks.realized.clone(),
             execs,
-            shared: plan.pull.into_iter().collect(),
+            alive,
+            shared: plan.pull.iter().copied().collect(),
             refill: plan.refill,
             reassign: plan.reassign,
             comm_down: plan.per_task_comm.0,
             comm_up: plan.per_task_comm.1,
             bytes_down: plan.per_task_bytes.0,
             bytes_up: plan.per_task_bytes.1,
-            state: plan.state,
+            state_legs: &plan.state.legs,
+            state_prefetch: plan.state.prefetch,
+            state_tail_bytes: plan.state.tail_bytes,
+            state_tail_secs: plan.state.tail_secs,
             state_booked: vec![false; n_tasks],
             state_bytes: 0,
             state_secs: 0.0,
@@ -3239,6 +3483,7 @@ mod tests {
             completed: 0,
             departures: 0,
             joins: 0,
+            events: 0,
         }
     }
 
@@ -3252,14 +3497,15 @@ mod tests {
         let dynamics = static_dynamics();
         let mut plan = plan_assigned(2, &[100, 100], TailComm::None);
         plan.reassign = ReassignPolicy::LeastLoaded;
-        let mut core = core_for(plan, &cluster, &cost, &dynamics);
+        let mut core = core_for(&plan, &cluster, &cost, &dynamics);
         for e in &mut core.execs {
             e.alive = false;
             e.queue.clear();
         }
+        core.alive = 0;
         core.place_least_loaded(vec![0, 1]);
         assert_eq!(core.dropped, 2);
-        assert!(core.tasks.iter().all(|t| t.state == TaskState::Dropped));
+        assert!(core.task_state.iter().all(|&s| s == TaskState::Dropped));
         assert!(core.execs.iter().all(|e| e.queue.is_empty()));
     }
 
@@ -3273,24 +3519,26 @@ mod tests {
         let dynamics = static_dynamics();
         let mut plan = plan_assigned(3, &[100, 100, 100], TailComm::None);
         plan.reassign = ReassignPolicy::Greedy;
-        let mut core = core_for(plan, &cluster, &cost, &dynamics);
+        let mut core = core_for(&plan, &cluster, &cost, &dynamics);
         for e in &mut core.execs {
             e.alive = false;
             e.queue.clear();
         }
+        core.alive = 0;
         let mut no_sched: Option<&mut Scheduler> = None;
         core.place_orphans(vec![0, 1, 2], &mut no_sched);
         assert_eq!(core.dropped, 3);
-        assert!(core.tasks.iter().all(|t| t.state == TaskState::Dropped));
+        assert!(core.task_state.iter().all(|&s| s == TaskState::Dropped));
         // ...and with one survivor the fallback still places there.
         let mut plan2 = plan_assigned(3, &[100, 100, 100], TailComm::None);
         plan2.reassign = ReassignPolicy::Greedy;
-        let mut core2 = core_for(plan2, &cluster, &cost, &dynamics);
+        let mut core2 = core_for(&plan2, &cluster, &cost, &dynamics);
         for e in &mut core2.execs {
             e.alive = false;
             e.queue.clear();
         }
         core2.execs[1].alive = true;
+        core2.alive = 1;
         core2.place_orphans(vec![0, 2], &mut no_sched);
         assert_eq!(core2.dropped, 0);
         assert_eq!(core2.execs[1].queue.len(), 2);
@@ -3330,6 +3578,52 @@ mod tests {
             );
             assert_eq!(out.completed_tasks, 9, "orphans land on the survivor");
         }
+    }
+
+    /// Satellite pin: the incremental `alive` counter (which replaced
+    /// the O(devices) scan on `churn_roll`'s per-event path) must track
+    /// the reference scan exactly under scripted churn — including the
+    /// no-op edges (double-leave, double-join, out-of-range slots) and
+    /// the last-executor guard that refuses the final leave.
+    #[test]
+    fn alive_counter_matches_scan_under_scripted_churn() {
+        let cost = WorkloadCost::femnist();
+        let cluster = homo(4);
+        let dynamics = static_dynamics();
+        let plan = plan_assigned(4, &[100; 8], TailComm::None);
+        let mut core = core_for(&plan, &cluster, &cost, &dynamics);
+        let mut no_sched: Option<&mut Scheduler> = None;
+        assert_eq!(core.alive, core.alive_scan());
+        // (slot, leave?) script exercising every transition edge.
+        let script: &[(usize, bool)] = &[
+            (1, true),  // plain leave
+            (1, true),  // double-leave: no-op
+            (3, true),  // plain leave
+            (9, true),  // out-of-range: no-op
+            (1, false), // rejoin
+            (9, false), // out-of-range join: no-op
+            (0, false), // join on an alive slot: no-op
+            (0, true),
+            (2, true),
+            (3, true),
+            (1, true),  // last executor: guard refuses, stays alive
+            (2, false),
+            (0, false),
+        ];
+        for &(slot, leave) in script {
+            if leave {
+                core.on_device_leave(slot, &mut no_sched);
+            } else {
+                core.on_device_join(slot);
+            }
+            assert_eq!(
+                core.alive,
+                core.alive_scan(),
+                "counter drifted from the scan after {:?} on slot {slot}",
+                if leave { "leave" } else { "join" }
+            );
+        }
+        assert!(core.alive >= 1, "the guard never orphans the round");
     }
 
     // ------------------------------------------------ sharded engine

@@ -65,7 +65,7 @@ pub use availability::{
 };
 pub use engine::{
     AsyncCohort, AsyncComm, AsyncOutcome, AsyncSpec, AsyncTier, Event, FlushRecord, RoundOutcome,
-    RoundPlan, SimTask, TaskState, TieredTail,
+    RoundPlan, SimTask, TaskState, TaskTable, TieredTail,
 };
 
 use crate::cluster::{ClusterProfile, WorkloadCost};
@@ -192,6 +192,12 @@ pub struct VRound {
     /// all of them on a flat topology, only the top-tier legs on a
     /// grouped one.  The cross-WAN metric of `parrot exp toposcale`.
     pub cross_group_bytes: u64,
+    /// Heap pops the engine processed for this round (deterministic —
+    /// a pure function of the virtual timeline, identical for every
+    /// `--threads` value).  The events/sec numerator of `parrot exp
+    /// megascale`; 0 for per-flush async rows (the dispatcher's total
+    /// lands on [`VirtualSim::engine_events`] instead).
+    pub engine_events: u64,
 }
 
 impl VRound {
@@ -234,6 +240,7 @@ impl VRound {
             staleness_hist: Vec::new(),
             group_aggs: 0,
             cross_group_bytes: 0,
+            engine_events: 0,
         }
     }
 }
@@ -272,6 +279,10 @@ pub struct VirtualSim {
     /// Accumulated wallclock seconds inside [`engine::run_round_opts`]
     /// across all rounds — the `parscale` sweep's speedup numerator.
     pub engine_secs: f64,
+    /// Accumulated engine heap pops across all rounds (and across the
+    /// whole async dispatch) — the `megascale` events/sec numerator.
+    /// Deterministic, unlike `engine_secs`.
+    pub engine_events: u64,
     /// Typed span/event tracer (`--trace`): per-round engine buffers
     /// are absorbed onto one monotone run clock.  None (the default)
     /// is a no-op sink — the engine skips event construction entirely.
@@ -328,6 +339,7 @@ impl VirtualSim {
             },
             threads: 1,
             engine_secs: 0.0,
+            engine_events: 0,
             tracer: None,
             clock: None,
             vclock: 0.0,
@@ -451,6 +463,7 @@ impl VirtualSim {
         if let (Some(c), Some(w0)) = (self.clock, wall0) {
             self.engine_secs += (c() - w0).max(0.0);
         }
+        self.engine_events += outcome.events;
         // Absorb the round's engine events onto the monotone run clock
         // and frame them with the round span + placement marker.  The
         // Sched instant carries only virtual facts (placed count), never
@@ -567,10 +580,10 @@ impl VirtualSim {
             _ => outcome.end - outcome.work_end,
         };
         let (mut act, mut pred) = (Vec::new(), Vec::new());
-        for t in &outcome.tasks {
-            if t.state == TaskState::Done {
-                if let Some(p) = t.predicted {
-                    act.push(t.realized);
+        for i in 0..outcome.tasks.len() {
+            if outcome.tasks.state[i] == TaskState::Done {
+                if let Some(p) = outcome.tasks.predicted[i] {
+                    act.push(outcome.tasks.realized[i]);
                     pred.push(p);
                 }
             }
@@ -606,6 +619,7 @@ impl VirtualSim {
             staleness_hist: Vec::new(),
             group_aggs: outcome.group_aggs,
             cross_group_bytes: outcome.cross_group_bytes,
+            engine_events: outcome.events,
         }
     }
 
@@ -619,7 +633,7 @@ impl VirtualSim {
         r: usize,
         n_exec: usize,
         assigned: &[Vec<usize>],
-        tasks: &[SimTask],
+        tasks: &TaskTable,
     ) -> StatePlan {
         let Some(st) = self.state.as_mut() else { return StatePlan::default() };
         if st.store.cfg().n_workers != n_exec {
@@ -628,7 +642,7 @@ impl VirtualSim {
         st.store.plan_for_tasks(
             r as u64,
             assigned,
-            |t| tasks[t].client as u64,
+            |t| tasks.client[t] as u64,
             tasks.len(),
             st.prefetch,
         )
@@ -636,7 +650,7 @@ impl VirtualSim {
 
     /// SP: one executor, all tasks back-to-back, no comm.
     fn plan_sp(&mut self, r: usize, sizes: &[(usize, usize)]) -> RoundPlan {
-        let tasks: Vec<SimTask> = sizes
+        let tasks: TaskTable = sizes
             .iter()
             .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
             .collect();
@@ -662,7 +676,7 @@ impl VirtualSim {
     /// the server talks to each of the M_p executors (down + up),
     /// uploads serialized into the server NIC.
     fn plan_sd(&mut self, sizes: &[(usize, usize)]) -> RoundPlan {
-        let tasks: Vec<SimTask> = sizes
+        let tasks: TaskTable = sizes
             .iter()
             .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
             .collect();
@@ -691,7 +705,7 @@ impl VirtualSim {
     fn plan_fa(&mut self, sizes: &[(usize, usize)], k: usize) -> RoundPlan {
         let mut order: Vec<(usize, usize)> = sizes.to_vec();
         order.sort_by(|a, b| b.1.cmp(&a.1)); // FedScale: biggest first
-        let tasks: Vec<SimTask> = order
+        let tasks: TaskTable = order
             .iter()
             .map(|&(c, n)| SimTask::new(c, n, self.draw_noise()))
             .collect();
@@ -734,7 +748,7 @@ impl VirtualSim {
         // at plan time, before any of this round's records land.
         let est = schedule.estimates.take();
         let size_of = crate::scheduler::greedy::size_table(sizes);
-        let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
+        let mut tasks = TaskTable::with_capacity(sizes.len());
         let mut assigned = vec![Vec::new(); k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &c in clients {
@@ -743,8 +757,8 @@ impl VirtualSim {
                 if let Some(est) = &est {
                     task.predicted = Some(est[dev].predict(n));
                 }
-                assigned[dev].push(tasks.len());
-                tasks.push(task);
+                let id = tasks.push(task);
+                assigned[dev].push(id);
             }
         }
         let m_p = sizes.len() as u64;
@@ -898,7 +912,7 @@ pub fn run_async_detailed(
             .collect();
         if sizes.is_empty() {
             return Some(AsyncCohort {
-                tasks: Vec::new(),
+                tasks: TaskTable::new(),
                 assigned: vec![Vec::new(); k],
                 state: StatePlan::default(),
                 sched_secs: 0.0,
@@ -916,7 +930,7 @@ pub fn run_async_detailed(
         };
         let est = schedule.estimates.take();
         let size_of = crate::scheduler::greedy::size_table(&sizes);
-        let mut tasks: Vec<SimTask> = Vec::with_capacity(sizes.len());
+        let mut tasks = TaskTable::with_capacity(sizes.len());
         let mut assigned = vec![Vec::new(); k];
         for (dev, clients) in schedule.assignment.iter().enumerate() {
             for &cl in clients {
@@ -926,8 +940,8 @@ pub fn run_async_detailed(
                 if let Some(est) = &est {
                     task.predicted = Some(est[dev].predict(n));
                 }
-                assigned[dev].push(tasks.len());
-                tasks.push(task);
+                let id = tasks.push(task);
+                assigned[dev].push(id);
             }
         }
         // State prefetch follows the dispatcher's rolling horizon: the
@@ -937,7 +951,7 @@ pub fn run_async_detailed(
             Some(st) if st.store.cfg().n_workers == k => st.store.plan_for_tasks(
                 c as u64,
                 &assigned,
-                |t| tasks[t].client as u64,
+                |t| tasks.client[t] as u64,
                 tasks.len(),
                 st.prefetch,
             ),
@@ -971,6 +985,7 @@ pub fn run_async_detailed(
     if let Some(tr) = tracer.as_mut() {
         tr.absorb(&tbuf, 0.0);
     }
+    sim.engine_events += outcome.events;
 
     let vrounds = outcome
         .flushes
@@ -1001,6 +1016,7 @@ pub fn run_async_detailed(
             staleness_hist: f.staleness_hist.clone(),
             group_aggs: f.group_aggs,
             cross_group_bytes: f.cross_group_bytes,
+            engine_events: 0,
         })
         .collect();
     (vrounds, outcome)

@@ -41,7 +41,7 @@ pub mod simstore;
 
 pub use lru::{CacheCost, Evicted, WriteBackCache};
 pub use shard::ShardMap;
-pub use simstore::{Blob, SimStore, SimStoreCfg, StoreMetrics};
+pub use simstore::{home_worker, Blob, SimStore, SimStoreCfg, StoreMetrics};
 
 /// One task's state-movement leg, priced by the engine at `TaskStart`.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]

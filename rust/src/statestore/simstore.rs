@@ -44,6 +44,16 @@ use std::collections::BTreeMap;
 /// Disk-host tag for the unsharded shared-disk baseline.
 const SHARED: usize = usize::MAX;
 
+/// The one owner→worker mapping: shard `s` is hosted by worker
+/// `s % n_workers`.  Every ownership decision (load routing, handoff
+/// rescans, rejoin pulls, the misplaced-cache audit) must go through
+/// this helper — four call sites used to inline the `% n` expression
+/// independently, which is exactly how a remap-rule drift between the
+/// handoff and rejoin scans would strand state at the wrong worker.
+pub fn home_worker(map: &ShardMap, n_workers: usize, client: u64) -> usize {
+    map.owner(client) as usize % n_workers
+}
+
 /// Size + version stand-in for a client-state blob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Blob {
@@ -179,7 +189,7 @@ impl SimStore {
 
     /// The worker hosting `client`'s state, None in local-only mode.
     pub fn owner_worker(&self, client: u64) -> Option<usize> {
-        self.shards.as_ref().map(|m| m.owner(client) as usize % self.cfg.n_workers)
+        self.shards.as_ref().map(|m| home_worker(m, self.cfg.n_workers, client))
     }
 
     pub fn cache_resident_bytes(&self) -> u64 {
@@ -279,7 +289,11 @@ impl SimStore {
     /// One post-training save at `worker`; returns `(bytes, secs)` —
     /// the seconds land in the round tail (saves never stall compute).
     fn save_for(&mut self, worker: usize, client: u64, round: u64) -> (u64, f64) {
-        let blob = Blob { bytes: self.cfg.state_bytes as usize, version: round + 1 };
+        let blob = Blob {
+            bytes: usize::try_from(self.cfg.state_bytes)
+                .expect("state_bytes exceeds the address space"),
+            version: round + 1,
+        };
         let owner = self.owner_worker(client);
         let host = owner.unwrap_or(worker);
         let (mut bytes, mut secs) = (0u64, 0.0f64);
@@ -399,9 +413,10 @@ impl SimStore {
     /// 0 when unsharded, when the worker hosts no shard, or when it
     /// hosts the last shard (which must stay).
     pub fn handoff(&mut self, worker: usize) -> u64 {
+        let shard = u32::try_from(worker).expect("worker index exceeds u32");
         let removed = match self.shards.as_mut() {
             None => return 0,
-            Some(m) => m.contains_shard(worker as u32) && m.remove_shard(worker as u32),
+            Some(m) => m.contains_shard(shard) && m.remove_shard(shard),
         };
         if !removed {
             return 0;
@@ -444,9 +459,10 @@ impl SimStore {
             // rejoining): ownership is unaffected.
             return 0;
         }
+        let shard = u32::try_from(worker).expect("worker index exceeds u32");
         let added = match self.shards.as_mut() {
             None => return 0,
-            Some(m) => m.add_shard(worker as u32),
+            Some(m) => m.add_shard(shard),
         };
         if !added {
             return 0;
@@ -458,7 +474,7 @@ impl SimStore {
             let map = self.shards.as_ref().expect("sharded");
             let n = self.cfg.n_workers;
             for (&c, &(_, h)) in self.disk.iter() {
-                if h != worker && map.owner(c) as usize % n == worker {
+                if h != worker && home_worker(map, n, c) == worker {
                     moving.insert(c, Some(h));
                 }
             }
@@ -467,7 +483,7 @@ impl SimStore {
                     continue;
                 }
                 for (c, _) in cache.iter() {
-                    if map.owner(c) as usize % n == worker {
+                    if home_worker(map, n, c) == worker {
                         cache_host.insert(c, w);
                         moving.entry(c).or_insert(None);
                     }
@@ -512,7 +528,7 @@ impl SimStore {
         let mut misplaced = 0;
         for (w, cache) in self.caches.iter().enumerate() {
             for (c, _) in cache.iter() {
-                if map.owner(c) as usize % n != w {
+                if home_worker(map, n, c) != w {
                     misplaced += 1;
                 }
             }
@@ -663,6 +679,39 @@ mod tests {
         s.plan_round(2, &[vec![], vec![c], vec![]]);
         assert_eq!(s.snapshot().get(&c), Some(&3));
         assert_eq!(s.misplaced_cache_entries(), 0);
+    }
+
+    #[test]
+    fn home_worker_is_the_single_owner_mapping_across_churn() {
+        // Handoff + rejoin round-trip: every ownership answer the store
+        // gives must equal the one `home_worker` helper at every stage
+        // (the four former inline `% n` sites can no longer drift), and
+        // the round-trip must preserve every state version.
+        let mut s = store(3, 3, 64);
+        let lists: Vec<Vec<u64>> =
+            (0..3).map(|w| (0..10u64).map(|i| w as u64 * 10 + i).collect()).collect();
+        s.plan_round(0, &lists);
+        let check = |s: &SimStore| {
+            let map = s.shard_map().expect("sharded");
+            for c in 0..30u64 {
+                assert_eq!(
+                    s.owner_worker(c),
+                    Some(home_worker(map, s.cfg().n_workers, c)),
+                    "client {c} routed off the canonical mapping"
+                );
+            }
+        };
+        check(&s);
+        let before = s.snapshot();
+        let moved = s.handoff(1);
+        assert!(moved > 0, "worker 1 hosted shard-1 states");
+        check(&s);
+        assert_eq!(s.snapshot(), before, "handoff must lose nothing");
+        let back = s.rejoin(1);
+        assert!(back > 0, "rejoin pulls shard-1 states home");
+        check(&s);
+        assert_eq!(s.snapshot(), before, "round-trip must be lossless");
+        assert_eq!(s.misplaced_cache_entries(), 0, "no stranded cache copies");
     }
 
     #[test]

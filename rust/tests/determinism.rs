@@ -20,7 +20,7 @@
 //! seed for replay.
 
 use anyhow::Result;
-use parrot::exp::{asyncscale, dynamics, parscale, toposcale};
+use parrot::exp::{asyncscale, dynamics, megascale, parscale, toposcale};
 
 /// Same contract as the (private) master seed in `util::prop`:
 /// `PARROT_PROP_SEED` as decimal or 0x-hex, default 0xC0FF_EE00.
@@ -124,6 +124,52 @@ fn toposcale_rows_are_thread_invariant() -> Result<()> {
         rows_at.push((t, toposcale::smoke_rows(s, t)?));
     }
     assert_thread_invariant("toposcale", s, &rows_at);
+    Ok(())
+}
+
+/// The megascale pin (tentpole): at 100k clients the SoA-table engine's
+/// per-round rows — including the deterministic heap-pop count column —
+/// must be byte-identical for `--threads` 1, 2 and 8 on one seed.  The
+/// batch-admission and index-range shard views must not perturb the
+/// `(time bits, namespaced seq)` merge law at any worker-pool size.
+#[test]
+fn megascale_rows_are_thread_invariant() -> Result<()> {
+    let s = seed();
+    println!("megascale 1-vs-2-vs-8-thread differential under PARROT_PROP_SEED={s:#x}");
+    let mut rows_at = Vec::new();
+    for t in [1, 2, 8] {
+        rows_at.push((t, megascale::smoke_rows(s, t)?));
+    }
+    assert_thread_invariant("megascale", s, &rows_at);
+    Ok(())
+}
+
+/// Double-run differential on the same cell: the arena-batched event
+/// path must be a pure function of the seed within one process too.
+#[test]
+fn megascale_rows_are_run_invariant() -> Result<()> {
+    let s = seed();
+    println!("megascale double-run under PARROT_PROP_SEED={s:#x}");
+    let a = megascale::smoke_rows(s, 2)?;
+    let b = megascale::smoke_rows(s, 2)?;
+    assert_identical("megascale", s, &a, &b);
+    Ok(())
+}
+
+/// The megascale trace differential: the rendered Chrome trace bytes of
+/// the traced 100k-client cell must be byte-identical across two runs
+/// (the arena columns must not leak allocation order into the trace).
+#[test]
+fn megascale_trace_bytes_are_run_invariant() -> Result<()> {
+    let s = seed();
+    println!("megascale trace double-run under PARROT_PROP_SEED={s:#x}");
+    let a = megascale::smoke_trace(s, 2)?;
+    let b = megascale::smoke_trace(s, 2)?;
+    assert_eq!(
+        a, b,
+        "megascale trace bytes diverged across two identical runs \
+         (replay with PARROT_PROP_SEED={s:#x})"
+    );
     Ok(())
 }
 

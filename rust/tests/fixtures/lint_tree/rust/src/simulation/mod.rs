@@ -34,3 +34,13 @@ pub fn round_cost(xs: &[u64]) -> usize {
 pub fn round_started_at() -> f64 {
     crate::util::helpers::stamp()
 }
+
+pub struct EngineCfg {
+    pub state_bytes: u64,
+}
+
+/// Config-sourced narrowing in a strict module: `unchecked-narrow`
+/// (the cfg-cast extension) fires on the cast below.
+pub fn blob_bytes(cfg: &EngineCfg) -> usize {
+    cfg.state_bytes as usize
+}

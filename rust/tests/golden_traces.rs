@@ -100,6 +100,17 @@ fn golden_dynamics_smoke_table() {
 }
 
 #[test]
+fn golden_megascale_smoke_table() {
+    // Fixed seed 47 — the `exp megascale` default.  Pins the SoA-table
+    // engine's 100k-client rows (virtual-time/byte columns plus the
+    // deterministic heap-pop count) against a committed snapshot.
+    let rows = parrot::exp::megascale::smoke_rows(47, 2)
+        .expect("megascale smoke cell must produce rows");
+    assert_eq!(rows.len(), 2, "two rounds of the smoke cell");
+    check_golden("megascale_smoke.csv", &rows);
+}
+
+#[test]
 fn golden_asyncscale_smoke_table() {
     // Fixed seed 19 — the `exp asyncscale --smoke` default.  smoke_rows
     // also re-runs the ledger differential and the degenerate sync pin.

@@ -55,7 +55,7 @@ fn every_rule_fires_and_every_call_resolves() {
         ("ambient-entropy-transitive", 1),
         ("panicking-decode", 1),
         ("panicking-decode-transitive", 1),
-        ("unchecked-narrow", 1),
+        ("unchecked-narrow", 2),
         ("float-order", 1),
         ("wire-asymmetry", 2),
         ("unguarded-len-alloc", 1),

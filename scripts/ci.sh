@@ -179,4 +179,19 @@ if [ "$FAST" -eq 0 ]; then
   rm -rf "$SMOKE_RESULTS"
 fi
 
+# Megascale smoke: the SoA-table engine at 100k clients — per-round
+# rows (including the deterministic heap-pop count) must be
+# byte-identical across --threads {1,2,8}; events/sec and peak RSS are
+# reported into BENCH_megascale.json.
+if [ "$FAST" -eq 0 ]; then
+  echo "==> parrot exp megascale --smoke (seed $SEED)"
+  SMOKE_RESULTS="$(mktemp -d)"
+  if ! target/release/parrot exp megascale --smoke \
+      --seed "$SEED" --results "$SMOKE_RESULTS"; then
+    echo "ci.sh: megascale smoke failure — reproduce with --seed $SEED" >&2
+    exit 1
+  fi
+  rm -rf "$SMOKE_RESULTS"
+fi
+
 echo "ci.sh: all green"
